@@ -1,0 +1,85 @@
+//! Quickstart: the end-to-end ODiMO flow on one variant.
+//!
+//! Loads the AOT artifacts for the DIANA ResNet-20/CIFAR-10 supernet,
+//! runs the full three-phase search at a single λ, discretizes the
+//! mapping, deploys it on both SoC simulators and prints the outcome
+//! next to the All-8bit baseline.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example quickstart
+//! # quicker: QUICKSTART_FAST=0.3 cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+
+use odimo::config::ExperimentConfig;
+use odimo::coordinator::{odimo as phases, run_baseline, Baseline, Trainer};
+use odimo::runtime::cpu_client;
+
+fn main() -> Result<()> {
+    let root = odimo::repo_root();
+    let artifacts = root.join("artifacts");
+    if !artifacts.join("diana_resnet20_c10.manifest.json").exists() {
+        eprintln!("no artifacts found — run `make artifacts` first");
+        return Ok(());
+    }
+    let fast: f64 = std::env::var("QUICKSTART_FAST")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.5);
+
+    println!("== ODiMO quickstart: diana_resnet20_c10, λ = 0.2 ==\n");
+    let cfg = ExperimentConfig::for_variant("diana_resnet20_c10").scaled(fast);
+    let client = cpu_client()?;
+    let tr = Trainer::new(&client, &artifacts, cfg)?;
+
+    // --- warmup ---------------------------------------------------------
+    let mut state = tr.init_state()?;
+    println!("[1/4] warmup ({} epochs)", tr.cfg.warmup_epochs);
+    phases::run_phase(
+        &tr,
+        &mut state,
+        odimo::runtime::StepHparams {
+            lam: 0.0,
+            cost_sel: 0.0,
+            lr_w: tr.cfg.lr_w,
+            lr_th: 0.0,
+        },
+        tr.cfg.warmup_epochs,
+        0,
+        "warmup",
+    )?;
+
+    // --- search + final -------------------------------------------------
+    println!("[2/4] search + final-training (λ = 0.2)");
+    let rec = phases::search_and_finalize(&tr, &mut state, 0.2)?;
+
+    // --- baseline for context -------------------------------------------
+    println!("[3/4] all-8bit baseline");
+    let base = run_baseline(&tr, Baseline::AllCu0)?;
+
+    // --- report ----------------------------------------------------------
+    println!("\n[4/4] results (detailed SoC simulator):");
+    for r in [&base, &rec] {
+        println!(
+            "  {:<12} acc {:>6.2}%  latency {:>7.3} ms  energy {:>8.2} uJ  \
+             util D/A {:>3.0}%/{:<3.0}%  analog-ch {:>4.1}%",
+            r.label,
+            100.0 * r.test_acc,
+            r.det_latency_ms,
+            r.det_energy_uj,
+            100.0 * r.util_cu0,
+            100.0 * r.util_cu1,
+            100.0 * r.cu1_channel_frac,
+        );
+    }
+    let speedup = base.det_latency_ms / rec.det_latency_ms;
+    println!(
+        "\nODiMO mapping is {:.2}x {} than All-8bit at Δacc = {:+.2}%",
+        speedup.max(1.0 / speedup),
+        if speedup >= 1.0 { "faster" } else { "slower" },
+        100.0 * (rec.test_acc - base.test_acc),
+    );
+    println!("(per-layer breakdown: `repro exp fig8`)");
+    Ok(())
+}

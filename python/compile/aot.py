@@ -1,0 +1,165 @@
+"""AOT lowering: JAX -> HLO text + JSON manifest, per model variant.
+
+This is the only place Python touches the artifact boundary. For every
+variant in :mod:`variants` it lowers four entry points (``init``, ``train``,
+``eval``, ``cost``) to **HLO text** and writes a manifest describing every
+input/output tensor so the Rust runtime can bind buffers by name and shape.
+
+HLO *text* — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` 0.1.6 crate) rejects; the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--variant NAME ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+from jax.tree_util import tree_flatten_with_path
+
+from . import variants as V
+from .train import path_str
+
+METRICS_TRAIN = ["loss", "ce", "acc", "cost_lat_cycles", "cost_energy_uj"]
+METRICS_EVAL = ["correct", "loss_sum"]
+
+_DTYPE_NAMES = {"float32": "f32", "int32": "i32", "uint32": "u32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _leaf_specs(prefix: str, tree):
+    """Flatten a pytree into ordered (name, shape, dtype) io specs."""
+    specs = []
+    for path, leaf in tree_flatten_with_path(tree)[0]:
+        name = path_str(path)
+        name = f"{prefix}/{name}" if name else prefix
+        dt = _DTYPE_NAMES.get(str(leaf.dtype), str(leaf.dtype))
+        specs.append({"name": name, "shape": list(leaf.shape), "dtype": dt})
+    return specs
+
+
+def _io_spec(arg_names, example_args, out_tree):
+    inputs = []
+    for name, arg in zip(arg_names, example_args):
+        inputs.extend(_leaf_specs(name, arg))
+    outputs = []
+    for name, out in out_tree:
+        outputs.extend(_leaf_specs(name, out))
+    return inputs, outputs
+
+
+def lower_variant(name: str, out_dir: Path, verbose: bool = True) -> dict:
+    var = V.REGISTRY[name]
+    init_fn, train_fn, eval_fn, cost_fn = V.build_fns(var)
+    ds = var.dataset
+
+    t0 = time.time()
+    seed0 = jnp.int32(0)
+    params, opt_w, opt_th = jax.eval_shape(init_fn, seed0)
+    # concrete init for cost-scale evaluation
+    cparams, _, _ = init_fn(0)
+    mat0, totals0 = cost_fn(cparams)
+    cost_scale = {"latency_cycles": float(totals0[0]),
+                  "energy_uj": float(totals0[1])}
+
+    x = jnp.zeros((ds.batch, ds.hw, ds.hw, 3), jnp.float32)
+    y = jnp.zeros((ds.batch,), jnp.int32)
+    scalars = [jnp.float32(0) for _ in range(4)]  # lam, cost_sel, lr_w, lr_th
+
+    functions = {}
+
+    def emit(fn_name, fn, example_args, arg_names, out_named):
+        # keep_unused=True: the manifest promises every input, even ones a
+        # function ignores (e.g. `cost` reads only the θ leaves) — without
+        # it XLA DCEs parameters and the Rust buffer binding goes stale.
+        lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}_{fn_name}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        inputs, outputs = _io_spec(arg_names, example_args, out_named)
+        functions[fn_name] = {"file": fname, "inputs": inputs,
+                              "outputs": outputs}
+        if verbose:
+            print(f"  {fn_name}: {len(text) / 1e6:.2f} MB, "
+                  f"{len(inputs)} in / {len(outputs)} out", flush=True)
+
+    state_shapes = jax.eval_shape(
+        lambda p, ow, ot: (p, ow, ot), params, opt_w, opt_th)
+
+    emit("init", init_fn, (seed0,), ["seed"],
+         [("params", state_shapes[0]), ("opt_w", state_shapes[1]),
+          ("opt_th", state_shapes[2])])
+
+    train_out = jax.eval_shape(
+        train_fn, params, opt_w, opt_th, x, y, *scalars)
+    emit("train", train_fn,
+         (params, opt_w, opt_th, x, y, *scalars),
+         ["params", "opt_w", "opt_th", "x", "y", "lam", "cost_sel",
+          "lr_w", "lr_th"],
+         [("params", train_out[0]), ("opt_w", train_out[1]),
+          ("opt_th", train_out[2]), ("metrics", train_out[3])])
+
+    eval_out = jax.eval_shape(eval_fn, params, x, y)
+    emit("eval", eval_fn, (params, x, y), ["params", "x", "y"],
+         [("metrics", eval_out)])
+
+    cost_out = jax.eval_shape(cost_fn, params)
+    emit("cost", cost_fn, (params,), ["params"],
+         [("layer_mat", cost_out[0]), ("totals", cost_out[1])])
+
+    manifest = {
+        "variant": name,
+        "platform": var.platform,
+        "w_optimizer": var.w_optimizer,
+        "search_kind": var.search_kind,
+        "dataset": {"name": ds.name, "hw": ds.hw, "classes": ds.classes,
+                    "batch": ds.batch},
+        "layers": V.layer_table(var),
+        "cost_scale": cost_scale,
+        "metrics_train": METRICS_TRAIN,
+        "metrics_eval": METRICS_EVAL,
+        "functions": functions,
+    }
+    (out_dir / f"{name}.manifest.json").write_text(
+        json.dumps(manifest, indent=1))
+    if verbose:
+        print(f"  manifest + 4 HLO files in {time.time() - t0:.1f}s",
+              flush=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variant", action="append", default=None,
+                    help="variant name (repeatable); default: all")
+    args = ap.parse_args()
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    names = args.variant or list(V.REGISTRY)
+    for n in names:
+        print(f"[aot] lowering {n}", flush=True)
+        lower_variant(n, out_dir)
+    print(f"[aot] done: {len(names)} variants -> {out_dir}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""Differentiable hardware cost models (ODiMO Eq. 3 / Eq. 4).
+
+Smooth, theta-differentiable cycle/energy models for the DIANA and Darkside
+CUs. Coefficients come from ``hw/constants.json`` — the same file the Rust
+analytical model (``rust/src/soc/analytical.rs``) and detailed simulator
+read, so the training-time model and the deployment-time evaluation stay
+coefficient-for-coefficient in sync (cross-checked by tests on both sides).
+
+Differentiable relaxations used here (vs the Rust analytical model):
+
+* integer ``ceil(n/d)`` over the *searched* channel count ``n`` becomes the
+  linear ``n/d`` (ceils over static geometry stay exact);
+* the per-CU fixed setup cost is gated by ``gate(n) = n / (n + 0.5)`` so a
+  CU assigned ~0 channels contributes ~0 cycles and the gradient can turn a
+  CU completely off;
+* the layer-latency ``max()`` across CUs (Eq. 3) becomes a softmax-weighted
+  sum (the paper's own smooth substitution).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+_HW_PATH = Path(__file__).resolve().parents[2] / "hw" / "constants.json"
+HW = json.loads(_HW_PATH.read_text())
+
+SMOOTHMAX_TEMP = 0.05  # relative temperature for the Eq. 3 smooth max
+
+
+@dataclass(frozen=True)
+class LayerGeom:
+    """Static geometry of one mappable layer."""
+    name: str
+    ltype: str          # 'conv' | 'dw' | 'pw' | 'fc'
+    cin: int
+    cout: int
+    k: int              # spatial kernel size (1 for pw/fc)
+    ox: int             # output width  (1 for fc)
+    oy: int             # output height (1 for fc)
+    stride: int = 1
+    searchable: bool = False
+
+    @property
+    def macs_per_out_channel(self) -> int:
+        if self.ltype == "dw":
+            return self.k * self.k * self.ox * self.oy
+        return self.cin * self.k * self.k * self.ox * self.oy
+
+
+def gate(n):
+    """Soft 'is this CU used at all' indicator, ~1 for n >= 1, 0 at n = 0."""
+    return n / (n + 0.5)
+
+
+def smoothmax(lats):
+    """Differentiable max over a list of scalar latencies (Eq. 3)."""
+    v = jnp.stack(lats)
+    t = SMOOTHMAX_TEMP * (jnp.sum(v) + 1e-6)
+    w = jax.nn.softmax(v / t)
+    return jnp.sum(w * v)
+
+
+# ---------------------------------------------------------------------------
+# DIANA (Sec. IV-B: digital int8 PE grid + ternary analog AIMC)
+# ---------------------------------------------------------------------------
+
+def diana_digital_cycles(n, g: LayerGeom):
+    """Digital 16x16 PE-grid cycles for ``n`` (possibly fractional expected)
+    output channels of layer ``g``; int8 weights."""
+    d = HW["diana"]["digital"]
+    rows = d["pe_rows"]
+    # static inner tiling over the input-patch dimension is exact
+    kdim = g.cin * g.k * g.k if g.ltype != "dw" else g.k * g.k
+    inner = math.ceil(kdim / d["pe_cols"])
+    compute = (n / rows) * inner * g.ox * g.oy / d["macs_per_cycle_per_pe"]
+    if g.ltype == "dw":
+        compute = compute * HW["diana"]["dw_digital_inefficiency"]
+    wload = n * kdim / d["weight_load_bytes_per_cycle"]
+    return gate(n) * (compute + wload + d["setup_cycles"])
+
+
+def diana_analog_cycles(n, g: LayerGeom):
+    """Analog AIMC cycles: dominated by ternary weight (re)loading plus one
+    array operation per output pixel per column-tile."""
+    a = HW["diana"]["analog"]
+    kdim = g.cin * g.k * g.k if g.ltype != "dw" else g.k * g.k
+    row_tiles = math.ceil(kdim / a["array_rows"])  # static
+    col_tiles = n / a["array_cols"]                # smooth
+    cells = n * kdim
+    load = cells / a["cells_load_per_cycle"]
+    compute = row_tiles * (col_tiles + gate(n) * 0.5) * g.ox * g.oy \
+        * a["cycles_per_analog_op"]
+    return gate(n) * (load + compute + a["setup_cycles"])
+
+
+def diana_layer_lats(n_d, n_a, g: LayerGeom):
+    """Per-CU latency vector ``[digital, analog]`` for one layer."""
+    return [diana_digital_cycles(n_d, g), diana_analog_cycles(n_a, g)]
+
+
+# ---------------------------------------------------------------------------
+# Darkside (Sec. IV-C: 8-core RISC-V cluster + DepthWise Engine)
+# ---------------------------------------------------------------------------
+
+def darkside_cluster_cycles(n, g: LayerGeom, as_dw: bool = False):
+    """Cluster cycles for ``n`` output channels executed as a standard (or,
+    for baselines, depthwise) convolution."""
+    c = HW["darkside"]["cluster"]
+    if as_dw or g.ltype == "dw":
+        macs = n * g.k * g.k * g.ox * g.oy
+        eff = c["macs_per_cycle_dw"]
+        ovh = 1.0
+    else:
+        macs = n * g.cin * g.k * g.k * g.ox * g.oy
+        eff = c["macs_per_cycle_std"]
+        ovh = c["im2col_overhead"]
+    return gate(n) * (macs * ovh / eff + c["setup_cycles"])
+
+
+def darkside_dwe_cycles(n, g: LayerGeom):
+    """DepthWise Engine cycles for ``n`` depthwise output channels."""
+    d = HW["darkside"]["dwe"]
+    macs = n * g.k * g.k * g.ox * g.oy
+    cfg = n * g.k * g.k / d["weight_cfg_cells_per_cycle"]
+    return gate(n) * (macs / d["macs_per_cycle"] + cfg + d["setup_cycles"])
+
+
+def darkside_layer_lats(n_conv, n_dw, g: LayerGeom):
+    """Per-CU latency vector ``[cluster(std conv), DWE(dw)]``."""
+    return [darkside_cluster_cycles(n_conv, g), darkside_dwe_cycles(n_dw, g)]
+
+
+# ---------------------------------------------------------------------------
+# Aggregation: Eq. 3 (latency) and Eq. 4 (energy)
+# ---------------------------------------------------------------------------
+
+def total_latency(per_layer_lats):
+    """Eq. 3: sum over layers of the (smooth) max across CUs. Cycles."""
+    return sum(smoothmax(lats) if len(lats) > 1 else lats[0]
+               for lats in per_layer_lats)
+
+
+def total_energy(per_layer_lats, p_act_mw, p_idle_mw, freq_mhz):
+    """Eq. 4: active energy per CU + idle-floor energy over the layer
+    latency, accumulated across layers. Returns microjoules.
+
+    ``per_layer_lats[l][i]`` must be ordered like ``p_act_mw[i]``.
+    """
+    us_per_cycle = 1.0 / freq_mhz
+    e = 0.0
+    for lats in per_layer_lats:
+        m = smoothmax(lats) if len(lats) > 1 else lats[0]
+        active = sum(p * lat for p, lat in zip(p_act_mw, lats))
+        e = e + (active + p_idle_mw * m) * us_per_cycle  # mW * us = nJ
+    return e * 1e-3  # uJ
+
+
+def diana_power():
+    return ([HW["diana"]["digital"]["p_act_mw"],
+             HW["diana"]["analog"]["p_act_mw"]],
+            HW["diana"]["p_idle_mw"], HW["diana"]["freq_mhz"])
+
+
+def darkside_power():
+    return ([HW["darkside"]["cluster"]["p_act_mw"],
+             HW["darkside"]["dwe"]["p_act_mw"]],
+            HW["darkside"]["p_idle_mw"], HW["darkside"]["freq_mhz"])

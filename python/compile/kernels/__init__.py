@@ -1,0 +1,24 @@
+"""Layer-1 Pallas kernels for the ODiMO reproduction.
+
+Every kernel is lowered with ``interpret=True`` (the CPU PJRT client cannot
+execute Mosaic custom-calls) and validated against the pure-jnp oracles in
+:mod:`ref` by ``python/tests/``.
+"""
+
+from .fake_quant import fake_quant_int8, fake_quant_ternary
+from .effective_weights import (
+    effective_weights_fwd_kernel,
+    effective_weights_ste,
+)
+from .matmul import matmul, matmul_kernel
+from .dw_conv import dw_conv3x3
+
+__all__ = [
+    "fake_quant_int8",
+    "fake_quant_ternary",
+    "effective_weights_fwd_kernel",
+    "effective_weights_ste",
+    "matmul",
+    "matmul_kernel",
+    "dw_conv3x3",
+]

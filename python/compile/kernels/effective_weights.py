@@ -1,0 +1,108 @@
+"""Fused effective-weights Pallas kernel — ODiMO Eq. 5, the training hot-spot.
+
+For a DIANA-mapped layer, every training step must build
+
+    W_eff[c] = theta[c, 0] * Q_int8(W[c]) + theta[c, 1] * Q_ternary(W[c])
+
+for every output channel ``c``. Done naively (as in the paper's PyTorch
+implementation) this is five separate elementwise passes over the weight
+tensor per layer per step; this kernel fuses both per-channel quantizers and
+the theta-mix into a single VMEM pass per ``[BC, F]`` block. The kernel also
+emits the two quantized tensors ``q8``/``qt`` because the backward pass
+needs them (see :func:`effective_weights_ste`).
+
+Gradients: the kernel is wrapped in a ``custom_vjp`` implementing the
+straight-through estimator used by the paper:
+
+* ``dL/dW     = dL/dW_eff``            (STE: both quantizers pass gradients
+  through unchanged, and ``theta`` rows are softmaxed so they sum to 1)
+* ``dL/dtheta[c,0] = <dL/dW_eff[c], q8[c]>`` and analogously for column 1
+  (exact gradient of the linear mix).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .fake_quant import DEFAULT_BLOCK_C
+
+
+def _eff_kernel(w_ref, th_ref, weff_ref, q8_ref, qt_ref):
+    w = w_ref[...]
+    th = th_ref[...]
+    # int8 branch
+    amax = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
+    scale8 = jnp.where(amax > 0, amax / ref.INT8_LEVELS, 1.0)
+    q8 = jnp.clip(jnp.round(w / scale8), -ref.INT8_LEVELS, ref.INT8_LEVELS) * scale8
+    # ternary branch (reuses amax)
+    thr = ref.TERNARY_THR * amax
+    mask = (jnp.abs(w) > thr).astype(w.dtype)
+    denom = jnp.maximum(jnp.sum(mask, axis=-1, keepdims=True), 1.0)
+    scalet = jnp.sum(jnp.abs(w) * mask, axis=-1, keepdims=True) / denom
+    qt = jnp.sign(w) * mask * scalet
+    q8_ref[...] = q8
+    qt_ref[...] = qt
+    weff_ref[...] = th[:, 0:1] * q8 + th[:, 1:2] * qt
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def effective_weights_fwd_kernel(w: jnp.ndarray, theta: jnp.ndarray,
+                                 block_c: int = DEFAULT_BLOCK_C):
+    """Forward-only fused kernel. ``w: [C, F]``, ``theta: [C, 2]``.
+
+    Returns ``(w_eff, q8, qt)``, each ``[C, F]``.
+    """
+    c, f = w.shape
+    bc = min(block_c, c)
+    pad = (-c) % bc
+    wp = jnp.pad(w, ((0, pad), (0, 0))) if pad else w
+    thp = jnp.pad(theta, ((0, pad), (0, 0))) if pad else theta
+    shapes = jax.ShapeDtypeStruct((c + pad, f), w.dtype)
+    weff, q8, qt = pl.pallas_call(
+        _eff_kernel,
+        grid=((c + pad) // bc,),
+        in_specs=[
+            pl.BlockSpec((bc, f), lambda i: (i, 0)),
+            pl.BlockSpec((bc, 2), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bc, f), lambda i: (i, 0)),
+            pl.BlockSpec((bc, f), lambda i: (i, 0)),
+            pl.BlockSpec((bc, f), lambda i: (i, 0)),
+        ],
+        out_shape=(shapes, shapes, shapes),
+        interpret=True,
+    )(wp, thp)
+    if pad:
+        weff, q8, qt = weff[:c], q8[:c], qt[:c]
+    return weff, q8, qt
+
+
+@jax.custom_vjp
+def effective_weights_ste(w: jnp.ndarray, theta: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable Eq. 5 effective weights (STE), pallas-fused forward."""
+    weff, _, _ = effective_weights_fwd_kernel(w, theta)
+    return weff
+
+
+def _ste_fwd(w, theta):
+    weff, q8, qt = effective_weights_fwd_kernel(w, theta)
+    return weff, (q8, qt)
+
+
+def _ste_bwd(res, g):
+    q8, qt = res
+    # Straight-through for W: theta rows sum to 1 after softmax, so the
+    # mix passes the gradient through unchanged.
+    dw = g
+    dth = jnp.stack(
+        [jnp.sum(g * q8, axis=-1), jnp.sum(g * qt, axis=-1)], axis=-1)
+    return dw, dth
+
+
+effective_weights_ste.defvjp(_ste_fwd, _ste_bwd)

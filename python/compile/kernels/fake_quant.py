@@ -1,0 +1,108 @@
+"""Pallas fake-quantization kernels (DIANA weight formats).
+
+Layer-1 of the stack: these kernels implement the per-output-channel int8
+and ternary fake-quantizers used by the DIANA mixed-precision supernet.
+They are tiled along the output-channel axis: each grid step loads a
+``[BC, F]`` block of the flattened weight tensor into VMEM, computes the
+per-row scale (a row reduction) and writes the re-quantized block back.
+On a real TPU this is one fused vector pass per block; here they are
+lowered with ``interpret=True`` so the emitted HLO runs on the CPU PJRT
+client (see DESIGN.md §Hardware-Adaptation).
+
+Oracles: :mod:`ref` (``fake_quant_int8`` / ``fake_quant_ternary``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default channel-block: chosen by the §Perf block sweep (EXPERIMENTS.md):
+# 64 rows × up-to-6k f32 elements ≈ 1.1 MB of VMEM counting the fused
+# kernel's input + three outputs — comfortably inside a 16 MB VMEM budget
+# with double-buffering headroom, and within 20% of the flat part of the
+# throughput curve (8→64 is a 2.4× speedup, 64→256 only +24%).
+DEFAULT_BLOCK_C = 64
+
+
+def _int8_kernel(w_ref, o_ref):
+    w = w_ref[...]
+    amax = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / ref.INT8_LEVELS, 1.0)
+    q = jnp.clip(jnp.round(w / scale), -ref.INT8_LEVELS, ref.INT8_LEVELS)
+    o_ref[...] = q * scale
+
+
+def _ternary_kernel(w_ref, o_ref):
+    w = w_ref[...]
+    amax = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
+    thr = ref.TERNARY_THR * amax
+    mask = (jnp.abs(w) > thr).astype(w.dtype)
+    denom = jnp.maximum(jnp.sum(mask, axis=-1, keepdims=True), 1.0)
+    scale = jnp.sum(jnp.abs(w) * mask, axis=-1, keepdims=True) / denom
+    o_ref[...] = jnp.sign(w) * mask * scale
+
+
+def _row_blocked_call(kernel, w: jnp.ndarray, block_c: int) -> jnp.ndarray:
+    """Run ``kernel`` over ``w: [C, F]`` in ``[block_c, F]`` row blocks.
+
+    ``C`` is padded up to a multiple of ``block_c`` (padding rows are all
+    zero, for which both quantizers are exact no-ops) and the output is
+    sliced back.
+    """
+    c, f = w.shape
+    bc = min(block_c, c)
+    pad = (-c) % bc
+    wp = jnp.pad(w, ((0, pad), (0, 0))) if pad else w
+    out = pl.pallas_call(
+        kernel,
+        grid=((c + pad) // bc,),
+        in_specs=[pl.BlockSpec((bc, f), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bc, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c + pad, f), w.dtype),
+        interpret=True,
+    )(wp)
+    return out[:c] if pad else out
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def fake_quant_int8(w: jnp.ndarray, block_c: int = DEFAULT_BLOCK_C) -> jnp.ndarray:
+    """Per-channel symmetric int8 fake-quantization of ``w: [C, F]``."""
+    return _row_blocked_call(_int8_kernel, w, block_c)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def fake_quant_ternary(w: jnp.ndarray, block_c: int = DEFAULT_BLOCK_C) -> jnp.ndarray:
+    """Per-channel ternary fake-quantization of ``w: [C, F]``."""
+    return _row_blocked_call(_ternary_kernel, w, block_c)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through wrappers (identity gradient). Needed because pallas_call
+# has no AD rule: even under stop_gradient, linearization of the primal
+# fails, so the whole quantizer is declared as a custom_vjp primitive.
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def ste_int8_rows(w: jnp.ndarray) -> jnp.ndarray:
+    """STE per-row int8 fake-quant of ``[C, F]`` (Pallas forward)."""
+    return fake_quant_int8(w)
+
+
+ste_int8_rows.defvjp(lambda w: (fake_quant_int8(w), None),
+                     lambda _, g: (g,))
+
+
+@jax.custom_vjp
+def ste_ternary_rows(w: jnp.ndarray) -> jnp.ndarray:
+    """STE per-row ternary fake-quant of ``[C, F]`` (Pallas forward)."""
+    return fake_quant_ternary(w)
+
+
+ste_ternary_rows.defvjp(lambda w: (fake_quant_ternary(w), None),
+                        lambda _, g: (g,))

@@ -1,0 +1,87 @@
+"""MXU-tiled matmul Pallas kernel.
+
+Classic three-level tiling: grid ``(M/bm, N/bn, K/bk)``, each step loads an
+``[bm, bk]`` LHS block and a ``[bk, bn]`` RHS block into VMEM and
+accumulates ``[bm, bn]`` partials directly in the (revisited) output block.
+Block defaults are MXU-shaped (128x128 systolic array, f32 accumulation);
+DESIGN.md §Hardware-Adaptation records the VMEM footprint / utilization
+estimate. ``interpret=True`` lowers the grid to plain HLO for the CPU PJRT
+runtime.
+
+A ``custom_vjp`` expresses both backward matmuls with the same kernel so the
+FC head of every supernet stays on the Pallas path during training.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def _pad_to(a: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    p0 = (-a.shape[0]) % m0
+    p1 = (-a.shape[1]) % m1
+    if p0 or p1:
+        a = jnp.pad(a, ((0, p0), (0, p1)))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_kernel(x: jnp.ndarray, y: jnp.ndarray,
+                  bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                  bk: int = DEFAULT_BK) -> jnp.ndarray:
+    """``[M, K] @ [K, N] -> [M, N]`` in f32 via the tiled Pallas kernel."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    xp = _pad_to(x.astype(jnp.float32), bm_, bk_)
+    yp = _pad_to(y.astype(jnp.float32), bk_, bn_)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm_, np_ // bn_, kp // bk_),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable Pallas matmul (forward and both backwards tiled)."""
+    return matmul_kernel(x, y)
+
+
+def _mm_fwd(x, y):
+    return matmul_kernel(x, y), (x, y)
+
+
+def _mm_bwd(res, g):
+    x, y = res
+    return matmul_kernel(g, y.T), matmul_kernel(x.T, g)
+
+
+matmul.defvjp(_mm_fwd, _mm_bwd)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: each Pallas kernel in
+``fake_quant.py`` / ``effective_weights.py`` / ``matmul.py`` / ``dw_conv.py``
+must match its oracle here to float32 tolerance (see python/tests/).
+
+The quantizers implement the two weight formats of the DIANA SoC:
+
+* ``fake_quant_int8`` — symmetric per-output-channel int8 (digital CU),
+  scale = max|W_c| / 127, round-to-nearest, clip to [-127, 127].
+* ``fake_quant_ternary`` — per-output-channel ternarization (analog AIMC
+  CU): threshold t_c = TERNARY_THR * max|W_c|; weights with |w| <= t_c are
+  zeroed, the rest snap to +/- s_c where s_c is the mean magnitude of the
+  surviving weights (TWN-style scale).
+
+All functions take weights in *channel-major flattened* layout
+``[C_out, F]`` with ``F = C_in * K * K`` — the layout the kernels tile.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT8_LEVELS = 127.0
+TERNARY_THR = 0.05
+
+
+def fake_quant_int8(w: jnp.ndarray) -> jnp.ndarray:
+    """Per-row symmetric int8 fake-quantization of ``w: [C, F]``."""
+    amax = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / INT8_LEVELS, 1.0)
+    q = jnp.clip(jnp.round(w / scale), -INT8_LEVELS, INT8_LEVELS)
+    return q * scale
+
+
+def fake_quant_ternary(w: jnp.ndarray) -> jnp.ndarray:
+    """Per-row ternary fake-quantization of ``w: [C, F]``."""
+    amax = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
+    thr = TERNARY_THR * amax
+    mask = (jnp.abs(w) > thr).astype(w.dtype)
+    denom = jnp.maximum(jnp.sum(mask, axis=-1, keepdims=True), 1.0)
+    scale = jnp.sum(jnp.abs(w) * mask, axis=-1, keepdims=True) / denom
+    return jnp.sign(w) * mask * scale
+
+
+def effective_weights(w: jnp.ndarray, theta: jnp.ndarray):
+    """Eq. 5 effective weights for DIANA.
+
+    ``w: [C, F]`` master weights, ``theta: [C, 2]`` per-channel softmaxed
+    CU-assignment probabilities (column 0 = digital/int8, column 1 =
+    analog/ternary). Returns ``(w_eff, q8, qt)``.
+    """
+    q8 = fake_quant_int8(w)
+    qt = fake_quant_ternary(w)
+    w_eff = theta[:, 0:1] * q8 + theta[:, 1:2] * qt
+    return w_eff, q8, qt
+
+
+def matmul(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """f32 matmul oracle, ``[M, K] @ [K, N]``."""
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def dw_conv3x3(x: jnp.ndarray, k: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """Depthwise 3x3 'SAME' conv oracle.
+
+    ``x: [B, H, W, C]``, ``k: [3, 3, C]``. Returns ``[B, ceil(H/s),
+    ceil(W/s), C]``.
+    """
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    out = jnp.zeros((b, h, w, c), dtype=jnp.float32)
+    for di in range(3):
+        for dj in range(3):
+            out = out + xp[:, di:di + h, dj:dj + w, :] * k[di, dj, :]
+    if stride > 1:
+        out = out[:, ::stride, ::stride, :]
+    return out

@@ -1,0 +1,110 @@
+"""Shared NN building blocks for the ODiMO supernets (Layer-2, build-time).
+
+Plain-JAX conv / batch-norm / linear primitives plus the straight-through
+int8 weight quantizer used by every layer that executes on an int8 CU
+(DIANA digital PE array, Darkside cluster/DWE). Parameters are nested dicts
+(pytrees) so the AOT manifest can name every leaf.
+
+Layout conventions: activations NHWC, conv weights HWIO, FC weights
+``[in, out]``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fake_quant import ste_int8_rows
+
+BN_MOMENTUM = 0.9
+BN_EPS = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Quantization (STE wrappers over the Pallas kernels)
+# ---------------------------------------------------------------------------
+
+def ste_int8(w: jnp.ndarray) -> jnp.ndarray:
+    """Straight-through per-channel int8 fake-quantization.
+
+    ``w`` is a conv (HWIO) or FC (``[in, out]``) weight; channels are the
+    trailing (output) axis. Forward runs the Pallas kernel; gradient is the
+    identity.
+    """
+    flat = w.reshape(-1, w.shape[-1]).T  # [Cout, F]
+    return ste_int8_rows(flat).T.reshape(w.shape)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def conv_init(key, k: int, cin: int, cout: int) -> jnp.ndarray:
+    """He-normal conv weight ``[k, k, cin, cout]``."""
+    fan_in = k * k * cin
+    std = jnp.sqrt(2.0 / fan_in)
+    return std * jax.random.normal(key, (k, k, cin, cout), dtype=jnp.float32)
+
+
+def dw_init(key, c: int) -> jnp.ndarray:
+    """He-normal depthwise 3x3 weight ``[3, 3, c]``."""
+    std = jnp.sqrt(2.0 / 9.0)
+    return std * jax.random.normal(key, (3, 3, c), dtype=jnp.float32)
+
+
+def fc_init(key, cin: int, cout: int) -> dict:
+    std = jnp.sqrt(1.0 / cin)
+    return {
+        "w": std * jax.random.normal(key, (cin, cout), dtype=jnp.float32),
+        "b": jnp.zeros((cout,), dtype=jnp.float32),
+    }
+
+
+def bn_init(c: int) -> dict:
+    return {
+        "scale": jnp.ones((c,), dtype=jnp.float32),
+        "bias": jnp.zeros((c,), dtype=jnp.float32),
+        "mean": jnp.zeros((c,), dtype=jnp.float32),
+        "var": jnp.ones((c,), dtype=jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward primitives
+# ---------------------------------------------------------------------------
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """'SAME' NHWC x HWIO convolution."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def dw_conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """'SAME' depthwise conv; ``w: [3, 3, C]``."""
+    c = x.shape[-1]
+    wio = w[:, :, None, :]  # [3,3,1,C] with feature_group_count=C
+    return jax.lax.conv_general_dilated(
+        x, wio, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=c)
+
+
+def batch_norm(x: jnp.ndarray, p: dict, training: bool):
+    """BatchNorm. Returns ``(y, new_stats)``; ``new_stats`` is ``p``'s
+    ``mean``/``var`` updated with batch statistics when ``training``."""
+    if training:
+        axes = tuple(range(x.ndim - 1))
+        mean = jnp.mean(x, axis=axes)
+        var = jnp.var(x, axis=axes)
+        new_mean = BN_MOMENTUM * p["mean"] + (1 - BN_MOMENTUM) * mean
+        new_var = BN_MOMENTUM * p["var"] + (1 - BN_MOMENTUM) * var
+    else:
+        mean, var = p["mean"], p["var"]
+        new_mean, new_var = p["mean"], p["var"]
+    inv = jax.lax.rsqrt(var + BN_EPS) * p["scale"]
+    y = (x - mean) * inv + p["bias"]
+    return y, {"mean": new_mean, "var": new_var}
+
+
+def global_avg_pool(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(x, axis=(1, 2))

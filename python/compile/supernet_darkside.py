@@ -1,0 +1,218 @@
+"""Darkside layer-type supernet (ODiMO Sec. IV-C).
+
+MobileNetV1-style network for the Darkside SoC, whose two CUs support
+*different operations*: the 8-core RISC-V cluster runs standard (and
+pointwise) convolutions, the DepthWise Engine (DWE) runs only depthwise
+3x3. Each ``C_in == C_out`` position holds *both* alternatives in parallel
+and a monotone per-channel gate decides, channel by channel, which CU
+produces it.
+
+Contiguity (Eq. 6): instead of independent per-channel logits, each
+searchable layer owns ``C+1`` split-position logits ``theta``; with
+``p = softmax(theta)`` the gate is ``g_c = P(split > c) = 1 - cumsum(p)_c``,
+which is monotone non-increasing in ``c`` — so the channels mapped to the
+cluster are always the leading contiguous block and no data marshaling is
+ever needed on the SoC.
+
+Search modes:
+
+* ``dw_vs_conv``   — cluster runs a standard 3x3 conv, DWE a depthwise 3x3
+  (the CIFAR search space of Sec. V);
+* ``dw_vs_dwsep``  — DW vs DW-separable (DW + pointwise), the restricted
+  ImageNet space of Sec. V-C1 (the two stages execute sequentially:
+  DWE then cluster);
+* ``layerwise``    — one shared gate per layer (the path-based DNAS
+  baseline of Fig. 7-bottom).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .costs import (LayerGeom, darkside_cluster_cycles, darkside_dwe_cycles,
+                    darkside_layer_lats)
+from .kernels import matmul
+
+
+@dataclass(frozen=True)
+class DarksideConfig:
+    name: str
+    input_hw: int = 32
+    stem_width: int = 8
+    # (channels, dw_stride, pw_out) per searchable block
+    blocks: tuple = ((8, 1, 16), (16, 2, 32), (32, 1, 32), (32, 2, 64),
+                     (64, 1, 64), (64, 2, 128), (128, 1, 128))
+    num_classes: int = 10
+    width_mult: float = 1.0
+    # 'dw_vs_conv' | 'dw_vs_dwsep' | 'layerwise' | 'fixed_conv'
+    # (fixed_conv = plain all-standard-conv net, the Table II baseline)
+    search_mode: str = "dw_vs_conv"
+
+
+def _scaled(cfg: DarksideConfig):
+    """Apply the width multiplier (Fig. 10) to all channel counts."""
+    def s(c):
+        return max(4, int(round(c * cfg.width_mult)))
+    stem = s(cfg.stem_width)
+    blocks = tuple((s(c), st, s(o)) for c, st, o in cfg.blocks)
+    return stem, blocks
+
+
+def build_geoms(cfg: DarksideConfig):
+    """Static geometry: ``(stem, searchable, pointwise, fc)`` entries."""
+    stem_w, blocks = _scaled(cfg)
+    hw = cfg.input_hw
+    stem = LayerGeom("stem", "conv", 3, stem_w, 3, hw, hw, 1, False)
+    search, pws = [], []
+    cin = stem_w
+    for i, (c, st, pw_out) in enumerate(blocks):
+        assert cin == c, f"block {i}: Cin {cin} != C {c} (searchable layers need Cin==Cout)"
+        hw = math.ceil(hw / st)
+        search.append(LayerGeom(f"blk{i}", "conv", c, c, 3, hw, hw, st, True))
+        pws.append(LayerGeom(f"pw{i}", "pw", c, pw_out, 1, hw, hw, 1, False))
+        cin = pw_out
+    fc = LayerGeom("fc", "fc", cin, cfg.num_classes, 1, 1, 1, 1, False)
+    return stem, search, pws, fc
+
+
+def theta_paths(cfg: DarksideConfig):
+    _, search, _, _ = build_geoms(cfg)
+    return [g.name for g in search]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: DarksideConfig) -> dict:
+    stem, search, pws, fc = build_geoms(cfg)
+    n_keys = 1 + 3 * len(search) + len(pws) + 1
+    keys = iter(jax.random.split(key, n_keys))
+    params = {
+        "stem": {"w": L.conv_init(next(keys), 3, 3, stem.cout),
+                 "bn": L.bn_init(stem.cout)}
+    }
+    for g in search:
+        c = g.cout
+        if cfg.search_mode == "fixed_conv":
+            params[g.name] = {"bn": L.bn_init(c),
+                              "w_conv": L.conv_init(next(keys), 3, c, c)}
+            next(keys)
+            next(keys)  # keep key schedule aligned across modes
+            continue
+        if cfg.search_mode == "layerwise":
+            theta = jnp.zeros((2,), dtype=jnp.float32)
+        else:
+            theta = jnp.zeros((c + 1,), dtype=jnp.float32)
+        blk = {"theta": theta, "bn": L.bn_init(c),
+               "w_dw": L.dw_init(next(keys), c)}
+        if cfg.search_mode == "dw_vs_dwsep":
+            blk["w_pw_sep"] = L.conv_init(next(keys), 1, c, c)
+            next(keys)  # keep key schedule aligned across modes
+        else:
+            blk["w_conv"] = L.conv_init(next(keys), 3, c, c)
+            next(keys)
+        params[g.name] = blk
+    for g in pws:
+        params[g.name] = {"w": L.conv_init(next(keys), 1, g.cin, g.cout),
+                          "bn": L.bn_init(g.cout)}
+    params["fc"] = L.fc_init(next(keys), fc.cin, fc.cout)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Gates
+# ---------------------------------------------------------------------------
+
+def split_gate(theta: jnp.ndarray, c: int) -> jnp.ndarray:
+    """Eq. 6 monotone gate: ``g_c`` = probability that channel ``c`` is
+    produced by the *cluster* branch. ``theta: [C+1]`` split logits."""
+    p = jax.nn.softmax(theta)
+    return 1.0 - jnp.cumsum(p)[:c]
+
+
+def ste_int8_dw(w: jnp.ndarray) -> jnp.ndarray:
+    """Straight-through int8 for a depthwise ``[3, 3, C]`` weight."""
+    from .kernels.fake_quant import ste_int8_rows
+    flat = w.transpose(2, 0, 1).reshape(w.shape[-1], -1)
+    return ste_int8_rows(flat).reshape(w.shape[-1], 3, 3).transpose(1, 2, 0)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _search_block(x, p, g: LayerGeom, cfg: DarksideConfig, training: bool):
+    c = g.cout
+    if cfg.search_mode == "fixed_conv":
+        y = L.conv2d(x, L.ste_int8(p["w_conv"]), g.stride)
+        y, stats = L.batch_norm(y, p["bn"], training)
+        lats = [darkside_cluster_cycles(float(c), g), jnp.float32(0.0)]
+        return jax.nn.relu(y), stats, lats, "max", jnp.float32(c)
+    if cfg.search_mode == "layerwise":
+        gc = jnp.broadcast_to(jax.nn.softmax(p["theta"])[0], (c,))
+    else:
+        gc = split_gate(p["theta"], c)
+    n_cluster = jnp.sum(gc)
+
+    y_dw = L.dw_conv2d(x, ste_int8_dw(p["w_dw"]), g.stride)
+    if cfg.search_mode == "dw_vs_dwsep":
+        # DW always runs (on the DWE); the gated alternative adds a
+        # pointwise on the cluster. Stages are sequential: DWE -> cluster.
+        y_sep = L.conv2d(y_dw, L.ste_int8(p["w_pw_sep"]), 1)
+        y = gc * y_sep + (1.0 - gc) * y_dw
+        pw_geom = LayerGeom(g.name + "_pw", "pw", c, c, 1, g.ox, g.oy, 1)
+        lats = [darkside_cluster_cycles(n_cluster, pw_geom),
+                darkside_dwe_cycles(float(c), g)]
+        combine = "sum"
+    else:
+        y_conv = L.conv2d(x, L.ste_int8(p["w_conv"]), g.stride)
+        y = gc * y_conv + (1.0 - gc) * y_dw
+        lats = darkside_layer_lats(n_cluster, c - n_cluster, g)
+        combine = "max"
+    y, stats = L.batch_norm(y, p["bn"], training)
+    return jax.nn.relu(y), stats, lats, combine, n_cluster
+
+
+def apply(params, x, cfg: DarksideConfig, training: bool):
+    """Supernet forward.
+
+    Returns ``(logits, new_bn_stats, per_layer)`` with ``per_layer`` a list
+    of ``(name, lats [cluster, dwe], combine, n_cluster)`` covering *every*
+    layer (fixed layers report their full channel count on the cluster).
+    """
+    stem, search, pws, fc = build_geoms(cfg)
+    new_bn = {}
+    per_layer = []
+
+    h = L.conv2d(x, L.ste_int8(params["stem"]["w"]), 1)
+    h, new_bn["stem"] = L.batch_norm(h, params["stem"]["bn"], training)
+    h = jax.nn.relu(h)
+    per_layer.append(("stem",
+                      [darkside_cluster_cycles(float(stem.cout), stem),
+                       jnp.float32(0.0)], "max", jnp.float32(stem.cout)))
+
+    for g, pg in zip(search, pws):
+        y, stats, lats, combine, n_cl = _search_block(
+            h, params[g.name], g, cfg, training)
+        new_bn[g.name] = stats
+        per_layer.append((g.name, lats, combine, n_cl))
+
+        h = L.conv2d(y, L.ste_int8(params[pg.name]["w"]), 1)
+        h, new_bn[pg.name] = L.batch_norm(h, params[pg.name]["bn"], training)
+        h = jax.nn.relu(h)
+        per_layer.append((pg.name,
+                          [darkside_cluster_cycles(float(pg.cout), pg),
+                           jnp.float32(0.0)], "max", jnp.float32(pg.cout)))
+
+    feat = L.global_avg_pool(h)
+    logits = matmul(feat, L.ste_int8(params["fc"]["w"])) + params["fc"]["b"]
+    per_layer.append(("fc",
+                      [darkside_cluster_cycles(float(fc.cout), fc),
+                       jnp.float32(0.0)], "max", jnp.float32(fc.cout)))
+    return logits, new_bn, per_layer

@@ -1,0 +1,172 @@
+"""DIANA mixed-precision supernet (ODiMO Sec. IV-B).
+
+CIFAR-style ResNets where every convolution's output channels are softly
+assigned between the two DIANA CUs — the int8 digital 16x16 PE grid and the
+ternary analog AIMC array — through per-channel ``theta`` parameters. The
+forward pass builds Eq. 5 *effective weights* with the fused Pallas kernel
+(:func:`..kernels.effective_weights_ste`), so selecting a precision is the
+same act as selecting a CU.
+
+Also hosts the ``prune`` mode used by the Fig. 7-top baseline: the same
+per-channel gating machinery, but the second "CU" is channel removal
+(PIT-style structured pruning with everything kept on the digital CU).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .costs import LayerGeom, diana_layer_lats, diana_digital_cycles
+from .kernels import effective_weights_ste, fake_quant_int8, matmul
+
+
+@dataclass(frozen=True)
+class DianaConfig:
+    name: str
+    input_hw: int = 32
+    stem_width: int = 8
+    stage_widths: tuple = (8, 16, 32)
+    blocks_per_stage: int = 3
+    num_classes: int = 10
+    # 'map'    — digital vs analog per channel (ODiMO, Sec. IV-B)
+    # 'prune'  — keep vs prune per channel (Fig. 7-top baseline)
+    # 'fixed8' — plain int8 net, everything digital (Table II baseline)
+    mode: str = "map"
+
+
+# ---------------------------------------------------------------------------
+# Geometry
+# ---------------------------------------------------------------------------
+
+def build_geoms(cfg: DianaConfig):
+    """Static per-layer geometry, in parameter order. Returns
+    ``(geoms, fc_geom)`` where each searchable conv has one entry."""
+    geoms = []
+    hw = cfg.input_hw
+    geoms.append(LayerGeom("stem", "conv", 3, cfg.stem_width, 3, hw, hw,
+                           1, True))
+    cin = cfg.stem_width
+    for si, cw in enumerate(cfg.stage_widths):
+        for bi in range(cfg.blocks_per_stage):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            hw_out = math.ceil(hw / stride)
+            geoms.append(LayerGeom(f"s{si}b{bi}c1", "conv", cin, cw, 3,
+                                   hw_out, hw_out, stride, True))
+            geoms.append(LayerGeom(f"s{si}b{bi}c2", "conv", cw, cw, 3,
+                                   hw_out, hw_out, 1, True))
+            if stride != 1 or cin != cw:
+                geoms.append(LayerGeom(f"s{si}b{bi}dn", "pw", cin, cw, 1,
+                                       hw_out, hw_out, stride, True))
+            hw = hw_out
+            cin = cw
+    fc_geom = LayerGeom("fc", "fc", cin, cfg.num_classes, 1, 1, 1, 1, False)
+    return geoms, fc_geom
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: DianaConfig) -> dict:
+    geoms, fc_geom = build_geoms(cfg)
+    params = {}
+    keys = jax.random.split(key, len(geoms) + 1)
+    for g, k in zip(geoms, keys[:-1]):
+        layer = {
+            "w": L.conv_init(k, g.k, g.cin, g.cout),
+            "bn": L.bn_init(g.cout),
+        }
+        if cfg.mode != "fixed8":
+            layer["theta"] = jnp.zeros((g.cout, 2), dtype=jnp.float32)
+        params[g.name] = layer
+    params["fc"] = L.fc_init(keys[-1], fc_geom.cin, fc_geom.cout)
+    return params
+
+
+def theta_paths(cfg: DianaConfig):
+    """Names of the searchable layers, in the order ``apply`` reports
+    their latencies (used by the AOT manifest)."""
+    geoms, _ = build_geoms(cfg)
+    return [g.name for g in geoms]
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _diana_conv(x, p, g: LayerGeom, cfg: DianaConfig, training: bool):
+    """One ODiMO-mapped convolution: Eq. 5 effective weights + BN stats +
+    per-CU latency terms."""
+    w = p["w"]
+    flat = w.transpose(3, 0, 1, 2).reshape(g.cout, -1)
+    if cfg.mode == "fixed8":
+        from .kernels.fake_quant import ste_int8_rows
+        weff_flat = ste_int8_rows(flat)
+        lats = [diana_digital_cycles(float(g.cout), g)]
+        counts = (jnp.float32(g.cout), jnp.float32(0.0))
+        weff = weff_flat.reshape(g.cout, g.k, g.k, g.cin).transpose(1, 2, 3, 0)
+        y = L.conv2d(x, weff, g.stride)
+        y, new_stats = L.batch_norm(y, p["bn"], training)
+        return y, new_stats, lats, counts
+    th = jax.nn.softmax(p["theta"], axis=-1)
+    if cfg.mode == "prune":
+        # keep-vs-prune: int8 branch scaled by keep-probability, no analog.
+        from .kernels.fake_quant import ste_int8_rows
+        weff_flat = th[:, 0:1] * ste_int8_rows(flat)
+        n_keep = jnp.sum(th[:, 0])
+        lats = [diana_digital_cycles(n_keep, g)]
+        counts = (n_keep, jnp.float32(0.0))
+    else:
+        weff_flat = effective_weights_ste(flat, th)
+        n_d = jnp.sum(th[:, 0])
+        n_a = jnp.sum(th[:, 1])
+        lats = diana_layer_lats(n_d, n_a, g)
+        counts = (n_d, n_a)
+    weff = weff_flat.reshape(g.cout, g.k, g.k, g.cin).transpose(1, 2, 3, 0)
+    y = L.conv2d(x, weff, g.stride)
+    y, new_stats = L.batch_norm(y, p["bn"], training)
+    return y, new_stats, lats, counts
+
+
+def apply(params, x, cfg: DianaConfig, training: bool):
+    """Supernet forward.
+
+    Returns ``(logits, new_bn_stats, per_layer, fc_lat)`` where
+    ``per_layer`` is a list of ``(name, lats, (n_cu0, n_cu1))`` in geometry
+    order and ``fc_lat`` the fixed digital-CU cycles of the FC head.
+    """
+    geoms, fc_geom = build_geoms(cfg)
+    by_name = {g.name: g for g in geoms}
+    new_bn = {}
+    per_layer = []
+
+    def run(name, x, act=True):
+        g = by_name[name]
+        y, stats, lats, counts = _diana_conv(x, params[name], g, cfg, training)
+        new_bn[name] = stats
+        per_layer.append((name, lats, counts))
+        return jax.nn.relu(y) if act else y
+
+    h = run("stem", x)
+    cin = cfg.stem_width
+    for si, cw in enumerate(cfg.stage_widths):
+        for bi in range(cfg.blocks_per_stage):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            ident = h
+            h1 = run(f"s{si}b{bi}c1", h)
+            h2 = run(f"s{si}b{bi}c2", h1, act=False)
+            if stride != 1 or cin != cw:
+                ident = run(f"s{si}b{bi}dn", ident, act=False)
+            h = jax.nn.relu(h2 + ident)
+            cin = cw
+
+    feat = L.global_avg_pool(h)
+    wq = L.ste_int8(params["fc"]["w"])
+    logits = matmul(feat, wq) + params["fc"]["b"]
+    fc_lat = diana_digital_cycles(float(fc_geom.cout), fc_geom)
+    return logits, new_bn, per_layer, fc_lat

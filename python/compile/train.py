@@ -1,0 +1,138 @@
+"""Training-step machinery: losses, masked optimizers, metric plumbing.
+
+One compiled ``train_step`` serves all three ODiMO phases (Sec. IV-A):
+
+* **Warmup** — the Rust coordinator passes ``lam = 0`` and re-feeds the old
+  ``theta`` / theta-optimizer state, so only W trains on the task loss;
+* **Search** — ``lam > 0``; W and theta are trained jointly on
+  ``L + lam * C`` (Eq. 1);
+* **Final-Training** — the coordinator feeds the *discretized* one-hot
+  theta and again discards theta updates.
+
+Parameter roles are derived from the leaf path: ``theta`` leaves belong to
+the mapping optimizer (always Adam, as in the paper), BN ``mean``/``var``
+leaves are running statistics (updated by direct replacement, never by
+gradient), everything else is a weight (SGD+momentum on DIANA, Adam on
+Darkside — Sec. V-B).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.tree_util import tree_flatten_with_path, tree_unflatten
+
+WEIGHT_DECAY = 1e-4
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+SGD_MOMENTUM = 0.9
+
+
+def path_str(path) -> str:
+    """Stable, human-readable leaf path: 'stem/w', 's0b1c1/theta', ..."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def leaf_role(path) -> str:
+    s = path_str(path)
+    leaf = s.split("/")[-1]
+    if leaf == "theta":
+        return "theta"
+    if leaf in ("mean", "var"):
+        return "bn_stat"
+    return "weight"
+
+
+# ---------------------------------------------------------------------------
+# Losses / metrics
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def accuracy(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Optimizers (masked, role-aware, over full param-shaped trees)
+# ---------------------------------------------------------------------------
+
+def zeros_like_tree(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def opt_init(params):
+    """Uniform optimizer state (used for both the W and theta optimizers):
+    first/second moment trees shaped like ``params`` plus a step counter.
+    SGD+momentum uses only ``m``."""
+    return {"m": zeros_like_tree(params), "v": zeros_like_tree(params),
+            "t": jnp.zeros((), dtype=jnp.float32)}
+
+
+def apply_updates(params, grads, new_bn, opt_w, opt_th, lr_w, lr_th,
+                  w_optimizer: str):
+    """One optimizer step over every leaf, dispatched by role.
+
+    ``new_bn`` maps layer name -> {'mean','var'} with the fresh running
+    stats from the forward pass.
+    """
+    p_leaves, treedef = tree_flatten_with_path(params)
+    g_leaves = [l for _, l in tree_flatten_with_path(grads)[0]]
+    mw = [l for _, l in tree_flatten_with_path(opt_w["m"])[0]]
+    vw = [l for _, l in tree_flatten_with_path(opt_w["v"])[0]]
+    mt = [l for _, l in tree_flatten_with_path(opt_th["m"])[0]]
+    vt = [l for _, l in tree_flatten_with_path(opt_th["v"])[0]]
+
+    tw = opt_w["t"] + 1.0
+    tt = opt_th["t"] + 1.0
+
+    new_p, new_mw, new_vw, new_mt, new_vt = [], [], [], [], []
+    for i, (path, p) in enumerate(p_leaves):
+        role = leaf_role(path)
+        g = g_leaves[i]
+        if role == "bn_stat":
+            # replace with the forward pass's running stats
+            s = path_str(path).split("/")
+            layer, stat = s[0], s[-1]
+            new_p.append(new_bn[layer][stat])
+            new_mw.append(mw[i]); new_vw.append(vw[i])
+            new_mt.append(mt[i]); new_vt.append(vt[i])
+        elif role == "theta":
+            m = ADAM_B1 * mt[i] + (1 - ADAM_B1) * g
+            v = ADAM_B2 * vt[i] + (1 - ADAM_B2) * g * g
+            mhat = m / (1 - ADAM_B1 ** tt)
+            vhat = v / (1 - ADAM_B2 ** tt)
+            new_p.append(p - lr_th * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+            new_mt.append(m); new_vt.append(v)
+            new_mw.append(mw[i]); new_vw.append(vw[i])
+        else:  # weight
+            if w_optimizer == "sgdm":
+                g = g + WEIGHT_DECAY * p
+                m = SGD_MOMENTUM * mw[i] + g
+                new_p.append(p - lr_w * m)
+                new_mw.append(m); new_vw.append(vw[i])
+            else:  # adam
+                m = ADAM_B1 * mw[i] + (1 - ADAM_B1) * g
+                v = ADAM_B2 * vw[i] + (1 - ADAM_B2) * g * g
+                mhat = m / (1 - ADAM_B1 ** tw)
+                vhat = v / (1 - ADAM_B2 ** tw)
+                new_p.append(p - lr_w * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+                new_mw.append(m); new_vw.append(v)
+            new_mt.append(mt[i]); new_vt.append(vt[i])
+
+    params2 = tree_unflatten(treedef, new_p)
+    opt_w2 = {"m": tree_unflatten(treedef, new_mw),
+              "v": tree_unflatten(treedef, new_vw), "t": tw}
+    opt_th2 = {"m": tree_unflatten(treedef, new_mt),
+               "v": tree_unflatten(treedef, new_vt), "t": tt}
+    return params2, opt_w2, opt_th2

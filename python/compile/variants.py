@@ -1,0 +1,278 @@
+"""Variant registry: every (network, dataset, SoC) combination the paper's
+evaluation needs, with its four AOT entry points.
+
+Each variant provides:
+
+* ``init_fn(seed)``                       -> (params, opt_w, opt_th)
+* ``train_fn(params, opt_w, opt_th, x, y, lam, cost_sel, lr_w, lr_th)``
+      -> (params', opt_w', opt_th', metrics[5])
+  metrics = [loss, ce, acc, cost_lat_cycles, cost_energy_uj];
+  ``cost_sel`` selects the optimization target at runtime
+  (0 = latency Eq. 3, 1 = energy Eq. 4) so one artifact serves Fig. 5/6.
+* ``eval_fn(params, x, y)``               -> metrics[2] = [correct, loss_sum]
+  (inference-mode BN, current theta)
+* ``cost_fn(params)``                     -> (layer_mat [L,4], totals[2])
+  layer_mat rows = [n_cu0, n_cu1, lat_cu0, lat_cu1] in layer order;
+  totals = [latency_cycles, energy_uJ].
+
+The variant table mirrors DESIGN.md §4. Model depths/widths are scaled to
+the CPU training budget (documented substitution); the *structure* of each
+search space matches the paper exactly.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import costs as C
+from . import supernet_darkside as DS
+from . import supernet_diana as DI
+from . import train as T
+
+
+@dataclass(frozen=True)
+class DatasetSpec:
+    name: str
+    hw: int
+    classes: int
+    batch: int
+
+
+SYNTH_C10 = DatasetSpec("synth-cifar10", 32, 10, 64)
+SYNTH_C100 = DatasetSpec("synth-cifar100", 32, 100, 64)
+SYNTH_IMGNET = DatasetSpec("synth-imagenet", 64, 100, 32)
+
+
+@dataclass
+class Variant:
+    name: str
+    platform: str            # 'diana' | 'darkside'
+    dataset: DatasetSpec
+    w_optimizer: str         # 'sgdm' | 'adam'
+    cfg: object = None
+    search_kind: str = "channel"  # 'channel' | 'split' | 'layerwise' | 'prune'
+
+
+def _registry() -> dict:
+    v = {}
+    v["diana_resnet20_c10"] = Variant(
+        "diana_resnet20_c10", "diana", SYNTH_C10, "sgdm",
+        DI.DianaConfig("diana_resnet20_c10", 32, 8, (8, 16, 32), 3, 10))
+    v["diana_resnet8_c100"] = Variant(
+        "diana_resnet8_c100", "diana", SYNTH_C100, "sgdm",
+        DI.DianaConfig("diana_resnet8_c100", 32, 16, (16, 32, 64), 1, 100))
+    v["diana_resnet8_imgnet"] = Variant(
+        "diana_resnet8_imgnet", "diana", SYNTH_IMGNET, "sgdm",
+        DI.DianaConfig("diana_resnet8_imgnet", 64, 16, (16, 32, 64), 1, 100))
+    v["diana_resnet20_c10_prune"] = Variant(
+        "diana_resnet20_c10_prune", "diana", SYNTH_C10, "sgdm",
+        DI.DianaConfig("diana_resnet20_c10_prune", 32, 8, (8, 16, 32), 3, 10,
+                       mode="prune"),
+        search_kind="prune")
+
+    def ds_cfg(name, ds, classes, wm=1.0, mode="dw_vs_conv"):
+        return DS.DarksideConfig(name, ds.hw, 8,
+                                 ((8, 1, 16), (16, 2, 32), (32, 1, 32),
+                                  (32, 2, 64), (64, 1, 64), (64, 2, 128),
+                                  (128, 1, 128)),
+                                 classes, wm, mode)
+
+    v["darkside_mbv1_c10"] = Variant(
+        "darkside_mbv1_c10", "darkside", SYNTH_C10, "adam",
+        ds_cfg("darkside_mbv1_c10", SYNTH_C10, 10), search_kind="split")
+    v["darkside_mbv1_c10_w050"] = Variant(
+        "darkside_mbv1_c10_w050", "darkside", SYNTH_C10, "adam",
+        ds_cfg("darkside_mbv1_c10_w050", SYNTH_C10, 10, wm=0.5),
+        search_kind="split")
+    v["darkside_mbv1_c10_w025"] = Variant(
+        "darkside_mbv1_c10_w025", "darkside", SYNTH_C10, "adam",
+        ds_cfg("darkside_mbv1_c10_w025", SYNTH_C10, 10, wm=0.25),
+        search_kind="split")
+    v["darkside_mbv1_c100"] = Variant(
+        "darkside_mbv1_c100", "darkside", SYNTH_C100, "adam",
+        ds_cfg("darkside_mbv1_c100", SYNTH_C100, 100), search_kind="split")
+    v["darkside_mbv1_imgnet"] = Variant(
+        "darkside_mbv1_imgnet", "darkside", SYNTH_IMGNET, "adam",
+        ds_cfg("darkside_mbv1_imgnet", SYNTH_IMGNET, 100,
+               mode="dw_vs_dwsep"), search_kind="split")
+    v["darkside_mbv1_c10_layerwise"] = Variant(
+        "darkside_mbv1_c10_layerwise", "darkside", SYNTH_C10, "adam",
+        ds_cfg("darkside_mbv1_c10_layerwise", SYNTH_C10, 10,
+               mode="layerwise"), search_kind="layerwise")
+
+    # plain (non-supernet) baselines, used to measure the Table II search
+    # overhead: the "most demanding baseline" of each platform
+    for name, base in [("diana_resnet20_c10", "c10"),
+                       ("diana_resnet8_c100", "c100"),
+                       ("diana_resnet8_imgnet", "imgnet")]:
+        src = v[name]
+        fixed_cfg = DI.DianaConfig(
+            name + "_fixed", src.cfg.input_hw, src.cfg.stem_width,
+            src.cfg.stage_widths, src.cfg.blocks_per_stage,
+            src.cfg.num_classes, mode="fixed8")
+        v[name + "_fixed"] = Variant(name + "_fixed", "diana", src.dataset,
+                                     "sgdm", fixed_cfg, search_kind="fixed")
+    for name in ["darkside_mbv1_c10", "darkside_mbv1_c100",
+                 "darkside_mbv1_imgnet"]:
+        src = v[name]
+        fixed_cfg = DS.DarksideConfig(
+            name + "_fixed", src.cfg.input_hw, src.cfg.stem_width,
+            src.cfg.blocks, src.cfg.num_classes, src.cfg.width_mult,
+            "fixed_conv")
+        v[name + "_fixed"] = Variant(name + "_fixed", "darkside",
+                                     src.dataset, "adam", fixed_cfg,
+                                     search_kind="fixed")
+    return v
+
+
+REGISTRY = _registry()
+
+
+# ---------------------------------------------------------------------------
+# Per-platform adapters
+# ---------------------------------------------------------------------------
+
+def _diana_forward(var: Variant, params, x, training: bool):
+    logits, new_bn, per_layer, fc_lat = DI.apply(params, x, var.cfg, training)
+    lat_vectors = []
+    records = []
+    for (_, lats, counts) in per_layer:
+        lv = lats if len(lats) == 2 else [lats[0], jnp.float32(0.0)]
+        lat_vectors.append((lv, "max"))
+        records.append([counts[0], counts[1], lv[0], lv[1]])
+    lat_vectors.append(([fc_lat, jnp.float32(0.0)], "max"))
+    records.append([jnp.float32(var.cfg.num_classes), jnp.float32(0.0),
+                    fc_lat, jnp.float32(0.0)])
+    return logits, new_bn, lat_vectors, records
+
+
+def _darkside_forward(var: Variant, params, x, training: bool):
+    logits, new_bn, per_layer = DS.apply(params, x, var.cfg, training)
+    lat_vectors = []
+    records = []
+    for (name, lats, combine, n_cl) in per_layer:
+        lat_vectors.append((lats, combine))
+        # lats are [cluster, dwe]; n_dwe = total channels - n_cluster when
+        # the layer is searchable (else 0)
+        geom_c = lats  # placeholder for shape; counts recorded explicitly
+        records.append([n_cl, jnp.float32(0.0), lats[0], lats[1]])
+    return logits, new_bn, lat_vectors, records
+
+
+def _forward(var: Variant, params, x, training: bool):
+    if var.platform == "diana":
+        return _diana_forward(var, params, x, training)
+    return _darkside_forward(var, params, x, training)
+
+
+def _totals(var: Variant, lat_vectors):
+    lat = jnp.float32(0.0)
+    per_layer_maxes = []
+    for lats, combine in lat_vectors:
+        m = C.smoothmax(lats) if combine == "max" else lats[0] + lats[1]
+        lat = lat + m
+        per_layer_maxes.append((lats, m))
+    p_act, p_idle, freq = (C.diana_power() if var.platform == "diana"
+                           else C.darkside_power())
+    us_per_cycle = 1.0 / freq  # cycles / MHz = microseconds
+    en = jnp.float32(0.0)
+    for lats, m in per_layer_maxes:
+        active = sum(p * l for p, l in zip(p_act, lats))
+        # mW * us = nJ
+        en = en + (active + p_idle * m) * us_per_cycle
+    return lat, en * 1e-3  # nJ -> uJ
+
+
+# ---------------------------------------------------------------------------
+# Entry-point builders
+# ---------------------------------------------------------------------------
+
+def build_fns(var: Variant):
+    """Build (init_fn, train_fn, eval_fn, cost_fn) for a variant."""
+    plat_init = DI.init if var.platform == "diana" else DS.init
+
+    def init_fn(seed):
+        key = jax.random.PRNGKey(seed)
+        params = plat_init(key, var.cfg)
+        return params, T.opt_init(params), T.opt_init(params)
+
+    def loss_and_metrics(params, x, y, lam, cost_sel, training=True):
+        logits, new_bn, lat_vectors, records = _forward(
+            var, params, x, training)
+        ce = T.cross_entropy(logits, y)
+        lat, en = _totals(var, lat_vectors)
+        cost = (1.0 - cost_sel) * lat + cost_sel * en
+        loss = ce + lam * cost
+        acc = T.accuracy(logits, y)
+        return loss, (new_bn, ce, acc, lat, en, records)
+
+    def train_fn(params, opt_w, opt_th, x, y, lam, cost_sel, lr_w, lr_th):
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: loss_and_metrics(p, x, y, lam, cost_sel),
+            has_aux=True)(params)
+        new_bn, ce, acc, lat, en, _ = aux
+        params2, opt_w2, opt_th2 = T.apply_updates(
+            params, grads, new_bn, opt_w, opt_th, lr_w, lr_th,
+            var.w_optimizer)
+        metrics = jnp.stack([loss, ce, acc, lat, en])
+        return params2, opt_w2, opt_th2, metrics
+
+    def eval_fn(params, x, y):
+        logits, _, _, _ = _forward(var, params, x, training=False)
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        loss_sum = T.cross_entropy(logits, y) * x.shape[0]
+        return jnp.stack([correct, loss_sum])
+
+    def cost_fn(params):
+        x = jnp.zeros((1, var.dataset.hw, var.dataset.hw, 3), jnp.float32)
+        _, _, lat_vectors, records = _forward(var, params, x, training=False)
+        lat, en = _totals(var, lat_vectors)
+        mat = jnp.stack([jnp.stack(r) for r in records])
+        return mat, jnp.stack([lat, en])
+
+    return init_fn, train_fn, eval_fn, cost_fn
+
+
+def layer_table(var: Variant):
+    """Static layer metadata for the manifest (geometry + search info),
+    in the same order cost_fn emits rows."""
+    rows = []
+    fixed = var.search_kind == "fixed"
+    if var.platform == "diana":
+        geoms, fc_geom = DI.build_geoms(var.cfg)
+        for g in geoms:
+            rows.append(dict(name=g.name, ltype=g.ltype, cin=g.cin,
+                             cout=g.cout, k=g.k, ox=g.ox, oy=g.oy,
+                             stride=g.stride,
+                             searchable=g.searchable and not fixed,
+                             theta_len=0 if fixed else 2 * g.cout))
+        rows.append(dict(name="fc", ltype="fc", cin=fc_geom.cin,
+                         cout=fc_geom.cout, k=1, ox=1, oy=1, stride=1,
+                         searchable=False, theta_len=0))
+    else:
+        stem, search, pws, fc = DS.build_geoms(var.cfg)
+        rows.append(dict(name="stem", ltype="conv", cin=3, cout=stem.cout,
+                         k=3, ox=stem.ox, oy=stem.oy, stride=1,
+                         searchable=False, theta_len=0))
+        for g, pg in zip(search, pws):
+            if fixed:
+                tl, lt, srch = 0, "conv", False
+            elif var.search_kind == "layerwise":
+                tl, lt, srch = 2, "search", True
+            else:
+                tl, lt, srch = g.cout + 1, "search", True
+            rows.append(dict(name=g.name, ltype=lt, cin=g.cin,
+                             cout=g.cout, k=3, ox=g.ox, oy=g.oy,
+                             stride=g.stride, searchable=srch, theta_len=tl))
+            rows.append(dict(name=pg.name, ltype="pw", cin=pg.cin,
+                             cout=pg.cout, k=1, ox=pg.ox, oy=pg.oy, stride=1,
+                             searchable=False, theta_len=0))
+        rows.append(dict(name="fc", ltype="fc", cin=fc.cin, cout=fc.cout,
+                         k=1, ox=1, oy=1, stride=1, searchable=False,
+                         theta_len=0))
+    return rows

@@ -1,0 +1,64 @@
+"""AOT boundary tests: manifest schema, io-spec ↔ artifact consistency,
+HLO-text emission. Artifact-dependent checks skip when `make artifacts`
+has not run."""
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import variants as V
+
+ARTIFACTS = Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_to_hlo_text_emits_parseable_module():
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jnp.zeros((2, 2), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ROOT" in text
+
+
+def test_leaf_specs_flatten_order():
+    tree = {"a": jnp.zeros((2, 3)), "b": {"c": jnp.zeros((4,), jnp.int32)}}
+    specs = aot._leaf_specs("params", tree)
+    assert [s["name"] for s in specs] == ["params/a", "params/b/c"]
+    assert specs[0]["shape"] == [2, 3]
+    assert specs[1]["dtype"] == "i32"
+
+
+@pytest.mark.skipif(not (ARTIFACTS / ".stamp").exists(),
+                    reason="run `make artifacts` first")
+@pytest.mark.parametrize("variant", ["diana_resnet20_c10", "darkside_mbv1_c10"])
+def test_manifest_matches_registry(variant):
+    m = json.loads((ARTIFACTS / f"{variant}.manifest.json").read_text())
+    var = V.REGISTRY[variant]
+    assert m["platform"] == var.platform
+    assert m["dataset"]["batch"] == var.dataset.batch
+    assert m["dataset"]["classes"] == var.dataset.classes
+    # every function's HLO file exists and is non-trivial
+    for fn, spec in m["functions"].items():
+        p = ARTIFACTS / spec["file"]
+        assert p.exists(), f"{variant}:{fn} missing {spec['file']}"
+        assert p.stat().st_size > 1000
+    # train state loops: every init output appears as a train input
+    init_outs = [o["name"] for o in m["functions"]["init"]["outputs"]]
+    train_ins = [i["name"] for i in m["functions"]["train"]["inputs"]]
+    assert train_ins[: len(init_outs)] == init_outs
+    # θ leaves exist for every searchable layer
+    for layer in m["layers"]:
+        if layer["searchable"]:
+            assert f"params/{layer['name']}/theta" in train_ins
+
+
+@pytest.mark.skipif(not (ARTIFACTS / ".stamp").exists(),
+                    reason="run `make artifacts` first")
+def test_cost_scale_positive():
+    for mf in ARTIFACTS.glob("*.manifest.json"):
+        m = json.loads(mf.read_text())
+        assert m["cost_scale"]["latency_cycles"] > 0, mf.name
+        assert m["cost_scale"]["energy_uj"] > 0, mf.name

@@ -1,0 +1,110 @@
+"""Differentiable cost models (Eq. 3/4): closed-form checks, monotonicity,
+smooth-max behaviour, and agreement with the constants file."""
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import costs as C
+
+HW = json.loads((Path(__file__).resolve().parents[2] / "hw" / "constants.json").read_text())
+
+
+def geom(cin=16, cout=32, k=3, hw=16, ltype="conv"):
+    return C.LayerGeom("t", ltype, cin, cout, k, hw, hw, 1, True)
+
+
+def test_constants_match_file():
+    assert C.HW == HW
+
+
+def test_gate_limits():
+    assert float(C.gate(0.0)) == 0.0
+    assert float(C.gate(64.0)) > 0.99
+    assert 0.0 < float(C.gate(0.5)) < 1.0
+
+
+def test_smoothmax_approximates_max():
+    a, b = jnp.float32(1000.0), jnp.float32(100.0)
+    m = float(C.smoothmax([a, b]))
+    assert 999.0 <= m <= 1001.0
+    # symmetric
+    assert abs(float(C.smoothmax([b, a])) - m) < 1e-3
+
+
+def test_smoothmax_is_differentiable():
+    g = jax.grad(lambda x: C.smoothmax([x, jnp.float32(10.0)]))(jnp.float32(100.0))
+    assert np.isfinite(float(g))
+    assert float(g) > 0.9  # dominant term gets ~all the gradient
+
+
+@settings(max_examples=20, deadline=None)
+@given(n1=st.floats(0, 64), n2=st.floats(0, 64))
+def test_diana_models_monotone(n1, n2):
+    lo, hi = sorted([n1, n2])
+    g = geom()
+    assert float(C.diana_digital_cycles(lo, g)) <= float(C.diana_digital_cycles(hi, g)) + 1e-3
+    assert float(C.diana_analog_cycles(lo, g)) <= float(C.diana_analog_cycles(hi, g)) + 1e-3
+    assert float(C.darkside_cluster_cycles(lo, g)) <= float(C.darkside_cluster_cycles(hi, g)) + 1e-3
+    assert float(C.darkside_dwe_cycles(lo, g)) <= float(C.darkside_dwe_cycles(hi, g)) + 1e-3
+
+
+def test_zero_channels_costs_nothing():
+    g = geom()
+    for fn in (C.diana_digital_cycles, C.diana_analog_cycles,
+               C.darkside_cluster_cycles, C.darkside_dwe_cycles):
+        assert float(fn(0.0, g)) == 0.0
+
+
+def test_digital_closed_form():
+    """Hand-computed digital cycles for a known geometry (n=16 channels)."""
+    g = geom(cin=16, cout=32, k=3, hw=8)
+    d = HW["diana"]["digital"]
+    n = 16.0
+    kdim = 16 * 9
+    inner = -(-kdim // d["pe_cols"])  # ceil
+    expected = (n / d["pe_rows"]) * inner * 64 / d["macs_per_cycle_per_pe"]
+    expected += n * kdim / d["weight_load_bytes_per_cycle"]
+    expected += d["setup_cycles"]
+    expected *= n / (n + 0.5)  # gate
+    got = float(C.diana_digital_cycles(n, g))
+    np.testing.assert_allclose(got, expected, rtol=1e-6)
+
+
+def test_dwe_beats_cluster_for_dw_work():
+    g = geom(cin=64, cout=64, k=3, hw=16)
+    dwe = float(C.darkside_dwe_cycles(64.0, g))
+    clu = float(C.darkside_cluster_cycles(64.0, g))
+    assert clu > 4 * dwe
+
+
+def test_energy_positive_and_scales():
+    g = geom()
+    lats = [C.diana_layer_lats(16.0, 16.0, g)]
+    p_act, p_idle, freq = C.diana_power()
+    e1 = float(C.total_energy(lats, p_act, p_idle, freq))
+    lats2 = [C.diana_layer_lats(32.0, 32.0, geom(cout=64))]
+    e2 = float(C.total_energy(lats2, p_act, p_idle, freq))
+    assert 0 < e1 < e2
+
+
+def test_total_latency_sums_layers():
+    g = geom()
+    one = float(C.total_latency([C.diana_layer_lats(8.0, 8.0, g)]))
+    two = float(C.total_latency([C.diana_layer_lats(8.0, 8.0, g)] * 2))
+    np.testing.assert_allclose(two, 2 * one, rtol=1e-6)
+
+
+def test_cost_gradient_flows_to_counts():
+    g = geom()
+
+    def cost(n_d):
+        return C.total_latency([C.diana_layer_lats(n_d, g.cout - n_d, g)])
+
+    grad = float(jax.grad(cost)(jnp.float32(16.0)))
+    assert np.isfinite(grad) and grad != 0.0

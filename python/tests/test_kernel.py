@@ -1,0 +1,201 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and via data, magnitudes); assert_allclose pins
+the kernels to ref.py. This is the core correctness signal for the
+compile path — the same kernels are baked into every AOT artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    dw_conv3x3,
+    effective_weights_fwd_kernel,
+    effective_weights_ste,
+    fake_quant_int8,
+    fake_quant_ternary,
+    matmul,
+    matmul_kernel,
+    ref,
+)
+from compile.kernels.fake_quant import ste_int8_rows, ste_ternary_rows
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# fake quantizers
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(c=st.integers(1, 70), f=st.integers(1, 300), seed=st.integers(0, 2**31))
+def test_fake_quant_int8_matches_ref(c, f, seed):
+    w = rand(np.random.default_rng(seed), c, f)
+    np.testing.assert_allclose(
+        fake_quant_int8(w), ref.fake_quant_int8(w), rtol=1e-6, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(c=st.integers(1, 70), f=st.integers(1, 300), seed=st.integers(0, 2**31))
+def test_fake_quant_ternary_matches_ref(c, f, seed):
+    w = rand(np.random.default_rng(seed), c, f)
+    np.testing.assert_allclose(
+        fake_quant_ternary(w), ref.fake_quant_ternary(w), rtol=1e-6, atol=1e-6)
+
+
+def test_int8_idempotent():
+    w = rand(np.random.default_rng(0), 16, 64)
+    q1 = fake_quant_int8(w)
+    q2 = fake_quant_int8(q1)
+    np.testing.assert_allclose(q1, q2, rtol=1e-5, atol=1e-6)
+
+
+def test_int8_levels_bounded():
+    w = rand(np.random.default_rng(1), 8, 128) * 10
+    q = np.asarray(fake_quant_int8(w))
+    scale = np.abs(w).max(axis=1, keepdims=True) / 127.0
+    levels = q / scale
+    assert np.all(np.abs(levels) <= 127.0 + 1e-4)
+    np.testing.assert_allclose(levels, np.round(levels), atol=1e-3)
+
+
+def test_ternary_is_ternary():
+    w = rand(np.random.default_rng(2), 8, 128)
+    q = np.asarray(fake_quant_ternary(w))
+    for row in q:
+        vals = np.unique(np.round(row, 5))
+        assert len(vals) <= 3, f"row has {len(vals)} distinct values"
+
+
+def test_zero_weights_survive():
+    w = jnp.zeros((4, 32), jnp.float32)
+    np.testing.assert_array_equal(fake_quant_int8(w), w)
+    np.testing.assert_array_equal(fake_quant_ternary(w), w)
+
+
+def test_ste_gradients_are_identity():
+    w = rand(np.random.default_rng(3), 6, 20)
+    for fn in (ste_int8_rows, ste_ternary_rows):
+        g = jax.grad(lambda x: jnp.sum(fn(x) * 2.0))(w)
+        np.testing.assert_allclose(g, 2.0 * np.ones_like(w), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# effective weights (Eq. 5)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(c=st.integers(1, 70), f=st.integers(1, 200), seed=st.integers(0, 2**31))
+def test_effective_weights_matches_ref(c, f, seed):
+    rng = np.random.default_rng(seed)
+    w = rand(rng, c, f)
+    th = jax.nn.softmax(rand(rng, c, 2), axis=-1)
+    weff, q8, qt = effective_weights_fwd_kernel(w, th)
+    rweff, rq8, rqt = ref.effective_weights(w, th)
+    np.testing.assert_allclose(weff, rweff, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(q8, rq8, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(qt, rqt, rtol=1e-5, atol=1e-6)
+
+
+def test_effective_weights_one_hot_reduces_to_quantizer():
+    rng = np.random.default_rng(7)
+    w = rand(rng, 12, 45)
+    th8 = jnp.stack([jnp.ones(12), jnp.zeros(12)], axis=1)
+    tht = jnp.stack([jnp.zeros(12), jnp.ones(12)], axis=1)
+    np.testing.assert_allclose(
+        effective_weights_ste(w, th8), ref.fake_quant_int8(w), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(
+        effective_weights_ste(w, tht), ref.fake_quant_ternary(w), rtol=1e-5, atol=1e-6)
+
+
+def test_effective_weights_vjp():
+    """STE backward: dW = upstream, dθ = <upstream, q_branch>."""
+    rng = np.random.default_rng(8)
+    w = rand(rng, 5, 11)
+    th = jax.nn.softmax(rand(rng, 5, 2), axis=-1)
+    g = rand(rng, 5, 11)
+    _, vjp = jax.vjp(effective_weights_ste, w, th)
+    dw, dth = vjp(g)
+    np.testing.assert_allclose(dw, g, rtol=1e-6)
+    _, q8, qt = ref.effective_weights(w, th)
+    np.testing.assert_allclose(dth[:, 0], jnp.sum(g * q8, axis=1), rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(dth[:, 1], jnp.sum(g * qt, axis=1), rtol=2e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 150),
+    k=st.integers(1, 150),
+    n=st.integers(1, 150),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, k)
+    y = rand(rng, k, n)
+    np.testing.assert_allclose(
+        matmul_kernel(x, y), ref.matmul(x, y), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_blocks_span_k_loop():
+    """Shapes larger than one block exercise the K-accumulation loop."""
+    rng = np.random.default_rng(11)
+    x = rand(rng, 300, 300)
+    y = rand(rng, 300, 130)
+    np.testing.assert_allclose(
+        matmul_kernel(x, y), ref.matmul(x, y), rtol=1e-4, atol=1e-3)
+
+
+def test_matmul_gradients():
+    rng = np.random.default_rng(12)
+    x = rand(rng, 17, 23)
+    y = rand(rng, 23, 9)
+    gx, gy = jax.grad(lambda a, b: jnp.sum(matmul(a, b)), argnums=(0, 1))(x, y)
+    ones = jnp.ones((17, 9), jnp.float32)
+    np.testing.assert_allclose(gx, ref.matmul(ones, y.T), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gy, ref.matmul(x.T, ones), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# depthwise conv
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    hw=st.integers(3, 20),
+    c=st.integers(1, 40),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31),
+)
+def test_dw_conv_matches_ref(b, hw, c, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, b, hw, hw, c)
+    k = rand(rng, 3, 3, c)
+    np.testing.assert_allclose(
+        dw_conv3x3(x, k, stride=stride),
+        ref.dw_conv3x3(x, k, stride=stride),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_dw_conv_matches_lax():
+    """Cross-check the oracle itself against lax.conv."""
+    rng = np.random.default_rng(13)
+    x = rand(rng, 2, 10, 10, 7)
+    k = rand(rng, 3, 3, 7)
+    import compile.layers as L
+    np.testing.assert_allclose(
+        ref.dw_conv3x3(x, k), L.dw_conv2d(x, k, 1), rtol=1e-5, atol=1e-5)

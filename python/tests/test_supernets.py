@@ -1,0 +1,197 @@
+"""L2 supernet tests: shapes, one-hot reduction, gate contiguity (Eq. 6),
+gradient flow to θ, and the variant registry."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import supernet_darkside as DS
+from compile import supernet_diana as DI
+from compile import variants as V
+
+RNG = np.random.default_rng(0)
+
+
+def x_batch(hw=32, b=2):
+    return jnp.asarray(RNG.normal(size=(b, hw, hw, 3)).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def diana_small():
+    cfg = DI.DianaConfig("t", 32, 8, (8, 16), 1, 10)
+    params = DI.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def darkside_small():
+    cfg = DS.DarksideConfig("t", 32, 8, ((8, 1, 16), (16, 2, 32)), 10, 1.0)
+    params = DS.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# DIANA
+# ---------------------------------------------------------------------------
+
+def test_diana_shapes(diana_small):
+    cfg, params = diana_small
+    logits, new_bn, per_layer, fc_lat = DI.apply(params, x_batch(), cfg, True)
+    assert logits.shape == (2, 10)
+    assert len(per_layer) == len(DI.build_geoms(cfg)[0])
+    assert float(fc_lat) > 0
+    for name, lats, counts in per_layer:
+        assert len(lats) == 2
+        c = DI.build_geoms(cfg)[0]
+        assert float(counts[0] + counts[1]) > 0
+
+
+def test_diana_uniform_theta_splits_counts(diana_small):
+    cfg, params = diana_small
+    _, _, per_layer, _ = DI.apply(params, x_batch(), cfg, True)
+    for name, lats, (n_d, n_a) in per_layer:
+        np.testing.assert_allclose(float(n_d), float(n_a), rtol=1e-5)
+
+
+def test_diana_one_hot_theta_is_pure_precision(diana_small):
+    cfg, params = diana_small
+    from compile.kernels import ref
+    p2 = jax.tree_util.tree_map(lambda x: x, params)
+    # force stem fully digital
+    c = cfg.stem_width
+    p2["stem"]["theta"] = jnp.stack(
+        [20.0 * jnp.ones(c), -20.0 * jnp.ones(c)], axis=1)
+    _, _, per_layer, _ = DI.apply(p2, x_batch(), cfg, True)
+    name, lats, (n_d, n_a) = per_layer[0]
+    assert float(n_d) > c - 1e-3
+    assert float(n_a) < 1e-3
+
+
+def test_diana_theta_receives_gradient(diana_small):
+    cfg, params = diana_small
+
+    def loss(p):
+        logits, _, per_layer, _ = DI.apply(p, x_batch(), cfg, True)
+        lat = sum(l[1][0] + l[1][1] for l in per_layer)
+        return jnp.sum(logits**2) * 0.0 + lat
+
+    g = jax.grad(loss)(params)
+    gt = np.asarray(g["stem"]["theta"])
+    assert np.any(gt != 0.0), "θ got no cost gradient"
+
+
+def test_diana_prune_mode_single_cu():
+    cfg = DI.DianaConfig("t", 32, 8, (8,), 1, 10, mode="prune")
+    params = DI.init(jax.random.PRNGKey(0), cfg)
+    logits, _, per_layer, _ = DI.apply(params, x_batch(), cfg, True)
+    assert logits.shape == (2, 10)
+    for _, lats, counts in per_layer:
+        assert len(lats) == 1  # digital only
+
+
+def test_diana_fixed_mode_has_no_theta():
+    cfg = DI.DianaConfig("t", 32, 8, (8,), 1, 10, mode="fixed8")
+    params = DI.init(jax.random.PRNGKey(0), cfg)
+    assert "theta" not in params["stem"]
+    logits, _, per_layer, _ = DI.apply(params, x_batch(), cfg, True)
+    assert logits.shape == (2, 10)
+
+
+# ---------------------------------------------------------------------------
+# Darkside / Eq. 6 gate
+# ---------------------------------------------------------------------------
+
+def test_split_gate_monotone_and_bounded():
+    for seed in range(5):
+        theta = jnp.asarray(np.random.default_rng(seed).normal(size=17).astype(np.float32))
+        g = np.asarray(DS.split_gate(theta, 16))
+        assert g.shape == (16,)
+        assert np.all(g >= -1e-6) and np.all(g <= 1 + 1e-6)
+        assert np.all(np.diff(g) <= 1e-6), "gate must be non-increasing"
+
+
+def test_split_gate_extremes():
+    c = 8
+    t_all_conv = jnp.zeros(c + 1).at[c].set(30.0)  # split = C
+    g = np.asarray(DS.split_gate(t_all_conv, c))
+    np.testing.assert_allclose(g, 1.0, atol=1e-6)
+    t_all_dw = jnp.zeros(c + 1).at[0].set(30.0)  # split = 0
+    g = np.asarray(DS.split_gate(t_all_dw, c))
+    np.testing.assert_allclose(g, 0.0, atol=1e-6)
+
+
+def test_darkside_shapes(darkside_small):
+    cfg, params = darkside_small
+    logits, new_bn, per_layer = DS.apply(params, x_batch(), cfg, True)
+    assert logits.shape == (2, 10)
+    # stem + 2*(search, pw) + fc
+    assert len(per_layer) == 1 + 2 * 2 + 1
+
+
+def test_darkside_theta_gradient(darkside_small):
+    cfg, params = darkside_small
+
+    def loss(p):
+        _, _, per_layer = DS.apply(p, x_batch(), cfg, True)
+        return sum(l[1][0] + l[1][1] for l in per_layer)
+
+    g = jax.grad(loss)(params)
+    assert np.any(np.asarray(g["blk0"]["theta"]) != 0.0)
+
+
+def test_darkside_dwsep_mode():
+    cfg = DS.DarksideConfig("t", 32, 8, ((8, 1, 16),), 10, 1.0,
+                            search_mode="dw_vs_dwsep")
+    params = DS.init(jax.random.PRNGKey(0), cfg)
+    assert "w_pw_sep" in params["blk0"] and "w_conv" not in params["blk0"]
+    logits, _, per_layer = DS.apply(params, x_batch(), cfg, True)
+    assert logits.shape == (2, 10)
+
+
+def test_darkside_layerwise_mode():
+    cfg = DS.DarksideConfig("t", 32, 8, ((8, 1, 16),), 10, 1.0,
+                            search_mode="layerwise")
+    params = DS.init(jax.random.PRNGKey(0), cfg)
+    assert params["blk0"]["theta"].shape == (2,)
+    logits, _, _ = DS.apply(params, x_batch(), cfg, True)
+    assert logits.shape == (2, 10)
+
+
+def test_darkside_width_multiplier_scales():
+    cfg1 = DS.DarksideConfig("t", 32, 8, ((8, 1, 16),), 10, 1.0)
+    cfg2 = DS.DarksideConfig("t", 32, 8, ((8, 1, 16),), 10, 0.5)
+    s1, _ = DS._scaled(cfg1)
+    s2, _ = DS._scaled(cfg2)
+    assert s2 == max(4, s1 // 2)
+
+
+# ---------------------------------------------------------------------------
+# variants registry
+# ---------------------------------------------------------------------------
+
+def test_registry_complete():
+    expected = {
+        "diana_resnet20_c10", "diana_resnet8_c100", "diana_resnet8_imgnet",
+        "diana_resnet20_c10_prune", "darkside_mbv1_c10",
+        "darkside_mbv1_c10_w050", "darkside_mbv1_c10_w025",
+        "darkside_mbv1_c100", "darkside_mbv1_imgnet",
+        "darkside_mbv1_c10_layerwise",
+    }
+    assert expected.issubset(set(V.REGISTRY))
+    # every main variant has a _fixed twin for Table II
+    for name in ["diana_resnet20_c10", "darkside_mbv1_c10",
+                 "darkside_mbv1_imgnet"]:
+        assert name + "_fixed" in V.REGISTRY
+
+
+def test_layer_table_consistent_with_cost_rows():
+    for name in ["diana_resnet20_c10", "darkside_mbv1_c10"]:
+        var = V.REGISTRY[name]
+        rows = V.layer_table(var)
+        _, _, _, cost_fn = V.build_fns(var)
+        params = (DI.init if var.platform == "diana" else DS.init)(
+            jax.random.PRNGKey(0), var.cfg)
+        mat, totals = cost_fn(params)
+        assert mat.shape == (len(rows), 4), f"{name}: {mat.shape} vs {len(rows)}"
+        assert float(totals[0]) > 0 and float(totals[1]) > 0

@@ -1,0 +1,65 @@
+//! Bench: coordinator hot-path components (no artifacts needed).
+//!
+//! The per-step L3 overhead budget is: batch generation + literal
+//! creation + θ discretization + (per sweep point) simulator execution +
+//! Pareto extraction. This bench tracks each piece so the §Perf pass can
+//! see where the non-XLA time goes.
+
+use odimo::datasets::{Split, SynthDataset};
+use odimo::mapping::{discretize, one_hot_theta, reorganize, SearchKind};
+use odimo::pareto::{pareto_front, Point};
+use odimo::soc::{LayerAssignment, Mapping, Platform};
+use odimo::util::bench::quick;
+
+fn main() {
+    println!("== coordinator bench ==");
+
+    // --- dataset batch generation (the per-step host work) ---------------
+    let ds32 = SynthDataset::new(32, 10, 0.9, 42);
+    let r = quick("synth batch 64x32x32x3", || {
+        std::hint::black_box(ds32.batch(Split::Train, 7, 64));
+    });
+    println!(
+        "   -> {:.1} MB/s of training data",
+        (64.0 * 32.0 * 32.0 * 3.0 * 4.0) / (r.mean_ns / 1e9) / 1e6
+    );
+    let ds64 = SynthDataset::new(64, 100, 1.3, 42);
+    quick("synth batch 32x64x64x3 (imagenet-proxy)", || {
+        std::hint::black_box(ds64.batch(Split::Train, 7, 32));
+    });
+
+    // --- θ discretization / freezing -------------------------------------
+    let theta: Vec<f32> = (0..512).map(|i| ((i * 37 % 100) as f32 - 50.0) / 25.0).collect();
+    quick("discretize channel θ (256 ch)", || {
+        std::hint::black_box(discretize(SearchKind::Channel, &theta, 256, "l"));
+    });
+    let asg = discretize(SearchKind::Channel, &theta, 256, "l");
+    quick("one_hot_theta (256 ch)", || {
+        std::hint::black_box(one_hot_theta(SearchKind::Channel, &asg));
+    });
+
+    // --- Fig. 4 reorg pass -------------------------------------------------
+    let mapping = Mapping {
+        platform: Platform::Diana,
+        layers: (0..20)
+            .map(|i| LayerAssignment {
+                layer: format!("l{i}"),
+                cu_of: (0..256).map(|c| ((c * 7 + i) % 3 == 0) as u8).collect(),
+            })
+            .collect(),
+    };
+    quick("reorganize 20x256-ch network", || {
+        std::hint::black_box(reorganize(&mapping));
+    });
+
+    // --- pareto extraction --------------------------------------------------
+    let pts: Vec<Point> = (0..1000)
+        .map(|i| Point {
+            cost: ((i * 2654435761u64 as usize) % 10007) as f64,
+            acc: ((i * 40503) % 997) as f64 / 997.0,
+        })
+        .collect();
+    quick("pareto_front over 1000 points", || {
+        std::hint::black_box(pareto_front(&pts));
+    });
+}

@@ -1,0 +1,102 @@
+//! Bench: the SoC simulators (Table III's engine).
+//!
+//! Measures the throughput of the analytical model and the detailed
+//! event-driven simulator over the micro-benchmark layer corpus, then
+//! prints the Table III correlation summary itself (fast — no training).
+
+use odimo::experiments::microbench_layers;
+use odimo::soc::{analytical, detailed, Layer, LayerAssignment, Mapping, Platform};
+use odimo::stats;
+use odimo::util::bench::quick;
+
+fn mapping_for(layers: &[Layer], platform: Platform, frac1: f64) -> Mapping {
+    Mapping {
+        platform,
+        layers: layers
+            .iter()
+            .map(|l| {
+                let n1 = (l.cout as f64 * frac1) as usize;
+                LayerAssignment {
+                    layer: l.name.clone(),
+                    cu_of: (0..l.cout).map(|c| u8::from(c >= l.cout - n1)).collect(),
+                }
+            })
+            .collect(),
+    }
+}
+
+fn main() {
+    println!("== hw_models bench ==");
+    let resnet = microbench_layers("resnet");
+    let mbv1 = microbench_layers("mobilenet");
+    let m_diana = mapping_for(&resnet, Platform::Diana, 0.5);
+    let m_dark = mapping_for(&mbv1, Platform::Darkside, 0.5);
+
+    quick("analytical::execute resnet(10L, diana)", || {
+        std::hint::black_box(analytical::execute(&resnet, &m_diana, &[]));
+    });
+    quick("detailed::execute   resnet(10L, diana)", || {
+        std::hint::black_box(detailed::execute(&resnet, &m_diana, &[]));
+    });
+    quick("analytical::execute mbv1(16L, darkside)", || {
+        std::hint::black_box(analytical::execute(&mbv1, &m_dark, &[]));
+    });
+    quick("detailed::execute   mbv1(16L, darkside)", || {
+        std::hint::black_box(detailed::execute(&mbv1, &m_dark, &[]));
+    });
+
+    // whole-network throughput: simulated networks per second at ODiMO
+    // sweep granularity (what the λ sweep pays per candidate)
+    let r = quick("detailed::execute full sweep (21 splits)", || {
+        for i in 0..=20 {
+            let m = mapping_for(&resnet, Platform::Diana, i as f64 / 20.0);
+            std::hint::black_box(detailed::execute(&resnet, &m, &[]));
+        }
+    });
+    println!(
+        "   -> {:.0} mappings/s through the detailed simulator",
+        21.0 / (r.mean_ns / 1e9)
+    );
+
+    // and the actual Table III summary, for convenience
+    println!("\nTable III (analytical vs detailed):");
+    for (platform, style, col) in [
+        (Platform::Diana, "resnet", 0u8),
+        (Platform::Diana, "resnet", 1),
+        (Platform::Darkside, "mobilenet", 0),
+        (Platform::Darkside, "mobilenet", 1),
+    ] {
+        let layers = microbench_layers(style);
+        let mut pred = Vec::new();
+        let mut meas = Vec::new();
+        for l in &layers {
+            if col == 1
+                && platform == Platform::Darkside
+                && l.ltype != odimo::soc::LayerType::Dw
+            {
+                continue;
+            }
+            let mut ll = l.clone();
+            for frac in [0.25, 0.5, 1.0] {
+                let n = ((l.cout as f64 * frac) as usize).max(1);
+                ll.cout = n;
+                let m = Mapping {
+                    platform,
+                    layers: vec![LayerAssignment::all_on(&l.name, n, col)],
+                };
+                let a = analytical::execute(std::slice::from_ref(&ll), &m, &[]);
+                let d = detailed::execute(std::slice::from_ref(&ll), &m, &[]);
+                pred.push(a.layers[0].per_cu[col as usize].cycles as f64);
+                meas.push(d.layers[0].per_cu[col as usize].cycles as f64);
+            }
+        }
+        println!(
+            "  {:?} cu{}: MAPE {:>5.1}%  Pearson {:>5.1}%  Spearman {:>5.1}%",
+            platform,
+            col,
+            stats::mape(&pred, &meas),
+            100.0 * stats::pearson(&pred, &meas),
+            100.0 * stats::spearman(&pred, &meas)
+        );
+    }
+}

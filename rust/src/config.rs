@@ -1,0 +1,214 @@
+//! Experiment configuration (JSON, hand-parsed via `util::json` — the
+//! offline crate cache has neither serde nor toml).
+//!
+//! Each experiment config fully determines a run: variant, training
+//! schedule for the three ODiMO phases, λ sweep, and evaluation sizes.
+//! Configs live in `configs/*.json`; every field has a CPU-budget-friendly
+//! default so ad-hoc runs work without a file.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{parse, Value};
+
+/// Optimization target (paper Eq. 3 vs Eq. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CostTarget {
+    #[default]
+    Latency,
+    Energy,
+}
+
+impl CostTarget {
+    /// The `cost_sel` scalar the train artifact expects.
+    pub fn sel(self) -> f32 {
+        match self {
+            CostTarget::Latency => 0.0,
+            CostTarget::Energy => 1.0,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "latency" => Ok(CostTarget::Latency),
+            "energy" => Ok(CostTarget::Energy),
+            other => bail!("cost_target must be 'latency' or 'energy', got '{other}'"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CostTarget::Latency => "latency",
+            CostTarget::Energy => "energy",
+        }
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// model variant name (must have artifacts)
+    pub variant: String,
+    pub cost_target: CostTarget,
+    /// λ values, *relative to the variant's init cost scale* — the
+    /// coordinator divides by the manifest `cost_scale` so comparable
+    /// values work across variants
+    pub lambdas: Vec<f64>,
+    pub warmup_epochs: usize,
+    pub search_epochs: usize,
+    pub final_epochs: usize,
+    /// batches per epoch (synthetic data is generated on demand)
+    pub steps_per_epoch: usize,
+    pub eval_batches: usize,
+    pub lr_w: f32,
+    pub lr_th: f32,
+    pub seed: i32,
+    /// early-stopping patience in epochs (0 = disabled); applies to the
+    /// warmup and final phases, on validation accuracy
+    pub patience: usize,
+}
+
+impl ExperimentConfig {
+    pub fn for_variant(variant: &str) -> Self {
+        Self {
+            variant: variant.to_string(),
+            cost_target: CostTarget::Latency,
+            lambdas: vec![0.05, 0.2, 1.0, 5.0],
+            warmup_epochs: 6,
+            search_epochs: 6,
+            final_epochs: 4,
+            steps_per_epoch: 30,
+            eval_batches: 8,
+            lr_w: 1e-2,
+            lr_th: 5e-2,
+            seed: 0,
+            patience: 0,
+        }
+    }
+
+    /// Parse from JSON text; missing fields fall back to defaults.
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = parse(text)?;
+        let mut cfg = Self::for_variant(&v.str_of("variant")?);
+        if let Some(t) = v.get("cost_target") {
+            cfg.cost_target = CostTarget::parse(t.as_str()?)?;
+        }
+        if let Some(l) = v.get("lambdas") {
+            cfg.lambdas = l
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_f64())
+                .collect::<Result<_>>()?;
+        }
+        let get_usize = |key: &str, slot: &mut usize| -> Result<()> {
+            if let Some(x) = v.get(key) {
+                *slot = x.as_usize()?;
+            }
+            Ok(())
+        };
+        get_usize("warmup_epochs", &mut cfg.warmup_epochs)?;
+        get_usize("search_epochs", &mut cfg.search_epochs)?;
+        get_usize("final_epochs", &mut cfg.final_epochs)?;
+        get_usize("steps_per_epoch", &mut cfg.steps_per_epoch)?;
+        get_usize("eval_batches", &mut cfg.eval_batches)?;
+        get_usize("patience", &mut cfg.patience)?;
+        if let Some(x) = v.get("lr_w") {
+            cfg.lr_w = x.as_f64()? as f32;
+        }
+        if let Some(x) = v.get("lr_th") {
+            cfg.lr_th = x.as_f64()? as f32;
+        }
+        if let Some(x) = v.get("seed") {
+            cfg.seed = x.as_f64()? as i32;
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing config {}", path.display()))
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("variant", Value::str(&self.variant)),
+            ("cost_target", Value::str(self.cost_target.name())),
+            (
+                "lambdas",
+                Value::arr(self.lambdas.iter().map(|&l| Value::num(l))),
+            ),
+            ("warmup_epochs", Value::num(self.warmup_epochs as f64)),
+            ("search_epochs", Value::num(self.search_epochs as f64)),
+            ("final_epochs", Value::num(self.final_epochs as f64)),
+            ("steps_per_epoch", Value::num(self.steps_per_epoch as f64)),
+            ("eval_batches", Value::num(self.eval_batches as f64)),
+            ("lr_w", Value::num(self.lr_w as f64)),
+            ("lr_th", Value::num(self.lr_th as f64)),
+            ("seed", Value::num(self.seed as f64)),
+            ("patience", Value::num(self.patience as f64)),
+        ])
+    }
+
+    /// Scale the schedule by `f` (e.g. 0.25 for a quarter-length run).
+    pub fn scaled(mut self, f: f64) -> Self {
+        let s = |e: usize| ((e as f64 * f).round() as usize).max(1);
+        self.warmup_epochs = s(self.warmup_epochs);
+        self.search_epochs = s(self.search_epochs);
+        self.final_epochs = s(self.final_epochs);
+        self.steps_per_epoch = s(self.steps_per_epoch);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_fill_in() {
+        let cfg = ExperimentConfig::parse(r#"{"variant": "x"}"#).unwrap();
+        assert_eq!(cfg.variant, "x");
+        assert_eq!(cfg.warmup_epochs, 6);
+        assert_eq!(cfg.cost_target, CostTarget::Latency);
+        assert_eq!(cfg.cost_target.sel(), 0.0);
+        assert!(!cfg.lambdas.is_empty());
+    }
+
+    #[test]
+    fn energy_target_and_overrides() {
+        let cfg = ExperimentConfig::parse(
+            r#"{"variant": "x", "cost_target": "energy", "lambdas": [0.1, 2],
+                "warmup_epochs": 3, "lr_w": 0.001, "seed": 7}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cost_target, CostTarget::Energy);
+        assert_eq!(cfg.cost_target.sel(), 1.0);
+        assert_eq!(cfg.lambdas, vec![0.1, 2.0]);
+        assert_eq!(cfg.warmup_epochs, 3);
+        assert_eq!(cfg.seed, 7);
+        assert!((cfg.lr_w - 1e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn roundtrip_via_json() {
+        let cfg = ExperimentConfig::for_variant("v");
+        let cfg2 = ExperimentConfig::parse(&cfg.to_json().to_string_pretty()).unwrap();
+        assert_eq!(cfg2.variant, cfg.variant);
+        assert_eq!(cfg2.lambdas, cfg.lambdas);
+        assert_eq!(cfg2.steps_per_epoch, cfg.steps_per_epoch);
+    }
+
+    #[test]
+    fn scaling_clamps_to_one() {
+        let cfg = ExperimentConfig::for_variant("x").scaled(0.01);
+        assert!(cfg.warmup_epochs >= 1);
+        assert!(cfg.steps_per_epoch >= 1);
+    }
+
+    #[test]
+    fn bad_cost_target_rejected() {
+        assert!(ExperimentConfig::parse(r#"{"variant": "x", "cost_target": "speed"}"#).is_err());
+    }
+}

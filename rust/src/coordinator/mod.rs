@@ -1,0 +1,20 @@
+//! The L3 coordinator — ODiMO's training-time search orchestrated from
+//! Rust over the AOT-compiled JAX executables.
+//!
+//! * [`trainer`] — epoch/eval driver + θ plumbing for one model variant;
+//! * [`odimo`] — the Warmup → Search → Final-Training schedule and the
+//!   λ sweep producing Pareto fronts;
+//! * [`baselines`] — the paper's manual/heuristic/min-cost comparison
+//!   mappings;
+//! * [`results`] — serializable run records consumed by the experiment
+//!   harness and the report renderers.
+
+pub mod baselines;
+pub mod odimo;
+pub mod results;
+pub mod trainer;
+
+pub use baselines::{run_baseline, Baseline};
+pub use odimo::{search_and_finalize, sweep};
+pub use results::{LayerBreakdown, RunRecord};
+pub use trainer::{EpochMetrics, Trainer};

@@ -1,0 +1,170 @@
+//! The ODiMO three-phase search (paper Sec. IV-A) and the λ sweep that
+//! traces a Pareto front.
+//!
+//! Phase schedule, with the single train artifact serving all phases:
+//!
+//! * **Warmup** — `λ = 0`, `lr_θ = 0`: only W trains, θ stays at its
+//!   uniform init, so the task-performance ranking of alternatives is
+//!   meaningful before cost pressure is applied.
+//! * **Search** — `λ > 0`, `lr_θ > 0`: W and θ optimize Eq. 1 jointly.
+//! * **Final-Training** — θ frozen to the *discretized* one-hot mapping,
+//!   `λ = 0`, `lr_θ = 0`: W recovers the accuracy lost to discretization.
+//!
+//! The warmup is λ-independent, so the sweep trains it once, snapshots the
+//! state, and restores it per λ — the paper trains each point from
+//! scratch; this is an exact-equivalent optimization (same seed, same
+//! stream of batches).
+
+use anyhow::Result;
+
+use crate::config::CostTarget;
+use crate::datasets::Split;
+use crate::runtime::{StepHparams, TrainState};
+
+use super::results::RunRecord;
+use super::trainer::Trainer;
+
+/// Per-phase hyper-parameters derived from the config.
+impl Trainer {
+    fn hp_warmup(&self) -> StepHparams {
+        StepHparams {
+            lam: 0.0,
+            cost_sel: match self.cfg.cost_target {
+                CostTarget::Latency => 0.0,
+                CostTarget::Energy => 1.0,
+            },
+            lr_w: self.cfg.lr_w,
+            lr_th: 0.0,
+        }
+    }
+
+    fn hp_search(&self, lambda_rel: f64) -> StepHparams {
+        let scale = match self.cfg.cost_target {
+            CostTarget::Latency => self.rt.manifest.cost_scale.latency_cycles,
+            CostTarget::Energy => self.rt.manifest.cost_scale.energy_uj,
+        };
+        StepHparams {
+            lam: (lambda_rel / scale) as f32,
+            lr_th: self.cfg.lr_th,
+            ..self.hp_warmup()
+        }
+    }
+
+    fn hp_final(&self) -> StepHparams {
+        self.hp_warmup()
+    }
+}
+
+/// Train a phase for `epochs`, with optional early stopping on validation
+/// accuracy (patience in epochs; 0 disables). Returns the mean step wall
+/// time (ms) across the phase.
+pub fn run_phase(
+    tr: &Trainer,
+    state: &mut TrainState,
+    hp: StepHparams,
+    epochs: usize,
+    patience: usize,
+    tag: &str,
+) -> Result<f64> {
+    let mut best_acc = f64::NEG_INFINITY;
+    let mut bad = 0usize;
+    let mut step_ms = Vec::new();
+    for e in 0..epochs {
+        let m = tr.run_epoch(state, hp, e)?;
+        step_ms.push(m.step_ms);
+        if patience > 0 {
+            let (acc, _) = tr.evaluate(state, Split::Val)?;
+            if acc > best_acc {
+                best_acc = acc;
+                bad = 0;
+            } else {
+                bad += 1;
+                if bad >= patience {
+                    eprintln!("    [{tag}] early stop at epoch {e} (val {acc:.3})");
+                    break;
+                }
+            }
+        }
+        if e == 0 || (e + 1) % 4 == 0 {
+            eprintln!(
+                "    [{tag}] epoch {:>2}: loss {:.3} acc {:.3} cost {:.3e}",
+                e + 1,
+                m.loss,
+                m.acc,
+                m.cost_lat
+            );
+        }
+    }
+    Ok(crate::stats::mean(&step_ms))
+}
+
+/// One full ODiMO run at a fixed λ, starting from a warmed-up state.
+pub fn search_and_finalize(
+    tr: &Trainer,
+    state: &mut TrainState,
+    lambda_rel: f64,
+) -> Result<RunRecord> {
+    let step_ms = run_phase(
+        tr,
+        state,
+        tr.hp_search(lambda_rel),
+        tr.cfg.search_epochs,
+        0,
+        &format!("search λ={lambda_rel}"),
+    )?;
+    let mapping = tr.discretize_all(state)?;
+    tr.freeze_mapping(state, &mapping)?;
+    run_phase(
+        tr,
+        state,
+        tr.hp_final(),
+        tr.cfg.final_epochs,
+        tr.cfg.patience,
+        "final",
+    )?;
+    let (val_acc, _) = tr.evaluate(state, Split::Val)?;
+    let (test_acc, _) = tr.evaluate(state, Split::Test)?;
+    let (ana, det) = tr.simulate(&mapping);
+    Ok(RunRecord::from_reports(
+        "odimo",
+        &tr.cfg.variant,
+        Some(lambda_rel),
+        match tr.cfg.cost_target {
+            CostTarget::Latency => "latency",
+            CostTarget::Energy => "energy",
+        },
+        val_acc,
+        test_acc,
+        &ana,
+        &det,
+        mapping,
+        step_ms,
+        tr.state_bytes(),
+    ))
+}
+
+/// Full λ sweep with shared warmup: the Pareto-front generator.
+pub fn sweep(tr: &Trainer) -> Result<Vec<RunRecord>> {
+    let mut state = tr.init_state()?;
+    eprintln!(
+        "  [warmup] {} epochs x {} steps",
+        tr.cfg.warmup_epochs, tr.cfg.steps_per_epoch
+    );
+    run_phase(
+        tr,
+        &mut state,
+        tr.hp_warmup(),
+        tr.cfg.warmup_epochs,
+        tr.cfg.patience,
+        "warmup",
+    )?;
+    let snap = state.snapshot()?;
+    let specs: Vec<_> = tr.rt.train.spec.inputs[..tr.rt.state_len()].to_vec();
+    let mut records = Vec::new();
+    for &lam in &tr.cfg.lambdas {
+        eprintln!("  [sweep] λ = {lam}");
+        state.restore(&snap, &specs)?;
+        records.push(search_and_finalize(tr, &mut state, lam)?);
+    }
+    Ok(records)
+}

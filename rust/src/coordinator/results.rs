@@ -1,0 +1,161 @@
+//! Run records: the serializable outcome of one trained + deployed
+//! mapping (an ODiMO point, a baseline, or a comparison method).
+
+
+
+use crate::soc::{ExecReport, Mapping};
+use crate::util::json::Value;
+
+/// Per-layer deployment breakdown row (Figs. 8/9).
+#[derive(Debug, Clone)]
+pub struct LayerBreakdown {
+    pub layer: String,
+    pub n_cu0: usize,
+    pub n_cu1: usize,
+    pub cycles_cu0: u64,
+    pub cycles_cu1: u64,
+}
+
+/// One point in every figure: a trained network with a deployed mapping.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    /// display label ("odimo", "all-8bit", "min-cost", "pruning", ...)
+    pub label: String,
+    pub variant: String,
+    /// λ (relative units) for search-based points, None for baselines
+    pub lambda: Option<f64>,
+    pub cost_target: String,
+    pub val_acc: f64,
+    pub test_acc: f64,
+    /// analytical model (what ODiMO believed)
+    pub ana_cycles: u64,
+    pub ana_energy_uj: f64,
+    /// detailed simulator (the "measured" deployment numbers)
+    pub det_cycles: u64,
+    pub det_energy_uj: f64,
+    pub det_latency_ms: f64,
+    pub util_cu0: f64,
+    pub util_cu1: f64,
+    /// fraction of channels on CU column 1 (analog / DWE)
+    pub cu1_channel_frac: f64,
+    pub per_layer: Vec<LayerBreakdown>,
+    pub mapping: Mapping,
+    /// mean train-step wall time over the run, ms (Table II input)
+    pub mean_step_ms: f64,
+    /// total parameter+optimizer state bytes (Table II input)
+    pub state_bytes: usize,
+}
+
+impl RunRecord {
+    pub fn from_reports(
+        label: &str,
+        variant: &str,
+        lambda: Option<f64>,
+        cost_target: &str,
+        val_acc: f64,
+        test_acc: f64,
+        ana: &ExecReport,
+        det: &ExecReport,
+        mapping: Mapping,
+        mean_step_ms: f64,
+        state_bytes: usize,
+    ) -> Self {
+        let per_layer = det
+            .layers
+            .iter()
+            .map(|l| LayerBreakdown {
+                layer: l.layer.clone(),
+                n_cu0: l.per_cu[0].channels,
+                n_cu1: l.per_cu[1].channels,
+                cycles_cu0: l.per_cu[0].cycles,
+                cycles_cu1: l.per_cu[1].cycles,
+            })
+            .collect();
+        Self {
+            label: label.to_string(),
+            variant: variant.to_string(),
+            lambda,
+            cost_target: cost_target.to_string(),
+            val_acc,
+            test_acc,
+            ana_cycles: ana.total_cycles,
+            ana_energy_uj: ana.energy_uj,
+            det_cycles: det.total_cycles,
+            det_energy_uj: det.energy_uj,
+            det_latency_ms: det.latency_ms,
+            util_cu0: det.utilization[0],
+            util_cu1: det.utilization[1],
+            cu1_channel_frac: det.cu1_channel_fraction(),
+            per_layer,
+            mapping,
+            mean_step_ms,
+            state_bytes,
+        }
+    }
+
+    /// The cost value on the axis an experiment plots (analytical, like
+    /// the paper's estimated-cycles figures).
+    pub fn cost(&self, target: &str) -> f64 {
+        match target {
+            "energy" => self.ana_energy_uj,
+            _ => self.ana_cycles as f64,
+        }
+    }
+
+    /// JSON view (in-tree JSON module; no serde in the offline cache).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("label", Value::str(&self.label)),
+            ("variant", Value::str(&self.variant)),
+            (
+                "lambda",
+                self.lambda.map(Value::num).unwrap_or(Value::Null),
+            ),
+            ("cost_target", Value::str(&self.cost_target)),
+            ("val_acc", Value::num(self.val_acc)),
+            ("test_acc", Value::num(self.test_acc)),
+            ("ana_cycles", Value::num(self.ana_cycles as f64)),
+            ("ana_energy_uj", Value::num(self.ana_energy_uj)),
+            ("det_cycles", Value::num(self.det_cycles as f64)),
+            ("det_energy_uj", Value::num(self.det_energy_uj)),
+            ("det_latency_ms", Value::num(self.det_latency_ms)),
+            ("util_cu0", Value::num(self.util_cu0)),
+            ("util_cu1", Value::num(self.util_cu1)),
+            ("cu1_channel_frac", Value::num(self.cu1_channel_frac)),
+            ("mean_step_ms", Value::num(self.mean_step_ms)),
+            ("state_bytes", Value::num(self.state_bytes as f64)),
+            (
+                "per_layer",
+                Value::arr(self.per_layer.iter().map(|l| {
+                    Value::obj(vec![
+                        ("layer", Value::str(&l.layer)),
+                        ("n_cu0", Value::num(l.n_cu0 as f64)),
+                        ("n_cu1", Value::num(l.n_cu1 as f64)),
+                        ("cycles_cu0", Value::num(l.cycles_cu0 as f64)),
+                        ("cycles_cu1", Value::num(l.cycles_cu1 as f64)),
+                    ])
+                })),
+            ),
+            (
+                "mapping",
+                Value::arr(self.mapping.layers.iter().map(|a| {
+                    Value::obj(vec![
+                        ("layer", Value::str(&a.layer)),
+                        (
+                            "cu_of",
+                            Value::arr(a.cu_of.iter().map(|&c| Value::num(c as f64))),
+                        ),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn save_json(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}

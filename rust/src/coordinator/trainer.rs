@@ -1,0 +1,249 @@
+//! Trainer: drives one model variant's compiled executables through
+//! epochs, evaluation, and θ manipulation.
+//!
+//! This is the layer the ODiMO phases are built on: it owns the PJRT
+//! runtime for a variant, generates synthetic batches, runs train/eval
+//! steps, and exposes θ read/write so the phase logic can freeze,
+//! discretize and restore assignments.
+
+use anyhow::{anyhow, Result};
+use xla::Literal;
+
+use crate::config::ExperimentConfig;
+use crate::datasets::{Split, SynthDataset};
+use crate::mapping::{discretize, one_hot_theta, SearchKind};
+use crate::runtime::{lit_f32, lit_i32, ModelRuntime, StepHparams, TrainState};
+use crate::soc::{self, Layer, LayerAssignment, Mapping, Platform};
+
+/// Aggregated metrics of one epoch.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EpochMetrics {
+    pub loss: f64,
+    pub ce: f64,
+    pub acc: f64,
+    pub cost_lat: f64,
+    pub cost_energy: f64,
+    /// mean wall-clock per train step, milliseconds
+    pub step_ms: f64,
+}
+
+pub struct Trainer {
+    pub rt: ModelRuntime,
+    pub ds: SynthDataset,
+    pub cfg: ExperimentConfig,
+    pub platform: Platform,
+    pub kind: SearchKind,
+    pub layers: Vec<Layer>,
+    pub seq_layers: Vec<String>,
+    eval_val: Vec<(Literal, Literal)>,
+    eval_test: Vec<(Literal, Literal)>,
+}
+
+impl Trainer {
+    pub fn new(
+        client: &xla::PjRtClient,
+        artifacts_dir: &std::path::Path,
+        cfg: ExperimentConfig,
+    ) -> Result<Self> {
+        let rt = ModelRuntime::load(client, artifacts_dir, &cfg.variant)?;
+        let m = &rt.manifest;
+        let ds = SynthDataset::from_name(
+            &m.dataset.name,
+            m.dataset.hw,
+            m.dataset.classes,
+            cfg.seed as u64 + 1,
+        );
+        let platform = Platform::parse(&m.platform);
+        let kind = SearchKind::parse(&m.search_kind);
+        let layers = soc::layers_from_manifest(m);
+        let seq_layers = soc::sequential_layers(m);
+        let batch = m.dataset.batch;
+        let mk_batches = |split: Split, n: usize| -> Result<Vec<(Literal, Literal)>> {
+            (0..n)
+                .map(|i| {
+                    let (x, y) = ds.batch(split, i as u64, batch);
+                    Ok((
+                        lit_f32(&[batch, ds.hw, ds.hw, 3], &x)?,
+                        lit_i32(&[batch], &y)?,
+                    ))
+                })
+                .collect()
+        };
+        let eval_val = mk_batches(Split::Val, cfg.eval_batches)?;
+        let eval_test = mk_batches(Split::Test, cfg.eval_batches)?;
+        Ok(Self {
+            rt,
+            ds,
+            cfg,
+            platform,
+            kind,
+            layers,
+            seq_layers,
+            eval_val,
+            eval_test,
+        })
+    }
+
+    pub fn init_state(&self) -> Result<TrainState> {
+        self.rt.init_state(self.cfg.seed)
+    }
+
+    /// Run one epoch of `steps_per_epoch` train steps.
+    pub fn run_epoch(
+        &self,
+        state: &mut TrainState,
+        hp: StepHparams,
+        epoch: usize,
+    ) -> Result<EpochMetrics> {
+        let batch = self.rt.batch();
+        let mut agg = EpochMetrics::default();
+        let t0 = std::time::Instant::now();
+        for i in 0..self.cfg.steps_per_epoch {
+            let idx = (epoch * self.cfg.steps_per_epoch + i) as u64;
+            let (x, y) = self.ds.batch(Split::Train, idx, batch);
+            let xl = lit_f32(&[batch, self.ds.hw, self.ds.hw, 3], &x)?;
+            let yl = lit_i32(&[batch], &y)?;
+            let m = self.rt.train_step(state, &xl, &yl, hp)?;
+            agg.loss += m[0] as f64;
+            agg.ce += m[1] as f64;
+            agg.acc += m[2] as f64;
+            agg.cost_lat += m[3] as f64;
+            agg.cost_energy += m[4] as f64;
+        }
+        let n = self.cfg.steps_per_epoch as f64;
+        agg.loss /= n;
+        agg.ce /= n;
+        agg.acc /= n;
+        agg.cost_lat /= n;
+        agg.cost_energy /= n;
+        agg.step_ms = t0.elapsed().as_secs_f64() * 1e3 / n;
+        Ok(agg)
+    }
+
+    /// Accuracy + mean loss over the held-out batches of `split`.
+    pub fn evaluate(&self, state: &TrainState, split: Split) -> Result<(f64, f64)> {
+        let batches = match split {
+            Split::Val => &self.eval_val,
+            Split::Test => &self.eval_test,
+            Split::Train => return Err(anyhow!("evaluate on val/test only")),
+        };
+        let mut correct = 0.0f64;
+        let mut loss = 0.0f64;
+        let mut n = 0usize;
+        for (x, y) in batches {
+            let m = self.rt.eval_batch(state, x, y)?;
+            correct += m[0] as f64;
+            loss += m[1] as f64;
+            n += self.rt.batch();
+        }
+        Ok((correct / n as f64, loss / n as f64))
+    }
+
+    // -----------------------------------------------------------------
+    // θ access
+    // -----------------------------------------------------------------
+
+    fn theta_leaf(&self, layer: &str) -> String {
+        format!("params/{layer}/theta")
+    }
+
+    pub fn theta_of(&self, state: &TrainState, layer: &str) -> Result<Vec<f32>> {
+        state.leaf_f32(&self.theta_leaf(layer))
+    }
+
+    pub fn set_theta(&self, state: &mut TrainState, layer: &str, data: &[f32]) -> Result<()> {
+        let shape = match self.kind {
+            SearchKind::Channel | SearchKind::Prune => vec![data.len() / 2, 2],
+            SearchKind::Split | SearchKind::Layerwise => vec![data.len()],
+        };
+        state.set_leaf_f32(&self.theta_leaf(layer), &shape, data)
+    }
+
+    /// Discretize every searchable layer's θ; non-searchable layers are
+    /// assigned to CU 0 (cluster / digital — where they always execute).
+    pub fn discretize_all(&self, state: &TrainState) -> Result<Mapping> {
+        let mut layers = Vec::new();
+        for spec in &self.rt.manifest.layers {
+            if spec.searchable {
+                let theta = self.theta_of(state, &spec.name)?;
+                layers.push(discretize(self.kind, &theta, spec.cout, &spec.name));
+            } else {
+                layers.push(LayerAssignment::all_on(&spec.name, spec.cout, 0));
+            }
+        }
+        Ok(Mapping {
+            platform: self.platform,
+            layers,
+        })
+    }
+
+    /// Freeze the mapping: write one-hot θ for every searchable layer.
+    pub fn freeze_mapping(&self, state: &mut TrainState, mapping: &Mapping) -> Result<()> {
+        for (spec, asg) in self.rt.manifest.layers.iter().zip(&mapping.layers) {
+            if spec.searchable {
+                let oh = one_hot_theta(self.kind, asg);
+                self.set_theta(state, &spec.name, &oh)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Simulator views of a mapping (analytical + detailed).
+    pub fn simulate(&self, mapping: &Mapping) -> (soc::ExecReport, soc::ExecReport) {
+        if self.kind == SearchKind::Prune {
+            // pruned channels vanish from the workload instead of running
+            // on the second CU; sequentialize through the pruned geometry
+            let (layers, mapping) = prune_geometry(&self.layers, mapping);
+            let a = soc::analytical::execute(&layers, &mapping, &self.seq_layers);
+            let d = soc::detailed::execute(&layers, &mapping, &self.seq_layers);
+            (a, d)
+        } else {
+            let a = soc::analytical::execute(&self.layers, mapping, &self.seq_layers);
+            let d = soc::detailed::execute(&self.layers, mapping, &self.seq_layers);
+            (a, d)
+        }
+    }
+
+    /// Total state size in bytes (for the Table II memory column).
+    pub fn state_bytes(&self) -> usize {
+        self.rt
+            .train
+            .spec
+            .inputs
+            .iter()
+            .take(self.rt.state_len())
+            .map(|s| s.elem_count() * 4)
+            .sum()
+    }
+}
+
+/// Rebuild layer geometry for a pruning run: kept channels stay on the
+/// digital CU, pruned channels disappear, and each subsequent layer's
+/// input-channel count shrinks by the producing layer's keep fraction
+/// (sequential approximation — see DESIGN.md).
+pub fn prune_geometry(layers: &[Layer], mapping: &Mapping) -> (Vec<Layer>, Mapping) {
+    let mut new_layers = Vec::with_capacity(layers.len());
+    let mut new_asg = Vec::with_capacity(layers.len());
+    let mut prev_keep_frac = 1.0f64;
+    for (l, asg) in layers.iter().zip(&mapping.layers) {
+        let kept = asg.count(0);
+        let keep_frac = if asg.cu_of.is_empty() {
+            1.0
+        } else {
+            kept as f64 / asg.cu_of.len() as f64
+        };
+        let mut nl = l.clone();
+        nl.cout = kept.max(1);
+        nl.cin = ((l.cin as f64 * prev_keep_frac).round() as usize).max(1);
+        new_layers.push(nl);
+        new_asg.push(LayerAssignment::all_on(&l.name, kept.max(1), 0));
+        prev_keep_frac = keep_frac;
+    }
+    (
+        new_layers,
+        Mapping {
+            platform: mapping.platform,
+            layers: new_asg,
+        },
+    )
+}

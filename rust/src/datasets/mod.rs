@@ -1,0 +1,13 @@
+//! Dataset substrate.
+//!
+//! The paper evaluates on CIFAR-10/CIFAR-100/ImageNet; those corpora are
+//! not available in this environment, so [`synth`] provides deterministic
+//! synthetic classification datasets with the properties the experiments
+//! actually rely on (see DESIGN.md §2): a tunable accuracy gap under
+//! weight ternarization / depthwise substitution, and difficulty that
+//! grows with class count and resolution.
+
+pub mod rng;
+pub mod synth;
+
+pub use synth::{Split, SynthDataset};

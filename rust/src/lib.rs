@@ -1,0 +1,50 @@
+//! # ODiMO — One-shot Differentiable Mapping Optimizer (reproduction)
+//!
+//! Full-system reproduction of *"Optimizing DNN Inference on
+//! Multi-Accelerator SoCs at Training-time"* (Risso, Burrello,
+//! Jahier Pagliari — IEEE TCAD 2025) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **Layer 1/2 (build-time Python)** — Pallas kernels + JAX supernets,
+//!   AOT-lowered to HLO text by `python/compile/aot.py`; never on the
+//!   runtime path.
+//! * **Layer 3 (this crate)** — the search coordinator: it drives the
+//!   compiled train/eval executables through the ODiMO three-phase
+//!   schedule (Warmup → Search → Final-Training), sweeps the cost
+//!   strength λ to trace Pareto fronts, discretizes θ into channel→CU
+//!   assignments, and evaluates the resulting mappings on the DIANA and
+//!   Darkside SoC simulators in [`soc`].
+//!
+//! Entry points: the `repro` binary (`rust/src/main.rs`) exposes every
+//! paper experiment (`repro exp fig5 …`); `examples/` hold smaller
+//! guided drivers; this library API is what both consume.
+
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod experiments;
+pub mod mapping;
+pub mod pareto;
+pub mod report;
+pub mod runtime;
+pub mod soc;
+pub mod stats;
+pub mod util;
+
+/// Repository root discovery: honors `ODIMO_ROOT`, else walks up from the
+/// current directory looking for `hw/constants.json`.
+pub fn repo_root() -> std::path::PathBuf {
+    if let Ok(r) = std::env::var("ODIMO_ROOT") {
+        return std::path::PathBuf::from(r);
+    }
+    let mut dir = std::env::current_dir().expect("cwd");
+    loop {
+        if dir.join("hw/constants.json").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            // fall back to the canonical checkout location
+            return std::path::PathBuf::from("/root/repo");
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! `repro` — the ODiMO reproduction CLI.
+//!
+//! Every paper experiment is one subcommand (`repro exp fig5 ...`); ad-hoc
+//! runs go through `repro train` / `repro sweep`. See DESIGN.md §3 for the
+//! experiment index.
+//!
+//! ```text
+//! repro list
+//! repro train --variant diana_resnet20_c10 [--lambda 0.2] [--cost-target energy] [--fast 0.5]
+//! repro sweep --variant darkside_mbv1_c10 [--no-baselines]
+//! repro exp <fig5|fig6|fig7|fig8|fig9|fig10|table2|table3|table4|all>
+//!           [--task c10|c100|imagenet] [--soc diana|darkside] [--fast f]
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use odimo::config::{CostTarget, ExperimentConfig};
+use odimo::coordinator::{run_baseline, sweep, Baseline, Trainer};
+use odimo::util::cli;
+
+const USAGE: &str = "usage: repro <list|train|sweep|exp> [options]
+  global: --artifacts DIR  --results DIR
+  train:  --variant V [--lambda L] [--cost-target latency|energy] [--config F] [--fast F]
+  sweep:  --variant V [--cost-target T] [--config F] [--fast F] [--no-baselines]
+  exp:    <fig5|fig6|fig7|fig8|fig9|fig10|table2|table3|table4|all>
+          [--task c10|c100|imagenet] [--soc diana|darkside] [--fast F]";
+
+fn main() -> Result<()> {
+    let args = cli::parse(std::env::args().skip(1), &["no-baselines", "help"])?;
+    if args.has_flag("help") || args.positional.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let root = odimo::repo_root();
+    let artifacts = args
+        .opt("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| root.join("artifacts"));
+    let results = args
+        .opt("results")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| root.join("results"));
+    let fast = args.opt_f64("fast", 1.0)?;
+
+    match args.positional[0].as_str() {
+        "list" => {
+            let mut found = false;
+            if let Ok(rd) = std::fs::read_dir(&artifacts) {
+                let mut names: Vec<String> = rd
+                    .flatten()
+                    .filter_map(|e| {
+                        e.file_name()
+                            .to_string_lossy()
+                            .strip_suffix(".manifest.json")
+                            .map(|s| s.to_string())
+                    })
+                    .collect();
+                names.sort();
+                for v in names {
+                    println!("{v}");
+                    found = true;
+                }
+            }
+            if !found {
+                println!("(no artifacts — run `make artifacts`)");
+            }
+        }
+        "train" => {
+            let variant = args.require("variant")?;
+            let mut cfg = load_cfg(&args, &variant)?;
+            cfg.cost_target = CostTarget::parse(&args.opt_or("cost-target", "latency"))?;
+            cfg.lambdas = vec![args.opt_f64("lambda", 0.2)?];
+            let cfg = cfg.scaled(fast);
+            let client = odimo::runtime::cpu_client()?;
+            let tr = Trainer::new(&client, &artifacts, cfg)?;
+            let recs = sweep(&tr)?;
+            for r in &recs {
+                println!(
+                    "{} λ={:?}: test_acc={:.4} ana_cycles={} det_ms={:.3} det_uJ={:.2} cu1%={:.1}",
+                    r.label,
+                    r.lambda,
+                    r.test_acc,
+                    r.ana_cycles,
+                    r.det_latency_ms,
+                    r.det_energy_uj,
+                    100.0 * r.cu1_channel_frac
+                );
+                r.save_json(&results.join(format!(
+                    "train/{}_{}.json",
+                    r.variant,
+                    r.lambda.unwrap_or(0.0)
+                )))?;
+            }
+        }
+        "sweep" => {
+            let variant = args.require("variant")?;
+            let mut cfg = load_cfg(&args, &variant)?;
+            cfg.cost_target = CostTarget::parse(&args.opt_or("cost-target", "latency"))?;
+            let cfg = cfg.scaled(fast);
+            let client = odimo::runtime::cpu_client()?;
+            let tr = Trainer::new(&client, &artifacts, cfg)?;
+            let mut recs = sweep(&tr)?;
+            if !args.has_flag("no-baselines") {
+                for b in Baseline::for_platform(&tr.rt.manifest.platform) {
+                    recs.push(run_baseline(&tr, b)?);
+                }
+            }
+            odimo::experiments::print_sweep(&recs);
+            odimo::experiments::save_records(&results.join("sweep"), &variant, &recs)?;
+        }
+        "exp" => {
+            let id = args
+                .positional
+                .get(1)
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            odimo::experiments::run(
+                id,
+                &artifacts,
+                &results,
+                args.opt("task"),
+                args.opt("soc"),
+                fast,
+            )?;
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+    Ok(())
+}
+
+fn load_cfg(args: &cli::Args, variant: &str) -> Result<ExperimentConfig> {
+    match args.opt("config") {
+        Some(p) => ExperimentConfig::load(std::path::Path::new(p)),
+        None => {
+            // prefer a checked-in config if one exists for the variant
+            let p = odimo::repo_root().join(format!("configs/{variant}.json"));
+            if p.exists() {
+                ExperimentConfig::load(&p)
+            } else {
+                Ok(ExperimentConfig::for_variant(variant))
+            }
+        }
+    }
+}

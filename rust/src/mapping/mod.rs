@@ -1,0 +1,236 @@
+//! θ → deployment mapping: discretization, the Fig. 4 layer
+//! re-organization pass, and one-hot θ construction for phase freezing and
+//! baselines.
+//!
+//! After the Search phase the coordinator reads every layer's θ leaf and
+//! discretizes it (Sec. IV-A: "the CU whose θ is associated with the
+//! largest value is selected"). For DIANA-style channel assignment the raw
+//! result interleaves CUs arbitrarily, so [`reorganize`] applies the
+//! paper's Fig. 4 pass: group each layer's channels by CU (stable
+//! permutation), split into per-CU sub-layers, and record the input-channel
+//! permutation the *next* layer must absorb. Darkside-style split search
+//! spaces are contiguous by construction (Eq. 6) and need no pass — this
+//! is asserted, not assumed.
+
+pub mod reorg;
+
+pub use reorg::{reorganize, LayerReorg, NetworkReorg};
+
+use crate::soc::LayerAssignment;
+
+/// Logit magnitude that makes softmax effectively one-hot (exp(±24) ratio).
+pub const ONE_HOT_LOGIT: f32 = 12.0;
+
+/// Search-space kinds (mirrors the manifest `search_kind`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchKind {
+    /// per-channel 2-way choice, θ shape `[C, 2]` (DIANA)
+    Channel,
+    /// contiguous split position, θ shape `[C+1]` (Darkside, Eq. 6)
+    Split,
+    /// one 2-way choice per layer, θ shape `[2]` (path-based DNAS baseline)
+    Layerwise,
+    /// keep-vs-prune per channel, θ shape `[C, 2]` (pruning baseline)
+    Prune,
+}
+
+impl SearchKind {
+    pub fn parse(s: &str) -> SearchKind {
+        match s {
+            "channel" => SearchKind::Channel,
+            "split" => SearchKind::Split,
+            "layerwise" => SearchKind::Layerwise,
+            "prune" => SearchKind::Prune,
+            // plain baseline nets have no θ; Channel semantics are inert
+            "fixed" => SearchKind::Channel,
+            other => panic!("unknown search kind '{other}'"),
+        }
+    }
+
+    pub fn theta_len(&self, cout: usize) -> usize {
+        match self {
+            SearchKind::Channel | SearchKind::Prune => 2 * cout,
+            SearchKind::Split => cout + 1,
+            SearchKind::Layerwise => 2,
+        }
+    }
+}
+
+/// Discretize one layer's θ into a channel→CU assignment.
+///
+/// * `Channel`/`Prune`: per-row argmax of the `[C, 2]` logits;
+/// * `Split`: argmax over the `C+1` split positions — channels below the
+///   split go to CU 0 (cluster), the rest to CU 1 (DWE);
+/// * `Layerwise`: whole layer to the argmax column.
+pub fn discretize(kind: SearchKind, theta: &[f32], cout: usize, layer: &str) -> LayerAssignment {
+    assert_eq!(
+        theta.len(),
+        kind.theta_len(cout),
+        "{layer}: θ length mismatch"
+    );
+    let cu_of = match kind {
+        SearchKind::Channel | SearchKind::Prune => (0..cout)
+            .map(|c| u8::from(theta[2 * c + 1] > theta[2 * c]))
+            .collect(),
+        SearchKind::Split => {
+            let split = argmax(theta);
+            (0..cout).map(|c| u8::from(c >= split)).collect()
+        }
+        SearchKind::Layerwise => {
+            let cu = u8::from(theta[1] > theta[0]);
+            vec![cu; cout]
+        }
+    };
+    LayerAssignment {
+        layer: layer.to_string(),
+        cu_of,
+    }
+}
+
+/// Build the one-hot θ logits that freeze an assignment (used for the
+/// Final-Training phase and for all deterministic baselines).
+pub fn one_hot_theta(kind: SearchKind, asg: &LayerAssignment) -> Vec<f32> {
+    let cout = asg.cu_of.len();
+    match kind {
+        SearchKind::Channel | SearchKind::Prune => {
+            let mut t = vec![-ONE_HOT_LOGIT; 2 * cout];
+            for (c, &cu) in asg.cu_of.iter().enumerate() {
+                t[2 * c + cu as usize] = ONE_HOT_LOGIT;
+            }
+            t
+        }
+        SearchKind::Split => {
+            assert!(
+                asg.is_contiguous(),
+                "{}: split θ requires a contiguous assignment",
+                asg.layer
+            );
+            let split = asg.cu_of.iter().filter(|&&c| c == 0).count();
+            let mut t = vec![-ONE_HOT_LOGIT; cout + 1];
+            t[split] = ONE_HOT_LOGIT;
+            t
+        }
+        SearchKind::Layerwise => {
+            let cu = asg.cu_of.first().copied().unwrap_or(0);
+            assert!(
+                asg.cu_of.iter().all(|&c| c == cu),
+                "{}: layerwise θ requires a uniform assignment",
+                asg.layer
+            );
+            let mut t = vec![-ONE_HOT_LOGIT; 2];
+            t[cu as usize] = ONE_HOT_LOGIT;
+            t
+        }
+    }
+}
+
+/// Softmax over θ rows → expected channel counts `(n_cu0, n_cu1)` (the
+/// quantities the differentiable cost models consume).
+pub fn expected_counts(kind: SearchKind, theta: &[f32], cout: usize) -> (f64, f64) {
+    match kind {
+        SearchKind::Channel | SearchKind::Prune => {
+            let mut n0 = 0.0;
+            for c in 0..cout {
+                let (a, b) = (theta[2 * c] as f64, theta[2 * c + 1] as f64);
+                let m = a.max(b);
+                let ea = (a - m).exp();
+                let eb = (b - m).exp();
+                n0 += ea / (ea + eb);
+            }
+            (n0, cout as f64 - n0)
+        }
+        SearchKind::Split => {
+            // g_c = P(split > c); n0 = Σ g_c
+            let m = theta.iter().cloned().fold(f32::MIN, f32::max) as f64;
+            let exps: Vec<f64> = theta.iter().map(|&t| ((t as f64) - m).exp()).collect();
+            let z: f64 = exps.iter().sum();
+            let mut cum = 0.0;
+            let mut n0 = 0.0;
+            for c in 0..cout {
+                cum += exps[c] / z;
+                n0 += 1.0 - cum;
+            }
+            (n0, cout as f64 - n0)
+        }
+        SearchKind::Layerwise => {
+            let (a, b) = (theta[0] as f64, theta[1] as f64);
+            let m = a.max(b);
+            let p0 = (a - m).exp() / ((a - m).exp() + (b - m).exp());
+            (p0 * cout as f64, (1.0 - p0) * cout as f64)
+        }
+    }
+}
+
+fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discretize_channel() {
+        let theta = vec![1.0, 0.0, -1.0, 2.0, 0.5, 0.5];
+        let a = discretize(SearchKind::Channel, &theta, 3, "l");
+        assert_eq!(a.cu_of, vec![0, 1, 0]); // ties go to CU 0
+    }
+
+    #[test]
+    fn discretize_split_contiguous() {
+        let mut theta = vec![0.0; 9]; // C=8
+        theta[3] = 5.0;
+        let a = discretize(SearchKind::Split, &theta, 8, "l");
+        assert_eq!(a.cu_of, vec![0, 0, 0, 1, 1, 1, 1, 1]);
+        assert!(a.is_contiguous());
+    }
+
+    #[test]
+    fn one_hot_roundtrip_channel() {
+        let theta = vec![0.3, 0.9, 2.0, -1.0, 0.0, 0.1, -3.0, 4.0];
+        let a = discretize(SearchKind::Channel, &theta, 4, "l");
+        let oh = one_hot_theta(SearchKind::Channel, &a);
+        let a2 = discretize(SearchKind::Channel, &oh, 4, "l");
+        assert_eq!(a, a2);
+        // and the expected counts at one-hot θ are (near-)integral
+        let (n0, n1) = expected_counts(SearchKind::Channel, &oh, 4);
+        assert!((n0 - a.count(0) as f64).abs() < 1e-6);
+        assert!((n1 - a.count(1) as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn one_hot_roundtrip_split() {
+        for split in 0..=6 {
+            let a = LayerAssignment {
+                layer: "l".into(),
+                cu_of: (0..6).map(|c| u8::from(c >= split)).collect(),
+            };
+            let oh = one_hot_theta(SearchKind::Split, &a);
+            let a2 = discretize(SearchKind::Split, &oh, 6, "l");
+            assert_eq!(a, a2, "split={split}");
+        }
+    }
+
+    #[test]
+    fn expected_counts_sum_to_cout() {
+        let theta = vec![0.2, -0.4, 1.0, 1.0, -2.0, 0.7];
+        let (n0, n1) = expected_counts(SearchKind::Channel, &theta, 3);
+        assert!((n0 + n1 - 3.0).abs() < 1e-9);
+        let theta_s = vec![0.1, -0.2, 0.5, 0.9];
+        let (m0, m1) = expected_counts(SearchKind::Split, &theta_s, 3);
+        assert!((m0 + m1 - 3.0).abs() < 1e-9);
+        assert!(m0 >= 0.0 && m1 >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "θ length mismatch")]
+    fn wrong_theta_len_panics() {
+        discretize(SearchKind::Channel, &[0.0; 3], 2, "l");
+    }
+}

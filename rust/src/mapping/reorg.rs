@@ -1,0 +1,219 @@
+//! The Fig. 4 layer re-organization pass.
+//!
+//! ODiMO's raw output assigns channels to CUs in arbitrary interleaved
+//! order. Deployed as-is, the CU outputs would interleave in the shared
+//! memory and force data marshaling. The paper's pass instead:
+//!
+//! 1. permutes each layer's output channels (and weight filters) so that
+//!    all channels of the same CU are contiguous (a *stable* grouping —
+//!    relative order within a CU is preserved);
+//! 2. permutes the **input**-channel dimension of the *next* layer's
+//!    weights by the same permutation, preserving network function;
+//! 3. splits the layer into one independent sub-layer per CU.
+//!
+//! Here the pass operates on the mapping metadata (the simulator consumes
+//! channel *counts*, not values), but it produces the exact permutations a
+//! code generator would apply to the tensors, and the tests verify the
+//! functional-preservation invariants (permutation validity, composition
+//! consistency, contiguity after grouping).
+
+
+
+use crate::soc::{LayerAssignment, Mapping};
+
+/// Contiguous channel range owned by one CU after grouping.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SubLayer {
+    pub cu: u8,
+    /// range [start, end) in the *reorganized* channel order
+    pub start: usize,
+    pub end: usize,
+}
+
+/// Re-organization of one layer.
+#[derive(Debug, Clone)]
+pub struct LayerReorg {
+    pub layer: String,
+    /// `perm[new_pos] = old_channel`: gather permutation applied to the
+    /// layer's output channels / weight filters
+    pub perm: Vec<usize>,
+    /// per-CU contiguous sub-layers in the new order
+    pub sub_layers: Vec<SubLayer>,
+    /// permutation the next layer must apply to its input-channel axis
+    /// (identical to `perm` — recorded separately because the next layer
+    /// may be non-searchable and still needs rewiring)
+    pub next_input_perm: Vec<usize>,
+}
+
+/// Whole-network re-organization.
+#[derive(Debug, Clone)]
+pub struct NetworkReorg {
+    pub layers: Vec<LayerReorg>,
+}
+
+/// Stable grouping permutation: CU 0 channels first (original order), then
+/// CU 1. Returns `perm` with `perm[new] = old`.
+fn grouping_perm(asg: &LayerAssignment) -> Vec<usize> {
+    let mut perm = Vec::with_capacity(asg.cu_of.len());
+    for want in 0..=1u8 {
+        for (c, &cu) in asg.cu_of.iter().enumerate() {
+            if cu == want {
+                perm.push(c);
+            }
+        }
+    }
+    perm
+}
+
+/// Apply the Fig. 4 pass to a whole mapping.
+pub fn reorganize(mapping: &Mapping) -> NetworkReorg {
+    let mut layers = Vec::with_capacity(mapping.layers.len());
+    for asg in &mapping.layers {
+        let perm = grouping_perm(asg);
+        let n0 = asg.count(0);
+        let n = asg.cu_of.len();
+        let mut sub_layers = Vec::new();
+        if n0 > 0 {
+            sub_layers.push(SubLayer {
+                cu: 0,
+                start: 0,
+                end: n0,
+            });
+        }
+        if n0 < n {
+            sub_layers.push(SubLayer {
+                cu: 1,
+                start: n0,
+                end: n,
+            });
+        }
+        layers.push(LayerReorg {
+            layer: asg.layer.clone(),
+            next_input_perm: perm.clone(),
+            perm,
+            sub_layers,
+        });
+    }
+    NetworkReorg { layers }
+}
+
+impl LayerReorg {
+    /// The assignment after re-organization (contiguous by construction).
+    pub fn reorganized_assignment(&self, original: &LayerAssignment) -> LayerAssignment {
+        LayerAssignment {
+            layer: original.layer.clone(),
+            cu_of: self.perm.iter().map(|&old| original.cu_of[old]).collect(),
+        }
+    }
+
+    /// Check that `perm` is a valid permutation.
+    pub fn is_valid_permutation(&self) -> bool {
+        let n = self.perm.len();
+        let mut seen = vec![false; n];
+        for &p in &self.perm {
+            if p >= n || seen[p] {
+                return false;
+            }
+            seen[p] = true;
+        }
+        true
+    }
+
+    /// Apply the permutation to per-channel data (gather): simulates
+    /// re-ordering weight filters / output slices.
+    pub fn apply<T: Copy>(&self, data: &[T]) -> Vec<T> {
+        self.perm.iter().map(|&old| data[old]).collect()
+    }
+
+    /// Inverse permutation (scatter view).
+    pub fn inverse(&self) -> Vec<usize> {
+        let mut inv = vec![0usize; self.perm.len()];
+        for (new, &old) in self.perm.iter().enumerate() {
+            inv[old] = new;
+        }
+        inv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::Platform;
+
+    fn asg(cu_of: Vec<u8>) -> LayerAssignment {
+        LayerAssignment {
+            layer: "l".into(),
+            cu_of,
+        }
+    }
+
+    #[test]
+    fn grouping_makes_contiguous_and_stable() {
+        let a = asg(vec![1, 0, 1, 0, 0, 1]);
+        let m = Mapping {
+            platform: Platform::Diana,
+            layers: vec![a.clone()],
+        };
+        let r = reorganize(&m);
+        let lr = &r.layers[0];
+        assert!(lr.is_valid_permutation());
+        // CU0 channels in original order (1, 3, 4), then CU1 (0, 2, 5)
+        assert_eq!(lr.perm, vec![1, 3, 4, 0, 2, 5]);
+        let after = lr.reorganized_assignment(&a);
+        assert!(after.is_contiguous());
+        assert_eq!(after.count(0), a.count(0));
+        assert_eq!(after.count(1), a.count(1));
+    }
+
+    #[test]
+    fn sub_layers_cover_exactly() {
+        let a = asg(vec![1, 0, 1, 1]);
+        let m = Mapping {
+            platform: Platform::Diana,
+            layers: vec![a],
+        };
+        let r = reorganize(&m);
+        let subs = &r.layers[0].sub_layers;
+        assert_eq!(subs.len(), 2);
+        assert_eq!((subs[0].start, subs[0].end), (0, 1));
+        assert_eq!((subs[1].start, subs[1].end), (1, 4));
+    }
+
+    #[test]
+    fn single_cu_gives_one_sublayer_identity_perm() {
+        let a = asg(vec![0, 0, 0]);
+        let m = Mapping {
+            platform: Platform::Darkside,
+            layers: vec![a],
+        };
+        let r = reorganize(&m);
+        assert_eq!(r.layers[0].perm, vec![0, 1, 2]);
+        assert_eq!(r.layers[0].sub_layers.len(), 1);
+    }
+
+    #[test]
+    fn function_preservation_composition() {
+        // gather(perm) followed by scatter(inverse) is the identity —
+        // i.e. permuting the next layer's input axis by the same perm
+        // undoes the output re-ordering.
+        let a = asg(vec![1, 0, 0, 1, 0]);
+        let m = Mapping {
+            platform: Platform::Diana,
+            layers: vec![a],
+        };
+        let r = reorganize(&m);
+        let lr = &r.layers[0];
+        let data: Vec<usize> = (0..5).collect();
+        let shuffled = lr.apply(&data);
+        let inv = lr.inverse();
+        let mut back = vec![0usize; 5];
+        for (new, &v) in shuffled.iter().enumerate() {
+            back[lr.perm[new]] = v;
+        }
+        assert_eq!(back, data);
+        // inverse is consistent
+        for (old, &new) in inv.iter().enumerate() {
+            assert_eq!(lr.perm[new], old);
+        }
+    }
+}

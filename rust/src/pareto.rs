@@ -1,0 +1,86 @@
+//! Pareto-front extraction in the accuracy-vs-cost plane.
+//!
+//! Every ODiMO figure reports Pareto-optimal mappings: maximize accuracy,
+//! minimize cost (latency cycles or energy). A point dominates another if
+//! it is no worse on both axes and strictly better on at least one.
+
+/// One candidate mapping in the accuracy/cost plane.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Point {
+    /// cost to minimize (cycles or µJ)
+    pub cost: f64,
+    /// accuracy to maximize (fraction in [0,1] or percent — any monotone
+    /// scale works)
+    pub acc: f64,
+}
+
+impl Point {
+    pub fn dominates(&self, other: &Point) -> bool {
+        (self.cost <= other.cost && self.acc >= other.acc)
+            && (self.cost < other.cost || self.acc > other.acc)
+    }
+}
+
+/// Indices of the non-dominated points, sorted by ascending cost.
+pub fn pareto_front(points: &[Point]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_by(|&i, &j| {
+        points[i]
+            .cost
+            .partial_cmp(&points[j].cost)
+            .unwrap()
+            .then(points[j].acc.partial_cmp(&points[i].acc).unwrap())
+    });
+    let mut front = Vec::new();
+    let mut best_acc = f64::NEG_INFINITY;
+    for &i in &idx {
+        if points[i].acc > best_acc {
+            front.push(i);
+            best_acc = points[i].acc;
+        }
+    }
+    front
+}
+
+/// True if `p` lies on the Pareto front of `points` (p included).
+pub fn is_pareto(p: &Point, points: &[Point]) -> bool {
+    !points.iter().any(|q| q.dominates(p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_front() {
+        let pts = vec![
+            Point { cost: 1.0, acc: 0.5 },
+            Point { cost: 2.0, acc: 0.7 },
+            Point { cost: 3.0, acc: 0.6 }, // dominated by (2.0, 0.7)
+            Point { cost: 4.0, acc: 0.9 },
+        ];
+        let f = pareto_front(&pts);
+        assert_eq!(f, vec![0, 1, 3]);
+        assert!(!is_pareto(&pts[2], &pts));
+        assert!(is_pareto(&pts[1], &pts));
+    }
+
+    #[test]
+    fn duplicate_points_keep_one() {
+        let pts = vec![
+            Point { cost: 1.0, acc: 0.5 },
+            Point { cost: 1.0, acc: 0.5 },
+        ];
+        let f = pareto_front(&pts);
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn dominance_is_strict() {
+        let a = Point { cost: 1.0, acc: 0.5 };
+        assert!(!a.dominates(&a));
+        let b = Point { cost: 1.0, acc: 0.6 };
+        assert!(b.dominates(&a));
+        assert!(!a.dominates(&b));
+    }
+}

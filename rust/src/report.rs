@@ -1,0 +1,112 @@
+//! Result rendering: ASCII tables (stdout) + CSV files under `results/`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Render an ASCII table with a header row.
+pub fn ascii_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let sep = |out: &mut String| {
+        for w in &widths {
+            let _ = write!(out, "+{}", "-".repeat(w + 2));
+        }
+        out.push_str("+\n");
+    };
+    sep(&mut out);
+    for (i, h) in headers.iter().enumerate() {
+        let _ = write!(out, "| {:<w$} ", h, w = widths[i]);
+    }
+    out.push_str("|\n");
+    sep(&mut out);
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            let _ = write!(out, "| {:<w$} ", cell, w = widths[i]);
+        }
+        out.push_str("|\n");
+    }
+    sep(&mut out);
+    out
+}
+
+/// Write rows as CSV (simple quoting: fields with commas get quoted).
+pub fn write_csv(path: &Path, headers: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let quote = |s: &str| {
+        if s.contains(',') || s.contains('"') {
+            format!("\"{}\"", s.replace('"', "\"\""))
+        } else {
+            s.to_string()
+        }
+    };
+    let mut text = headers.iter().map(|h| quote(h)).collect::<Vec<_>>().join(",");
+    text.push('\n');
+    for row in rows {
+        text.push_str(&row.iter().map(|c| quote(c)).collect::<Vec<_>>().join(","));
+        text.push('\n');
+    }
+    std::fs::write(path, text).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Format helper: fixed decimals.
+pub fn f(v: f64, d: usize) -> String {
+    format!("{v:.d$}")
+}
+
+/// Format helper: scientific for large cycle counts.
+pub fn cyc(v: f64) -> String {
+    if v >= 1e6 {
+        format!("{:.2}e6", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.1}k", v / 1e3)
+    } else {
+        format!("{v:.0}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders() {
+        let t = ascii_table(
+            &["name", "value"],
+            &[
+                vec!["a".into(), "1".into()],
+                vec!["long-name".into(), "2.5".into()],
+            ],
+        );
+        assert!(t.contains("| name"));
+        assert!(t.contains("| long-name"));
+        assert!(t.lines().count() >= 6);
+    }
+
+    #[test]
+    fn csv_quotes_commas() {
+        let dir = std::env::temp_dir().join("odimo_csv_test");
+        let p = dir.join("t.csv");
+        write_csv(&p, &["a", "b"], &[vec!["x,y".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("\"x,y\",2"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn cyc_formats() {
+        assert_eq!(cyc(500.0), "500");
+        assert_eq!(cyc(1500.0), "1.5k");
+        assert_eq!(cyc(2_000_000.0), "2.00e6");
+    }
+}

@@ -1,0 +1,131 @@
+//! PJRT executable wrapper: load HLO text → compile → typed execute.
+//!
+//! Follows the reference wiring in `/opt/xla-example/load_hlo`: artifacts
+//! are HLO **text** (jax ≥ 0.5 emits protos with 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids), and
+//! every lowered function returns one tuple (lowered with
+//! `return_tuple=True`) which we decompose back into per-output literals.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::FunctionSpec;
+
+/// A compiled AOT function plus its manifest signature.
+pub struct LoadedFn {
+    pub name: String,
+    pub spec: FunctionSpec,
+    exe: PjRtLoadedExecutable,
+    /// cumulative wall time spent inside `call` (profiling aid)
+    pub exec_nanos: std::cell::Cell<u128>,
+    pub calls: std::cell::Cell<u64>,
+}
+
+impl LoadedFn {
+    pub fn load(
+        client: &PjRtClient,
+        name: &str,
+        path: &Path,
+        spec: FunctionSpec,
+    ) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+            anyhow!("loading HLO text {}: {e:?}", path.display())
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", name))?;
+        Ok(Self {
+            name: name.to_string(),
+            spec,
+            exe,
+            exec_nanos: std::cell::Cell::new(0),
+            calls: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    /// Accepts owned or borrowed literals.
+    pub fn call<L: std::borrow::Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Literal>> {
+        if args.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                args.len()
+            ));
+        }
+        let t0 = Instant::now();
+        let bufs = self
+            .exe
+            .execute(args)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.name))?;
+        let tuple = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {} output: {e:?}", self.name))?;
+        let outs = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {} output: {e:?}", self.name))?;
+        self.exec_nanos
+            .set(self.exec_nanos.get() + t0.elapsed().as_nanos());
+        self.calls.set(self.calls.get() + 1);
+        if outs.len() != self.spec.outputs.len() {
+            return Err(anyhow!(
+                "{}: manifest promises {} outputs, executable returned {}",
+                self.name,
+                self.spec.outputs.len(),
+                outs.len()
+            ));
+        }
+        Ok(outs)
+    }
+
+    /// Mean wall-clock per call so far, in milliseconds.
+    pub fn mean_ms(&self) -> f64 {
+        let c = self.calls.get().max(1);
+        self.exec_nanos.get() as f64 / 1e6 / c as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+/// Build an f32 literal of the given shape.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    if dims.is_empty() {
+        return Ok(Literal::scalar(data[0]));
+    }
+    Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape f32 literal: {e:?}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    if dims.is_empty() {
+        return Ok(Literal::scalar(data[0]));
+    }
+    Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape i32 literal: {e:?}"))
+}
+
+pub fn lit_scalar_f32(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+pub fn lit_scalar_i32(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+pub fn to_vec_f32(l: &Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow!("literal to f32 vec: {e:?}"))
+}

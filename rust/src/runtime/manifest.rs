@@ -1,0 +1,273 @@
+//! AOT manifest: the JSON contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! Every model variant ships four HLO-text files (`init`, `train`, `eval`,
+//! `cost`) plus one manifest describing, in *flattening order*, every
+//! input/output tensor of each function. The runtime binds buffers strictly
+//! by this order; names are used for θ-leaf lookup and debugging.
+//! Parsed with the in-tree JSON module (`util::json`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Value;
+
+/// One tensor in a function signature.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32" | "u32"
+}
+
+impl IoSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(v: &Value) -> Result<Self> {
+        Ok(Self {
+            name: v.str_of("name")?,
+            shape: v
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: v.str_of("dtype")?,
+        })
+    }
+}
+
+/// One lowered function (HLO file + io signature).
+#[derive(Debug, Clone)]
+pub struct FunctionSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl FunctionSpec {
+    fn parse(v: &Value) -> Result<Self> {
+        let specs = |key: &str| -> Result<Vec<IoSpec>> {
+            v.req(key)?.as_arr()?.iter().map(IoSpec::parse).collect()
+        };
+        Ok(Self {
+            file: v.str_of("file")?,
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+        })
+    }
+}
+
+/// Static geometry of one network layer, in cost-report row order.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub name: String,
+    pub ltype: String, // "conv" | "dw" | "pw" | "fc" | "search"
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub ox: usize,
+    pub oy: usize,
+    pub stride: usize,
+    pub searchable: bool,
+    pub theta_len: usize,
+}
+
+impl LayerSpec {
+    fn parse(v: &Value) -> Result<Self> {
+        Ok(Self {
+            name: v.str_of("name")?,
+            ltype: v.str_of("ltype")?,
+            cin: v.usize_of("cin")?,
+            cout: v.usize_of("cout")?,
+            k: v.usize_of("k")?,
+            ox: v.usize_of("ox")?,
+            oy: v.usize_of("oy")?,
+            stride: v.usize_of("stride")?,
+            searchable: v.bool_of("searchable")?,
+            theta_len: v.usize_of("theta_len")?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: String,
+    pub hw: usize,
+    pub classes: usize,
+    pub batch: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct CostScale {
+    pub latency_cycles: f64,
+    pub energy_uj: f64,
+}
+
+/// The full manifest for one model variant.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub variant: String,
+    pub platform: String, // "diana" | "darkside"
+    pub w_optimizer: String,
+    pub search_kind: String, // "channel" | "split" | "layerwise" | "prune" | "fixed"
+    pub dataset: DatasetSpec,
+    pub layers: Vec<LayerSpec>,
+    pub cost_scale: CostScale,
+    pub metrics_train: Vec<String>,
+    pub metrics_eval: Vec<String>,
+    pub functions: BTreeMap<String, FunctionSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Parse a manifest from JSON text.
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let v = crate::util::json::parse(text)?;
+        let ds = v.req("dataset")?;
+        let cs = v.req("cost_scale")?;
+        let strings = |key: &str| -> Result<Vec<String>> {
+            v.req(key)?
+                .as_arr()?
+                .iter()
+                .map(|s| Ok(s.as_str()?.to_string()))
+                .collect()
+        };
+        let mut functions = BTreeMap::new();
+        for (name, fv) in v.req("functions")?.as_obj()? {
+            functions.insert(
+                name.clone(),
+                FunctionSpec::parse(fv).with_context(|| format!("function '{name}'"))?,
+            );
+        }
+        Ok(Self {
+            variant: v.str_of("variant")?,
+            platform: v.str_of("platform")?,
+            w_optimizer: v.str_of("w_optimizer")?,
+            search_kind: v.str_of("search_kind")?,
+            dataset: DatasetSpec {
+                name: ds.str_of("name")?,
+                hw: ds.usize_of("hw")?,
+                classes: ds.usize_of("classes")?,
+                batch: ds.usize_of("batch")?,
+            },
+            layers: v
+                .req("layers")?
+                .as_arr()?
+                .iter()
+                .map(LayerSpec::parse)
+                .collect::<Result<_>>()?,
+            cost_scale: CostScale {
+                latency_cycles: cs.f64_of("latency_cycles")?,
+                energy_uj: cs.f64_of("energy_uj")?,
+            },
+            metrics_train: strings("metrics_train")?,
+            metrics_eval: strings("metrics_eval")?,
+            functions,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Load `<dir>/<variant>.manifest.json`.
+    pub fn load(dir: &Path, variant: &str) -> Result<Self> {
+        let path = dir.join(format!("{variant}.manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text, dir).with_context(|| format!("parsing manifest {}", path.display()))
+    }
+
+    pub fn function(&self, name: &str) -> Result<&FunctionSpec> {
+        self.functions
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest {}: no function '{name}'", self.variant))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.function(name)?.file))
+    }
+
+    /// Searchable layers, in order.
+    pub fn searchable_layers(&self) -> Vec<&LayerSpec> {
+        self.layers.iter().filter(|l| l.searchable).collect()
+    }
+
+    /// Index of the θ leaf for layer `layer` within the inputs of `fun`.
+    pub fn theta_input_index(&self, fun: &str, layer: &str) -> Result<usize> {
+        let want = format!("params/{layer}/theta");
+        let f = self.function(fun)?;
+        f.inputs
+            .iter()
+            .position(|s| s.name == want)
+            .ok_or_else(|| anyhow!("{}: no input '{want}'", self.variant))
+    }
+
+    /// Number of leading inputs that carry state (params + both optimizer
+    /// states) for the train function — the part that loops back.
+    pub fn train_state_len(&self) -> Result<usize> {
+        let f = self.function("train")?;
+        Ok(f.inputs
+            .iter()
+            .take_while(|s| {
+                s.name.starts_with("params/")
+                    || s.name.starts_with("opt_w/")
+                    || s.name.starts_with("opt_th/")
+            })
+            .count())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest_json() -> &'static str {
+        r#"{
+          "variant": "v", "platform": "diana", "w_optimizer": "sgdm",
+          "search_kind": "channel",
+          "dataset": {"name": "d", "hw": 32, "classes": 10, "batch": 64},
+          "layers": [
+            {"name": "stem", "ltype": "conv", "cin": 3, "cout": 8, "k": 3,
+             "ox": 32, "oy": 32, "stride": 1, "searchable": true,
+             "theta_len": 16},
+            {"name": "fc", "ltype": "fc", "cin": 32, "cout": 10, "k": 1,
+             "ox": 1, "oy": 1, "stride": 1, "searchable": false,
+             "theta_len": 0}
+          ],
+          "cost_scale": {"latency_cycles": 1e5, "energy_uj": 10.0},
+          "metrics_train": ["loss"], "metrics_eval": ["correct"],
+          "functions": {
+            "train": {"file": "v_train.hlo.txt",
+              "inputs": [
+                {"name": "params/stem/theta", "shape": [8, 2], "dtype": "f32"},
+                {"name": "opt_w/t", "shape": [], "dtype": "f32"},
+                {"name": "opt_th/t", "shape": [], "dtype": "f32"},
+                {"name": "x", "shape": [64, 32, 32, 3], "dtype": "f32"}],
+              "outputs": []}
+          }
+        }"#
+    }
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse(sample_manifest_json(), Path::new("/tmp")).unwrap();
+        assert_eq!(m.searchable_layers().len(), 1);
+        assert_eq!(m.theta_input_index("train", "stem").unwrap(), 0);
+        assert_eq!(m.train_state_len().unwrap(), 3);
+        assert_eq!(
+            m.function("train").unwrap().inputs[3].elem_count(),
+            64 * 32 * 32 * 3
+        );
+        assert!(m.function("nope").is_err());
+        assert_eq!(m.cost_scale.latency_cycles, 1e5);
+        assert_eq!(m.dataset.batch, 64);
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        assert!(Manifest::parse("{}", Path::new("/tmp")).is_err());
+    }
+}

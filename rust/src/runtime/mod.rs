@@ -1,0 +1,211 @@
+//! Runtime layer: PJRT client + manifest-driven artifact loading.
+//!
+//! The coordinator never constructs XLA computations — it only loads the
+//! AOT artifacts produced by `make artifacts` and executes them. This
+//! module owns that boundary:
+//!
+//! * [`manifest`] — the JSON contract (shapes/dtypes/layer table);
+//! * [`executable`] — HLO-text → PJRT compile → typed execute;
+//! * [`ModelRuntime`] — the four compiled functions of one model variant
+//!   plus the [`TrainState`] that loops through them.
+
+pub mod executable;
+pub mod manifest;
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+use xla::{Literal, PjRtClient};
+
+pub use executable::{lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, to_vec_f32, LoadedFn};
+pub use manifest::{IoSpec, LayerSpec, Manifest};
+
+/// Train-loop hyper-scalars fed to every `train` call.
+#[derive(Debug, Clone, Copy)]
+pub struct StepHparams {
+    /// cost strength λ (Eq. 1); 0 during warmup/final-training
+    pub lam: f32,
+    /// 0 = latency target (Eq. 3), 1 = energy target (Eq. 4)
+    pub cost_sel: f32,
+    pub lr_w: f32,
+    pub lr_th: f32,
+}
+
+/// Mutable training state: params + both optimizer states, kept as
+/// literals in manifest flattening order so they loop straight back into
+/// the next `train` call.
+pub struct TrainState {
+    pub leaves: Vec<Literal>,
+    /// names parallel to `leaves` (from the manifest train signature)
+    pub names: Vec<String>,
+}
+
+impl TrainState {
+    pub fn leaf_index(&self, name: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == name)
+    }
+
+    /// Fetch a named leaf as f32 host data.
+    pub fn leaf_f32(&self, name: &str) -> Result<Vec<f32>> {
+        let i = self
+            .leaf_index(name)
+            .ok_or_else(|| anyhow!("no state leaf '{name}'"))?;
+        to_vec_f32(&self.leaves[i])
+    }
+
+    /// Replace a named leaf (e.g. freezing θ to a discretized one-hot).
+    pub fn set_leaf_f32(&mut self, name: &str, shape: &[usize], data: &[f32]) -> Result<()> {
+        let i = self
+            .leaf_index(name)
+            .ok_or_else(|| anyhow!("no state leaf '{name}'"))?;
+        self.leaves[i] = lit_f32(shape, data)?;
+        Ok(())
+    }
+
+    /// Snapshot the raw f32 contents of every leaf (checkpointing).
+    pub fn snapshot(&self) -> Result<Vec<Vec<f32>>> {
+        self.leaves.iter().map(to_vec_f32).collect()
+    }
+
+    /// Restore from a snapshot taken on an identically-shaped state.
+    pub fn restore(&mut self, snap: &[Vec<f32>], specs: &[IoSpec]) -> Result<()> {
+        if snap.len() != self.leaves.len() {
+            return Err(anyhow!(
+                "snapshot has {} leaves, state has {}",
+                snap.len(),
+                self.leaves.len()
+            ));
+        }
+        for (i, data) in snap.iter().enumerate() {
+            self.leaves[i] = lit_f32(&specs[i].shape, data)?;
+        }
+        Ok(())
+    }
+}
+
+/// All four compiled functions of one model variant.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    pub init: LoadedFn,
+    pub train: LoadedFn,
+    pub eval: LoadedFn,
+    pub cost: LoadedFn,
+    state_len: usize,
+}
+
+impl ModelRuntime {
+    /// Load and compile a variant from the artifacts directory.
+    pub fn load(client: &PjRtClient, artifacts_dir: &Path, variant: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir, variant)?;
+        let load = |name: &str| -> Result<LoadedFn> {
+            LoadedFn::load(
+                client,
+                &format!("{variant}:{name}"),
+                &manifest.hlo_path(name)?,
+                manifest.function(name)?.clone(),
+            )
+        };
+        let init = load("init")?;
+        let train = load("train")?;
+        let eval = load("eval")?;
+        let cost = load("cost")?;
+        let state_len = manifest.train_state_len()?;
+        Ok(Self {
+            manifest,
+            init,
+            train,
+            eval,
+            cost,
+            state_len,
+        })
+    }
+
+    /// Run `init(seed)` and package the state for the train loop.
+    pub fn init_state(&self, seed: i32) -> Result<TrainState> {
+        let outs = self.init.call(&[lit_scalar_i32(seed)])?;
+        let names = self
+            .train
+            .spec
+            .inputs
+            .iter()
+            .take(self.state_len)
+            .map(|s| s.name.clone())
+            .collect::<Vec<_>>();
+        if outs.len() != self.state_len {
+            return Err(anyhow!(
+                "init produced {} leaves, train expects {} state inputs",
+                outs.len(),
+                self.state_len
+            ));
+        }
+        Ok(TrainState {
+            leaves: outs,
+            names,
+        })
+    }
+
+    /// One training step; advances `state` in place and returns the metric
+    /// vector `[loss, ce, acc, cost_lat_cycles, cost_energy_uj]`.
+    pub fn train_step(
+        &self,
+        state: &mut TrainState,
+        x: &Literal,
+        y: &Literal,
+        hp: StepHparams,
+    ) -> Result<Vec<f32>> {
+        let scalars = [
+            lit_scalar_f32(hp.lam),
+            lit_scalar_f32(hp.cost_sel),
+            lit_scalar_f32(hp.lr_w),
+            lit_scalar_f32(hp.lr_th),
+        ];
+        // manifest input order: params…, opt_w…, opt_th…, x, y, lam,
+        // cost_sel, lr_w, lr_th — exactly state ++ batch ++ scalars.
+        let mut args: Vec<&Literal> = Vec::with_capacity(state.leaves.len() + 6);
+        args.extend(state.leaves.iter());
+        args.push(x);
+        args.push(y);
+        args.extend(scalars.iter());
+        let mut outs = self.train.call(&args)?;
+        let metrics = outs.pop().ok_or_else(|| anyhow!("train returned no outputs"))?;
+        state.leaves = outs;
+        to_vec_f32(&metrics)
+    }
+
+    /// Evaluate one batch: returns `[correct, loss_sum]`.
+    pub fn eval_batch(&self, state: &TrainState, x: &Literal, y: &Literal) -> Result<Vec<f32>> {
+        let n_params = self
+            .eval
+            .spec
+            .inputs
+            .len()
+            .checked_sub(2)
+            .ok_or_else(|| anyhow!("eval signature too short"))?;
+        let mut args: Vec<&Literal> = state.leaves[..n_params].iter().collect();
+        args.push(x);
+        args.push(y);
+        let outs = self.eval.call(&args)?;
+        to_vec_f32(&outs[0])
+    }
+
+    /// Cost report from current θ: `(layer_mat [L,4] row-major, totals [2])`.
+    pub fn cost_report(&self, state: &TrainState) -> Result<(Vec<f32>, Vec<f32>)> {
+        let n_params = self.cost.spec.inputs.len();
+        let args: Vec<&Literal> = state.leaves[..n_params].iter().collect();
+        let outs = self.cost.call(&args)?;
+        Ok((to_vec_f32(&outs[0])?, to_vec_f32(&outs[1])?))
+    }
+
+    pub fn batch(&self) -> usize {
+        self.manifest.dataset.batch
+    }
+
+    pub fn state_len(&self) -> usize {
+        self.state_len
+    }
+}
+
+/// Create the CPU PJRT client (one per process).
+pub fn cpu_client() -> Result<PjRtClient> {
+    PjRtClient::cpu().map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))
+}

@@ -1,0 +1,323 @@
+//! Analytical cycle/energy models — the *exact* (integer-ceil) versions of
+//! the differentiable models in `python/compile/costs.py`.
+//!
+//! These are the models ODiMO searches with; `detailed.rs` is the
+//! event-driven "measured" reference they are validated against
+//! (Table III). The two sides share `hw/constants.json`, so the analytical
+//!↔ differentiable agreement is structural, and the analytical ↔ detailed
+//! gap is exactly the overhead terms the detailed simulator adds.
+
+use super::hw::HwConstants;
+use super::model::{Cu, CuCost, ExecReport, Layer, LayerReport, LayerType, Mapping, Platform};
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// Input-activation DMA load, counted by the *Darkside* analytical model
+/// only. The paper's Table III attributes DIANA's larger model errors to
+/// "neglected latency components, leading to a constant underestimation";
+/// its Darkside models are more complete (9%/16% error vs 42%/37%). We
+/// reproduce that asymmetry structurally: the Darkside model includes the
+/// L2→L1 input DMA, the DIANA model does not.
+fn dma_in_cycles(layer: &Layer) -> u64 {
+    let d = &HwConstants::load().detailed_sim;
+    d.dma_setup_cycles + (layer.input_bytes() as f64 / d.dma_bytes_per_cycle) as u64
+}
+
+/// Cycles for `n` output channels of `layer` on `cu`.
+///
+/// For `LayerType::Search` layers the operation is CU-dependent (the
+/// Darkside search space): standard conv on the cluster, depthwise on the
+/// DWE.
+pub fn cu_cycles(cu: Cu, layer: &Layer, n: usize) -> u64 {
+    if n == 0 {
+        return 0;
+    }
+    let hw = HwConstants::load();
+    match cu {
+        Cu::DianaDigital => {
+            let d = &hw.diana.digital;
+            let kdim = match layer.ltype {
+                LayerType::Dw => layer.k * layer.k,
+                _ => layer.cin * layer.k * layer.k,
+            };
+            let inner = ceil_div(kdim, d.pe_cols);
+            let mut compute = (ceil_div(n, d.pe_rows) * inner * layer.ox * layer.oy) as f64
+                / d.macs_per_cycle_per_pe;
+            if layer.ltype == LayerType::Dw {
+                compute *= hw.diana.dw_digital_inefficiency;
+            }
+            let wload = (n * kdim) as f64 / d.weight_load_bytes_per_cycle;
+            (compute + wload) as u64 + d.setup_cycles
+        }
+        Cu::DianaAnalog => {
+            let a = &hw.diana.analog;
+            let kdim = match layer.ltype {
+                LayerType::Dw => layer.k * layer.k,
+                _ => layer.cin * layer.k * layer.k,
+            };
+            let row_tiles = ceil_div(kdim, a.array_rows);
+            let col_tiles = ceil_div(n, a.array_cols);
+            let cells = (n * kdim) as f64;
+            let load = cells / a.cells_load_per_cycle;
+            let compute = (row_tiles * col_tiles * layer.ox * layer.oy) as f64
+                * a.cycles_per_analog_op;
+            (load + compute) as u64 + a.setup_cycles
+        }
+        Cu::DarksideCluster => {
+            let c = &hw.darkside.cluster;
+            // on the cluster a Search layer executes as a standard conv
+            let (macs, eff, ovh) = match layer.ltype {
+                LayerType::Dw => (layer.macs_dw(n) as f64, c.macs_per_cycle_dw, 1.0),
+                _ => (
+                    layer.macs_std(n) as f64,
+                    c.macs_per_cycle_std,
+                    c.im2col_overhead,
+                ),
+            };
+            (macs * ovh / eff) as u64 + c.setup_cycles + dma_in_cycles(layer)
+        }
+        Cu::DarksideDwe => {
+            let d = &hw.darkside.dwe;
+            // the DWE only ever runs depthwise
+            let macs = layer.macs_dw(n) as f64;
+            let cfg = (n * layer.k * layer.k) as f64 / d.weight_cfg_cells_per_cycle;
+            (macs / d.macs_per_cycle + cfg) as u64 + d.setup_cycles + dma_in_cycles(layer)
+        }
+    }
+}
+
+/// Platform power vector `[p_cu0, p_cu1]` + idle power + frequency (MHz).
+pub fn power(platform: Platform) -> ([f64; 2], f64, f64) {
+    let hw = HwConstants::load();
+    match platform {
+        Platform::Diana => (
+            [hw.diana.digital.p_act_mw, hw.diana.analog.p_act_mw],
+            hw.diana.p_idle_mw,
+            hw.diana.freq_mhz,
+        ),
+        Platform::Darkside => (
+            [hw.darkside.cluster.p_act_mw, hw.darkside.dwe.p_act_mw],
+            hw.darkside.p_idle_mw,
+            hw.darkside.freq_mhz,
+        ),
+    }
+}
+
+/// Layers whose two stages are sequential (DW on the DWE feeding a
+/// pointwise on the cluster — the ImageNet DW-vs-DWSep search space).
+pub fn is_sequential(search_kind: &str, layer: &Layer) -> bool {
+    search_kind == "dwsep" && layer.searchable
+}
+
+/// Execute a mapping through the analytical model.
+///
+/// `seq_layers` lists layers whose CU stages are sequential (DW→PW).
+pub fn execute(layers: &[Layer], mapping: &Mapping, seq_layers: &[String]) -> ExecReport {
+    let platform = mapping.platform;
+    let cus = platform.cus();
+    let mut reports = Vec::with_capacity(layers.len());
+    let mut total = 0u64;
+    let mut busy = [0u64; 2];
+    for (layer, asg) in layers.iter().zip(&mapping.layers) {
+        debug_assert_eq!(layer.name, asg.layer);
+        let n0 = asg.count(0);
+        let n1 = asg.count(1);
+        let c0 = cu_cycles(cus[0], layer, n0);
+        let c1 = cu_cycles(cus[1], layer, n1);
+        let sequential = seq_layers.iter().any(|s| s == &layer.name);
+        let latency = if sequential { c0 + c1 } else { c0.max(c1) };
+        busy[0] += c0;
+        busy[1] += c1;
+        total += latency;
+        reports.push(LayerReport {
+            layer: layer.name.clone(),
+            per_cu: [
+                CuCost {
+                    cycles: c0,
+                    channels: n0,
+                },
+                CuCost {
+                    cycles: c1,
+                    channels: n1,
+                },
+            ],
+            latency,
+            sequential,
+        });
+    }
+    let (p_act, p_idle, freq) = power(platform);
+    let us_per_cycle = 1.0 / freq;
+    let active_nj: f64 = reports
+        .iter()
+        .map(|r| {
+            (p_act[0] * r.per_cu[0].cycles as f64 + p_act[1] * r.per_cu[1].cycles as f64)
+                * us_per_cycle
+        })
+        .sum();
+    let idle_nj = p_idle * total as f64 * us_per_cycle;
+    let energy_uj = (active_nj + idle_nj) * 1e-3;
+    let util = [
+        busy[0] as f64 / total.max(1) as f64,
+        busy[1] as f64 / total.max(1) as f64,
+    ];
+    ExecReport {
+        platform,
+        layers: reports,
+        total_cycles: total,
+        energy_uj,
+        utilization: util,
+        latency_ms: total as f64 * us_per_cycle / 1e3,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv_layer(cin: usize, cout: usize, hw: usize) -> Layer {
+        Layer {
+            name: "t".into(),
+            ltype: LayerType::Conv,
+            cin,
+            cout,
+            k: 3,
+            ox: hw,
+            oy: hw,
+            stride: 1,
+            searchable: true,
+        }
+    }
+
+    #[test]
+    fn zero_channels_zero_cycles() {
+        let l = conv_layer(16, 32, 8);
+        for cu in [
+            Cu::DianaDigital,
+            Cu::DianaAnalog,
+            Cu::DarksideCluster,
+            Cu::DarksideDwe,
+        ] {
+            assert_eq!(cu_cycles(cu, &l, 0), 0);
+        }
+    }
+
+    #[test]
+    fn monotone_in_channels() {
+        let l = conv_layer(16, 64, 16);
+        for cu in [
+            Cu::DianaDigital,
+            Cu::DianaAnalog,
+            Cu::DarksideCluster,
+            Cu::DarksideDwe,
+        ] {
+            let mut prev = 0;
+            for n in 1..=64 {
+                let c = cu_cycles(cu, &l, n);
+                assert!(c >= prev, "{cu:?} not monotone at n={n}");
+                prev = c;
+            }
+        }
+    }
+
+    #[test]
+    fn dwe_beats_cluster_on_dw_work() {
+        // the whole point of the DWE: a depthwise workload is far cheaper
+        // there than a standard conv of the same layer on the cluster
+        let l = conv_layer(64, 64, 16);
+        let dwe = cu_cycles(Cu::DarksideDwe, &l, 64);
+        let cluster = cu_cycles(Cu::DarksideCluster, &l, 64);
+        assert!(
+            (cluster as f64) > 4.0 * dwe as f64,
+            "cluster {cluster} vs dwe {dwe}"
+        );
+    }
+
+    #[test]
+    fn analog_faster_than_digital_on_big_convs() {
+        let l = conv_layer(64, 64, 16);
+        let d = cu_cycles(Cu::DianaDigital, &l, 64);
+        let a = cu_cycles(Cu::DianaAnalog, &l, 64);
+        assert!(a < d, "analog {a} not faster than digital {d}");
+    }
+
+    #[test]
+    fn execute_splits_and_balances() {
+        use crate::soc::model::{LayerAssignment, Mapping};
+        // layer must be large enough to amortize the analog array's
+        // setup + per-pixel ADC cost — that's exactly the regime where
+        // intra-layer splitting pays off (the paper's motivation)
+        let layers = vec![conv_layer(64, 64, 16)];
+        let all0 = Mapping {
+            platform: Platform::Diana,
+            layers: vec![LayerAssignment::all_on("t", 64, 0)],
+        };
+        let split = Mapping {
+            platform: Platform::Diana,
+            layers: vec![LayerAssignment {
+                layer: "t".into(),
+                cu_of: (0..64).map(|c| u8::from(c >= 32)).collect(),
+            }],
+        };
+        let r0 = execute(&layers, &all0, &[]);
+        let rs = execute(&layers, &split, &[]);
+        assert!(
+            rs.total_cycles < r0.total_cycles,
+            "parallel split wins: {} vs {}",
+            rs.total_cycles,
+            r0.total_cycles
+        );
+        assert!(rs.energy_uj > 0.0 && r0.energy_uj > 0.0);
+        assert!((rs.cu1_channel_fraction() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tiny_layers_prefer_single_cu() {
+        // conversely, for a tiny stem-like layer (cin=3) the analog
+        // array's setup cost dominates and the all-digital mapping is
+        // cheaper — the crossover the min-cost baseline exploits when it
+        // assigns the stem to the digital CU
+        let layers = vec![conv_layer(3, 8, 4)];
+        use crate::soc::model::{LayerAssignment, Mapping};
+        let all0 = Mapping {
+            platform: Platform::Diana,
+            layers: vec![LayerAssignment::all_on("t", 8, 0)],
+        };
+        let split = Mapping {
+            platform: Platform::Diana,
+            layers: vec![LayerAssignment {
+                layer: "t".into(),
+                cu_of: (0..8).map(|c| u8::from(c >= 4)).collect(),
+            }],
+        };
+        let r0 = execute(&layers, &all0, &[]);
+        let rs = execute(&layers, &split, &[]);
+        assert!(
+            r0.total_cycles < rs.total_cycles,
+            "all-digital {} vs split {}",
+            r0.total_cycles,
+            rs.total_cycles
+        );
+    }
+
+    #[test]
+    fn sequential_layers_add() {
+        use crate::soc::model::{LayerAssignment, Mapping};
+        let layers = vec![conv_layer(16, 32, 8)];
+        let m = Mapping {
+            platform: Platform::Darkside,
+            layers: vec![LayerAssignment {
+                layer: "t".into(),
+                cu_of: (0..32).map(|c| u8::from(c >= 16)).collect(),
+            }],
+        };
+        let par = execute(&layers, &m, &[]);
+        let seq = execute(&layers, &m, &["t".to_string()]);
+        assert!(seq.total_cycles > par.total_cycles);
+        assert_eq!(
+            seq.total_cycles,
+            par.layers[0].per_cu[0].cycles + par.layers[0].per_cu[1].cycles
+        );
+    }
+}

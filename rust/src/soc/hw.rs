@@ -1,0 +1,176 @@
+//! Hardware constants — deserialized from `hw/constants.json`, the single
+//! source of truth shared with the Python differentiable cost models
+//! (`python/compile/costs.py`). The file is embedded at compile time so
+//! the simulator cannot drift from the checked-in constants.
+
+use anyhow::Result;
+
+use crate::util::json::{parse, Value};
+
+pub const HW_JSON: &str = include_str!("../../../hw/constants.json");
+
+#[derive(Debug, Clone)]
+pub struct DianaDigital {
+    pub pe_rows: usize,
+    pub pe_cols: usize,
+    pub macs_per_cycle_per_pe: f64,
+    pub weight_load_bytes_per_cycle: f64,
+    pub setup_cycles: u64,
+    pub p_act_mw: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct DianaAnalog {
+    pub array_rows: usize,
+    pub array_cols: usize,
+    pub cells_load_per_cycle: f64,
+    pub cycles_per_analog_op: f64,
+    pub setup_cycles: u64,
+    pub p_act_mw: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Diana {
+    pub freq_mhz: f64,
+    pub digital: DianaDigital,
+    pub analog: DianaAnalog,
+    pub p_idle_mw: f64,
+    pub dw_digital_inefficiency: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct DarksideCluster {
+    pub cores: usize,
+    pub macs_per_cycle_std: f64,
+    pub macs_per_cycle_dw: f64,
+    pub im2col_overhead: f64,
+    pub setup_cycles: u64,
+    pub p_act_mw: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct DarksideDwe {
+    pub macs_per_cycle: f64,
+    pub weight_cfg_cells_per_cycle: f64,
+    pub setup_cycles: u64,
+    pub p_act_mw: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Darkside {
+    pub freq_mhz: f64,
+    pub cluster: DarksideCluster,
+    pub dwe: DarksideDwe,
+    pub p_idle_mw: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct DetailedSim {
+    pub dma_setup_cycles: u64,
+    pub dma_bytes_per_cycle: f64,
+    pub l1_banks: usize,
+    pub bank_conflict_prob: f64,
+    pub fabric_sync_cycles: u64,
+    pub pipeline_warmup_rows: u64,
+    pub diana_analog_variability: f64,
+    pub diana_digital_stall_factor: f64,
+    pub darkside_cluster_stall_factor: f64,
+    pub darkside_dwe_stall_factor: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct HwConstants {
+    pub diana: Diana,
+    pub darkside: Darkside,
+    pub detailed_sim: DetailedSim,
+}
+
+fn parse_constants(v: &Value) -> Result<HwConstants> {
+    let di = v.req("diana")?;
+    let dd = di.req("digital")?;
+    let da = di.req("analog")?;
+    let ds = v.req("darkside")?;
+    let dc = ds.req("cluster")?;
+    let dw = ds.req("dwe")?;
+    let de = v.req("detailed_sim")?;
+    Ok(HwConstants {
+        diana: Diana {
+            freq_mhz: di.f64_of("freq_mhz")?,
+            digital: DianaDigital {
+                pe_rows: dd.usize_of("pe_rows")?,
+                pe_cols: dd.usize_of("pe_cols")?,
+                macs_per_cycle_per_pe: dd.f64_of("macs_per_cycle_per_pe")?,
+                weight_load_bytes_per_cycle: dd.f64_of("weight_load_bytes_per_cycle")?,
+                setup_cycles: dd.f64_of("setup_cycles")? as u64,
+                p_act_mw: dd.f64_of("p_act_mw")?,
+            },
+            analog: DianaAnalog {
+                array_rows: da.usize_of("array_rows")?,
+                array_cols: da.usize_of("array_cols")?,
+                cells_load_per_cycle: da.f64_of("cells_load_per_cycle")?,
+                cycles_per_analog_op: da.f64_of("cycles_per_analog_op")?,
+                setup_cycles: da.f64_of("setup_cycles")? as u64,
+                p_act_mw: da.f64_of("p_act_mw")?,
+            },
+            p_idle_mw: di.f64_of("p_idle_mw")?,
+            dw_digital_inefficiency: di.f64_of("dw_digital_inefficiency")?,
+        },
+        darkside: Darkside {
+            freq_mhz: ds.f64_of("freq_mhz")?,
+            cluster: DarksideCluster {
+                cores: dc.usize_of("cores")?,
+                macs_per_cycle_std: dc.f64_of("macs_per_cycle_std")?,
+                macs_per_cycle_dw: dc.f64_of("macs_per_cycle_dw")?,
+                im2col_overhead: dc.f64_of("im2col_overhead")?,
+                setup_cycles: dc.f64_of("setup_cycles")? as u64,
+                p_act_mw: dc.f64_of("p_act_mw")?,
+            },
+            dwe: DarksideDwe {
+                macs_per_cycle: dw.f64_of("macs_per_cycle")?,
+                weight_cfg_cells_per_cycle: dw.f64_of("weight_cfg_cells_per_cycle")?,
+                setup_cycles: dw.f64_of("setup_cycles")? as u64,
+                p_act_mw: dw.f64_of("p_act_mw")?,
+            },
+            p_idle_mw: ds.f64_of("p_idle_mw")?,
+        },
+        detailed_sim: DetailedSim {
+            dma_setup_cycles: de.f64_of("dma_setup_cycles")? as u64,
+            dma_bytes_per_cycle: de.f64_of("dma_bytes_per_cycle")?,
+            l1_banks: de.usize_of("l1_banks")?,
+            bank_conflict_prob: de.f64_of("bank_conflict_prob")?,
+            fabric_sync_cycles: de.f64_of("fabric_sync_cycles")? as u64,
+            pipeline_warmup_rows: de.f64_of("pipeline_warmup_rows")? as u64,
+            diana_analog_variability: de.f64_of("diana_analog_variability")?,
+            diana_digital_stall_factor: de.f64_of("diana_digital_stall_factor")?,
+            darkside_cluster_stall_factor: de.f64_of("darkside_cluster_stall_factor")?,
+            darkside_dwe_stall_factor: de.f64_of("darkside_dwe_stall_factor")?,
+        },
+    })
+}
+
+impl HwConstants {
+    pub fn load() -> &'static HwConstants {
+        use std::sync::OnceLock;
+        static HW: OnceLock<HwConstants> = OnceLock::new();
+        HW.get_or_init(|| {
+            let v = parse(HW_JSON).expect("hw/constants.json parses");
+            parse_constants(&v).expect("hw/constants.json has all fields")
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_parse_and_are_sane() {
+        let hw = HwConstants::load();
+        assert_eq!(hw.diana.digital.pe_rows, 16);
+        assert!(hw.diana.analog.array_rows * hw.diana.analog.array_cols >= 500_000);
+        assert!(hw.darkside.cluster.macs_per_cycle_std > hw.darkside.cluster.macs_per_cycle_dw);
+        assert!(hw.darkside.dwe.macs_per_cycle > hw.darkside.cluster.macs_per_cycle_dw);
+        assert!(hw.detailed_sim.bank_conflict_prob < 1.0);
+        assert!(hw.diana.freq_mhz > 0.0 && hw.darkside.freq_mhz > 0.0);
+    }
+}

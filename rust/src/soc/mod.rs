@@ -1,0 +1,42 @@
+//! SoC simulation substrate: the DIANA and Darkside platforms.
+//!
+//! The paper evaluates ODiMO mappings on two physical SoCs that are not
+//! available here, so this module *is* the hardware (DESIGN.md §2):
+//!
+//! * [`hw`] — constants shared with the Python cost models;
+//! * [`model`] — layers, CUs, mappings, execution reports;
+//! * [`analytical`] — the exact integer version of the differentiable
+//!   cost models (what ODiMO believes);
+//! * [`detailed`] — the event-driven simulator standing in for silicon
+//!   measurements (what the deployment tables report).
+//!
+//! Table III is precisely the comparison `analytical` vs `detailed`;
+//! Table IV runs whole mapped networks through `detailed`.
+
+pub mod analytical;
+pub mod detailed;
+pub mod hw;
+pub mod model;
+
+pub use model::{Cu, CuCost, ExecReport, Layer, LayerAssignment, LayerReport, LayerType, Mapping, Platform};
+
+use crate::runtime::Manifest;
+
+/// Build the simulator layer list from a variant manifest.
+pub fn layers_from_manifest(m: &Manifest) -> Vec<Layer> {
+    m.layers.iter().map(Layer::from_spec).collect()
+}
+
+/// Names of sequential-stage layers for a manifest (the DW→PW dependency
+/// of the `dw_vs_dwsep` ImageNet search space).
+pub fn sequential_layers(m: &Manifest) -> Vec<String> {
+    if m.variant.contains("imgnet") && m.platform == "darkside" {
+        m.layers
+            .iter()
+            .filter(|l| l.searchable)
+            .map(|l| l.name.clone())
+            .collect()
+    } else {
+        Vec::new()
+    }
+}

@@ -1,0 +1,263 @@
+//! Core simulator types: layers, compute units, mappings, execution
+//! reports.
+
+
+
+use crate::runtime::LayerSpec;
+
+/// Supported layer operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerType {
+    /// standard k×k convolution
+    Conv,
+    /// depthwise k×k convolution
+    Dw,
+    /// pointwise (1×1) convolution
+    Pw,
+    /// fully connected
+    Fc,
+    /// searchable Darkside position (std-conv vs depthwise alternatives)
+    Search,
+}
+
+impl LayerType {
+    pub fn parse(s: &str) -> LayerType {
+        match s {
+            "conv" => LayerType::Conv,
+            "dw" => LayerType::Dw,
+            "pw" => LayerType::Pw,
+            "fc" => LayerType::Fc,
+            "search" => LayerType::Search,
+            other => panic!("unknown layer type '{other}'"),
+        }
+    }
+}
+
+/// Static geometry of one layer (mirrors the manifest layer table).
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub ltype: LayerType,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub ox: usize,
+    pub oy: usize,
+    pub stride: usize,
+    pub searchable: bool,
+}
+
+impl Layer {
+    pub fn from_spec(s: &LayerSpec) -> Layer {
+        Layer {
+            name: s.name.clone(),
+            ltype: LayerType::parse(&s.ltype),
+            cin: s.cin,
+            cout: s.cout,
+            k: s.k,
+            ox: s.ox,
+            oy: s.oy,
+            stride: s.stride,
+            searchable: s.searchable,
+        }
+    }
+
+    /// MACs if `n` output channels run as a standard conv.
+    pub fn macs_std(&self, n: usize) -> u64 {
+        (n * self.cin * self.k * self.k * self.ox * self.oy) as u64
+    }
+
+    /// MACs if `n` output channels run depthwise.
+    pub fn macs_dw(&self, n: usize) -> u64 {
+        (n * self.k * self.k * self.ox * self.oy) as u64
+    }
+
+    /// Input activation bytes (int8) one CU must load.
+    pub fn input_bytes(&self) -> u64 {
+        (self.cin * self.ox * self.stride * self.oy * self.stride) as u64
+    }
+
+    /// Output activation bytes (int8) for `n` channels.
+    pub fn output_bytes(&self, n: usize) -> u64 {
+        (n * self.ox * self.oy) as u64
+    }
+}
+
+/// The compute units of the two supported SoCs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cu {
+    /// DIANA 16×16 int8 digital PE grid
+    DianaDigital,
+    /// DIANA 500k-cell ternary analog AIMC array
+    DianaAnalog,
+    /// Darkside 8-core RISC-V cluster (standard/pointwise convs, FC)
+    DarksideCluster,
+    /// Darkside DepthWise Engine (depthwise 3×3 only)
+    DarksideDwe,
+}
+
+impl Cu {
+    pub fn label(self) -> &'static str {
+        match self {
+            Cu::DianaDigital => "digital",
+            Cu::DianaAnalog => "analog",
+            Cu::DarksideCluster => "cluster",
+            Cu::DarksideDwe => "dwe",
+        }
+    }
+}
+
+/// Target platform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Platform {
+    Diana,
+    Darkside,
+}
+
+impl Platform {
+    pub fn parse(s: &str) -> Platform {
+        match s {
+            "diana" => Platform::Diana,
+            "darkside" => Platform::Darkside,
+            other => panic!("unknown platform '{other}'"),
+        }
+    }
+
+    /// The two CUs of the platform, in cost-model column order
+    /// (column 0, column 1).
+    pub fn cus(self) -> [Cu; 2] {
+        match self {
+            Platform::Diana => [Cu::DianaDigital, Cu::DianaAnalog],
+            Platform::Darkside => [Cu::DarksideCluster, Cu::DarksideDwe],
+        }
+    }
+}
+
+/// Per-layer channel→CU assignment: `cu_of[c]` gives the CU *column*
+/// (0 or 1) producing output channel `c`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerAssignment {
+    pub layer: String,
+    pub cu_of: Vec<u8>,
+}
+
+impl LayerAssignment {
+    pub fn all_on(layer: &str, cout: usize, cu: u8) -> Self {
+        Self {
+            layer: layer.to_string(),
+            cu_of: vec![cu; cout],
+        }
+    }
+
+    pub fn count(&self, cu: u8) -> usize {
+        self.cu_of.iter().filter(|&&c| c == cu).count()
+    }
+
+    /// True if the channels of each CU form one contiguous block.
+    pub fn is_contiguous(&self) -> bool {
+        let mut transitions = 0;
+        for w in self.cu_of.windows(2) {
+            if w[0] != w[1] {
+                transitions += 1;
+            }
+        }
+        transitions <= 1
+    }
+}
+
+/// A whole-network mapping.
+#[derive(Debug, Clone)]
+pub struct Mapping {
+    pub platform: Platform,
+    pub layers: Vec<LayerAssignment>,
+}
+
+/// Execution cost of one layer on one CU.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CuCost {
+    pub cycles: u64,
+    pub channels: usize,
+}
+
+/// Per-layer execution report.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub layer: String,
+    /// cost per CU column (index matches `Platform::cus()`)
+    pub per_cu: [CuCost; 2],
+    /// layer latency (max across CUs, plus sync in the detailed sim)
+    pub latency: u64,
+    /// true when the two CUs run sequentially (DW→PW dependency of the
+    /// ImageNet search space) rather than in parallel
+    pub sequential: bool,
+}
+
+/// Whole-network execution report.
+#[derive(Debug, Clone)]
+pub struct ExecReport {
+    pub platform: Platform,
+    pub layers: Vec<LayerReport>,
+    pub total_cycles: u64,
+    pub energy_uj: f64,
+    /// fraction of total time each CU is busy
+    pub utilization: [f64; 2],
+    pub latency_ms: f64,
+}
+
+impl ExecReport {
+    /// Fraction of output channels mapped to CU column 1 across the whole
+    /// network (the paper's "A. Ch." column in Table IV).
+    pub fn cu1_channel_fraction(&self) -> f64 {
+        let total: usize = self
+            .layers
+            .iter()
+            .map(|l| l.per_cu[0].channels + l.per_cu[1].channels)
+            .sum();
+        let cu1: usize = self.layers.iter().map(|l| l.per_cu[1].channels).sum();
+        if total == 0 {
+            0.0
+        } else {
+            cu1 as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguity() {
+        let a = LayerAssignment {
+            layer: "l".into(),
+            cu_of: vec![0, 0, 1, 1, 1],
+        };
+        assert!(a.is_contiguous());
+        let b = LayerAssignment {
+            layer: "l".into(),
+            cu_of: vec![0, 1, 0, 1],
+        };
+        assert!(!b.is_contiguous());
+        let c = LayerAssignment::all_on("l", 4, 1);
+        assert!(c.is_contiguous());
+        assert_eq!(c.count(1), 4);
+        assert_eq!(c.count(0), 0);
+    }
+
+    #[test]
+    fn macs() {
+        let l = Layer {
+            name: "t".into(),
+            ltype: LayerType::Conv,
+            cin: 16,
+            cout: 32,
+            k: 3,
+            ox: 8,
+            oy: 8,
+            stride: 1,
+            searchable: true,
+        };
+        assert_eq!(l.macs_std(32), 32 * 16 * 9 * 64);
+        assert_eq!(l.macs_dw(32), 32 * 9 * 64);
+    }
+}

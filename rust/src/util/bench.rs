@@ -1,0 +1,106 @@
+//! Micro-benchmark harness (criterion is not in the offline cache).
+//!
+//! Used by the `cargo bench` targets (`harness = false`): warms up, runs
+//! timed iterations until a wall budget or iteration cap is reached, and
+//! reports mean / p50 / p95 / min. Deliberately simple, deterministic in
+//! iteration count, and dependency-free.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>8} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} us", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Benchmark `f`, spending roughly `budget` wall time (after `warmup`
+/// iterations), capped at `max_iters`.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, budget: Duration, max_iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget && samples.len() < max_iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    if samples.is_empty() {
+        samples.push(f64::NAN);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let q = |p: f64| samples[((n as f64 - 1.0) * p) as usize];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        p50_ns: q(0.50),
+        p95_ns: q(0.95),
+        min_ns: samples[0],
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Convenience: default budget (1s) / warmup (3) / cap (10_000).
+pub fn quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench(name, 3, Duration::from_secs(1), 10_000, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("noop+sum", 1, Duration::from_millis(50), 1000, || {
+            let s: u64 = (0..1000u64).sum();
+            std::hint::black_box(s);
+        });
+        assert!(r.iters >= 1);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p95_ns >= r.p50_ns);
+        assert!(r.p50_ns >= r.min_ns);
+    }
+
+    #[test]
+    fn format_scales() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5.0e3).ends_with("us"));
+        assert!(fmt_ns(5.0e6).ends_with("ms"));
+        assert!(fmt_ns(5.0e9).ends_with(" s"));
+    }
+}

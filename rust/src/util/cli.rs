@@ -1,0 +1,108 @@
+//! Tiny CLI argument parser (clap is not in the offline cache).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Parse raw args. `flag_names` lists options that take no value.
+pub fn parse(raw: impl IntoIterator<Item = String>, flag_names: &[&str]) -> Result<Args> {
+    let mut out = Args::default();
+    let mut iter = raw.into_iter().peekable();
+    while let Some(a) = iter.next() {
+        if let Some(stripped) = a.strip_prefix("--") {
+            if let Some((k, v)) = stripped.split_once('=') {
+                out.options.insert(k.to_string(), v.to_string());
+            } else if flag_names.contains(&stripped) {
+                out.flags.push(stripped.to_string());
+            } else {
+                let v = iter
+                    .next()
+                    .ok_or_else(|| anyhow!("option --{stripped} needs a value"))?;
+                out.options.insert(stripped.to_string(), v);
+            }
+        } else {
+            out.positional.push(a);
+        }
+    }
+    Ok(out)
+}
+
+impl Args {
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key}: expected a number, got '{v}'")),
+        }
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key}: expected an integer, got '{v}'")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn require(&self, key: &str) -> Result<String> {
+        match self.opt(key) {
+            Some(v) => Ok(v.to_string()),
+            None => bail!("missing required option --{key}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(
+            s(&["exp", "fig5", "--task=c10", "--soc", "diana", "--fast", "0.5", "--verbose"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["exp", "fig5"]);
+        assert_eq!(a.opt("task"), Some("c10"));
+        assert_eq!(a.opt("soc"), Some("diana"));
+        assert_eq!(a.opt_f64("fast", 1.0).unwrap(), 0.5);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.opt_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse(s(&["--key"]), &[]).is_err());
+        let a = parse(s(&["--n", "abc"]), &[]).unwrap();
+        assert!(a.opt_usize("n", 0).is_err());
+        assert!(a.require("other").is_err());
+    }
+}

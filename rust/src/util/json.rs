@@ -1,0 +1,455 @@
+//! Minimal JSON implementation (parser + writer).
+//!
+//! The crate cache in this environment has no `serde`/`serde_json`, so the
+//! manifest contract and all result files go through this hand-rolled
+//! implementation. It supports the full JSON grammar we emit/consume:
+//! objects, arrays, strings (with escapes), numbers, booleans, null.
+//! Object key order is preserved (insertion order) so written files diff
+//! cleanly.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    /// object: ordered (key, value) pairs
+    Obj(Vec<(String, Value)>),
+}
+
+impl Value {
+    // -- accessors ---------------------------------------------------------
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn req(&self, key: &str) -> Result<&Value> {
+        self.get(key).ok_or_else(|| anyhow!("missing key '{key}'"))
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let f = self.as_f64()?;
+        if f < 0.0 || f.fract() != 0.0 {
+            bail!("expected non-negative integer, got {f}");
+        }
+        Ok(f as usize)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Value]> {
+        match self {
+            Value::Arr(a) => Ok(a),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&[(String, Value)]> {
+        match self {
+            Value::Obj(o) => Ok(o),
+            other => bail!("expected object, got {other:?}"),
+        }
+    }
+
+    /// String field shortcut.
+    pub fn str_of(&self, key: &str) -> Result<String> {
+        Ok(self.req(key)?.as_str()?.to_string())
+    }
+
+    pub fn f64_of(&self, key: &str) -> Result<f64> {
+        self.req(key)?.as_f64()
+    }
+
+    pub fn usize_of(&self, key: &str) -> Result<usize> {
+        self.req(key)?.as_usize()
+    }
+
+    pub fn bool_of(&self, key: &str) -> Result<bool> {
+        self.req(key)?.as_bool()
+    }
+
+    // -- builders ----------------------------------------------------------
+
+    pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+        Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr<I: IntoIterator<Item = Value>>(items: I) -> Value {
+        Value::Arr(items.into_iter().collect())
+    }
+
+    pub fn str(s: impl Into<String>) -> Value {
+        Value::Str(s.into())
+    }
+
+    pub fn num(n: f64) -> Value {
+        Value::Num(n)
+    }
+
+    /// Convert a string-keyed map (sorted output).
+    pub fn from_map(m: &BTreeMap<String, Value>) -> Value {
+        Value::Obj(m.iter().map(|(k, v)| (k.clone(), v.clone())).collect())
+    }
+
+    // -- writer --------------------------------------------------------------
+
+    pub fn to_string_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0, true);
+        s
+    }
+
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0, false);
+        s
+    }
+
+    fn write(&self, out: &mut String, indent: usize, pretty: bool) {
+        let pad = |out: &mut String, n: usize| {
+            if pretty {
+                out.push('\n');
+                for _ in 0..n {
+                    out.push(' ');
+                }
+            }
+        };
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Value::Str(s) => write_escaped(out, s),
+            Value::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    pad(out, indent + 1);
+                    v.write(out, indent + 1, pretty);
+                }
+                if !items.is_empty() {
+                    pad(out, indent);
+                }
+                out.push(']');
+            }
+            Value::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    pad(out, indent + 1);
+                    write_escaped(out, k);
+                    out.push(':');
+                    if pretty {
+                        out.push(' ');
+                    }
+                    v.write(out, indent + 1, pretty);
+                }
+                if !pairs.is_empty() {
+                    pad(out, indent);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+// ---------------------------------------------------------------------------
+// Parser
+// ---------------------------------------------------------------------------
+
+pub fn parse(text: &str) -> Result<Value> {
+    let bytes = text.as_bytes();
+    let mut p = Parser { bytes, pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != bytes.len() {
+        bail!("trailing characters at offset {}", p.pos);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Result<u8> {
+        let b = self.peek().ok_or_else(|| anyhow!("unexpected end of JSON"))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        let got = self.bump()?;
+        if got != b {
+            bail!(
+                "expected '{}' at offset {}, got '{}'",
+                b as char,
+                self.pos - 1,
+                got as char
+            );
+        }
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        self.skip_ws();
+        match self.peek().ok_or_else(|| anyhow!("unexpected end of JSON"))? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Value::Str(self.string()?)),
+            b't' => self.lit("true", Value::Bool(true)),
+            b'f' => self.lit("false", Value::Bool(false)),
+            b'n' => self.lit("null", Value::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Value) -> Result<Value> {
+        if self.bytes[self.pos..].starts_with(s.as_bytes()) {
+            self.pos += s.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at offset {}", self.pos)
+        }
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Value::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let v = self.value()?;
+            pairs.push((key, v));
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b'}' => break,
+                c => bail!("expected ',' or '}}' in object, got '{}'", c as char),
+            }
+        }
+        Ok(Value::Obj(pairs))
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Value::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b']' => break,
+                c => bail!("expected ',' or ']' in array, got '{}'", c as char),
+            }
+        }
+        Ok(Value::Arr(items))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let b = self.bump()?;
+            match b {
+                b'"' => break,
+                b'\\' => {
+                    let e = self.bump()?;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{0008}'),
+                        b'f' => s.push('\u{000C}'),
+                        b'u' => {
+                            let mut code = 0u32;
+                            for _ in 0..4 {
+                                let h = self.bump()?;
+                                code = code * 16
+                                    + (h as char)
+                                        .to_digit(16)
+                                        .ok_or_else(|| anyhow!("bad \\u escape"))?;
+                            }
+                            s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        }
+                        c => bail!("bad escape '\\{}'", c as char),
+                    }
+                }
+                _ => {
+                    // multi-byte UTF-8: copy the remaining continuation bytes
+                    let start = self.pos - 1;
+                    let len = utf8_len(b);
+                    self.pos = start + len;
+                    if self.pos > self.bytes.len() {
+                        bail!("truncated UTF-8");
+                    }
+                    s.push_str(std::str::from_utf8(&self.bytes[start..self.pos])?);
+                }
+            }
+        }
+        Ok(s)
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        ) {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        let n: f64 = s
+            .parse()
+            .map_err(|_| anyhow!("invalid number '{s}' at offset {start}"))?;
+        Ok(Value::Num(n))
+    }
+}
+
+fn utf8_len(b: u8) -> usize {
+    match b {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_basics() {
+        let src = r#"{"a": 1, "b": [true, null, "x\ny", -2.5e3], "c": {"d": ""}}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.usize_of("a").unwrap(), 1);
+        let arr = v.req("b").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0], Value::Bool(true));
+        assert_eq!(arr[1], Value::Null);
+        assert_eq!(arr[2].as_str().unwrap(), "x\ny");
+        assert_eq!(arr[3].as_f64().unwrap(), -2500.0);
+        // reparse what we print
+        let v2 = parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(v, v2);
+        let v3 = parse(&v.to_string_compact()).unwrap();
+        assert_eq!(v, v3);
+    }
+
+    #[test]
+    fn unicode_and_escapes() {
+        let v = parse(r#"{"s": "héllo é ∆"}"#).unwrap();
+        assert_eq!(v.str_of("s").unwrap(), "héllo é ∆");
+        let out = v.to_string_compact();
+        assert_eq!(parse(&out).unwrap(), v);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("{\"a\" 1}").is_err());
+        assert!(parse("123 45").is_err());
+        assert!(parse("nul").is_err());
+    }
+
+    #[test]
+    fn integers_print_without_fraction() {
+        let v = Value::obj(vec![("n", Value::num(42.0)), ("f", Value::num(1.5))]);
+        let s = v.to_string_compact();
+        assert!(s.contains("\"n\":42"), "{s}");
+        assert!(s.contains("\"f\":1.5"), "{s}");
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(parse("[]").unwrap(), Value::Arr(vec![]));
+        assert_eq!(parse("{}").unwrap(), Value::Obj(vec![]));
+        assert_eq!(parse("[]").unwrap().to_string_pretty(), "[]");
+    }
+}

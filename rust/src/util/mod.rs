@@ -1,0 +1,8 @@
+//! In-tree utility substrates (the offline crate cache carries only the
+//! `xla` tree + `anyhow`, so JSON, CLI parsing, benching and property
+//! testing are implemented here — see Cargo.toml note).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;

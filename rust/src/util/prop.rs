@@ -1,0 +1,62 @@
+//! Tiny property-testing harness (proptest is not in the offline cache).
+//!
+//! `check(cases, gen, prop)` draws `cases` random inputs from `gen` using
+//! the deterministic dataset RNG and asserts `prop` on each; on failure it
+//! reports the seed/case so the exact input can be replayed. Used by the
+//! coordinator/mapping/simulator invariant tests.
+
+use crate::datasets::rng::Rng;
+
+/// Run `prop` on `cases` generated inputs. Panics (with the case index and
+/// seed) on the first falsified case.
+pub fn check<T: std::fmt::Debug>(
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let seed = std::env::var("ODIMO_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD1CEu64);
+    for case in 0..cases {
+        let mut rng = Rng::from_stream(seed, 0x9999, case as u64);
+        let input = gen(&mut rng);
+        assert!(
+            prop(&input),
+            "property falsified on case {case} (seed {seed}): {input:?}"
+        );
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::datasets::rng::Rng;
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_vec(rng: &mut Rng, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.uniform(lo, hi)).collect()
+    }
+
+    pub fn cu_vec(rng: &mut Rng, len: usize) -> Vec<u8> {
+        (0..len).map(|_| (rng.below(2)) as u8).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(50, |r| gen::usize_in(r, 1, 10), |&n| n >= 1 && n <= 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property falsified")]
+    fn reports_failure() {
+        check(50, |r| gen::usize_in(r, 0, 10), |&n| n < 10);
+    }
+}

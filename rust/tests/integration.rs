@@ -1,0 +1,189 @@
+//! Integration tests over real AOT artifacts: the full runtime →
+//! coordinator → simulator path. Skipped (with a notice) when
+//! `make artifacts` has not been run.
+//!
+//! Structured as two umbrella tests (one per platform) so each variant's
+//! four executables are XLA-compiled once and shared across sub-checks —
+//! PJRT handles are not `Send`, so a lazy global is not an option.
+
+use odimo::config::ExperimentConfig;
+use odimo::coordinator::{baselines, run_baseline, Baseline, Trainer};
+use odimo::datasets::Split;
+use odimo::mapping::SearchKind;
+use odimo::runtime::StepHparams;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = odimo::repo_root().join("artifacts");
+    if dir.join("diana_resnet20_c10.manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+fn trainer(variant: &str) -> Option<Trainer> {
+    let dir = artifacts_dir()?;
+    let mut cfg = ExperimentConfig::for_variant(variant);
+    cfg.steps_per_epoch = 4;
+    cfg.eval_batches = 2;
+    let client = odimo::runtime::cpu_client().expect("pjrt client");
+    Some(Trainer::new(&client, &dir, cfg).expect("trainer loads"))
+}
+
+fn hp(lam: f32, lr_th: f32) -> StepHparams {
+    StepHparams {
+        lam,
+        cost_sel: 0.0,
+        lr_w: 1e-2,
+        lr_th,
+    }
+}
+
+#[test]
+fn diana_suite() {
+    let Some(tr) = trainer("diana_resnet20_c10") else {
+        return;
+    };
+
+    // -- end-to-end: step, eval, cost report ---------------------------------
+    let mut state = tr.init_state().expect("init");
+    let m = tr.run_epoch(&mut state, hp(0.0, 0.0), 0).expect("epoch");
+    assert!(m.loss.is_finite() && m.loss > 0.0);
+    assert!((0.0..=1.0).contains(&m.acc));
+    assert!(m.cost_lat > 0.0 && m.cost_energy > 0.0);
+    let (acc, loss) = tr.evaluate(&state, Split::Val).expect("eval");
+    assert!((0.0..=1.0).contains(&acc));
+    assert!(loss.is_finite());
+    let (mat, totals) = tr.rt.cost_report(&state).expect("cost");
+    assert_eq!(mat.len(), tr.rt.manifest.layers.len() * 4);
+    assert!(totals[0] > 0.0 && totals[1] > 0.0);
+
+    // -- eval determinism ------------------------------------------------------
+    let (a1, l1) = tr.evaluate(&state, Split::Test).expect("eval");
+    let (a2, l2) = tr.evaluate(&state, Split::Test).expect("eval");
+    assert_eq!(a1, a2);
+    assert_eq!(l1, l2);
+
+    // -- θ freeze roundtrip + drift-free frozen phases ------------------------
+    let mapping = tr.discretize_all(&state).expect("discretize");
+    assert_eq!(mapping.layers.len(), tr.rt.manifest.layers.len());
+    tr.freeze_mapping(&mut state, &mapping).expect("freeze");
+    let mapping2 = tr.discretize_all(&state).expect("discretize again");
+    for (a, b) in mapping.layers.iter().zip(&mapping2.layers) {
+        assert_eq!(a, b, "discretize(freeze(m)) != m at {}", a.layer);
+    }
+    tr.run_epoch(&mut state, hp(0.0, 0.0), 1).expect("epoch");
+    let mapping3 = tr.discretize_all(&state).expect("discretize 3");
+    for (a, b) in mapping.layers.iter().zip(&mapping3.layers) {
+        assert_eq!(a, b, "θ drifted during frozen phase at {}", a.layer);
+    }
+
+    // -- search moves θ ---------------------------------------------------------
+    let mut state = tr.init_state().expect("init");
+    let before = tr.theta_of(&state, "stem").expect("theta");
+    for e in 0..2 {
+        tr.run_epoch(&mut state, hp(5e-5, 0.05), e).expect("epoch");
+    }
+    let after = tr.theta_of(&state, "stem").expect("theta");
+    assert_ne!(before, after, "θ did not move during search");
+
+    // -- strong λ finds a cheaper-than-all-digital mapping ---------------------
+    let lam = (50.0 / tr.rt.manifest.cost_scale.latency_cycles) as f32;
+    for e in 2..6 {
+        tr.run_epoch(&mut state, hp(lam, 0.2), e).expect("epoch");
+    }
+    let mapping = tr.discretize_all(&state).expect("discretize");
+    let (ana, _) = tr.simulate(&mapping);
+    let all0 = baselines::baseline_mapping(&tr, Baseline::AllCu0);
+    let (ana0, _) = tr.simulate(&all0);
+    assert!(
+        ana.total_cycles < ana0.total_cycles,
+        "search under strong λ ({}) did not beat all-digital ({})",
+        ana.total_cycles,
+        ana0.total_cycles
+    );
+
+    // -- baselines distinct & ordered -------------------------------------------
+    let m1 = baselines::baseline_mapping(&tr, Baseline::AllCu1);
+    let mio = baselines::baseline_mapping(&tr, Baseline::IoCu0);
+    let mmc = baselines::baseline_mapping(&tr, Baseline::MinCost);
+    let (a1r, _) = tr.simulate(&m1);
+    let (amc, _) = tr.simulate(&mmc);
+    assert!(a1r.total_cycles < ana0.total_cycles, "analog beats digital");
+    assert!(amc.total_cycles <= ana0.total_cycles);
+    assert!(amc.total_cycles <= a1r.total_cycles);
+    let first = mio
+        .layers
+        .iter()
+        .find(|l| {
+            tr.rt
+                .manifest
+                .layers
+                .iter()
+                .any(|s| s.searchable && s.name == l.layer)
+        })
+        .unwrap();
+    assert!(first.cu_of.iter().all(|&c| c == 0), "IO layer on digital");
+
+    // -- full baseline run produces a complete record ---------------------------
+    let rec = run_baseline(&tr, Baseline::AllCu1).expect("baseline run");
+    assert_eq!(rec.label, "all-ternary");
+    assert!(rec.test_acc >= 0.0);
+    assert!(rec.det_cycles > rec.ana_cycles, "detailed adds overheads");
+    assert!(rec.cu1_channel_frac > 0.9);
+    assert_eq!(rec.per_layer.len(), tr.rt.manifest.layers.len());
+}
+
+#[test]
+fn darkside_suite() {
+    let Some(tr) = trainer("darkside_mbv1_c10") else {
+        return;
+    };
+    assert_eq!(tr.kind, SearchKind::Split);
+    let mut state = tr.init_state().expect("init");
+    for e in 0..2 {
+        tr.run_epoch(&mut state, hp(1e-6, 0.1), e).expect("epoch");
+    }
+    // Eq. 6: every discretized searchable layer must be contiguous
+    let mapping = tr.discretize_all(&state).expect("discretize");
+    for asg in &mapping.layers {
+        assert!(
+            asg.is_contiguous(),
+            "Eq. 6 violated: {} not contiguous: {:?}",
+            asg.layer,
+            asg.cu_of
+        );
+    }
+    // deploy both sims; detailed must exceed analytical
+    let (ana, det) = tr.simulate(&mapping);
+    assert!(det.total_cycles > ana.total_cycles);
+    // corner baselines ordered the Darkside way: all-DW is much faster
+    let m0 = baselines::baseline_mapping(&tr, Baseline::AllCu0);
+    let m1 = baselines::baseline_mapping(&tr, Baseline::AllCu1);
+    let (a0, _) = tr.simulate(&m0);
+    let (a1, _) = tr.simulate(&m1);
+    assert!(
+        a1.total_cycles * 3 < a0.total_cycles,
+        "DWE mapping ({}) should be >3x faster than std-conv-on-cluster ({})",
+        a1.total_cycles,
+        a0.total_cycles
+    );
+}
+
+#[test]
+fn prune_variant_loads_and_steps() {
+    let Some(tr) = trainer("diana_resnet20_c10_prune") else {
+        return;
+    };
+    assert_eq!(tr.kind, SearchKind::Prune);
+    let mut state = tr.init_state().expect("init");
+    let m = tr.run_epoch(&mut state, hp(1e-6, 0.05), 0).expect("epoch");
+    assert!(m.loss.is_finite());
+    let mapping = tr.discretize_all(&state).expect("discretize");
+    // pruned-geometry simulation must not exceed the unpruned all-digital net
+    let (ana, _) = tr.simulate(&mapping);
+    let all_keep = baselines::baseline_mapping(&tr, Baseline::AllCu0);
+    let (ana_keep, _) = tr.simulate(&all_keep);
+    assert!(ana.total_cycles <= ana_keep.total_cycles);
+}

@@ -1,0 +1,317 @@
+//! Property-based invariant tests (hand-rolled harness in
+//! `odimo::util::prop` — proptest is not in the offline crate cache).
+//!
+//! These cover the coordinator-adjacent pure logic: discretization,
+//! one-hot construction, Eq. 6 contiguity, the Fig. 4 reorg pass, the
+//! simulators, Pareto extraction, and dataset determinism.
+
+use odimo::datasets::rng::Rng;
+use odimo::datasets::{Split, SynthDataset};
+use odimo::mapping::{discretize, expected_counts, one_hot_theta, reorganize, SearchKind};
+use odimo::pareto::{is_pareto, pareto_front, Point};
+use odimo::soc::{analytical, detailed, Cu, Layer, LayerAssignment, LayerType, Mapping, Platform};
+use odimo::util::prop::{check, gen};
+
+fn rand_layer(rng: &mut Rng, name: &str) -> Layer {
+    let hw = [4usize, 8, 16, 32][rng.below(4)];
+    Layer {
+        name: name.to_string(),
+        ltype: LayerType::Conv,
+        cin: gen::usize_in(rng, 1, 64),
+        cout: gen::usize_in(rng, 1, 64),
+        k: [1usize, 3, 5][rng.below(3)],
+        ox: hw,
+        oy: hw,
+        stride: 1,
+        searchable: true,
+    }
+}
+
+fn rand_mapping(rng: &mut Rng, layers: &[Layer], platform: Platform) -> Mapping {
+    Mapping {
+        platform,
+        layers: layers
+            .iter()
+            .map(|l| LayerAssignment {
+                layer: l.name.clone(),
+                cu_of: gen::cu_vec(rng, l.cout),
+            })
+            .collect(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// mapping / θ invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_discretize_partitions_channels() {
+    check(
+        200,
+        |r| {
+            let c = gen::usize_in(r, 1, 96);
+            (c, gen::f32_vec(r, 2 * c, -3.0, 3.0))
+        },
+        |(c, theta)| {
+            let a = discretize(SearchKind::Channel, theta, *c, "l");
+            a.cu_of.len() == *c && a.count(0) + a.count(1) == *c
+        },
+    );
+}
+
+#[test]
+fn prop_one_hot_roundtrips_channel() {
+    check(
+        200,
+        |r| {
+            let c = gen::usize_in(r, 1, 64);
+            (c, gen::f32_vec(r, 2 * c, -2.0, 2.0))
+        },
+        |(c, theta)| {
+            let a = discretize(SearchKind::Channel, theta, *c, "l");
+            let oh = one_hot_theta(SearchKind::Channel, &a);
+            discretize(SearchKind::Channel, &oh, *c, "l") == a
+        },
+    );
+}
+
+#[test]
+fn prop_split_always_contiguous() {
+    check(
+        200,
+        |r| {
+            let c = gen::usize_in(r, 1, 128);
+            (c, gen::f32_vec(r, c + 1, -4.0, 4.0))
+        },
+        |(c, theta)| {
+            let a = discretize(SearchKind::Split, theta, *c, "l");
+            a.is_contiguous()
+                && one_hot_theta(SearchKind::Split, &a).len() == c + 1
+                && discretize(
+                    SearchKind::Split,
+                    &one_hot_theta(SearchKind::Split, &a),
+                    *c,
+                    "l",
+                ) == a
+        },
+    );
+}
+
+#[test]
+fn prop_expected_counts_sum_to_cout() {
+    for kind in [SearchKind::Channel, SearchKind::Split, SearchKind::Layerwise] {
+        check(
+            100,
+            |r| {
+                let c = gen::usize_in(r, 1, 64);
+                (c, gen::f32_vec(r, kind.theta_len(c), -3.0, 3.0))
+            },
+            |(c, theta)| {
+                let (n0, n1) = expected_counts(kind, theta, *c);
+                n0 >= -1e-6 && n1 >= -1e-6 && (n0 + n1 - *c as f64).abs() < 1e-6
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_reorg_preserves_function() {
+    check(
+        200,
+        |r| {
+            let c = gen::usize_in(r, 1, 96);
+            gen::cu_vec(r, c)
+        },
+        |cu_of| {
+            let a = LayerAssignment {
+                layer: "l".into(),
+                cu_of: cu_of.clone(),
+            };
+            let m = Mapping {
+                platform: Platform::Diana,
+                layers: vec![a.clone()],
+            };
+            let r = reorganize(&m);
+            let lr = &r.layers[0];
+            // valid permutation, contiguous result, counts preserved,
+            // sub-layers tile [0, C)
+            let after = lr.reorganized_assignment(&a);
+            let covered: usize = lr.sub_layers.iter().map(|s| s.end - s.start).sum();
+            lr.is_valid_permutation()
+                && after.is_contiguous()
+                && after.count(0) == a.count(0)
+                && after.count(1) == a.count(1)
+                && covered == cu_of.len()
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// simulator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_cu_cycles_monotone_in_channels() {
+    check(
+        100,
+        |r| (rand_layer(r, "l"), gen::usize_in(r, 1, 63)),
+        |(layer, n)| {
+            [
+                Cu::DianaDigital,
+                Cu::DianaAnalog,
+                Cu::DarksideCluster,
+                Cu::DarksideDwe,
+            ]
+            .iter()
+            .all(|&cu| {
+                analytical::cu_cycles(cu, layer, *n)
+                    <= analytical::cu_cycles(cu, layer, n + 1)
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_detailed_never_below_analytical() {
+    check(
+        100,
+        |r| {
+            let layers: Vec<Layer> = (0..gen::usize_in(r, 1, 6))
+                .map(|i| rand_layer(r, &format!("l{i}")))
+                .collect();
+            let platform = if r.below(2) == 0 {
+                Platform::Diana
+            } else {
+                Platform::Darkside
+            };
+            let m = rand_mapping(r, &layers, platform);
+            (layers, m)
+        },
+        |(layers, m)| {
+            let a = analytical::execute(layers, m, &[]);
+            let d = detailed::execute(layers, m, &[]);
+            d.total_cycles >= a.total_cycles && d.energy_uj >= 0.0
+        },
+    );
+}
+
+#[test]
+fn prop_energy_has_idle_floor() {
+    check(
+        100,
+        |r| {
+            let layers = vec![rand_layer(r, "l")];
+            let m = rand_mapping(r, &layers, Platform::Diana);
+            (layers, m)
+        },
+        |(layers, m)| {
+            let rep = analytical::execute(layers, m, &[]);
+            let (_, p_idle, freq) = analytical::power(Platform::Diana);
+            let idle_floor = p_idle * rep.total_cycles as f64 / freq * 1e-3;
+            rep.energy_uj >= idle_floor - 1e-9
+        },
+    );
+}
+
+#[test]
+fn prop_utilization_bounded() {
+    check(
+        100,
+        |r| {
+            let layers: Vec<Layer> = (0..gen::usize_in(r, 1, 5))
+                .map(|i| rand_layer(r, &format!("l{i}")))
+                .collect();
+            let m = rand_mapping(r, &layers, Platform::Darkside);
+            (layers, m)
+        },
+        |(layers, m)| {
+            let d = detailed::execute(layers, m, &[]);
+            d.utilization.iter().all(|&u| (0.0..=1.0 + 1e-9).contains(&u))
+        },
+    );
+}
+
+#[test]
+fn prop_sim_deterministic() {
+    check(
+        50,
+        |r| {
+            let layers = vec![rand_layer(r, "a"), rand_layer(r, "b")];
+            let m = rand_mapping(r, &layers, Platform::Diana);
+            (layers, m)
+        },
+        |(layers, m)| {
+            let d1 = detailed::execute(layers, m, &[]);
+            let d2 = detailed::execute(layers, m, &[]);
+            d1.total_cycles == d2.total_cycles && d1.energy_uj == d2.energy_uj
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// pareto invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pareto_front_is_antichain_and_complete() {
+    check(
+        200,
+        |r| {
+            let n = gen::usize_in(r, 1, 40);
+            (0..n)
+                .map(|_| Point {
+                    cost: r.uniform(0.0, 100.0) as f64,
+                    acc: r.uniform(0.0, 1.0) as f64,
+                })
+                .collect::<Vec<_>>()
+        },
+        |pts| {
+            let front = pareto_front(pts);
+            // every front point is non-dominated
+            let all_pareto = front.iter().all(|&i| is_pareto(&pts[i], pts));
+            // every non-front point is dominated by some front point
+            let complete = (0..pts.len()).all(|i| {
+                front.contains(&i)
+                    || front.iter().any(|&j| pts[j].dominates(&pts[i]))
+                    // duplicates of a front point are dropped but not dominated
+                    || front.iter().any(|&j| pts[j] == pts[i])
+            });
+            all_pareto && complete
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// dataset invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_dataset_deterministic_and_seed_sensitive() {
+    check(
+        20,
+        |r| (r.next_u64() % 1000, gen::usize_in(r, 2, 50)),
+        |&(seed, classes)| {
+            let d1 = SynthDataset::new(8, classes, 1.0, seed);
+            let d2 = SynthDataset::new(8, classes, 1.0, seed);
+            let d3 = SynthDataset::new(8, classes, 1.0, seed + 1);
+            let (x1, y1) = d1.batch(Split::Train, 0, 4);
+            let (x2, y2) = d2.batch(Split::Train, 0, 4);
+            let (x3, _) = d3.batch(Split::Train, 0, 4);
+            x1 == x2 && y1 == y2 && x1 != x3
+        },
+    );
+}
+
+#[test]
+fn prop_labels_in_range() {
+    check(
+        30,
+        |r| {
+            let classes = gen::usize_in(r, 2, 100);
+            let d = SynthDataset::new(8, classes, 1.0, r.next_u64());
+            let (_, y) = d.batch(Split::Val, 7, 32);
+            (classes, y)
+        },
+        |(classes, y)| y.iter().all(|&l| (l as usize) < *classes && l >= 0),
+    );
+}
