@@ -63,7 +63,7 @@ fn main() -> Result<()> {
             .map(|s| {
                 format!(
                     "{}[{}..{})",
-                    if s.cu == 0 { "cluster" } else { "dwe" },
+                    tr.platform.cus()[s.cu as usize].name,
                     s.start,
                     s.end
                 )
@@ -79,12 +79,16 @@ fn main() -> Result<()> {
         ana.total_cycles, ana.energy_uj
     );
     println!(
-        "   detailed   : {:>9} cycles  {:>8.2} uJ  ({:.3} ms @200MHz, util {:.0}%/{:.0}%)",
+        "   detailed   : {:>9} cycles  {:>8.2} uJ  ({:.3} ms @{}MHz, util {})",
         det.total_cycles,
         det.energy_uj,
         det.latency_ms,
-        100.0 * det.utilization[0],
-        100.0 * det.utilization[1],
+        tr.platform.freq_mhz(),
+        det.utilization
+            .iter()
+            .map(|u| format!("{:.0}%", 100.0 * u))
+            .collect::<Vec<_>>()
+            .join("/"),
     );
     println!(
         "   model underestimation: {:.1}% (this gap is what Table III quantifies)",

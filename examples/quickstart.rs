@@ -56,21 +56,20 @@ fn main() -> Result<()> {
 
     // --- baseline for context -------------------------------------------
     println!("[3/4] all-8bit baseline");
-    let base = run_baseline(&tr, Baseline::AllCu0)?;
+    let base = run_baseline(&tr, Baseline::AllOn(0))?;
 
     // --- report ----------------------------------------------------------
     println!("\n[4/4] results (detailed SoC simulator):");
     for r in [&base, &rec] {
         println!(
             "  {:<12} acc {:>6.2}%  latency {:>7.3} ms  energy {:>8.2} uJ  \
-             util D/A {:>3.0}%/{:<3.0}%  analog-ch {:>4.1}%",
+             util {}  offload-ch {:>4.1}%",
             r.label,
             100.0 * r.test_acc,
             r.det_latency_ms,
             r.det_energy_uj,
-            100.0 * r.util_cu0,
-            100.0 * r.util_cu1,
-            100.0 * r.cu1_channel_frac,
+            r.util_display(),
+            100.0 * r.offload_frac,
         );
     }
     let speedup = base.det_latency_ms / rec.det_latency_ms;

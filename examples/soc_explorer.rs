@@ -1,80 +1,114 @@
 //! SoC explorer: the hardware substrate without any training.
 //!
-//! Walks representative ResNet/MobileNet layer geometries through both
-//! SoC simulators, printing per-CU latency curves as a function of the
-//! channel split, the min-latency split (what the Min-Cost baseline
-//! picks), and the analytical-vs-detailed gap. Runs with no artifacts —
-//! pure Rust.
+//! Walks representative ResNet/MobileNet layer geometries through the
+//! simulators of every requested platform — by default all three
+//! built-ins, including the JSON-defined tri-CU `trident` SoC — printing
+//! per-CU latency curves as a function of the channel split, the
+//! min-latency partition (what the Min-Cost baseline picks), and the
+//! analytical-vs-detailed gap. Runs with no artifacts — pure Rust.
 //!
 //! ```bash
-//! cargo run --release --offline --example soc_explorer
+//! cargo run --release --offline --example soc_explorer            # all built-ins
+//! cargo run --release --offline --example soc_explorer -- trident # one platform
 //! ```
 
+use odimo::coordinator::baselines::min_cost_counts;
 use odimo::report::ascii_table;
 use odimo::soc::{analytical, detailed, Layer, LayerAssignment, LayerType, Mapping, Platform};
 
-fn split_mapping(platform: Platform, layer: &Layer, n1: usize) -> Mapping {
+/// `n_off` of the channels leave column 0, round-robin over the rest.
+fn split_mapping(platform: Platform, layer: &Layer, n_off: usize) -> Mapping {
     Mapping {
         platform,
-        layers: vec![LayerAssignment {
-            layer: layer.name.clone(),
-            cu_of: (0..layer.cout)
-                .map(|c| u8::from(c >= layer.cout - n1))
-                .collect(),
-        }],
+        layers: vec![LayerAssignment::offload_round_robin(
+            &layer.name,
+            layer.cout,
+            n_off,
+            platform.n_cus(),
+        )],
     }
 }
 
 fn explore(platform: Platform, layer: &Layer) {
     let cus = platform.cus();
     println!(
-        "\n-- {:?}: {} (cin {}, cout {}, {}x{} @{}x{}) --",
-        platform, layer.name, layer.cin, layer.cout, layer.k, layer.k, layer.ox, layer.oy
+        "\n-- {}: {} (cin {}, cout {}, {}x{} @{}x{}) --",
+        platform.name(),
+        layer.name,
+        layer.cin,
+        layer.cout,
+        layer.k,
+        layer.k,
+        layer.ox,
+        layer.oy
     );
     let mut rows = Vec::new();
-    let mut best = (u64::MAX, 0usize);
     for frac in [0.0, 0.25, 0.5, 0.75, 1.0] {
-        let n1 = (layer.cout as f64 * frac) as usize;
-        let m = split_mapping(platform, layer, n1);
+        let n_off = (layer.cout as f64 * frac) as usize;
+        let m = split_mapping(platform, layer, n_off);
         let a = analytical::execute(std::slice::from_ref(layer), &m, &[]);
         let d = detailed::execute(std::slice::from_ref(layer), &m, &[]);
-        if a.total_cycles < best.0 {
-            best = (a.total_cycles, n1);
+        let mut row = vec![a.layers[0]
+            .per_cu
+            .iter()
+            .map(|c| c.channels.to_string())
+            .collect::<Vec<_>>()
+            .join("/")];
+        for c in &a.layers[0].per_cu {
+            row.push(c.cycles.to_string());
         }
-        rows.push(vec![
-            format!("{}/{}", layer.cout - n1, n1),
-            a.layers[0].per_cu[0].cycles.to_string(),
-            a.layers[0].per_cu[1].cycles.to_string(),
-            a.total_cycles.to_string(),
-            d.total_cycles.to_string(),
-            format!("{:.2}", a.energy_uj),
-        ]);
+        row.push(a.total_cycles.to_string());
+        row.push(d.total_cycles.to_string());
+        row.push(format!("{:.2}", a.energy_uj));
+        rows.push(row);
     }
-    let h0 = format!("{}ch/{}ch", cus[0].label(), cus[1].label());
-    let h1 = format!("cyc {}", cus[0].label());
-    let h2 = format!("cyc {}", cus[1].label());
-    let headers: Vec<&str> = vec![&h0, &h1, &h2, "layer cyc (ana)", "layer cyc (det)", "E [uJ]"];
-    println!("{}", ascii_table(&headers, &rows));
-    // exhaustive min-cost split (what the Min-Cost baseline computes)
-    let mut opt = (u64::MAX, 0usize);
-    for n1 in 0..=layer.cout {
-        let m = split_mapping(platform, layer, n1);
-        let a = analytical::execute(std::slice::from_ref(layer), &m, &[]);
-        if a.total_cycles < opt.0 {
-            opt = (a.total_cycles, n1);
-        }
+    let mut headers: Vec<String> = vec![format!(
+        "ch {}",
+        cus.iter().map(|c| c.name.as_str()).collect::<Vec<_>>().join("/")
+    )];
+    for cu in cus {
+        headers.push(format!("cyc {}", cu.name));
     }
+    headers.push("layer cyc (ana)".into());
+    headers.push("layer cyc (det)".into());
+    headers.push("E [uJ]".into());
+    let header_refs: Vec<&str> = headers.iter().map(|h| h.as_str()).collect();
+    println!("{}", ascii_table(&header_refs, &rows));
+    // the min-cost partition (what the Min-Cost baseline computes)
+    let counts = min_cost_counts(platform, layer, false);
+    let m = Mapping {
+        platform,
+        layers: vec![{
+            let mut cu_of = Vec::new();
+            for (cu, &n) in counts.iter().enumerate() {
+                cu_of.extend(std::iter::repeat(cu as u8).take(n));
+            }
+            LayerAssignment {
+                layer: layer.name.clone(),
+                cu_of,
+            }
+        }],
+    };
+    let a = analytical::execute(std::slice::from_ref(layer), &m, &[]);
+    let parts: Vec<String> = counts
+        .iter()
+        .zip(cus)
+        .map(|(n, cu)| format!("{n} ch on {}", cu.name))
+        .collect();
     println!(
-        "   min-latency split: {} ch on {}, {} ch on {} ({} cycles)",
-        layer.cout - opt.1,
-        cus[0].label(),
-        opt.1,
-        cus[1].label(),
-        opt.0
+        "   min-latency partition: {} ({} cycles)",
+        parts.join(", "),
+        a.total_cycles
     );
 }
 
 fn main() {
+    let requested: Vec<String> = std::env::args().skip(1).collect();
+    let names: Vec<String> = if requested.is_empty() {
+        odimo::soc::platform_names()
+    } else {
+        requested
+    };
     let resnet_layers = [
         Layer {
             name: "res-early".into(),
@@ -99,10 +133,7 @@ fn main() {
             searchable: true,
         },
     ];
-    for l in &resnet_layers {
-        explore(Platform::Diana, l);
-    }
-    let mbv1 = Layer {
+    let mb_block = Layer {
         name: "mb-block".into(),
         ltype: LayerType::Search,
         cin: 64,
@@ -113,7 +144,24 @@ fn main() {
         stride: 1,
         searchable: true,
     };
-    explore(Platform::Darkside, &mbv1);
-    println!("\n(the detailed column is always above the analytical one — \
-              that bias is the Table III 'error')");
+    for name in &names {
+        let platform = match Platform::get(name) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("skipping '{name}': {e}");
+                continue;
+            }
+        };
+        if platform.name() == "diana" {
+            for l in &resnet_layers {
+                explore(platform, l);
+            }
+        } else {
+            explore(platform, &mb_block);
+        }
+    }
+    println!(
+        "\n(the detailed column is always above the analytical one — \
+         that bias is the Table III 'error')"
+    );
 }

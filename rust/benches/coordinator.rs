@@ -31,16 +31,16 @@ fn main() {
     // --- θ discretization / freezing -------------------------------------
     let theta: Vec<f32> = (0..512).map(|i| ((i * 37 % 100) as f32 - 50.0) / 25.0).collect();
     quick("discretize channel θ (256 ch)", || {
-        std::hint::black_box(discretize(SearchKind::Channel, &theta, 256, "l"));
+        std::hint::black_box(discretize(SearchKind::Channel, &theta, 256, 2, "l"));
     });
-    let asg = discretize(SearchKind::Channel, &theta, 256, "l");
+    let asg = discretize(SearchKind::Channel, &theta, 256, 2, "l");
     quick("one_hot_theta (256 ch)", || {
-        std::hint::black_box(one_hot_theta(SearchKind::Channel, &asg));
+        std::hint::black_box(one_hot_theta(SearchKind::Channel, &asg, 2));
     });
 
     // --- Fig. 4 reorg pass -------------------------------------------------
     let mapping = Mapping {
-        platform: Platform::Diana,
+        platform: Platform::diana(),
         layers: (0..20)
             .map(|i| LayerAssignment {
                 layer: format!("l{i}"),

@@ -1,25 +1,25 @@
 //! Bench: the SoC simulators (Table III's engine).
 //!
 //! Measures the throughput of the analytical model and the detailed
-//! event-driven simulator over the micro-benchmark layer corpus, then
-//! prints the Table III correlation summary itself (fast — no training).
+//! event-driven simulator over the micro-benchmark layer corpus — on
+//! every built-in platform, including the tri-CU `trident` — then prints
+//! the Table III correlation summary itself (fast — no training).
 
 use odimo::experiments::microbench_layers;
 use odimo::soc::{analytical, detailed, Layer, LayerAssignment, Mapping, Platform};
-use odimo::stats;
 use odimo::util::bench::quick;
 
-fn mapping_for(layers: &[Layer], platform: Platform, frac1: f64) -> Mapping {
+/// Spread `frac_off` of each layer's channels off column 0, round-robin
+/// over the remaining CUs.
+fn mapping_for(layers: &[Layer], platform: Platform, frac_off: f64) -> Mapping {
+    let k = platform.n_cus();
     Mapping {
         platform,
         layers: layers
             .iter()
             .map(|l| {
-                let n1 = (l.cout as f64 * frac1) as usize;
-                LayerAssignment {
-                    layer: l.name.clone(),
-                    cu_of: (0..l.cout).map(|c| u8::from(c >= l.cout - n1)).collect(),
-                }
+                let n_off = (l.cout as f64 * frac_off) as usize;
+                LayerAssignment::offload_round_robin(&l.name, l.cout, n_off, k)
             })
             .collect(),
     }
@@ -29,8 +29,9 @@ fn main() {
     println!("== hw_models bench ==");
     let resnet = microbench_layers("resnet");
     let mbv1 = microbench_layers("mobilenet");
-    let m_diana = mapping_for(&resnet, Platform::Diana, 0.5);
-    let m_dark = mapping_for(&mbv1, Platform::Darkside, 0.5);
+    let m_diana = mapping_for(&resnet, Platform::diana(), 0.5);
+    let m_dark = mapping_for(&mbv1, Platform::darkside(), 0.5);
+    let m_tri = mapping_for(&mbv1, Platform::trident(), 0.5);
 
     quick("analytical::execute resnet(10L, diana)", || {
         std::hint::black_box(analytical::execute(&resnet, &m_diana, &[]));
@@ -44,12 +45,18 @@ fn main() {
     quick("detailed::execute   mbv1(16L, darkside)", || {
         std::hint::black_box(detailed::execute(&mbv1, &m_dark, &[]));
     });
+    quick("analytical::execute mbv1(16L, trident/3CU)", || {
+        std::hint::black_box(analytical::execute(&mbv1, &m_tri, &[]));
+    });
+    quick("detailed::execute   mbv1(16L, trident/3CU)", || {
+        std::hint::black_box(detailed::execute(&mbv1, &m_tri, &[]));
+    });
 
     // whole-network throughput: simulated networks per second at ODiMO
     // sweep granularity (what the λ sweep pays per candidate)
     let r = quick("detailed::execute full sweep (21 splits)", || {
         for i in 0..=20 {
-            let m = mapping_for(&resnet, Platform::Diana, i as f64 / 20.0);
+            let m = mapping_for(&resnet, Platform::diana(), i as f64 / 20.0);
             std::hint::black_box(detailed::execute(&resnet, &m, &[]));
         }
     });
@@ -58,45 +65,17 @@ fn main() {
         21.0 / (r.mean_ns / 1e9)
     );
 
-    // and the actual Table III summary, for convenience
+    // and the actual Table III summary, via the same code path as
+    // `repro exp table3` (so the two cannot diverge)
     println!("\nTable III (analytical vs detailed):");
-    for (platform, style, col) in [
-        (Platform::Diana, "resnet", 0u8),
-        (Platform::Diana, "resnet", 1),
-        (Platform::Darkside, "mobilenet", 0),
-        (Platform::Darkside, "mobilenet", 1),
-    ] {
-        let layers = microbench_layers(style);
-        let mut pred = Vec::new();
-        let mut meas = Vec::new();
-        for l in &layers {
-            if col == 1
-                && platform == Platform::Darkside
-                && l.ltype != odimo::soc::LayerType::Dw
-            {
-                continue;
-            }
-            let mut ll = l.clone();
-            for frac in [0.25, 0.5, 1.0] {
-                let n = ((l.cout as f64 * frac) as usize).max(1);
-                ll.cout = n;
-                let m = Mapping {
-                    platform,
-                    layers: vec![LayerAssignment::all_on(&l.name, n, col)],
-                };
-                let a = analytical::execute(std::slice::from_ref(&ll), &m, &[]);
-                let d = detailed::execute(std::slice::from_ref(&ll), &m, &[]);
-                pred.push(a.layers[0].per_cu[col as usize].cycles as f64);
-                meas.push(d.layers[0].per_cu[col as usize].cycles as f64);
-            }
-        }
+    for r in odimo::experiments::table3_rows().expect("built-in platforms resolve") {
         println!(
-            "  {:?} cu{}: MAPE {:>5.1}%  Pearson {:>5.1}%  Spearman {:>5.1}%",
-            platform,
-            col,
-            stats::mape(&pred, &meas),
-            100.0 * stats::pearson(&pred, &meas),
-            100.0 * stats::spearman(&pred, &meas)
+            "  {}/{}: MAPE {:>5.1}%  Pearson {:>5.1}%  Spearman {:>5.1}%",
+            r.platform,
+            r.cu,
+            r.mape,
+            100.0 * r.pearson,
+            100.0 * r.spearman
         );
     }
 }

@@ -30,17 +30,25 @@ impl CostTarget {
     }
 
     pub fn parse(s: &str) -> Result<Self> {
-        match s {
-            "latency" => Ok(CostTarget::Latency),
-            "energy" => Ok(CostTarget::Energy),
-            other => bail!("cost_target must be 'latency' or 'energy', got '{other}'"),
-        }
+        s.parse()
     }
 
     pub fn name(self) -> &'static str {
         match self {
             CostTarget::Latency => "latency",
             CostTarget::Energy => "energy",
+        }
+    }
+}
+
+impl std::str::FromStr for CostTarget {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "latency" => Ok(CostTarget::Latency),
+            "energy" => Ok(CostTarget::Energy),
+            other => bail!("cost_target must be 'latency' or 'energy', got '{other}'"),
         }
     }
 }

@@ -1,15 +1,17 @@
-//! Baseline mappings the paper compares against (Sec. V-A).
+//! Baseline mappings the paper compares against (Sec. V-A), enumerated
+//! from the platform descriptor rather than hardcoded per SoC.
 //!
-//! * **AllCu0** — everything on CU column 0: DIANA "All-8bit" / Darkside
-//!   "Standard-Conv on the cluster".
-//! * **AllCu1** — everything on CU column 1: DIANA "All-Ternary" /
-//!   Darkside "all depthwise on the DWE" (with the fixed pointwise layers
-//!   still on the cluster — i.e. the vanilla MobileNetV1 schedule).
-//! * **IoCu0** — DIANA heuristic from [8]: first (and the always-digital
-//!   FC last) layer on the 8-bit CU, backbone on the AIMC.
+//! * **AllOn(i)** — everything on CU column `i`. Column 0 is DIANA
+//!   "All-8bit" / Darkside "Standard-Conv on the cluster"; column 1 is
+//!   DIANA "All-Ternary" / Darkside "all depthwise on the DWE" (with the
+//!   fixed pointwise layers still on the cluster — i.e. the vanilla
+//!   MobileNetV1 schedule). An N-CU platform gets one such corner per CU.
+//! * **IoSplit** — DIANA heuristic from [8]: first (and the always-CU0
+//!   FC last) layer on the 8-bit CU, backbone on the second CU.
 //! * **MinCost** — the accuracy-unaware optimum: per layer, the channel
-//!   split minimizing the layer's analytical latency (ties resolved
-//!   toward CU 0 / digital, as the paper specifies).
+//!   partition minimizing the layer's analytical latency (ties resolved
+//!   toward CU 0 / digital, as the paper specifies). Exhaustive for two
+//!   CUs; greedy channel-by-channel (same tie rule) beyond that.
 //!
 //! Every baseline trains its W (with θ frozen one-hot to the baseline
 //! mapping) for warmup+final epochs — the same budget an ODiMO point gets.
@@ -18,7 +20,7 @@ use anyhow::Result;
 
 use crate::datasets::Split;
 use crate::mapping::SearchKind;
-use crate::soc::{analytical::cu_cycles, LayerAssignment, Mapping};
+use crate::soc::{analytical::cu_cycles, Layer, LayerAssignment, Mapping, Platform};
 
 use super::odimo::run_phase;
 use super::results::RunRecord;
@@ -26,87 +28,177 @@ use super::trainer::Trainer;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Baseline {
-    AllCu0,
-    AllCu1,
-    IoCu0,
+    /// every searchable layer entirely on CU column `.0`
+    AllOn(u8),
+    /// IO layers on CU 0, backbone on CU 1 (the DIANA heuristic)
+    IoSplit,
+    /// per-layer analytical-latency-optimal channel partition
     MinCost,
 }
 
 impl Baseline {
-    pub fn label(self, platform: &str) -> &'static str {
-        match (self, platform) {
-            (Baseline::AllCu0, "diana") => "all-8bit",
-            (Baseline::AllCu1, "diana") => "all-ternary",
-            (Baseline::IoCu0, _) => "io-8bit-backbone-ternary",
-            (Baseline::MinCost, _) => "min-cost",
-            (Baseline::AllCu0, _) => "std-conv-cluster",
-            (Baseline::AllCu1, _) => "dw-separable",
+    /// Display label; the DIANA/Darkside names match the paper figures.
+    pub fn label(self, platform: Platform) -> String {
+        match (platform.name(), self) {
+            ("diana", Baseline::AllOn(0)) => "all-8bit".into(),
+            ("diana", Baseline::AllOn(1)) => "all-ternary".into(),
+            ("darkside", Baseline::AllOn(0)) => "std-conv-cluster".into(),
+            ("darkside", Baseline::AllOn(1)) => "dw-separable".into(),
+            ("diana", Baseline::IoSplit) => "io-8bit-backbone-ternary".into(),
+            (_, Baseline::AllOn(i)) => {
+                let cu = platform
+                    .cus()
+                    .get(i as usize)
+                    .map(|c| c.name.as_str())
+                    .unwrap_or("?");
+                format!("all-{cu}")
+            }
+            (_, Baseline::IoSplit) => {
+                let cus = platform.cus();
+                format!(
+                    "io-{}-backbone-{}",
+                    cus[0].name,
+                    cus.get(1).map(|c| c.name.as_str()).unwrap_or("?")
+                )
+            }
+            (_, Baseline::MinCost) => "min-cost".into(),
         }
     }
 
-    /// Baselines applicable to a platform.
-    pub fn for_platform(platform: &str) -> Vec<Baseline> {
-        match platform {
-            "diana" => vec![
-                Baseline::AllCu0,
-                Baseline::AllCu1,
-                Baseline::IoCu0,
-                Baseline::MinCost,
-            ],
-            _ => vec![Baseline::AllCu0, Baseline::AllCu1, Baseline::MinCost],
+    /// Baselines applicable to a platform: one all-on corner per CU, the
+    /// IO heuristic where it is defined (DIANA), and min-cost everywhere.
+    pub fn for_platform(platform: Platform) -> Vec<Baseline> {
+        let mut out: Vec<Baseline> = (0..platform.n_cus() as u8).map(Baseline::AllOn).collect();
+        if platform.name() == "diana" {
+            out.push(Baseline::IoSplit);
         }
+        out.push(Baseline::MinCost);
+        out
     }
 }
 
-/// Minimum-latency channel split for one layer (accuracy-unaware):
-/// minimize `max(lat_cu0(n0), lat_cu1(C-n0))` (or the sum when the two
-/// stages are sequential), maximizing `n0` on ties.
-pub fn min_cost_split(tr: &Trainer, li: usize) -> usize {
-    let layer = &tr.layers[li];
-    let cus = tr.platform.cus();
-    let sequential = tr.seq_layers.iter().any(|s| s == &layer.name);
-    let c = layer.cout;
-    let mut best_n0 = 0usize;
-    let mut best_cost = u64::MAX;
-    for n0 in 0..=c {
-        let c0 = cu_cycles(cus[0], layer, n0);
-        let c1 = cu_cycles(cus[1], layer, c - n0);
-        let cost = if sequential { c0 + c1 } else { c0.max(c1) };
-        if cost < best_cost || (cost == best_cost && n0 > best_n0) {
-            best_cost = cost;
-            best_n0 = n0;
-        }
+/// CUs of `platform` whose descriptor claims support for `layer`'s op.
+/// A layer nothing claims still has to run somewhere: column 0 hosts it.
+pub fn eligible_cus(platform: Platform, layer: &Layer) -> Vec<bool> {
+    let mut eligible: Vec<bool> = platform
+        .cus()
+        .iter()
+        .map(|cu| cu.supports(layer.ltype))
+        .collect();
+    if !eligible.iter().any(|&e| e) {
+        eligible[0] = true;
     }
-    best_n0
+    eligible
+}
+
+/// Minimum-latency channel partition for one layer (accuracy-unaware):
+/// minimize `max_i lat_i(n_i)` (or the sum when the stages are
+/// sequential) over the CUs that support the layer's op (per the
+/// descriptor's `ops` list). Returns per-CU channel counts summing to
+/// `layer.cout`.
+///
+/// Two eligible CUs: exhaustive over the split point, maximizing the
+/// lower column on ties (the paper's rule). More: greedy
+/// channel-by-channel assignment with the same lowest-column tie rule.
+pub fn min_cost_counts(platform: Platform, layer: &Layer, sequential: bool) -> Vec<usize> {
+    let cus = platform.cus();
+    let k = cus.len();
+    let c = layer.cout;
+    let eligible = eligible_cus(platform, layer);
+    let cols: Vec<usize> = (0..k).filter(|&i| eligible[i]).collect();
+    let objective = |counts: &[usize]| -> u64 {
+        let per: Vec<u64> = cus
+            .iter()
+            .zip(counts)
+            .map(|(cu, &n)| cu_cycles(cu, layer, n))
+            .collect();
+        if sequential {
+            per.iter().sum()
+        } else {
+            per.iter().copied().max().unwrap_or(0)
+        }
+    };
+    if cols.len() == 1 {
+        let mut counts = vec![0usize; k];
+        counts[cols[0]] = c;
+        return counts;
+    }
+    if cols.len() == 2 {
+        let (a, b) = (cols[0], cols[1]);
+        let mut best = vec![0usize; k];
+        best[b] = c;
+        let mut best_cost = u64::MAX;
+        for n_a in 0..=c {
+            let mut counts = vec![0usize; k];
+            counts[a] = n_a;
+            counts[b] = c - n_a;
+            let cost = objective(&counts);
+            if cost < best_cost || (cost == best_cost && n_a > best[a]) {
+                best_cost = cost;
+                best = counts;
+            }
+        }
+        return best;
+    }
+    // N-way greedy: place channels one at a time where they hurt least
+    let mut counts = vec![0usize; k];
+    for _ in 0..c {
+        let mut best_i = cols[0];
+        let mut best_cost = u64::MAX;
+        for &i in &cols {
+            counts[i] += 1;
+            let cost = objective(&counts);
+            counts[i] -= 1;
+            if cost < best_cost {
+                best_cost = cost;
+                best_i = i;
+            }
+        }
+        counts[best_i] += 1;
+    }
+    counts
+}
+
+/// Contiguous assignment from per-CU counts: `n_0` channels on CU 0, then
+/// `n_1` on CU 1, ...
+fn assignment_from_counts(layer: &str, counts: &[usize]) -> LayerAssignment {
+    let mut cu_of = Vec::with_capacity(counts.iter().sum());
+    for (cu, &n) in counts.iter().enumerate() {
+        cu_of.extend(std::iter::repeat(cu as u8).take(n));
+    }
+    LayerAssignment {
+        layer: layer.to_string(),
+        cu_of,
+    }
 }
 
 /// Build the baseline's mapping over the manifest layer table.
 pub fn baseline_mapping(tr: &Trainer, b: Baseline) -> Mapping {
     let specs = &tr.rt.manifest.layers;
-    let searchable_names: Vec<&str> = specs
+    let first_searchable = specs
         .iter()
-        .filter(|s| s.searchable)
+        .find(|s| s.searchable)
         .map(|s| s.name.as_str())
-        .collect();
-    let first_searchable = searchable_names.first().copied().unwrap_or("");
+        .unwrap_or("");
     let mut layers = Vec::with_capacity(specs.len());
     for (li, spec) in specs.iter().enumerate() {
         let asg = if !spec.searchable {
             LayerAssignment::all_on(&spec.name, spec.cout, 0)
         } else {
             match b {
-                Baseline::AllCu0 => LayerAssignment::all_on(&spec.name, spec.cout, 0),
-                Baseline::AllCu1 => LayerAssignment::all_on(&spec.name, spec.cout, 1),
-                Baseline::IoCu0 => {
+                Baseline::AllOn(cu) => {
+                    debug_assert!((cu as usize) < tr.platform.n_cus());
+                    LayerAssignment::all_on(&spec.name, spec.cout, cu)
+                }
+                Baseline::IoSplit => {
                     let cu = u8::from(spec.name != first_searchable);
                     LayerAssignment::all_on(&spec.name, spec.cout, cu)
                 }
                 Baseline::MinCost => {
-                    let n0 = min_cost_split(tr, li);
-                    LayerAssignment {
-                        layer: spec.name.clone(),
-                        cu_of: (0..spec.cout).map(|c| u8::from(c >= n0)).collect(),
-                    }
+                    let layer = &tr.layers[li];
+                    let sequential = tr.seq_layers.iter().any(|s| s == &layer.name);
+                    let counts = min_cost_counts(tr.platform, layer, sequential);
+                    assignment_from_counts(&spec.name, &counts)
                 }
             }
         };
@@ -121,12 +213,17 @@ pub fn baseline_mapping(tr: &Trainer, b: Baseline) -> Mapping {
 /// Train + deploy one baseline (same W budget as an ODiMO point).
 pub fn run_baseline(tr: &Trainer, b: Baseline) -> Result<RunRecord> {
     // layerwise θ cannot express a channel split — min-cost degenerates
-    // to whichever whole-layer choice is cheaper
+    // to whichever whole-layer choice carries the most channels
     let mut mapping = baseline_mapping(tr, b);
     if tr.kind == SearchKind::Layerwise {
         for asg in &mut mapping.layers {
-            let n0 = asg.count(0);
-            let cu = u8::from(n0 * 2 < asg.cu_of.len());
+            let counts = asg.counts(tr.platform.n_cus());
+            let cu = counts
+                .iter()
+                .enumerate()
+                .max_by_key(|&(i, &n)| (n, std::cmp::Reverse(i)))
+                .map(|(i, _)| i as u8)
+                .unwrap_or(0);
             *asg = LayerAssignment::all_on(&asg.layer, asg.cu_of.len(), cu);
         }
     }
@@ -138,15 +235,15 @@ pub fn run_baseline(tr: &Trainer, b: Baseline) -> Result<RunRecord> {
         lr_w: tr.cfg.lr_w,
         lr_th: 0.0,
     };
-    let label = b.label(&tr.rt.manifest.platform);
+    let label = b.label(tr.platform);
     // identical W budget to an ODiMO point: warmup + search + final
     let epochs = tr.cfg.warmup_epochs + tr.cfg.search_epochs + tr.cfg.final_epochs;
-    let step_ms = run_phase(tr, &mut state, hp, epochs, tr.cfg.patience, label)?;
+    let step_ms = run_phase(tr, &mut state, hp, epochs, tr.cfg.patience, &label)?;
     let (val_acc, _) = tr.evaluate(&state, Split::Val)?;
     let (test_acc, _) = tr.evaluate(&state, Split::Test)?;
     let (ana, det) = tr.simulate(&mapping);
     Ok(RunRecord::from_reports(
-        label,
+        &label,
         &tr.cfg.variant,
         None,
         "baseline",
@@ -162,7 +259,135 @@ pub fn run_baseline(tr: &Trainer, b: Baseline) -> Result<RunRecord> {
 
 #[cfg(test)]
 mod tests {
-    // min_cost_split balances: verified indirectly in integration tests
-    // (requires artifacts); the pure parts are covered via
-    // soc::analytical tests.
+    use super::*;
+    use crate::soc::LayerType;
+
+    fn conv_layer(cin: usize, cout: usize, hw: usize) -> Layer {
+        Layer {
+            name: "t".into(),
+            ltype: LayerType::Conv,
+            cin,
+            cout,
+            k: 3,
+            ox: hw,
+            oy: hw,
+            stride: 1,
+            searchable: true,
+        }
+    }
+
+    #[test]
+    fn baselines_enumerate_from_spec() {
+        let d = Baseline::for_platform(Platform::diana());
+        assert_eq!(
+            d,
+            vec![
+                Baseline::AllOn(0),
+                Baseline::AllOn(1),
+                Baseline::IoSplit,
+                Baseline::MinCost
+            ]
+        );
+        assert_eq!(Baseline::AllOn(0).label(Platform::diana()), "all-8bit");
+        assert_eq!(Baseline::AllOn(1).label(Platform::diana()), "all-ternary");
+        let s = Baseline::for_platform(Platform::darkside());
+        assert_eq!(
+            s,
+            vec![Baseline::AllOn(0), Baseline::AllOn(1), Baseline::MinCost]
+        );
+        let t = Baseline::for_platform(Platform::trident());
+        assert_eq!(t.len(), 4); // three corners + min-cost
+        assert_eq!(Baseline::AllOn(2).label(Platform::trident()), "all-aimc");
+    }
+
+    #[test]
+    fn min_cost_two_way_is_exhaustively_optimal() {
+        let l = conv_layer(64, 64, 16);
+        let p = Platform::diana();
+        let counts = min_cost_counts(p, &l, false);
+        assert_eq!(counts.iter().sum::<usize>(), 64);
+        let obj = |cts: &[usize]| -> u64 {
+            p.cus()
+                .iter()
+                .zip(cts)
+                .map(|(cu, &n)| cu_cycles(cu, &l, n))
+                .max()
+                .unwrap()
+        };
+        for n0 in 0..=64usize {
+            assert!(
+                obj(&counts) <= obj(&[n0, 64 - n0]),
+                "{counts:?} worse than split {n0}"
+            );
+        }
+    }
+
+    #[test]
+    fn min_cost_respects_ops_lists() {
+        // a standard conv on trident is not a dwe op (ops = [dw, search]),
+        // so min-cost must never place conv channels there, however cheap
+        // the alternative-op cost model would price them
+        let l = conv_layer(64, 96, 16);
+        let p = Platform::trident();
+        let counts = min_cost_counts(p, &l, false);
+        assert_eq!(counts.len(), 3);
+        assert_eq!(counts.iter().sum::<usize>(), 96);
+        assert_eq!(counts[1], 0, "dwe got conv channels: {counts:?}");
+        let obj = |cts: &[usize]| -> u64 {
+            p.cus()
+                .iter()
+                .zip(cts)
+                .map(|(cu, &n)| cu_cycles(cu, &l, n))
+                .max()
+                .unwrap()
+        };
+        for corner in [[96, 0, 0], [0, 0, 96]] {
+            assert!(obj(&counts) <= obj(&corner), "{counts:?} vs {corner:?}");
+        }
+    }
+
+    #[test]
+    fn min_cost_splits_dw_between_cluster_and_dwe() {
+        // depthwise on trident: cluster and dwe are eligible, the aimc is
+        // not (no "dw" in its ops) — a big dw layer splits across the two
+        let l = Layer {
+            name: "t".into(),
+            ltype: LayerType::Dw,
+            cin: 256,
+            cout: 256,
+            k: 3,
+            ox: 4,
+            oy: 4,
+            stride: 1,
+            searchable: true,
+        };
+        let p = Platform::trident();
+        let counts = min_cost_counts(p, &l, false);
+        assert_eq!(counts.iter().sum::<usize>(), 256);
+        assert_eq!(counts[2], 0, "aimc got dw channels: {counts:?}");
+        assert!(
+            counts[0] > 0 && counts[1] > 0,
+            "big dw layer should split cluster/dwe: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn min_cost_tiny_layer_avoids_expensive_setups() {
+        // stem-like layer: the analog arrays' setup cost dominates, so
+        // everything stays on the (eligible) primary CU — on DIANA and on
+        // the tri-CU SoC alike
+        let l = conv_layer(3, 8, 4);
+        assert_eq!(min_cost_counts(Platform::diana(), &l, false), vec![8, 0]);
+        assert_eq!(
+            min_cost_counts(Platform::trident(), &l, false),
+            vec![8, 0, 0]
+        );
+    }
+
+    #[test]
+    fn assignment_from_counts_is_contiguous() {
+        let a = assignment_from_counts("l", &[2, 0, 3]);
+        assert_eq!(a.cu_of, vec![0, 0, 2, 2, 2]);
+        assert!(a.is_contiguous());
+    }
 }

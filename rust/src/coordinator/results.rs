@@ -1,19 +1,19 @@
 //! Run records: the serializable outcome of one trained + deployed
-//! mapping (an ODiMO point, a baseline, or a comparison method).
-
-
+//! mapping (an ODiMO point, a baseline, or a comparison method). All
+//! per-CU quantities are vectors in platform column order, so records work
+//! for any registered platform.
 
 use crate::soc::{ExecReport, Mapping};
 use crate::util::json::Value;
 
-/// Per-layer deployment breakdown row (Figs. 8/9).
+/// Per-layer deployment breakdown row (Figs. 8/9), one entry per CU.
 #[derive(Debug, Clone)]
 pub struct LayerBreakdown {
     pub layer: String,
-    pub n_cu0: usize,
-    pub n_cu1: usize,
-    pub cycles_cu0: u64,
-    pub cycles_cu1: u64,
+    /// channels per CU column
+    pub channels: Vec<usize>,
+    /// cycles per CU column
+    pub cycles: Vec<u64>,
 }
 
 /// One point in every figure: a trained network with a deployed mapping.
@@ -34,10 +34,10 @@ pub struct RunRecord {
     pub det_cycles: u64,
     pub det_energy_uj: f64,
     pub det_latency_ms: f64,
-    pub util_cu0: f64,
-    pub util_cu1: f64,
-    /// fraction of channels on CU column 1 (analog / DWE)
-    pub cu1_channel_frac: f64,
+    /// detailed-sim busy fraction per CU column
+    pub util: Vec<f64>,
+    /// fraction of channels off the primary CU (generalized "A. Ch.")
+    pub offload_frac: f64,
     pub per_layer: Vec<LayerBreakdown>,
     pub mapping: Mapping,
     /// mean train-step wall time over the run, ms (Table II input)
@@ -47,6 +47,7 @@ pub struct RunRecord {
 }
 
 impl RunRecord {
+    #[allow(clippy::too_many_arguments)]
     pub fn from_reports(
         label: &str,
         variant: &str,
@@ -65,10 +66,8 @@ impl RunRecord {
             .iter()
             .map(|l| LayerBreakdown {
                 layer: l.layer.clone(),
-                n_cu0: l.per_cu[0].channels,
-                n_cu1: l.per_cu[1].channels,
-                cycles_cu0: l.per_cu[0].cycles,
-                cycles_cu1: l.per_cu[1].cycles,
+                channels: l.per_cu.iter().map(|c| c.channels).collect(),
+                cycles: l.per_cu.iter().map(|c| c.cycles).collect(),
             })
             .collect();
         Self {
@@ -83,9 +82,8 @@ impl RunRecord {
             det_cycles: det.total_cycles,
             det_energy_uj: det.energy_uj,
             det_latency_ms: det.latency_ms,
-            util_cu0: det.utilization[0],
-            util_cu1: det.utilization[1],
-            cu1_channel_frac: det.cu1_channel_fraction(),
+            util: det.utilization.clone(),
+            offload_frac: det.offload_channel_fraction(),
             per_layer,
             mapping,
             mean_step_ms,
@@ -102,11 +100,21 @@ impl RunRecord {
         }
     }
 
+    /// Utilization rendered as "63%/41%/8%" in CU column order.
+    pub fn util_display(&self) -> String {
+        self.util
+            .iter()
+            .map(|u| format!("{:.0}%", 100.0 * u))
+            .collect::<Vec<_>>()
+            .join("/")
+    }
+
     /// JSON view (in-tree JSON module; no serde in the offline cache).
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
             ("label", Value::str(&self.label)),
             ("variant", Value::str(&self.variant)),
+            ("platform", Value::str(self.mapping.platform.name())),
             (
                 "lambda",
                 self.lambda.map(Value::num).unwrap_or(Value::Null),
@@ -119,9 +127,11 @@ impl RunRecord {
             ("det_cycles", Value::num(self.det_cycles as f64)),
             ("det_energy_uj", Value::num(self.det_energy_uj)),
             ("det_latency_ms", Value::num(self.det_latency_ms)),
-            ("util_cu0", Value::num(self.util_cu0)),
-            ("util_cu1", Value::num(self.util_cu1)),
-            ("cu1_channel_frac", Value::num(self.cu1_channel_frac)),
+            (
+                "util",
+                Value::arr(self.util.iter().map(|&u| Value::num(u))),
+            ),
+            ("offload_frac", Value::num(self.offload_frac)),
             ("mean_step_ms", Value::num(self.mean_step_ms)),
             ("state_bytes", Value::num(self.state_bytes as f64)),
             (
@@ -129,10 +139,14 @@ impl RunRecord {
                 Value::arr(self.per_layer.iter().map(|l| {
                     Value::obj(vec![
                         ("layer", Value::str(&l.layer)),
-                        ("n_cu0", Value::num(l.n_cu0 as f64)),
-                        ("n_cu1", Value::num(l.n_cu1 as f64)),
-                        ("cycles_cu0", Value::num(l.cycles_cu0 as f64)),
-                        ("cycles_cu1", Value::num(l.cycles_cu1 as f64)),
+                        (
+                            "channels",
+                            Value::arr(l.channels.iter().map(|&n| Value::num(n as f64))),
+                        ),
+                        (
+                            "cycles",
+                            Value::arr(l.cycles.iter().map(|&c| Value::num(c as f64))),
+                        ),
                     ])
                 })),
             ),
@@ -157,5 +171,52 @@ impl RunRecord {
         }
         std::fs::write(path, self.to_json().to_string_pretty())?;
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::{analytical, detailed, Layer, LayerAssignment, LayerType, Platform};
+
+    #[test]
+    fn record_carries_per_cu_vectors() {
+        let layer = Layer {
+            name: "t".into(),
+            ltype: LayerType::Conv,
+            cin: 16,
+            cout: 24,
+            k: 3,
+            ox: 8,
+            oy: 8,
+            stride: 1,
+            searchable: true,
+        };
+        let mapping = Mapping {
+            platform: Platform::trident(),
+            layers: vec![LayerAssignment {
+                layer: "t".into(),
+                cu_of: (0..24).map(|c| (c % 3) as u8).collect(),
+            }],
+        };
+        let ana = analytical::execute(std::slice::from_ref(&layer), &mapping, &[]);
+        let det = detailed::execute(std::slice::from_ref(&layer), &mapping, &[]);
+        let rec = RunRecord::from_reports(
+            "test", "v", Some(0.1), "latency", 0.5, 0.5, &ana, &det, mapping, 1.0, 64,
+        );
+        assert_eq!(rec.util.len(), 3);
+        assert_eq!(rec.per_layer[0].channels, vec![8, 8, 8]);
+        assert_eq!(rec.per_layer[0].cycles.len(), 3);
+        assert!((rec.offload_frac - 2.0 / 3.0).abs() < 1e-9);
+        assert_eq!(rec.util_display().matches('%').count(), 3);
+        // JSON view reparses and keeps the vectors
+        let v = crate::util::json::parse(&rec.to_json().to_string_pretty()).unwrap();
+        assert_eq!(v.str_of("platform").unwrap(), "trident");
+        assert_eq!(v.req("util").unwrap().as_arr().unwrap().len(), 3);
+        let pl = v.req("per_layer").unwrap().as_arr().unwrap();
+        assert_eq!(
+            pl[0].req("channels").unwrap().as_arr().unwrap().len(),
+            3
+        );
     }
 }

@@ -53,9 +53,9 @@ impl Trainer {
             m.dataset.classes,
             cfg.seed as u64 + 1,
         );
-        let platform = Platform::parse(&m.platform);
-        let kind = SearchKind::parse(&m.search_kind);
-        let layers = soc::layers_from_manifest(m);
+        let platform: Platform = m.platform.parse()?;
+        let kind: SearchKind = m.search_kind.parse()?;
+        let layers = soc::layers_from_manifest(m)?;
         let seq_layers = soc::sequential_layers(m);
         let batch = m.dataset.batch;
         let mk_batches = |split: Split, n: usize| -> Result<Vec<(Literal, Literal)>> {
@@ -153,7 +153,10 @@ impl Trainer {
 
     pub fn set_theta(&self, state: &mut TrainState, layer: &str, data: &[f32]) -> Result<()> {
         let shape = match self.kind {
-            SearchKind::Channel | SearchKind::Prune => vec![data.len() / 2, 2],
+            SearchKind::Channel | SearchKind::Prune => {
+                let k = self.kind.columns(self.platform.n_cus());
+                vec![data.len() / k, k]
+            }
             SearchKind::Split | SearchKind::Layerwise => vec![data.len()],
         };
         state.set_leaf_f32(&self.theta_leaf(layer), &shape, data)
@@ -162,11 +165,12 @@ impl Trainer {
     /// Discretize every searchable layer's θ; non-searchable layers are
     /// assigned to CU 0 (cluster / digital — where they always execute).
     pub fn discretize_all(&self, state: &TrainState) -> Result<Mapping> {
+        let n_cus = self.platform.n_cus();
         let mut layers = Vec::new();
         for spec in &self.rt.manifest.layers {
             if spec.searchable {
                 let theta = self.theta_of(state, &spec.name)?;
-                layers.push(discretize(self.kind, &theta, spec.cout, &spec.name));
+                layers.push(discretize(self.kind, &theta, spec.cout, n_cus, &spec.name));
             } else {
                 layers.push(LayerAssignment::all_on(&spec.name, spec.cout, 0));
             }
@@ -179,9 +183,10 @@ impl Trainer {
 
     /// Freeze the mapping: write one-hot θ for every searchable layer.
     pub fn freeze_mapping(&self, state: &mut TrainState, mapping: &Mapping) -> Result<()> {
+        let n_cus = self.platform.n_cus();
         for (spec, asg) in self.rt.manifest.layers.iter().zip(&mapping.layers) {
             if spec.searchable {
-                let oh = one_hot_theta(self.kind, asg);
+                let oh = one_hot_theta(self.kind, asg, n_cus);
                 self.set_theta(state, &spec.name, &oh)?;
             }
         }

@@ -1,5 +1,8 @@
 //! Experiment harness: one entry point per paper table/figure
-//! (DESIGN.md §3 maps each id to the paper artifact it regenerates).
+//! (DESIGN.md §3 maps each id to the paper artifact it regenerates), plus
+//! the registry-driven `socmap` scenario that exercises the full
+//! deployment pipeline on any platform — including N-CU ones — without
+//! training artifacts.
 //!
 //! Results are printed as ASCII tables (same rows/series as the paper's
 //! figures) and written as CSV + JSON under `results/<id>/`.
@@ -10,10 +13,13 @@ use anyhow::{anyhow, Result};
 
 use crate::config::{CostTarget, ExperimentConfig};
 use crate::coordinator::{run_baseline, sweep, Baseline, RunRecord, Trainer};
+use crate::mapping::{discretize, one_hot_theta, reorganize, SearchKind};
 use crate::pareto::{pareto_front, Point};
 use crate::report::{ascii_table, cyc, f as ff, write_csv};
 use crate::runtime::StepHparams;
-use crate::soc::{analytical, detailed, Cu, Layer, LayerAssignment, LayerType, Mapping, Platform};
+use crate::soc::{
+    analytical, detailed, ExecReport, Layer, LayerAssignment, LayerType, Mapping, Platform,
+};
 use crate::stats;
 
 /// Run an experiment by id.
@@ -35,9 +41,11 @@ pub fn run(
         "table2" => table2(artifacts, results, task, fast),
         "table3" => table3(results),
         "table4" => table4(artifacts, results, task, fast),
+        "socmap" => socmap(results, soc, task),
         "all" => {
             for e in [
-                "table3", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table2", "table4",
+                "table3", "socmap", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table2",
+                "table4",
             ] {
                 eprintln!("=== exp {e} ===");
                 run(e, artifacts, results, task, soc, fast)?;
@@ -80,7 +88,7 @@ fn panel(
     let tr = trainer(artifacts, cfg_for(variant, fast, target))?;
     let mut recs = sweep(&tr)?;
     if with_baselines {
-        for b in Baseline::for_platform(&tr.rt.manifest.platform) {
+        for b in Baseline::for_platform(tr.platform) {
             recs.push(run_baseline(&tr, b)?);
         }
     }
@@ -114,8 +122,8 @@ pub fn print_sweep(recs: &[RunRecord]) {
                 ff(r.ana_energy_uj, 2),
                 ff(r.det_latency_ms, 3),
                 ff(r.det_energy_uj, 2),
-                format!("{:.0}%/{:.0}%", 100.0 * r.util_cu0, 100.0 * r.util_cu1),
-                ff(100.0 * r.cu1_channel_frac, 1),
+                r.util_display(),
+                ff(100.0 * r.offload_frac, 1),
                 if front.contains(&i) { "*".into() } else { "".into() },
             ]
         })
@@ -125,7 +133,7 @@ pub fn print_sweep(recs: &[RunRecord]) {
         ascii_table(
             &[
                 "mapping", "λ", "acc%", "cycles", "E_ana[uJ]", "lat[ms]", "E_det[uJ]",
-                "util D/A", "cu1 ch%", "pareto"
+                "util/cu", "offload%", "pareto"
             ],
             &rows
         )
@@ -149,9 +157,12 @@ pub fn save_records(dir: &Path, name: &str, recs: &[RunRecord]) -> Result<()> {
                 r.det_cycles.to_string(),
                 r.det_energy_uj.to_string(),
                 r.det_latency_ms.to_string(),
-                r.util_cu0.to_string(),
-                r.util_cu1.to_string(),
-                r.cu1_channel_frac.to_string(),
+                r.util
+                    .iter()
+                    .map(|u| u.to_string())
+                    .collect::<Vec<_>>()
+                    .join("|"),
+                r.offload_frac.to_string(),
             ]
         })
         .collect();
@@ -168,9 +179,8 @@ pub fn save_records(dir: &Path, name: &str, recs: &[RunRecord]) -> Result<()> {
             "det_cycles",
             "det_energy_uj",
             "det_latency_ms",
-            "util_cu0",
-            "util_cu1",
-            "cu1_channel_frac",
+            "util_per_cu",
+            "offload_frac",
         ],
         &rows,
     )?;
@@ -287,20 +297,29 @@ fn breakdown_table(recs: &[RunRecord]) -> Vec<Vec<String>> {
     let mut rows = Vec::new();
     for r in recs {
         for l in &r.per_layer {
-            let tot = (l.n_cu0 + l.n_cu1).max(1);
+            let tot = l.channels.iter().sum::<usize>().max(1);
+            let off: usize = l.channels.iter().skip(1).sum();
             rows.push(vec![
                 r.label.clone(),
                 l.layer.clone(),
-                l.n_cu0.to_string(),
-                l.n_cu1.to_string(),
-                ff(100.0 * l.n_cu1 as f64 / tot as f64, 1),
-                l.cycles_cu0.to_string(),
-                l.cycles_cu1.to_string(),
+                l.channels
+                    .iter()
+                    .map(|n| n.to_string())
+                    .collect::<Vec<_>>()
+                    .join("/"),
+                ff(100.0 * off as f64 / tot as f64, 1),
+                l.cycles
+                    .iter()
+                    .map(|c| c.to_string())
+                    .collect::<Vec<_>>()
+                    .join("/"),
             ]);
         }
     }
     rows
 }
+
+const BREAKDOWN_HEADERS: [&str; 5] = ["mapping", "layer", "ch/cu", "offload %", "cyc/cu"];
 
 fn fig8(artifacts: &Path, results: &Path, fast: f64) -> Result<()> {
     eprintln!("--- fig8: DIANA layer breakdown (Ours vs pruning)");
@@ -320,16 +339,10 @@ fn fig8(artifacts: &Path, results: &Path, fast: f64) -> Result<()> {
     prune[1].label = "pr-m".into();
     recs.extend(prune);
     let rows = breakdown_table(&recs);
-    println!(
-        "{}",
-        ascii_table(
-            &["mapping", "layer", "ch cu0", "ch cu1", "cu1 %", "cyc cu0", "cyc cu1"],
-            &rows
-        )
-    );
+    println!("{}", ascii_table(&BREAKDOWN_HEADERS, &rows));
     write_csv(
         &results.join("fig8/breakdown.csv"),
-        &["mapping", "layer", "n_cu0", "n_cu1", "cu1_pct", "cycles_cu0", "cycles_cu1"],
+        &["mapping", "layer", "channels_per_cu", "offload_pct", "cycles_per_cu"],
         &rows,
     )?;
     save_records(&results.join("fig8"), "records", &recs)?;
@@ -352,16 +365,10 @@ fn fig9(artifacts: &Path, results: &Path, fast: f64) -> Result<()> {
     pb[1].label = "pb-m".into();
     recs.extend(pb);
     let rows = breakdown_table(&recs);
-    println!(
-        "{}",
-        ascii_table(
-            &["mapping", "layer", "ch cluster", "ch dwe", "dwe %", "cyc cluster", "cyc dwe"],
-            &rows
-        )
-    );
+    println!("{}", ascii_table(&BREAKDOWN_HEADERS, &rows));
     write_csv(
         &results.join("fig9/breakdown.csv"),
-        &["mapping", "layer", "n_cluster", "n_dwe", "dwe_pct", "cycles_cluster", "cycles_dwe"],
+        &["mapping", "layer", "channels_per_cu", "offload_pct", "cycles_per_cu"],
         &rows,
     )?;
     save_records(&results.join("fig9"), "records", &recs)?;
@@ -510,50 +517,85 @@ pub fn microbench_layers(style: &str) -> Vec<Layer> {
     layers
 }
 
+/// Micro-benchmark workload style fitting a platform's strengths.
+fn microbench_style(platform: Platform) -> &'static str {
+    if platform.name() == "diana" {
+        "resnet"
+    } else {
+        "mobilenet"
+    }
+}
+
+/// One Table III row: per-CU analytical-vs-detailed agreement.
+pub struct Table3Row {
+    pub platform: String,
+    pub cu: String,
+    pub mape: f64,
+    pub pearson: f64,
+    pub spearman: f64,
+}
+
+/// The Table III micro-benchmark over every built-in platform and CU
+/// column — the N-CU generalization of the paper's four rows. Shared by
+/// `repro exp table3` and the `hw_models` bench so the two cannot
+/// diverge.
+pub fn table3_rows() -> Result<Vec<Table3Row>> {
+    let mut rows = Vec::new();
+    for name in ["diana", "darkside", "trident"] {
+        let platform = Platform::get(name)?;
+        let layers = microbench_layers(microbench_style(platform));
+        for (col, cu) in platform.cus().iter().enumerate() {
+            let mut pred = Vec::new();
+            let mut meas = Vec::new();
+            for l in &layers {
+                // only benchmark ops the CU's descriptor claims to run
+                if !cu.supports(l.ltype) {
+                    continue;
+                }
+                for frac in [0.25, 0.5, 1.0] {
+                    // isolate the CU: run `n` channels on it, others idle
+                    let n = ((l.cout as f64 * frac) as usize).max(1);
+                    let mapping = Mapping {
+                        platform,
+                        layers: vec![LayerAssignment {
+                            layer: l.name.clone(),
+                            cu_of: vec![col as u8; n],
+                        }],
+                    };
+                    let mut ll = l.clone();
+                    ll.cout = n;
+                    let a = analytical::execute(std::slice::from_ref(&ll), &mapping, &[]);
+                    let d = detailed::execute(std::slice::from_ref(&ll), &mapping, &[]);
+                    pred.push(a.layers[0].per_cu[col].cycles as f64);
+                    meas.push(d.layers[0].per_cu[col].cycles as f64);
+                }
+            }
+            rows.push(Table3Row {
+                platform: name.to_string(),
+                cu: cu.name.clone(),
+                mape: stats::mape(&pred, &meas),
+                pearson: stats::pearson(&pred, &meas),
+                spearman: stats::spearman(&pred, &meas),
+            });
+        }
+    }
+    Ok(rows)
+}
+
 fn table3(results: &Path) -> Result<()> {
     eprintln!("--- table3: analytical vs detailed-sim micro-benchmarking");
-    let mut rows = Vec::new();
-    let cases: [(&str, Platform, u8, Cu, &str); 4] = [
-        ("DIANA", Platform::Diana, 0, Cu::DianaDigital, "resnet"),
-        ("DIANA", Platform::Diana, 1, Cu::DianaAnalog, "resnet"),
-        ("Darkside", Platform::Darkside, 1, Cu::DarksideDwe, "mobilenet"),
-        ("Darkside", Platform::Darkside, 0, Cu::DarksideCluster, "mobilenet"),
-    ];
-    for (plat_name, platform, col, cu, style) in cases {
-        let layers = microbench_layers(style);
-        let mut pred = Vec::new();
-        let mut meas = Vec::new();
-        for l in &layers {
-            // DWE can only run depthwise work; skip non-dw layers for it
-            if cu == Cu::DarksideDwe && l.ltype != LayerType::Dw {
-                continue;
-            }
-            for frac in [0.25, 0.5, 1.0] {
-                // isolate the CU: run `n` channels on it with the other idle
-                let n = ((l.cout as f64 * frac) as usize).max(1);
-                let mapping = Mapping {
-                    platform,
-                    layers: vec![LayerAssignment {
-                        layer: l.name.clone(),
-                        cu_of: vec![col; n],
-                    }],
-                };
-                let mut ll = l.clone();
-                ll.cout = n;
-                let a = analytical::execute(std::slice::from_ref(&ll), &mapping, &[]);
-                let d = detailed::execute(std::slice::from_ref(&ll), &mapping, &[]);
-                pred.push(a.layers[0].per_cu[col as usize].cycles as f64);
-                meas.push(d.layers[0].per_cu[col as usize].cycles as f64);
-            }
-        }
-        rows.push(vec![
-            plat_name.to_string(),
-            cu.label().to_string(),
-            format!("{:.0}%", stats::mape(&pred, &meas)),
-            format!("{:.1}%", 100.0 * stats::pearson(&pred, &meas)),
-            format!("{:.1}%", 100.0 * stats::spearman(&pred, &meas)),
-        ]);
-    }
+    let rows: Vec<Vec<String>> = table3_rows()?
+        .into_iter()
+        .map(|r| {
+            vec![
+                r.platform,
+                r.cu,
+                format!("{:.0}%", r.mape),
+                format!("{:.1}%", 100.0 * r.pearson),
+                format!("{:.1}%", 100.0 * r.spearman),
+            ]
+        })
+        .collect();
     println!(
         "{}",
         ascii_table(&["platform", "CU", "error", "Pearson", "Spearman"], &rows)
@@ -581,7 +623,7 @@ fn table4(artifacts: &Path, results: &Path, task: Option<&str>, fast: f64) -> Re
         let mut recs = sweep(&tr)?;
         recs[0].label = "odimo-accurate".into();
         recs[1].label = "odimo-fast".into();
-        recs.insert(0, run_baseline(&tr, Baseline::AllCu0)?);
+        recs.insert(0, run_baseline(&tr, Baseline::AllOn(0))?);
         recs.push(run_baseline(&tr, Baseline::MinCost)?);
         for r in &recs {
             rows.push(vec![
@@ -590,8 +632,8 @@ fn table4(artifacts: &Path, results: &Path, task: Option<&str>, fast: f64) -> Re
                 ff(100.0 * r.test_acc, 2),
                 ff(r.det_latency_ms, 3),
                 ff(r.det_energy_uj, 2),
-                format!("{:.1}%/{:.1}%", 100.0 * r.util_cu0, 100.0 * r.util_cu1),
-                ff(100.0 * r.cu1_channel_frac, 1),
+                r.util_display(),
+                ff(100.0 * r.offload_frac, 1),
             ]);
         }
         save_records(&results.join("table4"), variant, &recs)?;
@@ -599,14 +641,324 @@ fn table4(artifacts: &Path, results: &Path, task: Option<&str>, fast: f64) -> Re
     println!(
         "{}",
         ascii_table(
-            &["task", "network", "acc%", "lat[ms]", "E[uJ]", "D/A util", "A ch%"],
+            &["task", "network", "acc%", "lat[ms]", "E[uJ]", "util/cu", "offload%"],
             &rows
         )
     );
     write_csv(
         &results.join("table4/deployment.csv"),
-        &["task", "network", "acc", "lat_ms", "energy_uj", "util", "analog_ch_pct"],
+        &["task", "network", "acc", "lat_ms", "energy_uj", "util", "offload_pct"],
         &rows,
     )?;
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// socmap — registry-driven mapping sweep on any platform, no artifacts
+// ---------------------------------------------------------------------------
+
+/// Per-channel "accuracy pressure" of placing work on a CU: CUs with more
+/// aggressive data representations are assumed to cost more accuracy
+/// (ternary > int8), scaled to the layer's per-channel MAC volume so λ is
+/// comparable against cycle counts. A crude, training-free stand-in for
+/// the task-loss gradient of the real search.
+fn quant_penalty(quant: &str) -> f64 {
+    match quant {
+        "int8" => 0.0,
+        "ternary" => 1.0,
+        _ => 0.5,
+    }
+}
+
+/// λ-aware greedy channel assignment for one layer: each channel goes to
+/// the CU (among those whose descriptor supports the layer's op)
+/// minimizing `λ · layer-latency-after-placement + quality penalty`
+/// (ties to the lowest column). λ = 0 keeps everything on the least
+/// aggressive CU; large λ approaches the min-latency partition — tracing
+/// the same accuracy-vs-cost tension the trained search navigates.
+pub fn socmap_assign(platform: Platform, layer: &Layer, lambda: f64) -> LayerAssignment {
+    let cus = platform.cus();
+    let eligible = crate::coordinator::baselines::eligible_cus(platform, layer);
+    let mut counts = vec![0usize; cus.len()];
+    let mut cu_of: Vec<u8> = Vec::with_capacity(layer.cout);
+    let macs1 = layer.macs_std(1) as f64;
+    for _ in 0..layer.cout {
+        let mut best = usize::MAX;
+        let mut best_score = f64::INFINITY;
+        for (k, cu) in cus.iter().enumerate() {
+            if !eligible[k] {
+                continue;
+            }
+            counts[k] += 1;
+            let lat = cus
+                .iter()
+                .zip(&counts)
+                .map(|(c, &n)| analytical::cu_cycles(c, layer, n))
+                .max()
+                .unwrap_or(0) as f64;
+            counts[k] -= 1;
+            let score = lambda * lat + quant_penalty(&cu.quant) * macs1;
+            if score < best_score {
+                best_score = score;
+                best = k;
+            }
+        }
+        counts[best] += 1;
+        cu_of.push(best as u8);
+    }
+    LayerAssignment {
+        layer: layer.name.clone(),
+        cu_of,
+    }
+}
+
+/// One full training-free sweep point: greedy assignment per layer, θ
+/// one-hot round-trip through the *real* `discretize`, the Fig. 4 reorg
+/// pass, then both simulators on the reorganized (deployment-order)
+/// mapping.
+pub fn socmap_point(
+    platform: Platform,
+    layers: &[Layer],
+    lambda: f64,
+) -> (Mapping, ExecReport, ExecReport) {
+    let n_cus = platform.n_cus();
+    let raw = Mapping {
+        platform,
+        layers: layers
+            .iter()
+            .map(|l| {
+                let asg = socmap_assign(platform, l, lambda);
+                // exercise the θ machinery exactly as the coordinator does
+                let theta = one_hot_theta(SearchKind::Channel, &asg, n_cus);
+                let back = discretize(SearchKind::Channel, &theta, l.cout, n_cus, &l.name);
+                assert_eq!(asg, back, "{}: θ one-hot round-trip drifted", l.name);
+                asg
+            })
+            .collect(),
+    };
+    let reorg = reorganize(&raw);
+    let deployed = Mapping {
+        platform,
+        layers: raw
+            .layers
+            .iter()
+            .zip(&reorg.layers)
+            .map(|(asg, lr)| {
+                assert!(lr.is_valid_permutation(), "{}: invalid perm", asg.layer);
+                let contiguous = lr.reorganized_assignment(asg);
+                assert!(contiguous.is_contiguous());
+                contiguous
+            })
+            .collect(),
+    };
+    let ana = analytical::execute(layers, &deployed, &[]);
+    let det = detailed::execute(layers, &deployed, &[]);
+    (deployed, ana, det)
+}
+
+/// The default λ grid of the socmap sweep. The quality penalty is scaled
+/// by per-channel MACs while λ multiplies whole-layer latency, so the
+/// interesting transitions (int8 offload first, then the ternary array)
+/// spread over several orders of magnitude — hence the geometric grid.
+pub const SOCMAP_LAMBDAS: [f64; 6] = [0.0, 1.0, 16.0, 256.0, 4096.0, 65536.0];
+
+/// Registry-driven deployment-pipeline sweep. `soc` defaults to the
+/// synthetic tri-CU `trident` platform; `task` selects the workload style
+/// (`resnet` or `mobilenet`).
+pub fn socmap(results: &Path, soc: Option<&str>, task: Option<&str>) -> Result<()> {
+    let platform = Platform::get(soc.unwrap_or("trident"))?;
+    // socmap's --task selects a workload *style*, unlike the dataset tasks
+    // of the paper experiments — ignore anything else (e.g. the c10/c100
+    // values `exp all --task ...` forwards) rather than mislabel results
+    let style = match task {
+        Some(s @ ("resnet" | "mobilenet")) => s,
+        Some(other) => {
+            eprintln!("    (socmap: ignoring --task '{other}'; styles are resnet|mobilenet)");
+            "mobilenet"
+        }
+        None => "mobilenet",
+    };
+    let layers = microbench_layers(style);
+    eprintln!(
+        "--- socmap: {} ({} CUs: {}), {style} workload, {} layers",
+        platform.name(),
+        platform.n_cus(),
+        platform
+            .cus()
+            .iter()
+            .map(|c| c.name.as_str())
+            .collect::<Vec<_>>()
+            .join("+"),
+        layers.len()
+    );
+    let mut rows = Vec::new();
+    let mut csv_rows = Vec::new();
+    let mut json_points = Vec::new();
+    for &lam in &SOCMAP_LAMBDAS {
+        let (mapping, ana, det) = socmap_point(platform, &layers, lam);
+        let util = det
+            .utilization
+            .iter()
+            .map(|u| format!("{:.0}%", 100.0 * u))
+            .collect::<Vec<_>>()
+            .join("/");
+        rows.push(vec![
+            format!("{lam}"),
+            cyc(ana.total_cycles as f64),
+            cyc(det.total_cycles as f64),
+            ff(det.latency_ms, 3),
+            ff(ana.energy_uj, 2),
+            ff(det.energy_uj, 2),
+            util,
+            ff(100.0 * det.offload_channel_fraction(), 1),
+        ]);
+        // CSV carries raw machine-readable values, like save_records()
+        csv_rows.push(vec![
+            lam.to_string(),
+            ana.total_cycles.to_string(),
+            det.total_cycles.to_string(),
+            det.latency_ms.to_string(),
+            ana.energy_uj.to_string(),
+            det.energy_uj.to_string(),
+            det.utilization
+                .iter()
+                .map(|u| u.to_string())
+                .collect::<Vec<_>>()
+                .join("|"),
+            det.offload_channel_fraction().to_string(),
+        ]);
+        json_points.push(crate::util::json::Value::obj(vec![
+            ("lambda", crate::util::json::Value::num(lam)),
+            (
+                "ana_cycles",
+                crate::util::json::Value::num(ana.total_cycles as f64),
+            ),
+            (
+                "det_cycles",
+                crate::util::json::Value::num(det.total_cycles as f64),
+            ),
+            (
+                "det_latency_ms",
+                crate::util::json::Value::num(det.latency_ms),
+            ),
+            (
+                "det_energy_uj",
+                crate::util::json::Value::num(det.energy_uj),
+            ),
+            (
+                "util",
+                crate::util::json::Value::arr(
+                    det.utilization
+                        .iter()
+                        .map(|&u| crate::util::json::Value::num(u)),
+                ),
+            ),
+            (
+                "offload_frac",
+                crate::util::json::Value::num(det.offload_channel_fraction()),
+            ),
+            (
+                "mapping",
+                crate::util::json::Value::arr(mapping.layers.iter().map(|a| {
+                    crate::util::json::Value::obj(vec![
+                        ("layer", crate::util::json::Value::str(&a.layer)),
+                        (
+                            "counts",
+                            crate::util::json::Value::arr(
+                                a.counts(platform.n_cus())
+                                    .iter()
+                                    .map(|&n| crate::util::json::Value::num(n as f64)),
+                            ),
+                        ),
+                    ])
+                })),
+            ),
+        ]));
+    }
+    println!(
+        "{}",
+        ascii_table(
+            &[
+                "λ", "cyc (ana)", "cyc (det)", "lat[ms]", "E_ana[uJ]", "E_det[uJ]", "util/cu",
+                "offload%"
+            ],
+            &rows
+        )
+    );
+    let dir = results.join("socmap");
+    std::fs::create_dir_all(&dir)?;
+    write_csv(
+        &dir.join(format!("{}_{style}.csv", platform.name())),
+        &[
+            "lambda",
+            "ana_cycles",
+            "det_cycles",
+            "det_latency_ms",
+            "ana_energy_uj",
+            "det_energy_uj",
+            "util_per_cu",
+            "offload_frac",
+        ],
+        &csv_rows,
+    )?;
+    std::fs::write(
+        dir.join(format!("{}_{style}.json", platform.name())),
+        crate::util::json::Value::obj(vec![
+            ("platform", crate::util::json::Value::str(platform.name())),
+            ("style", crate::util::json::Value::str(style)),
+            (
+                "cus",
+                crate::util::json::Value::arr(
+                    platform
+                        .cus()
+                        .iter()
+                        .map(|c| crate::util::json::Value::str(&c.name)),
+                ),
+            ),
+            ("points", crate::util::json::Value::Arr(json_points)),
+        ])
+        .to_string_pretty(),
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn socmap_lambda_zero_stays_on_int8() {
+        // with no cost pressure everything stays on the least aggressive
+        // CUs; on trident the cluster and dwe are both int8, ties go to
+        // column 0
+        let layers = microbench_layers("resnet");
+        let p = Platform::trident();
+        for l in &layers {
+            let a = socmap_assign(p, l, 0.0);
+            assert!(a.cu_of.iter().all(|&c| c == 0), "{}: {:?}", l.name, a.cu_of);
+        }
+    }
+
+    #[test]
+    fn socmap_large_lambda_offloads() {
+        let layers = microbench_layers("resnet");
+        let p = Platform::trident();
+        let lam = *SOCMAP_LAMBDAS.last().unwrap();
+        let (_, ana, det) = socmap_point(p, &layers, lam);
+        assert!(det.offload_channel_fraction() > 0.0);
+        assert!(det.total_cycles > ana.total_cycles);
+        // cost pressure must actually reduce latency vs the λ=0 mapping
+        let (_, ana0, _) = socmap_point(p, &layers, 0.0);
+        assert!(ana.total_cycles < ana0.total_cycles);
+    }
+
+    #[test]
+    fn microbench_styles_differ() {
+        assert!(microbench_layers("resnet")
+            .iter()
+            .all(|l| l.ltype == LayerType::Conv));
+        assert!(microbench_layers("mobilenet")
+            .iter()
+            .any(|l| l.ltype == LayerType::Dw));
+    }
 }

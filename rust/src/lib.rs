@@ -12,12 +12,22 @@
 //!   compiled train/eval executables through the ODiMO three-phase
 //!   schedule (Warmup → Search → Final-Training), sweeps the cost
 //!   strength λ to trace Pareto fronts, discretizes θ into channel→CU
-//!   assignments, and evaluates the resulting mappings on the DIANA and
-//!   Darkside SoC simulators in [`soc`].
+//!   assignments, and evaluates the resulting mappings on the SoC
+//!   simulators in [`soc`].
+//!
+//! The hardware substrate is **data-driven**: every SoC is a JSON
+//! descriptor under `hw/` (schema: `hw/README.md`) loaded into the
+//! platform registry ([`soc::spec`]). DIANA, Darkside, and the synthetic
+//! tri-CU `trident` SoC ship as built-ins; dropping another
+//! `hw/<name>.json` adds a platform — with any number of CUs — without
+//! touching simulator code. Mappings, discretization, the Fig. 4 reorg
+//! pass, baselines, and all reports are N-way accordingly.
 //!
 //! Entry points: the `repro` binary (`rust/src/main.rs`) exposes every
-//! paper experiment (`repro exp fig5 …`); `examples/` hold smaller
-//! guided drivers; this library API is what both consume.
+//! paper experiment (`repro exp fig5 …`) plus the artifact-free
+//! `repro exp socmap` deployment-pipeline sweep and `repro platforms`;
+//! `examples/` hold smaller guided drivers; this library API is what all
+//! of them consume.
 
 pub mod config;
 pub mod coordinator;

@@ -1,15 +1,17 @@
 //! `repro` — the ODiMO reproduction CLI.
 //!
 //! Every paper experiment is one subcommand (`repro exp fig5 ...`); ad-hoc
-//! runs go through `repro train` / `repro sweep`. See DESIGN.md §3 for the
-//! experiment index.
+//! runs go through `repro train` / `repro sweep`; `repro platforms` lists
+//! the registered SoC descriptors. See DESIGN.md §3 for the experiment
+//! index.
 //!
 //! ```text
 //! repro list
+//! repro platforms
 //! repro train --variant diana_resnet20_c10 [--lambda 0.2] [--cost-target energy] [--fast 0.5]
 //! repro sweep --variant darkside_mbv1_c10 [--no-baselines]
-//! repro exp <fig5|fig6|fig7|fig8|fig9|fig10|table2|table3|table4|all>
-//!           [--task c10|c100|imagenet] [--soc diana|darkside] [--fast f]
+//! repro exp <fig5|fig6|fig7|fig8|fig9|fig10|table2|table3|table4|socmap|all>
+//!           [--task c10|c100|imagenet] [--soc diana|darkside|trident|<hw/*.json>] [--fast f]
 //! ```
 
 use std::path::PathBuf;
@@ -18,14 +20,16 @@ use anyhow::{bail, Result};
 
 use odimo::config::{CostTarget, ExperimentConfig};
 use odimo::coordinator::{run_baseline, sweep, Baseline, Trainer};
+use odimo::soc::Platform;
 use odimo::util::cli;
 
-const USAGE: &str = "usage: repro <list|train|sweep|exp> [options]
+const USAGE: &str = "usage: repro <list|platforms|train|sweep|exp> [options]
   global: --artifacts DIR  --results DIR
   train:  --variant V [--lambda L] [--cost-target latency|energy] [--config F] [--fast F]
   sweep:  --variant V [--cost-target T] [--config F] [--fast F] [--no-baselines]
-  exp:    <fig5|fig6|fig7|fig8|fig9|fig10|table2|table3|table4|all>
-          [--task c10|c100|imagenet] [--soc diana|darkside] [--fast F]";
+  exp:    <fig5|fig6|fig7|fig8|fig9|fig10|table2|table3|table4|socmap|all>
+          [--task c10|c100|imagenet] [--soc diana|darkside|trident|NAME] [--fast F]
+          (socmap: --soc any registered platform, --task resnet|mobilenet)";
 
 fn main() -> Result<()> {
     let args = cli::parse(std::env::args().skip(1), &["no-baselines", "help"])?;
@@ -67,6 +71,44 @@ fn main() -> Result<()> {
                 println!("(no artifacts — run `make artifacts`)");
             }
         }
+        "platforms" => {
+            for name in odimo::soc::platform_names() {
+                let p = Platform::get(&name)?;
+                println!(
+                    "{name}: {} CUs @ {} MHz, idle {} mW",
+                    p.n_cus(),
+                    p.freq_mhz(),
+                    p.p_idle_mw()
+                );
+                let rows: Vec<Vec<String>> = p
+                    .cus()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, cu)| {
+                        vec![
+                            i.to_string(),
+                            cu.name.clone(),
+                            cu.model.kind().to_string(),
+                            cu.quant.clone(),
+                            cu.ops
+                                .iter()
+                                .map(|o| o.name())
+                                .collect::<Vec<_>>()
+                                .join(","),
+                            cu.setup_cycles.to_string(),
+                            format!("{}", cu.p_act_mw),
+                        ]
+                    })
+                    .collect();
+                println!(
+                    "{}",
+                    odimo::report::ascii_table(
+                        &["col", "cu", "model", "quant", "ops", "setup", "P_act[mW]"],
+                        &rows
+                    )
+                );
+            }
+        }
         "train" => {
             let variant = args.require("variant")?;
             let mut cfg = load_cfg(&args, &variant)?;
@@ -78,14 +120,16 @@ fn main() -> Result<()> {
             let recs = sweep(&tr)?;
             for r in &recs {
                 println!(
-                    "{} λ={:?}: test_acc={:.4} ana_cycles={} det_ms={:.3} det_uJ={:.2} cu1%={:.1}",
+                    "{} λ={:?}: test_acc={:.4} ana_cycles={} det_ms={:.3} det_uJ={:.2} \
+                     util={} offload%={:.1}",
                     r.label,
                     r.lambda,
                     r.test_acc,
                     r.ana_cycles,
                     r.det_latency_ms,
                     r.det_energy_uj,
-                    100.0 * r.cu1_channel_frac
+                    r.util_display(),
+                    100.0 * r.offload_frac
                 );
                 r.save_json(&results.join(format!(
                     "train/{}_{}.json",
@@ -103,7 +147,7 @@ fn main() -> Result<()> {
             let tr = Trainer::new(&client, &artifacts, cfg)?;
             let mut recs = sweep(&tr)?;
             if !args.has_flag("no-baselines") {
-                for b in Baseline::for_platform(&tr.rt.manifest.platform) {
+                for b in Baseline::for_platform(tr.platform) {
                     recs.push(run_baseline(&tr, b)?);
                 }
             }

@@ -1,6 +1,6 @@
 //! θ → deployment mapping: discretization, the Fig. 4 layer
 //! re-organization pass, and one-hot θ construction for phase freezing and
-//! baselines.
+//! baselines — all parameterized on the platform's CU count.
 //!
 //! After the Search phase the coordinator reads every layer's θ leaf and
 //! discretizes it (Sec. IV-A: "the CU whose θ is associated with the
@@ -16,6 +16,10 @@ pub mod reorg;
 
 pub use reorg::{reorganize, LayerReorg, NetworkReorg};
 
+use std::str::FromStr;
+
+use anyhow::{bail, Result};
+
 use crate::soc::LayerAssignment;
 
 /// Logit magnitude that makes softmax effectively one-hot (exp(±24) ratio).
@@ -24,60 +28,96 @@ pub const ONE_HOT_LOGIT: f32 = 12.0;
 /// Search-space kinds (mirrors the manifest `search_kind`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SearchKind {
-    /// per-channel 2-way choice, θ shape `[C, 2]` (DIANA)
+    /// per-channel K-way choice, θ shape `[C, K]` (DIANA-style; K = CU
+    /// count of the platform)
     Channel,
-    /// contiguous split position, θ shape `[C+1]` (Darkside, Eq. 6)
+    /// contiguous split position, θ shape `[C+1]` (Darkside, Eq. 6;
+    /// inherently two-way)
     Split,
-    /// one 2-way choice per layer, θ shape `[2]` (path-based DNAS baseline)
+    /// one K-way choice per layer, θ shape `[K]` (path-based DNAS baseline)
     Layerwise,
-    /// keep-vs-prune per channel, θ shape `[C, 2]` (pruning baseline)
+    /// keep-vs-prune per channel, θ shape `[C, 2]` (pruning baseline;
+    /// always two columns regardless of CU count)
     Prune,
 }
 
-impl SearchKind {
-    pub fn parse(s: &str) -> SearchKind {
-        match s {
+impl FromStr for SearchKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<SearchKind> {
+        Ok(match s {
             "channel" => SearchKind::Channel,
             "split" => SearchKind::Split,
             "layerwise" => SearchKind::Layerwise,
             "prune" => SearchKind::Prune,
             // plain baseline nets have no θ; Channel semantics are inert
             "fixed" => SearchKind::Channel,
-            other => panic!("unknown search kind '{other}'"),
+            other => bail!(
+                "unknown search kind '{other}' \
+                 (expected channel|split|layerwise|prune|fixed)"
+            ),
+        })
+    }
+}
+
+impl SearchKind {
+    /// θ length for a layer with `cout` channels on an `n_cus`-CU platform.
+    pub fn theta_len(&self, cout: usize, n_cus: usize) -> usize {
+        match self {
+            SearchKind::Channel => n_cus * cout,
+            SearchKind::Prune => 2 * cout,
+            SearchKind::Split => cout + 1,
+            SearchKind::Layerwise => n_cus,
         }
     }
 
-    pub fn theta_len(&self, cout: usize) -> usize {
+    /// Number of θ columns (choices per decision).
+    pub fn columns(&self, n_cus: usize) -> usize {
         match self {
-            SearchKind::Channel | SearchKind::Prune => 2 * cout,
-            SearchKind::Split => cout + 1,
-            SearchKind::Layerwise => 2,
+            SearchKind::Channel | SearchKind::Layerwise => n_cus,
+            SearchKind::Prune => 2,
+            SearchKind::Split => 2,
         }
     }
 }
 
 /// Discretize one layer's θ into a channel→CU assignment.
 ///
-/// * `Channel`/`Prune`: per-row argmax of the `[C, 2]` logits;
+/// * `Channel`: per-row argmax of the `[C, K]` logits;
+/// * `Prune`: per-row argmax of the `[C, 2]` keep/prune logits;
 /// * `Split`: argmax over the `C+1` split positions — channels below the
 ///   split go to CU 0 (cluster), the rest to CU 1 (DWE);
 /// * `Layerwise`: whole layer to the argmax column.
-pub fn discretize(kind: SearchKind, theta: &[f32], cout: usize, layer: &str) -> LayerAssignment {
+///
+/// Ties resolve toward the lowest column (CU 0), as the paper specifies.
+pub fn discretize(
+    kind: SearchKind,
+    theta: &[f32],
+    cout: usize,
+    n_cus: usize,
+    layer: &str,
+) -> LayerAssignment {
     assert_eq!(
         theta.len(),
-        kind.theta_len(cout),
+        kind.theta_len(cout, n_cus),
         "{layer}: θ length mismatch"
     );
+    if kind == SearchKind::Split {
+        assert_eq!(n_cus, 2, "{layer}: split search is inherently two-way");
+    }
     let cu_of = match kind {
-        SearchKind::Channel | SearchKind::Prune => (0..cout)
-            .map(|c| u8::from(theta[2 * c + 1] > theta[2 * c]))
-            .collect(),
+        SearchKind::Channel | SearchKind::Prune => {
+            let k = kind.columns(n_cus);
+            (0..cout)
+                .map(|c| argmax(&theta[c * k..(c + 1) * k]) as u8)
+                .collect()
+        }
         SearchKind::Split => {
             let split = argmax(theta);
             (0..cout).map(|c| u8::from(c >= split)).collect()
         }
         SearchKind::Layerwise => {
-            let cu = u8::from(theta[1] > theta[0]);
+            let cu = argmax(theta) as u8;
             vec![cu; cout]
         }
     };
@@ -89,13 +129,19 @@ pub fn discretize(kind: SearchKind, theta: &[f32], cout: usize, layer: &str) -> 
 
 /// Build the one-hot θ logits that freeze an assignment (used for the
 /// Final-Training phase and for all deterministic baselines).
-pub fn one_hot_theta(kind: SearchKind, asg: &LayerAssignment) -> Vec<f32> {
+pub fn one_hot_theta(kind: SearchKind, asg: &LayerAssignment, n_cus: usize) -> Vec<f32> {
     let cout = asg.cu_of.len();
     match kind {
         SearchKind::Channel | SearchKind::Prune => {
-            let mut t = vec![-ONE_HOT_LOGIT; 2 * cout];
+            let k = kind.columns(n_cus);
+            let mut t = vec![-ONE_HOT_LOGIT; k * cout];
             for (c, &cu) in asg.cu_of.iter().enumerate() {
-                t[2 * c + cu as usize] = ONE_HOT_LOGIT;
+                assert!(
+                    (cu as usize) < k,
+                    "{}: channel {c} on CU {cu}, but θ has {k} columns",
+                    asg.layer
+                );
+                t[c * k + cu as usize] = ONE_HOT_LOGIT;
             }
             t
         }
@@ -117,48 +163,52 @@ pub fn one_hot_theta(kind: SearchKind, asg: &LayerAssignment) -> Vec<f32> {
                 "{}: layerwise θ requires a uniform assignment",
                 asg.layer
             );
-            let mut t = vec![-ONE_HOT_LOGIT; 2];
+            let mut t = vec![-ONE_HOT_LOGIT; n_cus];
             t[cu as usize] = ONE_HOT_LOGIT;
             t
         }
     }
 }
 
-/// Softmax over θ rows → expected channel counts `(n_cu0, n_cu1)` (the
-/// quantities the differentiable cost models consume).
-pub fn expected_counts(kind: SearchKind, theta: &[f32], cout: usize) -> (f64, f64) {
+/// Softmax over θ rows → expected channel count per CU column (the
+/// quantities the differentiable cost models consume). The returned vector
+/// has one entry per θ column and sums to `cout`.
+pub fn expected_counts(kind: SearchKind, theta: &[f32], cout: usize, n_cus: usize) -> Vec<f64> {
     match kind {
         SearchKind::Channel | SearchKind::Prune => {
-            let mut n0 = 0.0;
+            let k = kind.columns(n_cus);
+            let mut counts = vec![0.0f64; k];
             for c in 0..cout {
-                let (a, b) = (theta[2 * c] as f64, theta[2 * c + 1] as f64);
-                let m = a.max(b);
-                let ea = (a - m).exp();
-                let eb = (b - m).exp();
-                n0 += ea / (ea + eb);
+                let row = &theta[c * k..(c + 1) * k];
+                for (slot, p) in counts.iter_mut().zip(softmax(row)) {
+                    *slot += p;
+                }
             }
-            (n0, cout as f64 - n0)
+            counts
         }
         SearchKind::Split => {
             // g_c = P(split > c); n0 = Σ g_c
-            let m = theta.iter().cloned().fold(f32::MIN, f32::max) as f64;
-            let exps: Vec<f64> = theta.iter().map(|&t| ((t as f64) - m).exp()).collect();
-            let z: f64 = exps.iter().sum();
+            let probs = softmax(theta);
             let mut cum = 0.0;
             let mut n0 = 0.0;
-            for c in 0..cout {
-                cum += exps[c] / z;
+            for &p in probs.iter().take(cout) {
+                cum += p;
                 n0 += 1.0 - cum;
             }
-            (n0, cout as f64 - n0)
+            vec![n0, cout as f64 - n0]
         }
-        SearchKind::Layerwise => {
-            let (a, b) = (theta[0] as f64, theta[1] as f64);
-            let m = a.max(b);
-            let p0 = (a - m).exp() / ((a - m).exp() + (b - m).exp());
-            (p0 * cout as f64, (1.0 - p0) * cout as f64)
-        }
+        SearchKind::Layerwise => softmax(theta)
+            .into_iter()
+            .map(|p| p * cout as f64)
+            .collect(),
     }
+}
+
+fn softmax(row: &[f32]) -> Vec<f64> {
+    let m = row.iter().cloned().fold(f32::MIN, f32::max) as f64;
+    let exps: Vec<f64> = row.iter().map(|&t| ((t as f64) - m).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z).collect()
 }
 
 fn argmax(v: &[f32]) -> usize {
@@ -178,15 +228,28 @@ mod tests {
     #[test]
     fn discretize_channel() {
         let theta = vec![1.0, 0.0, -1.0, 2.0, 0.5, 0.5];
-        let a = discretize(SearchKind::Channel, &theta, 3, "l");
+        let a = discretize(SearchKind::Channel, &theta, 3, 2, "l");
         assert_eq!(a.cu_of, vec![0, 1, 0]); // ties go to CU 0
+    }
+
+    #[test]
+    fn discretize_channel_three_way() {
+        // rows of 3 logits on a 3-CU platform
+        let theta = vec![
+            1.0, 0.0, -1.0, // -> 0
+            -1.0, 2.0, 0.0, // -> 1
+            0.0, 0.5, 3.0, // -> 2
+            0.5, 0.5, 0.5, // tie -> 0
+        ];
+        let a = discretize(SearchKind::Channel, &theta, 4, 3, "l");
+        assert_eq!(a.cu_of, vec![0, 1, 2, 0]);
     }
 
     #[test]
     fn discretize_split_contiguous() {
         let mut theta = vec![0.0; 9]; // C=8
         theta[3] = 5.0;
-        let a = discretize(SearchKind::Split, &theta, 8, "l");
+        let a = discretize(SearchKind::Split, &theta, 8, 2, "l");
         assert_eq!(a.cu_of, vec![0, 0, 0, 1, 1, 1, 1, 1]);
         assert!(a.is_contiguous());
     }
@@ -194,14 +257,30 @@ mod tests {
     #[test]
     fn one_hot_roundtrip_channel() {
         let theta = vec![0.3, 0.9, 2.0, -1.0, 0.0, 0.1, -3.0, 4.0];
-        let a = discretize(SearchKind::Channel, &theta, 4, "l");
-        let oh = one_hot_theta(SearchKind::Channel, &a);
-        let a2 = discretize(SearchKind::Channel, &oh, 4, "l");
+        let a = discretize(SearchKind::Channel, &theta, 4, 2, "l");
+        let oh = one_hot_theta(SearchKind::Channel, &a, 2);
+        let a2 = discretize(SearchKind::Channel, &oh, 4, 2, "l");
         assert_eq!(a, a2);
         // and the expected counts at one-hot θ are (near-)integral
-        let (n0, n1) = expected_counts(SearchKind::Channel, &oh, 4);
-        assert!((n0 - a.count(0) as f64).abs() < 1e-6);
-        assert!((n1 - a.count(1) as f64).abs() < 1e-6);
+        let n = expected_counts(SearchKind::Channel, &oh, 4, 2);
+        assert!((n[0] - a.count(0) as f64).abs() < 1e-6);
+        assert!((n[1] - a.count(1) as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn one_hot_roundtrip_channel_three_way() {
+        let a = LayerAssignment {
+            layer: "l".into(),
+            cu_of: vec![2, 0, 1, 2, 1, 0],
+        };
+        let oh = one_hot_theta(SearchKind::Channel, &a, 3);
+        assert_eq!(oh.len(), 18);
+        let a2 = discretize(SearchKind::Channel, &oh, 6, 3, "l");
+        assert_eq!(a, a2);
+        let n = expected_counts(SearchKind::Channel, &oh, 6, 3);
+        for (col, &want) in [2usize, 2, 2].iter().enumerate() {
+            assert!((n[col] - want as f64).abs() < 1e-6, "col {col}: {n:?}");
+        }
     }
 
     #[test]
@@ -211,26 +290,49 @@ mod tests {
                 layer: "l".into(),
                 cu_of: (0..6).map(|c| u8::from(c >= split)).collect(),
             };
-            let oh = one_hot_theta(SearchKind::Split, &a);
-            let a2 = discretize(SearchKind::Split, &oh, 6, "l");
+            let oh = one_hot_theta(SearchKind::Split, &a, 2);
+            let a2 = discretize(SearchKind::Split, &oh, 6, 2, "l");
             assert_eq!(a, a2, "split={split}");
         }
     }
 
     #[test]
+    fn layerwise_three_way() {
+        let theta = vec![0.1, 2.0, -1.0];
+        let a = discretize(SearchKind::Layerwise, &theta, 5, 3, "l");
+        assert_eq!(a.cu_of, vec![1; 5]);
+        let oh = one_hot_theta(SearchKind::Layerwise, &a, 3);
+        assert_eq!(discretize(SearchKind::Layerwise, &oh, 5, 3, "l"), a);
+        let n = expected_counts(SearchKind::Layerwise, &oh, 5, 3);
+        assert!((n[1] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
     fn expected_counts_sum_to_cout() {
         let theta = vec![0.2, -0.4, 1.0, 1.0, -2.0, 0.7];
-        let (n0, n1) = expected_counts(SearchKind::Channel, &theta, 3);
-        assert!((n0 + n1 - 3.0).abs() < 1e-9);
+        let n = expected_counts(SearchKind::Channel, &theta, 3, 2);
+        assert!((n.iter().sum::<f64>() - 3.0).abs() < 1e-9);
         let theta_s = vec![0.1, -0.2, 0.5, 0.9];
-        let (m0, m1) = expected_counts(SearchKind::Split, &theta_s, 3);
-        assert!((m0 + m1 - 3.0).abs() < 1e-9);
-        assert!(m0 >= 0.0 && m1 >= 0.0);
+        let m = expected_counts(SearchKind::Split, &theta_s, 3, 2);
+        assert!((m.iter().sum::<f64>() - 3.0).abs() < 1e-9);
+        assert!(m.iter().all(|&x| x >= 0.0));
+        let theta_3 = vec![0.2, -0.4, 1.0, 1.0, -2.0, 0.7, 0.0, 0.1, 0.2];
+        let t = expected_counts(SearchKind::Channel, &theta_3, 3, 3);
+        assert_eq!(t.len(), 3);
+        assert!((t.iter().sum::<f64>() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn search_kind_from_str() {
+        assert_eq!("channel".parse::<SearchKind>().unwrap(), SearchKind::Channel);
+        assert_eq!("fixed".parse::<SearchKind>().unwrap(), SearchKind::Channel);
+        assert_eq!("split".parse::<SearchKind>().unwrap(), SearchKind::Split);
+        assert!("quantum".parse::<SearchKind>().is_err());
     }
 
     #[test]
     #[should_panic(expected = "θ length mismatch")]
     fn wrong_theta_len_panics() {
-        discretize(SearchKind::Channel, &[0.0; 3], 2, "l");
+        discretize(SearchKind::Channel, &[0.0; 3], 2, 2, "l");
     }
 }

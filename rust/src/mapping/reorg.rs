@@ -1,23 +1,22 @@
-//! The Fig. 4 layer re-organization pass.
+//! The Fig. 4 layer re-organization pass, for any CU count.
 //!
 //! ODiMO's raw output assigns channels to CUs in arbitrary interleaved
 //! order. Deployed as-is, the CU outputs would interleave in the shared
 //! memory and force data marshaling. The paper's pass instead:
 //!
 //! 1. permutes each layer's output channels (and weight filters) so that
-//!    all channels of the same CU are contiguous (a *stable* grouping —
-//!    relative order within a CU is preserved);
+//!    all channels of the same CU are contiguous, in ascending CU column
+//!    order (a *stable* grouping — relative order within a CU is
+//!    preserved);
 //! 2. permutes the **input**-channel dimension of the *next* layer's
 //!    weights by the same permutation, preserving network function;
-//! 3. splits the layer into one independent sub-layer per CU.
+//! 3. splits the layer into one independent sub-layer per active CU.
 //!
 //! Here the pass operates on the mapping metadata (the simulator consumes
 //! channel *counts*, not values), but it produces the exact permutations a
 //! code generator would apply to the tensors, and the tests verify the
 //! functional-preservation invariants (permutation validity, composition
 //! consistency, contiguity after grouping).
-
-
 
 use crate::soc::{LayerAssignment, Mapping};
 
@@ -37,7 +36,7 @@ pub struct LayerReorg {
     /// `perm[new_pos] = old_channel`: gather permutation applied to the
     /// layer's output channels / weight filters
     pub perm: Vec<usize>,
-    /// per-CU contiguous sub-layers in the new order
+    /// per-CU contiguous sub-layers in the new order (ascending CU column)
     pub sub_layers: Vec<SubLayer>,
     /// permutation the next layer must apply to its input-channel axis
     /// (identical to `perm` — recorded separately because the next layer
@@ -51,11 +50,12 @@ pub struct NetworkReorg {
     pub layers: Vec<LayerReorg>,
 }
 
-/// Stable grouping permutation: CU 0 channels first (original order), then
-/// CU 1. Returns `perm` with `perm[new] = old`.
-fn grouping_perm(asg: &LayerAssignment) -> Vec<usize> {
+/// Stable grouping permutation over `n_cus` columns: CU 0 channels first
+/// (original order), then CU 1, and so on. Returns `perm` with
+/// `perm[new] = old`.
+fn grouping_perm(asg: &LayerAssignment, n_cus: usize) -> Vec<usize> {
     let mut perm = Vec::with_capacity(asg.cu_of.len());
-    for want in 0..=1u8 {
+    for want in 0..n_cus as u8 {
         for (c, &cu) in asg.cu_of.iter().enumerate() {
             if cu == want {
                 perm.push(c);
@@ -67,25 +67,28 @@ fn grouping_perm(asg: &LayerAssignment) -> Vec<usize> {
 
 /// Apply the Fig. 4 pass to a whole mapping.
 pub fn reorganize(mapping: &Mapping) -> NetworkReorg {
+    assert!(
+        mapping.is_well_formed(),
+        "mapping references CU columns beyond platform '{}' ({} CUs)",
+        mapping.platform.name(),
+        mapping.platform.n_cus()
+    );
+    let n_cus = mapping.platform.n_cus();
     let mut layers = Vec::with_capacity(mapping.layers.len());
     for asg in &mapping.layers {
-        let perm = grouping_perm(asg);
-        let n0 = asg.count(0);
-        let n = asg.cu_of.len();
+        let perm = grouping_perm(asg, n_cus);
+        let counts = asg.counts(n_cus);
         let mut sub_layers = Vec::new();
-        if n0 > 0 {
-            sub_layers.push(SubLayer {
-                cu: 0,
-                start: 0,
-                end: n0,
-            });
-        }
-        if n0 < n {
-            sub_layers.push(SubLayer {
-                cu: 1,
-                start: n0,
-                end: n,
-            });
+        let mut start = 0usize;
+        for (cu, &n) in counts.iter().enumerate() {
+            if n > 0 {
+                sub_layers.push(SubLayer {
+                    cu: cu as u8,
+                    start,
+                    end: start + n,
+                });
+                start += n;
+            }
         }
         layers.push(LayerReorg {
             layer: asg.layer.clone(),
@@ -151,7 +154,7 @@ mod tests {
     fn grouping_makes_contiguous_and_stable() {
         let a = asg(vec![1, 0, 1, 0, 0, 1]);
         let m = Mapping {
-            platform: Platform::Diana,
+            platform: Platform::diana(),
             layers: vec![a.clone()],
         };
         let r = reorganize(&m);
@@ -169,7 +172,7 @@ mod tests {
     fn sub_layers_cover_exactly() {
         let a = asg(vec![1, 0, 1, 1]);
         let m = Mapping {
-            platform: Platform::Diana,
+            platform: Platform::diana(),
             layers: vec![a],
         };
         let r = reorganize(&m);
@@ -183,12 +186,34 @@ mod tests {
     fn single_cu_gives_one_sublayer_identity_perm() {
         let a = asg(vec![0, 0, 0]);
         let m = Mapping {
-            platform: Platform::Darkside,
+            platform: Platform::darkside(),
             layers: vec![a],
         };
         let r = reorganize(&m);
         assert_eq!(r.layers[0].perm, vec![0, 1, 2]);
         assert_eq!(r.layers[0].sub_layers.len(), 1);
+    }
+
+    #[test]
+    fn three_cu_grouping() {
+        let a = asg(vec![2, 0, 1, 2, 0, 1, 2]);
+        let m = Mapping {
+            platform: Platform::trident(),
+            layers: vec![a.clone()],
+        };
+        let r = reorganize(&m);
+        let lr = &r.layers[0];
+        assert!(lr.is_valid_permutation());
+        // CU0 (1, 4), CU1 (2, 5), CU2 (0, 3, 6)
+        assert_eq!(lr.perm, vec![1, 4, 2, 5, 0, 3, 6]);
+        let after = lr.reorganized_assignment(&a);
+        assert!(after.is_contiguous());
+        assert_eq!(after.cu_of, vec![0, 0, 1, 1, 2, 2, 2]);
+        let subs = &lr.sub_layers;
+        assert_eq!(subs.len(), 3);
+        assert_eq!((subs[0].cu, subs[0].start, subs[0].end), (0, 0, 2));
+        assert_eq!((subs[1].cu, subs[1].start, subs[1].end), (1, 2, 4));
+        assert_eq!((subs[2].cu, subs[2].start, subs[2].end), (2, 4, 7));
     }
 
     #[test]
@@ -198,7 +223,7 @@ mod tests {
         // undoes the output re-ordering.
         let a = asg(vec![1, 0, 0, 1, 0]);
         let m = Mapping {
-            platform: Platform::Diana,
+            platform: Platform::diana(),
             layers: vec![a],
         };
         let r = reorganize(&m);

@@ -1,25 +1,29 @@
 //! Analytical cycle/energy models — the *exact* (integer-ceil) versions of
-//! the differentiable models in `python/compile/costs.py`.
+//! the differentiable models in `python/compile/costs.py`, generalized to
+//! any registered platform.
 //!
 //! These are the models ODiMO searches with; `detailed.rs` is the
 //! event-driven "measured" reference they are validated against
-//! (Table III). The two sides share `hw/constants.json`, so the analytical
-//!↔ differentiable agreement is structural, and the analytical ↔ detailed
-//! gap is exactly the overhead terms the detailed simulator adds.
+//! (Table III). A CU's formula is selected by its descriptor's
+//! [`CuModel`]; the shared DMA/bank constants come from
+//! `hw/constants.json`, so the analytical ↔ differentiable agreement is
+//! structural, and the analytical ↔ detailed gap is exactly the overhead
+//! terms the detailed simulator adds.
 
 use super::hw::HwConstants;
-use super::model::{Cu, CuCost, ExecReport, Layer, LayerReport, LayerType, Mapping, Platform};
+use super::model::{CuCost, ExecReport, Layer, LayerReport, LayerType, Mapping};
+use super::spec::{CuModel, CuSpec, Platform};
 
 fn ceil_div(a: usize, b: usize) -> usize {
     a.div_ceil(b)
 }
 
-/// Input-activation DMA load, counted by the *Darkside* analytical model
-/// only. The paper's Table III attributes DIANA's larger model errors to
-/// "neglected latency components, leading to a constant underestimation";
-/// its Darkside models are more complete (9%/16% error vs 42%/37%). We
-/// reproduce that asymmetry structurally: the Darkside model includes the
-/// L2→L1 input DMA, the DIANA model does not.
+/// Input-activation DMA load, counted by the analytical model only for CUs
+/// whose descriptor sets `input_dma` (the Darkside CUs). The paper's
+/// Table III attributes DIANA's larger model errors to "neglected latency
+/// components, leading to a constant underestimation"; its Darkside models
+/// are more complete (9%/16% error vs 42%/37%). We reproduce that
+/// asymmetry structurally via the per-CU flag.
 fn dma_in_cycles(layer: &Layer) -> u64 {
     let d = &HwConstants::load().detailed_sim;
     d.dma_setup_cycles + (layer.input_bytes() as f64 / d.dma_bytes_per_cycle) as u64
@@ -27,85 +31,88 @@ fn dma_in_cycles(layer: &Layer) -> u64 {
 
 /// Cycles for `n` output channels of `layer` on `cu`.
 ///
-/// For `LayerType::Search` layers the operation is CU-dependent (the
-/// Darkside search space): standard conv on the cluster, depthwise on the
-/// DWE.
-pub fn cu_cycles(cu: Cu, layer: &Layer, n: usize) -> u64 {
+/// For [`LayerType::Search`] layers the operation is CU-dependent:
+/// standard conv on grid/cluster-style CUs, depthwise on a DW engine.
+pub fn cu_cycles(cu: &CuSpec, layer: &Layer, n: usize) -> u64 {
     if n == 0 {
         return 0;
     }
-    let hw = HwConstants::load();
-    match cu {
-        Cu::DianaDigital => {
-            let d = &hw.diana.digital;
+    let base = match cu.model {
+        CuModel::PeGrid {
+            pe_rows,
+            pe_cols,
+            macs_per_cycle_per_pe,
+            weight_load_bytes_per_cycle,
+            dw_inefficiency,
+        } => {
             let kdim = match layer.ltype {
                 LayerType::Dw => layer.k * layer.k,
                 _ => layer.cin * layer.k * layer.k,
             };
-            let inner = ceil_div(kdim, d.pe_cols);
-            let mut compute = (ceil_div(n, d.pe_rows) * inner * layer.ox * layer.oy) as f64
-                / d.macs_per_cycle_per_pe;
+            let inner = ceil_div(kdim, pe_cols);
+            let mut compute = (ceil_div(n, pe_rows) * inner * layer.ox * layer.oy) as f64
+                / macs_per_cycle_per_pe;
             if layer.ltype == LayerType::Dw {
-                compute *= hw.diana.dw_digital_inefficiency;
+                compute *= dw_inefficiency;
             }
-            let wload = (n * kdim) as f64 / d.weight_load_bytes_per_cycle;
-            (compute + wload) as u64 + d.setup_cycles
+            let wload = (n * kdim) as f64 / weight_load_bytes_per_cycle;
+            (compute + wload) as u64
         }
-        Cu::DianaAnalog => {
-            let a = &hw.diana.analog;
+        CuModel::AnalogArray {
+            array_rows,
+            array_cols,
+            cells_load_per_cycle,
+            cycles_per_analog_op,
+        } => {
             let kdim = match layer.ltype {
                 LayerType::Dw => layer.k * layer.k,
                 _ => layer.cin * layer.k * layer.k,
             };
-            let row_tiles = ceil_div(kdim, a.array_rows);
-            let col_tiles = ceil_div(n, a.array_cols);
-            let cells = (n * kdim) as f64;
-            let load = cells / a.cells_load_per_cycle;
-            let compute = (row_tiles * col_tiles * layer.ox * layer.oy) as f64
-                * a.cycles_per_analog_op;
-            (load + compute) as u64 + a.setup_cycles
+            let row_tiles = ceil_div(kdim, array_rows);
+            let col_tiles = ceil_div(n, array_cols);
+            let load = (n * kdim) as f64 / cells_load_per_cycle;
+            let compute =
+                (row_tiles * col_tiles * layer.ox * layer.oy) as f64 * cycles_per_analog_op;
+            (load + compute) as u64
         }
-        Cu::DarksideCluster => {
-            let c = &hw.darkside.cluster;
-            // on the cluster a Search layer executes as a standard conv
+        CuModel::SimdCluster {
+            macs_per_cycle_std,
+            macs_per_cycle_dw,
+            im2col_overhead,
+            ..
+        } => {
+            // a Search layer executes as a standard conv on the cluster
             let (macs, eff, ovh) = match layer.ltype {
-                LayerType::Dw => (layer.macs_dw(n) as f64, c.macs_per_cycle_dw, 1.0),
-                _ => (
-                    layer.macs_std(n) as f64,
-                    c.macs_per_cycle_std,
-                    c.im2col_overhead,
-                ),
+                LayerType::Dw => (layer.macs_dw(n) as f64, macs_per_cycle_dw, 1.0),
+                _ => (layer.macs_std(n) as f64, macs_per_cycle_std, im2col_overhead),
             };
-            (macs * ovh / eff) as u64 + c.setup_cycles + dma_in_cycles(layer)
+            (macs * ovh / eff) as u64
         }
-        Cu::DarksideDwe => {
-            let d = &hw.darkside.dwe;
-            // the DWE only ever runs depthwise
+        CuModel::DwEngine {
+            macs_per_cycle,
+            weight_cfg_cells_per_cycle,
+        } => {
+            // a DW engine only ever runs depthwise
             let macs = layer.macs_dw(n) as f64;
-            let cfg = (n * layer.k * layer.k) as f64 / d.weight_cfg_cells_per_cycle;
-            (macs / d.macs_per_cycle + cfg) as u64 + d.setup_cycles + dma_in_cycles(layer)
+            let cfg = (n * layer.k * layer.k) as f64 / weight_cfg_cells_per_cycle;
+            (macs / macs_per_cycle + cfg) as u64
         }
-    }
+    };
+    let dma = if cu.input_dma { dma_in_cycles(layer) } else { 0 };
+    base + cu.setup_cycles + dma
 }
 
-/// Platform power vector `[p_cu0, p_cu1]` + idle power + frequency (MHz).
-pub fn power(platform: Platform) -> ([f64; 2], f64, f64) {
-    let hw = HwConstants::load();
-    match platform {
-        Platform::Diana => (
-            [hw.diana.digital.p_act_mw, hw.diana.analog.p_act_mw],
-            hw.diana.p_idle_mw,
-            hw.diana.freq_mhz,
-        ),
-        Platform::Darkside => (
-            [hw.darkside.cluster.p_act_mw, hw.darkside.dwe.p_act_mw],
-            hw.darkside.p_idle_mw,
-            hw.darkside.freq_mhz,
-        ),
-    }
+/// Platform power: per-CU active power vector (column order), idle power
+/// and frequency (MHz).
+pub fn power(platform: Platform) -> (Vec<f64>, f64, f64) {
+    (
+        platform.cus().iter().map(|c| c.p_act_mw).collect(),
+        platform.p_idle_mw(),
+        platform.freq_mhz(),
+    )
 }
 
-/// Layers whose two stages are sequential (DW on the DWE feeding a
+/// Layers whose CU stages are sequential (DW on the DWE feeding a
 /// pointwise on the cluster — the ImageNet DW-vs-DWSep search space).
 pub fn is_sequential(search_kind: &str, layer: &Layer) -> bool {
     search_kind == "dwsep" && layer.searchable
@@ -113,36 +120,46 @@ pub fn is_sequential(search_kind: &str, layer: &Layer) -> bool {
 
 /// Execute a mapping through the analytical model.
 ///
-/// `seq_layers` lists layers whose CU stages are sequential (DW→PW).
+/// `seq_layers` lists layers whose CU stages are sequential (DW→PW); their
+/// latency is the *sum* of the active CU times instead of the max.
 pub fn execute(layers: &[Layer], mapping: &Mapping, seq_layers: &[String]) -> ExecReport {
+    assert!(
+        mapping.is_well_formed(),
+        "mapping references CU columns beyond platform '{}' ({} CUs)",
+        mapping.platform.name(),
+        mapping.platform.n_cus()
+    );
     let platform = mapping.platform;
     let cus = platform.cus();
+    let k = cus.len();
     let mut reports = Vec::with_capacity(layers.len());
     let mut total = 0u64;
-    let mut busy = [0u64; 2];
+    let mut busy = vec![0u64; k];
     for (layer, asg) in layers.iter().zip(&mapping.layers) {
         debug_assert_eq!(layer.name, asg.layer);
-        let n0 = asg.count(0);
-        let n1 = asg.count(1);
-        let c0 = cu_cycles(cus[0], layer, n0);
-        let c1 = cu_cycles(cus[1], layer, n1);
+        let counts = asg.counts(k);
+        let cycles: Vec<u64> = cus
+            .iter()
+            .zip(&counts)
+            .map(|(cu, &n)| cu_cycles(cu, layer, n))
+            .collect();
         let sequential = seq_layers.iter().any(|s| s == &layer.name);
-        let latency = if sequential { c0 + c1 } else { c0.max(c1) };
-        busy[0] += c0;
-        busy[1] += c1;
+        let latency = if sequential {
+            cycles.iter().sum()
+        } else {
+            cycles.iter().copied().max().unwrap_or(0)
+        };
+        for (b, &c) in busy.iter_mut().zip(&cycles) {
+            *b += c;
+        }
         total += latency;
         reports.push(LayerReport {
             layer: layer.name.clone(),
-            per_cu: [
-                CuCost {
-                    cycles: c0,
-                    channels: n0,
-                },
-                CuCost {
-                    cycles: c1,
-                    channels: n1,
-                },
-            ],
+            per_cu: cycles
+                .iter()
+                .zip(&counts)
+                .map(|(&cycles, &channels)| CuCost { cycles, channels })
+                .collect(),
             latency,
             sequential,
         });
@@ -152,22 +169,26 @@ pub fn execute(layers: &[Layer], mapping: &Mapping, seq_layers: &[String]) -> Ex
     let active_nj: f64 = reports
         .iter()
         .map(|r| {
-            (p_act[0] * r.per_cu[0].cycles as f64 + p_act[1] * r.per_cu[1].cycles as f64)
+            r.per_cu
+                .iter()
+                .zip(&p_act)
+                .map(|(c, p)| p * c.cycles as f64)
+                .sum::<f64>()
                 * us_per_cycle
         })
         .sum();
     let idle_nj = p_idle * total as f64 * us_per_cycle;
     let energy_uj = (active_nj + idle_nj) * 1e-3;
-    let util = [
-        busy[0] as f64 / total.max(1) as f64,
-        busy[1] as f64 / total.max(1) as f64,
-    ];
+    let utilization = busy
+        .iter()
+        .map(|&b| b as f64 / total.max(1) as f64)
+        .collect();
     ExecReport {
         platform,
         layers: reports,
         total_cycles: total,
         energy_uj,
-        utilization: util,
+        utilization,
         latency_ms: total as f64 * us_per_cycle / 1e3,
     }
 }
@@ -175,6 +196,7 @@ pub fn execute(layers: &[Layer], mapping: &Mapping, seq_layers: &[String]) -> Ex
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::soc::model::{LayerAssignment, Mapping};
 
     fn conv_layer(cin: usize, cout: usize, hw: usize) -> Layer {
         Layer {
@@ -190,32 +212,30 @@ mod tests {
         }
     }
 
+    fn all_cus() -> Vec<&'static CuSpec> {
+        let mut out = Vec::new();
+        for p in [Platform::diana(), Platform::darkside(), Platform::trident()] {
+            out.extend(p.cus().iter());
+        }
+        out
+    }
+
     #[test]
     fn zero_channels_zero_cycles() {
         let l = conv_layer(16, 32, 8);
-        for cu in [
-            Cu::DianaDigital,
-            Cu::DianaAnalog,
-            Cu::DarksideCluster,
-            Cu::DarksideDwe,
-        ] {
-            assert_eq!(cu_cycles(cu, &l, 0), 0);
+        for cu in all_cus() {
+            assert_eq!(cu_cycles(cu, &l, 0), 0, "{}", cu.name);
         }
     }
 
     #[test]
     fn monotone_in_channels() {
         let l = conv_layer(16, 64, 16);
-        for cu in [
-            Cu::DianaDigital,
-            Cu::DianaAnalog,
-            Cu::DarksideCluster,
-            Cu::DarksideDwe,
-        ] {
+        for cu in all_cus() {
             let mut prev = 0;
             for n in 1..=64 {
                 let c = cu_cycles(cu, &l, n);
-                assert!(c >= prev, "{cu:?} not monotone at n={n}");
+                assert!(c >= prev, "{} not monotone at n={n}", cu.name);
                 prev = c;
             }
         }
@@ -226,8 +246,9 @@ mod tests {
         // the whole point of the DWE: a depthwise workload is far cheaper
         // there than a standard conv of the same layer on the cluster
         let l = conv_layer(64, 64, 16);
-        let dwe = cu_cycles(Cu::DarksideDwe, &l, 64);
-        let cluster = cu_cycles(Cu::DarksideCluster, &l, 64);
+        let cus = Platform::darkside().cus();
+        let cluster = cu_cycles(&cus[0], &l, 64);
+        let dwe = cu_cycles(&cus[1], &l, 64);
         assert!(
             (cluster as f64) > 4.0 * dwe as f64,
             "cluster {cluster} vs dwe {dwe}"
@@ -237,24 +258,24 @@ mod tests {
     #[test]
     fn analog_faster_than_digital_on_big_convs() {
         let l = conv_layer(64, 64, 16);
-        let d = cu_cycles(Cu::DianaDigital, &l, 64);
-        let a = cu_cycles(Cu::DianaAnalog, &l, 64);
+        let cus = Platform::diana().cus();
+        let d = cu_cycles(&cus[0], &l, 64);
+        let a = cu_cycles(&cus[1], &l, 64);
         assert!(a < d, "analog {a} not faster than digital {d}");
     }
 
     #[test]
     fn execute_splits_and_balances() {
-        use crate::soc::model::{LayerAssignment, Mapping};
         // layer must be large enough to amortize the analog array's
         // setup + per-pixel ADC cost — that's exactly the regime where
         // intra-layer splitting pays off (the paper's motivation)
         let layers = vec![conv_layer(64, 64, 16)];
         let all0 = Mapping {
-            platform: Platform::Diana,
+            platform: Platform::diana(),
             layers: vec![LayerAssignment::all_on("t", 64, 0)],
         };
         let split = Mapping {
-            platform: Platform::Diana,
+            platform: Platform::diana(),
             layers: vec![LayerAssignment {
                 layer: "t".into(),
                 cu_of: (0..64).map(|c| u8::from(c >= 32)).collect(),
@@ -269,7 +290,8 @@ mod tests {
             r0.total_cycles
         );
         assert!(rs.energy_uj > 0.0 && r0.energy_uj > 0.0);
-        assert!((rs.cu1_channel_fraction() - 0.5).abs() < 1e-9);
+        assert!((rs.channel_fraction(1) - 0.5).abs() < 1e-9);
+        assert!((rs.offload_channel_fraction() - 0.5).abs() < 1e-9);
     }
 
     #[test]
@@ -279,13 +301,12 @@ mod tests {
         // cheaper — the crossover the min-cost baseline exploits when it
         // assigns the stem to the digital CU
         let layers = vec![conv_layer(3, 8, 4)];
-        use crate::soc::model::{LayerAssignment, Mapping};
         let all0 = Mapping {
-            platform: Platform::Diana,
+            platform: Platform::diana(),
             layers: vec![LayerAssignment::all_on("t", 8, 0)],
         };
         let split = Mapping {
-            platform: Platform::Diana,
+            platform: Platform::diana(),
             layers: vec![LayerAssignment {
                 layer: "t".into(),
                 cu_of: (0..8).map(|c| u8::from(c >= 4)).collect(),
@@ -303,10 +324,9 @@ mod tests {
 
     #[test]
     fn sequential_layers_add() {
-        use crate::soc::model::{LayerAssignment, Mapping};
         let layers = vec![conv_layer(16, 32, 8)];
         let m = Mapping {
-            platform: Platform::Darkside,
+            platform: Platform::darkside(),
             layers: vec![LayerAssignment {
                 layer: "t".into(),
                 cu_of: (0..32).map(|c| u8::from(c >= 16)).collect(),
@@ -319,5 +339,31 @@ mod tests {
             seq.total_cycles,
             par.layers[0].per_cu[0].cycles + par.layers[0].per_cu[1].cycles
         );
+    }
+
+    #[test]
+    fn tri_cu_execute_reports_three_columns() {
+        let layers = vec![conv_layer(32, 48, 16)];
+        let m = Mapping {
+            platform: Platform::trident(),
+            layers: vec![LayerAssignment {
+                layer: "t".into(),
+                cu_of: (0..48).map(|c| (c / 16) as u8).collect(),
+            }],
+        };
+        assert!(m.is_well_formed());
+        let r = execute(&layers, &m, &[]);
+        assert_eq!(r.n_cus(), 3);
+        assert_eq!(r.layers[0].per_cu.len(), 3);
+        for col in 0..3 {
+            assert_eq!(r.layers[0].per_cu[col].channels, 16);
+            assert!(r.layers[0].per_cu[col].cycles > 0);
+            assert!((r.channel_fraction(col) - 1.0 / 3.0).abs() < 1e-9);
+        }
+        // latency is the slowest column, and all three contribute busy time
+        let worst = r.layers[0].per_cu.iter().map(|c| c.cycles).max().unwrap();
+        assert_eq!(r.total_cycles, worst);
+        assert!(r.utilization.iter().all(|&u| u > 0.0 && u <= 1.0));
+        assert!((r.offload_channel_fraction() - 2.0 / 3.0).abs() < 1e-9);
     }
 }

@@ -1,7 +1,14 @@
-//! Hardware constants — deserialized from `hw/constants.json`, the single
-//! source of truth shared with the Python differentiable cost models
-//! (`python/compile/costs.py`). The file is embedded at compile time so
-//! the simulator cannot drift from the checked-in constants.
+//! Shared hardware constants — the `detailed_sim` globals (DMA engine, L1
+//! banking, fabric sync, pipeline warm-up) both simulators read.
+//!
+//! Per-CU cost coefficients live in the platform descriptors
+//! (`hw/<name>.json` → [`super::spec`]); `hw/constants.json` keeps the
+//! legacy flat view of the DIANA/Darkside numbers for the Python
+//! differentiable cost models (`python/compile/costs.py`) plus the
+//! `detailed_sim` section parsed here. The file is read from the checkout
+//! at runtime (so constants can be tuned without recompiling) with the
+//! compile-time embedded copy as fallback; a drift test asserts the legacy
+//! view matches the descriptors coefficient-for-coefficient.
 
 use anyhow::Result;
 
@@ -9,61 +16,7 @@ use crate::util::json::{parse, Value};
 
 pub const HW_JSON: &str = include_str!("../../../hw/constants.json");
 
-#[derive(Debug, Clone)]
-pub struct DianaDigital {
-    pub pe_rows: usize,
-    pub pe_cols: usize,
-    pub macs_per_cycle_per_pe: f64,
-    pub weight_load_bytes_per_cycle: f64,
-    pub setup_cycles: u64,
-    pub p_act_mw: f64,
-}
-
-#[derive(Debug, Clone)]
-pub struct DianaAnalog {
-    pub array_rows: usize,
-    pub array_cols: usize,
-    pub cells_load_per_cycle: f64,
-    pub cycles_per_analog_op: f64,
-    pub setup_cycles: u64,
-    pub p_act_mw: f64,
-}
-
-#[derive(Debug, Clone)]
-pub struct Diana {
-    pub freq_mhz: f64,
-    pub digital: DianaDigital,
-    pub analog: DianaAnalog,
-    pub p_idle_mw: f64,
-    pub dw_digital_inefficiency: f64,
-}
-
-#[derive(Debug, Clone)]
-pub struct DarksideCluster {
-    pub cores: usize,
-    pub macs_per_cycle_std: f64,
-    pub macs_per_cycle_dw: f64,
-    pub im2col_overhead: f64,
-    pub setup_cycles: u64,
-    pub p_act_mw: f64,
-}
-
-#[derive(Debug, Clone)]
-pub struct DarksideDwe {
-    pub macs_per_cycle: f64,
-    pub weight_cfg_cells_per_cycle: f64,
-    pub setup_cycles: u64,
-    pub p_act_mw: f64,
-}
-
-#[derive(Debug, Clone)]
-pub struct Darkside {
-    pub freq_mhz: f64,
-    pub cluster: DarksideCluster,
-    pub dwe: DarksideDwe,
-    pub p_idle_mw: f64,
-}
-
+/// Detailed-simulator globals (shared by every platform).
 #[derive(Debug, Clone)]
 pub struct DetailedSim {
     pub dma_setup_cycles: u64,
@@ -72,67 +25,16 @@ pub struct DetailedSim {
     pub bank_conflict_prob: f64,
     pub fabric_sync_cycles: u64,
     pub pipeline_warmup_rows: u64,
-    pub diana_analog_variability: f64,
-    pub diana_digital_stall_factor: f64,
-    pub darkside_cluster_stall_factor: f64,
-    pub darkside_dwe_stall_factor: f64,
 }
 
 #[derive(Debug, Clone)]
 pub struct HwConstants {
-    pub diana: Diana,
-    pub darkside: Darkside,
     pub detailed_sim: DetailedSim,
 }
 
 fn parse_constants(v: &Value) -> Result<HwConstants> {
-    let di = v.req("diana")?;
-    let dd = di.req("digital")?;
-    let da = di.req("analog")?;
-    let ds = v.req("darkside")?;
-    let dc = ds.req("cluster")?;
-    let dw = ds.req("dwe")?;
     let de = v.req("detailed_sim")?;
     Ok(HwConstants {
-        diana: Diana {
-            freq_mhz: di.f64_of("freq_mhz")?,
-            digital: DianaDigital {
-                pe_rows: dd.usize_of("pe_rows")?,
-                pe_cols: dd.usize_of("pe_cols")?,
-                macs_per_cycle_per_pe: dd.f64_of("macs_per_cycle_per_pe")?,
-                weight_load_bytes_per_cycle: dd.f64_of("weight_load_bytes_per_cycle")?,
-                setup_cycles: dd.f64_of("setup_cycles")? as u64,
-                p_act_mw: dd.f64_of("p_act_mw")?,
-            },
-            analog: DianaAnalog {
-                array_rows: da.usize_of("array_rows")?,
-                array_cols: da.usize_of("array_cols")?,
-                cells_load_per_cycle: da.f64_of("cells_load_per_cycle")?,
-                cycles_per_analog_op: da.f64_of("cycles_per_analog_op")?,
-                setup_cycles: da.f64_of("setup_cycles")? as u64,
-                p_act_mw: da.f64_of("p_act_mw")?,
-            },
-            p_idle_mw: di.f64_of("p_idle_mw")?,
-            dw_digital_inefficiency: di.f64_of("dw_digital_inefficiency")?,
-        },
-        darkside: Darkside {
-            freq_mhz: ds.f64_of("freq_mhz")?,
-            cluster: DarksideCluster {
-                cores: dc.usize_of("cores")?,
-                macs_per_cycle_std: dc.f64_of("macs_per_cycle_std")?,
-                macs_per_cycle_dw: dc.f64_of("macs_per_cycle_dw")?,
-                im2col_overhead: dc.f64_of("im2col_overhead")?,
-                setup_cycles: dc.f64_of("setup_cycles")? as u64,
-                p_act_mw: dc.f64_of("p_act_mw")?,
-            },
-            dwe: DarksideDwe {
-                macs_per_cycle: dw.f64_of("macs_per_cycle")?,
-                weight_cfg_cells_per_cycle: dw.f64_of("weight_cfg_cells_per_cycle")?,
-                setup_cycles: dw.f64_of("setup_cycles")? as u64,
-                p_act_mw: dw.f64_of("p_act_mw")?,
-            },
-            p_idle_mw: ds.f64_of("p_idle_mw")?,
-        },
         detailed_sim: DetailedSim {
             dma_setup_cycles: de.f64_of("dma_setup_cycles")? as u64,
             dma_bytes_per_cycle: de.f64_of("dma_bytes_per_cycle")?,
@@ -140,21 +42,37 @@ fn parse_constants(v: &Value) -> Result<HwConstants> {
             bank_conflict_prob: de.f64_of("bank_conflict_prob")?,
             fabric_sync_cycles: de.f64_of("fabric_sync_cycles")? as u64,
             pipeline_warmup_rows: de.f64_of("pipeline_warmup_rows")? as u64,
-            diana_analog_variability: de.f64_of("diana_analog_variability")?,
-            diana_digital_stall_factor: de.f64_of("diana_digital_stall_factor")?,
-            darkside_cluster_stall_factor: de.f64_of("darkside_cluster_stall_factor")?,
-            darkside_dwe_stall_factor: de.f64_of("darkside_dwe_stall_factor")?,
         },
     })
 }
 
 impl HwConstants {
+    /// The active constants: `repo_root()/hw/constants.json` when readable,
+    /// the embedded copy otherwise. Cached for the process lifetime.
     pub fn load() -> &'static HwConstants {
         use std::sync::OnceLock;
         static HW: OnceLock<HwConstants> = OnceLock::new();
         HW.get_or_init(|| {
-            let v = parse(HW_JSON).expect("hw/constants.json parses");
-            parse_constants(&v).expect("hw/constants.json has all fields")
+            let path = crate::repo_root().join("hw").join("constants.json");
+            let from_file = std::fs::read_to_string(&path).ok().and_then(|text| {
+                match parse(&text).and_then(|v| parse_constants(&v)) {
+                    Ok(hw) => Some(hw),
+                    Err(e) => {
+                        // a checkout file that exists but doesn't parse is
+                        // a tuning mistake, not a missing file — say so
+                        // instead of silently using the embedded defaults
+                        eprintln!(
+                            "warning: {} is unreadable ({e:#}); using embedded constants",
+                            path.display()
+                        );
+                        None
+                    }
+                }
+            });
+            from_file.unwrap_or_else(|| {
+                let v = parse(HW_JSON).expect("embedded hw/constants.json parses");
+                parse_constants(&v).expect("embedded hw/constants.json has all fields")
+            })
         })
     }
 }
@@ -162,15 +80,132 @@ impl HwConstants {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::soc::spec::{CuModel, Platform};
 
     #[test]
     fn constants_parse_and_are_sane() {
         let hw = HwConstants::load();
-        assert_eq!(hw.diana.digital.pe_rows, 16);
-        assert!(hw.diana.analog.array_rows * hw.diana.analog.array_cols >= 500_000);
-        assert!(hw.darkside.cluster.macs_per_cycle_std > hw.darkside.cluster.macs_per_cycle_dw);
-        assert!(hw.darkside.dwe.macs_per_cycle > hw.darkside.cluster.macs_per_cycle_dw);
-        assert!(hw.detailed_sim.bank_conflict_prob < 1.0);
-        assert!(hw.diana.freq_mhz > 0.0 && hw.darkside.freq_mhz > 0.0);
+        let d = &hw.detailed_sim;
+        assert!(d.dma_bytes_per_cycle > 0.0);
+        assert!((0.0..1.0).contains(&d.bank_conflict_prob));
+        assert!(d.l1_banks > 0);
+        assert!(d.fabric_sync_cycles > 0);
+    }
+
+    /// `hw/constants.json` is the legacy flat view of the built-in
+    /// descriptors; this pins every shared coefficient so the Python cost
+    /// models and the Rust specs cannot drift apart.
+    #[test]
+    fn legacy_constants_match_builtin_specs() {
+        let v = parse(HW_JSON).unwrap();
+
+        let diana = Platform::diana().spec();
+        let dj = v.req("diana").unwrap();
+        assert_eq!(dj.f64_of("freq_mhz").unwrap(), diana.freq_mhz);
+        assert_eq!(dj.f64_of("p_idle_mw").unwrap(), diana.p_idle_mw);
+        let digital = &diana.cus[0];
+        let dd = dj.req("digital").unwrap();
+        assert_eq!(dd.usize_of("setup_cycles").unwrap() as u64, digital.setup_cycles);
+        assert_eq!(dd.f64_of("p_act_mw").unwrap(), digital.p_act_mw);
+        match digital.model {
+            CuModel::PeGrid {
+                pe_rows,
+                pe_cols,
+                macs_per_cycle_per_pe,
+                weight_load_bytes_per_cycle,
+                dw_inefficiency,
+            } => {
+                assert_eq!(dd.usize_of("pe_rows").unwrap(), pe_rows);
+                assert_eq!(pe_rows, 16, "DIANA's grid is 16x16 in the paper");
+                assert_eq!(dd.usize_of("pe_cols").unwrap(), pe_cols);
+                assert_eq!(
+                    dd.f64_of("macs_per_cycle_per_pe").unwrap(),
+                    macs_per_cycle_per_pe
+                );
+                assert_eq!(
+                    dd.f64_of("weight_load_bytes_per_cycle").unwrap(),
+                    weight_load_bytes_per_cycle
+                );
+                assert_eq!(
+                    dj.f64_of("dw_digital_inefficiency").unwrap(),
+                    dw_inefficiency
+                );
+            }
+            ref other => panic!("diana cu0 should be a pe_grid, got {other:?}"),
+        }
+        let analog = &diana.cus[1];
+        let da = dj.req("analog").unwrap();
+        assert_eq!(da.usize_of("setup_cycles").unwrap() as u64, analog.setup_cycles);
+        assert_eq!(da.f64_of("p_act_mw").unwrap(), analog.p_act_mw);
+        match analog.model {
+            CuModel::AnalogArray {
+                array_rows,
+                array_cols,
+                cells_load_per_cycle,
+                cycles_per_analog_op,
+            } => {
+                assert_eq!(da.usize_of("array_rows").unwrap(), array_rows);
+                assert_eq!(da.usize_of("array_cols").unwrap(), array_cols);
+                assert!(array_rows * array_cols >= 500_000, "500k-cell AIMC array");
+                assert_eq!(
+                    da.f64_of("cells_load_per_cycle").unwrap(),
+                    cells_load_per_cycle
+                );
+                assert_eq!(
+                    da.f64_of("cycles_per_analog_op").unwrap(),
+                    cycles_per_analog_op
+                );
+            }
+            ref other => panic!("diana cu1 should be an analog_array, got {other:?}"),
+        }
+
+        let darkside = Platform::darkside().spec();
+        let sj = v.req("darkside").unwrap();
+        assert_eq!(sj.f64_of("freq_mhz").unwrap(), darkside.freq_mhz);
+        assert_eq!(sj.f64_of("p_idle_mw").unwrap(), darkside.p_idle_mw);
+        let cluster = &darkside.cus[0];
+        let sc = sj.req("cluster").unwrap();
+        match cluster.model {
+            CuModel::SimdCluster {
+                cores,
+                macs_per_cycle_std,
+                macs_per_cycle_dw,
+                im2col_overhead,
+            } => {
+                assert_eq!(sc.usize_of("cores").unwrap(), cores);
+                assert_eq!(sc.f64_of("macs_per_cycle_std").unwrap(), macs_per_cycle_std);
+                assert_eq!(sc.f64_of("macs_per_cycle_dw").unwrap(), macs_per_cycle_dw);
+                assert!(
+                    macs_per_cycle_std > macs_per_cycle_dw,
+                    "software dw is the cluster's weak spot"
+                );
+                assert_eq!(sc.f64_of("im2col_overhead").unwrap(), im2col_overhead);
+            }
+            ref other => panic!("darkside cu0 should be a simd_cluster, got {other:?}"),
+        }
+        let dwe = &darkside.cus[1];
+        let sd = sj.req("dwe").unwrap();
+        match (&dwe.model, &cluster.model) {
+            (
+                CuModel::DwEngine {
+                    macs_per_cycle,
+                    weight_cfg_cells_per_cycle,
+                },
+                CuModel::SimdCluster {
+                    macs_per_cycle_dw, ..
+                },
+            ) => {
+                assert_eq!(sd.f64_of("macs_per_cycle").unwrap(), *macs_per_cycle);
+                assert_eq!(
+                    sd.f64_of("weight_cfg_cells_per_cycle").unwrap(),
+                    *weight_cfg_cells_per_cycle
+                );
+                assert!(
+                    *macs_per_cycle > *macs_per_cycle_dw,
+                    "the DWE must beat the cluster at its own game"
+                );
+            }
+            other => panic!("unexpected darkside models: {other:?}"),
+        }
     }
 }

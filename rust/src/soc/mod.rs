@@ -1,12 +1,21 @@
-//! SoC simulation substrate: the DIANA and Darkside platforms.
+//! SoC simulation substrate: the data-driven platform registry plus two
+//! simulators that execute mappings on any registered platform.
 //!
-//! The paper evaluates ODiMO mappings on two physical SoCs that are not
+//! The paper evaluates ODiMO mappings on physical SoCs that are not
 //! available here, so this module *is* the hardware (DESIGN.md §2):
 //!
-//! * [`hw`] — constants shared with the Python cost models;
-//! * [`model`] — layers, CUs, mappings, execution reports;
+//! * [`spec`] — the platform registry: [`PlatformSpec`] / [`CuSpec`] /
+//!   [`CuModel`] descriptors loaded from `hw/<name>.json` (schema:
+//!   `hw/README.md`). DIANA, Darkside, and the synthetic tri-CU `trident`
+//!   SoC ship as built-ins; any further descriptor dropped under `hw/` is
+//!   discovered at runtime — CU counts are unbounded and nothing
+//!   downstream hardcodes "two";
+//! * [`hw`] — the shared detailed-sim constants (`hw/constants.json`,
+//!   also read by the Python differentiable cost models);
+//! * [`model`] — layers, N-way mappings, execution reports;
 //! * [`analytical`] — the exact integer version of the differentiable
-//!   cost models (what ODiMO believes);
+//!   cost models (what ODiMO believes), dispatching per CU on its
+//!   descriptor's cost-model kind;
 //! * [`detailed`] — the event-driven simulator standing in for silicon
 //!   measurements (what the deployment tables report).
 //!
@@ -17,13 +26,19 @@ pub mod analytical;
 pub mod detailed;
 pub mod hw;
 pub mod model;
+pub mod spec;
 
-pub use model::{Cu, CuCost, ExecReport, Layer, LayerAssignment, LayerReport, LayerType, Mapping, Platform};
+pub use model::{
+    CuCost, ExecReport, Layer, LayerAssignment, LayerReport, LayerType, Mapping,
+};
+pub use spec::{platform_names, CuModel, CuSpec, Platform, PlatformSpec};
+
+use anyhow::Result;
 
 use crate::runtime::Manifest;
 
 /// Build the simulator layer list from a variant manifest.
-pub fn layers_from_manifest(m: &Manifest) -> Vec<Layer> {
+pub fn layers_from_manifest(m: &Manifest) -> Result<Vec<Layer>> {
     m.layers.iter().map(Layer::from_spec).collect()
 }
 

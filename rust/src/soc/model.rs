@@ -1,9 +1,18 @@
-//! Core simulator types: layers, compute units, mappings, execution
-//! reports.
+//! Core simulator types: layers, N-way mappings, execution reports.
+//!
+//! The compute units themselves live in the platform registry
+//! ([`super::spec`]); this module holds everything that is *per network* —
+//! layer geometry, channel→CU assignments (a CU is always referenced by its
+//! column index into `Platform::cus()`), and the per-layer / whole-network
+//! execution reports both simulators produce.
 
+use std::str::FromStr;
 
+use anyhow::{bail, Result};
 
 use crate::runtime::LayerSpec;
+
+use super::spec::Platform;
 
 /// Supported layer operations.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -16,20 +25,35 @@ pub enum LayerType {
     Pw,
     /// fully connected
     Fc,
-    /// searchable Darkside position (std-conv vs depthwise alternatives)
+    /// searchable position whose operation is CU-dependent (std conv on a
+    /// cluster, depthwise on a DW engine — the Darkside search space)
     Search,
 }
 
 impl LayerType {
-    pub fn parse(s: &str) -> LayerType {
-        match s {
+    pub fn name(self) -> &'static str {
+        match self {
+            LayerType::Conv => "conv",
+            LayerType::Dw => "dw",
+            LayerType::Pw => "pw",
+            LayerType::Fc => "fc",
+            LayerType::Search => "search",
+        }
+    }
+}
+
+impl FromStr for LayerType {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<LayerType> {
+        Ok(match s {
             "conv" => LayerType::Conv,
             "dw" => LayerType::Dw,
             "pw" => LayerType::Pw,
             "fc" => LayerType::Fc,
             "search" => LayerType::Search,
-            other => panic!("unknown layer type '{other}'"),
-        }
+            other => bail!("unknown layer type '{other}' (expected conv|dw|pw|fc|search)"),
+        })
     }
 }
 
@@ -48,10 +72,10 @@ pub struct Layer {
 }
 
 impl Layer {
-    pub fn from_spec(s: &LayerSpec) -> Layer {
-        Layer {
+    pub fn from_spec(s: &LayerSpec) -> Result<Layer> {
+        Ok(Layer {
             name: s.name.clone(),
-            ltype: LayerType::parse(&s.ltype),
+            ltype: s.ltype.parse()?,
             cin: s.cin,
             cout: s.cout,
             k: s.k,
@@ -59,7 +83,7 @@ impl Layer {
             oy: s.oy,
             stride: s.stride,
             searchable: s.searchable,
-        }
+        })
     }
 
     /// MACs if `n` output channels run as a standard conv.
@@ -83,58 +107,8 @@ impl Layer {
     }
 }
 
-/// The compute units of the two supported SoCs.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Cu {
-    /// DIANA 16×16 int8 digital PE grid
-    DianaDigital,
-    /// DIANA 500k-cell ternary analog AIMC array
-    DianaAnalog,
-    /// Darkside 8-core RISC-V cluster (standard/pointwise convs, FC)
-    DarksideCluster,
-    /// Darkside DepthWise Engine (depthwise 3×3 only)
-    DarksideDwe,
-}
-
-impl Cu {
-    pub fn label(self) -> &'static str {
-        match self {
-            Cu::DianaDigital => "digital",
-            Cu::DianaAnalog => "analog",
-            Cu::DarksideCluster => "cluster",
-            Cu::DarksideDwe => "dwe",
-        }
-    }
-}
-
-/// Target platform.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Platform {
-    Diana,
-    Darkside,
-}
-
-impl Platform {
-    pub fn parse(s: &str) -> Platform {
-        match s {
-            "diana" => Platform::Diana,
-            "darkside" => Platform::Darkside,
-            other => panic!("unknown platform '{other}'"),
-        }
-    }
-
-    /// The two CUs of the platform, in cost-model column order
-    /// (column 0, column 1).
-    pub fn cus(self) -> [Cu; 2] {
-        match self {
-            Platform::Diana => [Cu::DianaDigital, Cu::DianaAnalog],
-            Platform::Darkside => [Cu::DarksideCluster, Cu::DarksideDwe],
-        }
-    }
-}
-
 /// Per-layer channel→CU assignment: `cu_of[c]` gives the CU *column*
-/// (0 or 1) producing output channel `c`.
+/// (index into `Platform::cus()`) producing output channel `c`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LayerAssignment {
     pub layer: String,
@@ -153,15 +127,59 @@ impl LayerAssignment {
         self.cu_of.iter().filter(|&&c| c == cu).count()
     }
 
-    /// True if the channels of each CU form one contiguous block.
-    pub fn is_contiguous(&self) -> bool {
-        let mut transitions = 0;
-        for w in self.cu_of.windows(2) {
-            if w[0] != w[1] {
-                transitions += 1;
+    /// The first `cout - n_off` channels on column 0, the remaining
+    /// `n_off` spread round-robin over columns `1..n_cus` — the standard
+    /// synthetic offload pattern the tests, benches, and explorer share.
+    pub fn offload_round_robin(layer: &str, cout: usize, n_off: usize, n_cus: usize) -> Self {
+        let spread = (n_cus - 1).max(1);
+        Self {
+            layer: layer.to_string(),
+            cu_of: (0..cout)
+                .map(|c| {
+                    if c < cout - n_off || n_cus == 1 {
+                        0
+                    } else {
+                        (1 + c % spread) as u8
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    /// Channel counts per CU column.
+    pub fn counts(&self, n_cus: usize) -> Vec<usize> {
+        let mut out = vec![0usize; n_cus];
+        for &c in &self.cu_of {
+            if (c as usize) < n_cus {
+                out[c as usize] += 1;
             }
         }
-        transitions <= 1
+        out
+    }
+
+    /// Highest CU column referenced, if any channel exists.
+    pub fn max_cu(&self) -> Option<u8> {
+        self.cu_of.iter().copied().max()
+    }
+
+    /// True if the channels of each CU form one contiguous block (every CU
+    /// value appears in at most one run).
+    pub fn is_contiguous(&self) -> bool {
+        let mut closed: Vec<u8> = Vec::new();
+        let mut prev: Option<u8> = None;
+        for &c in &self.cu_of {
+            if prev == Some(c) {
+                continue;
+            }
+            if closed.contains(&c) {
+                return false;
+            }
+            if let Some(p) = prev {
+                closed.push(p);
+            }
+            prev = Some(c);
+        }
+        true
     }
 }
 
@@ -170,6 +188,16 @@ impl LayerAssignment {
 pub struct Mapping {
     pub platform: Platform,
     pub layers: Vec<LayerAssignment>,
+}
+
+impl Mapping {
+    /// Every assignment references only columns the platform has.
+    pub fn is_well_formed(&self) -> bool {
+        let n = self.platform.n_cus() as u8;
+        self.layers
+            .iter()
+            .all(|a| a.cu_of.iter().all(|&c| c < n))
+    }
 }
 
 /// Execution cost of one layer on one CU.
@@ -184,10 +212,10 @@ pub struct CuCost {
 pub struct LayerReport {
     pub layer: String,
     /// cost per CU column (index matches `Platform::cus()`)
-    pub per_cu: [CuCost; 2],
+    pub per_cu: Vec<CuCost>,
     /// layer latency (max across CUs, plus sync in the detailed sim)
     pub latency: u64,
-    /// true when the two CUs run sequentially (DW→PW dependency of the
+    /// true when the CU stages run sequentially (DW→PW dependency of the
     /// ImageNet search space) rather than in parallel
     pub sequential: bool,
 }
@@ -199,26 +227,51 @@ pub struct ExecReport {
     pub layers: Vec<LayerReport>,
     pub total_cycles: u64,
     pub energy_uj: f64,
-    /// fraction of total time each CU is busy
-    pub utilization: [f64; 2],
+    /// fraction of total time each CU is busy (one entry per CU column)
+    pub utilization: Vec<f64>,
     pub latency_ms: f64,
 }
 
 impl ExecReport {
-    /// Fraction of output channels mapped to CU column 1 across the whole
-    /// network (the paper's "A. Ch." column in Table IV).
-    pub fn cu1_channel_fraction(&self) -> f64 {
-        let total: usize = self
+    pub fn n_cus(&self) -> usize {
+        self.utilization.len()
+    }
+
+    fn total_channels(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.per_cu.iter().map(|c| c.channels).sum::<usize>())
+            .sum()
+    }
+
+    /// Fraction of output channels mapped to CU column `col` across the
+    /// whole network.
+    pub fn channel_fraction(&self, col: usize) -> f64 {
+        let total = self.total_channels();
+        if total == 0 {
+            return 0.0;
+        }
+        let on: usize = self
             .layers
             .iter()
-            .map(|l| l.per_cu[0].channels + l.per_cu[1].channels)
+            .map(|l| l.per_cu.get(col).map_or(0, |c| c.channels))
             .sum();
-        let cu1: usize = self.layers.iter().map(|l| l.per_cu[1].channels).sum();
+        on as f64 / total as f64
+    }
+
+    /// Fraction of channels *not* on the primary CU (column 0) — the
+    /// paper's "A. Ch." column in Table IV generalized to N CUs.
+    pub fn offload_channel_fraction(&self) -> f64 {
+        let total = self.total_channels();
         if total == 0 {
-            0.0
-        } else {
-            cu1 as f64 / total as f64
+            return 0.0;
         }
+        let on0: usize = self
+            .layers
+            .iter()
+            .map(|l| l.per_cu.first().map_or(0, |c| c.channels))
+            .sum();
+        (total - on0) as f64 / total as f64
     }
 }
 
@@ -227,7 +280,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn contiguity() {
+    fn contiguity_two_way() {
         let a = LayerAssignment {
             layer: "l".into(),
             cu_of: vec![0, 0, 1, 1, 1],
@@ -245,6 +298,22 @@ mod tests {
     }
 
     #[test]
+    fn contiguity_n_way() {
+        let good = LayerAssignment {
+            layer: "l".into(),
+            cu_of: vec![1, 1, 0, 2, 2, 2],
+        };
+        assert!(good.is_contiguous());
+        let bad = LayerAssignment {
+            layer: "l".into(),
+            cu_of: vec![0, 2, 1, 2],
+        };
+        assert!(!bad.is_contiguous());
+        assert_eq!(good.counts(3), vec![1, 2, 3]);
+        assert_eq!(good.max_cu(), Some(2));
+    }
+
+    #[test]
     fn macs() {
         let l = Layer {
             name: "t".into(),
@@ -259,5 +328,44 @@ mod tests {
         };
         assert_eq!(l.macs_std(32), 32 * 16 * 9 * 64);
         assert_eq!(l.macs_dw(32), 32 * 9 * 64);
+    }
+
+    #[test]
+    fn offload_round_robin_spreads_tail() {
+        let a = LayerAssignment::offload_round_robin("l", 6, 4, 3);
+        assert_eq!(a.cu_of[..2], [0, 0]);
+        assert!(a.cu_of[2..].iter().all(|&c| c == 1 || c == 2));
+        assert_eq!(a.counts(3).iter().sum::<usize>(), 6);
+        // degenerate shapes stay on column 0
+        assert_eq!(
+            LayerAssignment::offload_round_robin("l", 4, 4, 1).cu_of,
+            vec![0; 4]
+        );
+        assert_eq!(
+            LayerAssignment::offload_round_robin("l", 4, 0, 3).cu_of,
+            vec![0; 4]
+        );
+    }
+
+    #[test]
+    fn layer_type_from_str() {
+        assert_eq!("conv".parse::<LayerType>().unwrap(), LayerType::Conv);
+        assert_eq!("search".parse::<LayerType>().unwrap(), LayerType::Search);
+        assert!("warp".parse::<LayerType>().is_err());
+        assert_eq!(LayerType::Dw.name(), "dw");
+    }
+
+    #[test]
+    fn well_formed_checks_columns() {
+        let m = Mapping {
+            platform: Platform::diana(),
+            layers: vec![LayerAssignment::all_on("l", 4, 1)],
+        };
+        assert!(m.is_well_formed());
+        let bad = Mapping {
+            platform: Platform::diana(),
+            layers: vec![LayerAssignment::all_on("l", 4, 2)],
+        };
+        assert!(!bad.is_well_formed());
     }
 }

@@ -1,0 +1,518 @@
+//! The platform registry: data-driven N-CU SoC descriptors.
+//!
+//! A [`PlatformSpec`] describes one SoC — clock, idle power, and an ordered
+//! list of [`CuSpec`] compute units, each with its supported ops, data
+//! representation, power, detailed-sim factors, and a parameterized
+//! [`CuModel`] cost model. Specs are parsed from the JSON descriptors under
+//! `hw/` (schema: `hw/README.md`) with the in-tree `util::json`.
+//!
+//! DIANA, Darkside, and the synthetic tri-CU `trident` SoC are built in:
+//! registered at first use from the checkout's `hw/<name>.json` when
+//! present (so descriptors are runtime-tunable, like `hw/constants.json`),
+//! falling back to the embedded copies of the same files.
+//! [`Platform::get`] additionally discovers any other `hw/<name>.json`
+//! descriptor at runtime, so new SoCs need no simulator changes.
+//! [`Platform`] itself is a `Copy` handle onto the registered
+//! `&'static PlatformSpec` — the type every simulator / mapping / report
+//! API carries around.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::str::FromStr;
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{parse, Value};
+
+use super::model::LayerType;
+
+/// Embedded built-in descriptors (same files a checkout has under `hw/`).
+pub const DIANA_JSON: &str = include_str!("../../../hw/diana.json");
+pub const DARKSIDE_JSON: &str = include_str!("../../../hw/darkside.json");
+pub const TRIDENT_JSON: &str = include_str!("../../../hw/trident.json");
+
+/// Parameterized per-CU cost model (exact formulas:
+/// `soc::analytical::cu_cycles`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum CuModel {
+    /// digital PE grid (DIANA digital): output channels tile over rows,
+    /// the input patch over columns; weights stream byte-wise
+    PeGrid {
+        pe_rows: usize,
+        pe_cols: usize,
+        macs_per_cycle_per_pe: f64,
+        weight_load_bytes_per_cycle: f64,
+        /// depthwise work wastes the grid (paper Sec. IV-B)
+        dw_inefficiency: f64,
+    },
+    /// in-memory analog array (DIANA AIMC): cell (re)loading dominates,
+    /// plus one array operation per output pixel per tile
+    AnalogArray {
+        array_rows: usize,
+        array_cols: usize,
+        cells_load_per_cycle: f64,
+        cycles_per_analog_op: f64,
+    },
+    /// software SIMD cluster (Darkside RISC-V octa-core): im2col + MACs
+    SimdCluster {
+        cores: usize,
+        macs_per_cycle_std: f64,
+        macs_per_cycle_dw: f64,
+        im2col_overhead: f64,
+    },
+    /// dedicated depthwise engine (Darkside DWE)
+    DwEngine {
+        macs_per_cycle: f64,
+        weight_cfg_cells_per_cycle: f64,
+    },
+}
+
+impl CuModel {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            CuModel::PeGrid { .. } => "pe_grid",
+            CuModel::AnalogArray { .. } => "analog_array",
+            CuModel::SimdCluster { .. } => "simd_cluster",
+            CuModel::DwEngine { .. } => "dw_engine",
+        }
+    }
+
+    fn parse(v: &Value) -> Result<CuModel> {
+        let kind = v.str_of("kind")?;
+        Ok(match kind.as_str() {
+            "pe_grid" => CuModel::PeGrid {
+                pe_rows: v.usize_of("pe_rows")?,
+                pe_cols: v.usize_of("pe_cols")?,
+                macs_per_cycle_per_pe: v.f64_of("macs_per_cycle_per_pe")?,
+                weight_load_bytes_per_cycle: v.f64_of("weight_load_bytes_per_cycle")?,
+                dw_inefficiency: v.f64_of("dw_inefficiency")?,
+            },
+            "analog_array" => CuModel::AnalogArray {
+                array_rows: v.usize_of("array_rows")?,
+                array_cols: v.usize_of("array_cols")?,
+                cells_load_per_cycle: v.f64_of("cells_load_per_cycle")?,
+                cycles_per_analog_op: v.f64_of("cycles_per_analog_op")?,
+            },
+            "simd_cluster" => CuModel::SimdCluster {
+                cores: v.usize_of("cores")?,
+                macs_per_cycle_std: v.f64_of("macs_per_cycle_std")?,
+                macs_per_cycle_dw: v.f64_of("macs_per_cycle_dw")?,
+                im2col_overhead: v.f64_of("im2col_overhead")?,
+            },
+            "dw_engine" => CuModel::DwEngine {
+                macs_per_cycle: v.f64_of("macs_per_cycle")?,
+                weight_cfg_cells_per_cycle: v.f64_of("weight_cfg_cells_per_cycle")?,
+            },
+            other => bail!(
+                "unknown cost model kind '{other}' \
+                 (expected pe_grid|analog_array|simd_cluster|dw_engine)"
+            ),
+        })
+    }
+
+    fn to_json(&self) -> Value {
+        match *self {
+            CuModel::PeGrid {
+                pe_rows,
+                pe_cols,
+                macs_per_cycle_per_pe,
+                weight_load_bytes_per_cycle,
+                dw_inefficiency,
+            } => Value::obj(vec![
+                ("kind", Value::str("pe_grid")),
+                ("pe_rows", Value::num(pe_rows as f64)),
+                ("pe_cols", Value::num(pe_cols as f64)),
+                ("macs_per_cycle_per_pe", Value::num(macs_per_cycle_per_pe)),
+                (
+                    "weight_load_bytes_per_cycle",
+                    Value::num(weight_load_bytes_per_cycle),
+                ),
+                ("dw_inefficiency", Value::num(dw_inefficiency)),
+            ]),
+            CuModel::AnalogArray {
+                array_rows,
+                array_cols,
+                cells_load_per_cycle,
+                cycles_per_analog_op,
+            } => Value::obj(vec![
+                ("kind", Value::str("analog_array")),
+                ("array_rows", Value::num(array_rows as f64)),
+                ("array_cols", Value::num(array_cols as f64)),
+                ("cells_load_per_cycle", Value::num(cells_load_per_cycle)),
+                ("cycles_per_analog_op", Value::num(cycles_per_analog_op)),
+            ]),
+            CuModel::SimdCluster {
+                cores,
+                macs_per_cycle_std,
+                macs_per_cycle_dw,
+                im2col_overhead,
+            } => Value::obj(vec![
+                ("kind", Value::str("simd_cluster")),
+                ("cores", Value::num(cores as f64)),
+                ("macs_per_cycle_std", Value::num(macs_per_cycle_std)),
+                ("macs_per_cycle_dw", Value::num(macs_per_cycle_dw)),
+                ("im2col_overhead", Value::num(im2col_overhead)),
+            ]),
+            CuModel::DwEngine {
+                macs_per_cycle,
+                weight_cfg_cells_per_cycle,
+            } => Value::obj(vec![
+                ("kind", Value::str("dw_engine")),
+                ("macs_per_cycle", Value::num(macs_per_cycle)),
+                (
+                    "weight_cfg_cells_per_cycle",
+                    Value::num(weight_cfg_cells_per_cycle),
+                ),
+            ]),
+        }
+    }
+}
+
+/// One compute unit of a platform.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CuSpec {
+    pub name: String,
+    /// data representation ("int8", "ternary", ...)
+    pub quant: String,
+    /// layer operations the CU supports (reporting + mapping heuristics)
+    pub ops: Vec<LayerType>,
+    /// fixed per-layer configuration cost, cycles
+    pub setup_cycles: u64,
+    /// active power while computing, mW
+    pub p_act_mw: f64,
+    /// the *analytical* model counts the L2→L1 input DMA for this CU
+    /// (the paper's Darkside-vs-DIANA model-completeness asymmetry)
+    pub input_dma: bool,
+    /// detailed-sim memory-stall multiplier (fraction of extra cycles)
+    pub stall_factor: f64,
+    /// detailed-sim deterministic jitter amplitude
+    pub variability: f64,
+    pub model: CuModel,
+}
+
+impl CuSpec {
+    pub fn supports(&self, t: LayerType) -> bool {
+        self.ops.contains(&t)
+    }
+
+    fn parse(v: &Value) -> Result<CuSpec> {
+        let ops = v
+            .req("ops")?
+            .as_arr()?
+            .iter()
+            .map(|o| o.as_str()?.parse::<LayerType>())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(CuSpec {
+            name: v.str_of("name")?,
+            quant: v.str_of("quant")?,
+            ops,
+            setup_cycles: v.usize_of("setup_cycles")? as u64,
+            p_act_mw: v.f64_of("p_act_mw")?,
+            input_dma: v.bool_of("input_dma")?,
+            stall_factor: v.f64_of("stall_factor")?,
+            variability: v.f64_of("variability")?,
+            model: CuModel::parse(v.req("model")?)
+                .with_context(|| format!("cu '{}' cost model", v.str_of("name").unwrap_or_default()))?,
+        })
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", Value::str(&self.name)),
+            ("quant", Value::str(&self.quant)),
+            (
+                "ops",
+                Value::arr(self.ops.iter().map(|o| Value::str(o.name()))),
+            ),
+            ("setup_cycles", Value::num(self.setup_cycles as f64)),
+            ("p_act_mw", Value::num(self.p_act_mw)),
+            ("input_dma", Value::Bool(self.input_dma)),
+            ("stall_factor", Value::num(self.stall_factor)),
+            ("variability", Value::num(self.variability)),
+            ("model", self.model.to_json()),
+        ])
+    }
+}
+
+/// A whole-SoC descriptor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformSpec {
+    pub name: String,
+    pub freq_mhz: f64,
+    pub p_idle_mw: f64,
+    /// ordered CUs; the index is the cost-model / θ column
+    pub cus: Vec<CuSpec>,
+}
+
+impl PlatformSpec {
+    /// Parse + validate a descriptor from JSON text.
+    pub fn parse(text: &str) -> Result<PlatformSpec> {
+        let v = parse(text)?;
+        let spec = PlatformSpec {
+            name: v.str_of("name")?,
+            freq_mhz: v.f64_of("freq_mhz")?,
+            p_idle_mw: v.f64_of("p_idle_mw")?,
+            cus: v
+                .req("cus")?
+                .as_arr()?
+                .iter()
+                .map(CuSpec::parse)
+                .collect::<Result<_>>()?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            bail!("platform descriptor has an empty name");
+        }
+        if self.freq_mhz <= 0.0 {
+            bail!("{}: freq_mhz must be positive", self.name);
+        }
+        if self.cus.is_empty() {
+            bail!("{}: a platform needs at least one CU", self.name);
+        }
+        for (i, cu) in self.cus.iter().enumerate() {
+            if self.cus[..i].iter().any(|c| c.name == cu.name) {
+                bail!("{}: duplicate CU name '{}'", self.name, cu.name);
+            }
+            if cu.ops.is_empty() {
+                bail!("{}/{}: CU supports no ops", self.name, cu.name);
+            }
+            if !(0.0..1.0).contains(&cu.stall_factor) {
+                bail!("{}/{}: stall_factor must be in [0, 1)", self.name, cu.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// JSON view — `parse(to_json().to_string_pretty())` round-trips.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", Value::str(&self.name)),
+            ("freq_mhz", Value::num(self.freq_mhz)),
+            ("p_idle_mw", Value::num(self.p_idle_mw)),
+            ("cus", Value::arr(self.cus.iter().map(|c| c.to_json()))),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+type Registry = BTreeMap<String, &'static PlatformSpec>;
+
+/// Load a built-in platform: the checkout's `hw/<name>.json` when present
+/// and valid (so descriptors are runtime-tunable, like `hw/constants.json`),
+/// the embedded copy otherwise.
+fn load_builtin(name: &str, embedded: &str) -> PlatformSpec {
+    let path = crate::repo_root().join("hw").join(format!("{name}.json"));
+    if let Ok(text) = std::fs::read_to_string(&path) {
+        match PlatformSpec::parse(&text) {
+            Ok(spec) if spec.name == name => return spec,
+            Ok(spec) => eprintln!(
+                "warning: {} declares name '{}'; using embedded {name} descriptor",
+                path.display(),
+                spec.name
+            ),
+            Err(e) => eprintln!(
+                "warning: {} is unreadable ({e:#}); using embedded {name} descriptor",
+                path.display()
+            ),
+        }
+    }
+    PlatformSpec::parse(embedded).expect("built-in platform descriptor parses")
+}
+
+fn registry() -> &'static Mutex<Registry> {
+    static R: OnceLock<Mutex<Registry>> = OnceLock::new();
+    R.get_or_init(|| {
+        let mut m = Registry::new();
+        for (name, text) in [
+            ("diana", DIANA_JSON),
+            ("darkside", DARKSIDE_JSON),
+            ("trident", TRIDENT_JSON),
+        ] {
+            let spec: &'static PlatformSpec = Box::leak(Box::new(load_builtin(name, text)));
+            m.insert(spec.name.clone(), spec);
+        }
+        Mutex::new(m)
+    })
+}
+
+/// Names of all registered platforms (built-ins + anything registered or
+/// discovered so far), sorted.
+pub fn platform_names() -> Vec<String> {
+    registry().lock().unwrap().keys().cloned().collect()
+}
+
+/// `Copy` handle onto a registered platform descriptor.
+#[derive(Clone, Copy)]
+pub struct Platform {
+    spec: &'static PlatformSpec,
+}
+
+impl Platform {
+    /// Look up a platform by name. Built-ins resolve immediately; unknown
+    /// names fall back to loading `repo_root()/hw/<name>.json` once.
+    pub fn get(name: &str) -> Result<Platform> {
+        {
+            let reg = registry().lock().unwrap();
+            if let Some(&spec) = reg.get(name) {
+                return Ok(Platform { spec });
+            }
+        }
+        let path = crate::repo_root().join("hw").join(format!("{name}.json"));
+        if path.exists() {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading descriptor {}", path.display()))?;
+            let spec = PlatformSpec::parse(&text)
+                .with_context(|| format!("parsing descriptor {}", path.display()))?;
+            if spec.name != name {
+                bail!(
+                    "descriptor {} declares name '{}', expected '{name}'",
+                    path.display(),
+                    spec.name
+                );
+            }
+            return Ok(Platform::register(spec));
+        }
+        Err(anyhow!(
+            "unknown platform '{name}' (registered: {}; or add hw/{name}.json)",
+            platform_names().join(", ")
+        ))
+    }
+
+    /// Register (or replace) a spec programmatically; returns its handle.
+    pub fn register(spec: PlatformSpec) -> Platform {
+        let spec: &'static PlatformSpec = Box::leak(Box::new(spec));
+        registry()
+            .lock()
+            .unwrap()
+            .insert(spec.name.clone(), spec);
+        Platform { spec }
+    }
+
+    pub fn diana() -> Platform {
+        Platform::get("diana").expect("built-in diana spec")
+    }
+
+    pub fn darkside() -> Platform {
+        Platform::get("darkside").expect("built-in darkside spec")
+    }
+
+    pub fn trident() -> Platform {
+        Platform::get("trident").expect("built-in trident spec")
+    }
+
+    pub fn name(&self) -> &'static str {
+        &self.spec.name
+    }
+
+    pub fn spec(&self) -> &'static PlatformSpec {
+        self.spec
+    }
+
+    pub fn cus(&self) -> &'static [CuSpec] {
+        &self.spec.cus
+    }
+
+    pub fn n_cus(&self) -> usize {
+        self.spec.cus.len()
+    }
+
+    pub fn freq_mhz(&self) -> f64 {
+        self.spec.freq_mhz
+    }
+
+    pub fn p_idle_mw(&self) -> f64 {
+        self.spec.p_idle_mw
+    }
+}
+
+impl fmt::Debug for Platform {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.spec.name)
+    }
+}
+
+impl PartialEq for Platform {
+    fn eq(&self, other: &Platform) -> bool {
+        // registry guarantees one live spec per name; replacing a spec
+        // keeps old handles comparing equal by name, which is the intent
+        self.spec.name == other.spec.name
+    }
+}
+
+impl Eq for Platform {}
+
+impl FromStr for Platform {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Platform> {
+        Platform::get(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_register_and_resolve() {
+        for (name, n_cus) in [("diana", 2), ("darkside", 2), ("trident", 3)] {
+            let p = Platform::get(name).unwrap();
+            assert_eq!(p.name(), name);
+            assert_eq!(p.n_cus(), n_cus);
+            assert!(p.freq_mhz() > 0.0);
+        }
+        assert!(platform_names().len() >= 3);
+        assert!("nonexistent-soc".parse::<Platform>().is_err());
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        for text in [DIANA_JSON, DARKSIDE_JSON, TRIDENT_JSON] {
+            let spec = PlatformSpec::parse(text).unwrap();
+            let re = PlatformSpec::parse(&spec.to_json().to_string_pretty()).unwrap();
+            assert_eq!(spec, re);
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_descriptors() {
+        // no CUs
+        let bad = r#"{"name": "x", "freq_mhz": 100.0, "p_idle_mw": 1.0, "cus": []}"#;
+        assert!(PlatformSpec::parse(bad).is_err());
+        // duplicate CU names
+        let mut spec = PlatformSpec::parse(TRIDENT_JSON).unwrap();
+        spec.cus[1].name = spec.cus[0].name.clone();
+        assert!(PlatformSpec::parse(&spec.to_json().to_string_pretty()).is_err());
+        // unknown op
+        let bad_op = DIANA_JSON.replace("\"conv\"", "\"warp\"");
+        assert!(PlatformSpec::parse(&bad_op).is_err());
+        // unknown model kind
+        let bad_kind = DIANA_JSON.replace("pe_grid", "quantum_grid");
+        assert!(PlatformSpec::parse(&bad_kind).is_err());
+    }
+
+    #[test]
+    fn platform_equality_and_debug() {
+        let a = Platform::diana();
+        let b = Platform::get("diana").unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, Platform::darkside());
+        assert_eq!(format!("{a:?}"), "diana");
+    }
+
+    #[test]
+    fn register_makes_platform_resolvable() {
+        let mut spec = PlatformSpec::parse(TRIDENT_JSON).unwrap();
+        spec.name = "trident-test-clone".into();
+        let p = Platform::register(spec);
+        assert_eq!(Platform::get("trident-test-clone").unwrap(), p);
+    }
+}

@@ -41,7 +41,12 @@ pub mod gen {
     }
 
     pub fn cu_vec(rng: &mut Rng, len: usize) -> Vec<u8> {
-        (0..len).map(|_| (rng.below(2)) as u8).collect()
+        cu_vec_n(rng, len, 2)
+    }
+
+    /// Random channel→CU assignment over `n_cus` columns.
+    pub fn cu_vec_n(rng: &mut Rng, len: usize, n_cus: usize) -> Vec<u8> {
+        (0..len).map(|_| (rng.below(n_cus)) as u8).collect()
     }
 }
 

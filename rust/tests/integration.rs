@@ -95,7 +95,7 @@ fn diana_suite() {
     }
     let mapping = tr.discretize_all(&state).expect("discretize");
     let (ana, _) = tr.simulate(&mapping);
-    let all0 = baselines::baseline_mapping(&tr, Baseline::AllCu0);
+    let all0 = baselines::baseline_mapping(&tr, Baseline::AllOn(0));
     let (ana0, _) = tr.simulate(&all0);
     assert!(
         ana.total_cycles < ana0.total_cycles,
@@ -105,8 +105,8 @@ fn diana_suite() {
     );
 
     // -- baselines distinct & ordered -------------------------------------------
-    let m1 = baselines::baseline_mapping(&tr, Baseline::AllCu1);
-    let mio = baselines::baseline_mapping(&tr, Baseline::IoCu0);
+    let m1 = baselines::baseline_mapping(&tr, Baseline::AllOn(1));
+    let mio = baselines::baseline_mapping(&tr, Baseline::IoSplit);
     let mmc = baselines::baseline_mapping(&tr, Baseline::MinCost);
     let (a1r, _) = tr.simulate(&m1);
     let (amc, _) = tr.simulate(&mmc);
@@ -127,11 +127,12 @@ fn diana_suite() {
     assert!(first.cu_of.iter().all(|&c| c == 0), "IO layer on digital");
 
     // -- full baseline run produces a complete record ---------------------------
-    let rec = run_baseline(&tr, Baseline::AllCu1).expect("baseline run");
+    let rec = run_baseline(&tr, Baseline::AllOn(1)).expect("baseline run");
     assert_eq!(rec.label, "all-ternary");
     assert!(rec.test_acc >= 0.0);
     assert!(rec.det_cycles > rec.ana_cycles, "detailed adds overheads");
-    assert!(rec.cu1_channel_frac > 0.9);
+    assert!(rec.offload_frac > 0.9);
+    assert_eq!(rec.util.len(), tr.platform.n_cus());
     assert_eq!(rec.per_layer.len(), tr.rt.manifest.layers.len());
 }
 
@@ -159,8 +160,8 @@ fn darkside_suite() {
     let (ana, det) = tr.simulate(&mapping);
     assert!(det.total_cycles > ana.total_cycles);
     // corner baselines ordered the Darkside way: all-DW is much faster
-    let m0 = baselines::baseline_mapping(&tr, Baseline::AllCu0);
-    let m1 = baselines::baseline_mapping(&tr, Baseline::AllCu1);
+    let m0 = baselines::baseline_mapping(&tr, Baseline::AllOn(0));
+    let m1 = baselines::baseline_mapping(&tr, Baseline::AllOn(1));
     let (a0, _) = tr.simulate(&m0);
     let (a1, _) = tr.simulate(&m1);
     assert!(
@@ -183,7 +184,7 @@ fn prune_variant_loads_and_steps() {
     let mapping = tr.discretize_all(&state).expect("discretize");
     // pruned-geometry simulation must not exceed the unpruned all-digital net
     let (ana, _) = tr.simulate(&mapping);
-    let all_keep = baselines::baseline_mapping(&tr, Baseline::AllCu0);
+    let all_keep = baselines::baseline_mapping(&tr, Baseline::AllOn(0));
     let (ana_keep, _) = tr.simulate(&all_keep);
     assert!(ana.total_cycles <= ana_keep.total_cycles);
 }

@@ -3,14 +3,23 @@
 //!
 //! These cover the coordinator-adjacent pure logic: discretization,
 //! one-hot construction, Eq. 6 contiguity, the Fig. 4 reorg pass, the
-//! simulators, Pareto extraction, and dataset determinism.
+//! simulators (on every registered platform, including the tri-CU one),
+//! Pareto extraction, and dataset determinism.
 
 use odimo::datasets::rng::Rng;
 use odimo::datasets::{Split, SynthDataset};
 use odimo::mapping::{discretize, expected_counts, one_hot_theta, reorganize, SearchKind};
 use odimo::pareto::{is_pareto, pareto_front, Point};
-use odimo::soc::{analytical, detailed, Cu, Layer, LayerAssignment, LayerType, Mapping, Platform};
+use odimo::soc::{analytical, detailed, Layer, LayerAssignment, LayerType, Mapping, Platform};
 use odimo::util::prop::{check, gen};
+
+fn platforms() -> [Platform; 3] {
+    [Platform::diana(), Platform::darkside(), Platform::trident()]
+}
+
+fn rand_platform(rng: &mut Rng) -> Platform {
+    platforms()[rng.below(3)]
+}
 
 fn rand_layer(rng: &mut Rng, name: &str) -> Layer {
     let hw = [4usize, 8, 16, 32][rng.below(4)];
@@ -34,7 +43,7 @@ fn rand_mapping(rng: &mut Rng, layers: &[Layer], platform: Platform) -> Mapping 
             .iter()
             .map(|l| LayerAssignment {
                 layer: l.name.clone(),
-                cu_of: gen::cu_vec(rng, l.cout),
+                cu_of: gen::cu_vec_n(rng, l.cout, platform.n_cus()),
             })
             .collect(),
     }
@@ -46,33 +55,39 @@ fn rand_mapping(rng: &mut Rng, layers: &[Layer], platform: Platform) -> Mapping 
 
 #[test]
 fn prop_discretize_partitions_channels() {
-    check(
-        200,
-        |r| {
-            let c = gen::usize_in(r, 1, 96);
-            (c, gen::f32_vec(r, 2 * c, -3.0, 3.0))
-        },
-        |(c, theta)| {
-            let a = discretize(SearchKind::Channel, theta, *c, "l");
-            a.cu_of.len() == *c && a.count(0) + a.count(1) == *c
-        },
-    );
+    for n_cus in [2usize, 3] {
+        check(
+            200,
+            |r| {
+                let c = gen::usize_in(r, 1, 96);
+                (c, gen::f32_vec(r, n_cus * c, -3.0, 3.0))
+            },
+            |(c, theta)| {
+                let a = discretize(SearchKind::Channel, theta, *c, n_cus, "l");
+                a.cu_of.len() == *c
+                    && a.counts(n_cus).iter().sum::<usize>() == *c
+                    && a.cu_of.iter().all(|&cu| (cu as usize) < n_cus)
+            },
+        );
+    }
 }
 
 #[test]
 fn prop_one_hot_roundtrips_channel() {
-    check(
-        200,
-        |r| {
-            let c = gen::usize_in(r, 1, 64);
-            (c, gen::f32_vec(r, 2 * c, -2.0, 2.0))
-        },
-        |(c, theta)| {
-            let a = discretize(SearchKind::Channel, theta, *c, "l");
-            let oh = one_hot_theta(SearchKind::Channel, &a);
-            discretize(SearchKind::Channel, &oh, *c, "l") == a
-        },
-    );
+    for n_cus in [2usize, 3] {
+        check(
+            200,
+            |r| {
+                let c = gen::usize_in(r, 1, 64);
+                (c, gen::f32_vec(r, n_cus * c, -2.0, 2.0))
+            },
+            |(c, theta)| {
+                let a = discretize(SearchKind::Channel, theta, *c, n_cus, "l");
+                let oh = one_hot_theta(SearchKind::Channel, &a, n_cus);
+                discretize(SearchKind::Channel, &oh, *c, n_cus, "l") == a
+            },
+        );
+    }
 }
 
 #[test]
@@ -84,13 +99,14 @@ fn prop_split_always_contiguous() {
             (c, gen::f32_vec(r, c + 1, -4.0, 4.0))
         },
         |(c, theta)| {
-            let a = discretize(SearchKind::Split, theta, *c, "l");
+            let a = discretize(SearchKind::Split, theta, *c, 2, "l");
             a.is_contiguous()
-                && one_hot_theta(SearchKind::Split, &a).len() == c + 1
+                && one_hot_theta(SearchKind::Split, &a, 2).len() == c + 1
                 && discretize(
                     SearchKind::Split,
-                    &one_hot_theta(SearchKind::Split, &a),
+                    &one_hot_theta(SearchKind::Split, &a, 2),
                     *c,
+                    2,
                     "l",
                 ) == a
         },
@@ -99,51 +115,62 @@ fn prop_split_always_contiguous() {
 
 #[test]
 fn prop_expected_counts_sum_to_cout() {
-    for kind in [SearchKind::Channel, SearchKind::Split, SearchKind::Layerwise] {
-        check(
-            100,
-            |r| {
-                let c = gen::usize_in(r, 1, 64);
-                (c, gen::f32_vec(r, kind.theta_len(c), -3.0, 3.0))
-            },
-            |(c, theta)| {
-                let (n0, n1) = expected_counts(kind, theta, *c);
-                n0 >= -1e-6 && n1 >= -1e-6 && (n0 + n1 - *c as f64).abs() < 1e-6
-            },
-        );
+    for n_cus in [2usize, 3] {
+        for kind in [SearchKind::Channel, SearchKind::Split, SearchKind::Layerwise] {
+            if kind == SearchKind::Split && n_cus != 2 {
+                continue;
+            }
+            check(
+                100,
+                |r| {
+                    let c = gen::usize_in(r, 1, 64);
+                    (c, gen::f32_vec(r, kind.theta_len(c, n_cus), -3.0, 3.0))
+                },
+                |(c, theta)| {
+                    let n = expected_counts(kind, theta, *c, n_cus);
+                    n.iter().all(|&x| x >= -1e-6)
+                        && (n.iter().sum::<f64>() - *c as f64).abs() < 1e-6
+                        && n.len() == kind.columns(n_cus)
+                },
+            );
+        }
     }
 }
 
 #[test]
 fn prop_reorg_preserves_function() {
-    check(
-        200,
-        |r| {
-            let c = gen::usize_in(r, 1, 96);
-            gen::cu_vec(r, c)
-        },
-        |cu_of| {
-            let a = LayerAssignment {
-                layer: "l".into(),
-                cu_of: cu_of.clone(),
-            };
-            let m = Mapping {
-                platform: Platform::Diana,
-                layers: vec![a.clone()],
-            };
-            let r = reorganize(&m);
-            let lr = &r.layers[0];
-            // valid permutation, contiguous result, counts preserved,
-            // sub-layers tile [0, C)
-            let after = lr.reorganized_assignment(&a);
-            let covered: usize = lr.sub_layers.iter().map(|s| s.end - s.start).sum();
-            lr.is_valid_permutation()
-                && after.is_contiguous()
-                && after.count(0) == a.count(0)
-                && after.count(1) == a.count(1)
-                && covered == cu_of.len()
-        },
-    );
+    for platform in platforms() {
+        let n_cus = platform.n_cus();
+        check(
+            200,
+            |r| {
+                let c = gen::usize_in(r, 1, 96);
+                gen::cu_vec_n(r, c, n_cus)
+            },
+            |cu_of| {
+                let a = LayerAssignment {
+                    layer: "l".into(),
+                    cu_of: cu_of.clone(),
+                };
+                let m = Mapping {
+                    platform,
+                    layers: vec![a.clone()],
+                };
+                let r = reorganize(&m);
+                let lr = &r.layers[0];
+                // valid permutation, contiguous result, counts preserved,
+                // sub-layers tile [0, C) in ascending CU order
+                let after = lr.reorganized_assignment(&a);
+                let covered: usize = lr.sub_layers.iter().map(|s| s.end - s.start).sum();
+                let ascending = lr.sub_layers.windows(2).all(|w| w[0].cu < w[1].cu);
+                lr.is_valid_permutation()
+                    && after.is_contiguous()
+                    && (0..n_cus as u8).all(|cu| after.count(cu) == a.count(cu))
+                    && covered == cu_of.len()
+                    && ascending
+            },
+        );
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -154,18 +181,10 @@ fn prop_reorg_preserves_function() {
 fn prop_cu_cycles_monotone_in_channels() {
     check(
         100,
-        |r| (rand_layer(r, "l"), gen::usize_in(r, 1, 63)),
-        |(layer, n)| {
-            [
-                Cu::DianaDigital,
-                Cu::DianaAnalog,
-                Cu::DarksideCluster,
-                Cu::DarksideDwe,
-            ]
-            .iter()
-            .all(|&cu| {
-                analytical::cu_cycles(cu, layer, *n)
-                    <= analytical::cu_cycles(cu, layer, n + 1)
+        |r| (rand_layer(r, "l"), gen::usize_in(r, 1, 63), r.below(3)),
+        |(layer, n, pi)| {
+            platforms()[*pi].cus().iter().all(|cu| {
+                analytical::cu_cycles(cu, layer, *n) <= analytical::cu_cycles(cu, layer, n + 1)
             })
         },
     );
@@ -179,11 +198,7 @@ fn prop_detailed_never_below_analytical() {
             let layers: Vec<Layer> = (0..gen::usize_in(r, 1, 6))
                 .map(|i| rand_layer(r, &format!("l{i}")))
                 .collect();
-            let platform = if r.below(2) == 0 {
-                Platform::Diana
-            } else {
-                Platform::Darkside
-            };
+            let platform = rand_platform(r);
             let m = rand_mapping(r, &layers, platform);
             (layers, m)
         },
@@ -200,13 +215,14 @@ fn prop_energy_has_idle_floor() {
     check(
         100,
         |r| {
+            let platform = rand_platform(r);
             let layers = vec![rand_layer(r, "l")];
-            let m = rand_mapping(r, &layers, Platform::Diana);
+            let m = rand_mapping(r, &layers, platform);
             (layers, m)
         },
         |(layers, m)| {
             let rep = analytical::execute(layers, m, &[]);
-            let (_, p_idle, freq) = analytical::power(Platform::Diana);
+            let (_, p_idle, freq) = analytical::power(m.platform);
             let idle_floor = p_idle * rep.total_cycles as f64 / freq * 1e-3;
             rep.energy_uj >= idle_floor - 1e-9
         },
@@ -218,15 +234,17 @@ fn prop_utilization_bounded() {
     check(
         100,
         |r| {
+            let platform = rand_platform(r);
             let layers: Vec<Layer> = (0..gen::usize_in(r, 1, 5))
                 .map(|i| rand_layer(r, &format!("l{i}")))
                 .collect();
-            let m = rand_mapping(r, &layers, Platform::Darkside);
+            let m = rand_mapping(r, &layers, platform);
             (layers, m)
         },
         |(layers, m)| {
             let d = detailed::execute(layers, m, &[]);
-            d.utilization.iter().all(|&u| (0.0..=1.0 + 1e-9).contains(&u))
+            d.utilization.len() == m.platform.n_cus()
+                && d.utilization.iter().all(|&u| (0.0..=1.0 + 1e-9).contains(&u))
         },
     );
 }
@@ -236,14 +254,35 @@ fn prop_sim_deterministic() {
     check(
         50,
         |r| {
+            let platform = rand_platform(r);
             let layers = vec![rand_layer(r, "a"), rand_layer(r, "b")];
-            let m = rand_mapping(r, &layers, Platform::Diana);
+            let m = rand_mapping(r, &layers, platform);
             (layers, m)
         },
         |(layers, m)| {
             let d1 = detailed::execute(layers, m, &[]);
             let d2 = detailed::execute(layers, m, &[]);
             d1.total_cycles == d2.total_cycles && d1.energy_uj == d2.energy_uj
+        },
+    );
+}
+
+#[test]
+fn prop_channel_fractions_partition_unity() {
+    check(
+        60,
+        |r| {
+            let platform = rand_platform(r);
+            let layers = vec![rand_layer(r, "a")];
+            let m = rand_mapping(r, &layers, platform);
+            (layers, m)
+        },
+        |(layers, m)| {
+            let rep = analytical::execute(layers, m, &[]);
+            let k = m.platform.n_cus();
+            let total: f64 = (0..k).map(|c| rep.channel_fraction(c)).sum();
+            let off = rep.offload_channel_fraction();
+            (total - 1.0).abs() < 1e-9 && (off - (1.0 - rep.channel_fraction(0))).abs() < 1e-9
         },
     );
 }

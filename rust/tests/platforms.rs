@@ -1,0 +1,203 @@
+//! Integration tests for the N-CU platform substrate: descriptor
+//! round-trips, runtime discovery, N-way discretization, the Table III
+//! analytical-vs-detailed parity invariant on every registered platform,
+//! and the full artifact-free deployment pipeline (`socmap`) on the
+//! JSON-defined tri-CU SoC — sweep → discretize → reorg → detailed sim →
+//! per-CU report.
+
+use odimo::experiments::{microbench_layers, socmap_point, SOCMAP_LAMBDAS};
+use odimo::mapping::{discretize, one_hot_theta, SearchKind};
+use odimo::soc::{analytical, detailed, LayerAssignment, Mapping, Platform, PlatformSpec};
+
+fn builtin_platforms() -> [Platform; 3] {
+    [Platform::diana(), Platform::darkside(), Platform::trident()]
+}
+
+// ---------------------------------------------------------------------------
+// descriptor loading
+// ---------------------------------------------------------------------------
+
+#[test]
+fn builtin_specs_roundtrip_through_json() {
+    for p in builtin_platforms() {
+        let spec = p.spec();
+        let text = spec.to_json().to_string_pretty();
+        let re = PlatformSpec::parse(&text).expect("re-parse");
+        assert_eq!(*spec, re, "{} descriptor does not round-trip", p.name());
+    }
+}
+
+#[test]
+fn descriptors_on_disk_match_builtins() {
+    // the embedded built-ins are literally the checked-in hw/*.json files;
+    // if the checkout has them, the two must agree
+    for p in builtin_platforms() {
+        let path = odimo::repo_root()
+            .join("hw")
+            .join(format!("{}.json", p.name()));
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            let on_disk = PlatformSpec::parse(&text).expect("hw/*.json parses");
+            assert_eq!(*p.spec(), on_disk, "{} drifted from hw/", p.name());
+        }
+    }
+}
+
+#[test]
+fn runtime_discovery_loads_new_descriptor() {
+    // drop a descriptor under hw/ and resolve it purely by name
+    let dir = odimo::repo_root().join("hw");
+    if !dir.exists() {
+        eprintln!("SKIP: no hw/ directory in this checkout");
+        return;
+    }
+    let name = "ittest-quad";
+    let path = dir.join(format!("{name}.json"));
+    let mut spec = Platform::trident().spec().clone();
+    spec.name = name.to_string();
+    spec.cus.push({
+        let mut extra = spec.cus[1].clone();
+        extra.name = "dwe2".into();
+        extra
+    });
+    if std::fs::write(&path, spec.to_json().to_string_pretty()).is_err() {
+        eprintln!("SKIP: hw/ not writable in this checkout");
+        return;
+    }
+    let loaded = Platform::get(name);
+    std::fs::remove_file(&path).ok();
+    let loaded = loaded.expect("runtime discovery");
+    assert_eq!(loaded.n_cus(), 4);
+    assert_eq!(loaded.cus()[3].name, "dwe2");
+}
+
+#[test]
+fn malformed_descriptor_is_an_error_not_a_panic() {
+    assert!(PlatformSpec::parse("{").is_err());
+    assert!(PlatformSpec::parse(r#"{"name": "x"}"#).is_err());
+    assert!("no-such-platform".parse::<Platform>().is_err());
+}
+
+// ---------------------------------------------------------------------------
+// N-way discretization
+// ---------------------------------------------------------------------------
+
+#[test]
+fn discretize_three_way_on_tri_cu_spec() {
+    let p = Platform::trident();
+    let k = p.n_cus();
+    assert_eq!(k, 3);
+    let cout = 12;
+    // θ rows favoring column (c mod 3)
+    let mut theta = vec![0.0f32; k * cout];
+    for c in 0..cout {
+        theta[c * k + c % k] = 4.0;
+    }
+    let a = discretize(SearchKind::Channel, &theta, cout, k, "l");
+    for (c, &cu) in a.cu_of.iter().enumerate() {
+        assert_eq!(cu as usize, c % k);
+    }
+    let counts = a.counts(k);
+    assert_eq!(counts, vec![4, 4, 4]);
+    // one-hot freeze → discretize is the identity, as the coordinator needs
+    let oh = one_hot_theta(SearchKind::Channel, &a, k);
+    assert_eq!(discretize(SearchKind::Channel, &oh, cout, k, "l"), a);
+}
+
+// ---------------------------------------------------------------------------
+// Table III invariant: analytical underestimates detailed, everywhere
+// ---------------------------------------------------------------------------
+
+#[test]
+fn analytical_detailed_parity_on_all_platforms() {
+    for p in builtin_platforms() {
+        let style = if p.name() == "diana" { "resnet" } else { "mobilenet" };
+        let layers = microbench_layers(style);
+        let k = p.n_cus();
+        for (si, split) in [0.0, 0.35, 0.8].iter().enumerate() {
+            let m = Mapping {
+                platform: p,
+                layers: layers
+                    .iter()
+                    .map(|l| {
+                        let n_off = (l.cout as f64 * split) as usize;
+                        LayerAssignment::offload_round_robin(&l.name, l.cout, n_off, k)
+                    })
+                    .collect(),
+            };
+            assert!(m.is_well_formed());
+            let a = analytical::execute(&layers, &m, &[]);
+            let d = detailed::execute(&layers, &m, &[]);
+            assert!(
+                d.total_cycles > a.total_cycles,
+                "{} split#{si}: detailed {} <= analytical {}",
+                p.name(),
+                d.total_cycles,
+                a.total_cycles
+            );
+            assert_eq!(a.utilization.len(), k);
+            assert_eq!(d.utilization.len(), k);
+            // per-layer, per-CU: the detailed cycles dominate too
+            for (al, dl) in a.layers.iter().zip(&d.layers) {
+                for col in 0..k {
+                    assert!(
+                        dl.per_cu[col].cycles >= al.per_cu[col].cycles,
+                        "{} {} cu{col}",
+                        p.name(),
+                        al.layer
+                    );
+                    assert_eq!(dl.per_cu[col].channels, al.per_cu[col].channels);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end on the JSON-defined 3-CU platform (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn socmap_pipeline_runs_end_to_end_on_trident() {
+    let p = Platform::trident();
+    let layers = microbench_layers("mobilenet");
+    let mut first_cycles = None;
+    let mut last_cycles = 0u64;
+    let mut saw_all_three_busy = false;
+    for &lam in &SOCMAP_LAMBDAS {
+        let (mapping, ana, det) = socmap_point(p, &layers, lam);
+        // the deployed mapping is contiguous per layer (post-reorg)
+        assert!(mapping.is_well_formed());
+        for asg in &mapping.layers {
+            assert!(asg.is_contiguous(), "λ={lam} {}", asg.layer);
+        }
+        // reports carry all three CU columns
+        assert_eq!(ana.n_cus(), 3);
+        assert_eq!(det.n_cus(), 3);
+        assert_eq!(det.utilization.len(), 3);
+        assert!(det.total_cycles > ana.total_cycles);
+        first_cycles.get_or_insert(ana.total_cycles);
+        last_cycles = ana.total_cycles;
+        if det.utilization.iter().all(|&u| u > 0.0) {
+            saw_all_three_busy = true;
+        }
+    }
+    // full cost pressure beats the no-pressure mapping
+    assert!(last_cycles < first_cycles.unwrap());
+    assert!(
+        saw_all_three_busy,
+        "some λ must put work on all 3 CUs of the tri-CU SoC"
+    );
+}
+
+#[test]
+fn socmap_runs_on_two_cu_builtins_too() {
+    let lam = *SOCMAP_LAMBDAS.last().unwrap();
+    for p in [Platform::diana(), Platform::darkside()] {
+        let style = if p.name() == "diana" { "resnet" } else { "mobilenet" };
+        let layers = microbench_layers(style);
+        let (_, ana0, _) = socmap_point(p, &layers, 0.0);
+        let (_, ana_hi, det_hi) = socmap_point(p, &layers, lam);
+        assert!(ana_hi.total_cycles <= ana0.total_cycles, "{}", p.name());
+        assert_eq!(det_hi.utilization.len(), 2, "{}", p.name());
+    }
+}
