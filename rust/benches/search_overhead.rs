@@ -1,70 +1,62 @@
-//! Bench: train-step wall time, ODiMO supernet vs plain baseline
-//! (the engine behind paper Table II). Needs artifacts; exits with a
-//! notice when they are missing.
+//! Bench: training-free mapping-search cost per Pareto point — greedy vs
+//! coordinate descent vs random restart, with and without a warm
+//! evaluator cache.
+//!
+//! This is the overhead story of the `search` subsystem: descent buys
+//! whole-network optimality at the price of extra evaluator calls, and
+//! the memoized per-layer cache is what keeps that price sub-linear in
+//! the number of probed moves. Artifact-free (the Table II *training*
+//! overhead bench lives in `repro exp table2` / `benches/coordinator.rs`).
 
-use odimo::config::ExperimentConfig;
-use odimo::coordinator::Trainer;
-use odimo::runtime::StepHparams;
-use odimo::util::bench::bench;
+use odimo::experiments::microbench_layers;
+use odimo::search::{
+    CachingEvaluator, CoordinateDescent, CostEvaluator, Greedy, RandomRestart, SearchStrategy,
+};
+use odimo::soc::Platform;
+use odimo::util::bench::quick;
 
-fn step_time(variant: &str, lam: f32, lr_th: f32) -> Option<(f64, usize)> {
-    let artifacts = odimo::repo_root().join("artifacts");
-    if !artifacts
-        .join(format!("{variant}.manifest.json"))
-        .exists()
-    {
-        return None;
+fn bench_platform(name: &str, style: &str) {
+    let platform = Platform::get(name).expect("built-in platform");
+    let layers = microbench_layers(style);
+    println!("-- {name} ({style}, {} layers), λ=16", layers.len());
+    let strategies: [&dyn SearchStrategy; 3] = [
+        &Greedy,
+        &CoordinateDescent::default(),
+        &RandomRestart::default(),
+    ];
+    for strategy in strategies {
+        // cold cache: a fresh evaluator per point (the sweep_lambdas setup)
+        let r = quick(&format!("{name} {} cold-cache point", strategy.name()), || {
+            let mut eval = CachingEvaluator::detailed(platform, &layers);
+            let out = strategy.search(platform, &layers, 16.0, &mut eval);
+            std::hint::black_box(out.cost);
+        });
+        // one instrumented run for the evaluator-call story
+        let mut eval = CachingEvaluator::detailed(platform, &layers);
+        let out = strategy.search(platform, &layers, 16.0, &mut eval);
+        let s = eval.stats();
+        println!(
+            "     {}: {} evaluator calls, {} sims ({} cache hits), {:.1} us/call",
+            strategy.name(),
+            s.calls,
+            s.sim_evals(),
+            s.cache_hits,
+            r.mean_ns / 1e3 / s.calls.max(1) as f64,
+        );
+        std::hint::black_box(out.penalty);
+        // warm cache: re-searching with the same evaluator shows the memo
+        // path (every state already priced)
+        let mut warm = CachingEvaluator::detailed(platform, &layers);
+        strategy.search(platform, &layers, 16.0, &mut warm);
+        quick(&format!("{name} {} warm-cache point", strategy.name()), || {
+            let out = strategy.search(platform, &layers, 16.0, &mut warm);
+            std::hint::black_box(out.cost);
+        });
     }
-    let mut cfg = ExperimentConfig::for_variant(variant);
-    cfg.steps_per_epoch = 4;
-    cfg.eval_batches = 1;
-    let client = odimo::runtime::cpu_client().expect("client");
-    let tr = Trainer::new(&client, &artifacts, cfg).expect("trainer");
-    let mut state = tr.init_state().expect("init");
-    let hp = StepHparams {
-        lam,
-        cost_sel: 0.0,
-        lr_w: 1e-2,
-        lr_th,
-    };
-    tr.run_epoch(&mut state, hp, 0).expect("warm"); // compile+warm
-    let mut e = 1usize;
-    let r = bench(
-        &format!("train epoch (4 steps) {variant}"),
-        0,
-        std::time::Duration::from_secs(8),
-        24,
-        || {
-            tr.run_epoch(&mut state, hp, e).expect("epoch");
-            e += 1;
-        },
-    );
-    Some((r.mean_ns / 4.0 / 1e6, tr.state_bytes()))
 }
 
 fn main() {
-    println!("== search_overhead bench (Table II engine) ==");
-    let pairs = [
-        ("diana_resnet20_c10", "diana_resnet20_c10_fixed"),
-        ("darkside_mbv1_c10", "darkside_mbv1_c10_fixed"),
-    ];
-    let mut any = false;
-    for (search, fixed) in pairs {
-        let Some((ms_s, by_s)) = step_time(search, 1e-7, 0.05) else {
-            continue;
-        };
-        let Some((ms_f, by_f)) = step_time(fixed, 0.0, 0.0) else {
-            continue;
-        };
-        any = true;
-        println!(
-            "  {search}: search {ms_s:.1} ms/step vs baseline {ms_f:.1} ms/step \
-             -> time {:.2}x, memory {:.2}x",
-            ms_s / ms_f,
-            by_s as f64 / by_f as f64
-        );
-    }
-    if !any {
-        println!("  (no artifacts — run `make artifacts` first)");
-    }
+    println!("== search_overhead bench: cost per training-free Pareto point ==");
+    bench_platform("trident", "resnet");
+    bench_platform("darkside", "mobilenet");
 }

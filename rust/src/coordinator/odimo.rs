@@ -125,6 +125,9 @@ pub fn search_and_finalize(
     let (val_acc, _) = tr.evaluate(state, Split::Val)?;
     let (test_acc, _) = tr.evaluate(state, Split::Test)?;
     let (ana, det) = tr.simulate(&mapping);
+    // the differentiable search evaluates its cost model inside the
+    // training graph, so there are no out-of-graph evaluator calls; the
+    // search epochs play the role of descent rounds
     Ok(RunRecord::from_reports(
         "odimo",
         &tr.cfg.variant,
@@ -140,7 +143,8 @@ pub fn search_and_finalize(
         mapping,
         step_ms,
         tr.state_bytes(),
-    ))
+    )
+    .with_search("gradient", tr.cfg.search_epochs, 0))
 }
 
 /// Full λ sweep with shared warmup: the Pareto-front generator.

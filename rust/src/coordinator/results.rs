@@ -44,6 +44,15 @@ pub struct RunRecord {
     pub mean_step_ms: f64,
     /// total parameter+optimizer state bytes (Table II input)
     pub state_bytes: usize,
+    /// how this mapping was found: "gradient" for the trained ODiMO
+    /// search, a `search::SearchStrategy` name for training-free
+    /// optimizers, "baseline-*" for manual corners
+    pub strategy: String,
+    /// coordinate-descent rounds (0 for one-shot / gradient searches)
+    pub search_rounds: usize,
+    /// simulator-backed evaluator calls the search consumed (0 when the
+    /// cost model ran inside the training graph)
+    pub evaluator_calls: u64,
 }
 
 impl RunRecord {
@@ -88,7 +97,18 @@ impl RunRecord {
             mapping,
             mean_step_ms,
             state_bytes,
+            strategy: String::new(),
+            search_rounds: 0,
+            evaluator_calls: 0,
         }
+    }
+
+    /// Attach search metadata (builder-style, after `from_reports`).
+    pub fn with_search(mut self, strategy: &str, rounds: usize, evaluator_calls: u64) -> Self {
+        self.strategy = strategy.to_string();
+        self.search_rounds = rounds;
+        self.evaluator_calls = evaluator_calls;
+        self
     }
 
     /// The cost value on the axis an experiment plots (analytical, like
@@ -134,6 +154,9 @@ impl RunRecord {
             ("offload_frac", Value::num(self.offload_frac)),
             ("mean_step_ms", Value::num(self.mean_step_ms)),
             ("state_bytes", Value::num(self.state_bytes as f64)),
+            ("strategy", Value::str(&self.strategy)),
+            ("search_rounds", Value::num(self.search_rounds as f64)),
+            ("evaluator_calls", Value::num(self.evaluator_calls as f64)),
             (
                 "per_layer",
                 Value::arr(self.per_layer.iter().map(|l| {
@@ -203,8 +226,12 @@ mod tests {
         let det = detailed::execute(std::slice::from_ref(&layer), &mapping, &[]);
         let rec = RunRecord::from_reports(
             "test", "v", Some(0.1), "latency", 0.5, 0.5, &ana, &det, mapping, 1.0, 64,
-        );
+        )
+        .with_search("descent", 3, 120);
         assert_eq!(rec.util.len(), 3);
+        assert_eq!(rec.strategy, "descent");
+        assert_eq!(rec.search_rounds, 3);
+        assert_eq!(rec.evaluator_calls, 120);
         assert_eq!(rec.per_layer[0].channels, vec![8, 8, 8]);
         assert_eq!(rec.per_layer[0].cycles.len(), 3);
         assert!((rec.offload_frac - 2.0 / 3.0).abs() < 1e-9);
@@ -212,6 +239,9 @@ mod tests {
         // JSON view reparses and keeps the vectors
         let v = crate::util::json::parse(&rec.to_json().to_string_pretty()).unwrap();
         assert_eq!(v.str_of("platform").unwrap(), "trident");
+        assert_eq!(v.str_of("strategy").unwrap(), "descent");
+        assert_eq!(v.usize_of("search_rounds").unwrap(), 3);
+        assert_eq!(v.usize_of("evaluator_calls").unwrap(), 120);
         assert_eq!(v.req("util").unwrap().as_arr().unwrap().len(), 3);
         let pl = v.req("per_layer").unwrap().as_arr().unwrap();
         assert_eq!(

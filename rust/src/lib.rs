@@ -23,11 +23,17 @@
 //! touching simulator code. Mappings, discretization, the Fig. 4 reorg
 //! pass, baselines, and all reports are N-way accordingly.
 //!
+//! Training-free mapping optimization lives in [`search`]: a
+//! [`search::SearchStrategy`] trait (greedy / coordinate descent /
+//! random-restart) over a memoizing, simulator-backed
+//! [`search::CostEvaluator`], with the λ grid swept across scoped
+//! threads. The paper's manual baselines implement the same trait.
+//!
 //! Entry points: the `repro` binary (`rust/src/main.rs`) exposes every
 //! paper experiment (`repro exp fig5 …`) plus the artifact-free
-//! `repro exp socmap` deployment-pipeline sweep and `repro platforms`;
-//! `examples/` hold smaller guided drivers; this library API is what all
-//! of them consume.
+//! `repro exp socmap` deployment-pipeline sweep (`--search
+//! greedy|descent|restart`) and `repro platforms`; `examples/` hold
+//! smaller guided drivers; this library API is what all of them consume.
 
 pub mod config;
 pub mod coordinator;
@@ -37,6 +43,7 @@ pub mod mapping;
 pub mod pareto;
 pub mod report;
 pub mod runtime;
+pub mod search;
 pub mod soc;
 pub mod stats;
 pub mod util;

@@ -12,6 +12,7 @@
 //! repro sweep --variant darkside_mbv1_c10 [--no-baselines]
 //! repro exp <fig5|fig6|fig7|fig8|fig9|fig10|table2|table3|table4|socmap|all>
 //!           [--task c10|c100|imagenet] [--soc diana|darkside|trident|<hw/*.json>] [--fast f]
+//!           [--search greedy|descent|restart]   (socmap strategy)
 //! ```
 
 use std::path::PathBuf;
@@ -29,7 +30,8 @@ const USAGE: &str = "usage: repro <list|platforms|train|sweep|exp> [options]
   sweep:  --variant V [--cost-target T] [--config F] [--fast F] [--no-baselines]
   exp:    <fig5|fig6|fig7|fig8|fig9|fig10|table2|table3|table4|socmap|all>
           [--task c10|c100|imagenet] [--soc diana|darkside|trident|NAME] [--fast F]
-          (socmap: --soc any registered platform, --task resnet|mobilenet)";
+          (socmap: --soc any registered platform, --task resnet|mobilenet,
+           --search greedy|descent|restart)";
 
 fn main() -> Result<()> {
     let args = cli::parse(std::env::args().skip(1), &["no-baselines", "help"])?;
@@ -160,12 +162,16 @@ fn main() -> Result<()> {
                 .get(1)
                 .map(|s| s.as_str())
                 .unwrap_or("all");
+            // validate --search eagerly: a typo'd strategy should fail
+            // before any (long) experiment work starts
+            let _ = args.opt_parse::<odimo::search::StrategyKind>("search")?;
             odimo::experiments::run(
                 id,
                 &artifacts,
                 &results,
                 args.opt("task"),
                 args.opt("soc"),
+                args.opt("search"),
                 fast,
             )?;
         }

@@ -127,6 +127,21 @@ pub fn discretize(
     }
 }
 
+/// Contiguous assignment from per-CU channel counts: `counts[0]` channels
+/// on CU 0, then `counts[1]` on CU 1, ... — the canonical deployment-order
+/// layout every counts-based optimizer (min-cost baseline, the `search`
+/// strategies) shares.
+pub fn assignment_from_counts(layer: &str, counts: &[usize]) -> LayerAssignment {
+    let mut cu_of = Vec::with_capacity(counts.iter().sum());
+    for (cu, &n) in counts.iter().enumerate() {
+        cu_of.extend(std::iter::repeat(cu as u8).take(n));
+    }
+    LayerAssignment {
+        layer: layer.to_string(),
+        cu_of,
+    }
+}
+
 /// Build the one-hot θ logits that freeze an assignment (used for the
 /// Final-Training phase and for all deterministic baselines).
 pub fn one_hot_theta(kind: SearchKind, asg: &LayerAssignment, n_cus: usize) -> Vec<f32> {
@@ -320,6 +335,15 @@ mod tests {
         let t = expected_counts(SearchKind::Channel, &theta_3, 3, 3);
         assert_eq!(t.len(), 3);
         assert!((t.iter().sum::<f64>() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn assignment_from_counts_is_contiguous() {
+        let a = assignment_from_counts("l", &[2, 0, 3]);
+        assert_eq!(a.cu_of, vec![0, 0, 2, 2, 2]);
+        assert!(a.is_contiguous());
+        assert_eq!(a.counts(3), vec![2, 0, 3]);
+        assert!(assignment_from_counts("l", &[0, 0]).cu_of.is_empty());
     }
 
     #[test]

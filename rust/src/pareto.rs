@@ -22,18 +22,24 @@ impl Point {
 }
 
 /// Indices of the non-dominated points, sorted by ascending cost.
+///
+/// NaN-safe: ordering uses [`f64::total_cmp`] (never panics), and points
+/// with a NaN coordinate are excluded from the front — a mapping whose
+/// cost or accuracy failed to evaluate cannot be declared optimal.
 pub fn pareto_front(points: &[Point]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..points.len()).collect();
     idx.sort_by(|&i, &j| {
         points[i]
             .cost
-            .partial_cmp(&points[j].cost)
-            .unwrap()
-            .then(points[j].acc.partial_cmp(&points[i].acc).unwrap())
+            .total_cmp(&points[j].cost)
+            .then(points[j].acc.total_cmp(&points[i].acc))
     });
     let mut front = Vec::new();
     let mut best_acc = f64::NEG_INFINITY;
     for &i in &idx {
+        if points[i].cost.is_nan() || points[i].acc.is_nan() {
+            continue;
+        }
         if points[i].acc > best_acc {
             front.push(i);
             best_acc = points[i].acc;
@@ -73,6 +79,26 @@ mod tests {
         ];
         let f = pareto_front(&pts);
         assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn nan_inputs_do_not_panic_and_are_excluded() {
+        // regression: the old partial_cmp(..).unwrap() panicked on NaN
+        let pts = vec![
+            Point { cost: 1.0, acc: 0.5 },
+            Point { cost: f64::NAN, acc: 0.9 },
+            Point { cost: 2.0, acc: f64::NAN },
+            Point { cost: 2.0, acc: 0.7 },
+            Point { cost: f64::NAN, acc: f64::NAN },
+        ];
+        let f = pareto_front(&pts);
+        assert_eq!(f, vec![0, 3], "NaN points must never join the front");
+        // all-NaN input: empty front, no panic
+        let all_nan = vec![Point { cost: f64::NAN, acc: f64::NAN }; 3];
+        assert!(pareto_front(&all_nan).is_empty());
+        // dominance involving NaN is always false, both directions
+        assert!(!pts[1].dominates(&pts[0]));
+        assert!(!pts[0].dominates(&pts[1]));
     }
 
     #[test]

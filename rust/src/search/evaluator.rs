@@ -1,0 +1,238 @@
+//! Simulator-backed cost evaluation with an incremental per-layer recost
+//! path and a memoized layer-cost cache.
+//!
+//! Both SoC simulators decompose exactly into per-layer latencies (the
+//! fabric controller re-syncs at every layer boundary — see
+//! `soc::detailed::sim_layer`), so a whole-network cost is the sum of
+//! per-layer costs and a candidate move that touches one layer only needs
+//! that one layer re-priced. [`CachingEvaluator`] memoizes each
+//! `(layer, per-CU counts)` result, so coordinate descent revisiting a
+//! state (or the λ-neighbouring restart descending through the same
+//! region) never re-simulates it.
+
+use std::collections::HashMap;
+
+use crate::soc::{analytical, detailed, Layer, Mapping, Platform};
+
+/// Evaluation counters, cumulative over an evaluator's lifetime.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EvalStats {
+    /// `layer_cost` invocations (what a cache-less evaluator would simulate)
+    pub calls: u64,
+    /// calls answered from the memo cache
+    pub cache_hits: u64,
+}
+
+impl EvalStats {
+    /// Calls that actually ran a simulator (cache misses).
+    pub fn sim_evals(&self) -> u64 {
+        self.calls - self.cache_hits
+    }
+}
+
+/// One cost backend behind the [`CostEvaluator`] trait.
+///
+/// `Analytical` prices with the model ODiMO searches with;
+/// `Detailed` prices with the event-driven simulator (DMA serialization,
+/// bank contention, warm-up) — the "measured" cost the paper deploys on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CostModel {
+    Analytical,
+    Detailed,
+}
+
+/// Uniform cost interface every [`super::SearchStrategy`] optimizes
+/// against. Implementations must price a single layer in isolation; the
+/// provided `network_cost` is the exact whole-network sum (both in-tree
+/// simulators are layer-separable — pinned by `tests/search.rs`).
+pub trait CostEvaluator {
+    fn platform(&self) -> Platform;
+
+    /// Latency cycles of layer `li` under per-CU channel `counts`.
+    fn layer_cost(&mut self, li: usize, counts: &[usize]) -> u64;
+
+    /// True if layer `li`'s CU stages execute sequentially (the DW→PW
+    /// chains whose latency is the sum, not the max, of the stages).
+    /// Strategies that reason about per-layer latency outside
+    /// `layer_cost` must use this so their model matches the evaluator's.
+    fn layer_sequential(&self, _li: usize) -> bool {
+        false
+    }
+
+    /// Whole-network cost of `mapping` (sum of per-layer costs).
+    fn network_cost(&mut self, mapping: &Mapping) -> u64 {
+        let k = self.platform().n_cus();
+        let mut total = 0u64;
+        for (li, asg) in mapping.layers.iter().enumerate() {
+            total += self.layer_cost(li, &asg.counts(k));
+        }
+        total
+    }
+
+    fn stats(&self) -> EvalStats;
+}
+
+/// The standard evaluator: one of the two simulators plus the memo cache.
+pub struct CachingEvaluator<'a> {
+    platform: Platform,
+    layers: &'a [Layer],
+    /// per-layer sequential-stage flag (DW→PW chains cost the sum, not
+    /// the max, of the active CUs)
+    sequential: Vec<bool>,
+    model: CostModel,
+    cache: HashMap<(usize, Vec<usize>), u64>,
+    calls: u64,
+    hits: u64,
+}
+
+impl<'a> CachingEvaluator<'a> {
+    pub fn new(
+        model: CostModel,
+        platform: Platform,
+        layers: &'a [Layer],
+        seq_layers: &[String],
+    ) -> Self {
+        let sequential = layers
+            .iter()
+            .map(|l| seq_layers.iter().any(|s| s == &l.name))
+            .collect();
+        Self {
+            platform,
+            layers,
+            sequential,
+            model,
+            cache: HashMap::new(),
+            calls: 0,
+            hits: 0,
+        }
+    }
+
+    /// Analytical-model evaluator with no sequential layers.
+    pub fn analytical(platform: Platform, layers: &'a [Layer]) -> Self {
+        Self::new(CostModel::Analytical, platform, layers, &[])
+    }
+
+    /// Detailed-simulator evaluator with no sequential layers.
+    pub fn detailed(platform: Platform, layers: &'a [Layer]) -> Self {
+        Self::new(CostModel::Detailed, platform, layers, &[])
+    }
+
+    pub fn model(&self) -> CostModel {
+        self.model
+    }
+
+    pub fn layers(&self) -> &'a [Layer] {
+        self.layers
+    }
+}
+
+impl CostEvaluator for CachingEvaluator<'_> {
+    fn platform(&self) -> Platform {
+        self.platform
+    }
+
+    fn layer_cost(&mut self, li: usize, counts: &[usize]) -> u64 {
+        self.calls += 1;
+        let key = (li, counts.to_vec());
+        if let Some(&cached) = self.cache.get(&key) {
+            self.hits += 1;
+            return cached;
+        }
+        let layer = &self.layers[li];
+        let seq = self.sequential[li];
+        let cost = match self.model {
+            CostModel::Analytical => analytical::layer_latency(self.platform, layer, counts, seq),
+            CostModel::Detailed => detailed::layer_latency(self.platform, layer, counts, seq),
+        };
+        self.cache.insert(key, cost);
+        cost
+    }
+
+    fn layer_sequential(&self, li: usize) -> bool {
+        self.sequential[li]
+    }
+
+    fn stats(&self) -> EvalStats {
+        EvalStats {
+            calls: self.calls,
+            cache_hits: self.hits,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::{LayerAssignment, LayerType};
+
+    fn conv(name: &str, cin: usize, cout: usize, hw: usize) -> Layer {
+        Layer {
+            name: name.into(),
+            ltype: LayerType::Conv,
+            cin,
+            cout,
+            k: 3,
+            ox: hw,
+            oy: hw,
+            stride: 1,
+            searchable: true,
+        }
+    }
+
+    #[test]
+    fn cache_hits_and_consistency() {
+        let layers = vec![conv("a", 16, 32, 8), conv("b", 32, 32, 8)];
+        let p = Platform::trident();
+        let mut ev = CachingEvaluator::detailed(p, &layers);
+        let c1 = ev.layer_cost(0, &[16, 0, 16]);
+        let c2 = ev.layer_cost(0, &[16, 0, 16]);
+        assert_eq!(c1, c2);
+        let s = ev.stats();
+        assert_eq!(s.calls, 2);
+        assert_eq!(s.cache_hits, 1);
+        assert_eq!(s.sim_evals(), 1);
+        // different counts are a different cache line: no new hit
+        ev.layer_cost(0, &[32, 0, 0]);
+        assert_eq!(ev.stats().cache_hits, 1);
+        assert_eq!(ev.stats().sim_evals(), 2);
+    }
+
+    #[test]
+    fn network_cost_matches_both_simulators() {
+        let layers = vec![conv("a", 16, 32, 8), conv("b", 32, 48, 8)];
+        for p in [Platform::diana(), Platform::trident()] {
+            let k = p.n_cus();
+            let mapping = Mapping {
+                platform: p,
+                layers: layers
+                    .iter()
+                    .map(|l| LayerAssignment {
+                        layer: l.name.clone(),
+                        cu_of: (0..l.cout).map(|c| (c % k) as u8).collect(),
+                    })
+                    .collect(),
+            };
+            let mut ana = CachingEvaluator::analytical(p, &layers);
+            let mut det = CachingEvaluator::detailed(p, &layers);
+            assert_eq!(
+                ana.network_cost(&mapping),
+                analytical::execute(&layers, &mapping, &[]).total_cycles
+            );
+            assert_eq!(
+                det.network_cost(&mapping),
+                detailed::execute(&layers, &mapping, &[]).total_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn sequential_flag_prices_the_sum() {
+        let layers = vec![conv("a", 16, 32, 8)];
+        let p = Platform::darkside();
+        let mut par = CachingEvaluator::new(CostModel::Analytical, p, &layers, &[]);
+        let mut seq =
+            CachingEvaluator::new(CostModel::Analytical, p, &layers, &["a".to_string()]);
+        let counts = [16usize, 16];
+        assert!(seq.layer_cost(0, &counts) > par.layer_cost(0, &counts));
+    }
+}

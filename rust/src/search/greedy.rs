@@ -1,0 +1,173 @@
+//! The per-layer greedy channel placer — the training-free heuristic that
+//! used to live inline in `experiments.rs` (`socmap_assign`), now behind
+//! [`SearchStrategy`] and capacity-aware.
+//!
+//! Each channel goes to the CU (among those whose descriptor supports the
+//! layer's op *and* can still hold the channel's weights) minimizing
+//! `λ · layer-latency-after-placement + quality penalty` (ties to the
+//! lowest column). λ = 0 keeps everything on the least aggressive CU;
+//! large λ approaches the min-latency partition — tracing the same
+//! accuracy-vs-cost tension the trained search navigates. The scoring is
+//! purely per-layer (analytical, no cross-layer view), which is exactly
+//! the gap [`super::CoordinateDescent`] closes.
+
+use crate::soc::{analytical, Layer, LayerAssignment, Mapping, Platform};
+
+use super::{
+    eligible_cus, finish_outcome, fits, quant_penalty, CostEvaluator, SearchOutcome,
+    SearchStrategy,
+};
+
+/// λ-aware greedy channel assignment for one layer.
+pub fn greedy_assign(platform: Platform, layer: &Layer, lambda: f64) -> LayerAssignment {
+    let cus = platform.cus();
+    let eligible = eligible_cus(platform, layer);
+    let mut counts = vec![0usize; cus.len()];
+    let mut cu_of: Vec<u8> = Vec::with_capacity(layer.cout);
+    let macs1 = layer.macs_std(1) as f64;
+    for _ in 0..layer.cout {
+        // capacity-infeasible CUs drop out of the candidate set; when no
+        // eligible CU could take one more channel the layer still needs a
+        // home, so capacity is waived (op eligibility never is)
+        let any_fit = cus
+            .iter()
+            .enumerate()
+            .any(|(k, cu)| eligible[k] && fits(cu, layer, counts[k] + 1));
+        let mut best = usize::MAX;
+        let mut best_score = f64::INFINITY;
+        for (k, cu) in cus.iter().enumerate() {
+            if !eligible[k] || (any_fit && !fits(cu, layer, counts[k] + 1)) {
+                continue;
+            }
+            counts[k] += 1;
+            let lat = cus
+                .iter()
+                .zip(&counts)
+                .map(|(c, &n)| analytical::cu_cycles(c, layer, n))
+                .max()
+                .unwrap_or(0) as f64;
+            counts[k] -= 1;
+            let score = lambda * lat + quant_penalty(&cu.quant) * macs1;
+            if score < best_score {
+                best_score = score;
+                best = k;
+            }
+        }
+        counts[best] += 1;
+        cu_of.push(best as u8);
+    }
+    LayerAssignment {
+        layer: layer.name.clone(),
+        cu_of,
+    }
+}
+
+/// Greedy assignment over a whole workload.
+pub fn greedy_mapping(platform: Platform, layers: &[Layer], lambda: f64) -> Mapping {
+    Mapping {
+        platform,
+        layers: layers
+            .iter()
+            .map(|l| greedy_assign(platform, l, lambda))
+            .collect(),
+    }
+}
+
+/// The greedy heuristic as a [`SearchStrategy`].
+pub struct Greedy;
+
+impl SearchStrategy for Greedy {
+    fn name(&self) -> &str {
+        "greedy"
+    }
+
+    fn search(
+        &self,
+        platform: Platform,
+        layers: &[Layer],
+        lambda: f64,
+        eval: &mut dyn CostEvaluator,
+    ) -> SearchOutcome {
+        let mapping = greedy_mapping(platform, layers, lambda);
+        finish_outcome(self.name(), 0, 0, mapping, layers, eval)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::feasible_counts;
+    use crate::soc::LayerType;
+
+    fn conv(name: &str, cin: usize, cout: usize, hw: usize) -> Layer {
+        Layer {
+            name: name.into(),
+            ltype: LayerType::Conv,
+            cin,
+            cout,
+            k: 3,
+            ox: hw,
+            oy: hw,
+            stride: 1,
+            searchable: true,
+        }
+    }
+
+    #[test]
+    fn lambda_zero_stays_on_least_aggressive_cu() {
+        // with no cost pressure everything stays on the least aggressive
+        // CUs; on trident the cluster and dwe are both int8, ties go to
+        // column 0
+        let p = Platform::trident();
+        for l in [conv("a", 16, 32, 16), conv("b", 32, 64, 8)] {
+            let a = greedy_assign(p, &l, 0.0);
+            assert!(a.cu_of.iter().all(|&c| c == 0), "{}: {:?}", l.name, a.cu_of);
+        }
+    }
+
+    #[test]
+    fn large_lambda_offloads_and_cuts_latency() {
+        let p = Platform::trident();
+        let layers: Vec<Layer> = (0..4).map(|i| conv(&format!("l{i}"), 32, 64, 16)).collect();
+        let m0 = greedy_mapping(p, &layers, 0.0);
+        let m_hi = greedy_mapping(p, &layers, 65536.0);
+        let a0 = analytical::execute(&layers, &m0, &[]);
+        let ahi = analytical::execute(&layers, &m_hi, &[]);
+        assert!(ahi.total_cycles < a0.total_cycles);
+        assert!(ahi.offload_channel_fraction() > 0.0);
+    }
+
+    #[test]
+    fn greedy_respects_capacity_when_a_feasible_split_exists() {
+        let p = Platform::trident();
+        // 256·256·9 ≈ 576 KB of conv weights: more than the cluster's
+        // capacity alone but within cluster + aimc combined, so capacity
+        // must *bind* (force a split) while staying satisfiable
+        let big = conv("big", 256, 256, 4);
+        for lambda in [0.0, 16.0, 65536.0] {
+            let a = greedy_assign(p, &big, lambda);
+            let counts = a.counts(p.n_cus());
+            assert_eq!(counts.iter().sum::<usize>(), 256);
+            assert!(
+                feasible_counts(p, &big, &counts),
+                "λ={lambda}: {counts:?} violates a capacity"
+            );
+            assert!(
+                counts[0] < 256,
+                "λ={lambda}: the cluster cannot hold every filter"
+            );
+        }
+    }
+
+    #[test]
+    fn greedy_waives_capacity_only_when_nothing_fits() {
+        let p = Platform::trident();
+        // 512·512·9 ≈ 2.4 MB exceeds every eligible capacity combined;
+        // each channel still gets a home (capacity waived, eligibility not)
+        let huge = conv("huge", 512, 512, 4);
+        let a = greedy_assign(p, &huge, 0.0);
+        let counts = a.counts(p.n_cus());
+        assert_eq!(counts.iter().sum::<usize>(), 512);
+        assert_eq!(counts[1], 0, "dwe stays ineligible for conv");
+    }
+}

@@ -1,0 +1,377 @@
+//! The unified mapping-search subsystem: training-free optimizers over
+//! fine-grain layer→CU channel assignments.
+//!
+//! The paper's core contribution is the *search* over mappings; this
+//! module makes that search first-class instead of experiment-file glue.
+//! Three layers compose:
+//!
+//! * **[`CostEvaluator`]** (`evaluator`) — one trait in front of both SoC
+//!   simulators (`soc::analytical`, `soc::detailed`). Both are
+//!   layer-separable (the fabric re-syncs at every layer boundary), so
+//!   the evaluator exposes an *incremental* per-layer recost path:
+//!   a candidate move that re-splits one layer re-prices that layer only,
+//!   and a memoized `(layer, counts)` cache means revisited states are
+//!   never re-simulated. Whole-network cost is the exact sum of the
+//!   per-layer costs — pinned by `tests/search.rs`.
+//! * **[`SearchStrategy`]** — one trait per optimizer. Shipped
+//!   strategies: [`Greedy`] (per-layer λ-aware channel placement, the
+//!   heuristic formerly inlined in `experiments.rs`),
+//!   [`CoordinateDescent`] (sweeps layers repeatedly, re-splitting each
+//!   layer's channels against the full-network evaluator cost until a
+//!   fixed point), and [`RandomRestart`] (multi-seed descent via
+//!   `datasets::rng`, keeping the per-λ best). The paper's manual
+//!   baselines also implement the trait (`coordinator::baselines`), so
+//!   corners, heuristics, and optimizers are enumerated uniformly.
+//! * **[`sweep_lambdas`]** — the Pareto driver: one scoped thread per λ
+//!   (`std::thread::scope`), each with its own evaluator, tracing the
+//!   accuracy-proxy-vs-cost front in parallel.
+//!
+//! The scalarized objective every strategy minimizes at strength λ is
+//! `J = λ · cost(mapping) + penalty(mapping)`, where `cost` comes from
+//! the evaluator (cycles) and [`mapping_penalty`] is the training-free
+//! accuracy proxy (aggressive data representations cost quality — see
+//! [`quant_penalty`]). Because [`CoordinateDescent`] starts from
+//! [`Greedy`]'s solution and only ever accepts moves that improve
+//! `(J, cost)` lexicographically, a descent point can never be dominated
+//! by the greedy point at the same λ — the invariant
+//! `tests/search.rs` asserts on every registered platform.
+//!
+//! **Feasibility**: a platform descriptor may bound a CU's weight memory
+//! (`mem_capacity_bytes` in `hw/*.json`). [`fits`] checks a candidate
+//! channel count against that bound; every shipped strategy consults it
+//! before placing or moving channels, falling back to capacity-waived
+//! placement only when *no* eligible CU could hold the channel (a layer
+//! must run somewhere).
+//!
+//! **Adding a strategy**: implement [`SearchStrategy`] (take the
+//! evaluator as `&mut dyn CostEvaluator`, return a [`SearchOutcome`] via
+//! [`finish_outcome`]), add a [`StrategyKind`] variant + `FromStr` arm so
+//! `--search <name>` reaches it, and extend the non-domination property
+//! test if the strategy claims descent-like guarantees. Trained
+//! (gradient) searches keep living in `coordinator`; this module is the
+//! home for everything that optimizes against the simulators directly.
+
+pub mod descent;
+pub mod evaluator;
+pub mod greedy;
+pub mod restart;
+
+pub use descent::CoordinateDescent;
+pub use evaluator::{CachingEvaluator, CostEvaluator, CostModel, EvalStats};
+pub use greedy::{greedy_assign, greedy_mapping, Greedy};
+pub use restart::RandomRestart;
+
+use std::str::FromStr;
+
+use anyhow::{bail, Result};
+
+use crate::soc::{analytical, CuSpec, Layer, Mapping, Platform};
+
+// ---------------------------------------------------------------------------
+// objective pieces shared by every strategy
+// ---------------------------------------------------------------------------
+
+/// Per-channel "accuracy pressure" of placing work on a CU: CUs with more
+/// aggressive data representations are assumed to cost more accuracy
+/// (ternary > int8), scaled to the layer's per-channel MAC volume so λ is
+/// comparable against cycle counts. A crude, training-free stand-in for
+/// the task-loss gradient of the real search.
+pub fn quant_penalty(quant: &str) -> f64 {
+    match quant {
+        "int8" => 0.0,
+        "ternary" => 1.0,
+        _ => 0.5,
+    }
+}
+
+/// Accuracy-proxy penalty of one layer's per-CU channel counts.
+pub fn layer_penalty(platform: Platform, layer: &Layer, counts: &[usize]) -> f64 {
+    let macs1 = layer.macs_std(1) as f64;
+    platform
+        .cus()
+        .iter()
+        .zip(counts)
+        .map(|(cu, &n)| quant_penalty(&cu.quant) * macs1 * n as f64)
+        .sum()
+}
+
+/// Accuracy-proxy penalty of a whole mapping (sum over layers).
+pub fn mapping_penalty(layers: &[Layer], mapping: &Mapping) -> f64 {
+    let k = mapping.platform.n_cus();
+    layers
+        .iter()
+        .zip(&mapping.layers)
+        .map(|(l, a)| layer_penalty(mapping.platform, l, &a.counts(k)))
+        .sum()
+}
+
+// ---------------------------------------------------------------------------
+// feasibility
+// ---------------------------------------------------------------------------
+
+/// CUs of `platform` whose descriptor claims support for `layer`'s op.
+/// A layer nothing claims still has to run somewhere: column 0 hosts it.
+pub fn eligible_cus(platform: Platform, layer: &Layer) -> Vec<bool> {
+    let mut eligible: Vec<bool> = platform
+        .cus()
+        .iter()
+        .map(|cu| cu.supports(layer.ltype))
+        .collect();
+    if !eligible.iter().any(|&e| e) {
+        eligible[0] = true;
+    }
+    eligible
+}
+
+/// True if `n` channels of `layer` fit `cu`'s weight memory (descriptors
+/// without `mem_capacity_bytes` are unconstrained).
+pub fn fits(cu: &CuSpec, layer: &Layer, n: usize) -> bool {
+    match cu.mem_capacity_bytes {
+        Some(cap) => analytical::weight_bytes(cu, layer, n) <= cap,
+        None => true,
+    }
+}
+
+/// True if a per-CU `counts` split of `layer` places channels only on
+/// eligible CUs and within every CU's weight-memory capacity.
+pub fn feasible_counts(platform: Platform, layer: &Layer, counts: &[usize]) -> bool {
+    let eligible = eligible_cus(platform, layer);
+    platform
+        .cus()
+        .iter()
+        .zip(counts)
+        .enumerate()
+        .all(|(i, (cu, &n))| n == 0 || (eligible[i] && fits(cu, layer, n)))
+}
+
+// ---------------------------------------------------------------------------
+// the strategy trait
+// ---------------------------------------------------------------------------
+
+/// Bookkeeping every strategy reports alongside its mapping.
+#[derive(Debug, Clone, Default)]
+pub struct SearchStats {
+    /// strategy display name ("greedy", "descent", "restart", ...)
+    pub strategy: String,
+    /// descent rounds (full layer sweeps); 0 for one-shot strategies
+    pub rounds: usize,
+    /// evaluator `layer_cost` calls consumed by the search
+    pub evaluator_calls: u64,
+    /// calls answered from the evaluator's memo cache
+    pub cache_hits: u64,
+    /// random restarts taken (0 unless the strategy multi-seeds)
+    pub restarts: usize,
+}
+
+/// One strategy's result at one λ.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    /// raw (pre-reorg) channel→CU mapping
+    pub mapping: Mapping,
+    /// evaluator network cost of `mapping`, cycles
+    pub cost: u64,
+    /// accuracy-proxy penalty of `mapping` (see [`mapping_penalty`])
+    pub penalty: f64,
+    pub stats: SearchStats,
+}
+
+/// A mapping optimizer: given the workload and a cost evaluator, produce
+/// the best mapping it can at quality/cost trade-off strength λ.
+///
+/// `Sync` so one strategy instance can drive every λ of a parallel sweep.
+pub trait SearchStrategy: Sync {
+    /// Short name, used for CLI selection and result labeling.
+    fn name(&self) -> &str;
+
+    fn search(
+        &self,
+        platform: Platform,
+        layers: &[Layer],
+        lambda: f64,
+        eval: &mut dyn CostEvaluator,
+    ) -> SearchOutcome;
+}
+
+/// Assemble a [`SearchOutcome`]: price the final mapping through the
+/// evaluator and snapshot its counters.
+pub fn finish_outcome(
+    strategy: &str,
+    rounds: usize,
+    restarts: usize,
+    mapping: Mapping,
+    layers: &[Layer],
+    eval: &mut dyn CostEvaluator,
+) -> SearchOutcome {
+    let cost = eval.network_cost(&mapping);
+    let penalty = mapping_penalty(layers, &mapping);
+    let s = eval.stats();
+    SearchOutcome {
+        mapping,
+        cost,
+        penalty,
+        stats: SearchStats {
+            strategy: strategy.to_string(),
+            rounds,
+            evaluator_calls: s.calls,
+            cache_hits: s.cache_hits,
+            restarts,
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CLI selection
+// ---------------------------------------------------------------------------
+
+/// The registered strategies, as selected by `--search`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrategyKind {
+    Greedy,
+    Descent,
+    Restart,
+}
+
+impl FromStr for StrategyKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<StrategyKind> {
+        Ok(match s {
+            "greedy" => StrategyKind::Greedy,
+            "descent" => StrategyKind::Descent,
+            "restart" => StrategyKind::Restart,
+            other => bail!("unknown search strategy '{other}' (expected greedy|descent|restart)"),
+        })
+    }
+}
+
+impl StrategyKind {
+    pub fn build(self) -> Box<dyn SearchStrategy + Send + Sync> {
+        match self {
+            StrategyKind::Greedy => Box::new(Greedy),
+            StrategyKind::Descent => Box::new(CoordinateDescent::default()),
+            StrategyKind::Restart => Box::new(RandomRestart::default()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// parallel λ sweep
+// ---------------------------------------------------------------------------
+
+/// Run `strategy` at every λ concurrently (one scoped thread per λ, each
+/// with its own evaluator from `make_eval`) and return the outcomes in λ
+/// order. The λ grid is embarrassingly parallel — evaluator caches are
+/// per-λ, so no cross-thread state is shared beyond the immutable
+/// workload.
+pub fn sweep_lambdas<E, F>(
+    strategy: &dyn SearchStrategy,
+    platform: Platform,
+    layers: &[Layer],
+    lambdas: &[f64],
+    make_eval: F,
+) -> Vec<SearchOutcome>
+where
+    E: CostEvaluator,
+    F: Fn(f64) -> E + Sync,
+{
+    std::thread::scope(|s| {
+        let handles: Vec<_> = lambdas
+            .iter()
+            .map(|&lam| {
+                let make_eval = &make_eval;
+                s.spawn(move || {
+                    let mut eval = make_eval(lam);
+                    strategy.search(platform, layers, lam, &mut eval)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("search worker panicked"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::LayerType;
+
+    fn conv(name: &str, cin: usize, cout: usize, hw: usize) -> Layer {
+        Layer {
+            name: name.into(),
+            ltype: LayerType::Conv,
+            cin,
+            cout,
+            k: 3,
+            ox: hw,
+            oy: hw,
+            stride: 1,
+            searchable: true,
+        }
+    }
+
+    #[test]
+    fn strategy_kind_from_str() {
+        assert_eq!("greedy".parse::<StrategyKind>().unwrap(), StrategyKind::Greedy);
+        assert_eq!(
+            "descent".parse::<StrategyKind>().unwrap(),
+            StrategyKind::Descent
+        );
+        assert_eq!(
+            "restart".parse::<StrategyKind>().unwrap(),
+            StrategyKind::Restart
+        );
+        assert!("quantum".parse::<StrategyKind>().is_err());
+        assert_eq!(StrategyKind::Descent.build().name(), "descent");
+    }
+
+    #[test]
+    fn penalty_counts_aggressive_quant_only() {
+        let l = conv("a", 16, 32, 8);
+        let p = Platform::trident(); // cluster int8 / dwe int8 / aimc ternary
+        assert_eq!(layer_penalty(p, &l, &[32, 0, 0]), 0.0);
+        assert_eq!(layer_penalty(p, &l, &[0, 32, 0]), 0.0);
+        let on_aimc = layer_penalty(p, &l, &[0, 0, 32]);
+        assert_eq!(on_aimc, 32.0 * l.macs_std(1) as f64);
+        // halves split linearly
+        assert_eq!(layer_penalty(p, &l, &[16, 0, 16]), on_aimc / 2.0);
+    }
+
+    #[test]
+    fn eligibility_and_capacity_feasibility() {
+        let p = Platform::trident();
+        let l = conv("a", 16, 32, 8);
+        let e = eligible_cus(p, &l);
+        assert_eq!(e, vec![true, false, true]); // dwe has no "conv" op
+        assert!(feasible_counts(p, &l, &[16, 0, 16]));
+        assert!(!feasible_counts(p, &l, &[16, 16, 0]), "dwe is ineligible");
+        // a huge conv exceeds the aimc array capacity for full residency
+        let big = conv("big", 512, 512, 4);
+        if let Some(cap) = p.cus()[2].mem_capacity_bytes {
+            let max_fit = (cap / (512 * 9)) as usize;
+            assert!(fits(&p.cus()[2], &big, max_fit));
+            assert!(!fits(&p.cus()[2], &big, max_fit + 1));
+            assert!(!feasible_counts(p, &big, &[0, 0, 512]));
+        }
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial() {
+        let layers: Vec<Layer> = (0..4).map(|i| conv(&format!("l{i}"), 16, 64, 8)).collect();
+        let p = Platform::trident();
+        let lambdas = [0.0, 16.0, 4096.0];
+        let strat = Greedy;
+        let par = sweep_lambdas(&strat, p, &layers, &lambdas, |_| {
+            CachingEvaluator::analytical(p, &layers)
+        });
+        assert_eq!(par.len(), lambdas.len());
+        for (outcome, &lam) in par.iter().zip(&lambdas) {
+            let mut eval = CachingEvaluator::analytical(p, &layers);
+            let serial = strat.search(p, &layers, lam, &mut eval);
+            assert_eq!(outcome.mapping.layers, serial.mapping.layers, "λ={lam}");
+            assert_eq!(outcome.cost, serial.cost);
+            assert_eq!(outcome.penalty, serial.penalty);
+        }
+    }
+}

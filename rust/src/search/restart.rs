@@ -1,0 +1,203 @@
+//! Multi-seed coordinate descent: perturb the greedy start, descend from
+//! each perturbation, keep the per-λ best.
+//!
+//! Coordinate descent is exact only per layer; a block move it won't take
+//! (because every intermediate step looks worse) can still lead to a
+//! better basin. Restarting from randomized initializations — seeded
+//! through the deterministic `datasets::rng` stream, so runs are
+//! bit-reproducible — probes those basins. Restart 0 is always the plain
+//! greedy start, so the result is never worse than [`CoordinateDescent`]
+//! alone, and the shared evaluator cache makes later restarts cheap where
+//! their descents revisit earlier states.
+
+use crate::datasets::rng::Rng;
+use crate::mapping::assignment_from_counts;
+use crate::soc::{Layer, Mapping, Platform};
+
+use super::{
+    eligible_cus, finish_outcome, fits, greedy_mapping, mapping_penalty, CoordinateDescent,
+    CostEvaluator, SearchOutcome, SearchStrategy,
+};
+
+pub struct RandomRestart {
+    /// perturbed restarts on top of the greedy-start descent
+    pub restarts: usize,
+    /// RNG stream seed (restart index and λ bits key the sub-streams)
+    pub seed: u64,
+    /// fraction of each layer's channels the perturbation tries to move
+    pub perturb_frac: f64,
+    pub descent: CoordinateDescent,
+}
+
+impl Default for RandomRestart {
+    fn default() -> Self {
+        Self {
+            restarts: 3,
+            seed: 0xD1CE_5EED,
+            perturb_frac: 0.25,
+            descent: CoordinateDescent::default(),
+        }
+    }
+}
+
+impl RandomRestart {
+    /// Randomly re-home ~`perturb_frac` of each layer's channels among
+    /// the eligible, capacity-feasible CUs.
+    fn perturb(&self, layers: &[Layer], base: &Mapping, rng: &mut Rng) -> Mapping {
+        let platform = base.platform;
+        let cus = platform.cus();
+        let k = cus.len();
+        let mut out = Vec::with_capacity(base.layers.len());
+        for (layer, asg) in layers.iter().zip(&base.layers) {
+            let eligible = eligible_cus(platform, layer);
+            let mut counts = asg.counts(k);
+            let n_moves = (layer.cout as f64 * self.perturb_frac) as usize;
+            for _ in 0..n_moves {
+                // random source channel, located by cumulative counts
+                let mut c = rng.below(layer.cout.max(1));
+                let mut from = 0usize;
+                for (i, &n) in counts.iter().enumerate() {
+                    if c < n {
+                        from = i;
+                        break;
+                    }
+                    c -= n;
+                }
+                let to = rng.below(k);
+                if to == from
+                    || !eligible[to]
+                    || counts[from] == 0
+                    || !fits(&cus[to], layer, counts[to] + 1)
+                {
+                    continue;
+                }
+                counts[from] -= 1;
+                counts[to] += 1;
+            }
+            out.push(assignment_from_counts(&layer.name, &counts));
+        }
+        Mapping {
+            platform,
+            layers: out,
+        }
+    }
+}
+
+impl SearchStrategy for RandomRestart {
+    fn name(&self) -> &str {
+        "restart"
+    }
+
+    fn search(
+        &self,
+        platform: Platform,
+        layers: &[Layer],
+        lambda: f64,
+        eval: &mut dyn CostEvaluator,
+    ) -> SearchOutcome {
+        let base = greedy_mapping(platform, layers, lambda);
+        let mut best: Option<(f64, u64, Mapping)> = None;
+        let mut rounds_total = 0usize;
+        for r in 0..=self.restarts {
+            let init = if r == 0 {
+                base.clone()
+            } else {
+                let mut rng = Rng::from_stream(self.seed, r as u64, lambda.to_bits());
+                self.perturb(layers, &base, &mut rng)
+            };
+            let (mapping, rounds, _) = self.descent.descend(layers, lambda, eval, &init);
+            rounds_total += rounds;
+            let cost = eval.network_cost(&mapping);
+            let penalty = mapping_penalty(layers, &mapping);
+            let j = lambda * cost as f64 + penalty;
+            let better = match &best {
+                None => true,
+                Some((bj, bc, _)) => j < *bj || (j == *bj && cost < *bc),
+            };
+            if better {
+                best = Some((j, cost, mapping));
+            }
+        }
+        let (_, _, mapping) = best.expect("restart 0 always runs");
+        finish_outcome(self.name(), rounds_total, self.restarts, mapping, layers, eval)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::CachingEvaluator;
+    use crate::soc::LayerType;
+
+    fn conv(name: &str, cin: usize, cout: usize, hw: usize) -> Layer {
+        Layer {
+            name: name.into(),
+            ltype: LayerType::Conv,
+            cin,
+            cout,
+            k: 3,
+            ox: hw,
+            oy: hw,
+            stride: 1,
+            searchable: true,
+        }
+    }
+
+    fn workload() -> Vec<Layer> {
+        (0..4)
+            .map(|i| conv(&format!("l{i}"), 32, 64, 16))
+            .collect()
+    }
+
+    #[test]
+    fn restart_never_worse_than_plain_descent() {
+        let p = Platform::trident();
+        let layers = workload();
+        for lambda in [0.0, 16.0, 4096.0] {
+            let mut eval = CachingEvaluator::detailed(p, &layers);
+            let d = CoordinateDescent::default().search(p, &layers, lambda, &mut eval);
+            let mut eval = CachingEvaluator::detailed(p, &layers);
+            let r = RandomRestart::default().search(p, &layers, lambda, &mut eval);
+            let jd = lambda * d.cost as f64 + d.penalty;
+            let jr = lambda * r.cost as f64 + r.penalty;
+            assert!(jr <= jd, "λ={lambda}: restart J {jr} > descent J {jd}");
+            assert_eq!(r.stats.restarts, RandomRestart::default().restarts);
+        }
+    }
+
+    #[test]
+    fn restart_is_deterministic() {
+        let p = Platform::trident();
+        let layers = workload();
+        let run = || {
+            let mut eval = CachingEvaluator::detailed(p, &layers);
+            RandomRestart::default().search(p, &layers, 16.0, &mut eval)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.mapping.layers, b.mapping.layers);
+        assert_eq!(a.cost, b.cost);
+        assert_eq!(a.stats.evaluator_calls, b.stats.evaluator_calls);
+    }
+
+    #[test]
+    fn perturbation_preserves_totals_and_feasibility() {
+        let p = Platform::trident();
+        let layers = workload();
+        let rr = RandomRestart::default();
+        let base = greedy_mapping(p, &layers, 16.0);
+        let mut rng = Rng::from_stream(rr.seed, 1, 16.0f64.to_bits());
+        let perturbed = rr.perturb(&layers, &base, &mut rng);
+        for (l, (a, b)) in layers.iter().zip(base.layers.iter().zip(&perturbed.layers)) {
+            let ca = a.counts(3);
+            let cb = b.counts(3);
+            assert_eq!(ca.iter().sum::<usize>(), cb.iter().sum::<usize>());
+            assert!(crate::search::feasible_counts(p, l, &cb), "{}: {cb:?}", l.name);
+        }
+        // something actually moved somewhere
+        assert!(layers
+            .iter()
+            .zip(base.layers.iter().zip(&perturbed.layers))
+            .any(|(_, (a, b))| a.counts(3) != b.counts(3)));
+    }
+}

@@ -102,6 +102,49 @@ pub fn cu_cycles(cu: &CuSpec, layer: &Layer, n: usize) -> u64 {
     base + cu.setup_cycles + dma
 }
 
+/// Per-CU cycles plus the layer's latency for one layer under per-CU
+/// channel `counts` — the per-layer recost hook the search evaluator uses
+/// to price single-layer moves without re-running the whole network.
+/// [`execute`]'s total is exactly the sum of these latencies.
+pub fn layer_costs(
+    cus: &[CuSpec],
+    layer: &Layer,
+    counts: &[usize],
+    sequential: bool,
+) -> (Vec<u64>, u64) {
+    let cycles: Vec<u64> = cus
+        .iter()
+        .zip(counts)
+        .map(|(cu, &n)| cu_cycles(cu, layer, n))
+        .collect();
+    let latency = if sequential {
+        cycles.iter().sum()
+    } else {
+        cycles.iter().copied().max().unwrap_or(0)
+    };
+    (cycles, latency)
+}
+
+/// Latency-only view of [`layer_costs`].
+pub fn layer_latency(platform: Platform, layer: &Layer, counts: &[usize], sequential: bool) -> u64 {
+    layer_costs(platform.cus(), layer, counts, sequential).1
+}
+
+/// Weight bytes that `n` channels of `layer` park on `cu` — the footprint
+/// bounded by the descriptor's optional `mem_capacity_bytes`. Mirrors the
+/// operation dispatch of [`cu_cycles`]: a DW engine stores k×k cells per
+/// channel; every other CU holds the full filter for the op it runs.
+pub fn weight_bytes(cu: &CuSpec, layer: &Layer, n: usize) -> u64 {
+    let kdim = match cu.model {
+        CuModel::DwEngine { .. } => layer.k * layer.k,
+        _ => match layer.ltype {
+            LayerType::Dw => layer.k * layer.k,
+            _ => layer.cin * layer.k * layer.k,
+        },
+    };
+    (n * kdim) as u64
+}
+
 /// Platform power: per-CU active power vector (column order), idle power
 /// and frequency (MHz).
 pub fn power(platform: Platform) -> (Vec<f64>, f64, f64) {
@@ -138,17 +181,8 @@ pub fn execute(layers: &[Layer], mapping: &Mapping, seq_layers: &[String]) -> Ex
     for (layer, asg) in layers.iter().zip(&mapping.layers) {
         debug_assert_eq!(layer.name, asg.layer);
         let counts = asg.counts(k);
-        let cycles: Vec<u64> = cus
-            .iter()
-            .zip(&counts)
-            .map(|(cu, &n)| cu_cycles(cu, layer, n))
-            .collect();
         let sequential = seq_layers.iter().any(|s| s == &layer.name);
-        let latency = if sequential {
-            cycles.iter().sum()
-        } else {
-            cycles.iter().copied().max().unwrap_or(0)
-        };
+        let (cycles, latency) = layer_costs(cus, layer, &counts, sequential);
         for (b, &c) in busy.iter_mut().zip(&cycles) {
             *b += c;
         }
@@ -320,6 +354,53 @@ mod tests {
             r0.total_cycles,
             rs.total_cycles
         );
+    }
+
+    #[test]
+    fn layer_costs_agree_with_execute() {
+        // the per-layer hook is the exact decomposition of execute():
+        // summing layer_latency over the network reproduces total_cycles
+        let layers: Vec<Layer> = (0..3).map(|_| conv_layer(16, 48, 8)).collect();
+        let p = Platform::trident();
+        let m = Mapping {
+            platform: p,
+            layers: layers
+                .iter()
+                .map(|l| LayerAssignment {
+                    layer: l.name.clone(),
+                    cu_of: (0..l.cout).map(|c| (c % 3) as u8).collect(),
+                })
+                .collect(),
+        };
+        let r = execute(&layers, &m, &[]);
+        let total: u64 = layers
+            .iter()
+            .zip(&m.layers)
+            .map(|(l, a)| layer_latency(p, l, &a.counts(3), false))
+            .sum();
+        assert_eq!(total, r.total_cycles);
+        let (cycles, lat) = layer_costs(p.cus(), &layers[0], &m.layers[0].counts(3), false);
+        assert_eq!(cycles.len(), 3);
+        assert_eq!(lat, r.layers[0].latency);
+        // sequential latency is the sum instead of the max
+        let (cyc_seq, lat_seq) = layer_costs(p.cus(), &layers[0], &m.layers[0].counts(3), true);
+        assert_eq!(lat_seq, cyc_seq.iter().sum::<u64>());
+        assert!(lat_seq >= lat);
+    }
+
+    #[test]
+    fn weight_bytes_follow_cu_op_dispatch() {
+        let conv = conv_layer(16, 32, 8);
+        let dark = Platform::darkside().cus();
+        // the cluster runs the full conv filter, the DWE only k×k cells
+        assert_eq!(weight_bytes(&dark[0], &conv, 4), (4 * 16 * 9) as u64);
+        assert_eq!(weight_bytes(&dark[1], &conv, 4), (4 * 9) as u64);
+        // a depthwise layer is k×k everywhere
+        let mut dw = conv_layer(16, 16, 8);
+        dw.ltype = LayerType::Dw;
+        assert_eq!(weight_bytes(&dark[0], &dw, 4), (4 * 9) as u64);
+        assert_eq!(weight_bytes(&dark[1], &dw, 4), (4 * 9) as u64);
+        assert_eq!(weight_bytes(&dark[0], &conv, 0), 0);
     }
 
     #[test]

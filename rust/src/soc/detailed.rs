@@ -28,7 +28,7 @@
 use super::analytical::{cu_cycles, power};
 use super::hw::HwConstants;
 use super::model::{CuCost, ExecReport, Layer, LayerReport, Mapping};
-use super::spec::CuSpec;
+use super::spec::{CuSpec, Platform};
 
 /// Deterministic per-(layer, CU) jitter in [0, 1): FNV-1a hash mapped to
 /// the unit interval. Stands in for data-dependent timing (analog
@@ -114,6 +114,103 @@ fn resolve_overlap(starts: &[u64], durs: &[u64], p: f64) -> Vec<u64> {
     ends
 }
 
+/// Simulate one layer in isolation under per-CU channel `counts`: per-CU
+/// costs (cycles measured from the layer's start) and the layer latency
+/// including the fabric sync. The detailed pipeline restarts at every
+/// layer boundary (the fabric controller re-dispatches), so whole-network
+/// execution is exactly the sum of these latencies — the decomposition the
+/// incremental search evaluator relies on, pinned by `tests/search.rs`.
+pub fn sim_layer(
+    platform: Platform,
+    layer: &Layer,
+    counts: &[usize],
+    sequential: bool,
+) -> (Vec<CuCost>, u64) {
+    let d = &HwConstants::load().detailed_sim;
+    let cus = platform.cus();
+    let k = cus.len();
+    let jobs: Vec<Option<CuJob>> = cus
+        .iter()
+        .zip(counts)
+        .map(|(cu, &n)| build_job(layer, cu, n))
+        .collect();
+    let layer_start = d.fabric_sync_cycles;
+
+    // --- DMA: single channel, serialized in CU column order --------------
+    let mut dma_free = layer_start;
+    let mut ready = vec![layer_start; k];
+    for (i, job) in jobs.iter().enumerate() {
+        if let Some(j) = job {
+            dma_free += j.dma_cycles;
+            ready[i] = dma_free + j.weight_cycles;
+        }
+    }
+
+    // --- compute ----------------------------------------------------------
+    let mut per_cu = vec![CuCost::default(); k];
+    let active: Vec<usize> = (0..k).filter(|&i| jobs[i].is_some()).collect();
+    let layer_end = match active.len() {
+        0 => layer_start,
+        1 => {
+            let i = active[0];
+            let j = jobs[i].unwrap();
+            let end = ready[i] + j.compute_cycles;
+            per_cu[i] = CuCost {
+                cycles: end - layer_start,
+                channels: j.channels,
+            };
+            end
+        }
+        _ if sequential => {
+            // sequential stages chain from the highest column down:
+            // the producer (e.g. the DWE) runs first, its output feeds
+            // the next-lower active CU
+            let mut t = layer_start;
+            let mut first = true;
+            for &i in active.iter().rev() {
+                let j = jobs[i].unwrap();
+                let start = ready[i].max(t);
+                let end = start + j.compute_cycles;
+                per_cu[i] = CuCost {
+                    cycles: if first {
+                        end - layer_start
+                    } else {
+                        end - start + j.dma_cycles + j.weight_cycles
+                    },
+                    channels: j.channels,
+                };
+                first = false;
+                t = end;
+            }
+            t
+        }
+        _ => {
+            let starts: Vec<u64> = active.iter().map(|&i| ready[i]).collect();
+            let durs: Vec<u64> = active
+                .iter()
+                .map(|&i| jobs[i].unwrap().compute_cycles)
+                .collect();
+            let ends = resolve_overlap(&starts, &durs, d.bank_conflict_prob);
+            let mut last = layer_start;
+            for (a, &i) in active.iter().enumerate() {
+                per_cu[i] = CuCost {
+                    cycles: ends[a] - layer_start,
+                    channels: jobs[i].unwrap().channels,
+                };
+                last = last.max(ends[a]);
+            }
+            last
+        }
+    };
+    (per_cu, layer_end)
+}
+
+/// Latency-only view of [`sim_layer`] — the detailed-sim per-layer cost
+/// hook behind the search subsystem's `CostEvaluator`.
+pub fn layer_latency(platform: Platform, layer: &Layer, counts: &[usize], sequential: bool) -> u64 {
+    sim_layer(platform, layer, counts, sequential).1
+}
+
 /// Execute a mapping through the detailed simulator.
 pub fn execute(layers: &[Layer], mapping: &Mapping, seq_layers: &[String]) -> ExecReport {
     assert!(
@@ -122,10 +219,8 @@ pub fn execute(layers: &[Layer], mapping: &Mapping, seq_layers: &[String]) -> Ex
         mapping.platform.name(),
         mapping.platform.n_cus()
     );
-    let d = &HwConstants::load().detailed_sim;
     let platform = mapping.platform;
-    let cus = platform.cus();
-    let k = cus.len();
+    let k = platform.n_cus();
     let mut reports = Vec::with_capacity(layers.len());
     let mut clock = 0u64;
     let mut busy = vec![0u64; k];
@@ -133,91 +228,18 @@ pub fn execute(layers: &[Layer], mapping: &Mapping, seq_layers: &[String]) -> Ex
     for (layer, asg) in layers.iter().zip(&mapping.layers) {
         debug_assert_eq!(layer.name, asg.layer);
         let counts = asg.counts(k);
-        let jobs: Vec<Option<CuJob>> = cus
-            .iter()
-            .zip(&counts)
-            .map(|(cu, &n)| build_job(layer, cu, n))
-            .collect();
-        let layer_start = clock + d.fabric_sync_cycles;
         let sequential = seq_layers.iter().any(|s| s == &layer.name);
-
-        // --- DMA: single channel, serialized in CU column order ----------
-        let mut dma_free = layer_start;
-        let mut ready = vec![layer_start; k];
-        for (i, job) in jobs.iter().enumerate() {
-            if let Some(j) = job {
-                dma_free += j.dma_cycles;
-                ready[i] = dma_free + j.weight_cycles;
-            }
-        }
-
-        // --- compute ------------------------------------------------------
-        let mut per_cu = vec![CuCost::default(); k];
-        let active: Vec<usize> = (0..k).filter(|&i| jobs[i].is_some()).collect();
-        let layer_end = match active.len() {
-            0 => layer_start,
-            1 => {
-                let i = active[0];
-                let j = jobs[i].unwrap();
-                let end = ready[i] + j.compute_cycles;
-                per_cu[i] = CuCost {
-                    cycles: end - layer_start,
-                    channels: j.channels,
-                };
-                end
-            }
-            _ if sequential => {
-                // sequential stages chain from the highest column down:
-                // the producer (e.g. the DWE) runs first, its output feeds
-                // the next-lower active CU
-                let mut t = layer_start;
-                let mut first = true;
-                for &i in active.iter().rev() {
-                    let j = jobs[i].unwrap();
-                    let start = ready[i].max(t);
-                    let end = start + j.compute_cycles;
-                    per_cu[i] = CuCost {
-                        cycles: if first {
-                            end - layer_start
-                        } else {
-                            end - start + j.dma_cycles + j.weight_cycles
-                        },
-                        channels: j.channels,
-                    };
-                    first = false;
-                    t = end;
-                }
-                t
-            }
-            _ => {
-                let starts: Vec<u64> = active.iter().map(|&i| ready[i]).collect();
-                let durs: Vec<u64> = active
-                    .iter()
-                    .map(|&i| jobs[i].unwrap().compute_cycles)
-                    .collect();
-                let ends = resolve_overlap(&starts, &durs, d.bank_conflict_prob);
-                let mut last = layer_start;
-                for (a, &i) in active.iter().enumerate() {
-                    per_cu[i] = CuCost {
-                        cycles: ends[a] - layer_start,
-                        channels: jobs[i].unwrap().channels,
-                    };
-                    last = last.max(ends[a]);
-                }
-                last
-            }
-        };
-
+        let (per_cu, latency) = sim_layer(platform, layer, &counts, sequential);
         for (b, c) in busy.iter_mut().zip(&per_cu) {
             *b += c.cycles;
         }
         reports.push(LayerReport {
             layer: layer.name.clone(),
             per_cu,
-            latency: layer_end - clock,
+            latency,
             sequential,
         });
-        clock = layer_end;
+        clock += latency;
     }
 
     let (p_act, p_idle, freq) = power(platform);
@@ -304,6 +326,35 @@ mod tests {
                     de.total_cycles,
                     a.total_cycles
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn execute_is_sum_of_sim_layers() {
+        // the fabric controller re-syncs at every layer boundary, so the
+        // whole-network total decomposes exactly into per-layer latencies —
+        // the contract the incremental search evaluator depends on
+        let layers: Vec<Layer> = (0..4)
+            .map(|i| conv_layer(&format!("l{i}"), 16, 32, 16))
+            .collect();
+        for platform in [Platform::diana(), Platform::darkside(), Platform::trident()] {
+            let m = mapping_split(platform, &layers, 0.5);
+            let r = execute(&layers, &m, &[]);
+            let total: u64 = layers
+                .iter()
+                .zip(&m.layers)
+                .map(|(l, a)| layer_latency(platform, l, &a.counts(platform.n_cus()), false))
+                .sum();
+            assert_eq!(total, r.total_cycles, "{platform:?}");
+            // per-layer reports agree with the isolated hook too
+            for (l, (a, lr)) in layers.iter().zip(m.layers.iter().zip(&r.layers)) {
+                let (per_cu, lat) = sim_layer(platform, l, &a.counts(platform.n_cus()), false);
+                assert_eq!(lat, lr.latency);
+                for (x, y) in per_cu.iter().zip(&lr.per_cu) {
+                    assert_eq!(x.cycles, y.cycles);
+                    assert_eq!(x.channels, y.channels);
+                }
             }
         }
     }

@@ -188,6 +188,12 @@ pub struct CuSpec {
     pub stall_factor: f64,
     /// detailed-sim deterministic jitter amplitude
     pub variability: f64,
+    /// optional weight-memory capacity (bytes / cells): the largest weight
+    /// footprint one layer may park on this CU (AIMC array size, L1 weight
+    /// budget). `None` = unconstrained. Enforced by the search feasibility
+    /// check, not by the simulators — an infeasible mapping still simulates
+    /// so that reports can show *why* it was rejected.
+    pub mem_capacity_bytes: Option<u64>,
     pub model: CuModel,
 }
 
@@ -212,13 +218,17 @@ impl CuSpec {
             input_dma: v.bool_of("input_dma")?,
             stall_factor: v.f64_of("stall_factor")?,
             variability: v.f64_of("variability")?,
+            mem_capacity_bytes: match v.get("mem_capacity_bytes") {
+                Some(x) => Some(x.as_usize()? as u64),
+                None => None,
+            },
             model: CuModel::parse(v.req("model")?)
                 .with_context(|| format!("cu '{}' cost model", v.str_of("name").unwrap_or_default()))?,
         })
     }
 
     fn to_json(&self) -> Value {
-        Value::obj(vec![
+        let mut pairs = vec![
             ("name", Value::str(&self.name)),
             ("quant", Value::str(&self.quant)),
             (
@@ -230,8 +240,12 @@ impl CuSpec {
             ("input_dma", Value::Bool(self.input_dma)),
             ("stall_factor", Value::num(self.stall_factor)),
             ("variability", Value::num(self.variability)),
-            ("model", self.model.to_json()),
-        ])
+        ];
+        if let Some(cap) = self.mem_capacity_bytes {
+            pairs.push(("mem_capacity_bytes", Value::num(cap as f64)));
+        }
+        pairs.push(("model", self.model.to_json()));
+        Value::obj(pairs)
     }
 }
 
@@ -506,6 +520,27 @@ mod tests {
         assert_eq!(a, b);
         assert_ne!(a, Platform::darkside());
         assert_eq!(format!("{a:?}"), "diana");
+    }
+
+    #[test]
+    fn mem_capacity_is_optional_and_roundtrips() {
+        // the built-in descriptors ship capacities for their accelerator CUs
+        let spec = PlatformSpec::parse(TRIDENT_JSON).unwrap();
+        assert!(
+            spec.cus.iter().any(|c| c.mem_capacity_bytes.is_some()),
+            "trident should declare at least one weight-memory capacity"
+        );
+        let re = PlatformSpec::parse(&spec.to_json().to_string_pretty()).unwrap();
+        assert_eq!(spec, re);
+        // a CU without the key parses to None and round-trips key-less
+        let mut uncapped = spec.clone();
+        for cu in &mut uncapped.cus {
+            cu.mem_capacity_bytes = None;
+        }
+        let text = uncapped.to_json().to_string_pretty();
+        assert!(!text.contains("mem_capacity_bytes"));
+        let re = PlatformSpec::parse(&text).unwrap();
+        assert_eq!(uncapped, re);
     }
 
     #[test]

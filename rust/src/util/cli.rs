@@ -63,6 +63,23 @@ impl Args {
         }
     }
 
+    /// Parse an optional typed option via `FromStr` (e.g. a search
+    /// strategy or platform name), failing fast with the offending key in
+    /// the error.
+    pub fn opt_parse<T>(&self, key: &str) -> Result<Option<T>>
+    where
+        T: std::str::FromStr,
+        T::Err: Into<anyhow::Error>,
+    {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|e| {
+                let e: anyhow::Error = e.into();
+                e.context(format!("option --{key}"))
+            }),
+        }
+    }
+
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -96,6 +113,16 @@ mod tests {
         assert_eq!(a.opt_f64("fast", 1.0).unwrap(), 0.5);
         assert!(a.has_flag("verbose"));
         assert_eq!(a.opt_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn opt_parse_typed() {
+        let a = parse(s(&["--n", "42"]), &[]).unwrap();
+        assert_eq!(a.opt_parse::<usize>("n").unwrap(), Some(42));
+        assert_eq!(a.opt_parse::<usize>("missing").unwrap(), None);
+        let bad = parse(s(&["--n", "abc"]), &[]).unwrap();
+        let err = bad.opt_parse::<usize>("n").unwrap_err();
+        assert!(format!("{err:#}").contains("--n"), "{err:#}");
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! Integration tests for the unified search subsystem: the
+//! never-dominated-by-greedy property of coordinate descent on every
+//! registered platform, descent termination at a fixed point, evaluator
+//! cache consistency against both simulators, and capacity-feasible
+//! moves end to end.
+
+use odimo::experiments::{microbench_layers, SOCMAP_LAMBDAS};
+use odimo::pareto::Point;
+use odimo::search::{
+    feasible_counts, mapping_penalty, CachingEvaluator, CoordinateDescent, CostEvaluator,
+    Greedy, RandomRestart, SearchStrategy,
+};
+use odimo::soc::{analytical, detailed, Layer, Platform};
+
+fn builtin_platforms() -> [Platform; 3] {
+    [Platform::diana(), Platform::darkside(), Platform::trident()]
+}
+
+fn workload_for(p: Platform) -> Vec<Layer> {
+    let style = if p.name() == "diana" { "resnet" } else { "mobilenet" };
+    microbench_layers(style)
+}
+
+// ---------------------------------------------------------------------------
+// the property the ISSUE names: descent ≥ greedy, pointwise, everywhere
+// ---------------------------------------------------------------------------
+
+#[test]
+fn descent_never_dominated_by_greedy_on_any_platform() {
+    for p in builtin_platforms() {
+        let layers = workload_for(p);
+        for &lam in &SOCMAP_LAMBDAS {
+            let mut eval = CachingEvaluator::detailed(p, &layers);
+            let g = Greedy.search(p, &layers, lam, &mut eval);
+            let mut eval = CachingEvaluator::detailed(p, &layers);
+            let d = CoordinateDescent::default().search(p, &layers, lam, &mut eval);
+            let gp = Point {
+                cost: g.cost as f64,
+                acc: -g.penalty,
+            };
+            let dp = Point {
+                cost: d.cost as f64,
+                acc: -d.penalty,
+            };
+            assert!(
+                !gp.dominates(&dp),
+                "{} λ={lam}: greedy (cost {}, penalty {}) dominates descent (cost {}, penalty {})",
+                p.name(),
+                g.cost,
+                g.penalty,
+                d.cost,
+                d.penalty
+            );
+            // and the scalarized objective never regresses
+            let jg = lam * g.cost as f64 + g.penalty;
+            let jd = lam * d.cost as f64 + d.penalty;
+            assert!(jd <= jg, "{} λ={lam}: J {jd} > greedy J {jg}", p.name());
+        }
+    }
+}
+
+#[test]
+fn restart_never_dominated_by_greedy_on_trident() {
+    // restart 0 is the plain greedy-start descent, so the multi-seed
+    // strategy inherits the same guarantee
+    let p = Platform::trident();
+    let layers = workload_for(p);
+    for &lam in &[0.0, 16.0, 4096.0] {
+        let mut eval = CachingEvaluator::detailed(p, &layers);
+        let g = Greedy.search(p, &layers, lam, &mut eval);
+        let mut eval = CachingEvaluator::detailed(p, &layers);
+        let r = RandomRestart::default().search(p, &layers, lam, &mut eval);
+        let gp = Point {
+            cost: g.cost as f64,
+            acc: -g.penalty,
+        };
+        let rp = Point {
+            cost: r.cost as f64,
+            acc: -r.penalty,
+        };
+        assert!(!gp.dominates(&rp), "λ={lam}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// termination
+// ---------------------------------------------------------------------------
+
+#[test]
+fn descent_terminates_and_is_a_fixed_point() {
+    for p in builtin_platforms() {
+        let layers = workload_for(p);
+        let cd = CoordinateDescent::default();
+        let mut eval = CachingEvaluator::detailed(p, &layers);
+        let out = cd.search(p, &layers, 256.0, &mut eval);
+        assert!(
+            out.stats.rounds <= cd.max_rounds,
+            "{}: {} rounds",
+            p.name(),
+            out.stats.rounds
+        );
+        // the result must be a fixed point: a fresh descent from it makes
+        // no move and confirms in one sweep
+        let (again, rounds, moves) = cd.descend(&layers, 256.0, &mut eval, &out.mapping);
+        assert_eq!(moves, 0, "{}: descent result was not a fixed point", p.name());
+        assert_eq!(rounds, 1);
+        assert_eq!(again.layers, out.mapping.layers);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// evaluator cache consistency
+// ---------------------------------------------------------------------------
+
+#[test]
+fn evaluator_cache_is_consistent_with_both_simulators() {
+    let p = Platform::trident();
+    let layers = workload_for(p);
+    let mapping = odimo::search::greedy_mapping(p, &layers, 16.0);
+    let k = p.n_cus();
+
+    let mut det_eval = CachingEvaluator::detailed(p, &layers);
+    let mut ana_eval = CachingEvaluator::analytical(p, &layers);
+    // incremental sums equal whole-network execution, cold and warm cache
+    for _ in 0..2 {
+        assert_eq!(
+            det_eval.network_cost(&mapping),
+            detailed::execute(&layers, &mapping, &[]).total_cycles
+        );
+        assert_eq!(
+            ana_eval.network_cost(&mapping),
+            analytical::execute(&layers, &mapping, &[]).total_cycles
+        );
+    }
+    let s = det_eval.stats();
+    assert_eq!(s.calls, 2 * layers.len() as u64);
+    assert_eq!(s.cache_hits, layers.len() as u64, "second pass must be all hits");
+
+    // cached per-layer values match fresh single-layer simulation
+    for (li, (l, a)) in layers.iter().zip(&mapping.layers).enumerate() {
+        let counts = a.counts(k);
+        assert_eq!(
+            det_eval.layer_cost(li, &counts),
+            detailed::layer_latency(p, l, &counts, false)
+        );
+        assert_eq!(
+            ana_eval.layer_cost(li, &counts),
+            analytical::layer_latency(p, l, &counts, false)
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// capacity feasibility end to end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn search_strategies_respect_mem_capacities() {
+    // every built-in descriptor now declares weight-memory capacities;
+    // on the microbench workloads a feasible placement always exists, so
+    // no strategy may return counts that violate one
+    for p in builtin_platforms() {
+        let layers = workload_for(p);
+        for &lam in &[0.0, 256.0, 65536.0] {
+            for strategy in [
+                &Greedy as &dyn SearchStrategy,
+                &CoordinateDescent::default(),
+                &RandomRestart::default(),
+            ] {
+                let mut eval = CachingEvaluator::detailed(p, &layers);
+                let out = strategy.search(p, &layers, lam, &mut eval);
+                for (l, a) in layers.iter().zip(&out.mapping.layers) {
+                    let counts = a.counts(p.n_cus());
+                    assert!(
+                        feasible_counts(p, l, &counts),
+                        "{} {} λ={lam} {}: {counts:?} violates capacity/eligibility",
+                        p.name(),
+                        strategy.name(),
+                        l.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bookkeeping sanity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn outcomes_report_strategy_metadata() {
+    let p = Platform::trident();
+    let layers = workload_for(p);
+    let mut eval = CachingEvaluator::detailed(p, &layers);
+    let d = CoordinateDescent::default().search(p, &layers, 16.0, &mut eval);
+    assert_eq!(d.stats.strategy, "descent");
+    assert!(d.stats.rounds >= 1);
+    assert!(d.stats.evaluator_calls > 0);
+    assert_eq!(d.penalty, mapping_penalty(&layers, &d.mapping));
+
+    let mut eval = CachingEvaluator::detailed(p, &layers);
+    let r = RandomRestart::default().search(p, &layers, 16.0, &mut eval);
+    assert_eq!(r.stats.strategy, "restart");
+    assert_eq!(r.stats.restarts, RandomRestart::default().restarts);
+    assert!(r.stats.evaluator_calls >= d.stats.evaluator_calls);
+}
