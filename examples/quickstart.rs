@@ -1,37 +1,35 @@
 //! Quickstart: the end-to-end ODiMO flow on one variant.
 //!
-//! Loads the AOT artifacts for the DIANA ResNet-20/CIFAR-10 supernet,
-//! runs the full three-phase search at a single λ, discretizes the
-//! mapping, deploys it on both SoC simulators and prints the outcome
-//! next to the All-8bit baseline.
+//! Runs the full three-phase search at a single λ on the DIANA
+//! ResNet-20/CIFAR-10 supernet, discretizes the mapping, deploys it on
+//! both SoC simulators and prints the outcome next to the All-8bit
+//! baseline. Uses the native pure-Rust training engine by default, so it
+//! works straight from a checkout; if `make artifacts` has been run the
+//! XLA backend is picked up automatically.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --offline --example quickstart
-//! # quicker: QUICKSTART_FAST=0.3 cargo run --release --example quickstart
+//! cargo run --release --offline --example quickstart
+//! # quicker: QUICKSTART_FAST=0.1 cargo run --release --example quickstart
 //! ```
 
 use anyhow::Result;
 
 use odimo::config::ExperimentConfig;
 use odimo::coordinator::{odimo as phases, run_baseline, Baseline, Trainer};
-use odimo::runtime::cpu_client;
+use odimo::runtime::ModelBackend;
 
 fn main() -> Result<()> {
     let root = odimo::repo_root();
     let artifacts = root.join("artifacts");
-    if !artifacts.join("diana_resnet20_c10.manifest.json").exists() {
-        eprintln!("no artifacts found — run `make artifacts` first");
-        return Ok(());
-    }
     let fast: f64 = std::env::var("QUICKSTART_FAST")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(0.5);
+        .unwrap_or(0.25);
 
     println!("== ODiMO quickstart: diana_resnet20_c10, λ = 0.2 ==\n");
     let cfg = ExperimentConfig::for_variant("diana_resnet20_c10").scaled(fast);
-    let client = cpu_client()?;
-    let tr = Trainer::new(&client, &artifacts, cfg)?;
+    let tr = Trainer::create(&artifacts, cfg, None)?;
+    println!("(backend: {})", tr.backend.backend_name());
 
     // --- warmup ---------------------------------------------------------
     let mut state = tr.init_state()?;

@@ -1,0 +1,45 @@
+//! Bench: native-engine train-step throughput.
+//!
+//! Seeds the perf trajectory for the pure-Rust backend: one full
+//! forward + backward + SGD update per sample, on the miniature test
+//! supernet and on the paper-scale DIANA ResNet-20/CIFAR-10 supernet,
+//! plus the eval-mode forward for comparison. Built (not run) by the CI
+//! `cargo bench --no-run` gate.
+
+use odimo::runtime::{ModelBackend, NativeBackend, StepHparams};
+use odimo::util::bench::quick;
+
+fn main() {
+    println!("== native train-step bench ==");
+    let hp = StepHparams {
+        lam: 1e-7,
+        cost_sel: 0.0,
+        lr_w: 1e-2,
+        lr_th: 5e-2,
+    };
+
+    for variant in ["trident_tiny_tiny", "diana_resnet20_c10"] {
+        let be = NativeBackend::build(variant).expect("native variant");
+        let m = be.manifest();
+        let ds = odimo::datasets::SynthDataset::from_name(
+            &m.dataset.name,
+            m.dataset.hw,
+            m.dataset.classes,
+            1,
+        );
+        let (x, y) = ds.batch(odimo::datasets::Split::Train, 0, m.dataset.batch);
+        let mut state = be.init_state(0).expect("init");
+        // one warm step outside the timer (allocator warmup)
+        be.train_step(&mut state, &x, &y, hp).expect("step");
+        let r = quick(&format!("train_step {variant} (batch {})", m.dataset.batch), || {
+            std::hint::black_box(be.train_step(&mut state, &x, &y, hp).expect("step"));
+        });
+        println!(
+            "   -> {:.1} samples/s",
+            m.dataset.batch as f64 / (r.mean_ns / 1e9)
+        );
+        quick(&format!("eval_batch {variant}"), || {
+            std::hint::black_box(be.eval_batch(&state, &x, &y).expect("eval"));
+        });
+    }
+}

@@ -160,12 +160,15 @@ impl ExperimentConfig {
     }
 
     /// Scale the schedule by `f` (e.g. 0.25 for a quarter-length run).
+    /// Evaluation batches scale too (floored at 1) so `--fast` smoke runs
+    /// stay CPU-cheap end to end.
     pub fn scaled(mut self, f: f64) -> Self {
         let s = |e: usize| ((e as f64 * f).round() as usize).max(1);
         self.warmup_epochs = s(self.warmup_epochs);
         self.search_epochs = s(self.search_epochs);
         self.final_epochs = s(self.final_epochs);
         self.steps_per_epoch = s(self.steps_per_epoch);
+        self.eval_batches = s(self.eval_batches);
         self
     }
 }

@@ -1,5 +1,6 @@
-//! The L3 coordinator — ODiMO's training-time search orchestrated from
-//! Rust over the AOT-compiled JAX executables.
+//! The L3 coordinator — ODiMO's training-time search, orchestrated over
+//! any [`crate::runtime::ModelBackend`] (the native pure-Rust engine or
+//! the AOT-compiled XLA executables; the phase logic cannot tell which).
 //!
 //! * [`trainer`] — epoch/eval driver + θ plumbing for one model variant;
 //! * [`odimo`] — the Warmup → Search → Final-Training schedule and the

@@ -40,8 +40,8 @@ impl Trainer {
 
     fn hp_search(&self, lambda_rel: f64) -> StepHparams {
         let scale = match self.cfg.cost_target {
-            CostTarget::Latency => self.rt.manifest.cost_scale.latency_cycles,
-            CostTarget::Energy => self.rt.manifest.cost_scale.energy_uj,
+            CostTarget::Latency => self.manifest().cost_scale.latency_cycles,
+            CostTarget::Energy => self.manifest().cost_scale.energy_uj,
         };
         StepHparams {
             lam: (lambda_rel / scale) as f32,
@@ -162,12 +162,11 @@ pub fn sweep(tr: &Trainer) -> Result<Vec<RunRecord>> {
         tr.cfg.patience,
         "warmup",
     )?;
-    let snap = state.snapshot()?;
-    let specs: Vec<_> = tr.rt.train.spec.inputs[..tr.rt.state_len()].to_vec();
+    let snap = state.snapshot();
     let mut records = Vec::new();
     for &lam in &tr.cfg.lambdas {
         eprintln!("  [sweep] λ = {lam}");
-        state.restore(&snap, &specs)?;
+        state.restore(&snap)?;
         records.push(search_and_finalize(tr, &mut state, lam)?);
     }
     Ok(records)

@@ -1,18 +1,21 @@
-//! Trainer: drives one model variant's compiled executables through
-//! epochs, evaluation, and θ manipulation.
+//! Trainer: drives one model variant's training backend through epochs,
+//! evaluation, and θ manipulation.
 //!
-//! This is the layer the ODiMO phases are built on: it owns the PJRT
-//! runtime for a variant, generates synthetic batches, runs train/eval
-//! steps, and exposes θ read/write so the phase logic can freeze,
-//! discretize and restore assignments.
+//! This is the layer the ODiMO phases are built on: it owns a
+//! [`ModelBackend`] (native engine or XLA artifacts — it cannot tell the
+//! difference), generates synthetic batches, runs train/eval steps, and
+//! exposes θ read/write so the phase logic can freeze, discretize and
+//! restore assignments.
 
 use anyhow::{anyhow, Result};
-use xla::Literal;
 
 use crate::config::ExperimentConfig;
 use crate::datasets::{Split, SynthDataset};
 use crate::mapping::{discretize, one_hot_theta, SearchKind};
-use crate::runtime::{lit_f32, lit_i32, ModelRuntime, StepHparams, TrainState};
+use crate::runtime::{
+    default_backend, load_backend, BackendKind, Manifest, ModelBackend, StepHparams, TrainState,
+};
+use crate::search::{eligible_cus, fits};
 use crate::soc::{self, Layer, LayerAssignment, Mapping, Platform};
 
 /// Aggregated metrics of one epoch.
@@ -28,25 +31,21 @@ pub struct EpochMetrics {
 }
 
 pub struct Trainer {
-    pub rt: ModelRuntime,
+    pub backend: Box<dyn ModelBackend>,
     pub ds: SynthDataset,
     pub cfg: ExperimentConfig,
     pub platform: Platform,
     pub kind: SearchKind,
     pub layers: Vec<Layer>,
     pub seq_layers: Vec<String>,
-    eval_val: Vec<(Literal, Literal)>,
-    eval_test: Vec<(Literal, Literal)>,
+    eval_val: Vec<(Vec<f32>, Vec<i32>)>,
+    eval_test: Vec<(Vec<f32>, Vec<i32>)>,
 }
 
 impl Trainer {
-    pub fn new(
-        client: &xla::PjRtClient,
-        artifacts_dir: &std::path::Path,
-        cfg: ExperimentConfig,
-    ) -> Result<Self> {
-        let rt = ModelRuntime::load(client, artifacts_dir, &cfg.variant)?;
-        let m = &rt.manifest;
+    /// Build a trainer over an already-constructed backend.
+    pub fn new(backend: Box<dyn ModelBackend>, cfg: ExperimentConfig) -> Result<Self> {
+        let m = backend.manifest();
         let ds = SynthDataset::from_name(
             &m.dataset.name,
             m.dataset.hw,
@@ -58,21 +57,13 @@ impl Trainer {
         let layers = soc::layers_from_manifest(m)?;
         let seq_layers = soc::sequential_layers(m);
         let batch = m.dataset.batch;
-        let mk_batches = |split: Split, n: usize| -> Result<Vec<(Literal, Literal)>> {
-            (0..n)
-                .map(|i| {
-                    let (x, y) = ds.batch(split, i as u64, batch);
-                    Ok((
-                        lit_f32(&[batch, ds.hw, ds.hw, 3], &x)?,
-                        lit_i32(&[batch], &y)?,
-                    ))
-                })
-                .collect()
+        let mk_batches = |split: Split, n: usize| -> Vec<(Vec<f32>, Vec<i32>)> {
+            (0..n).map(|i| ds.batch(split, i as u64, batch)).collect()
         };
-        let eval_val = mk_batches(Split::Val, cfg.eval_batches)?;
-        let eval_test = mk_batches(Split::Test, cfg.eval_batches)?;
+        let eval_val = mk_batches(Split::Val, cfg.eval_batches);
+        let eval_test = mk_batches(Split::Test, cfg.eval_batches);
         Ok(Self {
-            rt,
+            backend,
             ds,
             cfg,
             platform,
@@ -84,8 +75,25 @@ impl Trainer {
         })
     }
 
+    /// Build a trainer for `cfg.variant`, selecting the backend:
+    /// `kind = None` picks [`default_backend`] (native unless the
+    /// variant's AOT artifacts exist).
+    pub fn create(
+        artifacts: &std::path::Path,
+        cfg: ExperimentConfig,
+        kind: Option<BackendKind>,
+    ) -> Result<Self> {
+        let kind = kind.unwrap_or_else(|| default_backend(artifacts, &cfg.variant));
+        let backend = load_backend(kind, artifacts, &cfg.variant)?;
+        Self::new(backend, cfg)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.backend.manifest()
+    }
+
     pub fn init_state(&self) -> Result<TrainState> {
-        self.rt.init_state(self.cfg.seed)
+        self.backend.init_state(self.cfg.seed)
     }
 
     /// Run one epoch of `steps_per_epoch` train steps.
@@ -95,15 +103,13 @@ impl Trainer {
         hp: StepHparams,
         epoch: usize,
     ) -> Result<EpochMetrics> {
-        let batch = self.rt.batch();
+        let batch = self.backend.batch();
         let mut agg = EpochMetrics::default();
         let t0 = std::time::Instant::now();
         for i in 0..self.cfg.steps_per_epoch {
             let idx = (epoch * self.cfg.steps_per_epoch + i) as u64;
             let (x, y) = self.ds.batch(Split::Train, idx, batch);
-            let xl = lit_f32(&[batch, self.ds.hw, self.ds.hw, 3], &x)?;
-            let yl = lit_i32(&[batch], &y)?;
-            let m = self.rt.train_step(state, &xl, &yl, hp)?;
+            let m = self.backend.train_step(state, &x, &y, hp)?;
             agg.loss += m[0] as f64;
             agg.ce += m[1] as f64;
             agg.acc += m[2] as f64;
@@ -127,14 +133,20 @@ impl Trainer {
             Split::Test => &self.eval_test,
             Split::Train => return Err(anyhow!("evaluate on val/test only")),
         };
+        if batches.is_empty() {
+            return Err(anyhow!(
+                "evaluate: no held-out batches — cfg.eval_batches is 0; \
+                 set eval_batches ≥ 1 (accuracy would be 0/0)"
+            ));
+        }
         let mut correct = 0.0f64;
         let mut loss = 0.0f64;
         let mut n = 0usize;
         for (x, y) in batches {
-            let m = self.rt.eval_batch(state, x, y)?;
+            let m = self.backend.eval_batch(state, x, y)?;
             correct += m[0] as f64;
             loss += m[1] as f64;
-            n += self.rt.batch();
+            n += self.backend.batch();
         }
         Ok((correct / n as f64, loss / n as f64))
     }
@@ -164,13 +176,28 @@ impl Trainer {
 
     /// Discretize every searchable layer's θ; non-searchable layers are
     /// assigned to CU 0 (cluster / digital — where they always execute).
+    ///
+    /// Channel-kind assignments are additionally passed through a
+    /// capacity-repair step so the emitted mapping always satisfies the
+    /// search subsystem's feasibility check (`mem_capacity_bytes` +
+    /// op-eligibility): a trained θ knows cost gradients, not hard
+    /// capacity walls.
     pub fn discretize_all(&self, state: &TrainState) -> Result<Mapping> {
         let n_cus = self.platform.n_cus();
         let mut layers = Vec::new();
-        for spec in &self.rt.manifest.layers {
+        for spec in &self.manifest().layers {
             if spec.searchable {
                 let theta = self.theta_of(state, &spec.name)?;
-                layers.push(discretize(self.kind, &theta, spec.cout, n_cus, &spec.name));
+                let mut asg = discretize(self.kind, &theta, spec.cout, n_cus, &spec.name);
+                if self.kind == SearchKind::Channel {
+                    let layer = self
+                        .layers
+                        .iter()
+                        .find(|l| l.name == spec.name)
+                        .expect("manifest layer table is consistent");
+                    repair_capacity(self.platform, layer, &mut asg);
+                }
+                layers.push(asg);
             } else {
                 layers.push(LayerAssignment::all_on(&spec.name, spec.cout, 0));
             }
@@ -184,7 +211,7 @@ impl Trainer {
     /// Freeze the mapping: write one-hot θ for every searchable layer.
     pub fn freeze_mapping(&self, state: &mut TrainState, mapping: &Mapping) -> Result<()> {
         let n_cus = self.platform.n_cus();
-        for (spec, asg) in self.rt.manifest.layers.iter().zip(&mapping.layers) {
+        for (spec, asg) in self.manifest().layers.iter().zip(&mapping.layers) {
             if spec.searchable {
                 let oh = one_hot_theta(self.kind, asg, n_cus);
                 self.set_theta(state, &spec.name, &oh)?;
@@ -211,14 +238,74 @@ impl Trainer {
 
     /// Total state size in bytes (for the Table II memory column).
     pub fn state_bytes(&self) -> usize {
-        self.rt
-            .train
-            .spec
-            .inputs
+        self.backend
+            .state_specs()
             .iter()
-            .take(self.rt.state_len())
             .map(|s| s.elem_count() * 4)
             .sum()
+    }
+}
+
+/// Move channels off CUs that cannot legally hold them — either the CU's
+/// descriptor lacks the layer's op, or the channel count overflows its
+/// `mem_capacity_bytes` weight budget. Overflow lands on the eligible CU
+/// with the most remaining capacity headroom (ties toward column 0). If
+/// no CU can take a channel, it stays put — the same capacity-waiver rule
+/// the training-free search strategies use.
+pub fn repair_capacity(platform: Platform, layer: &Layer, asg: &mut LayerAssignment) {
+    let cus = platform.cus();
+    let k = cus.len();
+    let eligible = eligible_cus(platform, layer);
+    // per-CU channel budget (usize::MAX = unconstrained)
+    let cap: Vec<usize> = cus
+        .iter()
+        .enumerate()
+        .map(|(i, cu)| {
+            if !eligible[i] {
+                return 0;
+            }
+            match cu.mem_capacity_bytes {
+                None => usize::MAX,
+                Some(_) => {
+                    // largest n with fits(); weight_bytes is linear in n
+                    let per = crate::soc::analytical::weight_bytes(cu, layer, 1).max(1);
+                    let cap = cu.mem_capacity_bytes.unwrap();
+                    (cap / per) as usize
+                }
+            }
+        })
+        .collect();
+    let mut counts = asg.counts(k);
+    for c in 0..asg.cu_of.len() {
+        let cur = asg.cu_of[c] as usize;
+        let legal = cur < k && eligible[cur] && counts[cur] <= cap[cur] && {
+            // double-check against the exact predicate (guards rounding)
+            fits(&cus[cur], layer, counts[cur])
+        };
+        if legal {
+            continue;
+        }
+        // pick the eligible CU with the most headroom that still fits
+        let mut best: Option<usize> = None;
+        for j in 0..k {
+            if j == cur || !eligible[j] {
+                continue;
+            }
+            if counts[j] + 1 > cap[j] || !fits(&cus[j], layer, counts[j] + 1) {
+                continue;
+            }
+            let head = cap[j].saturating_sub(counts[j]);
+            if best.map_or(true, |b| head > cap[b].saturating_sub(counts[b])) {
+                best = Some(j);
+            }
+        }
+        if let Some(j) = best {
+            if cur < k {
+                counts[cur] -= 1;
+            }
+            counts[j] += 1;
+            asg.cu_of[c] = j as u8;
+        }
     }
 }
 

@@ -16,7 +16,7 @@ use crate::coordinator::{run_baseline, sweep, Baseline, RunRecord, Trainer};
 use crate::mapping::{discretize, one_hot_theta, reorganize, SearchKind};
 use crate::pareto::{pareto_front, Point};
 use crate::report::{ascii_table, cyc, f as ff, write_csv};
-use crate::runtime::StepHparams;
+use crate::runtime::{BackendKind, StepHparams};
 use crate::search::{
     sweep_lambdas, CachingEvaluator, SearchOutcome, SearchStrategy, StrategyKind,
 };
@@ -26,8 +26,11 @@ use crate::soc::{
 use crate::stats;
 
 /// Run an experiment by id. `search` selects the training-free mapping
-/// strategy for `socmap` (`greedy|descent|restart`); other experiments
-/// ignore it.
+/// strategy for `socmap` (`greedy|descent|restart`); `backend` pins the
+/// training engine for the trained experiments (`None` = per-variant
+/// default: native unless artifacts exist). `socmap`/`table3` never
+/// train and ignore both.
+#[allow(clippy::too_many_arguments)]
 pub fn run(
     id: &str,
     artifacts: &Path,
@@ -35,18 +38,19 @@ pub fn run(
     task: Option<&str>,
     soc: Option<&str>,
     search: Option<&str>,
+    backend: Option<BackendKind>,
     fast: f64,
 ) -> Result<()> {
     match id {
-        "fig5" => fig5(artifacts, results, task, soc, fast),
-        "fig6" => fig6(artifacts, results, soc, fast),
-        "fig7" => fig7(artifacts, results, soc, fast),
-        "fig8" => fig8(artifacts, results, fast),
-        "fig9" => fig9(artifacts, results, fast),
-        "fig10" => fig10(artifacts, results, fast),
-        "table2" => table2(artifacts, results, task, fast),
+        "fig5" => fig5(artifacts, results, task, soc, backend, fast),
+        "fig6" => fig6(artifacts, results, soc, backend, fast),
+        "fig7" => fig7(artifacts, results, soc, backend, fast),
+        "fig8" => fig8(artifacts, results, backend, fast),
+        "fig9" => fig9(artifacts, results, backend, fast),
+        "fig10" => fig10(artifacts, results, backend, fast),
+        "table2" => table2(artifacts, results, task, backend, fast),
         "table3" => table3(results),
-        "table4" => table4(artifacts, results, task, fast),
+        "table4" => table4(artifacts, results, task, backend, fast),
         "socmap" => socmap(results, soc, task, search),
         "all" => {
             for e in [
@@ -54,7 +58,7 @@ pub fn run(
                 "table4",
             ] {
                 eprintln!("=== exp {e} ===");
-                run(e, artifacts, results, task, soc, search, fast)?;
+                run(e, artifacts, results, task, soc, search, backend, fast)?;
             }
             Ok(())
         }
@@ -78,9 +82,12 @@ fn cfg_for(variant: &str, fast: f64, target: CostTarget) -> ExperimentConfig {
     cfg.scaled(fast)
 }
 
-fn trainer(artifacts: &Path, cfg: ExperimentConfig) -> Result<Trainer> {
-    let client = crate::runtime::cpu_client()?;
-    Trainer::new(&client, artifacts, cfg)
+fn trainer(
+    artifacts: &Path,
+    cfg: ExperimentConfig,
+    backend: Option<BackendKind>,
+) -> Result<Trainer> {
+    Trainer::create(artifacts, cfg, backend)
 }
 
 /// Sweep a variant + its baselines.
@@ -88,10 +95,11 @@ fn panel(
     artifacts: &Path,
     variant: &str,
     target: CostTarget,
+    backend: Option<BackendKind>,
     fast: f64,
     with_baselines: bool,
 ) -> Result<Vec<RunRecord>> {
-    let tr = trainer(artifacts, cfg_for(variant, fast, target))?;
+    let tr = trainer(artifacts, cfg_for(variant, fast, target), backend)?;
     let mut recs = sweep(&tr)?;
     if with_baselines {
         for b in Baseline::for_platform(tr.platform) {
@@ -202,6 +210,29 @@ pub fn save_records(dir: &Path, name: &str, recs: &[RunRecord]) -> Result<()> {
     Ok(())
 }
 
+/// True when `variant` is runnable with the resolved backend. The
+/// `_prune`/`_layerwise` baseline search spaces exist only as XLA
+/// artifacts; under the native default (no artifacts) the panels that
+/// need them skip with a notice instead of aborting the whole run.
+fn xla_only_variant_available(
+    artifacts: &Path,
+    variant: &str,
+    backend: Option<BackendKind>,
+) -> bool {
+    let resolved =
+        backend.unwrap_or_else(|| crate::runtime::default_backend(artifacts, variant));
+    if resolved == BackendKind::Xla
+        && artifacts.join(format!("{variant}.manifest.json")).exists()
+    {
+        return true;
+    }
+    eprintln!(
+        "    (skipping {variant}: this baseline search space needs XLA artifacts — \
+         run `make artifacts` and use --backend xla)"
+    );
+    false
+}
+
 fn variant_for(soc: &str, task: &str) -> &'static str {
     match (soc, task) {
         ("diana", "c10") => "diana_resnet20_c10",
@@ -230,13 +261,14 @@ fn fig5(
     results: &Path,
     task: Option<&str>,
     soc: Option<&str>,
+    backend: Option<BackendKind>,
     fast: f64,
 ) -> Result<()> {
     for s in filtered(&["diana", "darkside"], soc) {
         for t in filtered(&["c10", "c100", "imagenet"], task) {
             let variant = variant_for(s, t);
             eprintln!("--- fig5 panel: {s}/{t} ({variant})");
-            let recs = panel(artifacts, variant, CostTarget::Latency, fast, true)?;
+            let recs = panel(artifacts, variant, CostTarget::Latency, backend, fast, true)?;
             print_sweep(&recs);
             save_records(&results.join("fig5"), variant, &recs)?;
         }
@@ -248,11 +280,17 @@ fn fig5(
 // Fig. 6 — accuracy vs energy, CIFAR-10 × 2 SoCs
 // ---------------------------------------------------------------------------
 
-fn fig6(artifacts: &Path, results: &Path, soc: Option<&str>, fast: f64) -> Result<()> {
+fn fig6(
+    artifacts: &Path,
+    results: &Path,
+    soc: Option<&str>,
+    backend: Option<BackendKind>,
+    fast: f64,
+) -> Result<()> {
     for s in filtered(&["diana", "darkside"], soc) {
         let variant = variant_for(s, "c10");
         eprintln!("--- fig6 panel: {s} ({variant}, energy target)");
-        let recs = panel(artifacts, variant, CostTarget::Energy, fast, true)?;
+        let recs = panel(artifacts, variant, CostTarget::Energy, backend, fast, true)?;
         print_sweep(&recs);
         save_records(&results.join("fig6"), variant, &recs)?;
     }
@@ -263,38 +301,62 @@ fn fig6(artifacts: &Path, results: &Path, soc: Option<&str>, fast: f64) -> Resul
 // Fig. 7 — vs structured pruning (DIANA) / path-based DNAS (Darkside)
 // ---------------------------------------------------------------------------
 
-fn fig7(artifacts: &Path, results: &Path, soc: Option<&str>, fast: f64) -> Result<()> {
+fn fig7(
+    artifacts: &Path,
+    results: &Path,
+    soc: Option<&str>,
+    backend: Option<BackendKind>,
+    fast: f64,
+) -> Result<()> {
     if filtered(&["diana"], soc).len() == 1 {
         eprintln!("--- fig7 top: ODiMO vs structured pruning (DIANA, c10)");
-        let mut recs = panel(artifacts, "diana_resnet20_c10", CostTarget::Latency, fast, false)?;
+        let mut recs = panel(
+            artifacts,
+            "diana_resnet20_c10",
+            CostTarget::Latency,
+            backend,
+            fast,
+            false,
+        )?;
         // pruning's cost floors at zero channels, so the shared λ grid
         // over-prunes; sweep it at gentler strengths (see fig8 note)
-        let mut cfgp = cfg_for("diana_resnet20_c10_prune", fast, CostTarget::Latency);
-        cfgp.lambdas = vec![0.005, 0.02, 0.1];
-        let trp = trainer(artifacts, cfgp)?;
-        let prune_recs = sweep(&trp)?;
-        let mut prune = prune_recs;
-        for r in &mut prune {
-            r.label = "pruning".into();
+        if xla_only_variant_available(artifacts, "diana_resnet20_c10_prune", backend) {
+            let mut cfgp = cfg_for("diana_resnet20_c10_prune", fast, CostTarget::Latency);
+            cfgp.lambdas = vec![0.005, 0.02, 0.1];
+            let trp = trainer(artifacts, cfgp, backend)?;
+            let mut prune = sweep(&trp)?;
+            for r in &mut prune {
+                r.label = "pruning".into();
+            }
+            recs.extend(prune);
         }
-        recs.extend(prune);
         print_sweep(&recs);
         save_records(&results.join("fig7"), "diana_vs_pruning", &recs)?;
     }
     if filtered(&["darkside"], soc).len() == 1 {
         eprintln!("--- fig7 bottom: ODiMO vs layer-wise DNAS (Darkside, c10)");
-        let mut recs = panel(artifacts, "darkside_mbv1_c10", CostTarget::Latency, fast, false)?;
-        let mut pb = panel(
+        let mut recs = panel(
             artifacts,
-            "darkside_mbv1_c10_layerwise",
+            "darkside_mbv1_c10",
             CostTarget::Latency,
+            backend,
             fast,
             false,
         )?;
-        for r in &mut pb {
-            r.label = "layerwise-dnas".into();
+        if xla_only_variant_available(artifacts, "darkside_mbv1_c10_layerwise", backend) {
+            let mut pb = panel(
+                artifacts,
+                "darkside_mbv1_c10_layerwise",
+                CostTarget::Latency,
+                backend,
+                fast,
+                false,
+            )?;
+            for r in &mut pb {
+                r.label = "layerwise-dnas".into();
+            }
+            recs.extend(pb);
         }
-        recs.extend(pb);
         print_sweep(&recs);
         save_records(&results.join("fig7"), "darkside_vs_layerwise", &recs)?;
     }
@@ -333,23 +395,25 @@ fn breakdown_table(recs: &[RunRecord]) -> Vec<Vec<String>> {
 
 const BREAKDOWN_HEADERS: [&str; 5] = ["mapping", "layer", "ch/cu", "offload %", "cyc/cu"];
 
-fn fig8(artifacts: &Path, results: &Path, fast: f64) -> Result<()> {
+fn fig8(artifacts: &Path, results: &Path, backend: Option<BackendKind>, fast: f64) -> Result<()> {
     eprintln!("--- fig8: DIANA layer breakdown (Ours vs pruning)");
     let mut cfg = cfg_for("diana_resnet20_c10", fast, CostTarget::Latency);
     cfg.lambdas = vec![0.2];
-    let tr = trainer(artifacts, cfg)?;
+    let tr = trainer(artifacts, cfg, backend)?;
     let mut recs = sweep(&tr)?;
     recs[0].label = "ours".into();
     // pruning collapses whole layers under strong λ (its cost keeps
     // falling all the way to zero channels, unlike a mapping whose cost
     // floors at the cheap CU) — compare at gentler strengths
-    let mut cfgp = cfg_for("diana_resnet20_c10_prune", fast, CostTarget::Latency);
-    cfgp.lambdas = vec![0.02, 0.1];
-    let trp = trainer(artifacts, cfgp)?;
-    let mut prune = sweep(&trp)?;
-    prune[0].label = "pr-l".into();
-    prune[1].label = "pr-m".into();
-    recs.extend(prune);
+    if xla_only_variant_available(artifacts, "diana_resnet20_c10_prune", backend) {
+        let mut cfgp = cfg_for("diana_resnet20_c10_prune", fast, CostTarget::Latency);
+        cfgp.lambdas = vec![0.02, 0.1];
+        let trp = trainer(artifacts, cfgp, backend)?;
+        let mut prune = sweep(&trp)?;
+        prune[0].label = "pr-l".into();
+        prune[1].label = "pr-m".into();
+        recs.extend(prune);
+    }
     let rows = breakdown_table(&recs);
     println!("{}", ascii_table(&BREAKDOWN_HEADERS, &rows));
     write_csv(
@@ -361,21 +425,23 @@ fn fig8(artifacts: &Path, results: &Path, fast: f64) -> Result<()> {
     Ok(())
 }
 
-fn fig9(artifacts: &Path, results: &Path, fast: f64) -> Result<()> {
+fn fig9(artifacts: &Path, results: &Path, backend: Option<BackendKind>, fast: f64) -> Result<()> {
     eprintln!("--- fig9: Darkside layer breakdown (Ours vs layer-wise)");
     let mut cfg = cfg_for("darkside_mbv1_c10", fast, CostTarget::Latency);
     cfg.lambdas = vec![0.05, 0.5];
-    let tr = trainer(artifacts, cfg)?;
+    let tr = trainer(artifacts, cfg, backend)?;
     let mut recs = sweep(&tr)?;
     recs[0].label = "ours-l".into();
     recs[1].label = "ours-m".into();
-    let mut cfgp = cfg_for("darkside_mbv1_c10_layerwise", fast, CostTarget::Latency);
-    cfgp.lambdas = vec![0.05, 0.5];
-    let trp = trainer(artifacts, cfgp)?;
-    let mut pb = sweep(&trp)?;
-    pb[0].label = "pb-l".into();
-    pb[1].label = "pb-m".into();
-    recs.extend(pb);
+    if xla_only_variant_available(artifacts, "darkside_mbv1_c10_layerwise", backend) {
+        let mut cfgp = cfg_for("darkside_mbv1_c10_layerwise", fast, CostTarget::Latency);
+        cfgp.lambdas = vec![0.05, 0.5];
+        let trp = trainer(artifacts, cfgp, backend)?;
+        let mut pb = sweep(&trp)?;
+        pb[0].label = "pb-l".into();
+        pb[1].label = "pb-m".into();
+        recs.extend(pb);
+    }
     let rows = breakdown_table(&recs);
     println!("{}", ascii_table(&BREAKDOWN_HEADERS, &rows));
     write_csv(
@@ -391,7 +457,7 @@ fn fig9(artifacts: &Path, results: &Path, fast: f64) -> Result<()> {
 // Fig. 10 — width-multiplier sweep (Darkside, c10)
 // ---------------------------------------------------------------------------
 
-fn fig10(artifacts: &Path, results: &Path, fast: f64) -> Result<()> {
+fn fig10(artifacts: &Path, results: &Path, backend: Option<BackendKind>, fast: f64) -> Result<()> {
     let mut all = Vec::new();
     for (variant, wm) in [
         ("darkside_mbv1_c10", "1.0x"),
@@ -399,7 +465,7 @@ fn fig10(artifacts: &Path, results: &Path, fast: f64) -> Result<()> {
         ("darkside_mbv1_c10_w025", "0.25x"),
     ] {
         eprintln!("--- fig10: width {wm} ({variant})");
-        let mut recs = panel(artifacts, variant, CostTarget::Latency, fast, true)?;
+        let mut recs = panel(artifacts, variant, CostTarget::Latency, backend, fast, true)?;
         for r in &mut recs {
             r.label = format!("{} ({wm})", r.label);
         }
@@ -414,21 +480,36 @@ fn fig10(artifacts: &Path, results: &Path, fast: f64) -> Result<()> {
 // Table II — search overhead (epoch time ×, memory ×)
 // ---------------------------------------------------------------------------
 
-fn table2(artifacts: &Path, results: &Path, task: Option<&str>, fast: f64) -> Result<()> {
+fn table2(
+    artifacts: &Path,
+    results: &Path,
+    task: Option<&str>,
+    backend: Option<BackendKind>,
+    fast: f64,
+) -> Result<()> {
     eprintln!("--- table2: ODiMO search overhead vs most-demanding baseline");
     let mut rows = Vec::new();
     for t in filtered(&["c10", "c100", "imagenet"], task) {
         for s in ["diana", "darkside"] {
             let search_v = variant_for(s, t);
             let fixed_v = format!("{search_v}_fixed");
-            if !artifacts.join(format!("{fixed_v}.manifest.json")).exists() {
+            // one engine per row — comparing a native search net against
+            // an XLA fixed net (or vice versa) would measure the backends,
+            // not the search overhead. The XLA engine additionally needs
+            // compiled artifacts for the fixed net; the native engine
+            // builds it from the variant name alone.
+            let row_backend =
+                backend.unwrap_or_else(|| crate::runtime::default_backend(artifacts, search_v));
+            if row_backend == BackendKind::Xla
+                && !artifacts.join(format!("{fixed_v}.manifest.json")).exists()
+            {
                 eprintln!("    (skipping {s}/{t}: no {fixed_v} artifacts)");
                 continue;
             }
             let measure = |variant: &str, lam: f32, lr_th: f32| -> Result<(f64, usize)> {
                 let mut cfg = cfg_for(variant, fast, CostTarget::Latency);
                 cfg.steps_per_epoch = (cfg.steps_per_epoch / 2).max(5);
-                let tr = trainer(artifacts, cfg)?;
+                let tr = trainer(artifacts, cfg, Some(row_backend))?;
                 let mut st = tr.init_state()?;
                 let hp = StepHparams {
                     lam,
@@ -624,14 +705,20 @@ fn table3(results: &Path) -> Result<()> {
 // Table IV — deployment of selected solutions on DIANA
 // ---------------------------------------------------------------------------
 
-fn table4(artifacts: &Path, results: &Path, task: Option<&str>, fast: f64) -> Result<()> {
+fn table4(
+    artifacts: &Path,
+    results: &Path,
+    task: Option<&str>,
+    backend: Option<BackendKind>,
+    fast: f64,
+) -> Result<()> {
     eprintln!("--- table4: DIANA deployment (detailed simulator)");
     let mut rows = Vec::new();
     for t in filtered(&["c10", "c100", "imagenet"], task) {
         let variant = variant_for("diana", t);
         let mut cfg = cfg_for(variant, fast, CostTarget::Latency);
         cfg.lambdas = vec![0.05, 2.0]; // Accurate / Fast
-        let tr = trainer(artifacts, cfg)?;
+        let tr = trainer(artifacts, cfg, backend)?;
         let mut recs = sweep(&tr)?;
         recs[0].label = "odimo-accurate".into();
         recs[1].label = "odimo-fast".into();

@@ -8,20 +8,24 @@
 //! * **Layer 1/2 (build-time Python)** — Pallas kernels + JAX supernets,
 //!   AOT-lowered to HLO text by `python/compile/aot.py`; never on the
 //!   runtime path.
-//! * **Layer 3 (this crate)** — the search coordinator: it drives the
-//!   compiled train/eval executables through the ODiMO three-phase
-//!   schedule (Warmup → Search → Final-Training), sweeps the cost
-//!   strength λ to trace Pareto fronts, discretizes θ into channel→CU
-//!   assignments, and evaluates the resulting mappings on the SoC
-//!   simulators in [`soc`].
+//! * **Layer 3 (this crate)** — the search coordinator: it drives a
+//!   [`runtime::ModelBackend`] through the ODiMO three-phase schedule
+//!   (Warmup → Search → Final-Training), sweeps the cost strength λ to
+//!   trace Pareto fronts, discretizes θ into channel→CU assignments,
+//!   and evaluates the resulting mappings on the SoC simulators in
+//!   [`soc`]. Two backends implement the trait: the **native pure-Rust
+//!   engine** ([`runtime::native`]: tensor + reverse-mode autodiff +
+//!   K-column supernet builder — no artifacts needed, any registered
+//!   SoC) and the XLA/PJRT artifact loader (`--backend xla`).
 //!
 //! The hardware substrate is **data-driven**: every SoC is a JSON
 //! descriptor under `hw/` (schema: `hw/README.md`) loaded into the
-//! platform registry ([`soc::spec`]). DIANA, Darkside, and the synthetic
-//! tri-CU `trident` SoC ship as built-ins; dropping another
-//! `hw/<name>.json` adds a platform — with any number of CUs — without
-//! touching simulator code. Mappings, discretization, the Fig. 4 reorg
-//! pass, baselines, and all reports are N-way accordingly.
+//! platform registry ([`soc::spec`]). DIANA, Darkside, the synthetic
+//! tri-CU `trident`, and the GAP9-style `gap9` SoC ship as built-ins;
+//! dropping another `hw/<name>.json` adds a platform — with any number
+//! of CUs — without touching simulator code. Mappings, discretization,
+//! the Fig. 4 reorg pass, baselines, and all reports are N-way
+//! accordingly.
 //!
 //! Training-free mapping optimization lives in [`search`]: a
 //! [`search::SearchStrategy`] trait (greedy / coordinate descent /

@@ -2,16 +2,28 @@
 //!
 //! Every paper experiment is one subcommand (`repro exp fig5 ...`); ad-hoc
 //! runs go through `repro train` / `repro sweep`; `repro platforms` lists
-//! the registered SoC descriptors. See DESIGN.md §3 for the experiment
-//! index.
+//! the registered SoC descriptors. See DESIGN.md for the experiment index
+//! and the backend boundary.
+//!
+//! Two training engines sit behind `--backend`:
+//!
+//! * `native` (default when no artifacts exist) — the pure-Rust
+//!   tensor/autodiff engine; variants follow the grammar
+//!   `<platform>_<arch>_<task>[_w050|_w025][_fixed]` and work on any
+//!   registered SoC (`repro sweep` with no `--variant` traces a Pareto
+//!   front on every one of them);
+//! * `xla` — the AOT artifact loader (`make artifacts` + real
+//!   `xla_extension` bindings).
 //!
 //! ```text
 //! repro list
 //! repro platforms
-//! repro train --variant diana_resnet20_c10 [--lambda 0.2] [--cost-target energy] [--fast 0.5]
-//! repro sweep --variant darkside_mbv1_c10 [--no-baselines]
+//! repro train --variant diana_resnet20_c10 [--backend native|xla] [--lambda 0.2]
+//!             [--cost-target energy] [--fast 0.5]
+//! repro sweep [--variant trident_mbv1_c10] [--backend native|xla] [--no-baselines]
 //! repro exp <fig5|fig6|fig7|fig8|fig9|fig10|table2|table3|table4|socmap|all>
-//!           [--task c10|c100|imagenet] [--soc diana|darkside|trident|<hw/*.json>] [--fast f]
+//!           [--task c10|c100|imagenet] [--soc diana|darkside|trident|gap9|<hw/*.json>]
+//!           [--fast f] [--backend native|xla]
 //!           [--search greedy|descent|restart]   (socmap strategy)
 //! ```
 
@@ -21,17 +33,22 @@ use anyhow::{bail, Result};
 
 use odimo::config::{CostTarget, ExperimentConfig};
 use odimo::coordinator::{run_baseline, sweep, Baseline, Trainer};
+use odimo::runtime::{BackendKind, ModelBackend};
+use odimo::search::feasible_counts;
 use odimo::soc::Platform;
 use odimo::util::cli;
 
 const USAGE: &str = "usage: repro <list|platforms|train|sweep|exp> [options]
-  global: --artifacts DIR  --results DIR
+  global: --artifacts DIR  --results DIR  --backend native|xla
   train:  --variant V [--lambda L] [--cost-target latency|energy] [--config F] [--fast F]
-  sweep:  --variant V [--cost-target T] [--config F] [--fast F] [--no-baselines]
+  sweep:  [--variant V] [--cost-target T] [--config F] [--fast F] [--no-baselines]
+          (no --variant + native backend: sweeps every registered SoC)
   exp:    <fig5|fig6|fig7|fig8|fig9|fig10|table2|table3|table4|socmap|all>
-          [--task c10|c100|imagenet] [--soc diana|darkside|trident|NAME] [--fast F]
+          [--task c10|c100|imagenet] [--soc diana|darkside|trident|gap9|NAME] [--fast F]
           (socmap: --soc any registered platform, --task resnet|mobilenet,
-           --search greedy|descent|restart)";
+           --search greedy|descent|restart)
+  native variants: <platform>_<arch>_<task>[_w050|_w025][_fixed]
+          arch: resnet20|resnet8|mbv1|tiny   task: c10|c100|imgnet|tiny";
 
 fn main() -> Result<()> {
     let args = cli::parse(std::env::args().skip(1), &["no-baselines", "help"])?;
@@ -49,6 +66,7 @@ fn main() -> Result<()> {
         .map(PathBuf::from)
         .unwrap_or_else(|| root.join("results"));
     let fast = args.opt_f64("fast", 1.0)?;
+    let backend = args.opt_parse::<BackendKind>("backend")?;
 
     match args.positional[0].as_str() {
         "list" => {
@@ -65,12 +83,18 @@ fn main() -> Result<()> {
                     .collect();
                 names.sort();
                 for v in names {
-                    println!("{v}");
+                    println!("{v} (xla artifacts)");
                     found = true;
                 }
             }
             if !found {
-                println!("(no artifacts — run `make artifacts`)");
+                println!("(no XLA artifacts — run `make artifacts`, or use --backend native)");
+            }
+            println!(
+                "native variants: <platform>_<arch>_<task>[_w050|_w025][_fixed], e.g.:"
+            );
+            for p in odimo::soc::platform_names() {
+                println!("  {}", default_native_variant(&p)?);
             }
         }
         "platforms" => {
@@ -117,8 +141,8 @@ fn main() -> Result<()> {
             cfg.cost_target = CostTarget::parse(&args.opt_or("cost-target", "latency"))?;
             cfg.lambdas = vec![args.opt_f64("lambda", 0.2)?];
             let cfg = cfg.scaled(fast);
-            let client = odimo::runtime::cpu_client()?;
-            let tr = Trainer::new(&client, &artifacts, cfg)?;
+            let tr = Trainer::create(&artifacts, cfg, backend)?;
+            eprintln!("  [backend: {}]", tr.backend.backend_name());
             let recs = sweep(&tr)?;
             for r in &recs {
                 println!(
@@ -141,20 +165,53 @@ fn main() -> Result<()> {
             }
         }
         "sweep" => {
-            let variant = args.require("variant")?;
-            let mut cfg = load_cfg(&args, &variant)?;
-            cfg.cost_target = CostTarget::parse(&args.opt_or("cost-target", "latency"))?;
-            let cfg = cfg.scaled(fast);
-            let client = odimo::runtime::cpu_client()?;
-            let tr = Trainer::new(&client, &artifacts, cfg)?;
-            let mut recs = sweep(&tr)?;
-            if !args.has_flag("no-baselines") {
-                for b in Baseline::for_platform(tr.platform) {
-                    recs.push(run_baseline(&tr, b)?);
+            // (config, pinned backend) per run; the variant-less all-SoC
+            // default pins the native engine — per-variant resolution
+            // could silently pick XLA for whichever variants happen to
+            // have artifacts and abort the multi-SoC sweep partway
+            let runs: Vec<(ExperimentConfig, Option<BackendKind>)> =
+                match (args.opt("variant"), args.opt("config")) {
+                    (Some(v), _) => vec![(load_cfg(&args, v)?, backend)],
+                    // an explicit config names its own variant — run just that
+                    (None, Some(p)) => {
+                        vec![(ExperimentConfig::load(std::path::Path::new(p))?, backend)]
+                    }
+                    (None, None) => {
+                        if backend == Some(BackendKind::Xla) {
+                            bail!("sweep with --backend xla needs --variant (see `repro list`)");
+                        }
+                        odimo::soc::platform_names()
+                            .iter()
+                            .map(|p| {
+                                Ok((
+                                    ExperimentConfig::for_variant(&default_native_variant(p)?),
+                                    Some(BackendKind::Native),
+                                ))
+                            })
+                            .collect::<Result<_>>()?
+                    }
+                };
+            for (mut cfg, run_backend) in runs {
+                let variant = cfg.variant.clone();
+                cfg.cost_target = CostTarget::parse(&args.opt_or("cost-target", "latency"))?;
+                let cfg = cfg.scaled(fast);
+                let tr = Trainer::create(&artifacts, cfg, run_backend)?;
+                eprintln!(
+                    "=== sweep {variant} on {} ({} CUs, backend: {}) ===",
+                    tr.platform.name(),
+                    tr.platform.n_cus(),
+                    tr.backend.backend_name()
+                );
+                let mut recs = sweep(&tr)?;
+                report_feasibility(&tr, &recs);
+                if !args.has_flag("no-baselines") {
+                    for b in Baseline::for_platform(tr.platform) {
+                        recs.push(run_baseline(&tr, b)?);
+                    }
                 }
+                odimo::experiments::print_sweep(&recs);
+                odimo::experiments::save_records(&results.join("sweep"), &variant, &recs)?;
             }
-            odimo::experiments::print_sweep(&recs);
-            odimo::experiments::save_records(&results.join("sweep"), &variant, &recs)?;
         }
         "exp" => {
             let id = args
@@ -172,12 +229,49 @@ fn main() -> Result<()> {
                 args.opt("task"),
                 args.opt("soc"),
                 args.opt("search"),
+                backend,
                 fast,
             )?;
         }
         other => bail!("unknown command '{other}'\n{USAGE}"),
     }
     Ok(())
+}
+
+/// Native default workload for a platform: MobileNet when the SoC has a
+/// depthwise-only engine to exercise (Darkside/trident-style), ResNet-20
+/// otherwise.
+fn default_native_variant(platform: &str) -> Result<String> {
+    let p = Platform::get(platform)?;
+    let has_dw_engine = p.cus().iter().any(|cu| {
+        cu.supports(odimo::soc::LayerType::Dw) && !cu.supports(odimo::soc::LayerType::Conv)
+    });
+    let arch = if has_dw_engine { "mbv1" } else { "resnet20" };
+    Ok(format!("{platform}_{arch}_c10"))
+}
+
+/// Assert-and-report the PR-2 feasibility check (op eligibility + weight
+/// memory capacity) on each trained record's discretized mapping.
+fn report_feasibility(tr: &Trainer, recs: &[odimo::coordinator::RunRecord]) {
+    let k = tr.platform.n_cus();
+    let mut bad = 0usize;
+    for r in recs {
+        for (layer, asg) in tr.layers.iter().zip(&r.mapping.layers) {
+            if !feasible_counts(tr.platform, layer, &asg.counts(k)) {
+                eprintln!(
+                    "  [feasibility] λ={:?}: layer {} violates capacity/eligibility",
+                    r.lambda, layer.name
+                );
+                bad += 1;
+            }
+        }
+    }
+    if bad == 0 {
+        eprintln!(
+            "  [feasibility] all {} mappings pass the capacity/eligibility check",
+            recs.len()
+        );
+    }
 }
 
 fn load_cfg(args: &cli::Args, variant: &str) -> Result<ExperimentConfig> {

@@ -1,24 +1,37 @@
-//! Runtime layer: PJRT client + manifest-driven artifact loading.
+//! Runtime layer: the training-backend boundary.
 //!
-//! The coordinator never constructs XLA computations — it only loads the
-//! AOT artifacts produced by `make artifacts` and executes them. This
-//! module owns that boundary:
+//! The coordinator never constructs computations — it drives a
+//! [`ModelBackend`] through the four functions every model variant
+//! provides (`init` / `train` / `eval` / `cost`). Two backends implement
+//! the trait:
 //!
-//! * [`manifest`] — the JSON contract (shapes/dtypes/layer table);
-//! * [`executable`] — HLO-text → PJRT compile → typed execute;
-//! * [`ModelRuntime`] — the four compiled functions of one model variant
-//!   plus the [`TrainState`] that loops through them.
+//! * [`native`] — the pure-Rust engine: an f32 tensor + reverse-mode
+//!   autodiff core and a K-column supernet builder that constructs the
+//!   search spaces directly from the layer table and the platform
+//!   registry. No artifacts, no XLA — `repro sweep --backend native`
+//!   works with `cargo run` alone, on any registered SoC.
+//! * [`ModelRuntime`] — the XLA/PJRT artifact loader: manifest-driven
+//!   HLO-text compile + typed execute of the AOT executables produced by
+//!   `make artifacts` (see [`manifest`], [`executable`]).
+//!
+//! [`TrainState`] is deliberately backend-neutral (named host `f32`
+//! leaves): the phase logic in `coordinator` snapshots, restores, freezes
+//! and discretizes θ without knowing which engine computes the gradients.
+//! Pick an implementation with [`load_backend`]; [`default_backend`]
+//! chooses `native` unless AOT artifacts exist for the variant.
 
 pub mod executable;
 pub mod manifest;
+pub mod native;
 
 use std::path::Path;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 use xla::{Literal, PjRtClient};
 
 pub use executable::{lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, to_vec_f32, LoadedFn};
 pub use manifest::{IoSpec, LayerSpec, Manifest};
+pub use native::NativeBackend;
 
 /// Train-loop hyper-scalars fed to every `train` call.
 #[derive(Debug, Clone, Copy)]
@@ -31,12 +44,13 @@ pub struct StepHparams {
     pub lr_th: f32,
 }
 
-/// Mutable training state: params + both optimizer states, kept as
-/// literals in manifest flattening order so they loop straight back into
-/// the next `train` call.
+/// Mutable training state: params + optimizer state as named host-side
+/// `f32` buffers, kept in the backend's flattening order so they loop
+/// straight back into the next `train` call. Backend-neutral: the phase
+/// logic (freeze, discretize, snapshot/restore) works on this type alone.
 pub struct TrainState {
-    pub leaves: Vec<Literal>,
-    /// names parallel to `leaves` (from the manifest train signature)
+    pub leaves: Vec<Vec<f32>>,
+    /// names parallel to `leaves` (from the backend's state signature)
     pub names: Vec<String>,
 }
 
@@ -50,7 +64,7 @@ impl TrainState {
         let i = self
             .leaf_index(name)
             .ok_or_else(|| anyhow!("no state leaf '{name}'"))?;
-        to_vec_f32(&self.leaves[i])
+        Ok(self.leaves[i].clone())
     }
 
     /// Replace a named leaf (e.g. freezing θ to a discretized one-hot).
@@ -58,17 +72,25 @@ impl TrainState {
         let i = self
             .leaf_index(name)
             .ok_or_else(|| anyhow!("no state leaf '{name}'"))?;
-        self.leaves[i] = lit_f32(shape, data)?;
+        let want: usize = shape.iter().product();
+        if want != data.len() || data.len() != self.leaves[i].len() {
+            return Err(anyhow!(
+                "leaf '{name}': shape {shape:?} / data {} does not match existing {} elements",
+                data.len(),
+                self.leaves[i].len()
+            ));
+        }
+        self.leaves[i] = data.to_vec();
         Ok(())
     }
 
     /// Snapshot the raw f32 contents of every leaf (checkpointing).
-    pub fn snapshot(&self) -> Result<Vec<Vec<f32>>> {
-        self.leaves.iter().map(to_vec_f32).collect()
+    pub fn snapshot(&self) -> Vec<Vec<f32>> {
+        self.leaves.clone()
     }
 
     /// Restore from a snapshot taken on an identically-shaped state.
-    pub fn restore(&mut self, snap: &[Vec<f32>], specs: &[IoSpec]) -> Result<()> {
+    pub fn restore(&mut self, snap: &[Vec<f32>]) -> Result<()> {
         if snap.len() != self.leaves.len() {
             return Err(anyhow!(
                 "snapshot has {} leaves, state has {}",
@@ -76,30 +98,134 @@ impl TrainState {
                 self.leaves.len()
             ));
         }
-        for (i, data) in snap.iter().enumerate() {
-            self.leaves[i] = lit_f32(&specs[i].shape, data)?;
+        for (leaf, data) in self.leaves.iter_mut().zip(snap) {
+            if leaf.len() != data.len() {
+                return Err(anyhow!("snapshot leaf size mismatch"));
+            }
+            leaf.clone_from(data);
         }
         Ok(())
     }
 }
 
-/// All four compiled functions of one model variant.
+/// One training engine for one model variant — the boundary the
+/// coordinator programs against. Batches cross as host `f32`/`i32`
+/// buffers (NHWC images, label vector); the backend owns device
+/// transfer, graph construction and differentiation.
+pub trait ModelBackend {
+    /// Backend family name ("native" | "xla").
+    fn backend_name(&self) -> &'static str;
+
+    /// Static model metadata: layer table, dataset, cost scale, platform.
+    fn manifest(&self) -> &Manifest;
+
+    /// Name/shape of every state leaf, in flattening order.
+    fn state_specs(&self) -> &[IoSpec];
+
+    /// Build the initial [`TrainState`] from a seed.
+    fn init_state(&self, seed: i32) -> Result<TrainState>;
+
+    /// One training step; advances `state` in place and returns the metric
+    /// vector `[loss, ce, acc, cost_lat_cycles, cost_energy_uj]`.
+    fn train_step(
+        &self,
+        state: &mut TrainState,
+        x: &[f32],
+        y: &[i32],
+        hp: StepHparams,
+    ) -> Result<Vec<f32>>;
+
+    /// Evaluate one batch (inference mode): returns `[correct, loss_sum]`.
+    fn eval_batch(&self, state: &TrainState, x: &[f32], y: &[i32]) -> Result<Vec<f32>>;
+
+    /// Cost report from current θ: `(layer matrix row-major, totals
+    /// [latency_cycles, energy_uj])`. The XLA artifacts emit `[L, 4]`
+    /// two-CU rows; the native engine emits `[L, 2K]` rows
+    /// (`n_0..n_{K-1}, cyc_0..cyc_{K-1}`) for a K-CU platform.
+    fn cost_report(&self, state: &TrainState) -> Result<(Vec<f32>, Vec<f32>)>;
+
+    fn batch(&self) -> usize {
+        self.manifest().dataset.batch
+    }
+
+    fn state_len(&self) -> usize {
+        self.state_specs().len()
+    }
+}
+
+/// Which training engine to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// pure-Rust tensor/autodiff engine (no artifacts needed)
+    Native,
+    /// AOT XLA artifacts through PJRT (requires `make artifacts` and real
+    /// `xla_extension` bindings)
+    Xla,
+}
+
+impl BackendKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<BackendKind> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "xla" => Ok(BackendKind::Xla),
+            other => bail!("unknown backend '{other}' (expected native|xla)"),
+        }
+    }
+}
+
+/// Default engine for a variant: XLA when its AOT artifacts exist (they
+/// were built deliberately), the native engine otherwise.
+pub fn default_backend(artifacts: &Path, variant: &str) -> BackendKind {
+    if artifacts.join(format!("{variant}.manifest.json")).exists() {
+        BackendKind::Xla
+    } else {
+        BackendKind::Native
+    }
+}
+
+/// Construct a backend for `variant`.
+pub fn load_backend(
+    kind: BackendKind,
+    artifacts: &Path,
+    variant: &str,
+) -> Result<Box<dyn ModelBackend>> {
+    match kind {
+        BackendKind::Native => Ok(Box::new(NativeBackend::build(variant)?)),
+        BackendKind::Xla => Ok(Box::new(ModelRuntime::load(artifacts, variant)?)),
+    }
+}
+
+/// All four compiled functions of one model variant (the XLA backend).
 pub struct ModelRuntime {
     pub manifest: Manifest,
     pub init: LoadedFn,
     pub train: LoadedFn,
     pub eval: LoadedFn,
     pub cost: LoadedFn,
-    state_len: usize,
+    state_specs: Vec<IoSpec>,
+    #[allow(dead_code)]
+    client: PjRtClient,
 }
 
 impl ModelRuntime {
     /// Load and compile a variant from the artifacts directory.
-    pub fn load(client: &PjRtClient, artifacts_dir: &Path, variant: &str) -> Result<Self> {
+    pub fn load(artifacts_dir: &Path, variant: &str) -> Result<Self> {
+        let client = cpu_client()?;
         let manifest = Manifest::load(artifacts_dir, variant)?;
         let load = |name: &str| -> Result<LoadedFn> {
             LoadedFn::load(
-                client,
+                &client,
                 &format!("{variant}:{name}"),
                 &manifest.hlo_path(name)?,
                 manifest.function(name)?.clone(),
@@ -110,49 +236,76 @@ impl ModelRuntime {
         let eval = load("eval")?;
         let cost = load("cost")?;
         let state_len = manifest.train_state_len()?;
+        let state_specs = train.spec.inputs[..state_len].to_vec();
         Ok(Self {
             manifest,
             init,
             train,
             eval,
             cost,
-            state_len,
+            state_specs,
+            client,
         })
+    }
+
+    /// The first `n` host leaves → literals (shapes from the manifest).
+    /// Callers that only feed the params prefix (eval/cost) avoid
+    /// marshalling the optimizer-state leaves entirely.
+    fn state_literals(&self, state: &TrainState, n: usize) -> Result<Vec<Literal>> {
+        state.leaves[..n]
+            .iter()
+            .zip(&self.state_specs)
+            .map(|(leaf, spec)| lit_f32(&spec.shape, leaf))
+            .collect()
+    }
+
+    fn batch_literals(&self, x: &[f32], y: &[i32]) -> Result<(Literal, Literal)> {
+        let m = &self.manifest.dataset;
+        Ok((
+            lit_f32(&[m.batch, m.hw, m.hw, 3], x)?,
+            lit_i32(&[m.batch], y)?,
+        ))
+    }
+}
+
+impl ModelBackend for ModelRuntime {
+    fn backend_name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn state_specs(&self) -> &[IoSpec] {
+        &self.state_specs
     }
 
     /// Run `init(seed)` and package the state for the train loop.
-    pub fn init_state(&self, seed: i32) -> Result<TrainState> {
+    fn init_state(&self, seed: i32) -> Result<TrainState> {
         let outs = self.init.call(&[lit_scalar_i32(seed)])?;
-        let names = self
-            .train
-            .spec
-            .inputs
-            .iter()
-            .take(self.state_len)
-            .map(|s| s.name.clone())
-            .collect::<Vec<_>>();
-        if outs.len() != self.state_len {
+        if outs.len() != self.state_specs.len() {
             return Err(anyhow!(
                 "init produced {} leaves, train expects {} state inputs",
                 outs.len(),
-                self.state_len
+                self.state_specs.len()
             ));
         }
         Ok(TrainState {
-            leaves: outs,
-            names,
+            leaves: outs.iter().map(to_vec_f32).collect::<Result<_>>()?,
+            names: self.state_specs.iter().map(|s| s.name.clone()).collect(),
         })
     }
 
-    /// One training step; advances `state` in place and returns the metric
-    /// vector `[loss, ce, acc, cost_lat_cycles, cost_energy_uj]`.
-    pub fn train_step(
+    fn train_step(
         &self,
         state: &mut TrainState,
-        x: &Literal,
-        y: &Literal,
+        x: &[f32],
+        y: &[i32],
         hp: StepHparams,
     ) -> Result<Vec<f32>> {
+        let leaves = self.state_literals(state, state.leaves.len())?;
+        let (xl, yl) = self.batch_literals(x, y)?;
         let scalars = [
             lit_scalar_f32(hp.lam),
             lit_scalar_f32(hp.cost_sel),
@@ -161,51 +314,59 @@ impl ModelRuntime {
         ];
         // manifest input order: params…, opt_w…, opt_th…, x, y, lam,
         // cost_sel, lr_w, lr_th — exactly state ++ batch ++ scalars.
-        let mut args: Vec<&Literal> = Vec::with_capacity(state.leaves.len() + 6);
-        args.extend(state.leaves.iter());
-        args.push(x);
-        args.push(y);
+        let mut args: Vec<&Literal> = Vec::with_capacity(leaves.len() + 6);
+        args.extend(leaves.iter());
+        args.push(&xl);
+        args.push(&yl);
         args.extend(scalars.iter());
         let mut outs = self.train.call(&args)?;
         let metrics = outs.pop().ok_or_else(|| anyhow!("train returned no outputs"))?;
-        state.leaves = outs;
+        state.leaves = outs.iter().map(to_vec_f32).collect::<Result<_>>()?;
         to_vec_f32(&metrics)
     }
 
-    /// Evaluate one batch: returns `[correct, loss_sum]`.
-    pub fn eval_batch(&self, state: &TrainState, x: &Literal, y: &Literal) -> Result<Vec<f32>> {
-        let n_params = self
-            .eval
-            .spec
-            .inputs
-            .len()
-            .checked_sub(2)
-            .ok_or_else(|| anyhow!("eval signature too short"))?;
-        let mut args: Vec<&Literal> = state.leaves[..n_params].iter().collect();
-        args.push(x);
-        args.push(y);
+    fn eval_batch(&self, state: &TrainState, x: &[f32], y: &[i32]) -> Result<Vec<f32>> {
+        let n_inputs = self.eval.spec.inputs.len();
+        let n_params = n_inputs.checked_sub(2).ok_or_else(|| {
+            anyhow!(
+                "{}: eval signature too short ({n_inputs} inputs; needs at least \
+                 the params plus the x and y batch tensors)",
+                self.manifest.variant
+            )
+        })?;
+        if n_params > state.leaves.len() {
+            return Err(anyhow!(
+                "{}: eval wants {n_params} param inputs but the state has only {} leaves",
+                self.manifest.variant,
+                state.leaves.len()
+            ));
+        }
+        let leaves = self.state_literals(state, n_params)?;
+        let (xl, yl) = self.batch_literals(x, y)?;
+        let mut args: Vec<&Literal> = leaves.iter().collect();
+        args.push(&xl);
+        args.push(&yl);
         let outs = self.eval.call(&args)?;
         to_vec_f32(&outs[0])
     }
 
-    /// Cost report from current θ: `(layer_mat [L,4] row-major, totals [2])`.
-    pub fn cost_report(&self, state: &TrainState) -> Result<(Vec<f32>, Vec<f32>)> {
+    fn cost_report(&self, state: &TrainState) -> Result<(Vec<f32>, Vec<f32>)> {
         let n_params = self.cost.spec.inputs.len();
-        let args: Vec<&Literal> = state.leaves[..n_params].iter().collect();
+        if n_params > state.leaves.len() {
+            return Err(anyhow!(
+                "{}: cost wants {n_params} param inputs but the state has only {} leaves",
+                self.manifest.variant,
+                state.leaves.len()
+            ));
+        }
+        let leaves = self.state_literals(state, n_params)?;
+        let args: Vec<&Literal> = leaves.iter().collect();
         let outs = self.cost.call(&args)?;
         Ok((to_vec_f32(&outs[0])?, to_vec_f32(&outs[1])?))
     }
-
-    pub fn batch(&self) -> usize {
-        self.manifest.dataset.batch
-    }
-
-    pub fn state_len(&self) -> usize {
-        self.state_len
-    }
 }
 
-/// Create the CPU PJRT client (one per process).
+/// Create the CPU PJRT client (one per runtime).
 pub fn cpu_client() -> Result<PjRtClient> {
     PjRtClient::cpu().map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))
 }

@@ -1,0 +1,435 @@
+//! The native [`ModelBackend`]: supernet + tape + SGD, no artifacts.
+//!
+//! One `train` step is: read the state leaves onto a fresh [`Tape`], run
+//! the supernet forward with batch statistics, add the differentiable
+//! cost term `λ · ((1−sel)·lat + sel·energy)` over the θ-expected channel
+//! counts (Eq. 1), reverse-sweep, then apply SGD-with-momentum to the W
+//! family (`lr_w`) and plain SGD to θ (`lr_th`) — the per-group learning
+//! rates of the paper's joint descent. BN running statistics update
+//! outside the tape with the usual 0.9 momentum.
+//!
+//! The state layout (leaf names/order) is the same contract the AOT
+//! manifests use: `params/<layer>/{w,bn/*,theta}`, `params/fc/{w,b}`,
+//! then one `opt_w/…` momentum buffer per trainable W leaf — so the
+//! coordinator's θ plumbing, snapshots and Table-II memory accounting
+//! work identically on both backends.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::manifest::{CostScale, IoSpec, Manifest};
+use crate::runtime::{ModelBackend, StepHparams, TrainState};
+
+use super::supernet::{forward, init_conv_weight, init_fc, LayerVars, SupernetSpec};
+use super::tape::{eval_layer_cost, Tape, Var};
+use super::tensor::Tensor;
+
+const BN_MOMENTUM: f32 = 0.9;
+const W_MOMENTUM: f32 = 0.9;
+
+/// Per-conv-geometry leaf indices into the state vector.
+struct GeomLeaves {
+    w: usize,
+    scale: usize,
+    bias: usize,
+    mean: usize,
+    var: usize,
+    theta: Option<usize>,
+}
+
+pub struct NativeBackend {
+    spec: SupernetSpec,
+    manifest: Manifest,
+    state_specs: Vec<IoSpec>,
+    geoms: Vec<GeomLeaves>,
+    fc_w: usize,
+    fc_b: usize,
+    /// `(param leaf, momentum leaf)` pairs, in W-update order
+    momenta: Vec<(usize, usize)>,
+    /// per-geometry sequential-stage flag (DW→PW chains cost the sum)
+    seq: Vec<bool>,
+    /// cost of the non-searchable layers (always CU column 0)
+    fixed_lat: f64,
+    fixed_energy_uj: f64,
+}
+
+impl NativeBackend {
+    /// Build the engine for a native variant name
+    /// (`<platform>_<arch>_<task>[_w050|_w025][_fixed]`).
+    pub fn build(variant: &str) -> Result<NativeBackend> {
+        let spec = SupernetSpec::build(variant)?;
+        let n_cus = spec.platform.n_cus();
+
+        // --- state layout -------------------------------------------------
+        let mut state_specs: Vec<IoSpec> = Vec::new();
+        let push = |specs: &mut Vec<IoSpec>, name: String, shape: Vec<usize>| -> usize {
+            specs.push(IoSpec {
+                name,
+                shape,
+                dtype: "f32".into(),
+            });
+            specs.len() - 1
+        };
+        let mut geoms = Vec::with_capacity(spec.n_convs());
+        for gi in 0..spec.n_convs() {
+            let l = &spec.layers[gi];
+            let name = &l.name;
+            let w = push(&mut state_specs, format!("params/{name}/w"), spec.w_shape(gi));
+            let scale = push(
+                &mut state_specs,
+                format!("params/{name}/bn/scale"),
+                vec![l.cout],
+            );
+            let bias = push(
+                &mut state_specs,
+                format!("params/{name}/bn/bias"),
+                vec![l.cout],
+            );
+            let mean = push(
+                &mut state_specs,
+                format!("params/{name}/bn/mean"),
+                vec![l.cout],
+            );
+            let var = push(
+                &mut state_specs,
+                format!("params/{name}/bn/var"),
+                vec![l.cout],
+            );
+            let theta = l.searchable.then(|| {
+                push(
+                    &mut state_specs,
+                    format!("params/{name}/theta"),
+                    vec![l.cout, n_cus],
+                )
+            });
+            geoms.push(GeomLeaves {
+                w,
+                scale,
+                bias,
+                mean,
+                var,
+                theta,
+            });
+        }
+        let fc_w = push(
+            &mut state_specs,
+            "params/fc/w".into(),
+            vec![spec.fc_cin, spec.classes],
+        );
+        let fc_b = push(&mut state_specs, "params/fc/b".into(), vec![spec.classes]);
+        // momentum buffers shadow every trainable W leaf
+        let w_params: Vec<usize> = geoms
+            .iter()
+            .flat_map(|g| [g.w, g.scale, g.bias])
+            .chain([fc_w, fc_b])
+            .collect();
+        let mut momenta = Vec::with_capacity(w_params.len());
+        for &p in &w_params {
+            let suffix = state_specs[p]
+                .name
+                .strip_prefix("params/")
+                .expect("trainable leaves live under params/")
+                .to_string();
+            let shape = state_specs[p].shape.clone();
+            let m = push(&mut state_specs, format!("opt_w/{suffix}"), shape);
+            momenta.push((p, m));
+        }
+
+        // --- manifest + derived cost constants ----------------------------
+        let mut manifest = spec.to_manifest(CostScale {
+            latency_cycles: 1.0,
+            energy_uj: 1.0,
+        });
+        let seq_names = crate::soc::sequential_layers(&manifest);
+        let seq: Vec<bool> = spec
+            .layers
+            .iter()
+            .map(|l| seq_names.iter().any(|s| s == &l.name))
+            .collect();
+
+        let cus = spec.platform.cus();
+        let us = 1.0 / spec.platform.freq_mhz();
+        let p_idle = spec.platform.p_idle_mw();
+        let mut fixed_lat = 0.0;
+        let mut fixed_energy_uj = 0.0;
+        for l in spec.layers.iter().filter(|l| !l.searchable) {
+            let mut counts = vec![0.0f64; cus.len()];
+            counts[0] = l.cout as f64;
+            let e = eval_layer_cost(cus, l, &counts, p_idle, us, false);
+            fixed_lat += e.latency;
+            fixed_energy_uj += e.energy_uj;
+        }
+        // scale = whole-network cost at the uniform-θ init point, so
+        // config λ values stay comparable across variants and platforms
+        let mut scale_lat = fixed_lat;
+        let mut scale_energy = fixed_energy_uj;
+        for (gi, l) in spec.layers.iter().enumerate().filter(|(_, l)| l.searchable) {
+            let counts = spec.uniform_counts(gi);
+            let e = eval_layer_cost(cus, l, &counts, p_idle, us, seq[gi]);
+            scale_lat += e.latency;
+            scale_energy += e.energy_uj;
+        }
+        manifest.cost_scale = CostScale {
+            latency_cycles: scale_lat.max(1.0),
+            energy_uj: scale_energy.max(1e-9),
+        };
+
+        Ok(NativeBackend {
+            spec,
+            manifest,
+            state_specs,
+            geoms,
+            fc_w,
+            fc_b,
+            momenta,
+            seq,
+            fixed_lat,
+            fixed_energy_uj,
+        })
+    }
+
+    pub fn spec(&self) -> &SupernetSpec {
+        &self.spec
+    }
+
+    /// Put every parameter leaf on a fresh tape; returns the per-layer
+    /// handles plus the list of `(leaf, var)` pairs per group.
+    #[allow(clippy::type_complexity)]
+    fn stage_params(
+        &self,
+        tape: &mut Tape,
+        state: &TrainState,
+    ) -> (Vec<LayerVars>, Var, Var, Vec<Var>, Vec<(usize, Var)>) {
+        let mut lvs = Vec::with_capacity(self.geoms.len());
+        let mut w_vars = Vec::with_capacity(self.momenta.len());
+        let mut theta_vars = Vec::new();
+        let leaf = |tape: &mut Tape, idx: usize| -> Var {
+            tape.leaf(Tensor::new(
+                self.state_specs[idx].shape.clone(),
+                state.leaves[idx].clone(),
+            ))
+        };
+        for gl in &self.geoms {
+            let w = leaf(tape, gl.w);
+            let scale = leaf(tape, gl.scale);
+            let bias = leaf(tape, gl.bias);
+            w_vars.extend([w, scale, bias]);
+            let theta = gl.theta.map(|t| {
+                let v = leaf(tape, t);
+                theta_vars.push((t, v));
+                v
+            });
+            lvs.push(LayerVars {
+                w,
+                scale,
+                bias,
+                theta,
+            });
+        }
+        let fcw = leaf(tape, self.fc_w);
+        let fcb = leaf(tape, self.fc_b);
+        w_vars.extend([fcw, fcb]);
+        (lvs, fcw, fcb, w_vars, theta_vars)
+    }
+
+    fn running_stats(&self, state: &TrainState) -> Vec<(Vec<f32>, Vec<f32>)> {
+        self.geoms
+            .iter()
+            .map(|g| (state.leaves[g.mean].clone(), state.leaves[g.var].clone()))
+            .collect()
+    }
+
+    fn check_batch(&self, x: &[f32], y: &[i32]) -> Result<usize> {
+        let hw = self.manifest.dataset.hw;
+        let n = y.len();
+        if x.len() != n * hw * hw * 3 {
+            return Err(anyhow!(
+                "batch shape mismatch: {} labels but {} pixels (expected {}·{hw}·{hw}·3)",
+                n,
+                x.len(),
+                n
+            ));
+        }
+        Ok(n)
+    }
+}
+
+/// θ → expected per-CU counts, through the *same* tape ops the training
+/// graph uses (masked row softmax + column sum) so the report and the
+/// in-graph objective cannot drift apart.
+fn masked_expected_counts(theta: &[f32], cout: usize, mask: &[bool]) -> Vec<f64> {
+    let mut tape = Tape::new();
+    let th = tape.leaf(Tensor::new(vec![cout, mask.len()], theta.to_vec()));
+    let p = tape.softmax_rows_masked(th, mask);
+    let n = tape.col_sum(p);
+    tape.val(n).data.iter().map(|&v| v as f64).collect()
+}
+
+impl ModelBackend for NativeBackend {
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn state_specs(&self) -> &[IoSpec] {
+        &self.state_specs
+    }
+
+    fn init_state(&self, seed: i32) -> Result<TrainState> {
+        let mut leaves: Vec<Vec<f32>> = self
+            .state_specs
+            .iter()
+            .map(|s| vec![0.0; s.elem_count()])
+            .collect();
+        for (gi, gl) in self.geoms.iter().enumerate() {
+            let cout = self.spec.layers[gi].cout;
+            leaves[gl.w] = init_conv_weight(&self.spec, gi, seed as u64, gi as u64);
+            leaves[gl.scale] = vec![1.0; cout];
+            leaves[gl.bias] = vec![0.0; cout];
+            leaves[gl.mean] = vec![0.0; cout];
+            leaves[gl.var] = vec![1.0; cout];
+            if let Some(t) = gl.theta {
+                leaves[t] = self.spec.theta_init(gi);
+            }
+        }
+        let (w, b) = init_fc(self.spec.fc_cin, self.spec.classes, seed as u64);
+        leaves[self.fc_w] = w;
+        leaves[self.fc_b] = b;
+        Ok(TrainState {
+            leaves,
+            names: self.state_specs.iter().map(|s| s.name.clone()).collect(),
+        })
+    }
+
+    fn train_step(
+        &self,
+        state: &mut TrainState,
+        x: &[f32],
+        y: &[i32],
+        hp: StepHparams,
+    ) -> Result<Vec<f32>> {
+        let n = self.check_batch(x, y)?;
+        let hw = self.manifest.dataset.hw;
+        let mut tape = Tape::new();
+        let (lvs, fcw, fcb, w_vars, theta_vars) = self.stage_params(&mut tape, state);
+        let running = self.running_stats(state);
+        let xv = tape.leaf(Tensor::new(vec![n, hw, hw, 3], x.to_vec()));
+        let out = forward(&self.spec, &mut tape, &lvs, fcw, fcb, xv, true, &running);
+        let (ce, bits) = tape.softmax_ce(out.logits, y);
+
+        // differentiable cost term over the searchable layers
+        let platform = self.spec.platform;
+        let mut tot: Option<Var> = None;
+        for gi in 0..self.spec.n_convs() {
+            if let Some(cv) = out.counts[gi] {
+                let lc = tape.layer_cost(
+                    cv,
+                    &self.spec.layers[gi],
+                    platform.cus(),
+                    platform.p_idle_mw(),
+                    platform.freq_mhz(),
+                    self.seq[gi],
+                );
+                tot = Some(match tot {
+                    None => lc,
+                    Some(t) => tape.add(t, lc),
+                });
+            }
+        }
+        let (loss, lat_metric, energy_metric) = match tot {
+            Some(t) => {
+                let tv = tape.val(t);
+                let lat = tv.data[0] as f64 + self.fixed_lat;
+                let en = tv.data[1] as f64 + self.fixed_energy_uj;
+                let cost = tape.weighted_pair(t, 1.0 - hp.cost_sel, hp.cost_sel);
+                let scaled = tape.scale(cost, hp.lam);
+                (tape.add(ce, scaled), lat, en)
+            }
+            None => (ce, self.fixed_lat, self.fixed_energy_uj),
+        };
+        let loss_val = tape.val(loss).item();
+        let grads = tape.backward(loss);
+
+        // --- SGD updates --------------------------------------------------
+        debug_assert_eq!(w_vars.len(), self.momenta.len());
+        for (&(pleaf, mleaf), pvar) in self.momenta.iter().zip(&w_vars) {
+            let g = &grads[pvar.id()].data;
+            {
+                let mom = &mut state.leaves[mleaf];
+                for (mv, &gv) in mom.iter_mut().zip(g) {
+                    *mv = W_MOMENTUM * *mv + gv;
+                }
+            }
+            let mom = std::mem::take(&mut state.leaves[mleaf]);
+            for (pv, &mv) in state.leaves[pleaf].iter_mut().zip(&mom) {
+                *pv -= hp.lr_w * mv;
+            }
+            state.leaves[mleaf] = mom;
+        }
+        for (tleaf, tvar) in &theta_vars {
+            let g = &grads[tvar.id()].data;
+            for (tv, &gv) in state.leaves[*tleaf].iter_mut().zip(g) {
+                *tv -= hp.lr_th * gv;
+            }
+        }
+        // --- BN running statistics ---------------------------------------
+        for (gi, gl) in self.geoms.iter().enumerate() {
+            if let Some((mean, var)) = &out.batch_stats[gi] {
+                for (m, &b) in state.leaves[gl.mean].iter_mut().zip(mean) {
+                    *m = BN_MOMENTUM * *m + (1.0 - BN_MOMENTUM) * b;
+                }
+                for (v, &b) in state.leaves[gl.var].iter_mut().zip(var) {
+                    *v = BN_MOMENTUM * *v + (1.0 - BN_MOMENTUM) * b;
+                }
+            }
+        }
+        Ok(vec![
+            loss_val,
+            bits.loss_sum / n as f32,
+            bits.correct / n as f32,
+            lat_metric as f32,
+            energy_metric as f32,
+        ])
+    }
+
+    fn eval_batch(&self, state: &TrainState, x: &[f32], y: &[i32]) -> Result<Vec<f32>> {
+        let n = self.check_batch(x, y)?;
+        let hw = self.manifest.dataset.hw;
+        let mut tape = Tape::new();
+        let (lvs, fcw, fcb, _, _) = self.stage_params(&mut tape, state);
+        let running = self.running_stats(state);
+        let xv = tape.leaf(Tensor::new(vec![n, hw, hw, 3], x.to_vec()));
+        let out = forward(&self.spec, &mut tape, &lvs, fcw, fcb, xv, false, &running);
+        let (_, bits) = tape.softmax_ce(out.logits, y);
+        Ok(vec![bits.correct, bits.loss_sum])
+    }
+
+    fn cost_report(&self, state: &TrainState) -> Result<(Vec<f32>, Vec<f32>)> {
+        let platform = self.spec.platform;
+        let cus = platform.cus();
+        let k = cus.len();
+        let us = 1.0 / platform.freq_mhz();
+        let p_idle = platform.p_idle_mw();
+        let mut mat = Vec::with_capacity(self.spec.layers.len() * 2 * k);
+        let mut lat_total = 0.0f64;
+        let mut energy_total = 0.0f64;
+        for (gi, l) in self.spec.layers.iter().enumerate() {
+            let counts: Vec<f64> = match self.geoms.get(gi).and_then(|g| g.theta) {
+                Some(t) => masked_expected_counts(&state.leaves[t], l.cout, &self.spec.masks[gi]),
+                None => {
+                    let mut c = vec![0.0; k];
+                    c[0] = l.cout as f64;
+                    c
+                }
+            };
+            let e = eval_layer_cost(cus, l, &counts, p_idle, us, self.seq[gi]);
+            lat_total += e.latency;
+            energy_total += e.energy_uj;
+            mat.extend(counts.iter().map(|&n| n as f32));
+            mat.extend(e.cycles.iter().map(|&c| c as f32));
+        }
+        Ok((mat, vec![lat_total as f32, energy_total as f32]))
+    }
+}

@@ -1,0 +1,32 @@
+//! The native training engine: pure-Rust tensors, reverse-mode autodiff
+//! and a K-column supernet builder — the `--backend native` implementation
+//! of [`crate::runtime::ModelBackend`].
+//!
+//! Layering (bottom-up):
+//!
+//! * [`tensor`] — dense f32 buffers + the three matmul kernels;
+//! * [`tape`] — the autodiff core: exactly the ops the supernets need
+//!   (conv2d via im2col, depthwise conv, fake-quant STE, batch-stat norm,
+//!   ReLU, global-avg-pool, softmax/CE) plus the differentiable cost term
+//!   pinned to `soc::analytical::cu_cycles` by piecewise-linear
+//!   interpolation;
+//! * [`supernet`] — ResNet/MobileNet search spaces built from the layer
+//!   table and the platform registry: θ is `[cout, K]` for a K-CU SoC,
+//!   per-column weight branches follow each CU's `quant`, ineligible CUs
+//!   are softmax-masked;
+//! * [`backend`] — [`NativeBackend`]: the train/eval/cost loop with
+//!   SGD(+momentum) per-group updates and BN running statistics.
+//!
+//! Everything is deterministic: seeded [`crate::datasets::rng::Rng`]
+//! init, fixed accumulation order, no threads — two same-seed runs
+//! produce bit-identical `RunRecord`s (pinned by `tests/native.rs`).
+
+pub mod backend;
+pub mod supernet;
+pub mod tape;
+pub mod tensor;
+
+pub use backend::NativeBackend;
+pub use supernet::{Arch, SupernetSpec};
+pub use tape::{EvalBits, QuantKind, Tape, Var};
+pub use tensor::Tensor;

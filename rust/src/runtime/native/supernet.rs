@@ -1,0 +1,619 @@
+//! K-column supernet builder: the ResNet / MobileNetV1 search spaces
+//! constructed directly from a layer table and the platform registry.
+//!
+//! Where the Python supernets hardcode the two CUs of their target SoC,
+//! the native builder derives everything from the [`Platform`] descriptor:
+//! every searchable layer carries a `[cout, K]` θ (K = CU count), each
+//! column's weight branch is fake-quantized with that CU's declared data
+//! representation, and columns whose CU cannot run the layer's op are
+//! masked out of the softmax (no channels, no gradient). This closes the
+//! "supernets are 2-CU" gap: `diana_resnet20_c10`, `trident_mbv1_c10` and
+//! `gap9_resnet20_c10` are all the same code path.
+//!
+//! Variant grammar: `<platform>_<arch>_<task>[_w050|_w025][_fixed]` with
+//! `arch ∈ {resnet20, resnet8, mbv1, tiny}` and
+//! `task ∈ {c10, c100, imgnet, tiny}`; `_fixed` builds the plain
+//! fixed-precision baseline net (no θ — Table II's comparison point),
+//! `_w050`/`_w025` scale MobileNet widths (Fig. 10).
+
+use anyhow::{bail, Context, Result};
+
+use crate::mapping::ONE_HOT_LOGIT;
+use crate::runtime::manifest::{CostScale, DatasetSpec, LayerSpec, Manifest};
+use crate::search::eligible_cus;
+use crate::soc::{Layer, LayerType, Platform};
+
+use super::tape::{QuantKind, Tape, Var};
+
+/// Network families the native builder knows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    Resnet20,
+    Resnet8,
+    Mbv1,
+    /// miniature ResNet for tests/benches (seconds, not minutes)
+    Tiny,
+}
+
+/// One step of the forward plan (indices into the geometry table).
+#[derive(Debug, Clone, Copy)]
+pub enum PlanStep {
+    /// conv → bn → relu
+    Conv(usize),
+    /// residual block: relu(bn(c2(relu(bn(c1 x)))) + shortcut)
+    ResBlock {
+        c1: usize,
+        c2: usize,
+        dn: Option<usize>,
+    },
+    /// depthwise-separable block: dw → bn → relu → pw → bn → relu
+    DwPw { dw: usize, pw: usize },
+}
+
+/// Everything static about one native model variant.
+pub struct SupernetSpec {
+    pub variant: String,
+    pub platform: Platform,
+    pub arch: Arch,
+    /// no θ anywhere: the fixed-precision baseline net
+    pub fixed: bool,
+    pub dataset: DatasetSpec,
+    /// geometry in manifest order: every conv, then the FC head
+    pub layers: Vec<Layer>,
+    /// per-layer CU-eligibility mask (θ softmax support)
+    pub masks: Vec<Vec<bool>>,
+    /// per-CU-column weight quantizer
+    pub quants: Vec<QuantKind>,
+    pub plan: Vec<PlanStep>,
+    pub classes: usize,
+    pub fc_cin: usize,
+}
+
+impl SupernetSpec {
+    /// Number of conv layers (the geometry minus the FC head).
+    pub fn n_convs(&self) -> usize {
+        self.layers.len() - 1
+    }
+
+    /// Parse a variant name and build its search space.
+    pub fn build(variant: &str) -> Result<SupernetSpec> {
+        let mut toks: Vec<&str> = variant.split('_').collect();
+        let mut fixed = false;
+        let mut wm = 1.0f64;
+        loop {
+            match toks.last().copied() {
+                Some("fixed") => {
+                    fixed = true;
+                    toks.pop();
+                }
+                Some("w050") => {
+                    wm = 0.5;
+                    toks.pop();
+                }
+                Some("w025") => {
+                    wm = 0.25;
+                    toks.pop();
+                }
+                _ => break,
+            }
+        }
+        if let Some(last @ ("prune" | "layerwise")) = toks.last().copied() {
+            bail!(
+                "variant '{variant}': the {last} baseline search space is only \
+                 available through the XLA artifact backend (--backend xla)"
+            );
+        }
+        if toks.len() < 3 {
+            bail!(
+                "variant '{variant}' does not match the native grammar \
+                 <platform>_<arch>_<task>[_w050|_w025][_fixed]"
+            );
+        }
+        let task = toks.pop().unwrap();
+        let arch_tok = toks.pop().unwrap();
+        let platform_name = toks.join("_");
+        let platform = Platform::get(&platform_name).with_context(|| {
+            format!("variant '{variant}': platform '{platform_name}' not registered")
+        })?;
+        let arch = match arch_tok {
+            "resnet20" => Arch::Resnet20,
+            "resnet8" => Arch::Resnet8,
+            "mbv1" => Arch::Mbv1,
+            "tiny" => Arch::Tiny,
+            other => bail!(
+                "variant '{variant}': unknown arch '{other}' \
+                 (expected resnet20|resnet8|mbv1|tiny)"
+            ),
+        };
+        let dataset = match task {
+            "c10" => DatasetSpec {
+                name: "synth-cifar10".into(),
+                hw: 32,
+                classes: 10,
+                batch: 64,
+            },
+            "c100" => DatasetSpec {
+                name: "synth-cifar100".into(),
+                hw: 32,
+                classes: 100,
+                batch: 64,
+            },
+            "imgnet" => DatasetSpec {
+                name: "synth-imagenet".into(),
+                hw: 64,
+                classes: 100,
+                batch: 32,
+            },
+            "tiny" => DatasetSpec {
+                name: "synth-tiny".into(),
+                hw: 8,
+                classes: 4,
+                batch: 8,
+            },
+            other => bail!(
+                "variant '{variant}': unknown task '{other}' (expected c10|c100|imgnet|tiny)"
+            ),
+        };
+        let (mut layers, plan, fc_cin) = match arch {
+            Arch::Resnet20 => resnet_geoms(dataset.hw, 8, &[8, 16, 32], 3),
+            Arch::Resnet8 => resnet_geoms(dataset.hw, 16, &[16, 32, 64], 1),
+            Arch::Tiny => resnet_geoms(dataset.hw, 4, &[4], 1),
+            Arch::Mbv1 => mbv1_geoms(dataset.hw, wm),
+        };
+        if fixed {
+            for l in layers.iter_mut() {
+                l.searchable = false;
+            }
+        }
+        let classes = dataset.classes;
+        layers.push(Layer {
+            name: "fc".into(),
+            ltype: LayerType::Fc,
+            cin: fc_cin,
+            cout: classes,
+            k: 1,
+            ox: 1,
+            oy: 1,
+            stride: 1,
+            searchable: false,
+        });
+        let masks: Vec<Vec<bool>> = layers.iter().map(|l| eligible_cus(platform, l)).collect();
+        let quants: Vec<QuantKind> = platform
+            .cus()
+            .iter()
+            .map(|cu| QuantKind::from_quant_str(&cu.quant))
+            .collect();
+        Ok(SupernetSpec {
+            variant: variant.to_string(),
+            platform,
+            arch,
+            fixed,
+            dataset,
+            layers,
+            masks,
+            quants,
+            plan,
+            classes,
+            fc_cin,
+        })
+    }
+
+    /// Assemble the in-memory [`Manifest`] (no files, no functions table).
+    pub fn to_manifest(&self, cost_scale: CostScale) -> Manifest {
+        let n_cus = self.platform.n_cus();
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| LayerSpec {
+                name: l.name.clone(),
+                ltype: l.ltype.name().to_string(),
+                cin: l.cin,
+                cout: l.cout,
+                k: l.k,
+                ox: l.ox,
+                oy: l.oy,
+                stride: l.stride,
+                searchable: l.searchable,
+                theta_len: if l.searchable { n_cus * l.cout } else { 0 },
+            })
+            .collect();
+        Manifest {
+            variant: self.variant.clone(),
+            platform: self.platform.name().to_string(),
+            w_optimizer: "sgdm".into(),
+            search_kind: if self.fixed { "fixed" } else { "channel" }.into(),
+            dataset: self.dataset.clone(),
+            layers,
+            cost_scale,
+            metrics_train: ["loss", "ce", "acc", "cost_lat_cycles", "cost_energy_uj"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            metrics_eval: ["correct", "loss_sum"].iter().map(|s| s.to_string()).collect(),
+            functions: Default::default(),
+            dir: std::path::PathBuf::new(),
+        }
+    }
+
+    /// Uniform-θ expected per-CU counts of layer `gi` (the init point the
+    /// cost scale is normalized at): `cout / #eligible` on each eligible
+    /// column.
+    pub fn uniform_counts(&self, gi: usize) -> Vec<f64> {
+        let l = &self.layers[gi];
+        let mask = &self.masks[gi];
+        let e = mask.iter().filter(|&&m| m).count().max(1);
+        mask.iter()
+            .map(|&m| if m { l.cout as f64 / e as f64 } else { 0.0 })
+            .collect()
+    }
+
+    /// He-normal fan-in of a conv geometry's weight rows.
+    pub fn fan_in(&self, gi: usize) -> usize {
+        let l = &self.layers[gi];
+        match l.ltype {
+            LayerType::Dw => l.k * l.k,
+            _ => l.cin * l.k * l.k,
+        }
+    }
+
+    /// Flattened weight shape of conv geometry `gi`.
+    pub fn w_shape(&self, gi: usize) -> Vec<usize> {
+        vec![self.layers[gi].cout, self.fan_in(gi)]
+    }
+
+    /// Masked θ init: eligible columns at 0 (uniform), ineligible pinned
+    /// to the one-hot floor so discretization can never select them.
+    pub fn theta_init(&self, gi: usize) -> Vec<f32> {
+        let l = &self.layers[gi];
+        let mask = &self.masks[gi];
+        let k = mask.len();
+        let mut t = vec![0.0f32; l.cout * k];
+        for c in 0..l.cout {
+            for (j, &m) in mask.iter().enumerate() {
+                if !m {
+                    t[c * k + j] = -ONE_HOT_LOGIT;
+                }
+            }
+        }
+        t
+    }
+}
+
+/// CIFAR-style ResNet geometry (mirrors `supernet_diana.build_geoms`).
+fn resnet_geoms(
+    input_hw: usize,
+    stem: usize,
+    widths: &[usize],
+    blocks: usize,
+) -> (Vec<Layer>, Vec<PlanStep>, usize) {
+    let conv = |name: String, ltype, cin, cout, k, hw, stride| Layer {
+        name,
+        ltype,
+        cin,
+        cout,
+        k,
+        ox: hw,
+        oy: hw,
+        stride,
+        searchable: true,
+    };
+    let mut geoms = Vec::new();
+    let mut plan = Vec::new();
+    let mut hw = input_hw;
+    geoms.push(conv("stem".into(), LayerType::Conv, 3, stem, 3, hw, 1));
+    plan.push(PlanStep::Conv(0));
+    let mut cin = stem;
+    for (si, &cw) in widths.iter().enumerate() {
+        for bi in 0..blocks {
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            let hw_out = hw.div_ceil(stride);
+            let c1 = geoms.len();
+            geoms.push(conv(
+                format!("s{si}b{bi}c1"),
+                LayerType::Conv,
+                cin,
+                cw,
+                3,
+                hw_out,
+                stride,
+            ));
+            let c2 = geoms.len();
+            geoms.push(conv(
+                format!("s{si}b{bi}c2"),
+                LayerType::Conv,
+                cw,
+                cw,
+                3,
+                hw_out,
+                1,
+            ));
+            let dn = if stride != 1 || cin != cw {
+                let d = geoms.len();
+                geoms.push(conv(
+                    format!("s{si}b{bi}dn"),
+                    LayerType::Pw,
+                    cin,
+                    cw,
+                    1,
+                    hw_out,
+                    stride,
+                ));
+                Some(d)
+            } else {
+                None
+            };
+            plan.push(PlanStep::ResBlock { c1, c2, dn });
+            hw = hw_out;
+            cin = cw;
+        }
+    }
+    (geoms, plan, cin)
+}
+
+/// MobileNetV1 geometry (mirrors `variants.ds_cfg`), widths scaled by `wm`.
+fn mbv1_geoms(input_hw: usize, wm: f64) -> (Vec<Layer>, Vec<PlanStep>, usize) {
+    let w = |c: usize| ((c as f64 * wm).round() as usize).max(1);
+    const BLOCKS: [(usize, usize, usize); 7] = [
+        (8, 1, 16),
+        (16, 2, 32),
+        (32, 1, 32),
+        (32, 2, 64),
+        (64, 1, 64),
+        (64, 2, 128),
+        (128, 1, 128),
+    ];
+    let mut geoms = Vec::new();
+    let mut plan = Vec::new();
+    let mut hw = input_hw;
+    geoms.push(Layer {
+        name: "stem".into(),
+        ltype: LayerType::Conv,
+        cin: 3,
+        cout: w(BLOCKS[0].0),
+        k: 3,
+        ox: hw,
+        oy: hw,
+        stride: 1,
+        searchable: true,
+    });
+    plan.push(PlanStep::Conv(0));
+    let mut cin = w(BLOCKS[0].0);
+    for (bi, &(_, stride, cout_t)) in BLOCKS.iter().enumerate() {
+        let cout = w(cout_t);
+        let hw_out = hw.div_ceil(stride);
+        let dw = geoms.len();
+        geoms.push(Layer {
+            name: format!("b{bi}dw"),
+            ltype: LayerType::Dw,
+            cin,
+            cout: cin,
+            k: 3,
+            ox: hw_out,
+            oy: hw_out,
+            stride,
+            searchable: true,
+        });
+        let pw = geoms.len();
+        geoms.push(Layer {
+            name: format!("b{bi}pw"),
+            ltype: LayerType::Pw,
+            cin,
+            cout,
+            k: 1,
+            ox: hw_out,
+            oy: hw_out,
+            stride: 1,
+            searchable: true,
+        });
+        plan.push(PlanStep::DwPw { dw, pw });
+        hw = hw_out;
+        cin = cout;
+    }
+    (geoms, plan, cin)
+}
+
+// ---------------------------------------------------------------------------
+// forward
+// ---------------------------------------------------------------------------
+
+/// Tape handles of one conv layer's parameters.
+pub struct LayerVars {
+    pub w: Var,
+    pub scale: Var,
+    pub bias: Var,
+    pub theta: Option<Var>,
+}
+
+/// Forward-pass outputs the backend consumes.
+pub struct ForwardOut {
+    pub logits: Var,
+    /// expected per-CU channel counts, one per searchable conv geometry
+    pub counts: Vec<Option<Var>>,
+    /// batch statistics per conv geometry (training mode only)
+    pub batch_stats: Vec<Option<(Vec<f32>, Vec<f32>)>>,
+}
+
+const BN_EPS: f32 = 1e-5;
+
+/// Run the supernet forward on `tape`. `running` holds each conv's BN
+/// running `(mean, var)` for inference mode.
+#[allow(clippy::too_many_arguments)]
+pub fn forward(
+    spec: &SupernetSpec,
+    tape: &mut Tape,
+    lv: &[LayerVars],
+    fc_w: Var,
+    fc_b: Var,
+    x: Var,
+    training: bool,
+    running: &[(Vec<f32>, Vec<f32>)],
+) -> ForwardOut {
+    let mut counts: Vec<Option<Var>> = vec![None; spec.layers.len()];
+    let mut stats: Vec<Option<(Vec<f32>, Vec<f32>)>> = vec![None; spec.layers.len()];
+
+    let conv_bn = |tape: &mut Tape,
+                       gi: usize,
+                       input: Var,
+                       with_relu: bool,
+                       counts: &mut Vec<Option<Var>>,
+                       stats: &mut Vec<Option<(Vec<f32>, Vec<f32>)>>|
+     -> Var {
+        let g = &spec.layers[gi];
+        let p = &lv[gi];
+        let weff = match p.theta {
+            Some(th) => {
+                let probs = tape.softmax_rows_masked(th, &spec.masks[gi]);
+                counts[gi] = Some(tape.col_sum(probs));
+                tape.effective_weights(p.w, probs, &spec.quants)
+            }
+            // fixed-precision layers run on the primary CU's representation
+            None => tape.fake_quant_ste(p.w, spec.quants[0]),
+        };
+        let y = match g.ltype {
+            LayerType::Dw => tape.dw_conv2d(input, weff, g.k, g.stride),
+            _ => tape.conv2d(input, weff, g.k, g.stride),
+        };
+        let y = if training {
+            let (y, mean, var) = tape.batch_norm_train(y, p.scale, p.bias);
+            stats[gi] = Some((mean, var));
+            y
+        } else {
+            let (mean, var) = &running[gi];
+            let sv = tape.val(p.scale).data.clone();
+            let bv = tape.val(p.bias).data.clone();
+            let a: Vec<f32> = sv
+                .iter()
+                .zip(var)
+                .map(|(&s, &v)| s / (v + BN_EPS).sqrt())
+                .collect();
+            let b: Vec<f32> = bv
+                .iter()
+                .zip(mean.iter().zip(&a))
+                .map(|(&bb, (&m, &aa))| bb - m * aa)
+                .collect();
+            tape.channel_affine(y, a, b)
+        };
+        if with_relu {
+            tape.relu(y)
+        } else {
+            y
+        }
+    };
+
+    let mut cur = x;
+    for step in &spec.plan {
+        match *step {
+            PlanStep::Conv(i) => {
+                cur = conv_bn(tape, i, cur, true, &mut counts, &mut stats);
+            }
+            PlanStep::ResBlock { c1, c2, dn } => {
+                let h = conv_bn(tape, c1, cur, true, &mut counts, &mut stats);
+                let h2 = conv_bn(tape, c2, h, false, &mut counts, &mut stats);
+                let sc = match dn {
+                    Some(d) => conv_bn(tape, d, cur, false, &mut counts, &mut stats),
+                    None => cur,
+                };
+                let sum = tape.add(h2, sc);
+                cur = tape.relu(sum);
+            }
+            PlanStep::DwPw { dw, pw } => {
+                cur = conv_bn(tape, dw, cur, true, &mut counts, &mut stats);
+                cur = conv_bn(tape, pw, cur, true, &mut counts, &mut stats);
+            }
+        }
+    }
+    let pooled = tape.global_avg_pool(cur);
+    let z = tape.matmul(pooled, fc_w);
+    let logits = tape.add_bias(z, fc_b);
+    ForwardOut {
+        logits,
+        counts,
+        batch_stats: stats,
+    }
+}
+
+/// Leaf initialization for one conv weight (He normal, seeded stream).
+pub fn init_conv_weight(spec: &SupernetSpec, gi: usize, seed: u64, leaf_tag: u64) -> Vec<f32> {
+    let shape = spec.w_shape(gi);
+    let fan_in = spec.fan_in(gi);
+    let std = (2.0 / fan_in as f32).sqrt();
+    let mut rng = crate::datasets::rng::Rng::from_stream(seed, 0xD1A0, leaf_tag);
+    (0..shape.iter().product::<usize>())
+        .map(|_| std * rng.normal())
+        .collect()
+}
+
+/// FC head init (matches `layers.fc_init`): `w ~ N(0, 1/cin)`, `b = 0`.
+pub fn init_fc(cin: usize, cout: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let std = (1.0 / cin as f32).sqrt();
+    let mut rng = crate::datasets::rng::Rng::from_stream(seed, 0xFC00, 0);
+    let w = (0..cin * cout).map(|_| std * rng.normal()).collect();
+    (w, vec![0.0; cout])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_grammar_parses() {
+        let s = SupernetSpec::build("diana_resnet20_c10").unwrap();
+        assert_eq!(s.platform.name(), "diana");
+        assert_eq!(s.arch, Arch::Resnet20);
+        assert_eq!(s.dataset.classes, 10);
+        assert!(!s.fixed);
+        // resnet20 scaled: stem + 9 blocks (2 convs + 2 downsamples) + fc
+        assert_eq!(s.layers.last().unwrap().name, "fc");
+        assert!(s.layers.len() > 10);
+
+        let f = SupernetSpec::build("trident_mbv1_c10_fixed").unwrap();
+        assert!(f.fixed);
+        assert!(f.layers.iter().all(|l| !l.searchable));
+        assert_eq!(f.quants.len(), 3);
+
+        let w = SupernetSpec::build("darkside_mbv1_c10_w050").unwrap();
+        // widths halved vs the full net
+        let full = SupernetSpec::build("darkside_mbv1_c10").unwrap();
+        let wi = w.layers.iter().find(|l| l.name == "b6pw").unwrap();
+        let fi = full.layers.iter().find(|l| l.name == "b6pw").unwrap();
+        assert_eq!(wi.cout * 2, fi.cout);
+
+        assert!(SupernetSpec::build("nosuchsoc_resnet20_c10").is_err());
+        assert!(SupernetSpec::build("diana_vgg_c10").is_err());
+        assert!(SupernetSpec::build("diana_resnet20").is_err());
+    }
+
+    #[test]
+    fn masks_follow_cu_ops() {
+        // trident's DWE runs dw only: conv layers mask it out, dw layers
+        // include it, and the aimc (no dw op) is masked for dw layers
+        let s = SupernetSpec::build("trident_mbv1_c10").unwrap();
+        let stem = &s.masks[0];
+        assert_eq!(stem, &vec![true, false, true]);
+        let dw_gi = s.layers.iter().position(|l| l.ltype == LayerType::Dw).unwrap();
+        assert_eq!(s.masks[dw_gi], vec![true, true, false]);
+    }
+
+    #[test]
+    fn theta_init_pins_masked_columns() {
+        let s = SupernetSpec::build("trident_resnet20_c10").unwrap();
+        let t = s.theta_init(0); // stem: conv → dwe masked
+        let k = s.platform.n_cus();
+        assert_eq!(t.len(), s.layers[0].cout * k);
+        for c in 0..s.layers[0].cout {
+            assert_eq!(t[c * k], 0.0);
+            assert_eq!(t[c * k + 1], -ONE_HOT_LOGIT);
+            assert_eq!(t[c * k + 2], 0.0);
+        }
+    }
+
+    #[test]
+    fn uniform_counts_sum_to_cout() {
+        let s = SupernetSpec::build("trident_mbv1_c10").unwrap();
+        for gi in 0..s.n_convs() {
+            let n = s.uniform_counts(gi);
+            let sum: f64 = n.iter().sum();
+            assert!((sum - s.layers[gi].cout as f64).abs() < 1e-9, "layer {gi}");
+        }
+    }
+}

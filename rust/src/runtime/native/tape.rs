@@ -1,0 +1,1045 @@
+//! Reverse-mode autodiff over [`Tensor`]s: exactly the ops the ODiMO
+//! supernets need, nothing more.
+//!
+//! A [`Tape`] records one forward pass as a flat list of nodes; each op
+//! pushes its output value plus a backward closure that, given `dL/dout`,
+//! accumulates into its operands' gradient slots. Because a node's output
+//! can only be consumed by later-created nodes, one reverse sweep in
+//! creation order is a valid topological backward pass.
+//!
+//! Op inventory (mirroring `python/compile/{layers,kernels}`):
+//! conv2d via im2col matmul, depthwise conv, per-row int8/ternary
+//! fake-quant with the straight-through estimator, Eq. 5 effective
+//! weights, batch-stat normalization, ReLU, global average pool, bias
+//! add, softmax cross-entropy, masked θ-softmax — plus [`Tape::layer_cost`],
+//! the differentiable cost term: a piecewise-linear interpolation of
+//! `soc::analytical::cu_cycles` that is *exact at integer channel counts*,
+//! so the in-graph cost is pinned to the simulator the searches deploy on.
+
+use std::rc::Rc;
+
+use crate::soc::{analytical::cu_cycles, CuSpec, Layer};
+
+use super::tensor::{matmul, matmul_at, matmul_bt, Tensor};
+
+/// Handle to one tape node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Var(usize);
+
+impl Var {
+    /// Index into the gradient vector returned by [`Tape::backward`].
+    pub fn id(self) -> usize {
+        self.0
+    }
+}
+
+type BackFn = Box<dyn Fn(&Tensor, &mut [Tensor])>;
+
+struct Node {
+    val: Rc<Tensor>,
+    back: Option<BackFn>,
+}
+
+/// One recorded forward pass.
+#[derive(Default)]
+pub struct Tape {
+    nodes: Vec<Node>,
+}
+
+fn acc(grads: &mut [Tensor], i: usize, g: &[f32]) {
+    for (d, &s) in grads[i].data.iter_mut().zip(g) {
+        *d += s;
+    }
+}
+
+/// Per-output-channel weight quantizer of a CU (selected by the
+/// descriptor's `quant` string). Semantics match the Pallas kernels in
+/// `python/compile/kernels/fake_quant.py`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantKind {
+    /// symmetric per-row int8: scale = max|w| / 127
+    Int8,
+    /// per-row ternary: threshold 0.05·max|w|, scale = mean |w| above it
+    Ternary,
+    /// no re-quantization (full-precision CU)
+    Identity,
+}
+
+impl QuantKind {
+    pub fn from_quant_str(s: &str) -> QuantKind {
+        match s {
+            "int8" => QuantKind::Int8,
+            "ternary" => QuantKind::Ternary,
+            _ => QuantKind::Identity,
+        }
+    }
+
+    /// Quantize one row in place into `out`.
+    pub fn quant_row(self, row: &[f32], out: &mut [f32]) {
+        match self {
+            QuantKind::Identity => out.copy_from_slice(row),
+            QuantKind::Int8 => {
+                let amax = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+                for (o, &v) in out.iter_mut().zip(row) {
+                    *o = (v / scale).round().clamp(-127.0, 127.0) * scale;
+                }
+            }
+            QuantKind::Ternary => {
+                let amax = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let thr = 0.05 * amax;
+                let mut kept = 0.0f32;
+                let mut sum = 0.0f32;
+                for &v in row {
+                    if v.abs() > thr {
+                        kept += 1.0;
+                        sum += v.abs();
+                    }
+                }
+                let scale = sum / kept.max(1.0);
+                for (o, &v) in out.iter_mut().zip(row) {
+                    *o = if v.abs() > thr {
+                        v.signum() * scale
+                    } else {
+                        0.0
+                    };
+                }
+            }
+        }
+    }
+}
+
+/// Non-differentiable extras an op reports alongside its output.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EvalBits {
+    pub correct: f32,
+    pub loss_sum: f32,
+}
+
+impl Tape {
+    pub fn new() -> Tape {
+        Tape::default()
+    }
+
+    fn push(&mut self, val: Tensor, back: Option<BackFn>) -> Var {
+        self.nodes.push(Node {
+            val: Rc::new(val),
+            back,
+        });
+        Var(self.nodes.len() - 1)
+    }
+
+    /// Record an input/parameter (gradient sink).
+    pub fn leaf(&mut self, t: Tensor) -> Var {
+        self.push(t, None)
+    }
+
+    pub fn val(&self, v: Var) -> &Tensor {
+        &self.nodes[v.0].val
+    }
+
+    fn rc(&self, v: Var) -> Rc<Tensor> {
+        Rc::clone(&self.nodes[v.0].val)
+    }
+
+    /// Full reverse sweep from scalar `loss`; returns one gradient tensor
+    /// per node (leaves keep their accumulated gradients; interior slots
+    /// are consumed during the sweep).
+    pub fn backward(&self, loss: Var) -> Vec<Tensor> {
+        let mut grads: Vec<Tensor> = self
+            .nodes
+            .iter()
+            .map(|n| Tensor::zeros(n.val.shape.clone()))
+            .collect();
+        debug_assert_eq!(self.nodes[loss.0].val.elem_count(), 1);
+        grads[loss.0].data[0] = 1.0;
+        for i in (0..=loss.0).rev() {
+            if let Some(back) = &self.nodes[i].back {
+                let g = std::mem::replace(&mut grads[i], Tensor::zeros(Vec::new()));
+                back(&g, &mut grads);
+            }
+        }
+        grads
+    }
+
+    /// Gradient of `loss` w.r.t. one var (convenience for tests).
+    pub fn grad_of(&self, loss: Var, v: Var) -> Tensor {
+        let mut grads = self.backward(loss);
+        std::mem::replace(&mut grads[v.0], Tensor::zeros(Vec::new()))
+    }
+
+    // -----------------------------------------------------------------
+    // elementwise / shape ops
+    // -----------------------------------------------------------------
+
+    pub fn add(&mut self, a: Var, b: Var) -> Var {
+        let (av, bv) = (self.rc(a), self.rc(b));
+        debug_assert_eq!(av.shape, bv.shape);
+        let data = av.data.iter().zip(&bv.data).map(|(x, y)| x + y).collect();
+        let val = Tensor::new(av.shape.clone(), data);
+        self.push(
+            val,
+            Some(Box::new(move |g, grads| {
+                acc(grads, a.0, &g.data);
+                acc(grads, b.0, &g.data);
+            })),
+        )
+    }
+
+    pub fn mul(&mut self, a: Var, b: Var) -> Var {
+        let (av, bv) = (self.rc(a), self.rc(b));
+        debug_assert_eq!(av.shape, bv.shape);
+        let data = av.data.iter().zip(&bv.data).map(|(x, y)| x * y).collect();
+        let val = Tensor::new(av.shape.clone(), data);
+        let (sa, sb) = (Rc::clone(&av), Rc::clone(&bv));
+        self.push(
+            val,
+            Some(Box::new(move |g, grads| {
+                for ((d, &s), &y) in grads[a.0].data.iter_mut().zip(&g.data).zip(&sb.data) {
+                    *d += s * y;
+                }
+                for ((d, &s), &x) in grads[b.0].data.iter_mut().zip(&g.data).zip(&sa.data) {
+                    *d += s * x;
+                }
+            })),
+        )
+    }
+
+    pub fn scale(&mut self, a: Var, c: f32) -> Var {
+        let av = self.rc(a);
+        let data = av.data.iter().map(|x| x * c).collect();
+        let val = Tensor::new(av.shape.clone(), data);
+        self.push(
+            val,
+            Some(Box::new(move |g, grads| {
+                for (d, &s) in grads[a.0].data.iter_mut().zip(&g.data) {
+                    *d += s * c;
+                }
+            })),
+        )
+    }
+
+    pub fn relu(&mut self, a: Var) -> Var {
+        let av = self.rc(a);
+        let data = av.data.iter().map(|&x| x.max(0.0)).collect();
+        let val = Tensor::new(av.shape.clone(), data);
+        let saved = Rc::clone(&av);
+        self.push(
+            val,
+            Some(Box::new(move |g, grads| {
+                for ((d, &s), &x) in grads[a.0].data.iter_mut().zip(&g.data).zip(&saved.data) {
+                    if x > 0.0 {
+                        *d += s;
+                    }
+                }
+            })),
+        )
+    }
+
+    /// Sum of every element → scalar (test/objective helper).
+    pub fn sum_all(&mut self, a: Var) -> Var {
+        let av = self.rc(a);
+        let val = Tensor::scalar(av.data.iter().sum());
+        self.push(
+            val,
+            Some(Box::new(move |g, grads| {
+                let s = g.data[0];
+                for d in grads[a.0].data.iter_mut() {
+                    *d += s;
+                }
+            })),
+        )
+    }
+
+    /// `w0·v[0] + w1·v[1]` of a 2-vector → scalar (cost-target selection).
+    pub fn weighted_pair(&mut self, v: Var, w0: f32, w1: f32) -> Var {
+        let vv = self.rc(v);
+        debug_assert_eq!(vv.elem_count(), 2);
+        let val = Tensor::scalar(w0 * vv.data[0] + w1 * vv.data[1]);
+        self.push(
+            val,
+            Some(Box::new(move |g, grads| {
+                let s = g.data[0];
+                grads[v.0].data[0] += s * w0;
+                grads[v.0].data[1] += s * w1;
+            })),
+        )
+    }
+
+    // -----------------------------------------------------------------
+    // linear algebra
+    // -----------------------------------------------------------------
+
+    /// `A[m,k] · B[k,n]`.
+    pub fn matmul(&mut self, a: Var, b: Var) -> Var {
+        let (av, bv) = (self.rc(a), self.rc(b));
+        let (m, k) = (av.shape[0], av.shape[1]);
+        let n = bv.shape[1];
+        debug_assert_eq!(bv.shape[0], k);
+        let val = Tensor::new(vec![m, n], matmul(&av.data, &bv.data, m, k, n));
+        let (sa, sb) = (Rc::clone(&av), Rc::clone(&bv));
+        self.push(
+            val,
+            Some(Box::new(move |g, grads| {
+                // dA = g · Bᵀ ; dB = Aᵀ · g
+                acc(grads, a.0, &matmul_bt(&g.data, &sb.data, m, n, k));
+                acc(grads, b.0, &matmul_at(&sa.data, &g.data, m, k, n));
+            })),
+        )
+    }
+
+    /// Broadcast bias add over the trailing channel axis.
+    pub fn add_bias(&mut self, x: Var, b: Var) -> Var {
+        let (xv, bv) = (self.rc(x), self.rc(b));
+        let c = *xv.shape.last().unwrap();
+        debug_assert_eq!(bv.elem_count(), c);
+        let data = xv
+            .data
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| v + bv.data[i % c])
+            .collect();
+        let val = Tensor::new(xv.shape.clone(), data);
+        self.push(
+            val,
+            Some(Box::new(move |g, grads| {
+                acc(grads, x.0, &g.data);
+                for (i, &s) in g.data.iter().enumerate() {
+                    grads[b.0].data[i % c] += s;
+                }
+            })),
+        )
+    }
+
+    // -----------------------------------------------------------------
+    // convolutions
+    // -----------------------------------------------------------------
+
+    /// 'SAME' NHWC convolution with flattened weights `w: [cout, k·k·cin]`
+    /// (row layout `(ky·k + kx)·cin + ci`, matching the AOT flattening).
+    /// Lowered as im2col + matmul, like the Darkside cluster executes it.
+    pub fn conv2d(&mut self, x: Var, w: Var, k: usize, stride: usize) -> Var {
+        let (xv, wv) = (self.rc(x), self.rc(w));
+        let (n, h, ww, cin) = (xv.shape[0], xv.shape[1], xv.shape[2], xv.shape[3]);
+        let cout = wv.shape[0];
+        let f = k * k * cin;
+        debug_assert_eq!(wv.shape[1], f);
+        let (cols, oh, ow) = im2col(&xv, k, stride);
+        let rows = n * oh * ow;
+        let y = matmul_bt(&cols.data, &wv.data, rows, f, cout);
+        let val = Tensor::new(vec![n, oh, ow, cout], y);
+        let cols = Rc::new(cols);
+        let saved_cols = Rc::clone(&cols);
+        let saved_w = Rc::clone(&wv);
+        self.push(
+            val,
+            Some(Box::new(move |g, grads| {
+                // dW[cout,F] = gᵀ[cout,rows] · cols[rows,F]
+                acc(grads, w.0, &matmul_at(&g.data, &saved_cols.data, rows, cout, f));
+                // dCols = g[rows,cout] · W[cout,F], scattered back to x
+                let dcols = matmul(&g.data, &saved_w.data, rows, cout, f);
+                col2im(&dcols, &mut grads[x.0].data, n, h, ww, cin, k, stride, oh, ow);
+            })),
+        )
+    }
+
+    /// 'SAME' depthwise convolution, weights `w: [c, k·k]`.
+    pub fn dw_conv2d(&mut self, x: Var, w: Var, k: usize, stride: usize) -> Var {
+        let (xv, wv) = (self.rc(x), self.rc(w));
+        let (n, h, ww, c) = (xv.shape[0], xv.shape[1], xv.shape[2], xv.shape[3]);
+        debug_assert_eq!(wv.shape, vec![c, k * k]);
+        let (oh, ow, pad) = same_geometry(h, ww, k, stride);
+        let mut y = vec![0.0f32; n * oh * ow * c];
+        dw_forward(&xv.data, &wv.data, &mut y, n, h, ww, c, k, stride, pad);
+        let val = Tensor::new(vec![n, oh, ow, c], y);
+        let (sx, sw) = (Rc::clone(&xv), Rc::clone(&wv));
+        self.push(
+            val,
+            Some(Box::new(move |g, grads| {
+                let (dx_slot, dw_slot) = (x.0, w.0);
+                let mut dw = vec![0.0f32; c * k * k];
+                let mut dx = vec![0.0f32; n * h * ww * c];
+                dw_backward(
+                    &sx.data, &sw.data, &g.data, &mut dx, &mut dw, n, h, ww, c, k, stride, pad,
+                );
+                acc(grads, dx_slot, &dx);
+                acc(grads, dw_slot, &dw);
+            })),
+        )
+    }
+
+    // -----------------------------------------------------------------
+    // normalization / pooling
+    // -----------------------------------------------------------------
+
+    /// Batch-stat normalization over all leading axes (training mode).
+    /// Returns `(y, batch_mean, batch_var)`; the running-stat update
+    /// happens outside the tape.
+    pub fn batch_norm_train(
+        &mut self,
+        x: Var,
+        scale: Var,
+        bias: Var,
+    ) -> (Var, Vec<f32>, Vec<f32>) {
+        let (xv, sv, bv) = (self.rc(x), self.rc(scale), self.rc(bias));
+        let c = *xv.shape.last().unwrap();
+        let m = xv.elem_count() / c;
+        const EPS: f32 = 1e-5;
+        let mut mean = vec![0.0f32; c];
+        for (i, &v) in xv.data.iter().enumerate() {
+            mean[i % c] += v;
+        }
+        for v in mean.iter_mut() {
+            *v /= m as f32;
+        }
+        let mut var = vec![0.0f32; c];
+        for (i, &v) in xv.data.iter().enumerate() {
+            let d = v - mean[i % c];
+            var[i % c] += d * d;
+        }
+        for v in var.iter_mut() {
+            *v /= m as f32;
+        }
+        let inv: Vec<f32> = var.iter().map(|&v| 1.0 / (v + EPS).sqrt()).collect();
+        let mut xhat = vec![0.0f32; xv.elem_count()];
+        let mut y = vec![0.0f32; xv.elem_count()];
+        for (i, &v) in xv.data.iter().enumerate() {
+            let ch = i % c;
+            let xh = (v - mean[ch]) * inv[ch];
+            xhat[i] = xh;
+            y[i] = xh * sv.data[ch] + bv.data[ch];
+        }
+        let val = Tensor::new(xv.shape.clone(), y);
+        let xhat = Rc::new(xhat);
+        let inv_s = inv.clone();
+        let saved_scale = Rc::clone(&sv);
+        let saved_xhat = Rc::clone(&xhat);
+        let out = self.push(
+            val,
+            Some(Box::new(move |g, grads| {
+                let mut sum_dy = vec![0.0f32; c];
+                let mut sum_dy_xhat = vec![0.0f32; c];
+                for (i, &s) in g.data.iter().enumerate() {
+                    let ch = i % c;
+                    sum_dy[ch] += s;
+                    sum_dy_xhat[ch] += s * saved_xhat[i];
+                }
+                for (i, &s) in g.data.iter().enumerate() {
+                    let ch = i % c;
+                    let mf = m as f32;
+                    let dx = saved_scale.data[ch] * inv_s[ch] / mf
+                        * (mf * s - sum_dy[ch] - saved_xhat[i] * sum_dy_xhat[ch]);
+                    grads[x.0].data[i] += dx;
+                }
+                acc(grads, scale.0, &sum_dy_xhat);
+                acc(grads, bias.0, &sum_dy);
+            })),
+        );
+        (out, mean, var)
+    }
+
+    /// Inference-mode normalization: per-channel affine with *constant*
+    /// coefficients folded from the running stats.
+    pub fn channel_affine(&mut self, x: Var, a: Vec<f32>, b: Vec<f32>) -> Var {
+        let xv = self.rc(x);
+        let c = *xv.shape.last().unwrap();
+        debug_assert_eq!(a.len(), c);
+        let data = xv
+            .data
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| v * a[i % c] + b[i % c])
+            .collect();
+        let val = Tensor::new(xv.shape.clone(), data);
+        self.push(
+            val,
+            Some(Box::new(move |g, grads| {
+                for (i, &s) in g.data.iter().enumerate() {
+                    grads[x.0].data[i] += s * a[i % c];
+                }
+            })),
+        )
+    }
+
+    /// `[n,h,w,c] → [n,c]` mean over the spatial axes.
+    pub fn global_avg_pool(&mut self, x: Var) -> Var {
+        let xv = self.rc(x);
+        let (n, h, w, c) = (xv.shape[0], xv.shape[1], xv.shape[2], xv.shape[3]);
+        let hw = h * w;
+        let mut y = vec![0.0f32; n * c];
+        for b in 0..n {
+            for p in 0..hw {
+                for ch in 0..c {
+                    y[b * c + ch] += xv.data[(b * hw + p) * c + ch];
+                }
+            }
+        }
+        for v in y.iter_mut() {
+            *v /= hw as f32;
+        }
+        let val = Tensor::new(vec![n, c], y);
+        self.push(
+            val,
+            Some(Box::new(move |g, grads| {
+                let inv = 1.0 / hw as f32;
+                for b in 0..n {
+                    for p in 0..hw {
+                        for ch in 0..c {
+                            grads[x.0].data[(b * hw + p) * c + ch] += g.data[b * c + ch] * inv;
+                        }
+                    }
+                }
+            })),
+        )
+    }
+
+    // -----------------------------------------------------------------
+    // loss
+    // -----------------------------------------------------------------
+
+    /// Mean softmax cross-entropy of `logits [n, classes]` against integer
+    /// labels. Also reports the batch's correct count and loss sum.
+    pub fn softmax_ce(&mut self, logits: Var, labels: &[i32]) -> (Var, EvalBits) {
+        let lv = self.rc(logits);
+        let (n, c) = (lv.shape[0], lv.shape[1]);
+        debug_assert_eq!(labels.len(), n);
+        let mut probs = vec![0.0f32; n * c];
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0.0f32;
+        for b in 0..n {
+            let row = &lv.data[b * c..(b + 1) * c];
+            let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+            let mut z = 0.0f32;
+            for (j, &v) in row.iter().enumerate() {
+                let e = (v - mx).exp();
+                probs[b * c + j] = e;
+                z += e;
+            }
+            let mut best = 0;
+            for j in 0..c {
+                probs[b * c + j] /= z;
+                if probs[b * c + j] > probs[b * c + best] {
+                    best = j;
+                }
+            }
+            let lab = labels[b] as usize;
+            loss_sum += -probs[b * c + lab].max(1e-12).ln();
+            if best == lab {
+                correct += 1.0;
+            }
+        }
+        let val = Tensor::scalar(loss_sum / n as f32);
+        let probs = Rc::new(probs);
+        let labels: Vec<i32> = labels.to_vec();
+        let out = self.push(
+            val,
+            Some(Box::new(move |g, grads| {
+                let s = g.data[0] / n as f32;
+                for b in 0..n {
+                    let lab = labels[b] as usize;
+                    for j in 0..c {
+                        let one = if j == lab { 1.0 } else { 0.0 };
+                        grads[logits.0].data[b * c + j] += s * (probs[b * c + j] - one);
+                    }
+                }
+            })),
+        );
+        (out, EvalBits { correct, loss_sum })
+    }
+
+    // -----------------------------------------------------------------
+    // θ machinery
+    // -----------------------------------------------------------------
+
+    /// Row-wise softmax of θ `[c, k]` with ineligible columns masked out
+    /// (probability 0, no gradient) — a CU whose descriptor cannot run the
+    /// layer's op never receives channels or gradient pressure.
+    pub fn softmax_rows_masked(&mut self, theta: Var, mask: &[bool]) -> Var {
+        let tv = self.rc(theta);
+        let (c, k) = (tv.shape[0], tv.shape[1]);
+        debug_assert_eq!(mask.len(), k);
+        let mut p = vec![0.0f32; c * k];
+        for r in 0..c {
+            let row = &tv.data[r * k..(r + 1) * k];
+            let mx = row
+                .iter()
+                .zip(mask)
+                .filter(|&(_, &m)| m)
+                .map(|(&v, _)| v)
+                .fold(f32::MIN, f32::max);
+            let mut z = 0.0f32;
+            for j in 0..k {
+                if mask[j] {
+                    let e = (row[j] - mx).exp();
+                    p[r * k + j] = e;
+                    z += e;
+                }
+            }
+            for j in 0..k {
+                p[r * k + j] /= z;
+            }
+        }
+        let val = Tensor::new(vec![c, k], p.clone());
+        let p = Rc::new(p);
+        let mask: Vec<bool> = mask.to_vec();
+        self.push(
+            val,
+            Some(Box::new(move |g, grads| {
+                for r in 0..c {
+                    let mut dot = 0.0f32;
+                    for j in 0..k {
+                        dot += g.data[r * k + j] * p[r * k + j];
+                    }
+                    for j in 0..k {
+                        if mask[j] {
+                            grads[theta.0].data[r * k + j] +=
+                                p[r * k + j] * (g.data[r * k + j] - dot);
+                        }
+                    }
+                }
+            })),
+        )
+    }
+
+    /// Eq. 5 effective weights for a K-CU platform:
+    /// `W_eff[c] = Σ_k p[c,k] · Q_k(W[c])` where `Q_k` is the fake-quant
+    /// of CU column k. Straight-through for W (`Σ_k p = 1` over the
+    /// unmasked columns); `dθ_k = ⟨g, Q_k(W)⟩` per row.
+    pub fn effective_weights(&mut self, w: Var, probs: Var, quants: &[QuantKind]) -> Var {
+        let (wv, pv) = (self.rc(w), self.rc(probs));
+        let (c, f) = (wv.shape[0], wv.shape[1]);
+        let k = pv.shape[1];
+        debug_assert_eq!(pv.shape[0], c);
+        debug_assert_eq!(quants.len(), k);
+        // quantized branches, one [c, f] tensor per CU column
+        let mut qs: Vec<Vec<f32>> = Vec::with_capacity(k);
+        for &q in quants {
+            let mut out = vec![0.0f32; c * f];
+            for r in 0..c {
+                q.quant_row(&wv.data[r * f..(r + 1) * f], &mut out[r * f..(r + 1) * f]);
+            }
+            qs.push(out);
+        }
+        let mut y = vec![0.0f32; c * f];
+        for r in 0..c {
+            for (col, q) in qs.iter().enumerate() {
+                let p = pv.data[r * k + col];
+                if p == 0.0 {
+                    continue;
+                }
+                for i in 0..f {
+                    y[r * f + i] += p * q[r * f + i];
+                }
+            }
+        }
+        let val = Tensor::new(vec![c, f], y);
+        let qs = Rc::new(qs);
+        let saved_p = Rc::clone(&pv);
+        self.push(
+            val,
+            Some(Box::new(move |g, grads| {
+                for r in 0..c {
+                    // STE: each branch passes g through scaled by its
+                    // probability; the probabilities sum to 1 over the
+                    // unmasked columns.
+                    let psum: f32 = (0..k).map(|col| saved_p.data[r * k + col]).sum();
+                    for i in 0..f {
+                        grads[w.0].data[r * f + i] += psum * g.data[r * f + i];
+                    }
+                    for (col, q) in qs.iter().enumerate() {
+                        let mut dot = 0.0f32;
+                        for i in 0..f {
+                            dot += g.data[r * f + i] * q[r * f + i];
+                        }
+                        grads[probs.0].data[r * k + col] += dot;
+                    }
+                }
+            })),
+        )
+    }
+
+    /// Standalone per-row fake-quant with the straight-through estimator
+    /// (identity gradient) — the fixed-precision layers' weight path.
+    pub fn fake_quant_ste(&mut self, w: Var, kind: QuantKind) -> Var {
+        let wv = self.rc(w);
+        let (c, f) = (wv.shape[0], wv.shape[1]);
+        let mut y = vec![0.0f32; c * f];
+        for r in 0..c {
+            kind.quant_row(&wv.data[r * f..(r + 1) * f], &mut y[r * f..(r + 1) * f]);
+        }
+        let val = Tensor::new(vec![c, f], y);
+        self.push(
+            val,
+            Some(Box::new(move |g, grads| {
+                acc(grads, w.0, &g.data);
+            })),
+        )
+    }
+
+    /// Column sums of `[c, k]` → expected per-CU channel counts `[k]`.
+    pub fn col_sum(&mut self, p: Var) -> Var {
+        let pv = self.rc(p);
+        let (c, k) = (pv.shape[0], pv.shape[1]);
+        let mut y = vec![0.0f32; k];
+        for r in 0..c {
+            for j in 0..k {
+                y[j] += pv.data[r * k + j];
+            }
+        }
+        let val = Tensor::new(vec![k], y);
+        self.push(
+            val,
+            Some(Box::new(move |g, grads| {
+                for r in 0..c {
+                    for j in 0..k {
+                        grads[p.0].data[r * k + j] += g.data[j];
+                    }
+                }
+            })),
+        )
+    }
+
+    /// Differentiable per-layer cost `[latency_cycles, energy_uj]` from
+    /// expected channel counts `n [K]`.
+    ///
+    /// Each CU's cycles are the piecewise-linear interpolation of the
+    /// integer `soc::analytical::cu_cycles` between `⌊n⌋` and `⌈n⌉` — the
+    /// value is *exact* at integer counts, so the in-graph cost model and
+    /// the deployment simulator can never disagree on a discretized
+    /// mapping. Latency is the max (or sum, when `sequential`) of the CU
+    /// stages; energy mirrors `analytical::execute` (active + idle share).
+    /// Backward feeds each count its local interpolation slope, with the
+    /// latency subgradient going to the argmax stage.
+    pub fn layer_cost(
+        &mut self,
+        n: Var,
+        layer: &Layer,
+        cus: &'static [CuSpec],
+        p_idle_mw: f64,
+        freq_mhz: f64,
+        sequential: bool,
+    ) -> Var {
+        let nv = self.rc(n);
+        let k = cus.len();
+        debug_assert_eq!(nv.elem_count(), k);
+        let counts: Vec<f64> = nv.data.iter().map(|&v| v as f64).collect();
+        let us_per_cycle = 1.0 / freq_mhz;
+        let e = eval_layer_cost(cus, layer, &counts, p_idle_mw, us_per_cycle, sequential);
+        let val = Tensor::new(vec![2], vec![e.latency as f32, e.energy_uj as f32]);
+        let p_act: Vec<f64> = cus.iter().map(|c| c.p_act_mw).collect();
+        let (slope, argmax) = (e.slopes, e.argmax);
+        self.push(
+            val,
+            Some(Box::new(move |g, grads| {
+                let (g_lat, g_en) = (g.data[0] as f64, g.data[1] as f64);
+                for j in 0..k {
+                    let on_lat = sequential || j == argmax;
+                    let mut d_c = g_en * 1e-3 * p_act[j] * us_per_cycle;
+                    if on_lat {
+                        d_c += g_lat + g_en * 1e-3 * p_idle_mw * us_per_cycle;
+                    }
+                    grads[n.0].data[j] += (d_c * slope[j]) as f32;
+                }
+            })),
+        )
+    }
+}
+
+/// One evaluation of the differentiable cost forward — the *single*
+/// implementation shared by [`Tape::layer_cost`] and the host-side
+/// consumers (cost report, cost-scale normalization), so the report and
+/// the in-graph objective cannot drift apart.
+pub struct LayerCostEval {
+    /// interpolated per-CU cycles at the (fractional) counts
+    pub cycles: Vec<f64>,
+    /// local interpolation slope per CU (d cycles / d count)
+    pub slopes: Vec<f64>,
+    /// max (or sum, when sequential) of the CU stages
+    pub latency: f64,
+    /// index of the latency-carrying stage (`usize::MAX` when sequential)
+    pub argmax: usize,
+    /// active + idle energy, matching `analytical::execute`
+    pub energy_uj: f64,
+}
+
+/// Cost of one layer at fractional per-CU `counts` (see [`LayerCostEval`]).
+pub fn eval_layer_cost(
+    cus: &[CuSpec],
+    layer: &Layer,
+    counts: &[f64],
+    p_idle_mw: f64,
+    us_per_cycle: f64,
+    sequential: bool,
+) -> LayerCostEval {
+    let k = cus.len();
+    debug_assert_eq!(counts.len(), k);
+    let mut cycles = vec![0.0f64; k];
+    let mut slopes = vec![0.0f64; k];
+    for (j, cu) in cus.iter().enumerate() {
+        let (v, s) = interp_cu_cycles(cu, layer, counts[j]);
+        cycles[j] = v;
+        slopes[j] = s;
+    }
+    let (latency, argmax) = if sequential {
+        (cycles.iter().sum::<f64>(), usize::MAX)
+    } else {
+        let mut best = 0;
+        for j in 1..k {
+            if cycles[j] > cycles[best] {
+                best = j;
+            }
+        }
+        (cycles[best], best)
+    };
+    let active_nj: f64 = cus
+        .iter()
+        .zip(&cycles)
+        .map(|(cu, &c)| cu.p_act_mw * c * us_per_cycle)
+        .sum();
+    let energy_uj = (active_nj + p_idle_mw * latency * us_per_cycle) * 1e-3;
+    LayerCostEval {
+        cycles,
+        slopes,
+        latency,
+        argmax,
+        energy_uj,
+    }
+}
+
+/// Interpolated analytical cycles of a *fractional* channel count, plus
+/// the local slope. Exact at integer counts by construction.
+pub fn interp_cu_cycles(cu: &CuSpec, layer: &Layer, x: f64) -> (f64, f64) {
+    let x = x.max(0.0);
+    let lo = x.floor() as usize;
+    let frac = x - lo as f64;
+    let c_lo = cu_cycles(cu, layer, lo) as f64;
+    let c_hi = cu_cycles(cu, layer, lo + 1) as f64;
+    let slope = c_hi - c_lo;
+    (c_lo + frac * slope, slope)
+}
+
+// ---------------------------------------------------------------------------
+// conv plumbing
+// ---------------------------------------------------------------------------
+
+/// 'SAME' output geometry: `(oh, ow, pad_begin)`.
+fn same_geometry(h: usize, w: usize, k: usize, stride: usize) -> (usize, usize, usize) {
+    let oh = h.div_ceil(stride);
+    let ow = w.div_ceil(stride);
+    let pad_total = ((oh - 1) * stride + k).saturating_sub(h);
+    (oh, ow, pad_total / 2)
+}
+
+/// Patch matrix `[n·oh·ow, k·k·cin]` (column layout `(ky·k+kx)·cin + ci`).
+fn im2col(x: &Tensor, k: usize, stride: usize) -> (Tensor, usize, usize) {
+    let (n, h, w, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow, pad) = same_geometry(h, w, k, stride);
+    let f = k * k * cin;
+    let mut cols = vec![0.0f32; n * oh * ow * f];
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((b * oh + oy) * ow + ox) * f;
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((b * h + iy as usize) * w + ix as usize) * cin;
+                        let dst = row + (ky * k + kx) * cin;
+                        cols[dst..dst + cin].copy_from_slice(&x.data[src..src + cin]);
+                    }
+                }
+            }
+        }
+    }
+    (Tensor::new(vec![n * oh * ow, f], cols), oh, ow)
+}
+
+/// Scatter `dcols` back onto the input gradient (inverse of [`im2col`]).
+#[allow(clippy::too_many_arguments)]
+fn col2im(
+    dcols: &[f32],
+    dx: &mut [f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    k: usize,
+    stride: usize,
+    oh: usize,
+    ow: usize,
+) {
+    let pad = {
+        let pad_total = ((oh - 1) * stride + k).saturating_sub(h);
+        pad_total / 2
+    };
+    let f = k * k * cin;
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((b * oh + oy) * ow + ox) * f;
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let dst = ((b * h + iy as usize) * w + ix as usize) * cin;
+                        let src = row + (ky * k + kx) * cin;
+                        for ci in 0..cin {
+                            dx[dst + ci] += dcols[src + ci];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dw_forward(
+    x: &[f32],
+    w: &[f32],
+    y: &mut [f32],
+    n: usize,
+    h: usize,
+    ww: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) {
+    let (oh, ow, _) = same_geometry(h, ww, k, stride);
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let out = ((b * oh + oy) * ow + ox) * c;
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= ww as isize {
+                            continue;
+                        }
+                        let src = ((b * h + iy as usize) * ww + ix as usize) * c;
+                        let wi = ky * k + kx;
+                        for ch in 0..c {
+                            y[out + ch] += x[src + ch] * w[ch * k * k + wi];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dw_backward(
+    x: &[f32],
+    w: &[f32],
+    g: &[f32],
+    dx: &mut [f32],
+    dw: &mut [f32],
+    n: usize,
+    h: usize,
+    ww: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) {
+    let (oh, ow, _) = same_geometry(h, ww, k, stride);
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let out = ((b * oh + oy) * ow + ox) * c;
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= ww as isize {
+                            continue;
+                        }
+                        let src = ((b * h + iy as usize) * ww + ix as usize) * c;
+                        let wi = ky * k + kx;
+                        for ch in 0..c {
+                            dx[src + ch] += g[out + ch] * w[ch * k * k + wi];
+                            dw[ch * k * k + wi] += g[out + ch] * x[src + ch];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backward_accumulates_shared_operands() {
+        // y = (a + a) summed: dy/da = 2 everywhere
+        let mut t = Tape::new();
+        let a = t.leaf(Tensor::new(vec![3], vec![1.0, -2.0, 0.5]));
+        let s = t.add(a, a);
+        let loss = t.sum_all(s);
+        let g = t.grad_of(loss, a);
+        assert_eq!(g.data, vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn quantizers_match_reference_semantics() {
+        let row = [0.5f32, -1.0, 0.02, 0.0];
+        let mut q8 = [0.0f32; 4];
+        QuantKind::Int8.quant_row(&row, &mut q8);
+        let scale = 1.0 / 127.0;
+        assert!((q8[1] + 1.0).abs() < 1e-6);
+        assert!((q8[0] - (0.5 / scale).round() * scale).abs() < 1e-6);
+        let mut qt = [0.0f32; 4];
+        QuantKind::Ternary.quant_row(&row, &mut qt);
+        // thr = 0.05; kept = {0.5, 1.0}; scale = 0.75
+        assert_eq!(qt, [0.75, -0.75, 0.0, 0.0]);
+        let mut qi = [0.0f32; 4];
+        QuantKind::Identity.quant_row(&row, &mut qi);
+        assert_eq!(qi, row);
+    }
+
+    #[test]
+    fn interp_is_exact_at_integers() {
+        let p = crate::soc::Platform::diana();
+        let layer = Layer {
+            name: "t".into(),
+            ltype: crate::soc::LayerType::Conv,
+            cin: 16,
+            cout: 32,
+            k: 3,
+            ox: 8,
+            oy: 8,
+            stride: 1,
+            searchable: true,
+        };
+        for cu in p.cus() {
+            for n in [0usize, 1, 7, 32] {
+                let (v, _) = interp_cu_cycles(cu, &layer, n as f64);
+                assert_eq!(v, cu_cycles(cu, &layer, n) as f64, "{} n={n}", cu.name);
+            }
+        }
+    }
+}

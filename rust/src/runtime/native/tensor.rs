@@ -1,0 +1,166 @@
+//! Dense f32 host tensors and the three matmul kernels the native
+//! training engine is built on.
+//!
+//! The kernels are plain safe Rust tuned for auto-vectorization: the
+//! inner loops run over contiguous row slices (`iter().zip()` so the
+//! compiler can prove no aliasing) and the three variants cover exactly
+//! the access patterns reverse-mode conv/FC need — `A·B`, `A·Bᵀ`
+//! (im2col · flattened-weightᵀ and its `dA`), and `Aᵀ·B` (the `dW`
+//! reduction) — without ever materializing a transposed copy.
+
+/// A shaped dense f32 buffer (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor {
+            shape: Vec::new(),
+            data: vec![v],
+        }
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Scalar value (panics if not a single element).
+    pub fn item(&self) -> f32 {
+        debug_assert_eq!(self.data.len(), 1);
+        self.data[0]
+    }
+}
+
+/// `C[m,n] = A[m,k] · B[k,n]`.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for p in 0..k {
+            let aip = a[i * k + p];
+            if aip == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += aip * bv;
+            }
+        }
+    }
+    c
+}
+
+/// `C[m,n] = A[m,k] · B[n,k]ᵀ` (row-by-row dot products).
+pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *cv = acc;
+        }
+    }
+    c
+}
+
+/// `C[k,n] = A[m,k]ᵀ · B[m,n]` (rank-1 accumulation over rows of A/B).
+pub fn matmul_at(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    let mut c = vec![0.0f32; k * n];
+    for r in 0..m {
+        let brow = &b[r * n..(r + 1) * n];
+        for i in 0..k {
+            let ari = a[r * k + i];
+            if ari == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += ari * bv;
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for p in 0..k {
+                    c[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let (m, k, n) = (3, 5, 4);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.7).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.3).cos()).collect();
+        let want = naive(&a, &b, m, k, n);
+        assert_eq!(matmul(&a, &b, m, k, n), want);
+        // bt: feed B transposed
+        let mut bt = vec![0.0; k * n];
+        for p in 0..k {
+            for j in 0..n {
+                bt[j * k + p] = b[p * n + j];
+            }
+        }
+        let got = matmul_bt(&a, &bt, m, k, n);
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-5);
+        }
+        // at: feed A transposed
+        let mut at = vec![0.0; m * k];
+        for i in 0..m {
+            for p in 0..k {
+                at[p * m + i] = a[i * k + p];
+            }
+        }
+        let got = matmul_at(&at, &b, k, m, n);
+        // note: matmul_at computes Aᵀ·B with A of shape [m̃=k, k̃=m]
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn tensor_basics() {
+        let t = Tensor::zeros(vec![2, 3]);
+        assert_eq!(t.elem_count(), 6);
+        assert_eq!(Tensor::scalar(2.5).item(), 2.5);
+    }
+}

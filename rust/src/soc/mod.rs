@@ -6,10 +6,10 @@
 //!
 //! * [`spec`] — the platform registry: [`PlatformSpec`] / [`CuSpec`] /
 //!   [`CuModel`] descriptors loaded from `hw/<name>.json` (schema:
-//!   `hw/README.md`). DIANA, Darkside, and the synthetic tri-CU `trident`
-//!   SoC ship as built-ins; any further descriptor dropped under `hw/` is
-//!   discovered at runtime — CU counts are unbounded and nothing
-//!   downstream hardcodes "two";
+//!   `hw/README.md`). DIANA, Darkside, the synthetic tri-CU `trident`,
+//!   and the GAP9-style `gap9` SoC ship as built-ins; any further
+//!   descriptor dropped under `hw/` is discovered at runtime — CU counts
+//!   are unbounded and nothing downstream hardcodes "two";
 //! * [`hw`] — the shared detailed-sim constants (`hw/constants.json`,
 //!   also read by the Python differentiable cost models);
 //! * [`model`] — layers, N-way mappings, execution reports;
@@ -43,9 +43,12 @@ pub fn layers_from_manifest(m: &Manifest) -> Result<Vec<Layer>> {
 }
 
 /// Names of sequential-stage layers for a manifest (the DW→PW dependency
-/// of the `dw_vs_dwsep` ImageNet search space).
+/// of the `dw_vs_dwsep` ImageNet search space). Only the Darkside *split*
+/// search space has serial CU stages; channel-split supernets (the native
+/// backend's K-way spaces) run their CU stages concurrently even on the
+/// same variant names.
 pub fn sequential_layers(m: &Manifest) -> Vec<String> {
-    if m.variant.contains("imgnet") && m.platform == "darkside" {
+    if m.variant.contains("imgnet") && m.platform == "darkside" && m.search_kind == "split" {
         m.layers
             .iter()
             .filter(|l| l.searchable)

@@ -6,10 +6,11 @@
 //! [`CuModel`] cost model. Specs are parsed from the JSON descriptors under
 //! `hw/` (schema: `hw/README.md`) with the in-tree `util::json`.
 //!
-//! DIANA, Darkside, and the synthetic tri-CU `trident` SoC are built in:
-//! registered at first use from the checkout's `hw/<name>.json` when
-//! present (so descriptors are runtime-tunable, like `hw/constants.json`),
-//! falling back to the embedded copies of the same files.
+//! DIANA, Darkside, the synthetic tri-CU `trident`, and the GAP9-style
+//! `gap9` SoC are built in: registered at first use from the checkout's
+//! `hw/<name>.json` when present (so descriptors are runtime-tunable,
+//! like `hw/constants.json`), falling back to the embedded copies of the
+//! same files.
 //! [`Platform::get`] additionally discovers any other `hw/<name>.json`
 //! descriptor at runtime, so new SoCs need no simulator changes.
 //! [`Platform`] itself is a `Copy` handle onto the registered
@@ -31,6 +32,9 @@ use super::model::LayerType;
 pub const DIANA_JSON: &str = include_str!("../../../hw/diana.json");
 pub const DARKSIDE_JSON: &str = include_str!("../../../hw/darkside.json");
 pub const TRIDENT_JSON: &str = include_str!("../../../hw/trident.json");
+/// GAP9-style 3-CU edge SoC: 9-core cluster + NE16 conv engine + fabric
+/// controller.
+pub const GAP9_JSON: &str = include_str!("../../../hw/gap9.json");
 
 /// Parameterized per-CU cost model (exact formulas:
 /// `soc::analytical::cu_cycles`).
@@ -349,6 +353,7 @@ fn registry() -> &'static Mutex<Registry> {
             ("diana", DIANA_JSON),
             ("darkside", DARKSIDE_JSON),
             ("trident", TRIDENT_JSON),
+            ("gap9", GAP9_JSON),
         ] {
             let spec: &'static PlatformSpec = Box::leak(Box::new(load_builtin(name, text)));
             m.insert(spec.name.clone(), spec);
@@ -422,6 +427,10 @@ impl Platform {
         Platform::get("trident").expect("built-in trident spec")
     }
 
+    pub fn gap9() -> Platform {
+        Platform::get("gap9").expect("built-in gap9 spec")
+    }
+
     pub fn name(&self) -> &'static str {
         &self.spec.name
     }
@@ -477,19 +486,19 @@ mod tests {
 
     #[test]
     fn builtins_register_and_resolve() {
-        for (name, n_cus) in [("diana", 2), ("darkside", 2), ("trident", 3)] {
+        for (name, n_cus) in [("diana", 2), ("darkside", 2), ("trident", 3), ("gap9", 3)] {
             let p = Platform::get(name).unwrap();
             assert_eq!(p.name(), name);
             assert_eq!(p.n_cus(), n_cus);
             assert!(p.freq_mhz() > 0.0);
         }
-        assert!(platform_names().len() >= 3);
+        assert!(platform_names().len() >= 4);
         assert!("nonexistent-soc".parse::<Platform>().is_err());
     }
 
     #[test]
     fn spec_json_roundtrip() {
-        for text in [DIANA_JSON, DARKSIDE_JSON, TRIDENT_JSON] {
+        for text in [DIANA_JSON, DARKSIDE_JSON, TRIDENT_JSON, GAP9_JSON] {
             let spec = PlatformSpec::parse(text).unwrap();
             let re = PlatformSpec::parse(&spec.to_json().to_string_pretty()).unwrap();
             assert_eq!(spec, re);

@@ -10,7 +10,7 @@ use odimo::config::ExperimentConfig;
 use odimo::coordinator::{baselines, run_baseline, Baseline, Trainer};
 use odimo::datasets::Split;
 use odimo::mapping::SearchKind;
-use odimo::runtime::StepHparams;
+use odimo::runtime::{BackendKind, ModelBackend, StepHparams};
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = odimo::repo_root().join("artifacts");
@@ -27,8 +27,7 @@ fn trainer(variant: &str) -> Option<Trainer> {
     let mut cfg = ExperimentConfig::for_variant(variant);
     cfg.steps_per_epoch = 4;
     cfg.eval_batches = 2;
-    let client = odimo::runtime::cpu_client().expect("pjrt client");
-    Some(Trainer::new(&client, &dir, cfg).expect("trainer loads"))
+    Some(Trainer::create(&dir, cfg, Some(BackendKind::Xla)).expect("trainer loads"))
 }
 
 fn hp(lam: f32, lr_th: f32) -> StepHparams {
@@ -55,8 +54,8 @@ fn diana_suite() {
     let (acc, loss) = tr.evaluate(&state, Split::Val).expect("eval");
     assert!((0.0..=1.0).contains(&acc));
     assert!(loss.is_finite());
-    let (mat, totals) = tr.rt.cost_report(&state).expect("cost");
-    assert_eq!(mat.len(), tr.rt.manifest.layers.len() * 4);
+    let (mat, totals) = tr.backend.cost_report(&state).expect("cost");
+    assert_eq!(mat.len(), tr.manifest().layers.len() * 4);
     assert!(totals[0] > 0.0 && totals[1] > 0.0);
 
     // -- eval determinism ------------------------------------------------------
@@ -67,7 +66,7 @@ fn diana_suite() {
 
     // -- θ freeze roundtrip + drift-free frozen phases ------------------------
     let mapping = tr.discretize_all(&state).expect("discretize");
-    assert_eq!(mapping.layers.len(), tr.rt.manifest.layers.len());
+    assert_eq!(mapping.layers.len(), tr.manifest().layers.len());
     tr.freeze_mapping(&mut state, &mapping).expect("freeze");
     let mapping2 = tr.discretize_all(&state).expect("discretize again");
     for (a, b) in mapping.layers.iter().zip(&mapping2.layers) {
@@ -89,7 +88,7 @@ fn diana_suite() {
     assert_ne!(before, after, "θ did not move during search");
 
     // -- strong λ finds a cheaper-than-all-digital mapping ---------------------
-    let lam = (50.0 / tr.rt.manifest.cost_scale.latency_cycles) as f32;
+    let lam = (50.0 / tr.manifest().cost_scale.latency_cycles) as f32;
     for e in 2..6 {
         tr.run_epoch(&mut state, hp(lam, 0.2), e).expect("epoch");
     }
@@ -117,8 +116,7 @@ fn diana_suite() {
         .layers
         .iter()
         .find(|l| {
-            tr.rt
-                .manifest
+            tr.manifest()
                 .layers
                 .iter()
                 .any(|s| s.searchable && s.name == l.layer)
@@ -133,7 +131,7 @@ fn diana_suite() {
     assert!(rec.det_cycles > rec.ana_cycles, "detailed adds overheads");
     assert!(rec.offload_frac > 0.9);
     assert_eq!(rec.util.len(), tr.platform.n_cus());
-    assert_eq!(rec.per_layer.len(), tr.rt.manifest.layers.len());
+    assert_eq!(rec.per_layer.len(), tr.manifest().layers.len());
 }
 
 #[test]

@@ -1,0 +1,521 @@
+//! Native-engine tests: finite-difference gradient checks for every op,
+//! cost-model pinning against the analytical simulator, same-seed
+//! determinism, and end-to-end sweep feasibility on every built-in SoC.
+//!
+//! Gradient checks compare the tape's reverse-mode gradients against
+//! central differences of the recorded forward computation (f32 forward,
+//! ε = 1e-2, max relative error < 1e-2 — the acceptance bar). The
+//! straight-through fake-quant ops are non-differentiable by design;
+//! their *defined* gradient (identity) is asserted exactly instead.
+
+use odimo::config::ExperimentConfig;
+use odimo::coordinator::{sweep, Trainer};
+use odimo::datasets::rng::Rng;
+use odimo::mapping::SearchKind;
+use odimo::runtime::native::{QuantKind, Tape, Tensor, Var};
+use odimo::runtime::{BackendKind, ModelBackend, NativeBackend, StepHparams};
+use odimo::search::feasible_counts;
+use odimo::soc::{Layer, LayerType, Platform};
+
+// ---------------------------------------------------------------------------
+// gradient-check harness
+// ---------------------------------------------------------------------------
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::from_stream(seed, 0x6AD, 0);
+    (0..n).map(|_| 0.5 * rng.normal()).collect()
+}
+
+/// Check d(scalar objective)/d(input leaf) against central differences.
+///
+/// `build` records the objective on a fresh tape given the leaf data and
+/// returns `(tape, leaf var, objective var)`.
+fn grad_check<F>(name: &str, data: &[f32], build: F)
+where
+    F: Fn(&[f32]) -> (Tape, Var, Var),
+{
+    let (tape, leaf, obj) = build(data);
+    let analytic = tape.grad_of(obj, leaf);
+    assert_eq!(analytic.data.len(), data.len(), "{name}: grad shape");
+    const EPS: f32 = 1e-2;
+    let mut worst = 0.0f64;
+    for i in 0..data.len() {
+        let mut plus = data.to_vec();
+        plus[i] += EPS;
+        let mut minus = data.to_vec();
+        minus[i] -= EPS;
+        let (tp, _, op) = build(&plus);
+        let (tm, _, om) = build(&minus);
+        let fd = (tp.val(op).item() as f64 - tm.val(om).item() as f64) / (2.0 * EPS as f64);
+        let an = analytic.data[i] as f64;
+        let rel = (an - fd).abs() / an.abs().max(fd.abs()).max(1e-2);
+        worst = worst.max(rel);
+        assert!(
+            rel < 1e-2,
+            "{name}[{i}]: analytic {an:.6} vs central-diff {fd:.6} (rel {rel:.4})"
+        );
+    }
+    eprintln!("  grad_check {name}: max rel err {worst:.2e}");
+}
+
+/// Objective wrapper: random-weighted sum of the op output — a plain sum
+/// would feed the op a symmetric all-ones upstream gradient (degenerate
+/// for softmax/BN, whose backward vanishes under uniform g).
+fn weighted(tape: &mut Tape, v: Var, seed: u64) -> Var {
+    let n = tape.val(v).elem_count();
+    let w = rand_vec(n, seed ^ 0x5EED);
+    let shape = tape.val(v).shape.clone();
+    let wv = tape.leaf(Tensor::new(shape, w));
+    let p = tape.mul(v, wv);
+    tape.sum_all(p)
+}
+
+#[test]
+fn grad_matmul() {
+    let a0 = rand_vec(6, 1);
+    grad_check("matmul/a", &a0, |d| {
+        let mut t = Tape::new();
+        let a = t.leaf(Tensor::new(vec![2, 3], d.to_vec()));
+        let b = t.leaf(Tensor::new(vec![3, 2], rand_vec(6, 2)));
+        let y = t.matmul(a, b);
+        let o = weighted(&mut t, y, 4);
+        (t, a, o)
+    });
+    let b0 = rand_vec(6, 3);
+    grad_check("matmul/b", &b0, |d| {
+        let mut t = Tape::new();
+        let a = t.leaf(Tensor::new(vec![2, 3], rand_vec(6, 1)));
+        let b = t.leaf(Tensor::new(vec![3, 2], d.to_vec()));
+        let y = t.matmul(a, b);
+        let o = weighted(&mut t, y, 5);
+        (t, b, o)
+    });
+}
+
+#[test]
+fn grad_conv2d() {
+    // x: [1, 4, 4, 2], w: [3, 2*3*3] — stride 1 and 2
+    for stride in [1usize, 2] {
+        let x0 = rand_vec(32, 10 + stride as u64);
+        grad_check(&format!("conv2d/x s{stride}"), &x0, |d| {
+            let mut t = Tape::new();
+            let x = t.leaf(Tensor::new(vec![1, 4, 4, 2], d.to_vec()));
+            let w = t.leaf(Tensor::new(vec![3, 18], rand_vec(54, 20)));
+            let y = t.conv2d(x, w, 3, stride);
+            let o = weighted(&mut t, y, 21);
+            (t, x, o)
+        });
+        let w0 = rand_vec(54, 30 + stride as u64);
+        grad_check(&format!("conv2d/w s{stride}"), &w0, |d| {
+            let mut t = Tape::new();
+            let x = t.leaf(Tensor::new(vec![1, 4, 4, 2], rand_vec(32, 40)));
+            let w = t.leaf(Tensor::new(vec![3, 18], d.to_vec()));
+            let y = t.conv2d(x, w, 3, stride);
+            let o = weighted(&mut t, y, 22);
+            (t, w, o)
+        });
+    }
+}
+
+#[test]
+fn grad_dw_conv2d() {
+    for stride in [1usize, 2] {
+        let x0 = rand_vec(48, 50 + stride as u64);
+        grad_check(&format!("dw/x s{stride}"), &x0, |d| {
+            let mut t = Tape::new();
+            let x = t.leaf(Tensor::new(vec![1, 4, 4, 3], d.to_vec()));
+            let w = t.leaf(Tensor::new(vec![3, 9], rand_vec(27, 60)));
+            let y = t.dw_conv2d(x, w, 3, stride);
+            let o = weighted(&mut t, y, 61);
+            (t, x, o)
+        });
+        let w0 = rand_vec(27, 70 + stride as u64);
+        grad_check(&format!("dw/w s{stride}"), &w0, |d| {
+            let mut t = Tape::new();
+            let x = t.leaf(Tensor::new(vec![1, 4, 4, 3], rand_vec(48, 80)));
+            let w = t.leaf(Tensor::new(vec![3, 9], d.to_vec()));
+            let y = t.dw_conv2d(x, w, 3, stride);
+            let o = weighted(&mut t, y, 62);
+            (t, w, o)
+        });
+    }
+}
+
+#[test]
+fn grad_relu() {
+    // inputs pushed ≥ 0.2 away from the kink so ±ε stays on one side
+    let x0: Vec<f32> = rand_vec(8, 90)
+        .into_iter()
+        .map(|v| if v >= 0.0 { v + 0.2 } else { v - 0.2 })
+        .collect();
+    grad_check("relu/x", &x0, |d| {
+        let mut t = Tape::new();
+        let x = t.leaf(Tensor::new(vec![8], d.to_vec()));
+        let y = t.relu(x);
+        let o = weighted(&mut t, y, 91);
+        (t, x, o)
+    });
+}
+
+#[test]
+fn grad_batch_norm() {
+    let x0 = rand_vec(12, 100);
+    grad_check("bn/x", &x0, |d| {
+        let mut t = Tape::new();
+        let x = t.leaf(Tensor::new(vec![4, 3], d.to_vec()));
+        let s = t.leaf(Tensor::new(vec![3], vec![1.2, 0.8, 1.0]));
+        let b = t.leaf(Tensor::new(vec![3], vec![0.1, -0.2, 0.0]));
+        let (y, _, _) = t.batch_norm_train(x, s, b);
+        let o = weighted(&mut t, y, 101);
+        (t, x, o)
+    });
+    let s0 = vec![1.1f32, 0.9, 1.3];
+    grad_check("bn/scale", &s0, |d| {
+        let mut t = Tape::new();
+        let x = t.leaf(Tensor::new(vec![4, 3], rand_vec(12, 100)));
+        let s = t.leaf(Tensor::new(vec![3], d.to_vec()));
+        let b = t.leaf(Tensor::new(vec![3], vec![0.1, -0.2, 0.0]));
+        let (y, _, _) = t.batch_norm_train(x, s, b);
+        let o = weighted(&mut t, y, 102);
+        (t, s, o)
+    });
+    let b0 = vec![0.3f32, -0.1, 0.2];
+    grad_check("bn/bias", &b0, |d| {
+        let mut t = Tape::new();
+        let x = t.leaf(Tensor::new(vec![4, 3], rand_vec(12, 100)));
+        let s = t.leaf(Tensor::new(vec![3], vec![1.2, 0.8, 1.0]));
+        let b = t.leaf(Tensor::new(vec![3], d.to_vec()));
+        let (y, _, _) = t.batch_norm_train(x, s, b);
+        let o = weighted(&mut t, y, 103);
+        (t, b, o)
+    });
+}
+
+#[test]
+fn grad_pool_bias_affine() {
+    let x0 = rand_vec(2 * 2 * 2 * 3, 110);
+    grad_check("gap/x", &x0, |d| {
+        let mut t = Tape::new();
+        let x = t.leaf(Tensor::new(vec![2, 2, 2, 3], d.to_vec()));
+        let y = t.global_avg_pool(x);
+        let o = weighted(&mut t, y, 111);
+        (t, x, o)
+    });
+    let b0 = rand_vec(3, 112);
+    grad_check("add_bias/b", &b0, |d| {
+        let mut t = Tape::new();
+        let x = t.leaf(Tensor::new(vec![2, 3], rand_vec(6, 113)));
+        let b = t.leaf(Tensor::new(vec![3], d.to_vec()));
+        let y = t.add_bias(x, b);
+        let o = weighted(&mut t, y, 115);
+        (t, b, o)
+    });
+    let x1 = rand_vec(6, 114);
+    grad_check("channel_affine/x", &x1, |d| {
+        let mut t = Tape::new();
+        let x = t.leaf(Tensor::new(vec![2, 3], d.to_vec()));
+        let y = t.channel_affine(x, vec![1.5, 0.5, 2.0], vec![0.1, 0.0, -0.3]);
+        let o = weighted(&mut t, y, 116);
+        (t, x, o)
+    });
+}
+
+#[test]
+fn grad_softmax_ce() {
+    let l0 = rand_vec(8, 120);
+    grad_check("ce/logits", &l0, |d| {
+        let mut t = Tape::new();
+        let logits = t.leaf(Tensor::new(vec![2, 4], d.to_vec()));
+        let (loss, _) = t.softmax_ce(logits, &[1, 3]);
+        (t, logits, loss)
+    });
+}
+
+#[test]
+fn grad_theta_path() {
+    // θ → masked softmax → effective weights (with a masked column):
+    // the full differentiable-mapping path of the search
+    let th0 = rand_vec(3 * 3, 130);
+    let quants = [QuantKind::Int8, QuantKind::Identity, QuantKind::Ternary];
+    let mask = [true, false, true];
+    grad_check("theta/softmax+effw", &th0, |d| {
+        let mut t = Tape::new();
+        let th = t.leaf(Tensor::new(vec![3, 3], d.to_vec()));
+        let w = t.leaf(Tensor::new(vec![3, 8], rand_vec(24, 131)));
+        let p = t.softmax_rows_masked(th, &mask);
+        let weff = t.effective_weights(w, p, &quants);
+        let o = weighted(&mut t, weff, 132);
+        (t, th, o)
+    });
+    // counts path: θ → softmax → col_sum → weighted scalar
+    grad_check("theta/col_sum", &th0, |d| {
+        let mut t = Tape::new();
+        let th = t.leaf(Tensor::new(vec![3, 3], d.to_vec()));
+        let p = t.softmax_rows_masked(th, &mask);
+        let n = t.col_sum(p);
+        let o = weighted(&mut t, n, 133);
+        (t, th, o)
+    });
+}
+
+#[test]
+fn grad_layer_cost() {
+    // fractional counts away from integer kinks: the op is locally linear
+    // there, so central differences match the interpolation slope exactly
+    let layer = Layer {
+        name: "t".into(),
+        ltype: LayerType::Conv,
+        cin: 16,
+        cout: 32,
+        k: 3,
+        ox: 8,
+        oy: 8,
+        stride: 1,
+        searchable: true,
+    };
+    let platform = Platform::diana();
+    let n0 = vec![12.4f32, 19.6];
+    let l2 = layer.clone();
+    grad_check("layer_cost/latency+energy", &n0, move |d| {
+        let mut t = Tape::new();
+        let n = t.leaf(Tensor::new(vec![2], d.to_vec()));
+        let lc = t.layer_cost(
+            n,
+            &l2,
+            platform.cus(),
+            platform.p_idle_mw(),
+            platform.freq_mhz(),
+            false,
+        );
+        // mix both components so each count feeds the objective
+        let o = t.weighted_pair(lc, 1e-3, 5.0);
+        (t, n, o)
+    });
+}
+
+#[test]
+fn ste_gradient_is_identity() {
+    // the quantizers are step functions — their STE backward is the
+    // *defined* identity, asserted exactly (FD would see zero slope)
+    for kind in [QuantKind::Int8, QuantKind::Ternary] {
+        let mut t = Tape::new();
+        let w = t.leaf(Tensor::new(vec![2, 4], rand_vec(8, 140)));
+        let q = t.fake_quant_ste(w, kind);
+        let o = t.sum_all(q);
+        let g = t.grad_of(o, w);
+        assert_eq!(g.data, vec![1.0; 8], "{kind:?} STE must pass gradient through");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// cost model pinned to the analytical simulator
+// ---------------------------------------------------------------------------
+
+#[test]
+fn frozen_cost_report_matches_analytical_simulator() {
+    let be = NativeBackend::build("trident_tiny_tiny").expect("backend");
+    let tr = trainer_for("trident_tiny_tiny", 42);
+    let mut state = be.init_state(42).expect("init");
+    // freeze θ to the discretized mapping → expected counts are integral
+    let mapping = tr.discretize_all(&state).expect("discretize");
+    tr.freeze_mapping(&mut state, &mapping).expect("freeze");
+    let (_, totals) = be.cost_report(&state).expect("cost report");
+    let (ana, _) = tr.simulate(&mapping);
+    let rel = (totals[0] as f64 - ana.total_cycles as f64).abs() / ana.total_cycles as f64;
+    assert!(
+        rel < 1e-3,
+        "in-graph latency {} vs simulator {} (rel {rel})",
+        totals[0],
+        ana.total_cycles
+    );
+    let rel_e = (totals[1] as f64 - ana.energy_uj).abs() / ana.energy_uj;
+    assert!(
+        rel_e < 1e-3,
+        "in-graph energy {} vs simulator {} (rel {rel_e})",
+        totals[1],
+        ana.energy_uj
+    );
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end: train / sweep on the native backend
+// ---------------------------------------------------------------------------
+
+fn tiny_cfg(variant: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::for_variant(variant);
+    cfg.warmup_epochs = 1;
+    cfg.search_epochs = 1;
+    cfg.final_epochs = 1;
+    cfg.steps_per_epoch = 2;
+    cfg.eval_batches = 1;
+    cfg.lambdas = vec![0.1, 1.0, 10.0];
+    cfg
+}
+
+fn trainer_for(variant: &str, seed: i32) -> Trainer {
+    let mut cfg = tiny_cfg(variant);
+    cfg.seed = seed;
+    Trainer::create(
+        &odimo::repo_root().join("artifacts"),
+        cfg,
+        Some(BackendKind::Native),
+    )
+    .expect("native trainer")
+}
+
+#[test]
+fn native_train_step_moves_weights_and_theta() {
+    let tr = trainer_for("trident_tiny_tiny", 0);
+    assert_eq!(tr.kind, SearchKind::Channel);
+    let mut state = tr.init_state().expect("init");
+    let before_w = state.leaf_f32("params/stem/w").expect("w leaf");
+    let before_th = tr.theta_of(&state, "stem").expect("theta");
+    let hp = StepHparams {
+        lam: (1.0 / tr.manifest().cost_scale.latency_cycles) as f32,
+        cost_sel: 0.0,
+        lr_w: 1e-2,
+        lr_th: 5e-2,
+    };
+    let m = tr.run_epoch(&mut state, hp, 0).expect("epoch");
+    assert!(m.loss.is_finite() && m.loss > 0.0, "loss {m:?}");
+    assert!((0.0..=1.0).contains(&m.acc));
+    assert!(m.cost_lat > 0.0 && m.cost_energy > 0.0);
+    let after_w = state.leaf_f32("params/stem/w").expect("w leaf");
+    let after_th = tr.theta_of(&state, "stem").expect("theta");
+    assert_ne!(before_w, after_w, "W did not move");
+    assert_ne!(before_th, after_th, "θ did not move under λ > 0, lr_th > 0");
+    // masked θ columns stay pinned at the one-hot floor (dwe is conv-ineligible)
+    let k = tr.platform.n_cus();
+    for c in 0..after_th.len() / k {
+        assert_eq!(
+            after_th[c * k + 1],
+            -odimo::mapping::ONE_HOT_LOGIT,
+            "masked column moved at row {c}"
+        );
+    }
+    // eval is deterministic and well-formed
+    let (a1, l1) = tr.evaluate(&state, odimo::datasets::Split::Val).expect("eval");
+    let (a2, l2) = tr.evaluate(&state, odimo::datasets::Split::Val).expect("eval");
+    assert_eq!(a1, a2);
+    assert_eq!(l1, l2);
+    assert!((0.0..=1.0).contains(&a1));
+}
+
+#[test]
+fn evaluate_errors_on_zero_eval_batches() {
+    let mut cfg = tiny_cfg("trident_tiny_tiny");
+    cfg.eval_batches = 0;
+    let tr = Trainer::create(
+        &odimo::repo_root().join("artifacts"),
+        cfg,
+        Some(BackendKind::Native),
+    )
+    .expect("native trainer");
+    let state = tr.init_state().expect("init");
+    let err = tr
+        .evaluate(&state, odimo::datasets::Split::Val)
+        .expect_err("eval_batches = 0 must be an error, not NaN");
+    assert!(format!("{err:#}").contains("eval_batches"), "{err:#}");
+}
+
+/// The determinism satellite: two same-seed native runs produce identical
+/// RunRecords (modulo wall-clock timing, which is not part of the result).
+#[test]
+fn same_seed_native_sweeps_are_identical() {
+    let run = || {
+        let tr = trainer_for("diana_tiny_tiny", 7);
+        sweep(&tr).expect("sweep")
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.len(), b.len());
+    assert!(a.len() >= 3, "≥3 RunRecords expected, got {}", a.len());
+    for (ra, rb) in a.iter().zip(&b) {
+        assert_eq!(ra.lambda, rb.lambda);
+        assert_eq!(ra.val_acc, rb.val_acc, "val_acc drifted at λ={:?}", ra.lambda);
+        assert_eq!(ra.test_acc, rb.test_acc);
+        assert_eq!(ra.ana_cycles, rb.ana_cycles);
+        assert_eq!(ra.det_cycles, rb.det_cycles);
+        assert_eq!(ra.ana_energy_uj, rb.ana_energy_uj);
+        assert_eq!(ra.offload_frac, rb.offload_frac);
+        for (la, lb) in ra.mapping.layers.iter().zip(&rb.mapping.layers) {
+            assert_eq!(la, lb, "mapping drifted at λ={:?}", ra.lambda);
+        }
+    }
+}
+
+/// Acceptance path: native sweeps emit non-empty records whose
+/// discretized mappings pass the PR-2 feasibility check — on the paper
+/// SoCs and both JSON-defined 3-CU SoCs.
+#[test]
+fn native_sweep_feasible_on_all_builtin_socs() {
+    for soc in ["diana", "darkside", "trident", "gap9"] {
+        let tr = trainer_for(&format!("{soc}_tiny_tiny"), 3);
+        let recs = sweep(&tr).expect("sweep");
+        assert!(recs.len() >= 3, "{soc}: got {} records", recs.len());
+        let k = tr.platform.n_cus();
+        for r in &recs {
+            assert!(!r.per_layer.is_empty(), "{soc}: empty record");
+            assert_eq!(r.util.len(), k);
+            assert!(r.det_cycles > 0);
+            assert!(r.mapping.is_well_formed());
+            for (layer, asg) in tr.layers.iter().zip(&r.mapping.layers) {
+                assert!(
+                    feasible_counts(tr.platform, layer, &asg.counts(k)),
+                    "{soc} λ={:?}: layer {} infeasible: {:?}",
+                    r.lambda,
+                    layer.name,
+                    asg.counts(k)
+                );
+            }
+        }
+    }
+}
+
+/// Strong cost pressure must not *increase* the analytical cost of the
+/// discretized mapping relative to the λ→0 point (same seed, same data).
+#[test]
+fn lambda_pressure_is_monotone_in_the_right_direction() {
+    let run_at = |lam_rel: f64| {
+        let tr = trainer_for("trident_tiny_tiny", 11);
+        let mut state = tr.init_state().expect("init");
+        let hp = StepHparams {
+            lam: (lam_rel / tr.manifest().cost_scale.latency_cycles) as f32,
+            cost_sel: 0.0,
+            lr_w: 1e-2,
+            lr_th: 0.1,
+        };
+        for e in 0..4 {
+            tr.run_epoch(&mut state, hp, e).expect("epoch");
+        }
+        let mapping = tr.discretize_all(&state).expect("discretize");
+        let (ana, _) = tr.simulate(&mapping);
+        ana.total_cycles
+    };
+    let cheap = run_at(50.0);
+    let free = run_at(0.0);
+    assert!(
+        cheap <= free,
+        "strong λ mapping ({cheap}) costs more than λ=0 mapping ({free})"
+    );
+}
+
+#[test]
+fn backend_selection_and_state_contract() {
+    let be = NativeBackend::build("gap9_resnet20_c10").expect("gap9 native supernet");
+    assert_eq!(be.backend_name(), "native");
+    let m = be.manifest();
+    assert_eq!(m.platform, "gap9");
+    assert_eq!(m.search_kind, "channel");
+    // θ leaves are [cout, K] for the 3-CU SoC
+    let k = 3;
+    let stem = m.layers.iter().find(|l| l.name == "stem").unwrap();
+    assert_eq!(stem.theta_len, k * stem.cout);
+    let state = be.init_state(0).expect("init");
+    assert_eq!(state.leaves.len(), be.state_len());
+    // fixed variants drop θ but keep the same W/optimizer layout
+    let fx = NativeBackend::build("gap9_resnet20_c10_fixed").expect("fixed supernet");
+    assert_eq!(fx.manifest().search_kind, "fixed");
+    assert!(fx.state_specs().iter().all(|s| !s.name.ends_with("/theta")));
+    assert!(fx.state_len() < be.state_len());
+}

@@ -9,8 +9,13 @@ use odimo::experiments::{microbench_layers, socmap_point, SOCMAP_LAMBDAS};
 use odimo::mapping::{discretize, one_hot_theta, SearchKind};
 use odimo::soc::{analytical, detailed, LayerAssignment, Mapping, Platform, PlatformSpec};
 
-fn builtin_platforms() -> [Platform; 3] {
-    [Platform::diana(), Platform::darkside(), Platform::trident()]
+fn builtin_platforms() -> [Platform; 4] {
+    [
+        Platform::diana(),
+        Platform::darkside(),
+        Platform::trident(),
+        Platform::gap9(),
+    ]
 }
 
 // ---------------------------------------------------------------------------

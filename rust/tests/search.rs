@@ -12,8 +12,13 @@ use odimo::search::{
 };
 use odimo::soc::{analytical, detailed, Layer, Platform};
 
-fn builtin_platforms() -> [Platform; 3] {
-    [Platform::diana(), Platform::darkside(), Platform::trident()]
+fn builtin_platforms() -> [Platform; 4] {
+    [
+        Platform::diana(),
+        Platform::darkside(),
+        Platform::trident(),
+        Platform::gap9(),
+    ]
 }
 
 fn workload_for(p: Platform) -> Vec<Layer> {
