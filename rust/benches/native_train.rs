@@ -1,45 +1,135 @@
-//! Bench: native-engine train-step throughput.
+//! Bench: native-engine train-step throughput, single- vs multi-thread.
 //!
-//! Seeds the perf trajectory for the pure-Rust backend: one full
-//! forward + backward + SGD update per sample, on the miniature test
-//! supernet and on the paper-scale DIANA ResNet-20/CIFAR-10 supernet,
-//! plus the eval-mode forward for comparison. Built (not run) by the CI
-//! `cargo bench --no-run` gate.
+//! Records the perf trajectory of the planned executor on a fixed shape
+//! (the DIANA ResNet-8/CIFAR-10 supernet, the acceptance workload) plus
+//! the miniature test supernet, and emits `BENCH_native_train.json` at
+//! the repo root so CI archives the numbers per commit.
+//!
+//! Regression gate: when `BENCH_CHECK=1` (set by the CI job) the bench
+//! compares its single-thread steps/sec against the committed
+//! `rust/benches/native_train.baseline.json` and exits non-zero on a
+//! >20% regression. The committed baseline is a conservative floor
+//! (machines differ); re-pin it from a CI run's emitted JSON whenever
+//! the engine gets deliberately faster.
 
-use odimo::runtime::{ModelBackend, NativeBackend, StepHparams};
-use odimo::util::bench::quick;
+use std::time::Duration;
 
-fn main() {
-    println!("== native train-step bench ==");
-    let hp = StepHparams {
+use odimo::runtime::{ModelBackend, NativeBackend, NativeOptions, StepHparams, WOptimizer};
+use odimo::util::bench::bench;
+use odimo::util::json::{parse, Value};
+
+const ACCEPTANCE_VARIANT: &str = "diana_resnet8_c10";
+
+fn hp() -> StepHparams {
+    StepHparams {
         lam: 1e-7,
         cost_sel: 0.0,
         lr_w: 1e-2,
         lr_th: 5e-2,
-    };
+    }
+}
 
-    for variant in ["trident_tiny_tiny", "diana_resnet20_c10"] {
-        let be = NativeBackend::build(variant).expect("native variant");
-        let m = be.manifest();
-        let ds = odimo::datasets::SynthDataset::from_name(
-            &m.dataset.name,
-            m.dataset.hw,
-            m.dataset.classes,
-            1,
-        );
-        let (x, y) = ds.batch(odimo::datasets::Split::Train, 0, m.dataset.batch);
-        let mut state = be.init_state(0).expect("init");
-        // one warm step outside the timer (allocator warmup)
-        be.train_step(&mut state, &x, &y, hp).expect("step");
-        let r = quick(&format!("train_step {variant} (batch {})", m.dataset.batch), || {
-            std::hint::black_box(be.train_step(&mut state, &x, &y, hp).expect("step"));
-        });
+/// Train-step throughput of `variant` at `threads` workers (steps/sec,
+/// from the mean over a few seconds of timed steps after one warm step).
+fn train_steps_per_sec(variant: &str, threads: usize, budget: Duration) -> f64 {
+    let be = NativeBackend::build_with(
+        variant,
+        NativeOptions {
+            threads,
+            w_optimizer: WOptimizer::SgdMomentum,
+        },
+    )
+    .expect("native variant");
+    let m = be.manifest();
+    let ds = odimo::datasets::SynthDataset::from_name(
+        &m.dataset.name,
+        m.dataset.hw,
+        m.dataset.classes,
+        1,
+    );
+    let (x, y) = ds.batch(odimo::datasets::Split::Train, 0, m.dataset.batch);
+    let mut state = be.init_state(0).expect("init");
+    let r = bench(
+        &format!("train_step {variant} t={threads} (batch {})", m.dataset.batch),
+        1,
+        budget,
+        50,
+        || {
+            std::hint::black_box(be.train_step(&mut state, &x, &y, hp()).expect("step"));
+        },
+    );
+    let sps = 1e9 / r.mean_ns;
+    println!(
+        "   -> {:.3} steps/s, {:.1} samples/s (arena growth after warmup: {})",
+        sps,
+        m.dataset.batch as f64 * sps,
+        be.arena_grown()
+    );
+    sps
+}
+
+/// Eval-batch throughput of `variant` at 1 thread (evals/sec).
+fn eval_batches_per_sec(variant: &str, budget: Duration) -> f64 {
+    let be = NativeBackend::build(variant).expect("native variant");
+    let m = be.manifest();
+    let ds = odimo::datasets::SynthDataset::from_name(
+        &m.dataset.name,
+        m.dataset.hw,
+        m.dataset.classes,
+        2,
+    );
+    let (x, y) = ds.batch(odimo::datasets::Split::Val, 0, m.dataset.batch);
+    let state = be.init_state(0).expect("init");
+    let r = bench(&format!("eval_batch {variant} t=1"), 1, budget, 200, || {
+        std::hint::black_box(be.eval_batch(&state, &x, &y).expect("eval"));
+    });
+    1e9 / r.mean_ns
+}
+
+fn main() {
+    println!("== native train-step bench (planned executor) ==");
+
+    // trajectory entries: the miniature supernet, train + eval paths
+    let tiny_sps = train_steps_per_sec("trident_tiny_tiny", 1, Duration::from_secs(1));
+    let tiny_eval_sps = eval_batches_per_sec("trident_tiny_tiny", Duration::from_secs(1));
+
+    // acceptance shape: single- vs multi-thread on the resnet8 supernet
+    let s1 = train_steps_per_sec(ACCEPTANCE_VARIANT, 1, Duration::from_secs(4));
+    let s4 = train_steps_per_sec(ACCEPTANCE_VARIANT, 4, Duration::from_secs(4));
+    let speedup = s4 / s1;
+    println!("   -> 4-thread speedup on {ACCEPTANCE_VARIANT}: {speedup:.2}x");
+
+    // emit the trajectory record
+    let out = Value::obj(vec![
+        ("variant", Value::str(ACCEPTANCE_VARIANT)),
+        ("threads1_steps_per_sec", Value::num(s1)),
+        ("threads4_steps_per_sec", Value::num(s4)),
+        ("speedup_4_threads", Value::num(speedup)),
+        ("tiny_steps_per_sec", Value::num(tiny_sps)),
+        ("tiny_eval_per_sec", Value::num(tiny_eval_sps)),
+    ]);
+    let path = odimo::repo_root().join("BENCH_native_train.json");
+    std::fs::write(&path, out.to_string_pretty()).expect("write bench json");
+    println!("   -> wrote {}", path.display());
+
+    // regression gate (CI sets BENCH_CHECK=1)
+    if std::env::var("BENCH_CHECK").as_deref() == Ok("1") {
+        let base_path = odimo::repo_root().join("rust/benches/native_train.baseline.json");
+        let text = std::fs::read_to_string(&base_path).expect("committed bench baseline");
+        let base = parse(&text).expect("baseline json");
+        let floor = base
+            .f64_of("threads1_steps_per_sec")
+            .expect("baseline threads1_steps_per_sec");
+        let min_ok = 0.8 * floor;
+        if s1 < min_ok {
+            eprintln!(
+                "BENCH REGRESSION: single-thread {s1:.3} steps/s is more than 20% below \
+                 the committed baseline {floor:.3} (floor {min_ok:.3})"
+            );
+            std::process::exit(1);
+        }
         println!(
-            "   -> {:.1} samples/s",
-            m.dataset.batch as f64 / (r.mean_ns / 1e9)
+            "   -> baseline gate ok: {s1:.3} steps/s >= 0.8 x {floor:.3}"
         );
-        quick(&format!("eval_batch {variant}"), || {
-            std::hint::black_box(be.eval_batch(&state, &x, &y).expect("eval"));
-        });
     }
 }

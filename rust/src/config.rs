@@ -75,6 +75,11 @@ pub struct ExperimentConfig {
     /// early-stopping patience in epochs (0 = disabled); applies to the
     /// warmup and final phases, on validation accuracy
     pub patience: usize,
+    /// native-engine worker threads (0 = available parallelism); results
+    /// are bit-identical for any value — the shard structure is fixed
+    pub threads: usize,
+    /// W-family optimizer of the native engine: "sgdm" | "adam"
+    pub w_optimizer: String,
 }
 
 impl ExperimentConfig {
@@ -92,6 +97,8 @@ impl ExperimentConfig {
             lr_th: 5e-2,
             seed: 0,
             patience: 0,
+            threads: 0,
+            w_optimizer: "sgdm".into(),
         }
     }
 
@@ -121,6 +128,14 @@ impl ExperimentConfig {
         get_usize("steps_per_epoch", &mut cfg.steps_per_epoch)?;
         get_usize("eval_batches", &mut cfg.eval_batches)?;
         get_usize("patience", &mut cfg.patience)?;
+        get_usize("threads", &mut cfg.threads)?;
+        if let Some(x) = v.get("w_optimizer") {
+            cfg.w_optimizer = x.as_str()?.to_string();
+            // validate eagerly: a typo'd optimizer should fail at parse time
+            cfg.w_optimizer
+                .parse::<crate::runtime::WOptimizer>()
+                .with_context(|| "config field 'w_optimizer'".to_string())?;
+        }
         if let Some(x) = v.get("lr_w") {
             cfg.lr_w = x.as_f64()? as f32;
         }
@@ -156,7 +171,20 @@ impl ExperimentConfig {
             ("lr_th", Value::num(self.lr_th as f64)),
             ("seed", Value::num(self.seed as f64)),
             ("patience", Value::num(self.patience as f64)),
+            ("threads", Value::num(self.threads as f64)),
+            ("w_optimizer", Value::str(&self.w_optimizer)),
         ])
+    }
+
+    /// Resolve the configured thread count (0 = available parallelism).
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        }
     }
 
     /// Scale the schedule by `f` (e.g. 0.25 for a quarter-length run).
@@ -221,5 +249,28 @@ mod tests {
     #[test]
     fn bad_cost_target_rejected() {
         assert!(ExperimentConfig::parse(r#"{"variant": "x", "cost_target": "speed"}"#).is_err());
+    }
+
+    #[test]
+    fn threads_and_optimizer_fields() {
+        let cfg = ExperimentConfig::parse(r#"{"variant": "x"}"#).unwrap();
+        assert_eq!(cfg.threads, 0, "default = auto");
+        assert!(cfg.resolved_threads() >= 1);
+        assert_eq!(cfg.w_optimizer, "sgdm");
+        let cfg = ExperimentConfig::parse(
+            r#"{"variant": "x", "threads": 2, "w_optimizer": "adam"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.threads, 2);
+        assert_eq!(cfg.resolved_threads(), 2);
+        assert_eq!(cfg.w_optimizer, "adam");
+        // round-trips through JSON
+        let cfg2 = ExperimentConfig::parse(&cfg.to_json().to_string_pretty()).unwrap();
+        assert_eq!(cfg2.threads, 2);
+        assert_eq!(cfg2.w_optimizer, "adam");
+        assert!(
+            ExperimentConfig::parse(r#"{"variant": "x", "w_optimizer": "adagrad"}"#).is_err(),
+            "unknown optimizer must fail at parse time"
+        );
     }
 }

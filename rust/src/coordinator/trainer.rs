@@ -13,7 +13,8 @@ use crate::config::ExperimentConfig;
 use crate::datasets::{Split, SynthDataset};
 use crate::mapping::{discretize, one_hot_theta, SearchKind};
 use crate::runtime::{
-    default_backend, load_backend, BackendKind, Manifest, ModelBackend, StepHparams, TrainState,
+    default_backend, load_backend_with, BackendKind, Manifest, ModelBackend, NativeOptions,
+    StepHparams, TrainState,
 };
 use crate::search::{eligible_cus, fits};
 use crate::soc::{self, Layer, LayerAssignment, Mapping, Platform};
@@ -77,14 +78,20 @@ impl Trainer {
 
     /// Build a trainer for `cfg.variant`, selecting the backend:
     /// `kind = None` picks [`default_backend`] (native unless the
-    /// variant's AOT artifacts exist).
+    /// variant's AOT artifacts exist). The config's `threads` (0 =
+    /// available parallelism) and `w_optimizer` plumb through to the
+    /// native engine here.
     pub fn create(
         artifacts: &std::path::Path,
         cfg: ExperimentConfig,
         kind: Option<BackendKind>,
     ) -> Result<Self> {
         let kind = kind.unwrap_or_else(|| default_backend(artifacts, &cfg.variant));
-        let backend = load_backend(kind, artifacts, &cfg.variant)?;
+        let opts = NativeOptions {
+            threads: cfg.resolved_threads(),
+            w_optimizer: cfg.w_optimizer.parse()?,
+        };
+        let backend = load_backend_with(kind, artifacts, &cfg.variant, opts)?;
         Self::new(backend, cfg)
     }
 

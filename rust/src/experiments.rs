@@ -28,8 +28,9 @@ use crate::stats;
 /// Run an experiment by id. `search` selects the training-free mapping
 /// strategy for `socmap` (`greedy|descent|restart`); `backend` pins the
 /// training engine for the trained experiments (`None` = per-variant
-/// default: native unless artifacts exist). `socmap`/`table3` never
-/// train and ignore both.
+/// default: native unless artifacts exist); `threads` overrides the
+/// native worker count (`None` = the config value, whose default is all
+/// cores). `socmap`/`table3` never train and ignore these knobs.
 #[allow(clippy::too_many_arguments)]
 pub fn run(
     id: &str,
@@ -39,18 +40,19 @@ pub fn run(
     soc: Option<&str>,
     search: Option<&str>,
     backend: Option<BackendKind>,
+    threads: Option<usize>,
     fast: f64,
 ) -> Result<()> {
     match id {
-        "fig5" => fig5(artifacts, results, task, soc, backend, fast),
-        "fig6" => fig6(artifacts, results, soc, backend, fast),
-        "fig7" => fig7(artifacts, results, soc, backend, fast),
-        "fig8" => fig8(artifacts, results, backend, fast),
-        "fig9" => fig9(artifacts, results, backend, fast),
-        "fig10" => fig10(artifacts, results, backend, fast),
-        "table2" => table2(artifacts, results, task, backend, fast),
+        "fig5" => fig5(artifacts, results, task, soc, backend, threads, fast),
+        "fig6" => fig6(artifacts, results, soc, backend, threads, fast),
+        "fig7" => fig7(artifacts, results, soc, backend, threads, fast),
+        "fig8" => fig8(artifacts, results, backend, threads, fast),
+        "fig9" => fig9(artifacts, results, backend, threads, fast),
+        "fig10" => fig10(artifacts, results, backend, threads, fast),
+        "table2" => table2(artifacts, results, task, backend, threads, fast),
         "table3" => table3(results),
-        "table4" => table4(artifacts, results, task, backend, fast),
+        "table4" => table4(artifacts, results, task, backend, threads, fast),
         "socmap" => socmap(results, soc, task, search),
         "all" => {
             for e in [
@@ -58,7 +60,7 @@ pub fn run(
                 "table4",
             ] {
                 eprintln!("=== exp {e} ===");
-                run(e, artifacts, results, task, soc, search, backend, fast)?;
+                run(e, artifacts, results, task, soc, search, backend, threads, fast)?;
             }
             Ok(())
         }
@@ -84,22 +86,28 @@ fn cfg_for(variant: &str, fast: f64, target: CostTarget) -> ExperimentConfig {
 
 fn trainer(
     artifacts: &Path,
-    cfg: ExperimentConfig,
+    mut cfg: ExperimentConfig,
     backend: Option<BackendKind>,
+    threads: Option<usize>,
 ) -> Result<Trainer> {
+    if let Some(t) = threads {
+        cfg.threads = t;
+    }
     Trainer::create(artifacts, cfg, backend)
 }
 
 /// Sweep a variant + its baselines.
+#[allow(clippy::too_many_arguments)]
 fn panel(
     artifacts: &Path,
     variant: &str,
     target: CostTarget,
     backend: Option<BackendKind>,
+    threads: Option<usize>,
     fast: f64,
     with_baselines: bool,
 ) -> Result<Vec<RunRecord>> {
-    let tr = trainer(artifacts, cfg_for(variant, fast, target), backend)?;
+    let tr = trainer(artifacts, cfg_for(variant, fast, target), backend, threads)?;
     let mut recs = sweep(&tr)?;
     if with_baselines {
         for b in Baseline::for_platform(tr.platform) {
@@ -211,24 +219,24 @@ pub fn save_records(dir: &Path, name: &str, recs: &[RunRecord]) -> Result<()> {
 }
 
 /// True when `variant` is runnable with the resolved backend. The
-/// `_prune`/`_layerwise` baseline search spaces exist only as XLA
-/// artifacts; under the native default (no artifacts) the panels that
-/// need them skip with a notice instead of aborting the whole run.
-fn xla_only_variant_available(
+/// `_prune`/`_layerwise` baseline search spaces build natively from the
+/// variant name alone; only a pinned XLA backend still needs its AOT
+/// artifacts, and skips with a notice instead of aborting the whole run.
+fn baseline_variant_available(
     artifacts: &Path,
     variant: &str,
     backend: Option<BackendKind>,
 ) -> bool {
     let resolved =
         backend.unwrap_or_else(|| crate::runtime::default_backend(artifacts, variant));
-    if resolved == BackendKind::Xla
-        && artifacts.join(format!("{variant}.manifest.json")).exists()
+    if resolved == BackendKind::Native
+        || artifacts.join(format!("{variant}.manifest.json")).exists()
     {
         return true;
     }
     eprintln!(
-        "    (skipping {variant}: this baseline search space needs XLA artifacts — \
-         run `make artifacts` and use --backend xla)"
+        "    (skipping {variant}: --backend xla needs its AOT artifacts — \
+         run `make artifacts`, or drop the pin to use the native engine)"
     );
     false
 }
@@ -262,13 +270,15 @@ fn fig5(
     task: Option<&str>,
     soc: Option<&str>,
     backend: Option<BackendKind>,
+    threads: Option<usize>,
     fast: f64,
 ) -> Result<()> {
     for s in filtered(&["diana", "darkside"], soc) {
         for t in filtered(&["c10", "c100", "imagenet"], task) {
             let variant = variant_for(s, t);
             eprintln!("--- fig5 panel: {s}/{t} ({variant})");
-            let recs = panel(artifacts, variant, CostTarget::Latency, backend, fast, true)?;
+            let recs =
+                panel(artifacts, variant, CostTarget::Latency, backend, threads, fast, true)?;
             print_sweep(&recs);
             save_records(&results.join("fig5"), variant, &recs)?;
         }
@@ -285,12 +295,13 @@ fn fig6(
     results: &Path,
     soc: Option<&str>,
     backend: Option<BackendKind>,
+    threads: Option<usize>,
     fast: f64,
 ) -> Result<()> {
     for s in filtered(&["diana", "darkside"], soc) {
         let variant = variant_for(s, "c10");
         eprintln!("--- fig6 panel: {s} ({variant}, energy target)");
-        let recs = panel(artifacts, variant, CostTarget::Energy, backend, fast, true)?;
+        let recs = panel(artifacts, variant, CostTarget::Energy, backend, threads, fast, true)?;
         print_sweep(&recs);
         save_records(&results.join("fig6"), variant, &recs)?;
     }
@@ -306,6 +317,7 @@ fn fig7(
     results: &Path,
     soc: Option<&str>,
     backend: Option<BackendKind>,
+    threads: Option<usize>,
     fast: f64,
 ) -> Result<()> {
     if filtered(&["diana"], soc).len() == 1 {
@@ -315,15 +327,16 @@ fn fig7(
             "diana_resnet20_c10",
             CostTarget::Latency,
             backend,
+            threads,
             fast,
             false,
         )?;
         // pruning's cost floors at zero channels, so the shared λ grid
         // over-prunes; sweep it at gentler strengths (see fig8 note)
-        if xla_only_variant_available(artifacts, "diana_resnet20_c10_prune", backend) {
+        if baseline_variant_available(artifacts, "diana_resnet20_c10_prune", backend) {
             let mut cfgp = cfg_for("diana_resnet20_c10_prune", fast, CostTarget::Latency);
             cfgp.lambdas = vec![0.005, 0.02, 0.1];
-            let trp = trainer(artifacts, cfgp, backend)?;
+            let trp = trainer(artifacts, cfgp, backend, threads)?;
             let mut prune = sweep(&trp)?;
             for r in &mut prune {
                 r.label = "pruning".into();
@@ -340,15 +353,17 @@ fn fig7(
             "darkside_mbv1_c10",
             CostTarget::Latency,
             backend,
+            threads,
             fast,
             false,
         )?;
-        if xla_only_variant_available(artifacts, "darkside_mbv1_c10_layerwise", backend) {
+        if baseline_variant_available(artifacts, "darkside_mbv1_c10_layerwise", backend) {
             let mut pb = panel(
                 artifacts,
                 "darkside_mbv1_c10_layerwise",
                 CostTarget::Latency,
                 backend,
+                threads,
                 fast,
                 false,
             )?;
@@ -395,20 +410,26 @@ fn breakdown_table(recs: &[RunRecord]) -> Vec<Vec<String>> {
 
 const BREAKDOWN_HEADERS: [&str; 5] = ["mapping", "layer", "ch/cu", "offload %", "cyc/cu"];
 
-fn fig8(artifacts: &Path, results: &Path, backend: Option<BackendKind>, fast: f64) -> Result<()> {
+fn fig8(
+    artifacts: &Path,
+    results: &Path,
+    backend: Option<BackendKind>,
+    threads: Option<usize>,
+    fast: f64,
+) -> Result<()> {
     eprintln!("--- fig8: DIANA layer breakdown (Ours vs pruning)");
     let mut cfg = cfg_for("diana_resnet20_c10", fast, CostTarget::Latency);
     cfg.lambdas = vec![0.2];
-    let tr = trainer(artifacts, cfg, backend)?;
+    let tr = trainer(artifacts, cfg, backend, threads)?;
     let mut recs = sweep(&tr)?;
     recs[0].label = "ours".into();
     // pruning collapses whole layers under strong λ (its cost keeps
     // falling all the way to zero channels, unlike a mapping whose cost
     // floors at the cheap CU) — compare at gentler strengths
-    if xla_only_variant_available(artifacts, "diana_resnet20_c10_prune", backend) {
+    if baseline_variant_available(artifacts, "diana_resnet20_c10_prune", backend) {
         let mut cfgp = cfg_for("diana_resnet20_c10_prune", fast, CostTarget::Latency);
         cfgp.lambdas = vec![0.02, 0.1];
-        let trp = trainer(artifacts, cfgp, backend)?;
+        let trp = trainer(artifacts, cfgp, backend, threads)?;
         let mut prune = sweep(&trp)?;
         prune[0].label = "pr-l".into();
         prune[1].label = "pr-m".into();
@@ -425,18 +446,24 @@ fn fig8(artifacts: &Path, results: &Path, backend: Option<BackendKind>, fast: f6
     Ok(())
 }
 
-fn fig9(artifacts: &Path, results: &Path, backend: Option<BackendKind>, fast: f64) -> Result<()> {
+fn fig9(
+    artifacts: &Path,
+    results: &Path,
+    backend: Option<BackendKind>,
+    threads: Option<usize>,
+    fast: f64,
+) -> Result<()> {
     eprintln!("--- fig9: Darkside layer breakdown (Ours vs layer-wise)");
     let mut cfg = cfg_for("darkside_mbv1_c10", fast, CostTarget::Latency);
     cfg.lambdas = vec![0.05, 0.5];
-    let tr = trainer(artifacts, cfg, backend)?;
+    let tr = trainer(artifacts, cfg, backend, threads)?;
     let mut recs = sweep(&tr)?;
     recs[0].label = "ours-l".into();
     recs[1].label = "ours-m".into();
-    if xla_only_variant_available(artifacts, "darkside_mbv1_c10_layerwise", backend) {
+    if baseline_variant_available(artifacts, "darkside_mbv1_c10_layerwise", backend) {
         let mut cfgp = cfg_for("darkside_mbv1_c10_layerwise", fast, CostTarget::Latency);
         cfgp.lambdas = vec![0.05, 0.5];
-        let trp = trainer(artifacts, cfgp, backend)?;
+        let trp = trainer(artifacts, cfgp, backend, threads)?;
         let mut pb = sweep(&trp)?;
         pb[0].label = "pb-l".into();
         pb[1].label = "pb-m".into();
@@ -457,7 +484,13 @@ fn fig9(artifacts: &Path, results: &Path, backend: Option<BackendKind>, fast: f6
 // Fig. 10 — width-multiplier sweep (Darkside, c10)
 // ---------------------------------------------------------------------------
 
-fn fig10(artifacts: &Path, results: &Path, backend: Option<BackendKind>, fast: f64) -> Result<()> {
+fn fig10(
+    artifacts: &Path,
+    results: &Path,
+    backend: Option<BackendKind>,
+    threads: Option<usize>,
+    fast: f64,
+) -> Result<()> {
     let mut all = Vec::new();
     for (variant, wm) in [
         ("darkside_mbv1_c10", "1.0x"),
@@ -465,7 +498,8 @@ fn fig10(artifacts: &Path, results: &Path, backend: Option<BackendKind>, fast: f
         ("darkside_mbv1_c10_w025", "0.25x"),
     ] {
         eprintln!("--- fig10: width {wm} ({variant})");
-        let mut recs = panel(artifacts, variant, CostTarget::Latency, backend, fast, true)?;
+        let mut recs =
+            panel(artifacts, variant, CostTarget::Latency, backend, threads, fast, true)?;
         for r in &mut recs {
             r.label = format!("{} ({wm})", r.label);
         }
@@ -485,6 +519,7 @@ fn table2(
     results: &Path,
     task: Option<&str>,
     backend: Option<BackendKind>,
+    threads: Option<usize>,
     fast: f64,
 ) -> Result<()> {
     eprintln!("--- table2: ODiMO search overhead vs most-demanding baseline");
@@ -509,7 +544,7 @@ fn table2(
             let measure = |variant: &str, lam: f32, lr_th: f32| -> Result<(f64, usize)> {
                 let mut cfg = cfg_for(variant, fast, CostTarget::Latency);
                 cfg.steps_per_epoch = (cfg.steps_per_epoch / 2).max(5);
-                let tr = trainer(artifacts, cfg, Some(row_backend))?;
+                let tr = trainer(artifacts, cfg, Some(row_backend), threads)?;
                 let mut st = tr.init_state()?;
                 let hp = StepHparams {
                     lam,
@@ -710,6 +745,7 @@ fn table4(
     results: &Path,
     task: Option<&str>,
     backend: Option<BackendKind>,
+    threads: Option<usize>,
     fast: f64,
 ) -> Result<()> {
     eprintln!("--- table4: DIANA deployment (detailed simulator)");
@@ -718,7 +754,7 @@ fn table4(
         let variant = variant_for("diana", t);
         let mut cfg = cfg_for(variant, fast, CostTarget::Latency);
         cfg.lambdas = vec![0.05, 2.0]; // Accurate / Fast
-        let tr = trainer(artifacts, cfg, backend)?;
+        let tr = trainer(artifacts, cfg, backend, threads)?;
         let mut recs = sweep(&tr)?;
         recs[0].label = "odimo-accurate".into();
         recs[1].label = "odimo-fast".into();

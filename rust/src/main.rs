@@ -40,6 +40,8 @@ use odimo::util::cli;
 
 const USAGE: &str = "usage: repro <list|platforms|train|sweep|exp> [options]
   global: --artifacts DIR  --results DIR  --backend native|xla
+          --threads N  (native worker threads; 0/default = all cores —
+           results are bit-identical for any value)
   train:  --variant V [--lambda L] [--cost-target latency|energy] [--config F] [--fast F]
   sweep:  [--variant V] [--cost-target T] [--config F] [--fast F] [--no-baselines]
           (no --variant + native backend: sweeps every registered SoC)
@@ -47,7 +49,7 @@ const USAGE: &str = "usage: repro <list|platforms|train|sweep|exp> [options]
           [--task c10|c100|imagenet] [--soc diana|darkside|trident|gap9|NAME] [--fast F]
           (socmap: --soc any registered platform, --task resnet|mobilenet,
            --search greedy|descent|restart)
-  native variants: <platform>_<arch>_<task>[_w050|_w025][_fixed]
+  native variants: <platform>_<arch>_<task>[_w050|_w025][_fixed|_prune|_layerwise]
           arch: resnet20|resnet8|mbv1|tiny   task: c10|c100|imgnet|tiny";
 
 fn main() -> Result<()> {
@@ -67,6 +69,8 @@ fn main() -> Result<()> {
         .unwrap_or_else(|| root.join("results"));
     let fast = args.opt_f64("fast", 1.0)?;
     let backend = args.opt_parse::<BackendKind>("backend")?;
+    // native worker threads; None leaves the config value (0 = all cores)
+    let threads = args.opt_parse::<usize>("threads")?;
 
     match args.positional[0].as_str() {
         "list" => {
@@ -140,6 +144,9 @@ fn main() -> Result<()> {
             let mut cfg = load_cfg(&args, &variant)?;
             cfg.cost_target = CostTarget::parse(&args.opt_or("cost-target", "latency"))?;
             cfg.lambdas = vec![args.opt_f64("lambda", 0.2)?];
+            if let Some(t) = threads {
+                cfg.threads = t;
+            }
             let cfg = cfg.scaled(fast);
             let tr = Trainer::create(&artifacts, cfg, backend)?;
             eprintln!("  [backend: {}]", tr.backend.backend_name());
@@ -194,6 +201,9 @@ fn main() -> Result<()> {
             for (mut cfg, run_backend) in runs {
                 let variant = cfg.variant.clone();
                 cfg.cost_target = CostTarget::parse(&args.opt_or("cost-target", "latency"))?;
+                if let Some(t) = threads {
+                    cfg.threads = t;
+                }
                 let cfg = cfg.scaled(fast);
                 let tr = Trainer::create(&artifacts, cfg, run_backend)?;
                 eprintln!(
@@ -230,6 +240,7 @@ fn main() -> Result<()> {
                 args.opt("soc"),
                 args.opt("search"),
                 backend,
+                threads,
                 fast,
             )?;
         }

@@ -31,7 +31,7 @@ use xla::{Literal, PjRtClient};
 
 pub use executable::{lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, to_vec_f32, LoadedFn};
 pub use manifest::{IoSpec, LayerSpec, Manifest};
-pub use native::NativeBackend;
+pub use native::{NativeBackend, NativeOptions, WOptimizer};
 
 /// Train-loop hyper-scalars fed to every `train` call.
 #[derive(Debug, Clone, Copy)]
@@ -194,15 +194,37 @@ pub fn default_backend(artifacts: &Path, variant: &str) -> BackendKind {
     }
 }
 
-/// Construct a backend for `variant`.
+/// Construct a backend for `variant` with default execution options.
 pub fn load_backend(
     kind: BackendKind,
     artifacts: &Path,
     variant: &str,
 ) -> Result<Box<dyn ModelBackend>> {
+    load_backend_with(kind, artifacts, variant, NativeOptions::default())
+}
+
+/// Construct a backend for `variant`. `opts` configures the native
+/// engine (thread count, W optimizer); the XLA artifacts bake their own
+/// optimizer in, so a non-default `w_optimizer` is rejected there rather
+/// than silently ignored.
+pub fn load_backend_with(
+    kind: BackendKind,
+    artifacts: &Path,
+    variant: &str,
+    opts: NativeOptions,
+) -> Result<Box<dyn ModelBackend>> {
     match kind {
-        BackendKind::Native => Ok(Box::new(NativeBackend::build(variant)?)),
-        BackendKind::Xla => Ok(Box::new(ModelRuntime::load(artifacts, variant)?)),
+        BackendKind::Native => Ok(Box::new(NativeBackend::build_with(variant, opts)?)),
+        BackendKind::Xla => {
+            if opts.w_optimizer != WOptimizer::SgdMomentum {
+                bail!(
+                    "w_optimizer '{}' is a native-engine option; the XLA artifacts \
+                     of '{variant}' bake their optimizer in at AOT time",
+                    opts.w_optimizer.name()
+                );
+            }
+            Ok(Box::new(ModelRuntime::load(artifacts, variant)?))
+        }
     }
 }
 

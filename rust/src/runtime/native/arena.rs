@@ -1,0 +1,123 @@
+//! Buffer arena for the planned executor: a free-list pool of `Vec<f32>`
+//! buffers keyed by exact length.
+//!
+//! The native engine records a fresh tape every step, but the *shapes* it
+//! allocates are identical from one step to the next (same supernet, same
+//! batch split). The arena exploits that: every tensor buffer the tape
+//! creates is taken from here and given back when the step's tape is
+//! recycled, so after the first step (or after [`Arena::prime`] from the
+//! execution plan) the steady-state step performs **no** buffer
+//! allocations at all — `grown()` stops moving, which
+//! `tests/native_exec.rs` pins.
+//!
+//! The arena is deliberately single-threaded (each batch shard owns its
+//! own arena, see `backend.rs`); recycling a buffer into a *different*
+//! shard's arena is harmless — the free lists are keyed by length only.
+
+use std::collections::HashMap;
+
+/// Exact-size free-list pool of f32 buffers.
+#[derive(Default)]
+pub struct Arena {
+    free: HashMap<usize, Vec<Vec<f32>>>,
+    /// cumulative count of buffers that had to be freshly allocated
+    grown: u64,
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena::default()
+    }
+
+    /// Pre-allocate `count` buffers of `len` elements (the planning pass).
+    /// Primed buffers do not count as growth.
+    pub fn prime(&mut self, len: usize, count: usize) {
+        if len == 0 {
+            return;
+        }
+        let list = self.free.entry(len).or_default();
+        for _ in 0..count {
+            list.push(vec![0.0; len]);
+        }
+    }
+
+    /// A zero-filled buffer of exactly `len` elements.
+    pub fn take_zeroed(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.take_raw(len);
+        v.iter_mut().for_each(|x| *x = 0.0);
+        v
+    }
+
+    /// A buffer of exactly `len` elements with arbitrary contents — for
+    /// ops that overwrite every element before reading.
+    pub fn take_raw(&mut self, len: usize) -> Vec<f32> {
+        if let Some(list) = self.free.get_mut(&len) {
+            if let Some(v) = list.pop() {
+                debug_assert_eq!(v.len(), len);
+                return v;
+            }
+        }
+        self.grown += 1;
+        vec![0.0; len]
+    }
+
+    /// Return a buffer to the pool.
+    pub fn give(&mut self, v: Vec<f32>) {
+        if !v.is_empty() {
+            self.free.entry(v.len()).or_default().push(v);
+        }
+    }
+
+    /// Number of buffers that were allocated because the pool had no
+    /// buffer of the requested size (primed buffers excluded).
+    pub fn grown(&self) -> u64 {
+        self.grown
+    }
+
+    /// Total f32 elements currently parked in the free lists.
+    pub fn pooled_elems(&self) -> usize {
+        self.free
+            .iter()
+            .map(|(len, list)| len * list.len())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuse_stops_growth() {
+        let mut a = Arena::new();
+        let b1 = a.take_zeroed(16);
+        assert_eq!(a.grown(), 1);
+        a.give(b1);
+        let b2 = a.take_zeroed(16);
+        assert_eq!(a.grown(), 1, "same-size take must reuse");
+        assert_eq!(b2, vec![0.0; 16]);
+        let _b3 = a.take_zeroed(8);
+        assert_eq!(a.grown(), 2, "new size must grow");
+    }
+
+    #[test]
+    fn primed_buffers_do_not_count_as_growth() {
+        let mut a = Arena::new();
+        a.prime(32, 3);
+        for _ in 0..3 {
+            let v = a.take_raw(32);
+            assert_eq!(v.len(), 32);
+        }
+        assert_eq!(a.grown(), 0);
+        let _ = a.take_raw(32);
+        assert_eq!(a.grown(), 1);
+    }
+
+    #[test]
+    fn zeroed_take_clears_recycled_contents() {
+        let mut a = Arena::new();
+        a.give(vec![3.0; 4]);
+        assert_eq!(a.take_zeroed(4), vec![0.0; 4]);
+        assert_eq!(a.grown(), 0);
+    }
+}

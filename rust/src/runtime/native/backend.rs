@@ -1,30 +1,115 @@
-//! The native [`ModelBackend`]: supernet + tape + SGD, no artifacts.
+//! The native [`ModelBackend`]: supernet + tape + optimizer — now a
+//! *planned executor*, no artifacts.
 //!
-//! One `train` step is: read the state leaves onto a fresh [`Tape`], run
-//! the supernet forward with batch statistics, add the differentiable
-//! cost term `λ · ((1−sel)·lat + sel·energy)` over the θ-expected channel
-//! counts (Eq. 1), reverse-sweep, then apply SGD-with-momentum to the W
-//! family (`lr_w`) and plain SGD to θ (`lr_th`) — the per-group learning
-//! rates of the paper's joint descent. BN running statistics update
-//! outside the tape with the usual 0.9 momentum.
+//! One `train` step is: split the batch into [`NSHARDS`] fixed shards,
+//! run each shard's forward/backward on its own arena-backed [`Tape`]
+//! (shards execute data-parallel across a scoped thread pool when
+//! `threads > 1`), tree-reduce the shard gradients in a fixed binary
+//! order, then apply one optimizer update — SGD-with-momentum or Adam
+//! (with bias correction) for the W family (`lr_w`) and plain SGD for θ
+//! (`lr_th`), the per-group learning rates of the paper's joint descent.
 //!
-//! The state layout (leaf names/order) is the same contract the AOT
-//! manifests use: `params/<layer>/{w,bn/*,theta}`, `params/fc/{w,b}`,
-//! then one `opt_w/…` momentum buffer per trainable W leaf — so the
-//! coordinator's θ plumbing, snapshots and Table-II memory accounting
-//! work identically on both backends.
+//! Determinism contract: the shard structure depends only on the batch
+//! size (never on the thread count), every shard is computed serially
+//! with a fixed accumulation order (the row-sharded kernels are
+//! bit-identical for any worker count), and both the gradient tree
+//! reduction and the metric/BN-statistic sums run in shard-index order —
+//! so 1-thread and N-thread steps produce bit-identical losses, weights
+//! and θ (pinned by `tests/native_exec.rs`). Batch statistics are
+//! computed per shard ("ghost batch norm"): the shard split *is* the
+//! numerical contract, threading is just scheduling.
+//!
+//! Each shard owns an [`Arena`] sized by the [`ExecPlan`] shape-inference
+//! pass at build time, so steady-state steps allocate no tensor buffers.
+//!
+//! The loss adds the differentiable cost term
+//! `λ · ((1−sel)·lat + sel·energy)` over the θ-expected channel counts
+//! (Eq. 1) inside every shard (scaled by the shard's batch fraction, so
+//! the total carries it exactly once). BN running statistics update
+//! outside the tape with the usual 0.9 momentum from the shard-weighted
+//! batch statistics.
+//!
+//! The state layout (leaf names/order) keeps the AOT manifest contract:
+//! `params/<layer>/{w,bn/*,theta}`, `params/fc/{w,b}`, then the
+//! optimizer leaves — one `opt_w/…` momentum buffer per trainable W leaf
+//! for SGD, or `opt_w/…/{m,v}` pairs plus the shared `opt_w/t` step
+//! counter for Adam — so the coordinator's θ plumbing, snapshots and
+//! Table-II memory accounting work identically on both backends.
 
-use anyhow::{anyhow, Result};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::manifest::{CostScale, IoSpec, Manifest};
 use crate::runtime::{ModelBackend, StepHparams, TrainState};
 
-use super::supernet::{forward, init_conv_weight, init_fc, LayerVars, SupernetSpec};
-use super::tape::{eval_layer_cost, Tape, Var};
-use super::tensor::Tensor;
+use super::arena::Arena;
+use super::plan::ExecPlan;
+use super::supernet::{
+    forward, init_conv_weight, init_fc, theta_counts, LayerVars, SupernetSpec,
+};
+use super::tape::{eval_layer_cost, EvalBits, Tape, Var};
 
 const BN_MOMENTUM: f32 = 0.9;
 const W_MOMENTUM: f32 = 0.9;
+const ADAM_B1: f64 = 0.9;
+const ADAM_B2: f64 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+/// Fixed intra-step shard count. Part of the numerical contract (shard
+/// batch statistics and gradient reduction follow this split), so it is
+/// a constant — *never* derived from the thread count.
+pub const NSHARDS: usize = 4;
+
+/// W-family optimizer of the native engine (θ always uses plain SGD).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WOptimizer {
+    /// SGD with 0.9 momentum (the paper's setting)
+    #[default]
+    SgdMomentum,
+    /// Adam with bias correction (β1=0.9, β2=0.999, ε=1e-8)
+    Adam,
+}
+
+impl WOptimizer {
+    pub fn name(self) -> &'static str {
+        match self {
+            WOptimizer::SgdMomentum => "sgdm",
+            WOptimizer::Adam => "adam",
+        }
+    }
+}
+
+impl std::str::FromStr for WOptimizer {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<WOptimizer> {
+        match s {
+            "sgdm" => Ok(WOptimizer::SgdMomentum),
+            "adam" => Ok(WOptimizer::Adam),
+            other => bail!("unknown w_optimizer '{other}' (expected sgdm|adam)"),
+        }
+    }
+}
+
+/// Execution knobs of the native engine (all numerics-neutral except the
+/// optimizer choice, which is part of the training recipe).
+#[derive(Debug, Clone, Copy)]
+pub struct NativeOptions {
+    /// worker threads for batch shards / kernels (≥1; results are
+    /// bit-identical for any value)
+    pub threads: usize,
+    pub w_optimizer: WOptimizer,
+}
+
+impl Default for NativeOptions {
+    fn default() -> NativeOptions {
+        NativeOptions {
+            threads: 1,
+            w_optimizer: WOptimizer::SgdMomentum,
+        }
+    }
+}
 
 /// Per-conv-geometry leaf indices into the state vector.
 struct GeomLeaves {
@@ -36,6 +121,30 @@ struct GeomLeaves {
     theta: Option<usize>,
 }
 
+/// One trainable W leaf and its optimizer-state leaves.
+struct OptSlot {
+    p: usize,
+    /// momentum (SGD) or first-moment (Adam) buffer
+    m: usize,
+    /// second-moment buffer (Adam only)
+    v: Option<usize>,
+}
+
+/// What one batch shard's forward/backward produced.
+struct ShardOut {
+    /// shard batch fraction n_i / n (its loss/gradient weight)
+    scale: f32,
+    /// scaled shard loss (summing these in shard order gives the step loss)
+    loss: f32,
+    bits: EvalBits,
+    lat: f64,
+    energy_uj: f64,
+    /// gradient buffers in update order: W family first, then θ
+    grads: Vec<Vec<f32>>,
+    stats: Vec<Option<(Vec<f32>, Vec<f32>)>>,
+    arena: Arena,
+}
+
 pub struct NativeBackend {
     spec: SupernetSpec,
     manifest: Manifest,
@@ -43,8 +152,15 @@ pub struct NativeBackend {
     geoms: Vec<GeomLeaves>,
     fc_w: usize,
     fc_b: usize,
-    /// `(param leaf, momentum leaf)` pairs, in W-update order
-    momenta: Vec<(usize, usize)>,
+    /// trainable W leaves + optimizer slots, in update order
+    opt: Vec<OptSlot>,
+    /// Adam step-counter leaf
+    step_leaf: Option<usize>,
+    optimizer: WOptimizer,
+    threads: usize,
+    plan: ExecPlan,
+    /// per-shard-slot buffer arenas, recycled across steps
+    arenas: Mutex<Vec<Arena>>,
     /// per-geometry sequential-stage flag (DW→PW chains cost the sum)
     seq: Vec<bool>,
     /// cost of the non-searchable layers (always CU column 0)
@@ -53,11 +169,16 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
-    /// Build the engine for a native variant name
-    /// (`<platform>_<arch>_<task>[_w050|_w025][_fixed]`).
+    /// Build the engine for a native variant name with default options
+    /// (single-threaded, SGD+momentum).
     pub fn build(variant: &str) -> Result<NativeBackend> {
+        NativeBackend::build_with(variant, NativeOptions::default())
+    }
+
+    /// Build the engine for a native variant name
+    /// (`<platform>_<arch>_<task>[_w050|_w025][_fixed|_prune|_layerwise]`).
+    pub fn build_with(variant: &str, opts: NativeOptions) -> Result<NativeBackend> {
         let spec = SupernetSpec::build(variant)?;
-        let n_cus = spec.platform.n_cus();
 
         // --- state layout -------------------------------------------------
         let mut state_specs: Vec<IoSpec> = Vec::new();
@@ -98,7 +219,7 @@ impl NativeBackend {
                 push(
                     &mut state_specs,
                     format!("params/{name}/theta"),
-                    vec![l.cout, n_cus],
+                    spec.theta_shape(gi),
                 )
             });
             geoms.push(GeomLeaves {
@@ -116,13 +237,13 @@ impl NativeBackend {
             vec![spec.fc_cin, spec.classes],
         );
         let fc_b = push(&mut state_specs, "params/fc/b".into(), vec![spec.classes]);
-        // momentum buffers shadow every trainable W leaf
+        // optimizer leaves shadow every trainable W leaf
         let w_params: Vec<usize> = geoms
             .iter()
             .flat_map(|g| [g.w, g.scale, g.bias])
             .chain([fc_w, fc_b])
             .collect();
-        let mut momenta = Vec::with_capacity(w_params.len());
+        let mut opt = Vec::with_capacity(w_params.len());
         for &p in &w_params {
             let suffix = state_specs[p]
                 .name
@@ -130,15 +251,27 @@ impl NativeBackend {
                 .expect("trainable leaves live under params/")
                 .to_string();
             let shape = state_specs[p].shape.clone();
-            let m = push(&mut state_specs, format!("opt_w/{suffix}"), shape);
-            momenta.push((p, m));
+            let (m, v) = match opts.w_optimizer {
+                WOptimizer::SgdMomentum => {
+                    (push(&mut state_specs, format!("opt_w/{suffix}"), shape), None)
+                }
+                WOptimizer::Adam => {
+                    let m = push(&mut state_specs, format!("opt_w/{suffix}/m"), shape.clone());
+                    let v = push(&mut state_specs, format!("opt_w/{suffix}/v"), shape);
+                    (m, Some(v))
+                }
+            };
+            opt.push(OptSlot { p, m, v });
         }
+        let step_leaf = (opts.w_optimizer == WOptimizer::Adam)
+            .then(|| push(&mut state_specs, "opt_w/t".into(), vec![1]));
 
         // --- manifest + derived cost constants ----------------------------
         let mut manifest = spec.to_manifest(CostScale {
             latency_cycles: 1.0,
             energy_uj: 1.0,
         });
+        manifest.w_optimizer = opts.w_optimizer.name().into();
         let seq_names = crate::soc::sequential_layers(&manifest);
         let seq: Vec<bool> = spec
             .layers
@@ -173,6 +306,15 @@ impl NativeBackend {
             energy_uj: scale_energy.max(1e-9),
         };
 
+        // --- execution plan: size the per-shard arenas up front -----------
+        let plan = ExecPlan::new(&spec, spec.dataset.batch, NSHARDS);
+        let mut arenas = Vec::with_capacity(plan.shards());
+        for i in 0..plan.shards() {
+            let mut a = Arena::new();
+            plan.prime(i, &mut a);
+            arenas.push(a);
+        }
+
         Ok(NativeBackend {
             spec,
             manifest,
@@ -180,7 +322,12 @@ impl NativeBackend {
             geoms,
             fc_w,
             fc_b,
-            momenta,
+            opt,
+            step_leaf,
+            optimizer: opts.w_optimizer,
+            threads: opts.threads.max(1),
+            plan,
+            arenas: Mutex::new(arenas),
             seq,
             fixed_lat,
             fixed_energy_uj,
@@ -189,6 +336,40 @@ impl NativeBackend {
 
     pub fn spec(&self) -> &SupernetSpec {
         &self.spec
+    }
+
+    /// Total fresh allocations the shard arenas had to perform beyond the
+    /// execution plan (diagnostics; steady-state steps add zero).
+    pub fn arena_grown(&self) -> u64 {
+        self.arenas.lock().unwrap().iter().map(|a| a.grown()).sum()
+    }
+
+    /// Total f32 elements the execution plan provisioned.
+    pub fn planned_elems(&self) -> usize {
+        self.plan.planned_elems()
+    }
+
+    /// Fixed shard row ranges of an `n`-row batch (thread-count
+    /// independent — this split is the numerical contract).
+    fn shard_bounds(n: usize) -> Vec<(usize, usize)> {
+        let s = NSHARDS.min(n).max(1);
+        (0..s).map(|i| (i * n / s, (i + 1) * n / s)).collect()
+    }
+
+    fn take_arenas(&self, s: usize) -> Vec<Arena> {
+        let mut pool = self.arenas.lock().unwrap();
+        let mut out: Vec<Arena> = pool.drain(..s.min(pool.len())).collect();
+        while out.len() < s {
+            out.push(Arena::new());
+        }
+        out
+    }
+
+    fn put_arenas(&self, arenas: Vec<Arena>) {
+        let mut pool = self.arenas.lock().unwrap();
+        for (i, a) in arenas.into_iter().enumerate() {
+            pool.insert(i.min(pool.len()), a);
+        }
     }
 
     /// Put every parameter leaf on a fresh tape; returns the per-layer
@@ -200,21 +381,18 @@ impl NativeBackend {
         state: &TrainState,
     ) -> (Vec<LayerVars>, Var, Var, Vec<Var>, Vec<(usize, Var)>) {
         let mut lvs = Vec::with_capacity(self.geoms.len());
-        let mut w_vars = Vec::with_capacity(self.momenta.len());
+        let mut w_vars = Vec::with_capacity(self.opt.len());
         let mut theta_vars = Vec::new();
         let leaf = |tape: &mut Tape, idx: usize| -> Var {
-            tape.leaf(Tensor::new(
-                self.state_specs[idx].shape.clone(),
-                state.leaves[idx].clone(),
-            ))
+            tape.leaf_copy(self.state_specs[idx].shape.clone(), &state.leaves[idx])
         };
-        for gl in &self.geoms {
+        for (gi, gl) in self.geoms.iter().enumerate() {
             let w = leaf(tape, gl.w);
             let scale = leaf(tape, gl.scale);
             let bias = leaf(tape, gl.bias);
             w_vars.extend([w, scale, bias]);
             let theta = gl.theta.map(|t| {
-                let v = leaf(tape, t);
+                let v = tape.leaf_copy(self.spec.theta_stage_shape(gi), &state.leaves[t]);
                 theta_vars.push((t, v));
                 v
             });
@@ -251,16 +429,191 @@ impl NativeBackend {
         }
         Ok(n)
     }
+
+    /// Forward + backward of one batch shard on its own tape/arena.
+    #[allow(clippy::too_many_arguments)]
+    fn train_shard(
+        &self,
+        state: &TrainState,
+        running: &[(Vec<f32>, Vec<f32>)],
+        x: &[f32],
+        y: &[i32],
+        hp: StepHparams,
+        scale: f32,
+        kernel_threads: usize,
+        arena: Arena,
+    ) -> ShardOut {
+        let hw = self.manifest.dataset.hw;
+        let nb = y.len();
+        let mut tape = Tape::with_arena(arena);
+        tape.set_kernel_threads(kernel_threads);
+        let (lvs, fcw, fcb, w_vars, theta_vars) = self.stage_params(&mut tape, state);
+        let xv = tape.leaf_copy(vec![nb, hw, hw, 3], x);
+        let out = forward(&self.spec, &mut tape, &lvs, fcw, fcb, xv, true, running);
+        let (ce, bits) = tape.softmax_ce(out.logits, y);
+
+        // differentiable cost term over the searchable layers — recorded
+        // identically in every shard, weighted by the shard fraction so
+        // the reduced gradient carries it exactly once
+        let platform = self.spec.platform;
+        let mut tot: Option<Var> = None;
+        for gi in 0..self.spec.n_convs() {
+            if let Some(cv) = out.counts[gi] {
+                let lc = tape.layer_cost(
+                    cv,
+                    &self.spec.layers[gi],
+                    platform.cus(),
+                    platform.p_idle_mw(),
+                    platform.freq_mhz(),
+                    self.seq[gi],
+                );
+                tot = Some(match tot {
+                    None => lc,
+                    Some(t) => tape.add(t, lc),
+                });
+            }
+        }
+        let (loss, lat, energy_uj) = match tot {
+            Some(t) => {
+                let tv = tape.val(t);
+                let lat = tv.data[0] as f64 + self.fixed_lat;
+                let en = tv.data[1] as f64 + self.fixed_energy_uj;
+                let cost = tape.weighted_pair(t, 1.0 - hp.cost_sel, hp.cost_sel);
+                let scaled = tape.scale(cost, hp.lam);
+                (tape.add(ce, scaled), lat, en)
+            }
+            None => (ce, self.fixed_lat, self.fixed_energy_uj),
+        };
+        let loss_scaled = tape.scale(loss, scale);
+        let loss_val = tape.val(loss_scaled).item();
+        let mut grads = tape.backward(loss_scaled);
+        let keep: Vec<Vec<f32>> = w_vars
+            .iter()
+            .copied()
+            .chain(theta_vars.iter().map(|&(_, v)| v))
+            .map(|v| grads.take(v))
+            .collect();
+        tape.reclaim(grads);
+        let arena = tape.recycle();
+        ShardOut {
+            scale,
+            loss: loss_val,
+            bits,
+            lat,
+            energy_uj,
+            grads: keep,
+            stats: out.batch_stats,
+            arena,
+        }
+    }
+
+    /// Inference forward of one batch shard.
+    fn eval_shard(
+        &self,
+        state: &TrainState,
+        running: &[(Vec<f32>, Vec<f32>)],
+        x: &[f32],
+        y: &[i32],
+        kernel_threads: usize,
+        arena: Arena,
+    ) -> (EvalBits, Arena) {
+        let hw = self.manifest.dataset.hw;
+        let nb = y.len();
+        let mut tape = Tape::with_arena(arena);
+        tape.set_kernel_threads(kernel_threads);
+        let (lvs, fcw, fcb, _, _) = self.stage_params(&mut tape, state);
+        let xv = tape.leaf_copy(vec![nb, hw, hw, 3], x);
+        let out = forward(&self.spec, &mut tape, &lvs, fcw, fcb, xv, false, running);
+        let (_, bits) = tape.softmax_ce(out.logits, y);
+        (bits, tape.recycle())
+    }
+
+    /// Run one closure per shard, in parallel when `threads > 1`, and
+    /// return the results in shard order. The closure must be pure per
+    /// shard — ordering of execution never affects the outputs.
+    fn run_sharded<T: Send, F: Fn(usize, Arena) -> T + Sync>(
+        &self,
+        jobs: Vec<(usize, Arena)>,
+        run: F,
+    ) -> Vec<T> {
+        let s = jobs.len();
+        let workers = self.threads.min(s).max(1);
+        if workers <= 1 {
+            return jobs.into_iter().map(|(i, a)| run(i, a)).collect();
+        }
+        let mut per_worker: Vec<Vec<(usize, Arena)>> = (0..workers).map(|_| Vec::new()).collect();
+        for (i, a) in jobs {
+            per_worker[i % workers].push((i, a));
+        }
+        let mut tagged: Vec<(usize, T)> = std::thread::scope(|sc| {
+            let handles: Vec<_> = per_worker
+                .into_iter()
+                .map(|mine| {
+                    let run = &run;
+                    sc.spawn(move || {
+                        mine.into_iter()
+                            .map(|(i, a)| (i, run(i, a)))
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("shard worker panicked"))
+                .collect()
+        });
+        tagged.sort_by_key(|&(i, _)| i);
+        tagged.into_iter().map(|(_, t)| t).collect()
+    }
+
+    /// Kernel-level workers of shard `i`: the total thread budget divides
+    /// across the shard workers, with the remainder spread over the first
+    /// workers so no core idles when `threads` is not a multiple of the
+    /// shard count. Any per-shard value is numerics-neutral — the row-
+    /// sharded kernels are bit-identical at every worker count.
+    fn kernel_threads(&self, shards: usize, i: usize) -> usize {
+        let workers = self.threads.min(shards).max(1);
+        let base = self.threads / workers;
+        let rem = self.threads % workers;
+        (base + usize::from(i % workers < rem)).max(1)
+    }
 }
 
-/// θ → expected per-CU counts, through the *same* tape ops the training
-/// graph uses (masked row softmax + column sum) so the report and the
+/// Fixed-order binary tree reduction of per-shard gradients: shard 0's
+/// buffers accumulate `((g0+g1)+(g2+g3))…` regardless of how many
+/// threads produced them. Right-hand buffers are recycled into the
+/// paired shard's arena.
+fn tree_reduce_grads(outs: &mut [ShardOut]) -> Vec<Vec<f32>> {
+    let s = outs.len();
+    let mut bufs: Vec<Vec<Vec<f32>>> = outs
+        .iter_mut()
+        .map(|o| std::mem::take(&mut o.grads))
+        .collect();
+    let mut d = 1;
+    while d < s {
+        let mut i = 0;
+        while i + d < s {
+            let right = std::mem::take(&mut bufs[i + d]);
+            for (acc, r) in bufs[i].iter_mut().zip(right) {
+                for (a, &b) in acc.iter_mut().zip(&r) {
+                    *a += b;
+                }
+                outs[i + d].arena.give(r);
+            }
+            i += 2 * d;
+        }
+        d *= 2;
+    }
+    std::mem::take(&mut bufs[0])
+}
+
+/// θ → expected per-CU counts through [`theta_counts`] — the *same*
+/// tape graph the training objective records, so the report and the
 /// in-graph objective cannot drift apart.
-fn masked_expected_counts(theta: &[f32], cout: usize, mask: &[bool]) -> Vec<f64> {
+fn expected_counts_native(spec: &SupernetSpec, gi: usize, theta: &[f32]) -> Vec<f64> {
     let mut tape = Tape::new();
-    let th = tape.leaf(Tensor::new(vec![cout, mask.len()], theta.to_vec()));
-    let p = tape.softmax_rows_masked(th, mask);
-    let n = tape.col_sum(p);
+    let th = tape.leaf_copy(spec.theta_stage_shape(gi), theta);
+    let (_, n) = theta_counts(spec, &mut tape, gi, th);
     tape.val(n).data.iter().map(|&v| v as f64).collect()
 }
 
@@ -312,83 +665,136 @@ impl ModelBackend for NativeBackend {
     ) -> Result<Vec<f32>> {
         let n = self.check_batch(x, y)?;
         let hw = self.manifest.dataset.hw;
-        let mut tape = Tape::new();
-        let (lvs, fcw, fcb, w_vars, theta_vars) = self.stage_params(&mut tape, state);
-        let running = self.running_stats(state);
-        let xv = tape.leaf(Tensor::new(vec![n, hw, hw, 3], x.to_vec()));
-        let out = forward(&self.spec, &mut tape, &lvs, fcw, fcb, xv, true, &running);
-        let (ce, bits) = tape.softmax_ce(out.logits, y);
+        let bounds = Self::shard_bounds(n);
+        let s = bounds.len();
+        let arenas = self.take_arenas(s);
+        let jobs: Vec<(usize, Arena)> = arenas.into_iter().enumerate().collect();
+        let state_ro: &TrainState = state;
+        let running = self.running_stats(state_ro);
+        let mut outs: Vec<ShardOut> = self.run_sharded(jobs, |i, arena| {
+            let (b0, b1) = bounds[i];
+            let row = hw * hw * 3;
+            self.train_shard(
+                state_ro,
+                &running,
+                &x[b0 * row..b1 * row],
+                &y[b0..b1],
+                hp,
+                (b1 - b0) as f32 / n as f32,
+                self.kernel_threads(s, i),
+                arena,
+            )
+        });
 
-        // differentiable cost term over the searchable layers
-        let platform = self.spec.platform;
-        let mut tot: Option<Var> = None;
-        for gi in 0..self.spec.n_convs() {
-            if let Some(cv) = out.counts[gi] {
-                let lc = tape.layer_cost(
-                    cv,
-                    &self.spec.layers[gi],
-                    platform.cus(),
-                    platform.p_idle_mw(),
-                    platform.freq_mhz(),
-                    self.seq[gi],
-                );
-                tot = Some(match tot {
-                    None => lc,
-                    Some(t) => tape.add(t, lc),
-                });
-            }
+        // --- fixed-order reduction + metrics ------------------------------
+        let reduced = tree_reduce_grads(&mut outs);
+        let mut loss_val = 0.0f32;
+        let mut correct = 0.0f32;
+        let mut loss_sum = 0.0f32;
+        for o in &outs {
+            loss_val += o.loss;
+            correct += o.bits.correct;
+            loss_sum += o.bits.loss_sum;
         }
-        let (loss, lat_metric, energy_metric) = match tot {
-            Some(t) => {
-                let tv = tape.val(t);
-                let lat = tv.data[0] as f64 + self.fixed_lat;
-                let en = tv.data[1] as f64 + self.fixed_energy_uj;
-                let cost = tape.weighted_pair(t, 1.0 - hp.cost_sel, hp.cost_sel);
-                let scaled = tape.scale(cost, hp.lam);
-                (tape.add(ce, scaled), lat, en)
-            }
-            None => (ce, self.fixed_lat, self.fixed_energy_uj),
-        };
-        let loss_val = tape.val(loss).item();
-        let grads = tape.backward(loss);
+        let (lat_metric, energy_metric) = (outs[0].lat, outs[0].energy_uj);
 
-        // --- SGD updates --------------------------------------------------
-        debug_assert_eq!(w_vars.len(), self.momenta.len());
-        for (&(pleaf, mleaf), pvar) in self.momenta.iter().zip(&w_vars) {
-            let g = &grads[pvar.id()].data;
-            {
-                let mom = &mut state.leaves[mleaf];
-                for (mv, &gv) in mom.iter_mut().zip(g) {
-                    *mv = W_MOMENTUM * *mv + gv;
+        // --- optimizer update (once, on the reduced gradients) ------------
+        let n_w = self.opt.len();
+        debug_assert_eq!(
+            reduced.len(),
+            n_w + self.geoms.iter().filter(|g| g.theta.is_some()).count()
+        );
+        match self.optimizer {
+            WOptimizer::SgdMomentum => {
+                for (slot, g) in self.opt.iter().zip(&reduced[..n_w]) {
+                    {
+                        let mom = &mut state.leaves[slot.m];
+                        for (mv, &gv) in mom.iter_mut().zip(g) {
+                            *mv = W_MOMENTUM * *mv + gv;
+                        }
+                    }
+                    let mom = std::mem::take(&mut state.leaves[slot.m]);
+                    for (pv, &mv) in state.leaves[slot.p].iter_mut().zip(&mom) {
+                        *pv -= hp.lr_w * mv;
+                    }
+                    state.leaves[slot.m] = mom;
                 }
             }
-            let mom = std::mem::take(&mut state.leaves[mleaf]);
-            for (pv, &mv) in state.leaves[pleaf].iter_mut().zip(&mom) {
-                *pv -= hp.lr_w * mv;
+            WOptimizer::Adam => {
+                let tl = self.step_leaf.expect("adam state has a step leaf");
+                state.leaves[tl][0] += 1.0;
+                let t = state.leaves[tl][0] as i32;
+                let b1c = (1.0 - ADAM_B1.powi(t)) as f32;
+                let b2c = (1.0 - ADAM_B2.powi(t)) as f32;
+                for (slot, g) in self.opt.iter().zip(&reduced[..n_w]) {
+                    let v_leaf = slot.v.expect("adam slots carry a second moment");
+                    {
+                        let m = &mut state.leaves[slot.m];
+                        for (mv, &gv) in m.iter_mut().zip(g) {
+                            *mv = (ADAM_B1 as f32) * *mv + (1.0 - ADAM_B1 as f32) * gv;
+                        }
+                    }
+                    {
+                        let v = &mut state.leaves[v_leaf];
+                        for (vv, &gv) in v.iter_mut().zip(g) {
+                            *vv = (ADAM_B2 as f32) * *vv + (1.0 - ADAM_B2 as f32) * gv * gv;
+                        }
+                    }
+                    let m = std::mem::take(&mut state.leaves[slot.m]);
+                    let v = std::mem::take(&mut state.leaves[v_leaf]);
+                    for ((pv, &mv), &vv) in state.leaves[slot.p].iter_mut().zip(&m).zip(&v) {
+                        let mhat = mv / b1c;
+                        let vhat = vv / b2c;
+                        *pv -= hp.lr_w * mhat / (vhat.sqrt() + ADAM_EPS);
+                    }
+                    state.leaves[slot.m] = m;
+                    state.leaves[v_leaf] = v;
+                }
             }
-            state.leaves[mleaf] = mom;
         }
-        for (tleaf, tvar) in &theta_vars {
-            let g = &grads[tvar.id()].data;
+        // θ: plain SGD on its own learning rate
+        let theta_leaves: Vec<usize> = self.geoms.iter().filter_map(|g| g.theta).collect();
+        for (tleaf, g) in theta_leaves.iter().zip(&reduced[n_w..]) {
             for (tv, &gv) in state.leaves[*tleaf].iter_mut().zip(g) {
                 *tv -= hp.lr_th * gv;
             }
         }
-        // --- BN running statistics ---------------------------------------
+
+        // --- BN running statistics (shard-weighted, fixed order) ----------
         for (gi, gl) in self.geoms.iter().enumerate() {
-            if let Some((mean, var)) = &out.batch_stats[gi] {
-                for (m, &b) in state.leaves[gl.mean].iter_mut().zip(mean) {
-                    *m = BN_MOMENTUM * *m + (1.0 - BN_MOMENTUM) * b;
+            if outs[0].stats[gi].is_none() {
+                continue;
+            }
+            let cout = self.spec.layers[gi].cout;
+            let mut mean = vec![0.0f32; cout];
+            let mut var = vec![0.0f32; cout];
+            for o in &outs {
+                let (m, v) = o.stats[gi].as_ref().expect("shards share the geometry");
+                for (acc, &x) in mean.iter_mut().zip(m) {
+                    *acc += o.scale * x;
                 }
-                for (v, &b) in state.leaves[gl.var].iter_mut().zip(var) {
-                    *v = BN_MOMENTUM * *v + (1.0 - BN_MOMENTUM) * b;
+                for (acc, &x) in var.iter_mut().zip(v) {
+                    *acc += o.scale * x;
                 }
             }
+            for (m, &b) in state.leaves[gl.mean].iter_mut().zip(&mean) {
+                *m = BN_MOMENTUM * *m + (1.0 - BN_MOMENTUM) * b;
+            }
+            for (v, &b) in state.leaves[gl.var].iter_mut().zip(&var) {
+                *v = BN_MOMENTUM * *v + (1.0 - BN_MOMENTUM) * b;
+            }
         }
+
+        // --- recycle ------------------------------------------------------
+        for g in reduced {
+            outs[0].arena.give(g);
+        }
+        self.put_arenas(outs.into_iter().map(|o| o.arena).collect());
+
         Ok(vec![
             loss_val,
-            bits.loss_sum / n as f32,
-            bits.correct / n as f32,
+            loss_sum / n as f32,
+            correct / n as f32,
             lat_metric as f32,
             energy_metric as f32,
         ])
@@ -397,13 +803,33 @@ impl ModelBackend for NativeBackend {
     fn eval_batch(&self, state: &TrainState, x: &[f32], y: &[i32]) -> Result<Vec<f32>> {
         let n = self.check_batch(x, y)?;
         let hw = self.manifest.dataset.hw;
-        let mut tape = Tape::new();
-        let (lvs, fcw, fcb, _, _) = self.stage_params(&mut tape, state);
+        let bounds = Self::shard_bounds(n);
+        let s = bounds.len();
+        let arenas = self.take_arenas(s);
+        let jobs: Vec<(usize, Arena)> = arenas.into_iter().enumerate().collect();
         let running = self.running_stats(state);
-        let xv = tape.leaf(Tensor::new(vec![n, hw, hw, 3], x.to_vec()));
-        let out = forward(&self.spec, &mut tape, &lvs, fcw, fcb, xv, false, &running);
-        let (_, bits) = tape.softmax_ce(out.logits, y);
-        Ok(vec![bits.correct, bits.loss_sum])
+        let outs = self.run_sharded(jobs, |i, arena| {
+            let (b0, b1) = bounds[i];
+            let row = hw * hw * 3;
+            self.eval_shard(
+                state,
+                &running,
+                &x[b0 * row..b1 * row],
+                &y[b0..b1],
+                self.kernel_threads(s, i),
+                arena,
+            )
+        });
+        let mut correct = 0.0f32;
+        let mut loss_sum = 0.0f32;
+        let mut arenas = Vec::with_capacity(s);
+        for (bits, arena) in outs {
+            correct += bits.correct;
+            loss_sum += bits.loss_sum;
+            arenas.push(arena);
+        }
+        self.put_arenas(arenas);
+        Ok(vec![correct, loss_sum])
     }
 
     fn cost_report(&self, state: &TrainState) -> Result<(Vec<f32>, Vec<f32>)> {
@@ -417,7 +843,7 @@ impl ModelBackend for NativeBackend {
         let mut energy_total = 0.0f64;
         for (gi, l) in self.spec.layers.iter().enumerate() {
             let counts: Vec<f64> = match self.geoms.get(gi).and_then(|g| g.theta) {
-                Some(t) => masked_expected_counts(&state.leaves[t], l.cout, &self.spec.masks[gi]),
+                Some(t) => expected_counts_native(&self.spec, gi, &state.leaves[t]),
                 None => {
                     let mut c = vec![0.0; k];
                     c[0] = l.cout as f64;

@@ -1,32 +1,47 @@
 //! The native training engine: pure-Rust tensors, reverse-mode autodiff
 //! and a K-column supernet builder — the `--backend native` implementation
-//! of [`crate::runtime::ModelBackend`].
+//! of [`crate::runtime::ModelBackend`], executed as a *planned engine*
+//! since the arena/sharding rework.
 //!
 //! Layering (bottom-up):
 //!
-//! * [`tensor`] — dense f32 buffers + the three matmul kernels;
+//! * [`tensor`] — dense f32 buffers + the three cache-blocked matmul
+//!   kernels, with row-sharded scoped-thread-pool wrappers;
+//! * [`arena`] — the exact-size buffer pool every step's tape draws from
+//!   and recycles into (steady-state steps allocate nothing);
 //! * [`tape`] — the autodiff core: exactly the ops the supernets need
 //!   (conv2d via im2col, depthwise conv, fake-quant STE, batch-stat norm,
 //!   ReLU, global-avg-pool, softmax/CE) plus the differentiable cost term
 //!   pinned to `soc::analytical::cu_cycles` by piecewise-linear
-//!   interpolation;
+//!   interpolation; gradient slots are `Option`s that fail loudly when a
+//!   consumed slot is touched;
+//! * [`plan`] — the one-time shape-inference pass that sizes the
+//!   per-shard arenas before the first step runs;
 //! * [`supernet`] — ResNet/MobileNet search spaces built from the layer
-//!   table and the platform registry: θ is `[cout, K]` for a K-CU SoC,
-//!   per-column weight branches follow each CU's `quant`, ineligible CUs
-//!   are softmax-masked;
+//!   table and the platform registry: the ODiMO channel search plus the
+//!   `_prune` / `_layerwise` baseline spaces, per-column weight branches
+//!   following each CU's `quant`, ineligible CUs softmax-masked;
 //! * [`backend`] — [`NativeBackend`]: the train/eval/cost loop with
-//!   SGD(+momentum) per-group updates and BN running statistics.
+//!   intra-step batch sharding, fixed-order gradient tree reduction, and
+//!   SGD+momentum or Adam per-group updates.
 //!
-//! Everything is deterministic: seeded [`crate::datasets::rng::Rng`]
-//! init, fixed accumulation order, no threads — two same-seed runs
-//! produce bit-identical `RunRecord`s (pinned by `tests/native.rs`).
+//! Everything is deterministic *independent of the thread count*: seeded
+//! [`crate::datasets::rng::Rng`] init, a batch-size-only shard structure,
+//! fixed accumulation order inside every shard and kernel row chunk, and
+//! shard-index-ordered reductions — two same-seed runs produce
+//! bit-identical `RunRecord`s at 1 or N threads (pinned by
+//! `tests/native.rs` and `tests/native_exec.rs`).
 
+pub mod arena;
 pub mod backend;
+pub mod plan;
 pub mod supernet;
 pub mod tape;
 pub mod tensor;
 
-pub use backend::NativeBackend;
-pub use supernet::{Arch, SupernetSpec};
-pub use tape::{EvalBits, QuantKind, Tape, Var};
+pub use arena::Arena;
+pub use backend::{NativeBackend, NativeOptions, WOptimizer, NSHARDS};
+pub use plan::ExecPlan;
+pub use supernet::{Arch, SearchMode, SupernetSpec};
+pub use tape::{EvalBits, Gradients, QuantKind, Tape, Var};
 pub use tensor::Tensor;

@@ -1,0 +1,222 @@
+//! The planning pass of the planned executor: a one-time shape-inference
+//! walk over the supernet graph that enumerates every buffer one training
+//! step allocates — parameter copies, activations, im2col patch matrices,
+//! θ machinery, gradient slots and backward scratch — so the per-shard
+//! [`Arena`]s can be sized *before* the first step runs.
+//!
+//! The walk mirrors `supernet::forward` + `Tape::backward` step for step:
+//! for each plan step it adds the op's output value (and, because the
+//! reverse sweep zero-initializes one slot per node, a same-sized gradient
+//! buffer), the op's tracked auxiliaries, and the backward closure's
+//! scratch buffers. The result is a `length → count` multiset that
+//! [`ExecPlan::prime`] pre-allocates into an arena; a primed steady-state
+//! step then performs no allocations at all (pinned by
+//! `tests/native_exec.rs`). If an op's allocation behavior changes without
+//! this walk being updated the engine still works — the arena grows once,
+//! on the first step, and the growth counter makes the drift visible.
+
+use std::collections::HashMap;
+
+use crate::soc::LayerType;
+
+use super::arena::Arena;
+use super::supernet::{PlanStep, SearchMode, SupernetSpec};
+
+/// `length → buffer count` multiset collector.
+#[derive(Default)]
+struct SizeBag {
+    counts: HashMap<usize, usize>,
+}
+
+impl SizeBag {
+    /// `count` plain buffers of `len` elements.
+    fn add(&mut self, len: usize, count: usize) {
+        if len > 0 && count > 0 {
+            *self.counts.entry(len).or_default() += count;
+        }
+    }
+
+    /// A tape *node* of `len` elements: its forward value plus the
+    /// zero-initialized gradient slot the reverse sweep gives it.
+    fn add_node(&mut self, len: usize, count: usize) {
+        self.add(len, 2 * count);
+    }
+}
+
+/// Sized allocation plan for the per-shard arenas of one native variant.
+pub struct ExecPlan {
+    /// `(len, count)` per shard slot, aligned with the backend's arenas
+    shard_sizes: Vec<Vec<(usize, usize)>>,
+    /// batch rows each shard processes
+    pub shard_n: Vec<usize>,
+}
+
+impl ExecPlan {
+    /// Plan `shards` fixed batch shards of a `batch`-row step.
+    pub fn new(spec: &SupernetSpec, batch: usize, shards: usize) -> ExecPlan {
+        let s = shards.min(batch).max(1);
+        let mut shard_n = Vec::with_capacity(s);
+        let mut shard_sizes = Vec::with_capacity(s);
+        for i in 0..s {
+            let n = (i + 1) * batch / s - i * batch / s;
+            shard_n.push(n);
+            shard_sizes.push(step_sizes(spec, n));
+        }
+        ExecPlan {
+            shard_sizes,
+            shard_n,
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shard_n.len()
+    }
+
+    /// Pre-allocate shard `i`'s buffers into `arena`.
+    pub fn prime(&self, i: usize, arena: &mut Arena) {
+        for &(len, count) in &self.shard_sizes[i] {
+            arena.prime(len, count);
+        }
+    }
+
+    /// Total f32 elements the plan provisions across all shards.
+    pub fn planned_elems(&self) -> usize {
+        self.shard_sizes
+            .iter()
+            .flatten()
+            .map(|&(len, count)| len * count)
+            .sum()
+    }
+}
+
+/// Buffer multiset of one training step on an `n`-row batch shard.
+fn step_sizes(spec: &SupernetSpec, n: usize) -> Vec<(usize, usize)> {
+    let mut bag = SizeBag::default();
+    let hw = spec.dataset.hw;
+
+    // --- staged parameter leaves --------------------------------------
+    for gi in 0..spec.n_convs() {
+        let l = &spec.layers[gi];
+        bag.add_node(l.cout * spec.fan_in(gi), 1); // w
+        bag.add_node(l.cout, 2); // bn scale, bias
+        if l.searchable {
+            bag.add_node(spec.theta_shape(gi).iter().product(), 1);
+        }
+    }
+    bag.add_node(spec.fc_cin * spec.classes, 1); // fc/w
+    bag.add_node(spec.classes, 1); // fc/b
+    bag.add_node(n * hw * hw * 3, 1); // x
+
+    // --- forward plan walk --------------------------------------------
+    let mut n_search = 0usize;
+    let mut cur_hw = hw;
+    for step in &spec.plan {
+        match *step {
+            PlanStep::Conv(i) => {
+                conv_bn_sizes(&mut bag, spec, n, i, cur_hw, true);
+                cur_hw = spec.layers[i].ox;
+                n_search += spec.layers[i].searchable as usize;
+            }
+            PlanStep::ResBlock { c1, c2, dn } => {
+                conv_bn_sizes(&mut bag, spec, n, c1, cur_hw, true);
+                conv_bn_sizes(&mut bag, spec, n, c2, spec.layers[c1].ox, false);
+                if let Some(d) = dn {
+                    conv_bn_sizes(&mut bag, spec, n, d, cur_hw, false);
+                    n_search += spec.layers[d].searchable as usize;
+                }
+                // residual add + trailing relu
+                let l2 = &spec.layers[c2];
+                bag.add_node(n * l2.ox * l2.oy * l2.cout, 2);
+                n_search += spec.layers[c1].searchable as usize
+                    + spec.layers[c2].searchable as usize;
+                cur_hw = l2.ox;
+            }
+            PlanStep::DwPw { dw, pw } => {
+                conv_bn_sizes(&mut bag, spec, n, dw, cur_hw, true);
+                conv_bn_sizes(&mut bag, spec, n, pw, spec.layers[dw].ox, true);
+                cur_hw = spec.layers[pw].ox;
+                n_search += spec.layers[dw].searchable as usize
+                    + spec.layers[pw].searchable as usize;
+            }
+        }
+    }
+
+    // --- head + loss ---------------------------------------------------
+    bag.add_node(n * spec.fc_cin, 1); // global average pool
+    bag.add_node(n * spec.classes, 1); // fc matmul
+    bag.add(n * spec.fc_cin, 1); // fc dA scratch
+    bag.add(spec.fc_cin * spec.classes, 1); // fc dB scratch
+    bag.add_node(n * spec.classes, 1); // bias add
+    bag.add(n * spec.classes, 1); // CE probabilities (aux)
+    bag.add_node(1, 1); // CE loss
+
+    // --- differentiable cost term + loss scaling ------------------------
+    bag.add_node(1, 1); // shard-fraction loss scale (always recorded)
+    if n_search > 0 {
+        bag.add_node(2, n_search); // per-layer [lat, energy]
+        bag.add_node(2, n_search - 1); // running sum
+        bag.add_node(1, 3); // weighted pair, λ scale, total loss
+    }
+
+    bag.counts.into_iter().collect()
+}
+
+/// Buffers of one conv→bn[→relu] group on an `n`-row shard: θ machinery
+/// per search mode, conv output + im2col/backward scratch, batch-norm
+/// intermediates (mirrors `supernet::forward`'s `conv_bn`).
+fn conv_bn_sizes(
+    bag: &mut SizeBag,
+    spec: &SupernetSpec,
+    n: usize,
+    gi: usize,
+    input_hw: usize,
+    with_relu: bool,
+) {
+    let l = &spec.layers[gi];
+    let k = spec.platform.n_cus();
+    let (cout, f) = (l.cout, spec.fan_in(gi));
+    let rows = n * l.ox * l.oy;
+    if l.searchable {
+        match spec.search {
+            SearchMode::Channel | SearchMode::Fixed => {
+                bag.add_node(cout * k, 1); // probs
+                bag.add_node(k, 1); // counts
+                bag.add(cout * f, k); // quant branches (aux)
+                bag.add_node(cout * f, 1); // effective weights
+            }
+            SearchMode::Prune => {
+                bag.add_node(cout * 2, 1); // probs
+                bag.add_node(2, 1); // (keep, prune) pair
+                bag.add_node(k, 1); // embedded counts
+                bag.add(cout * f, 2); // keep + zero branches (aux)
+                bag.add_node(cout * f, 1); // effective weights
+            }
+            SearchMode::Layerwise => {
+                bag.add_node(k, 2); // gate row + counts
+                bag.add_node(cout * k, 1); // broadcast probs
+                bag.add(cout * f, k); // quant branches (aux)
+                bag.add_node(cout * f, 1); // effective weights
+            }
+        }
+    } else {
+        bag.add_node(cout * f, 1); // fake-quant STE weights
+    }
+    // conv output + its backward scratch
+    bag.add_node(rows * cout, 1);
+    if l.ltype == LayerType::Dw {
+        // dw backward: dx (input-shaped) + dw
+        bag.add(n * input_hw * input_hw * l.cin, 1);
+        bag.add(cout * f, 1);
+    } else {
+        bag.add(rows * f, 1); // im2col patches (aux)
+        bag.add(rows * f, 1); // dcols scratch
+        bag.add(cout * f, 1); // dW scratch
+    }
+    // batch norm: x̂ (aux) + output node + 2 per-channel scratch rows
+    bag.add(rows * cout, 1);
+    bag.add_node(rows * cout, 1);
+    bag.add(cout, 2);
+    if with_relu {
+        bag.add_node(rows * cout, 1);
+    }
+}

@@ -10,7 +10,19 @@
 //! "supernets are 2-CU" gap: `diana_resnet20_c10`, `trident_mbv1_c10` and
 //! `gap9_resnet20_c10` are all the same code path.
 //!
-//! Variant grammar: `<platform>_<arch>_<task>[_w050|_w025][_fixed]` with
+//! Besides the ODiMO channel search the builder hosts the two baseline
+//! search spaces that used to exist only as XLA artifacts:
+//!
+//! * `_prune` — keep-vs-prune per channel (θ `[cout, 2]`): the kept
+//!   branch runs on CU column 0 with its representation, the pruned
+//!   branch is the zero weight ([`QuantKind::Zero`]), and only the kept
+//!   expected count reaches the cost model (Fig. 7-top baseline);
+//! * `_layerwise` — one gate per layer (θ `[K]`): the whole layer's
+//!   channels share a single eligibility-masked softmax over the CUs
+//!   (the path-based DNAS baseline, Fig. 7-bottom).
+//!
+//! Variant grammar:
+//! `<platform>_<arch>_<task>[_w050|_w025][_fixed|_prune|_layerwise]` with
 //! `arch ∈ {resnet20, resnet8, mbv1, tiny}` and
 //! `task ∈ {c10, c100, imgnet, tiny}`; `_fixed` builds the plain
 //! fixed-precision baseline net (no θ — Table II's comparison point),
@@ -35,6 +47,30 @@ pub enum Arch {
     Tiny,
 }
 
+/// Which search space the variant trains (manifest `search_kind`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchMode {
+    /// per-channel K-way CU choice, θ `[cout, K]` (the ODiMO search)
+    Channel,
+    /// keep-vs-prune per channel, θ `[cout, 2]` (structured-pruning baseline)
+    Prune,
+    /// one K-way gate per layer, θ `[K]` (path-based DNAS baseline)
+    Layerwise,
+    /// no θ anywhere: the fixed-precision baseline net
+    Fixed,
+}
+
+impl SearchMode {
+    pub fn kind_str(self) -> &'static str {
+        match self {
+            SearchMode::Channel => "channel",
+            SearchMode::Prune => "prune",
+            SearchMode::Layerwise => "layerwise",
+            SearchMode::Fixed => "fixed",
+        }
+    }
+}
+
 /// One step of the forward plan (indices into the geometry table).
 #[derive(Debug, Clone, Copy)]
 pub enum PlanStep {
@@ -55,6 +91,7 @@ pub struct SupernetSpec {
     pub variant: String,
     pub platform: Platform,
     pub arch: Arch,
+    pub search: SearchMode,
     /// no θ anywhere: the fixed-precision baseline net
     pub fixed: bool,
     pub dataset: DatasetSpec,
@@ -78,12 +115,32 @@ impl SupernetSpec {
     /// Parse a variant name and build its search space.
     pub fn build(variant: &str) -> Result<SupernetSpec> {
         let mut toks: Vec<&str> = variant.split('_').collect();
-        let mut fixed = false;
+        let mut search = SearchMode::Channel;
         let mut wm = 1.0f64;
+        let set_mode = |cur: &mut SearchMode, new: SearchMode| -> Result<()> {
+            if *cur != SearchMode::Channel {
+                bail!(
+                    "variant '{variant}': at most one of _fixed/_prune/_layerwise \
+                     (got {} and {})",
+                    cur.kind_str(),
+                    new.kind_str()
+                );
+            }
+            *cur = new;
+            Ok(())
+        };
         loop {
             match toks.last().copied() {
                 Some("fixed") => {
-                    fixed = true;
+                    set_mode(&mut search, SearchMode::Fixed)?;
+                    toks.pop();
+                }
+                Some("prune") => {
+                    set_mode(&mut search, SearchMode::Prune)?;
+                    toks.pop();
+                }
+                Some("layerwise") => {
+                    set_mode(&mut search, SearchMode::Layerwise)?;
                     toks.pop();
                 }
                 Some("w050") => {
@@ -97,16 +154,10 @@ impl SupernetSpec {
                 _ => break,
             }
         }
-        if let Some(last @ ("prune" | "layerwise")) = toks.last().copied() {
-            bail!(
-                "variant '{variant}': the {last} baseline search space is only \
-                 available through the XLA artifact backend (--backend xla)"
-            );
-        }
         if toks.len() < 3 {
             bail!(
                 "variant '{variant}' does not match the native grammar \
-                 <platform>_<arch>_<task>[_w050|_w025][_fixed]"
+                 <platform>_<arch>_<task>[_w050|_w025][_fixed|_prune|_layerwise]"
             );
         }
         let task = toks.pop().unwrap();
@@ -160,6 +211,7 @@ impl SupernetSpec {
             Arch::Tiny => resnet_geoms(dataset.hw, 4, &[4], 1),
             Arch::Mbv1 => mbv1_geoms(dataset.hw, wm),
         };
+        let fixed = search == SearchMode::Fixed;
         if fixed {
             for l in layers.iter_mut() {
                 l.searchable = false;
@@ -187,6 +239,7 @@ impl SupernetSpec {
             variant: variant.to_string(),
             platform,
             arch,
+            search,
             fixed,
             dataset,
             layers,
@@ -198,13 +251,32 @@ impl SupernetSpec {
         })
     }
 
+    /// θ leaf shape of searchable conv geometry `gi` for this search mode.
+    pub fn theta_shape(&self, gi: usize) -> Vec<usize> {
+        let cout = self.layers[gi].cout;
+        match self.search {
+            SearchMode::Channel | SearchMode::Fixed => vec![cout, self.platform.n_cus()],
+            SearchMode::Prune => vec![cout, 2],
+            SearchMode::Layerwise => vec![self.platform.n_cus()],
+        }
+    }
+
+    /// θ shape as staged on a tape: layerwise θ is *stored* flat `[K]`
+    /// but staged as one softmax row `[1, K]`.
+    pub fn theta_stage_shape(&self, gi: usize) -> Vec<usize> {
+        match self.search {
+            SearchMode::Layerwise => vec![1, self.platform.n_cus()],
+            _ => self.theta_shape(gi),
+        }
+    }
+
     /// Assemble the in-memory [`Manifest`] (no files, no functions table).
     pub fn to_manifest(&self, cost_scale: CostScale) -> Manifest {
-        let n_cus = self.platform.n_cus();
         let layers = self
             .layers
             .iter()
-            .map(|l| LayerSpec {
+            .enumerate()
+            .map(|(gi, l)| LayerSpec {
                 name: l.name.clone(),
                 ltype: l.ltype.name().to_string(),
                 cin: l.cin,
@@ -214,14 +286,18 @@ impl SupernetSpec {
                 oy: l.oy,
                 stride: l.stride,
                 searchable: l.searchable,
-                theta_len: if l.searchable { n_cus * l.cout } else { 0 },
+                theta_len: if l.searchable {
+                    self.theta_shape(gi).iter().product()
+                } else {
+                    0
+                },
             })
             .collect();
         Manifest {
             variant: self.variant.clone(),
             platform: self.platform.name().to_string(),
             w_optimizer: "sgdm".into(),
-            search_kind: if self.fixed { "fixed" } else { "channel" }.into(),
+            search_kind: self.search.kind_str().into(),
             dataset: self.dataset.clone(),
             layers,
             cost_scale,
@@ -235,12 +311,18 @@ impl SupernetSpec {
         }
     }
 
-    /// Uniform-θ expected per-CU counts of layer `gi` (the init point the
-    /// cost scale is normalized at): `cout / #eligible` on each eligible
-    /// column.
+    /// Expected per-CU counts of layer `gi` at the uniform-θ init point
+    /// (where the cost scale is normalized): `cout / #eligible` on each
+    /// eligible column — except the prune space, whose init point keeps
+    /// half the channels on CU 0 and prunes the rest.
     pub fn uniform_counts(&self, gi: usize) -> Vec<f64> {
         let l = &self.layers[gi];
         let mask = &self.masks[gi];
+        if self.search == SearchMode::Prune {
+            let mut c = vec![0.0; mask.len()];
+            c[0] = l.cout as f64 / 2.0;
+            return c;
+        }
         let e = mask.iter().filter(|&&m| m).count().max(1);
         mask.iter()
             .map(|&m| if m { l.cout as f64 / e as f64 } else { 0.0 })
@@ -263,12 +345,19 @@ impl SupernetSpec {
 
     /// Masked θ init: eligible columns at 0 (uniform), ineligible pinned
     /// to the one-hot floor so discretization can never select them.
+    /// The prune space has no ineligible columns (keep/prune are always
+    /// both available); the layerwise space is a single masked row.
     pub fn theta_init(&self, gi: usize) -> Vec<f32> {
-        let l = &self.layers[gi];
+        let shape = self.theta_shape(gi);
+        let n: usize = shape.iter().product();
+        if self.search == SearchMode::Prune {
+            return vec![0.0; n];
+        }
         let mask = &self.masks[gi];
         let k = mask.len();
-        let mut t = vec![0.0f32; l.cout * k];
-        for c in 0..l.cout {
+        let rows = n / k;
+        let mut t = vec![0.0f32; n];
+        for c in 0..rows {
             for (j, &m) in mask.iter().enumerate() {
                 if !m {
                     t[c * k + j] = -ONE_HOT_LOGIT;
@@ -435,6 +524,59 @@ pub struct ForwardOut {
 
 const BN_EPS: f32 = 1e-5;
 
+/// Record the θ → (weight-branch probabilities, expected counts) graph
+/// of one searchable layer for the spec's search mode — the *single*
+/// implementation shared by the training forward ([`theta_weights`])
+/// and the host-side cost report, so the in-graph objective and the
+/// report cannot drift apart. The returned counts var is always a
+/// K-vector aligned with the platform's CU columns.
+pub fn theta_counts(spec: &SupernetSpec, tape: &mut Tape, gi: usize, th: Var) -> (Var, Var) {
+    match spec.search {
+        SearchMode::Channel | SearchMode::Fixed => {
+            let probs = tape.softmax_rows_masked(th, &spec.masks[gi]);
+            let counts = tape.col_sum(probs);
+            (probs, counts)
+        }
+        SearchMode::Prune => {
+            // keep-vs-prune: only the kept expected count reaches the
+            // cost model, embedded on CU column 0
+            let probs = tape.softmax_rows_masked(th, &[true, true]);
+            let pair = tape.col_sum(probs);
+            let counts = tape.keep_counts(pair, spec.platform.n_cus());
+            (probs, counts)
+        }
+        SearchMode::Layerwise => {
+            // one gate per layer: a single masked softmax row shared by
+            // every channel
+            let p1 = tape.softmax_rows_masked(th, &spec.masks[gi]);
+            let pc = tape.broadcast_rows(p1, spec.layers[gi].cout);
+            let counts = tape.col_sum(pc);
+            (pc, counts)
+        }
+    }
+}
+
+/// θ → (expected counts, Eq. 5 effective weights) of one searchable
+/// layer: [`theta_counts`] plus the mode's weight branches (the pruned
+/// alternative is the zero weight).
+fn theta_weights(
+    spec: &SupernetSpec,
+    tape: &mut Tape,
+    gi: usize,
+    w: Var,
+    th: Var,
+) -> (Var, Var) {
+    let (probs, counts) = theta_counts(spec, tape, gi, th);
+    let weff = match spec.search {
+        SearchMode::Prune => {
+            let branches = [spec.quants[0], QuantKind::Zero];
+            tape.effective_weights(w, probs, &branches)
+        }
+        _ => tape.effective_weights(w, probs, &spec.quants),
+    };
+    (counts, weff)
+}
+
 /// Run the supernet forward on `tape`. `running` holds each conv's BN
 /// running `(mean, var)` for inference mode.
 #[allow(clippy::too_many_arguments)]
@@ -462,9 +604,9 @@ pub fn forward(
         let p = &lv[gi];
         let weff = match p.theta {
             Some(th) => {
-                let probs = tape.softmax_rows_masked(th, &spec.masks[gi]);
-                counts[gi] = Some(tape.col_sum(probs));
-                tape.effective_weights(p.w, probs, &spec.quants)
+                let (cv, weff) = theta_weights(spec, tape, gi, p.w, th);
+                counts[gi] = Some(cv);
+                weff
             }
             // fixed-precision layers run on the primary CU's representation
             None => tape.fake_quant_ste(p.w, spec.quants[0]),
@@ -562,6 +704,7 @@ mod tests {
         assert_eq!(s.arch, Arch::Resnet20);
         assert_eq!(s.dataset.classes, 10);
         assert!(!s.fixed);
+        assert_eq!(s.search, SearchMode::Channel);
         // resnet20 scaled: stem + 9 blocks (2 convs + 2 downsamples) + fc
         assert_eq!(s.layers.last().unwrap().name, "fc");
         assert!(s.layers.len() > 10);
@@ -581,6 +724,28 @@ mod tests {
         assert!(SupernetSpec::build("nosuchsoc_resnet20_c10").is_err());
         assert!(SupernetSpec::build("diana_vgg_c10").is_err());
         assert!(SupernetSpec::build("diana_resnet20").is_err());
+    }
+
+    #[test]
+    fn prune_and_layerwise_variants_parse() {
+        let p = SupernetSpec::build("diana_resnet20_c10_prune").unwrap();
+        assert_eq!(p.search, SearchMode::Prune);
+        assert!(!p.fixed);
+        assert_eq!(p.theta_shape(0), vec![p.layers[0].cout, 2]);
+        // prune init keeps half the channels; only CU 0 carries cost
+        let u = p.uniform_counts(0);
+        assert_eq!(u[0], p.layers[0].cout as f64 / 2.0);
+        assert!(u[1..].iter().all(|&x| x == 0.0));
+
+        let l = SupernetSpec::build("gap9_mbv1_c10_layerwise").unwrap();
+        assert_eq!(l.search, SearchMode::Layerwise);
+        assert_eq!(l.theta_shape(0), vec![3]);
+        // a layerwise θ row still pins ineligible CUs
+        let dw_gi = l.layers.iter().position(|x| x.ltype == LayerType::Dw).unwrap();
+        let t = l.theta_init(dw_gi);
+        assert_eq!(t.len(), 3);
+
+        assert!(SupernetSpec::build("diana_resnet20_c10_fixed_prune").is_err());
     }
 
     #[test]

@@ -7,33 +7,56 @@
 //! can only be consumed by later-created nodes, one reverse sweep in
 //! creation order is a valid topological backward pass.
 //!
+//! Since the planned-executor rework every *tensor buffer* the tape
+//! touches — node values, auxiliary intermediates (im2col patch
+//! matrices, BN x̂, softmax probabilities, quant branches), gradient
+//! slots and backward scratch — comes from an [`Arena`] the tape owns,
+//! and [`Tape::recycle`] returns all of them when the step is done, so
+//! steady-state steps perform no tensor-buffer allocations (small
+//! bookkeeping — node/closure boxes, per-channel stat vectors — still
+//! heap-allocates, and is negligible next to the buffers). Gradient
+//! slots are
+//! `Option<Vec<f32>>`: an interior node's gradient is *moved out* when
+//! its backward closure fires, and any later accumulate into the
+//! consumed slot panics loudly instead of silently broadcasting into a
+//! stale placeholder.
+//!
 //! Op inventory (mirroring `python/compile/{layers,kernels}`):
 //! conv2d via im2col matmul, depthwise conv, per-row int8/ternary
 //! fake-quant with the straight-through estimator, Eq. 5 effective
-//! weights, batch-stat normalization, ReLU, global average pool, bias
+//! weights, batch-stat norm, ReLU, global average pool, bias
 //! add, softmax cross-entropy, masked θ-softmax — plus [`Tape::layer_cost`],
 //! the differentiable cost term: a piecewise-linear interpolation of
 //! `soc::analytical::cu_cycles` that is *exact at integer channel counts*,
 //! so the in-graph cost is pinned to the simulator the searches deploy on.
+//! The prune / layerwise baseline search spaces add [`Tape::keep_counts`]
+//! and [`Tape::broadcast_rows`] plus the zero-weight branch
+//! [`QuantKind::Zero`].
+//!
+//! Convolution and matmul ops run on the blocked kernels of
+//! [`super::tensor`], sharded over `kernel_threads` scoped workers —
+//! bit-identical results for any thread count (each output element is
+//! produced by exactly one worker in a fixed accumulation order).
 
 use std::rc::Rc;
 
 use crate::soc::{analytical::cu_cycles, CuSpec, Layer};
 
-use super::tensor::{matmul, matmul_at, matmul_bt, Tensor};
+use super::arena::Arena;
+use super::tensor::{par_matmul_at_into, par_matmul_bt_into, par_matmul_into, Tensor};
 
 /// Handle to one tape node.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Var(usize);
 
 impl Var {
-    /// Index into the gradient vector returned by [`Tape::backward`].
+    /// Index into the gradient slots returned by [`Tape::backward`].
     pub fn id(self) -> usize {
         self.0
     }
 }
 
-type BackFn = Box<dyn Fn(&Tensor, &mut [Tensor])>;
+type BackFn = Box<dyn Fn(&[f32], &mut GradStore)>;
 
 struct Node {
     val: Rc<Tensor>,
@@ -41,14 +64,86 @@ struct Node {
 }
 
 /// One recorded forward pass.
-#[derive(Default)]
 pub struct Tape {
     nodes: Vec<Node>,
+    /// auxiliary buffers saved for backward (im2col patches, BN x̂, CE
+    /// probabilities, quant branches) — tracked so recycle can reclaim
+    aux: Vec<Rc<Tensor>>,
+    arena: Arena,
+    kernel_threads: usize,
 }
 
-fn acc(grads: &mut [Tensor], i: usize, g: &[f32]) {
-    for (d, &s) in grads[i].data.iter_mut().zip(g) {
-        *d += s;
+impl Default for Tape {
+    fn default() -> Tape {
+        Tape {
+            nodes: Vec::new(),
+            aux: Vec::new(),
+            arena: Arena::new(),
+            kernel_threads: 1,
+        }
+    }
+}
+
+/// Gradient slots + scratch arena threaded through the reverse sweep.
+/// `None` marks a slot whose gradient was moved out by its own backward
+/// closure — touching it again is a bug and panics.
+pub struct GradStore {
+    slots: Vec<Option<Vec<f32>>>,
+    scratch: Arena,
+}
+
+impl GradStore {
+    /// Accumulate `src` into slot `i`.
+    fn acc(&mut self, i: usize, src: &[f32]) {
+        let d = self.slots[i]
+            .as_mut()
+            .expect("accumulating into a consumed gradient slot");
+        debug_assert_eq!(d.len(), src.len());
+        for (dv, &sv) in d.iter_mut().zip(src) {
+            *dv += sv;
+        }
+    }
+
+    /// Mutable view of slot `i` (panics if the slot was consumed).
+    fn grad_mut(&mut self, i: usize) -> &mut [f32] {
+        self.slots[i]
+            .as_mut()
+            .expect("reading a consumed gradient slot")
+    }
+
+    fn take_raw(&mut self, len: usize) -> Vec<f32> {
+        self.scratch.take_raw(len)
+    }
+
+    fn take_zeroed(&mut self, len: usize) -> Vec<f32> {
+        self.scratch.take_zeroed(len)
+    }
+
+    fn give(&mut self, v: Vec<f32>) {
+        self.scratch.give(v)
+    }
+}
+
+/// Result of a full reverse sweep: one gradient buffer per node, with
+/// interior slots consumed (`None`) by their own backward closures.
+pub struct Gradients {
+    slots: Vec<Option<Vec<f32>>>,
+}
+
+impl Gradients {
+    /// Move out the gradient of `v` (typically a leaf). Panics if the
+    /// slot was consumed by the sweep or already taken.
+    pub fn take(&mut self, v: Var) -> Vec<f32> {
+        self.slots[v.0]
+            .take()
+            .expect("gradient slot consumed or already taken")
+    }
+
+    /// Borrow the gradient of `v`. Panics if the slot was consumed.
+    pub fn get(&self, v: Var) -> &[f32] {
+        self.slots[v.0]
+            .as_ref()
+            .expect("gradient slot consumed or already taken")
     }
 }
 
@@ -63,6 +158,9 @@ pub enum QuantKind {
     Ternary,
     /// no re-quantization (full-precision CU)
     Identity,
+    /// all-zero branch (the "pruned" alternative — not a real CU; it
+    /// contributes neither weights nor straight-through gradient)
+    Zero,
 }
 
 impl QuantKind {
@@ -78,6 +176,7 @@ impl QuantKind {
     pub fn quant_row(self, row: &[f32], out: &mut [f32]) {
         match self {
             QuantKind::Identity => out.copy_from_slice(row),
+            QuantKind::Zero => out.iter_mut().for_each(|o| *o = 0.0),
             QuantKind::Int8 => {
                 let amax = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
                 let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
@@ -121,17 +220,54 @@ impl Tape {
         Tape::default()
     }
 
-    fn push(&mut self, val: Tensor, back: Option<BackFn>) -> Var {
-        self.nodes.push(Node {
-            val: Rc::new(val),
-            back,
-        });
+    /// A tape whose buffers come from (and recycle back into) `arena`.
+    pub fn with_arena(arena: Arena) -> Tape {
+        Tape {
+            arena,
+            ..Tape::default()
+        }
+    }
+
+    /// Worker count for the row-sharded conv/matmul kernels recorded
+    /// from now on (results are bit-identical for any value).
+    pub fn set_kernel_threads(&mut self, t: usize) {
+        self.kernel_threads = t.max(1);
+    }
+
+    fn alloc_raw(&mut self, len: usize) -> Vec<f32> {
+        self.arena.take_raw(len)
+    }
+
+    fn alloc_zeroed(&mut self, len: usize) -> Vec<f32> {
+        self.arena.take_zeroed(len)
+    }
+
+    fn push_rc(&mut self, val: Rc<Tensor>, back: Option<BackFn>) -> Var {
+        self.nodes.push(Node { val, back });
         Var(self.nodes.len() - 1)
+    }
+
+    fn push(&mut self, val: Tensor, back: Option<BackFn>) -> Var {
+        self.push_rc(Rc::new(val), back)
+    }
+
+    /// Register an auxiliary buffer so [`Tape::recycle`] can reclaim it.
+    fn track_aux(&mut self, t: Tensor) -> Rc<Tensor> {
+        let rc = Rc::new(t);
+        self.aux.push(Rc::clone(&rc));
+        rc
     }
 
     /// Record an input/parameter (gradient sink).
     pub fn leaf(&mut self, t: Tensor) -> Var {
         self.push(t, None)
+    }
+
+    /// Record an input/parameter by copying `src` into an arena buffer.
+    pub fn leaf_copy(&mut self, shape: Vec<usize>, src: &[f32]) -> Var {
+        let mut buf = self.alloc_raw(src.len());
+        buf.copy_from_slice(src);
+        self.leaf(Tensor::new(shape, buf))
     }
 
     pub fn val(&self, v: Var) -> &Tensor {
@@ -142,30 +278,83 @@ impl Tape {
         Rc::clone(&self.nodes[v.0].val)
     }
 
-    /// Full reverse sweep from scalar `loss`; returns one gradient tensor
-    /// per node (leaves keep their accumulated gradients; interior slots
-    /// are consumed during the sweep).
-    pub fn backward(&self, loss: Var) -> Vec<Tensor> {
-        let mut grads: Vec<Tensor> = self
+    /// Core reverse sweep from scalar `loss`: zero-init one slot per
+    /// node from `scratch`, seed d loss/d loss = 1, run the closures in
+    /// reverse creation order. Interior slots are consumed (and their
+    /// buffers recycled into `scratch`) as the sweep passes them.
+    fn sweep(&self, loss: Var, mut scratch: Arena) -> (Vec<Option<Vec<f32>>>, Arena) {
+        debug_assert_eq!(self.nodes[loss.0].val.elem_count(), 1);
+        let slots: Vec<Option<Vec<f32>>> = self
             .nodes
             .iter()
-            .map(|n| Tensor::zeros(n.val.shape.clone()))
+            .map(|n| Some(scratch.take_zeroed(n.val.elem_count())))
             .collect();
-        debug_assert_eq!(self.nodes[loss.0].val.elem_count(), 1);
-        grads[loss.0].data[0] = 1.0;
+        let mut store = GradStore { slots, scratch };
+        store.grad_mut(loss.0)[0] = 1.0;
         for i in (0..=loss.0).rev() {
             if let Some(back) = &self.nodes[i].back {
-                let g = std::mem::replace(&mut grads[i], Tensor::zeros(Vec::new()));
-                back(&g, &mut grads);
+                let g = store.slots[i]
+                    .take()
+                    .expect("gradient slot consumed before its own sweep step");
+                back(&g, &mut store);
+                store.give(g);
             }
         }
-        grads
+        (store.slots, store.scratch)
     }
 
-    /// Gradient of `loss` w.r.t. one var (convenience for tests).
+    /// Full reverse sweep from scalar `loss`. Leaf slots keep their
+    /// accumulated gradients; interior slots are consumed during the
+    /// sweep (their buffers return to the tape's arena).
+    pub fn backward(&mut self, loss: Var) -> Gradients {
+        let scratch = std::mem::take(&mut self.arena);
+        let (slots, scratch) = self.sweep(loss, scratch);
+        self.arena = scratch;
+        Gradients { slots }
+    }
+
+    /// Gradient of `loss` w.r.t. one var (convenience for tests; panics
+    /// if `v` is an interior node whose slot the sweep consumed).
     pub fn grad_of(&self, loss: Var, v: Var) -> Tensor {
-        let mut grads = self.backward(loss);
-        std::mem::replace(&mut grads[v.0], Tensor::zeros(Vec::new()))
+        let (mut slots, _) = self.sweep(loss, Arena::new());
+        let buf = slots[v.0]
+            .take()
+            .expect("gradient slot consumed during the sweep (interior node)");
+        Tensor::new(self.nodes[v.0].val.shape.clone(), buf)
+    }
+
+    /// Return leftover gradient buffers to the tape's arena.
+    pub fn reclaim(&mut self, grads: Gradients) {
+        for slot in grads.slots.into_iter().flatten() {
+            self.arena.give(slot);
+        }
+    }
+
+    /// Return a loose buffer (e.g. a taken gradient) to the arena.
+    pub fn give(&mut self, buf: Vec<f32>) {
+        self.arena.give(buf);
+    }
+
+    /// Tear the tape down and reclaim every buffer it allocated —
+    /// node values and auxiliary intermediates — into the arena, which
+    /// is returned for the next step's tape. Backward closures are
+    /// dropped first so their `Rc` clones release the buffers.
+    pub fn recycle(mut self) -> Arena {
+        for n in self.nodes.iter_mut() {
+            n.back = None;
+        }
+        let mut arena = self.arena;
+        for n in self.nodes {
+            if let Ok(t) = Rc::try_unwrap(n.val) {
+                arena.give(t.data);
+            }
+        }
+        for a in self.aux {
+            if let Ok(t) = Rc::try_unwrap(a) {
+                arena.give(t.data);
+            }
+        }
+        arena
     }
 
     // -----------------------------------------------------------------
@@ -175,13 +364,16 @@ impl Tape {
     pub fn add(&mut self, a: Var, b: Var) -> Var {
         let (av, bv) = (self.rc(a), self.rc(b));
         debug_assert_eq!(av.shape, bv.shape);
-        let data = av.data.iter().zip(&bv.data).map(|(x, y)| x + y).collect();
+        let mut data = self.alloc_raw(av.elem_count());
+        for ((d, &x), &y) in data.iter_mut().zip(&av.data).zip(&bv.data) {
+            *d = x + y;
+        }
         let val = Tensor::new(av.shape.clone(), data);
         self.push(
             val,
-            Some(Box::new(move |g, grads| {
-                acc(grads, a.0, &g.data);
-                acc(grads, b.0, &g.data);
+            Some(Box::new(move |g, store| {
+                store.acc(a.0, g);
+                store.acc(b.0, g);
             })),
         )
     }
@@ -189,16 +381,23 @@ impl Tape {
     pub fn mul(&mut self, a: Var, b: Var) -> Var {
         let (av, bv) = (self.rc(a), self.rc(b));
         debug_assert_eq!(av.shape, bv.shape);
-        let data = av.data.iter().zip(&bv.data).map(|(x, y)| x * y).collect();
+        let mut data = self.alloc_raw(av.elem_count());
+        for ((d, &x), &y) in data.iter_mut().zip(&av.data).zip(&bv.data) {
+            *d = x * y;
+        }
         let val = Tensor::new(av.shape.clone(), data);
         let (sa, sb) = (Rc::clone(&av), Rc::clone(&bv));
         self.push(
             val,
-            Some(Box::new(move |g, grads| {
-                for ((d, &s), &y) in grads[a.0].data.iter_mut().zip(&g.data).zip(&sb.data) {
-                    *d += s * y;
+            Some(Box::new(move |g, store| {
+                {
+                    let da = store.grad_mut(a.0);
+                    for ((d, &s), &y) in da.iter_mut().zip(g).zip(&sb.data) {
+                        *d += s * y;
+                    }
                 }
-                for ((d, &s), &x) in grads[b.0].data.iter_mut().zip(&g.data).zip(&sa.data) {
+                let db = store.grad_mut(b.0);
+                for ((d, &s), &x) in db.iter_mut().zip(g).zip(&sa.data) {
                     *d += s * x;
                 }
             })),
@@ -207,12 +406,16 @@ impl Tape {
 
     pub fn scale(&mut self, a: Var, c: f32) -> Var {
         let av = self.rc(a);
-        let data = av.data.iter().map(|x| x * c).collect();
+        let mut data = self.alloc_raw(av.elem_count());
+        for (d, &x) in data.iter_mut().zip(&av.data) {
+            *d = x * c;
+        }
         let val = Tensor::new(av.shape.clone(), data);
         self.push(
             val,
-            Some(Box::new(move |g, grads| {
-                for (d, &s) in grads[a.0].data.iter_mut().zip(&g.data) {
+            Some(Box::new(move |g, store| {
+                let da = store.grad_mut(a.0);
+                for (d, &s) in da.iter_mut().zip(g) {
                     *d += s * c;
                 }
             })),
@@ -221,13 +424,17 @@ impl Tape {
 
     pub fn relu(&mut self, a: Var) -> Var {
         let av = self.rc(a);
-        let data = av.data.iter().map(|&x| x.max(0.0)).collect();
+        let mut data = self.alloc_raw(av.elem_count());
+        for (d, &x) in data.iter_mut().zip(&av.data) {
+            *d = x.max(0.0);
+        }
         let val = Tensor::new(av.shape.clone(), data);
         let saved = Rc::clone(&av);
         self.push(
             val,
-            Some(Box::new(move |g, grads| {
-                for ((d, &s), &x) in grads[a.0].data.iter_mut().zip(&g.data).zip(&saved.data) {
+            Some(Box::new(move |g, store| {
+                let da = store.grad_mut(a.0);
+                for ((d, &s), &x) in da.iter_mut().zip(g).zip(&saved.data) {
                     if x > 0.0 {
                         *d += s;
                     }
@@ -239,12 +446,14 @@ impl Tape {
     /// Sum of every element → scalar (test/objective helper).
     pub fn sum_all(&mut self, a: Var) -> Var {
         let av = self.rc(a);
-        let val = Tensor::scalar(av.data.iter().sum());
+        let mut data = self.alloc_raw(1);
+        data[0] = av.data.iter().sum();
+        let val = Tensor::new(Vec::new(), data);
         self.push(
             val,
-            Some(Box::new(move |g, grads| {
-                let s = g.data[0];
-                for d in grads[a.0].data.iter_mut() {
+            Some(Box::new(move |g, store| {
+                let s = g[0];
+                for d in store.grad_mut(a.0).iter_mut() {
                     *d += s;
                 }
             })),
@@ -255,13 +464,16 @@ impl Tape {
     pub fn weighted_pair(&mut self, v: Var, w0: f32, w1: f32) -> Var {
         let vv = self.rc(v);
         debug_assert_eq!(vv.elem_count(), 2);
-        let val = Tensor::scalar(w0 * vv.data[0] + w1 * vv.data[1]);
+        let mut data = self.alloc_raw(1);
+        data[0] = w0 * vv.data[0] + w1 * vv.data[1];
+        let val = Tensor::new(Vec::new(), data);
         self.push(
             val,
-            Some(Box::new(move |g, grads| {
-                let s = g.data[0];
-                grads[v.0].data[0] += s * w0;
-                grads[v.0].data[1] += s * w1;
+            Some(Box::new(move |g, store| {
+                let s = g[0];
+                let dv = store.grad_mut(v.0);
+                dv[0] += s * w0;
+                dv[1] += s * w1;
             })),
         )
     }
@@ -276,14 +488,23 @@ impl Tape {
         let (m, k) = (av.shape[0], av.shape[1]);
         let n = bv.shape[1];
         debug_assert_eq!(bv.shape[0], k);
-        let val = Tensor::new(vec![m, n], matmul(&av.data, &bv.data, m, k, n));
+        let kt = self.kernel_threads;
+        let mut y = self.alloc_raw(m * n);
+        par_matmul_into(&av.data, &bv.data, &mut y, m, k, n, kt);
+        let val = Tensor::new(vec![m, n], y);
         let (sa, sb) = (Rc::clone(&av), Rc::clone(&bv));
         self.push(
             val,
-            Some(Box::new(move |g, grads| {
+            Some(Box::new(move |g, store| {
                 // dA = g · Bᵀ ; dB = Aᵀ · g
-                acc(grads, a.0, &matmul_bt(&g.data, &sb.data, m, n, k));
-                acc(grads, b.0, &matmul_at(&sa.data, &g.data, m, k, n));
+                let mut da = store.take_raw(m * k);
+                par_matmul_bt_into(g, &sb.data, &mut da, m, n, k, kt);
+                store.acc(a.0, &da);
+                store.give(da);
+                let mut db = store.take_raw(k * n);
+                par_matmul_at_into(&sa.data, g, &mut db, m, k, n, kt);
+                store.acc(b.0, &db);
+                store.give(db);
             })),
         )
     }
@@ -293,19 +514,18 @@ impl Tape {
         let (xv, bv) = (self.rc(x), self.rc(b));
         let c = *xv.shape.last().unwrap();
         debug_assert_eq!(bv.elem_count(), c);
-        let data = xv
-            .data
-            .iter()
-            .enumerate()
-            .map(|(i, &v)| v + bv.data[i % c])
-            .collect();
+        let mut data = self.alloc_raw(xv.elem_count());
+        for (i, (d, &v)) in data.iter_mut().zip(&xv.data).enumerate() {
+            *d = v + bv.data[i % c];
+        }
         let val = Tensor::new(xv.shape.clone(), data);
         self.push(
             val,
-            Some(Box::new(move |g, grads| {
-                acc(grads, x.0, &g.data);
-                for (i, &s) in g.data.iter().enumerate() {
-                    grads[b.0].data[i % c] += s;
+            Some(Box::new(move |g, store| {
+                store.acc(x.0, g);
+                let db = store.grad_mut(b.0);
+                for (i, &s) in g.iter().enumerate() {
+                    db[i % c] += s;
                 }
             })),
         )
@@ -324,21 +544,29 @@ impl Tape {
         let cout = wv.shape[0];
         let f = k * k * cin;
         debug_assert_eq!(wv.shape[1], f);
-        let (cols, oh, ow) = im2col(&xv, k, stride);
+        let (oh, ow, _) = same_geometry(h, ww, k, stride);
         let rows = n * oh * ow;
-        let y = matmul_bt(&cols.data, &wv.data, rows, f, cout);
+        let kt = self.kernel_threads;
+        let mut cols_buf = self.alloc_zeroed(rows * f);
+        im2col_into(&xv, k, stride, &mut cols_buf);
+        let cols = self.track_aux(Tensor::new(vec![rows, f], cols_buf));
+        let mut y = self.alloc_raw(rows * cout);
+        par_matmul_bt_into(&cols.data, &wv.data, &mut y, rows, f, cout, kt);
         let val = Tensor::new(vec![n, oh, ow, cout], y);
-        let cols = Rc::new(cols);
-        let saved_cols = Rc::clone(&cols);
         let saved_w = Rc::clone(&wv);
         self.push(
             val,
-            Some(Box::new(move |g, grads| {
+            Some(Box::new(move |g, store| {
                 // dW[cout,F] = gᵀ[cout,rows] · cols[rows,F]
-                acc(grads, w.0, &matmul_at(&g.data, &saved_cols.data, rows, cout, f));
+                let mut dw = store.take_raw(cout * f);
+                par_matmul_at_into(g, &cols.data, &mut dw, rows, cout, f, kt);
+                store.acc(w.0, &dw);
+                store.give(dw);
                 // dCols = g[rows,cout] · W[cout,F], scattered back to x
-                let dcols = matmul(&g.data, &saved_w.data, rows, cout, f);
-                col2im(&dcols, &mut grads[x.0].data, n, h, ww, cin, k, stride, oh, ow);
+                let mut dcols = store.take_raw(rows * f);
+                par_matmul_into(g, &saved_w.data, &mut dcols, rows, cout, f, kt);
+                col2im(&dcols, store.grad_mut(x.0), n, h, ww, cin, k, stride, oh, ow);
+                store.give(dcols);
             })),
         )
     }
@@ -349,21 +577,22 @@ impl Tape {
         let (n, h, ww, c) = (xv.shape[0], xv.shape[1], xv.shape[2], xv.shape[3]);
         debug_assert_eq!(wv.shape, vec![c, k * k]);
         let (oh, ow, pad) = same_geometry(h, ww, k, stride);
-        let mut y = vec![0.0f32; n * oh * ow * c];
+        let mut y = self.alloc_zeroed(n * oh * ow * c);
         dw_forward(&xv.data, &wv.data, &mut y, n, h, ww, c, k, stride, pad);
         let val = Tensor::new(vec![n, oh, ow, c], y);
         let (sx, sw) = (Rc::clone(&xv), Rc::clone(&wv));
         self.push(
             val,
-            Some(Box::new(move |g, grads| {
-                let (dx_slot, dw_slot) = (x.0, w.0);
-                let mut dw = vec![0.0f32; c * k * k];
-                let mut dx = vec![0.0f32; n * h * ww * c];
+            Some(Box::new(move |g, store| {
+                let mut dw = store.take_zeroed(c * k * k);
+                let mut dx = store.take_zeroed(n * h * ww * c);
                 dw_backward(
-                    &sx.data, &sw.data, &g.data, &mut dx, &mut dw, n, h, ww, c, k, stride, pad,
+                    &sx.data, &sw.data, g, &mut dx, &mut dw, n, h, ww, c, k, stride, pad,
                 );
-                acc(grads, dx_slot, &dx);
-                acc(grads, dw_slot, &dw);
+                store.acc(x.0, &dx);
+                store.acc(w.0, &dw);
+                store.give(dx);
+                store.give(dw);
             })),
         )
     }
@@ -401,38 +630,42 @@ impl Tape {
             *v /= m as f32;
         }
         let inv: Vec<f32> = var.iter().map(|&v| 1.0 / (v + EPS).sqrt()).collect();
-        let mut xhat = vec![0.0f32; xv.elem_count()];
-        let mut y = vec![0.0f32; xv.elem_count()];
+        let mut xhat_buf = self.alloc_raw(xv.elem_count());
+        let mut y = self.alloc_raw(xv.elem_count());
         for (i, &v) in xv.data.iter().enumerate() {
             let ch = i % c;
             let xh = (v - mean[ch]) * inv[ch];
-            xhat[i] = xh;
+            xhat_buf[i] = xh;
             y[i] = xh * sv.data[ch] + bv.data[ch];
         }
+        let xhat = self.track_aux(Tensor::new(xv.shape.clone(), xhat_buf));
         let val = Tensor::new(xv.shape.clone(), y);
-        let xhat = Rc::new(xhat);
-        let inv_s = inv.clone();
+        let inv_s = inv;
         let saved_scale = Rc::clone(&sv);
-        let saved_xhat = Rc::clone(&xhat);
         let out = self.push(
             val,
-            Some(Box::new(move |g, grads| {
-                let mut sum_dy = vec![0.0f32; c];
-                let mut sum_dy_xhat = vec![0.0f32; c];
-                for (i, &s) in g.data.iter().enumerate() {
+            Some(Box::new(move |g, store| {
+                let mut sum_dy = store.take_zeroed(c);
+                let mut sum_dy_xhat = store.take_zeroed(c);
+                for (i, &s) in g.iter().enumerate() {
                     let ch = i % c;
                     sum_dy[ch] += s;
-                    sum_dy_xhat[ch] += s * saved_xhat[i];
+                    sum_dy_xhat[ch] += s * xhat.data[i];
                 }
-                for (i, &s) in g.data.iter().enumerate() {
-                    let ch = i % c;
-                    let mf = m as f32;
-                    let dx = saved_scale.data[ch] * inv_s[ch] / mf
-                        * (mf * s - sum_dy[ch] - saved_xhat[i] * sum_dy_xhat[ch]);
-                    grads[x.0].data[i] += dx;
+                {
+                    let dx_slot = store.grad_mut(x.0);
+                    for (i, &s) in g.iter().enumerate() {
+                        let ch = i % c;
+                        let mf = m as f32;
+                        let dx = saved_scale.data[ch] * inv_s[ch] / mf
+                            * (mf * s - sum_dy[ch] - xhat.data[i] * sum_dy_xhat[ch]);
+                        dx_slot[i] += dx;
+                    }
                 }
-                acc(grads, scale.0, &sum_dy_xhat);
-                acc(grads, bias.0, &sum_dy);
+                store.acc(scale.0, &sum_dy_xhat);
+                store.acc(bias.0, &sum_dy);
+                store.give(sum_dy);
+                store.give(sum_dy_xhat);
             })),
         );
         (out, mean, var)
@@ -444,18 +677,17 @@ impl Tape {
         let xv = self.rc(x);
         let c = *xv.shape.last().unwrap();
         debug_assert_eq!(a.len(), c);
-        let data = xv
-            .data
-            .iter()
-            .enumerate()
-            .map(|(i, &v)| v * a[i % c] + b[i % c])
-            .collect();
+        let mut data = self.alloc_raw(xv.elem_count());
+        for (i, (d, &v)) in data.iter_mut().zip(&xv.data).enumerate() {
+            *d = v * a[i % c] + b[i % c];
+        }
         let val = Tensor::new(xv.shape.clone(), data);
         self.push(
             val,
-            Some(Box::new(move |g, grads| {
-                for (i, &s) in g.data.iter().enumerate() {
-                    grads[x.0].data[i] += s * a[i % c];
+            Some(Box::new(move |g, store| {
+                let dx = store.grad_mut(x.0);
+                for (i, &s) in g.iter().enumerate() {
+                    dx[i] += s * a[i % c];
                 }
             })),
         )
@@ -466,7 +698,7 @@ impl Tape {
         let xv = self.rc(x);
         let (n, h, w, c) = (xv.shape[0], xv.shape[1], xv.shape[2], xv.shape[3]);
         let hw = h * w;
-        let mut y = vec![0.0f32; n * c];
+        let mut y = self.alloc_zeroed(n * c);
         for b in 0..n {
             for p in 0..hw {
                 for ch in 0..c {
@@ -480,12 +712,13 @@ impl Tape {
         let val = Tensor::new(vec![n, c], y);
         self.push(
             val,
-            Some(Box::new(move |g, grads| {
+            Some(Box::new(move |g, store| {
                 let inv = 1.0 / hw as f32;
+                let dx = store.grad_mut(x.0);
                 for b in 0..n {
                     for p in 0..hw {
                         for ch in 0..c {
-                            grads[x.0].data[(b * hw + p) * c + ch] += g.data[b * c + ch] * inv;
+                            dx[(b * hw + p) * c + ch] += g[b * c + ch] * inv;
                         }
                     }
                 }
@@ -503,7 +736,7 @@ impl Tape {
         let lv = self.rc(logits);
         let (n, c) = (lv.shape[0], lv.shape[1]);
         debug_assert_eq!(labels.len(), n);
-        let mut probs = vec![0.0f32; n * c];
+        let mut probs_buf = self.alloc_raw(n * c);
         let mut loss_sum = 0.0f32;
         let mut correct = 0.0f32;
         for b in 0..n {
@@ -512,34 +745,37 @@ impl Tape {
             let mut z = 0.0f32;
             for (j, &v) in row.iter().enumerate() {
                 let e = (v - mx).exp();
-                probs[b * c + j] = e;
+                probs_buf[b * c + j] = e;
                 z += e;
             }
             let mut best = 0;
             for j in 0..c {
-                probs[b * c + j] /= z;
-                if probs[b * c + j] > probs[b * c + best] {
+                probs_buf[b * c + j] /= z;
+                if probs_buf[b * c + j] > probs_buf[b * c + best] {
                     best = j;
                 }
             }
             let lab = labels[b] as usize;
-            loss_sum += -probs[b * c + lab].max(1e-12).ln();
+            loss_sum += -probs_buf[b * c + lab].max(1e-12).ln();
             if best == lab {
                 correct += 1.0;
             }
         }
-        let val = Tensor::scalar(loss_sum / n as f32);
-        let probs = Rc::new(probs);
+        let mut data = self.alloc_raw(1);
+        data[0] = loss_sum / n as f32;
+        let val = Tensor::new(Vec::new(), data);
+        let probs = self.track_aux(Tensor::new(vec![n, c], probs_buf));
         let labels: Vec<i32> = labels.to_vec();
         let out = self.push(
             val,
-            Some(Box::new(move |g, grads| {
-                let s = g.data[0] / n as f32;
+            Some(Box::new(move |g, store| {
+                let s = g[0] / n as f32;
+                let dl = store.grad_mut(logits.0);
                 for b in 0..n {
                     let lab = labels[b] as usize;
                     for j in 0..c {
                         let one = if j == lab { 1.0 } else { 0.0 };
-                        grads[logits.0].data[b * c + j] += s * (probs[b * c + j] - one);
+                        dl[b * c + j] += s * (probs.data[b * c + j] - one);
                     }
                 }
             })),
@@ -558,7 +794,7 @@ impl Tape {
         let tv = self.rc(theta);
         let (c, k) = (tv.shape[0], tv.shape[1]);
         debug_assert_eq!(mask.len(), k);
-        let mut p = vec![0.0f32; c * k];
+        let mut p = self.alloc_zeroed(c * k);
         for r in 0..c {
             let row = &tv.data[r * k..(r + 1) * k];
             let mx = row
@@ -579,22 +815,46 @@ impl Tape {
                 p[r * k + j] /= z;
             }
         }
-        let val = Tensor::new(vec![c, k], p.clone());
-        let p = Rc::new(p);
+        let val = Rc::new(Tensor::new(vec![c, k], p));
+        let saved_p = Rc::clone(&val);
         let mask: Vec<bool> = mask.to_vec();
-        self.push(
+        self.push_rc(
             val,
-            Some(Box::new(move |g, grads| {
+            Some(Box::new(move |g, store| {
+                let dth = store.grad_mut(theta.0);
                 for r in 0..c {
                     let mut dot = 0.0f32;
                     for j in 0..k {
-                        dot += g.data[r * k + j] * p[r * k + j];
+                        dot += g[r * k + j] * saved_p.data[r * k + j];
                     }
                     for j in 0..k {
                         if mask[j] {
-                            grads[theta.0].data[r * k + j] +=
-                                p[r * k + j] * (g.data[r * k + j] - dot);
+                            dth[r * k + j] += saved_p.data[r * k + j] * (g[r * k + j] - dot);
                         }
+                    }
+                }
+            })),
+        )
+    }
+
+    /// Tile a `[1, k]` probability row to `[rows, k]` — the layerwise
+    /// search space shares one gate across every channel of a layer.
+    pub fn broadcast_rows(&mut self, p: Var, rows: usize) -> Var {
+        let pv = self.rc(p);
+        debug_assert_eq!(pv.shape[0], 1);
+        let k = pv.shape[1];
+        let mut data = self.alloc_raw(rows * k);
+        for r in 0..rows {
+            data[r * k..(r + 1) * k].copy_from_slice(&pv.data);
+        }
+        let val = Tensor::new(vec![rows, k], data);
+        self.push(
+            val,
+            Some(Box::new(move |g, store| {
+                let dp = store.grad_mut(p.0);
+                for r in 0..rows {
+                    for j in 0..k {
+                        dp[j] += g[r * k + j];
                     }
                 }
             })),
@@ -603,8 +863,11 @@ impl Tape {
 
     /// Eq. 5 effective weights for a K-CU platform:
     /// `W_eff[c] = Σ_k p[c,k] · Q_k(W[c])` where `Q_k` is the fake-quant
-    /// of CU column k. Straight-through for W (`Σ_k p = 1` over the
-    /// unmasked columns); `dθ_k = ⟨g, Q_k(W)⟩` per row.
+    /// of CU column k. Straight-through for W, scaled by the total
+    /// probability mass on *weight-carrying* branches — [`QuantKind::Zero`]
+    /// branches (the pruned alternative) pass no gradient, matching the
+    /// reference `th[:, 0:1] * ste_int8(W)` semantics; `dθ_k = ⟨g, Q_k(W)⟩`
+    /// per row.
     pub fn effective_weights(&mut self, w: Var, probs: Var, quants: &[QuantKind]) -> Var {
         let (wv, pv) = (self.rc(w), self.rc(probs));
         let (c, f) = (wv.shape[0], wv.shape[1]);
@@ -612,15 +875,16 @@ impl Tape {
         debug_assert_eq!(pv.shape[0], c);
         debug_assert_eq!(quants.len(), k);
         // quantized branches, one [c, f] tensor per CU column
-        let mut qs: Vec<Vec<f32>> = Vec::with_capacity(k);
+        let mut qs: Vec<Rc<Tensor>> = Vec::with_capacity(k);
         for &q in quants {
-            let mut out = vec![0.0f32; c * f];
+            let mut out = self.alloc_raw(c * f);
             for r in 0..c {
                 q.quant_row(&wv.data[r * f..(r + 1) * f], &mut out[r * f..(r + 1) * f]);
             }
-            qs.push(out);
+            qs.push(self.track_aux(Tensor::new(vec![c, f], out)));
         }
-        let mut y = vec![0.0f32; c * f];
+        let ste: Vec<bool> = quants.iter().map(|&q| q != QuantKind::Zero).collect();
+        let mut y = self.alloc_zeroed(c * f);
         for r in 0..c {
             for (col, q) in qs.iter().enumerate() {
                 let p = pv.data[r * k + col];
@@ -628,30 +892,35 @@ impl Tape {
                     continue;
                 }
                 for i in 0..f {
-                    y[r * f + i] += p * q[r * f + i];
+                    y[r * f + i] += p * q.data[r * f + i];
                 }
             }
         }
         let val = Tensor::new(vec![c, f], y);
-        let qs = Rc::new(qs);
         let saved_p = Rc::clone(&pv);
         self.push(
             val,
-            Some(Box::new(move |g, grads| {
+            Some(Box::new(move |g, store| {
                 for r in 0..c {
-                    // STE: each branch passes g through scaled by its
-                    // probability; the probabilities sum to 1 over the
-                    // unmasked columns.
-                    let psum: f32 = (0..k).map(|col| saved_p.data[r * k + col]).sum();
-                    for i in 0..f {
-                        grads[w.0].data[r * f + i] += psum * g.data[r * f + i];
+                    // STE: each weight-carrying branch passes g through
+                    // scaled by its probability; Zero branches drop it.
+                    let psum: f32 = (0..k)
+                        .filter(|&col| ste[col])
+                        .map(|col| saved_p.data[r * k + col])
+                        .sum();
+                    {
+                        let dw = store.grad_mut(w.0);
+                        for i in 0..f {
+                            dw[r * f + i] += psum * g[r * f + i];
+                        }
                     }
+                    let dp = store.grad_mut(probs.0);
                     for (col, q) in qs.iter().enumerate() {
                         let mut dot = 0.0f32;
                         for i in 0..f {
-                            dot += g.data[r * f + i] * q[r * f + i];
+                            dot += g[r * f + i] * q.data[r * f + i];
                         }
-                        grads[probs.0].data[r * k + col] += dot;
+                        dp[r * k + col] += dot;
                     }
                 }
             })),
@@ -663,15 +932,15 @@ impl Tape {
     pub fn fake_quant_ste(&mut self, w: Var, kind: QuantKind) -> Var {
         let wv = self.rc(w);
         let (c, f) = (wv.shape[0], wv.shape[1]);
-        let mut y = vec![0.0f32; c * f];
+        let mut y = self.alloc_raw(c * f);
         for r in 0..c {
             kind.quant_row(&wv.data[r * f..(r + 1) * f], &mut y[r * f..(r + 1) * f]);
         }
         let val = Tensor::new(vec![c, f], y);
         self.push(
             val,
-            Some(Box::new(move |g, grads| {
-                acc(grads, w.0, &g.data);
+            Some(Box::new(move |g, store| {
+                store.acc(w.0, g);
             })),
         )
     }
@@ -680,7 +949,7 @@ impl Tape {
     pub fn col_sum(&mut self, p: Var) -> Var {
         let pv = self.rc(p);
         let (c, k) = (pv.shape[0], pv.shape[1]);
-        let mut y = vec![0.0f32; k];
+        let mut y = self.alloc_zeroed(k);
         for r in 0..c {
             for j in 0..k {
                 y[j] += pv.data[r * k + j];
@@ -689,12 +958,30 @@ impl Tape {
         let val = Tensor::new(vec![k], y);
         self.push(
             val,
-            Some(Box::new(move |g, grads| {
+            Some(Box::new(move |g, store| {
+                let dp = store.grad_mut(p.0);
                 for r in 0..c {
                     for j in 0..k {
-                        grads[p.0].data[r * k + j] += g.data[j];
+                        dp[r * k + j] += g[j];
                     }
                 }
+            })),
+        )
+    }
+
+    /// Embed the keep/prune count pair `[n_keep, n_prune]` into a K-CU
+    /// count vector: the kept channels run on CU column 0, pruned
+    /// channels cost nothing anywhere.
+    pub fn keep_counts(&mut self, n2: Var, k: usize) -> Var {
+        let nv = self.rc(n2);
+        debug_assert_eq!(nv.elem_count(), 2);
+        let mut y = self.alloc_zeroed(k);
+        y[0] = nv.data[0];
+        let val = Tensor::new(vec![k], y);
+        self.push(
+            val,
+            Some(Box::new(move |g, store| {
+                store.grad_mut(n2.0)[0] += g[0];
             })),
         )
     }
@@ -725,20 +1012,24 @@ impl Tape {
         let counts: Vec<f64> = nv.data.iter().map(|&v| v as f64).collect();
         let us_per_cycle = 1.0 / freq_mhz;
         let e = eval_layer_cost(cus, layer, &counts, p_idle_mw, us_per_cycle, sequential);
-        let val = Tensor::new(vec![2], vec![e.latency as f32, e.energy_uj as f32]);
+        let mut data = self.alloc_raw(2);
+        data[0] = e.latency as f32;
+        data[1] = e.energy_uj as f32;
+        let val = Tensor::new(vec![2], data);
         let p_act: Vec<f64> = cus.iter().map(|c| c.p_act_mw).collect();
         let (slope, argmax) = (e.slopes, e.argmax);
         self.push(
             val,
-            Some(Box::new(move |g, grads| {
-                let (g_lat, g_en) = (g.data[0] as f64, g.data[1] as f64);
+            Some(Box::new(move |g, store| {
+                let (g_lat, g_en) = (g[0] as f64, g[1] as f64);
+                let dn = store.grad_mut(n.0);
                 for j in 0..k {
                     let on_lat = sequential || j == argmax;
                     let mut d_c = g_en * 1e-3 * p_act[j] * us_per_cycle;
                     if on_lat {
                         d_c += g_lat + g_en * 1e-3 * p_idle_mw * us_per_cycle;
                     }
-                    grads[n.0].data[j] += (d_c * slope[j]) as f32;
+                    dn[j] += (d_c * slope[j]) as f32;
                 }
             })),
         )
@@ -823,19 +1114,21 @@ pub fn interp_cu_cycles(cu: &CuSpec, layer: &Layer, x: f64) -> (f64, f64) {
 // ---------------------------------------------------------------------------
 
 /// 'SAME' output geometry: `(oh, ow, pad_begin)`.
-fn same_geometry(h: usize, w: usize, k: usize, stride: usize) -> (usize, usize, usize) {
+pub(crate) fn same_geometry(h: usize, w: usize, k: usize, stride: usize) -> (usize, usize, usize) {
     let oh = h.div_ceil(stride);
     let ow = w.div_ceil(stride);
     let pad_total = ((oh - 1) * stride + k).saturating_sub(h);
     (oh, ow, pad_total / 2)
 }
 
-/// Patch matrix `[n·oh·ow, k·k·cin]` (column layout `(ky·k+kx)·cin + ci`).
-fn im2col(x: &Tensor, k: usize, stride: usize) -> (Tensor, usize, usize) {
+/// Fill the patch matrix `[n·oh·ow, k·k·cin]` (column layout
+/// `(ky·k+kx)·cin + ci`). `cols` must be zeroed — padding taps are
+/// skipped, not written.
+fn im2col_into(x: &Tensor, k: usize, stride: usize, cols: &mut [f32]) {
     let (n, h, w, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let (oh, ow, pad) = same_geometry(h, w, k, stride);
     let f = k * k * cin;
-    let mut cols = vec![0.0f32; n * oh * ow * f];
+    debug_assert_eq!(cols.len(), n * oh * ow * f);
     for b in 0..n {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -858,10 +1151,9 @@ fn im2col(x: &Tensor, k: usize, stride: usize) -> (Tensor, usize, usize) {
             }
         }
     }
-    (Tensor::new(vec![n * oh * ow, f], cols), oh, ow)
 }
 
-/// Scatter `dcols` back onto the input gradient (inverse of [`im2col`]).
+/// Scatter `dcols` back onto the input gradient (inverse of [`im2col_into`]).
 #[allow(clippy::too_many_arguments)]
 fn col2im(
     dcols: &[f32],
@@ -1005,6 +1297,78 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "consumed")]
+    fn consumed_interior_grad_fails_loudly() {
+        // the interior `add` node's slot is moved out during the sweep;
+        // asking for it afterwards must panic, not return a broadcastable
+        // scalar placeholder
+        let mut t = Tape::new();
+        let a = t.leaf(Tensor::new(vec![2], vec![1.0, 2.0]));
+        let s = t.add(a, a);
+        let loss = t.sum_all(s);
+        let _ = t.grad_of(loss, s);
+    }
+
+    #[test]
+    fn recycle_reclaims_step_buffers() {
+        let mut arena = Arena::new();
+        for round in 0..3 {
+            let mut t = Tape::with_arena(arena);
+            let a = t.leaf_copy(vec![4], &[1.0, -1.0, 2.0, 0.5]);
+            let r = t.relu(a);
+            let loss = t.sum_all(r);
+            let grads = t.backward(loss);
+            t.reclaim(grads);
+            arena = t.recycle();
+            if round == 0 {
+                assert!(arena.grown() > 0, "first step must allocate");
+            }
+        }
+        let after_two = arena.grown();
+        let mut t = Tape::with_arena(arena);
+        let a = t.leaf_copy(vec![4], &[0.1, 0.2, 0.3, 0.4]);
+        let r = t.relu(a);
+        let loss = t.sum_all(r);
+        let grads = t.backward(loss);
+        t.reclaim(grads);
+        arena = t.recycle();
+        assert_eq!(arena.grown(), after_two, "steady-state step must not grow");
+    }
+
+    #[test]
+    fn broadcast_and_keep_counts_gradients() {
+        // broadcast_rows: d/dp sums over rows
+        let mut t = Tape::new();
+        let p = t.leaf(Tensor::new(vec![1, 3], vec![0.2, 0.3, 0.5]));
+        let b = t.broadcast_rows(p, 4);
+        assert_eq!(t.val(b).shape, vec![4, 3]);
+        let loss = t.sum_all(b);
+        let g = t.grad_of(loss, p);
+        assert_eq!(g.data, vec![4.0, 4.0, 4.0]);
+        // keep_counts: only column 0 is live
+        let mut t = Tape::new();
+        let n2 = t.leaf(Tensor::new(vec![2], vec![5.0, 3.0]));
+        let kc = t.keep_counts(n2, 4);
+        assert_eq!(t.val(kc).data, vec![5.0, 0.0, 0.0, 0.0]);
+        let loss = t.sum_all(kc);
+        let g = t.grad_of(loss, n2);
+        assert_eq!(g.data, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn zero_branch_blocks_ste_gradient() {
+        // prune semantics: W_eff = p_keep · Q(W); dW = p_keep · g
+        let mut t = Tape::new();
+        let w = t.leaf(Tensor::new(vec![1, 2], vec![1.0, -2.0]));
+        let p = t.leaf(Tensor::new(vec![1, 2], vec![0.25, 0.75]));
+        let eff = t.effective_weights(w, p, &[QuantKind::Identity, QuantKind::Zero]);
+        assert_eq!(t.val(eff).data, vec![0.25, -0.5]);
+        let loss = t.sum_all(eff);
+        let g = t.grad_of(loss, w);
+        assert_eq!(g.data, vec![0.25, 0.25]);
+    }
+
+    #[test]
     fn quantizers_match_reference_semantics() {
         let row = [0.5f32, -1.0, 0.02, 0.0];
         let mut q8 = [0.0f32; 4];
@@ -1019,6 +1383,9 @@ mod tests {
         let mut qi = [0.0f32; 4];
         QuantKind::Identity.quant_row(&row, &mut qi);
         assert_eq!(qi, row);
+        let mut qz = [9.0f32; 4];
+        QuantKind::Zero.quant_row(&row, &mut qz);
+        assert_eq!(qz, [0.0; 4]);
     }
 
     #[test]

@@ -1,12 +1,25 @@
 //! Dense f32 host tensors and the three matmul kernels the native
 //! training engine is built on.
 //!
-//! The kernels are plain safe Rust tuned for auto-vectorization: the
-//! inner loops run over contiguous row slices (`iter().zip()` so the
-//! compiler can prove no aliasing) and the three variants cover exactly
-//! the access patterns reverse-mode conv/FC need — `A·B`, `A·Bᵀ`
-//! (im2col · flattened-weightᵀ and its `dA`), and `Aᵀ·B` (the `dW`
-//! reduction) — without ever materializing a transposed copy.
+//! The kernels are cache-blocked plain safe Rust tuned for
+//! auto-vectorization, in the three variants reverse-mode conv/FC need —
+//! `A·B`, `A·Bᵀ` (im2col · flattened-weightᵀ and its `dA`), and `Aᵀ·B`
+//! (the `dW` reduction) — without ever materializing a transposed copy:
+//!
+//! * the axpy-style kernels (`matmul_into`, `matmul_at_into`) process
+//!   output rows in register-blocked panels of [`MR`], so each streamed
+//!   B row is reused `MR` times from registers/L1 instead of once;
+//! * the dot-product kernel (`matmul_bt_into`) splits each dot into
+//!   [`LANES`] independent accumulators combined in a fixed order —
+//!   rustc cannot reorder strict-FP reductions on its own, so the split
+//!   is what lets the inner loop vectorize at all.
+//!
+//! Every kernel writes into a caller-provided buffer (the arena hands
+//! these out) and has a `par_*` wrapper that shards *output rows* across
+//! a scoped thread pool. Each output element is always computed by
+//! exactly one thread with a thread-count-independent accumulation
+//! order, so results are bit-identical for any `threads` value — the
+//! property the engine's determinism contract rests on.
 
 /// A shaped dense f32 buffer (row-major).
 #[derive(Debug, Clone, PartialEq)]
@@ -47,52 +60,58 @@ impl Tensor {
     }
 }
 
-/// `C[m,n] = A[m,k] · B[k,n]`.
-pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// Output-row panel height of the axpy kernels.
+const MR: usize = 4;
+/// Independent accumulators per dot product (must divide SIMD widths).
+const LANES: usize = 8;
+
+/// `C[m,n] = A[m,k] · B[k,n]`, overwriting `c`.
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
-    let mut c = vec![0.0f32; m * n];
-    for i in 0..m {
-        let crow = &mut c[i * n..(i + 1) * n];
+    debug_assert_eq!(c.len(), m * n);
+    c.iter_mut().for_each(|x| *x = 0.0);
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + MR).min(m);
+        let cpanel = &mut c[i0 * n..i1 * n];
         for p in 0..k {
-            let aip = a[i * k + p];
-            if aip == 0.0 {
-                continue;
-            }
             let brow = &b[p * n..(p + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += aip * bv;
+            for (pi, crow) in cpanel.chunks_exact_mut(n).enumerate() {
+                let aip = a[(i0 + pi) * k + p];
+                if aip == 0.0 {
+                    continue;
+                }
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += aip * bv;
+                }
             }
         }
+        i0 = i1;
     }
-    c
 }
 
-/// `C[m,n] = A[m,k] · B[n,k]ᵀ` (row-by-row dot products).
-pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// `C[m,n] = A[m,k] · B[n,k]ᵀ` (row-by-row dot products), overwriting `c`.
+pub fn matmul_bt_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
-    let mut c = vec![0.0f32; m * n];
+    debug_assert_eq!(c.len(), m * n);
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
         for (j, cv) in crow.iter_mut().enumerate() {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (&av, &bv) in arow.iter().zip(brow) {
-                acc += av * bv;
-            }
-            *cv = acc;
+            *cv = dot(arow, &b[j * k..(j + 1) * k]);
         }
     }
-    c
 }
 
-/// `C[k,n] = A[m,k]ᵀ · B[m,n]` (rank-1 accumulation over rows of A/B).
-pub fn matmul_at(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// `C[k,n] = A[m,k]ᵀ · B[m,n]` (rank-1 accumulation over rows of A/B),
+/// overwriting `c`.
+pub fn matmul_at_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), m * n);
-    let mut c = vec![0.0f32; k * n];
+    debug_assert_eq!(c.len(), k * n);
+    c.iter_mut().for_each(|x| *x = 0.0);
     for r in 0..m {
         let brow = &b[r * n..(r + 1) * n];
         for i in 0..k {
@@ -106,6 +125,157 @@ pub fn matmul_at(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
             }
         }
     }
+}
+
+/// `LANES`-way split dot product with a fixed combination order (a
+/// pairwise halving tree, so the order is derived from `LANES`):
+/// vectorizable under strict FP, deterministic across thread counts.
+#[inline]
+fn dot(x: &[f32], y: &[f32]) -> f32 {
+    const { assert!(LANES.is_power_of_two()) };
+    debug_assert_eq!(x.len(), y.len());
+    let xc = x.chunks_exact(LANES);
+    let yc = y.chunks_exact(LANES);
+    let (xr, yr) = (xc.remainder(), yc.remainder());
+    let mut acc = [0.0f32; LANES];
+    for (cx, cy) in xc.zip(yc) {
+        for l in 0..LANES {
+            acc[l] += cx[l] * cy[l];
+        }
+    }
+    let mut width = LANES;
+    while width > 1 {
+        width /= 2;
+        for l in 0..width {
+            acc[l] += acc[l + width];
+        }
+    }
+    let mut s = acc[0];
+    for (&xv, &yv) in xr.iter().zip(yr) {
+        s += xv * yv;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// scoped-thread-pool wrappers: shard output rows, bit-identical results
+// ---------------------------------------------------------------------------
+
+/// Split `rows` output rows across `threads` workers; each chunk of `c`
+/// is produced by one worker with the serial kernel. Falls back to the
+/// serial kernel for 1 thread or tiny outputs.
+fn par_rows<F>(c: &mut [f32], rows: usize, row_elems: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    let t = threads.min(rows).max(1);
+    if t <= 1 {
+        f(0, rows, c);
+        return;
+    }
+    // contiguous row ranges [i*rows/t, (i+1)*rows/t)
+    std::thread::scope(|s| {
+        let mut rest: &mut [f32] = c;
+        let mut handles = Vec::with_capacity(t);
+        for w in 0..t {
+            let r0 = w * rows / t;
+            let r1 = (w + 1) * rows / t;
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * row_elems);
+            rest = tail;
+            let fr = &f;
+            handles.push(s.spawn(move || fr(r0, r1, chunk)));
+        }
+        for h in handles {
+            h.join().expect("kernel worker panicked");
+        }
+    });
+}
+
+/// Parallel [`matmul_into`]: rows of C sharded across `threads`.
+pub fn par_matmul_into(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    debug_assert_eq!(c.len(), m * n);
+    par_rows(c, m, n, threads, |r0, r1, chunk| {
+        matmul_into(&a[r0 * k..r1 * k], b, chunk, r1 - r0, k, n);
+    });
+}
+
+/// Parallel [`matmul_bt_into`]: rows of C sharded across `threads`.
+pub fn par_matmul_bt_into(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    debug_assert_eq!(c.len(), m * n);
+    par_rows(c, m, n, threads, |r0, r1, chunk| {
+        matmul_bt_into(&a[r0 * k..r1 * k], b, chunk, r1 - r0, k, n);
+    });
+}
+
+/// Parallel [`matmul_at_into`]: rows of C (the k axis) sharded across
+/// `threads` — each worker reads all of A/B but owns disjoint C rows, so
+/// the per-element accumulation order over `m` is unchanged.
+pub fn par_matmul_at_into(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    debug_assert_eq!(c.len(), k * n);
+    par_rows(c, k, n, threads, |i0, i1, chunk| {
+        chunk.iter_mut().for_each(|x| *x = 0.0);
+        for r in 0..m {
+            let brow = &b[r * n..(r + 1) * n];
+            for i in i0..i1 {
+                let ari = a[r * k + i];
+                if ari == 0.0 {
+                    continue;
+                }
+                let crow = &mut chunk[(i - i0) * n..(i - i0 + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += ari * bv;
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// allocating conveniences (tests, call sites without an arena)
+// ---------------------------------------------------------------------------
+
+/// `C[m,n] = A[m,k] · B[k,n]`.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_into(a, b, &mut c, m, k, n);
+    c
+}
+
+/// `C[m,n] = A[m,k] · B[n,k]ᵀ` (row-by-row dot products).
+pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_bt_into(a, b, &mut c, m, k, n);
+    c
+}
+
+/// `C[k,n] = A[m,k]ᵀ · B[m,n]` (rank-1 accumulation over rows of A/B).
+pub fn matmul_at(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; k * n];
+    matmul_at_into(a, b, &mut c, m, k, n);
     c
 }
 
@@ -154,6 +324,33 @@ mod tests {
         // note: matmul_at computes Aᵀ·B with A of shape [m̃=k, k̃=m]
         for (x, y) in got.iter().zip(&want) {
             assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn parallel_kernels_are_bit_identical_for_any_thread_count() {
+        // odd sizes so row chunks are uneven and the dot remainder is hit
+        let (m, k, n) = (23, 37, 19);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.11).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.07).cos()).collect();
+        let bt: Vec<f32> = (0..n * k).map(|i| (i as f32 * 0.05).sin()).collect();
+        let at: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.13).cos()).collect();
+        let mut base_mm = vec![0.0; m * n];
+        matmul_into(&a, &b, &mut base_mm, m, k, n);
+        let mut base_bt = vec![0.0; m * n];
+        matmul_bt_into(&a, &bt, &mut base_bt, m, k, n);
+        let mut base_at = vec![0.0; k * n];
+        matmul_at_into(&at, &b, &mut base_at, m, k, n);
+        for t in [1usize, 2, 3, 4, 7] {
+            let mut c = vec![1.0; m * n];
+            par_matmul_into(&a, &b, &mut c, m, k, n, t);
+            assert_eq!(c, base_mm, "matmul t={t}");
+            let mut c = vec![1.0; m * n];
+            par_matmul_bt_into(&a, &bt, &mut c, m, k, n, t);
+            assert_eq!(c, base_bt, "matmul_bt t={t}");
+            let mut c = vec![1.0; k * n];
+            par_matmul_at_into(&at, &b, &mut c, m, k, n, t);
+            assert_eq!(c, base_at, "matmul_at t={t}");
         }
     }
 

@@ -1,0 +1,292 @@
+//! Planned-executor tests: the thread-count determinism matrix, the
+//! arena-reuse (zero steady-state allocation) pin, Adam convergence on a
+//! synthetic task, and the natively-built `_prune`/`_layerwise` baseline
+//! search spaces.
+//!
+//! The determinism contract under test: the intra-step shard structure
+//! depends only on the batch size, every reduction runs in shard-index
+//! order, and the row-sharded kernels assign each output element to
+//! exactly one worker — so the *same seed must produce bit-identical
+//! losses and θ at any thread count*.
+
+use odimo::config::ExperimentConfig;
+use odimo::coordinator::{sweep, Trainer};
+use odimo::datasets::{Split, SynthDataset};
+use odimo::mapping::SearchKind;
+use odimo::runtime::{
+    BackendKind, ModelBackend, NativeBackend, NativeOptions, StepHparams, TrainState, WOptimizer,
+};
+
+fn hp_default() -> StepHparams {
+    StepHparams {
+        lam: 1e-7,
+        cost_sel: 0.0,
+        lr_w: 1e-2,
+        lr_th: 5e-2,
+    }
+}
+
+fn build(variant: &str, threads: usize, w_optimizer: WOptimizer) -> NativeBackend {
+    NativeBackend::build_with(
+        variant,
+        NativeOptions {
+            threads,
+            w_optimizer,
+        },
+    )
+    .expect("native variant")
+}
+
+/// Run `steps` train steps on deterministic synthetic batches; returns
+/// the per-step loss metric and the final state.
+fn run_steps(be: &NativeBackend, seed: i32, steps: usize) -> (Vec<f32>, TrainState) {
+    let m = be.manifest();
+    let ds = SynthDataset::from_name(&m.dataset.name, m.dataset.hw, m.dataset.classes, 7);
+    let mut state = be.init_state(seed).expect("init");
+    let hp = hp_default();
+    let mut losses = Vec::with_capacity(steps);
+    for i in 0..steps {
+        let (x, y) = ds.batch(Split::Train, i as u64, m.dataset.batch);
+        let metrics = be.train_step(&mut state, &x, &y, hp).expect("step");
+        losses.push(metrics[0]);
+    }
+    (losses, state)
+}
+
+fn theta_bits(be: &NativeBackend, state: &TrainState) -> Vec<u32> {
+    be.state_specs()
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.name.ends_with("/theta"))
+        .flat_map(|(i, _)| state.leaves[i].iter().map(|v| v.to_bits()))
+        .collect()
+}
+
+/// The determinism matrix: 1/2/4 threads × {resnet8, mbv1} × {diana,
+/// gap9} must produce bit-identical losses and θ after 3 steps.
+#[test]
+fn thread_count_determinism_matrix() {
+    for arch in ["resnet8", "mbv1"] {
+        for soc in ["diana", "gap9"] {
+            let variant = format!("{soc}_{arch}_tiny");
+            let be1 = build(&variant, 1, WOptimizer::SgdMomentum);
+            let (losses1, state1) = run_steps(&be1, 3, 3);
+            let theta1 = theta_bits(&be1, &state1);
+            assert!(losses1.iter().all(|l| l.is_finite()), "{variant}: {losses1:?}");
+            for threads in [2usize, 4] {
+                let bet = build(&variant, threads, WOptimizer::SgdMomentum);
+                let (losses_t, state_t) = run_steps(&bet, 3, 3);
+                let theta_t = theta_bits(&bet, &state_t);
+                assert_eq!(
+                    losses1.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+                    losses_t.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+                    "{variant}: losses differ at {threads} threads"
+                );
+                assert_eq!(
+                    theta1, theta_t,
+                    "{variant}: θ differs at {threads} threads"
+                );
+                // every W leaf must match too, bit for bit
+                for (a, b) in state1.leaves.iter().zip(&state_t.leaves) {
+                    assert_eq!(
+                        a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "{variant}: state leaf differs at {threads} threads"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Eval must be bit-identical across thread counts as well (shard sums
+/// run in shard-index order).
+#[test]
+fn eval_is_thread_count_invariant() {
+    let variant = "gap9_resnet8_tiny";
+    let be1 = build(variant, 1, WOptimizer::SgdMomentum);
+    let m = be1.manifest();
+    let ds = SynthDataset::from_name(&m.dataset.name, m.dataset.hw, m.dataset.classes, 9);
+    let (x, y) = ds.batch(Split::Val, 0, m.dataset.batch);
+    let state = be1.init_state(1).expect("init");
+    let r1 = be1.eval_batch(&state, &x, &y).expect("eval");
+    for threads in [2usize, 4] {
+        let bet = build(variant, threads, WOptimizer::SgdMomentum);
+        let rt = bet.eval_batch(&state, &x, &y).expect("eval");
+        assert_eq!(
+            r1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            rt.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "eval differs at {threads} threads"
+        );
+    }
+}
+
+/// The arena pin: after the first step, steady-state steps perform no
+/// arena growth — every buffer of step t+1 is recycled from step t.
+#[test]
+fn steady_state_steps_do_not_grow_the_arena() {
+    let be = build("trident_tiny_tiny", 2, WOptimizer::SgdMomentum);
+    assert!(be.planned_elems() > 0, "the planning pass must size something");
+    let m = be.manifest();
+    let ds = SynthDataset::from_name(&m.dataset.name, m.dataset.hw, m.dataset.classes, 11);
+    let mut state = be.init_state(0).expect("init");
+    let hp = hp_default();
+    let (x, y) = ds.batch(Split::Train, 0, m.dataset.batch);
+    be.train_step(&mut state, &x, &y, hp).expect("step");
+    be.eval_batch(&state, &x, &y).expect("eval");
+    let after_warm = be.arena_grown();
+    eprintln!(
+        "  arena: planned {} elems, first-step growth {} buffers",
+        be.planned_elems(),
+        after_warm
+    );
+    for i in 1..4 {
+        let (x, y) = ds.batch(Split::Train, i, m.dataset.batch);
+        be.train_step(&mut state, &x, &y, hp).expect("step");
+        be.eval_batch(&state, &x, &y).expect("eval");
+    }
+    assert_eq!(
+        be.arena_grown(),
+        after_warm,
+        "steady-state train/eval steps must not allocate"
+    );
+}
+
+/// Adam satellite: the native optimizer converges on the synthetic task
+/// (fixed-precision net, no θ) and carries its m/v/t state leaves.
+#[test]
+fn adam_converges_on_synthetic_task() {
+    let be = build("diana_tiny_tiny_fixed", 2, WOptimizer::Adam);
+    assert_eq!(be.manifest().w_optimizer, "adam");
+    let names: Vec<&str> = be.state_specs().iter().map(|s| s.name.as_str()).collect();
+    assert!(names.contains(&"opt_w/t"), "{names:?}");
+    assert!(names.iter().any(|n| n.ends_with("/w/m")));
+    assert!(names.iter().any(|n| n.ends_with("/w/v")));
+
+    let m = be.manifest();
+    let ds = SynthDataset::from_name(&m.dataset.name, m.dataset.hw, m.dataset.classes, 13);
+    let mut state = be.init_state(0).expect("init");
+    let hp = StepHparams {
+        lam: 0.0,
+        cost_sel: 0.0,
+        lr_w: 2e-3,
+        lr_th: 0.0,
+    };
+    let mut first = 0.0f64;
+    let mut last = 0.0f64;
+    const EPOCHS: usize = 8;
+    const STEPS: usize = 6;
+    for e in 0..EPOCHS {
+        let mut mean = 0.0f64;
+        for i in 0..STEPS {
+            let (x, y) = ds.batch(Split::Train, (e * STEPS + i) as u64, m.dataset.batch);
+            let metrics = be.train_step(&mut state, &x, &y, hp).expect("step");
+            assert!(metrics[0].is_finite());
+            mean += metrics[0] as f64 / STEPS as f64;
+        }
+        if e == 0 {
+            first = mean;
+        }
+        last = mean;
+    }
+    let t_idx = names.iter().position(|n| *n == "opt_w/t").unwrap();
+    assert_eq!(
+        state.leaves[t_idx][0] as usize,
+        EPOCHS * STEPS,
+        "adam step counter must advance once per step"
+    );
+    assert!(
+        last < 0.9 * first,
+        "adam failed to converge: first-epoch loss {first:.4}, last {last:.4}"
+    );
+}
+
+/// Same seed, same schedule: Adam is deterministic across thread counts
+/// too (the update runs once, on the tree-reduced gradients).
+#[test]
+fn adam_is_thread_count_invariant() {
+    let run = |threads: usize| {
+        let be = build("diana_tiny_tiny_fixed", threads, WOptimizer::Adam);
+        run_steps(&be, 21, 3)
+    };
+    let (l1, s1) = run(1);
+    let (l4, s4) = run(4);
+    assert_eq!(
+        l1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        l4.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+    );
+    for (a, b) in s1.leaves.iter().zip(&s4.leaves) {
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// native prune / layerwise baseline search spaces
+// ---------------------------------------------------------------------------
+
+fn tiny_trainer(variant: &str, seed: i32) -> Trainer {
+    let mut cfg = ExperimentConfig::for_variant(variant);
+    cfg.warmup_epochs = 1;
+    cfg.search_epochs = 1;
+    cfg.final_epochs = 1;
+    cfg.steps_per_epoch = 2;
+    cfg.eval_batches = 1;
+    cfg.lambdas = vec![0.1, 1.0];
+    cfg.seed = seed;
+    cfg.threads = 2;
+    Trainer::create(
+        &odimo::repo_root().join("artifacts"),
+        cfg,
+        Some(BackendKind::Native),
+    )
+    .expect("native trainer")
+}
+
+#[test]
+fn prune_search_space_runs_natively() {
+    let tr = tiny_trainer("diana_tiny_tiny_prune", 2);
+    assert_eq!(tr.kind, SearchKind::Prune);
+    assert_eq!(tr.manifest().search_kind, "prune");
+    let recs = sweep(&tr).expect("prune sweep");
+    assert_eq!(recs.len(), 2);
+    for r in &recs {
+        assert!(r.test_acc.is_finite());
+        assert!(r.det_cycles > 0);
+        for asg in &r.mapping.layers {
+            // prune assignments only use {keep=0, prune=1}
+            assert!(asg.cu_of.iter().all(|&c| c <= 1), "{:?}", asg.cu_of);
+        }
+    }
+    // the kept-channel totals are sane (deployment prunes the rest)
+    for r in &recs {
+        let kept: usize = r.mapping.layers.iter().map(|a| a.count(0)).sum();
+        let total: usize = r.mapping.layers.iter().map(|a| a.cu_of.len()).sum();
+        assert!(kept <= total, "kept {kept} of {total}");
+    }
+}
+
+#[test]
+fn layerwise_search_space_runs_natively() {
+    let tr = tiny_trainer("gap9_tiny_tiny_layerwise", 4);
+    assert_eq!(tr.kind, SearchKind::Layerwise);
+    assert_eq!(tr.manifest().search_kind, "layerwise");
+    let recs = sweep(&tr).expect("layerwise sweep");
+    assert_eq!(recs.len(), 2);
+    for r in &recs {
+        assert!(r.test_acc.is_finite());
+        assert!(r.mapping.is_well_formed());
+        for asg in &r.mapping.layers {
+            // one gate per layer → uniform channel assignment
+            if let Some(&first) = asg.cu_of.first() {
+                assert!(
+                    asg.cu_of.iter().all(|&c| c == first),
+                    "layerwise assignment must be uniform: {:?}",
+                    asg.cu_of
+                );
+            }
+        }
+    }
+}
