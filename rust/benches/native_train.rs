@@ -1,24 +1,34 @@
-//! Bench: native-engine train-step throughput, single- vs multi-thread.
+//! Bench: native-engine train-step throughput, single- vs multi-thread,
+//! plus the per-op time breakdown.
 //!
-//! Records the perf trajectory of the planned executor on a fixed shape
-//! (the DIANA ResNet-8/CIFAR-10 supernet, the acceptance workload) plus
-//! the miniature test supernet, and emits `BENCH_native_train.json` at
-//! the repo root so CI archives the numbers per commit.
+//! Records the perf trajectory of the persistent-pool executor on two
+//! fixed shapes — the DIANA ResNet-8/CIFAR-10 supernet (the acceptance
+//! workload) and the DIANA MobileNetV1/CIFAR-10 supernet (whose 1×1
+//! pointwise layers exercise the im2col-free conv fast path) — plus the
+//! miniature test supernet, and emits `BENCH_native_train.json` at the
+//! repo root so CI archives the numbers per commit. The JSON carries a
+//! `per_op` section (im2col vs matmul vs batch-norm vs optimizer …)
+//! from the feature-gated step profiler, so future kernel work starts
+//! from measured breakdowns instead of guesses.
 //!
 //! Regression gate: when `BENCH_CHECK=1` (set by the CI job) the bench
-//! compares its single-thread steps/sec against the committed
-//! `rust/benches/native_train.baseline.json` and exits non-zero on a
-//! >20% regression. The committed baseline is a conservative floor
-//! (machines differ); re-pin it from a CI run's emitted JSON whenever
-//! the engine gets deliberately faster.
+//! compares the resnet8 single-thread *and* 4-thread steps/sec against
+//! the committed `rust/benches/native_train.baseline.json` and exits
+//! non-zero on a >10% regression on either. The committed baselines are
+//! conservative floors (machines differ); re-pin them from a CI run's
+//! emitted JSON whenever the engine gets deliberately faster.
 
 use std::time::Duration;
 
+use odimo::runtime::native::profile;
 use odimo::runtime::{ModelBackend, NativeBackend, NativeOptions, StepHparams, WOptimizer};
 use odimo::util::bench::bench;
 use odimo::util::json::{parse, Value};
 
 const ACCEPTANCE_VARIANT: &str = "diana_resnet8_c10";
+const POINTWISE_VARIANT: &str = "diana_mbv1_c10";
+/// allowed regression vs a committed baseline floor (10%)
+const GATE_FACTOR: f64 = 0.9;
 
 fn hp() -> StepHparams {
     StepHparams {
@@ -29,17 +39,21 @@ fn hp() -> StepHparams {
     }
 }
 
-/// Train-step throughput of `variant` at `threads` workers (steps/sec,
-/// from the mean over a few seconds of timed steps after one warm step).
-fn train_steps_per_sec(variant: &str, threads: usize, budget: Duration) -> f64 {
-    let be = NativeBackend::build_with(
+fn build(variant: &str, threads: usize) -> NativeBackend {
+    NativeBackend::build_with(
         variant,
         NativeOptions {
             threads,
             w_optimizer: WOptimizer::SgdMomentum,
         },
     )
-    .expect("native variant");
+    .expect("native variant")
+}
+
+/// Train-step throughput of `variant` at `threads` workers (steps/sec,
+/// from the mean over a few seconds of timed steps after one warm step).
+fn train_steps_per_sec(variant: &str, threads: usize, budget: Duration) -> f64 {
+    let be = build(variant, threads);
     let m = be.manifest();
     let ds = odimo::datasets::SynthDataset::from_name(
         &m.dataset.name,
@@ -86,8 +100,80 @@ fn eval_batches_per_sec(variant: &str, budget: Duration) -> f64 {
     1e9 / r.mean_ns
 }
 
+/// Per-op breakdown of `steps` profiled single-thread train steps:
+/// `{op: {share, ns_per_step, calls_per_step}}`, plus stdout table.
+fn per_op_breakdown(variant: &str, steps: usize) -> Value {
+    let be = build(variant, 1);
+    let m = be.manifest();
+    let ds = odimo::datasets::SynthDataset::from_name(
+        &m.dataset.name,
+        m.dataset.hw,
+        m.dataset.classes,
+        3,
+    );
+    let (x, y) = ds.batch(odimo::datasets::Split::Train, 0, m.dataset.batch);
+    let mut state = be.init_state(0).expect("init");
+    // one unprofiled warm step so arena growth stays out of the numbers
+    be.train_step(&mut state, &x, &y, hp()).expect("warm step");
+    profile::reset();
+    profile::set_enabled(true);
+    for _ in 0..steps {
+        be.train_step(&mut state, &x, &y, hp()).expect("profiled step");
+    }
+    profile::set_enabled(false);
+    let mut rows = profile::snapshot();
+    rows.sort_by(|a, b| b.total_ns.cmp(&a.total_ns));
+    let total: u64 = rows.iter().map(|r| r.total_ns).sum();
+    println!("-- per-op breakdown: {variant} ({steps} steps, t=1) --");
+    if rows.is_empty() {
+        println!("   (profiler compiled out — rebuilt without `op-profile`)");
+    }
+    let fields: Vec<(&str, Value)> = rows
+        .iter()
+        .map(|r| {
+            let share = r.total_ns as f64 / total.max(1) as f64;
+            println!(
+                "   {:<12} {:>5.1}%  {:>12.0} ns/step",
+                r.op.name(),
+                100.0 * share,
+                r.total_ns as f64 / steps as f64
+            );
+            (
+                r.op.name(),
+                Value::obj(vec![
+                    ("share", Value::num(share)),
+                    ("ns_per_step", Value::num(r.total_ns as f64 / steps as f64)),
+                    (
+                        "calls_per_step",
+                        Value::num(r.calls as f64 / steps as f64),
+                    ),
+                ]),
+            )
+        })
+        .collect();
+    Value::obj(fields)
+}
+
+/// `BENCH_CHECK=1` gate: fail on a >10% regression vs a committed floor.
+fn gate(label: &str, measured: f64, baseline: &Value, key: &str) -> bool {
+    let floor = baseline
+        .f64_of(key)
+        .unwrap_or_else(|_| panic!("baseline field {key}"));
+    let min_ok = GATE_FACTOR * floor;
+    if measured < min_ok {
+        eprintln!(
+            "BENCH REGRESSION: {label} {measured:.3} steps/s is more than 10% below \
+             the committed baseline {floor:.3} (floor {min_ok:.3})"
+        );
+        false
+    } else {
+        println!("   -> baseline gate ok: {label} {measured:.3} >= {GATE_FACTOR} x {floor:.3}");
+        true
+    }
+}
+
 fn main() {
-    println!("== native train-step bench (planned executor) ==");
+    println!("== native train-step bench (persistent-pool executor) ==");
 
     // trajectory entries: the miniature supernet, train + eval paths
     let tiny_sps = train_steps_per_sec("trident_tiny_tiny", 1, Duration::from_secs(1));
@@ -99,37 +185,50 @@ fn main() {
     let speedup = s4 / s1;
     println!("   -> 4-thread speedup on {ACCEPTANCE_VARIANT}: {speedup:.2}x");
 
+    // pointwise-dominated shape: covers the 1x1 im2col-free fast path
+    let m1 = train_steps_per_sec(POINTWISE_VARIANT, 1, Duration::from_secs(4));
+    let m4 = train_steps_per_sec(POINTWISE_VARIANT, 4, Duration::from_secs(4));
+    println!(
+        "   -> 4-thread speedup on {POINTWISE_VARIANT}: {:.2}x",
+        m4 / m1
+    );
+
+    // per-op breakdowns (profiled separately so probes never skew timings)
+    let per_op_resnet8 = per_op_breakdown(ACCEPTANCE_VARIANT, 2);
+    let per_op_mbv1 = per_op_breakdown(POINTWISE_VARIANT, 2);
+
     // emit the trajectory record
     let out = Value::obj(vec![
         ("variant", Value::str(ACCEPTANCE_VARIANT)),
         ("threads1_steps_per_sec", Value::num(s1)),
         ("threads4_steps_per_sec", Value::num(s4)),
         ("speedup_4_threads", Value::num(speedup)),
+        ("mbv1_variant", Value::str(POINTWISE_VARIANT)),
+        ("mbv1_threads1_steps_per_sec", Value::num(m1)),
+        ("mbv1_threads4_steps_per_sec", Value::num(m4)),
         ("tiny_steps_per_sec", Value::num(tiny_sps)),
         ("tiny_eval_per_sec", Value::num(tiny_eval_sps)),
+        (
+            "per_op",
+            Value::obj(vec![
+                ("diana_resnet8_c10", per_op_resnet8),
+                ("diana_mbv1_c10", per_op_mbv1),
+            ]),
+        ),
     ]);
     let path = odimo::repo_root().join("BENCH_native_train.json");
     std::fs::write(&path, out.to_string_pretty()).expect("write bench json");
     println!("   -> wrote {}", path.display());
 
-    // regression gate (CI sets BENCH_CHECK=1)
+    // regression gate (CI sets BENCH_CHECK=1): single- AND 4-thread
     if std::env::var("BENCH_CHECK").as_deref() == Ok("1") {
         let base_path = odimo::repo_root().join("rust/benches/native_train.baseline.json");
         let text = std::fs::read_to_string(&base_path).expect("committed bench baseline");
         let base = parse(&text).expect("baseline json");
-        let floor = base
-            .f64_of("threads1_steps_per_sec")
-            .expect("baseline threads1_steps_per_sec");
-        let min_ok = 0.8 * floor;
-        if s1 < min_ok {
-            eprintln!(
-                "BENCH REGRESSION: single-thread {s1:.3} steps/s is more than 20% below \
-                 the committed baseline {floor:.3} (floor {min_ok:.3})"
-            );
+        let ok1 = gate("single-thread resnet8", s1, &base, "threads1_steps_per_sec");
+        let ok4 = gate("4-thread resnet8", s4, &base, "threads4_steps_per_sec");
+        if !(ok1 && ok4) {
             std::process::exit(1);
         }
-        println!(
-            "   -> baseline gate ok: {s1:.3} steps/s >= 0.8 x {floor:.3}"
-        );
     }
 }

@@ -129,6 +129,16 @@ impl ExperimentConfig {
         get_usize("eval_batches", &mut cfg.eval_batches)?;
         get_usize("patience", &mut cfg.patience)?;
         get_usize("threads", &mut cfg.threads)?;
+        // reject absurd worker counts eagerly (the backend re-checks the
+        // resolved value) — silent oversubscription is always a typo
+        let cap = crate::runtime::native::max_threads();
+        if cfg.threads > cap {
+            bail!(
+                "config field 'threads' = {} exceeds {cap} (4x the machine's \
+                 available cores): use 0 for all cores",
+                cfg.threads
+            );
+        }
         if let Some(x) = v.get("w_optimizer") {
             cfg.w_optimizer = x.as_str()?.to_string();
             // validate eagerly: a typo'd optimizer should fail at parse time
@@ -272,5 +282,17 @@ mod tests {
             ExperimentConfig::parse(r#"{"variant": "x", "w_optimizer": "adagrad"}"#).is_err(),
             "unknown optimizer must fail at parse time"
         );
+    }
+
+    #[test]
+    fn absurd_thread_counts_rejected_at_parse_time() {
+        let err = ExperimentConfig::parse(r#"{"variant": "x", "threads": 1000000}"#)
+            .expect_err("a million workers is a typo, not a request");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("threads"), "{msg}");
+        assert!(msg.contains("available cores"), "{msg}");
+        // sane explicit counts still parse
+        let cfg = ExperimentConfig::parse(r#"{"variant": "x", "threads": 2}"#).unwrap();
+        assert_eq!(cfg.threads, 2);
     }
 }

@@ -40,8 +40,11 @@ use odimo::util::cli;
 
 const USAGE: &str = "usage: repro <list|platforms|train|sweep|exp> [options]
   global: --artifacts DIR  --results DIR  --backend native|xla
-          --threads N  (native worker threads; 0/default = all cores —
-           results are bit-identical for any value)
+          --threads N  (native worker threads; 0/default = all cores,
+           capped at 4x the machine's cores — results are bit-identical
+           for any value)
+          --profile  (print the native engine's per-op time breakdown
+           at exit: im2col vs matmul vs batch-norm vs optimizer ...)
   train:  --variant V [--lambda L] [--cost-target latency|energy] [--config F] [--fast F]
   sweep:  [--variant V] [--cost-target T] [--config F] [--fast F] [--no-baselines]
           (no --variant + native backend: sweeps every registered SoC)
@@ -53,10 +56,26 @@ const USAGE: &str = "usage: repro <list|platforms|train|sweep|exp> [options]
           arch: resnet20|resnet8|mbv1|tiny   task: c10|c100|imgnet|tiny";
 
 fn main() -> Result<()> {
-    let args = cli::parse(std::env::args().skip(1), &["no-baselines", "help"])?;
+    let args = cli::parse(std::env::args().skip(1), &["no-baselines", "help", "profile"])?;
     if args.has_flag("help") || args.positional.is_empty() {
         println!("{USAGE}");
         return Ok(());
+    }
+    // per-op profiler: collect across the whole command, report at exit.
+    // The guard prints on drop so the breakdown also appears when a long
+    // profiled run dies partway — that is when it is most useful.
+    struct ProfileReport(bool);
+    impl Drop for ProfileReport {
+        fn drop(&mut self) {
+            if self.0 {
+                println!("{}", odimo::runtime::native::profile::report());
+            }
+        }
+    }
+    let profile = args.has_flag("profile");
+    let _report_at_exit = ProfileReport(profile);
+    if profile {
+        odimo::runtime::native::profile::set_enabled(true);
     }
     let root = odimo::repo_root();
     let artifacts = args

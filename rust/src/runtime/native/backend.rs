@@ -3,16 +3,20 @@
 //!
 //! One `train` step is: split the batch into [`NSHARDS`] fixed shards,
 //! run each shard's forward/backward on its own arena-backed [`Tape`]
-//! (shards execute data-parallel across a scoped thread pool when
-//! `threads > 1`), tree-reduce the shard gradients in a fixed binary
-//! order, then apply one optimizer update — SGD-with-momentum or Adam
-//! (with bias correction) for the W family (`lr_w`) and plain SGD for θ
-//! (`lr_th`), the per-group learning rates of the paper's joint descent.
+//! (shards execute data-parallel as tasks of the backend's persistent
+//! [`WorkerPool`] when `threads > 1` — no per-step thread spawning),
+//! tree-reduce the shard gradients in a fixed binary order, then apply
+//! one optimizer update — SGD-with-momentum or Adam (with bias
+//! correction) for the W family (`lr_w`) and plain SGD for θ (`lr_th`),
+//! the per-group learning rates of the paper's joint descent. When
+//! `threads` exceeds the shard count the surplus pool slots become
+//! kernel lanes of their shard group (see `runtime/native/pool.rs`)
+//! instead of nested scoped spawns.
 //!
 //! Determinism contract: the shard structure depends only on the batch
 //! size (never on the thread count), every shard is computed serially
 //! with a fixed accumulation order (the row-sharded kernels are
-//! bit-identical for any worker count), and both the gradient tree
+//! bit-identical for any lane count), and both the gradient tree
 //! reduction and the metric/BN-statistic sums run in shard-index order —
 //! so 1-thread and N-thread steps produce bit-identical losses, weights
 //! and θ (pinned by `tests/native_exec.rs`). Batch statistics are
@@ -45,6 +49,8 @@ use crate::runtime::{ModelBackend, StepHparams, TrainState};
 
 use super::arena::Arena;
 use super::plan::ExecPlan;
+use super::pool::{max_threads, KernelScope, WorkerPool};
+use super::profile::{self, Op};
 use super::supernet::{
     forward, init_conv_weight, init_fc, theta_counts, LayerVars, SupernetSpec,
 };
@@ -97,7 +103,8 @@ impl std::str::FromStr for WOptimizer {
 #[derive(Debug, Clone, Copy)]
 pub struct NativeOptions {
     /// worker threads for batch shards / kernels (≥1; results are
-    /// bit-identical for any value)
+    /// bit-identical for any value; capped at 4× the available cores —
+    /// [`NativeBackend::build_with`] rejects absurd oversubscription)
     pub threads: usize,
     pub w_optimizer: WOptimizer,
 }
@@ -157,7 +164,9 @@ pub struct NativeBackend {
     /// Adam step-counter leaf
     step_leaf: Option<usize>,
     optimizer: WOptimizer,
-    threads: usize,
+    /// persistent worker pool: `threads` slots created once, reused by
+    /// every train/eval step for shard tasks and kernel lanes
+    pool: WorkerPool,
     plan: ExecPlan,
     /// per-shard-slot buffer arenas, recycled across steps
     arenas: Mutex<Vec<Arena>>,
@@ -178,6 +187,14 @@ impl NativeBackend {
     /// Build the engine for a native variant name
     /// (`<platform>_<arch>_<task>[_w050|_w025][_fixed|_prune|_layerwise]`).
     pub fn build_with(variant: &str, opts: NativeOptions) -> Result<NativeBackend> {
+        let cap = max_threads();
+        if opts.threads > cap {
+            bail!(
+                "threads = {} exceeds {cap} (4x the machine's available cores): \
+                 refusing to oversubscribe — use 0 (or omit --threads) for all cores",
+                opts.threads
+            );
+        }
         let spec = SupernetSpec::build(variant)?;
 
         // --- state layout -------------------------------------------------
@@ -325,7 +342,7 @@ impl NativeBackend {
             opt,
             step_leaf,
             optimizer: opts.w_optimizer,
-            threads: opts.threads.max(1),
+            pool: WorkerPool::new(opts.threads.max(1)),
             plan,
             arenas: Mutex::new(arenas),
             seq,
@@ -440,13 +457,13 @@ impl NativeBackend {
         y: &[i32],
         hp: StepHparams,
         scale: f32,
-        kernel_threads: usize,
+        scope: &KernelScope,
         arena: Arena,
     ) -> ShardOut {
         let hw = self.manifest.dataset.hw;
         let nb = y.len();
         let mut tape = Tape::with_arena(arena);
-        tape.set_kernel_threads(kernel_threads);
+        tape.set_kernel_scope(scope.clone());
         let (lvs, fcw, fcb, w_vars, theta_vars) = self.stage_params(&mut tape, state);
         let xv = tape.leaf_copy(vec![nb, hw, hw, 3], x);
         let out = forward(&self.spec, &mut tape, &lvs, fcw, fcb, xv, true, running);
@@ -514,13 +531,13 @@ impl NativeBackend {
         running: &[(Vec<f32>, Vec<f32>)],
         x: &[f32],
         y: &[i32],
-        kernel_threads: usize,
+        scope: &KernelScope,
         arena: Arena,
     ) -> (EvalBits, Arena) {
         let hw = self.manifest.dataset.hw;
         let nb = y.len();
         let mut tape = Tape::with_arena(arena);
-        tape.set_kernel_threads(kernel_threads);
+        tape.set_kernel_scope(scope.clone());
         let (lvs, fcw, fcb, _, _) = self.stage_params(&mut tape, state);
         let xv = tape.leaf_copy(vec![nb, hw, hw, 3], x);
         let out = forward(&self.spec, &mut tape, &lvs, fcw, fcb, xv, false, running);
@@ -528,54 +545,28 @@ impl NativeBackend {
         (bits, tape.recycle())
     }
 
-    /// Run one closure per shard, in parallel when `threads > 1`, and
-    /// return the results in shard order. The closure must be pure per
-    /// shard — ordering of execution never affects the outputs.
-    fn run_sharded<T: Send, F: Fn(usize, Arena) -> T + Sync>(
+    /// Run one closure per shard on the persistent pool and return the
+    /// results in shard order. Shards become pool tasks (`i % groups`
+    /// round-robin onto group leaders); pool slots beyond the shard
+    /// count serve as kernel lanes inside their group, via the
+    /// [`KernelScope`] handed to the closure. The closure must be pure
+    /// per shard — ordering of execution never affects the outputs.
+    fn run_sharded<T: Send, F: Fn(usize, Arena, &KernelScope) -> T + Sync>(
         &self,
-        jobs: Vec<(usize, Arena)>,
+        arenas: Vec<Arena>,
         run: F,
     ) -> Vec<T> {
-        let s = jobs.len();
-        let workers = self.threads.min(s).max(1);
-        if workers <= 1 {
-            return jobs.into_iter().map(|(i, a)| run(i, a)).collect();
-        }
-        let mut per_worker: Vec<Vec<(usize, Arena)>> = (0..workers).map(|_| Vec::new()).collect();
-        for (i, a) in jobs {
-            per_worker[i % workers].push((i, a));
-        }
-        let mut tagged: Vec<(usize, T)> = std::thread::scope(|sc| {
-            let handles: Vec<_> = per_worker
-                .into_iter()
-                .map(|mine| {
-                    let run = &run;
-                    sc.spawn(move || {
-                        mine.into_iter()
-                            .map(|(i, a)| (i, run(i, a)))
-                            .collect::<Vec<_>>()
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .flat_map(|h| h.join().expect("shard worker panicked"))
-                .collect()
-        });
-        tagged.sort_by_key(|&(i, _)| i);
-        tagged.into_iter().map(|(_, t)| t).collect()
-    }
-
-    /// Kernel-level workers of shard `i`: the total thread budget divides
-    /// across the shard workers, with the remainder spread over the first
-    /// workers so no core idles when `threads` is not a multiple of the
-    /// shard count. Any per-shard value is numerics-neutral — the row-
-    /// sharded kernels are bit-identical at every worker count.
-    fn kernel_threads(&self, shards: usize, i: usize) -> usize {
-        let workers = self.threads.min(shards).max(1);
-        let base = self.threads / workers;
-        let rem = self.threads % workers;
-        (base + usize::from(i % workers < rem)).max(1)
+        let s = arenas.len();
+        let slots: Vec<Mutex<Option<Arena>>> =
+            arenas.into_iter().map(|a| Mutex::new(Some(a))).collect();
+        self.pool.run_tasks(s, &|i, scope| {
+            let arena = slots[i]
+                .lock()
+                .unwrap()
+                .take()
+                .expect("each shard task runs exactly once");
+            run(i, arena, scope)
+        })
     }
 }
 
@@ -668,10 +659,9 @@ impl ModelBackend for NativeBackend {
         let bounds = Self::shard_bounds(n);
         let s = bounds.len();
         let arenas = self.take_arenas(s);
-        let jobs: Vec<(usize, Arena)> = arenas.into_iter().enumerate().collect();
         let state_ro: &TrainState = state;
         let running = self.running_stats(state_ro);
-        let mut outs: Vec<ShardOut> = self.run_sharded(jobs, |i, arena| {
+        let mut outs: Vec<ShardOut> = self.run_sharded(arenas, |i, arena, scope| {
             let (b0, b1) = bounds[i];
             let row = hw * hw * 3;
             self.train_shard(
@@ -681,13 +671,16 @@ impl ModelBackend for NativeBackend {
                 &y[b0..b1],
                 hp,
                 (b1 - b0) as f32 / n as f32,
-                self.kernel_threads(s, i),
+                scope,
                 arena,
             )
         });
 
         // --- fixed-order reduction + metrics ------------------------------
-        let reduced = tree_reduce_grads(&mut outs);
+        let reduced = {
+            let _p = profile::time(Op::Reduce);
+            tree_reduce_grads(&mut outs)
+        };
         let mut loss_val = 0.0f32;
         let mut correct = 0.0f32;
         let mut loss_sum = 0.0f32;
@@ -704,6 +697,7 @@ impl ModelBackend for NativeBackend {
             reduced.len(),
             n_w + self.geoms.iter().filter(|g| g.theta.is_some()).count()
         );
+        let p_opt = profile::time(Op::Optimizer);
         match self.optimizer {
             WOptimizer::SgdMomentum => {
                 for (slot, g) in self.opt.iter().zip(&reduced[..n_w]) {
@@ -759,8 +753,10 @@ impl ModelBackend for NativeBackend {
                 *tv -= hp.lr_th * gv;
             }
         }
+        drop(p_opt);
 
         // --- BN running statistics (shard-weighted, fixed order) ----------
+        let _p_bn = profile::time(Op::Reduce);
         for (gi, gl) in self.geoms.iter().enumerate() {
             if outs[0].stats[gi].is_none() {
                 continue;
@@ -806,9 +802,8 @@ impl ModelBackend for NativeBackend {
         let bounds = Self::shard_bounds(n);
         let s = bounds.len();
         let arenas = self.take_arenas(s);
-        let jobs: Vec<(usize, Arena)> = arenas.into_iter().enumerate().collect();
         let running = self.running_stats(state);
-        let outs = self.run_sharded(jobs, |i, arena| {
+        let outs = self.run_sharded(arenas, |i, arena, scope| {
             let (b0, b1) = bounds[i];
             let row = hw * hw * 3;
             self.eval_shard(
@@ -816,7 +811,7 @@ impl ModelBackend for NativeBackend {
                 &running,
                 &x[b0 * row..b1 * row],
                 &y[b0..b1],
-                self.kernel_threads(s, i),
+                scope,
                 arena,
             )
         });

@@ -5,8 +5,13 @@
 //!
 //! Layering (bottom-up):
 //!
+//! * [`pool`] — the persistent worker pool: long-lived threads driven
+//!   by a barrier/epoch protocol, serving both batch-shard tasks and
+//!   in-kernel row lanes (no per-step or per-call spawning);
+//! * [`profile`] — the feature-gated per-op step profiler behind
+//!   `repro … --profile` and the bench's per-op breakdown;
 //! * [`tensor`] — dense f32 buffers + the three cache-blocked matmul
-//!   kernels, with row-sharded scoped-thread-pool wrappers;
+//!   kernels, with row-sharded persistent-pool wrappers;
 //! * [`arena`] — the exact-size buffer pool every step's tape draws from
 //!   and recycles into (steady-state steps allocate nothing);
 //! * [`tape`] — the autodiff core: exactly the ops the supernets need
@@ -35,6 +40,8 @@
 pub mod arena;
 pub mod backend;
 pub mod plan;
+pub mod pool;
+pub mod profile;
 pub mod supernet;
 pub mod tape;
 pub mod tensor;
@@ -42,6 +49,7 @@ pub mod tensor;
 pub use arena::Arena;
 pub use backend::{NativeBackend, NativeOptions, WOptimizer, NSHARDS};
 pub use plan::ExecPlan;
+pub use pool::{max_threads, KernelScope, WorkerPool};
 pub use supernet::{Arch, SearchMode, SupernetSpec};
 pub use tape::{EvalBits, Gradients, QuantKind, Tape, Var};
 pub use tensor::Tensor;

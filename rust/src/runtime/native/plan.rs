@@ -204,9 +204,16 @@ fn conv_bn_sizes(
     // conv output + its backward scratch
     bag.add_node(rows * cout, 1);
     if l.ltype == LayerType::Dw {
-        // dw backward: dx (input-shaped) + dw
-        bag.add(n * input_hw * input_hw * l.cin, 1);
+        // transposed weight panel (aux, shared by forward and backward)
         bag.add(cout * f, 1);
+        // dw backward: dx (input-shaped) + transposed dwt + dw fold
+        bag.add(n * input_hw * input_hw * l.cin, 1);
+        bag.add(cout * f, 2);
+    } else if l.k == 1 && l.stride == 1 {
+        // pointwise fast path: no im2col patches, no col2im — just the
+        // dW and dX matmul scratch
+        bag.add(cout * f, 1); // dW scratch
+        bag.add(rows * f, 1); // dX scratch
     } else {
         bag.add(rows * f, 1); // im2col patches (aux)
         bag.add(rows * f, 1); // dcols scratch

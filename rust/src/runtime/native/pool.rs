@@ -1,0 +1,555 @@
+//! Persistent worker pool for the native engine: long-lived threads
+//! created once per backend, driven by a barrier/epoch protocol — no
+//! per-step or per-kernel thread spawning.
+//!
+//! Before this module every `par_matmul_*` call and every sharded train
+//! step paid a `std::thread::scope` spawn/join round trip; at the small
+//! batch shards the supernets actually train on, that fixed cost rivaled
+//! the kernel work itself. The pool amortizes it: [`WorkerPool::new`]
+//! spawns `width − 1` workers once (the caller is always slot 0), and
+//! each parallel region is one condvar broadcast plus one barrier wait.
+//!
+//! Two tiers share the same pool:
+//!
+//! * **Tasks** ([`WorkerPool::run_tasks`]) — the step executor's batch
+//!   shards. The pool's slots are partitioned into `min(width, ntasks)`
+//!   contiguous *groups*; the first slot of each group is the leader and
+//!   runs tasks `g, g + ngroups, …` in index order.
+//! * **Kernel lanes** ([`KernelScope`]) — the row sharding inside the
+//!   blocked matmul/conv kernels. A group's non-leader slots park on the
+//!   group's [`GroupGate`]; when the leader's tape hits a parallel
+//!   kernel it publishes the row closure to the gate and the group's
+//!   lanes execute their static index-ordered ranges — the nested
+//!   scoped spawns of the previous executor become slot reuse.
+//!
+//! Determinism: the pool never makes scheduling decisions that reach the
+//! numbers. Task→group assignment is `i % ngroups`, lane ranges are the
+//! same `lane·rows/t` split the scoped-thread wrappers used, and every
+//! output element is still produced by exactly one lane in a fixed
+//! accumulation order — so results are bit-identical for any `width`
+//! (the PR-4 1/2/4-thread matrix passes unchanged).
+//!
+//! Panic safety: a panicking task or kernel lane marks its gate/pool
+//! poisoned, the barrier still completes (so no borrow outlives its
+//! frame), and the panic is re-raised on the caller — the pool itself
+//! stays usable. Dropping the pool shuts the workers down and joins
+//! them; no thread outlives the backend.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Upper bound on a sane worker count, as a multiple of the machine's
+/// available cores: beyond this, "more threads" is pure oversubscription
+/// overhead and almost certainly a config typo.
+pub const MAX_THREADS_PER_CORE: usize = 4;
+
+/// Largest worker count this machine accepts (`4 × available cores`).
+pub fn max_threads() -> usize {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    MAX_THREADS_PER_CORE * cores
+}
+
+// ---------------------------------------------------------------------------
+// type-erased jobs
+// ---------------------------------------------------------------------------
+
+/// A borrowed `Fn(usize)` with its lifetime erased so it can sit in a
+/// `Mutex` the worker threads read. Soundness contract: whoever
+/// publishes a `RawJob` must not return (or unwind past the closure's
+/// frame) until every participant is known to have finished running it
+/// — both tiers below wait out their barrier even when the closure
+/// panics, which is exactly that guarantee.
+#[derive(Clone, Copy)]
+struct RawJob {
+    /// `*const &'a (dyn Fn(usize) + Sync)` — a thin pointer to the fat
+    /// reference, which lives on the publisher's stack
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+}
+
+unsafe impl Send for RawJob {}
+
+unsafe fn call_erased(data: *const (), idx: usize) {
+    let f = *(data as *const &(dyn Fn(usize) + Sync));
+    f(idx)
+}
+
+impl RawJob {
+    /// Erase `f`'s lifetime. See the struct-level soundness contract.
+    unsafe fn of(f: &&(dyn Fn(usize) + Sync)) -> RawJob {
+        RawJob {
+            data: f as *const &(dyn Fn(usize) + Sync) as *const (),
+            call: call_erased,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// group gate: the kernel-lane tier
+// ---------------------------------------------------------------------------
+
+struct GateState {
+    epoch: u64,
+    job: Option<RawJob>,
+    finished: bool,
+    done: usize,
+    poisoned: bool,
+}
+
+/// Rendezvous point of one slot group: the leader publishes kernel
+/// closures, the member lanes execute them, a done-count barrier closes
+/// each region.
+pub struct GroupGate {
+    state: Mutex<GateState>,
+    go: Condvar,
+    done_cv: Condvar,
+}
+
+impl GroupGate {
+    fn new() -> GroupGate {
+        GroupGate {
+            state: Mutex::new(GateState {
+                epoch: 0,
+                job: None,
+                finished: false,
+                done: 0,
+                poisoned: false,
+            }),
+            go: Condvar::new(),
+            done_cv: Condvar::new(),
+        }
+    }
+
+    /// Park as lane `lane` (≥ 1): run each published job, leave when the
+    /// leader declares the group finished.
+    fn member_loop(&self, lane: usize) {
+        let mut seen = 0u64;
+        loop {
+            let job = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if st.epoch != seen {
+                        break;
+                    }
+                    if st.finished {
+                        return;
+                    }
+                    st = self.go.wait(st).unwrap();
+                }
+                seen = st.epoch;
+                st.job.expect("gate epoch advanced without a job")
+            };
+            let r = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.data, lane) }));
+            let mut st = self.state.lock().unwrap();
+            if r.is_err() {
+                st.poisoned = true;
+            }
+            st.done += 1;
+            self.done_cv.notify_all();
+        }
+    }
+
+    /// Leader side: release the member lanes (called once, after the
+    /// group's last task — also on unwind, via [`FinishGuard`]).
+    fn finish(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.finished = true;
+        self.go.notify_all();
+    }
+}
+
+/// Calls [`GroupGate::finish`] on drop so member lanes are released even
+/// when the leader's task unwinds.
+struct FinishGuard<'a>(&'a GroupGate);
+
+impl Drop for FinishGuard<'_> {
+    fn drop(&mut self) {
+        self.0.finish();
+    }
+}
+
+/// Kernel-lane handle a task executes under: `lanes()` slots (leader =
+/// lane 0) that [`KernelScope::run`] fans a closure across. Cheap to
+/// clone (it rides inside tape backward closures); must only be run
+/// from the task that received it, while that task is live.
+#[derive(Clone, Default)]
+pub struct KernelScope {
+    gate: Option<Arc<GroupGate>>,
+    lanes: usize,
+}
+
+impl KernelScope {
+    /// A scope with a single lane: every kernel runs serially inline.
+    pub fn serial() -> KernelScope {
+        KernelScope {
+            gate: None,
+            lanes: 1,
+        }
+    }
+
+    fn group(gate: Arc<GroupGate>, lanes: usize) -> KernelScope {
+        debug_assert!(lanes >= 1);
+        KernelScope {
+            gate: if lanes > 1 { Some(gate) } else { None },
+            lanes: lanes.max(1),
+        }
+    }
+
+    /// Worker slots available to a kernel (≥ 1).
+    pub fn lanes(&self) -> usize {
+        self.lanes.max(1)
+    }
+
+    /// Run `f(lane)` on every lane (0 = the calling thread), returning
+    /// when all lanes are done. Lanes that have no work must simply
+    /// return. Panics in any lane are re-raised here after the barrier.
+    pub fn run(&self, f: &(dyn Fn(usize) + Sync)) {
+        let gate = match (&self.gate, self.lanes) {
+            (Some(g), n) if n > 1 => g,
+            _ => {
+                f(0);
+                return;
+            }
+        };
+        let fr: &(dyn Fn(usize) + Sync) = f;
+        let job = unsafe { RawJob::of(&fr) };
+        {
+            let mut st = gate.state.lock().unwrap();
+            st.epoch += 1;
+            st.job = Some(job);
+            st.done = 0;
+            gate.go.notify_all();
+        }
+        let r = catch_unwind(AssertUnwindSafe(|| f(0)));
+        let mut st = gate.state.lock().unwrap();
+        while st.done < self.lanes - 1 {
+            st = gate.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+        let poisoned = std::mem::replace(&mut st.poisoned, false);
+        drop(st);
+        if let Err(p) = r {
+            std::panic::resume_unwind(p);
+        }
+        if poisoned {
+            panic!("kernel lane panicked");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the pool
+// ---------------------------------------------------------------------------
+
+struct JobSlot {
+    epoch: u64,
+    job: Option<RawJob>,
+    shutdown: bool,
+}
+
+struct DoneState {
+    done: usize,
+    poisoned: bool,
+}
+
+struct PoolShared {
+    job: Mutex<JobSlot>,
+    go: Condvar,
+    done: Mutex<DoneState>,
+    done_cv: Condvar,
+}
+
+/// Persistent pool of `width` slots: the caller is slot 0, slots
+/// `1..width` are long-lived threads spawned once and joined on drop.
+pub struct WorkerPool {
+    width: usize,
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+    /// serializes concurrent broadcasts (the pool carries one job at a time)
+    run_lock: Mutex<()>,
+}
+
+impl WorkerPool {
+    /// Spawn `width - 1` workers (a 1-wide pool spawns nothing and runs
+    /// everything inline on the caller).
+    pub fn new(width: usize) -> WorkerPool {
+        let width = width.max(1);
+        let shared = Arc::new(PoolShared {
+            job: Mutex::new(JobSlot {
+                epoch: 0,
+                job: None,
+                shutdown: false,
+            }),
+            go: Condvar::new(),
+            done: Mutex::new(DoneState {
+                done: 0,
+                poisoned: false,
+            }),
+            done_cv: Condvar::new(),
+        });
+        let handles = (1..width)
+            .map(|slot| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("odimo-worker-{slot}"))
+                    .spawn(move || worker_loop(&sh, slot))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        WorkerPool {
+            width,
+            shared,
+            handles,
+            run_lock: Mutex::new(()),
+        }
+    }
+
+    /// Slot count (worker threads + the caller).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Broadcast `f(slot)` to every slot and wait for all of them.
+    /// Panics in any slot are re-raised here after the barrier.
+    fn run(&self, f: &(dyn Fn(usize) + Sync)) {
+        if self.width <= 1 {
+            f(0);
+            return;
+        }
+        // a propagated task panic unwinds through this guard and poisons
+        // the mutex; the pool state itself is consistent (the barrier
+        // completed), so poisoning is ignorable
+        let _serial = self
+            .run_lock
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        let fr: &(dyn Fn(usize) + Sync) = f;
+        let job = unsafe { RawJob::of(&fr) };
+        {
+            let mut st = self.shared.job.lock().unwrap();
+            st.epoch += 1;
+            st.job = Some(job);
+            self.shared.go.notify_all();
+        }
+        let r = catch_unwind(AssertUnwindSafe(|| f(0)));
+        let mut d = self.shared.done.lock().unwrap();
+        while d.done < self.width - 1 {
+            d = self.shared.done_cv.wait(d).unwrap();
+        }
+        d.done = 0;
+        let poisoned = std::mem::replace(&mut d.poisoned, false);
+        drop(d);
+        {
+            // retire the job pointer before the closure's frame can die
+            let mut st = self.shared.job.lock().unwrap();
+            st.job = None;
+        }
+        if let Err(p) = r {
+            std::panic::resume_unwind(p);
+        }
+        if poisoned {
+            panic!("pool worker panicked");
+        }
+    }
+
+    /// Run `ntasks` independent tasks across the pool and return their
+    /// results in task order.
+    ///
+    /// Slots are partitioned into `min(width, ntasks)` contiguous
+    /// groups; each group's leader executes tasks `g, g + ngroups, …`
+    /// (so the assignment depends only on `width` and `ntasks`, never on
+    /// timing) and passes its [`KernelScope`] — the group's lanes — to
+    /// the task closure for row-sharded kernels.
+    pub fn run_tasks<T: Send>(
+        &self,
+        ntasks: usize,
+        f: &(dyn Fn(usize, &KernelScope) -> T + Sync),
+    ) -> Vec<T> {
+        if ntasks == 0 {
+            return Vec::new();
+        }
+        if self.width <= 1 {
+            let scope = KernelScope::serial();
+            return (0..ntasks).map(|i| f(i, &scope)).collect();
+        }
+        let ngroups = self.width.min(ntasks);
+        // contiguous slot ranges [g·width/ngroups, (g+1)·width/ngroups)
+        let starts: Vec<usize> = (0..=ngroups).map(|g| g * self.width / ngroups).collect();
+        let gates: Vec<Arc<GroupGate>> = (0..ngroups).map(|_| Arc::new(GroupGate::new())).collect();
+        let results: Vec<Mutex<Option<T>>> = (0..ntasks).map(|_| Mutex::new(None)).collect();
+        let spmd = |slot: usize| {
+            let g = match starts.binary_search(&slot) {
+                Ok(g) if g < ngroups => g,
+                Ok(g) => g - 1, // slot == width can't occur; defensive
+                Err(ins) => ins - 1,
+            };
+            let size = starts[g + 1] - starts[g];
+            if slot == starts[g] {
+                // group leader: run this group's tasks in index order
+                let _release_lanes = FinishGuard(&gates[g]);
+                let scope = KernelScope::group(Arc::clone(&gates[g]), size);
+                let mut i = g;
+                while i < ntasks {
+                    let out = f(i, &scope);
+                    *results[i].lock().unwrap() = Some(out);
+                    i += ngroups;
+                }
+            } else {
+                gates[g].member_loop(slot - starts[g]);
+            }
+        };
+        self.run(&spmd);
+        results
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .unwrap()
+                    .expect("every task index is covered by exactly one leader")
+            })
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.job.lock().unwrap();
+            st.shutdown = true;
+            self.shared.go.notify_all();
+        }
+        for h in std::mem::take(&mut self.handles) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared, slot: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.job.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    break;
+                }
+                st = shared.go.wait(st).unwrap();
+            }
+            seen = st.epoch;
+            st.job.expect("pool epoch advanced without a job")
+        };
+        let r = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.data, slot) }));
+        let mut d = shared.done.lock().unwrap();
+        if r.is_err() {
+            d.poisoned = true;
+        }
+        d.done += 1;
+        shared.done_cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn run_tasks_returns_in_task_order() {
+        for width in [1usize, 2, 3, 5, 8] {
+            let pool = WorkerPool::new(width);
+            let out = pool.run_tasks(7, &|i, _scope| i * 10);
+            assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60], "width={width}");
+        }
+    }
+
+    #[test]
+    fn single_task_gets_all_lanes() {
+        let pool = WorkerPool::new(4);
+        let lanes = pool.run_tasks(1, &|_i, scope| scope.lanes());
+        assert_eq!(lanes, vec![4]);
+        // more tasks than slots → every group is one lane wide
+        let lanes = pool.run_tasks(8, &|_i, scope| scope.lanes());
+        assert!(lanes.iter().all(|&l| l == 1), "{lanes:?}");
+    }
+
+    #[test]
+    fn kernel_scope_covers_every_lane_exactly_once() {
+        let pool = WorkerPool::new(6);
+        let hits = pool.run_tasks(1, &|_i, scope| {
+            let n = scope.lanes();
+            let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            for _round in 0..3 {
+                scope.run(&|lane| {
+                    counts[lane].fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            counts.iter().map(|c| c.load(Ordering::Relaxed)).collect::<Vec<_>>()
+        });
+        assert_eq!(hits[0], vec![3; 6]);
+    }
+
+    #[test]
+    fn drop_joins_and_releases_workers() {
+        let pool = WorkerPool::new(5);
+        let _ = pool.run_tasks(3, &|i, _s| i);
+        let weak = Arc::downgrade(&pool.shared);
+        drop(pool);
+        assert!(
+            weak.upgrade().is_none(),
+            "joined workers must release their shared-state handles"
+        );
+    }
+
+    #[test]
+    fn oversubscribed_pool_still_completes() {
+        // far more slots than this machine has cores
+        let pool = WorkerPool::new(16);
+        let out = pool.run_tasks(16, &|i, _s| i);
+        assert_eq!(out.len(), 16);
+        assert!(out.iter().enumerate().all(|(i, &v)| i == v));
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_task() {
+        let pool = WorkerPool::new(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_tasks(4, &|i, _s| {
+                if i == 2 {
+                    panic!("task boom");
+                }
+                i
+            })
+        }));
+        assert!(r.is_err(), "the panic must propagate to the caller");
+        // the pool is still usable afterwards
+        let out = pool.run_tasks(4, &|i, _s| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn kernel_lane_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_tasks(1, &|_i, scope| {
+                scope.run(&|lane| {
+                    if lane == 1 {
+                        panic!("lane boom");
+                    }
+                });
+            })
+        }));
+        assert!(r.is_err());
+        let out = pool.run_tasks(2, &|i, _s| i);
+        assert_eq!(out, vec![0, 1]);
+    }
+
+    #[test]
+    fn max_threads_scales_with_cores() {
+        assert!(max_threads() >= MAX_THREADS_PER_CORE);
+    }
+}

@@ -1,0 +1,285 @@
+//! Per-op step profiler for the native engine: a feature-gated timing
+//! layer over the tape ops and the backend's reduce/optimize phases, so
+//! kernel work is guided by measured breakdowns (im2col vs matmul vs BN
+//! vs optimizer) instead of guesses.
+//!
+//! Compiled in by the default `op-profile` cargo feature (build with
+//! `--no-default-features` to remove every timing call); *enabled* at
+//! runtime by [`set_enabled`] — `repro … --profile` and the
+//! `native_train` bench flip it on. Disabled, each probe is a single
+//! relaxed atomic load; enabled, two `Instant` reads per op plus two
+//! relaxed `fetch_add`s into global counters, so worker threads record
+//! concurrently without locks. Timings are *observational only* — the
+//! profiler never touches the numbers, so determinism is unaffected.
+//!
+//! Usage: wrap an op body in `let _p = profile::time(Op::Matmul);` —
+//! the guard records on drop. [`snapshot`] returns the accumulated
+//! `(op, total_ns, calls)` rows; [`report`] formats them as a table;
+//! the bench emits them into `BENCH_native_train.json` as the per-op
+//! trajectory record.
+
+/// The op buckets the breakdown reports. Coarse by design: buckets are
+/// stable across refactors so trajectories stay comparable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// im2col patch fill + col2im scatter (the copy overhead the 1×1
+    /// fast path removes)
+    Im2col,
+    /// the three blocked matmul kernels, forward and backward
+    Matmul,
+    /// depthwise conv forward + backward
+    DwConv,
+    /// batch-stat normalization (train) / folded affine (eval)
+    BatchNorm,
+    /// fake-quant branches + Eq. 5 effective weights
+    Quant,
+    /// θ machinery: masked softmax, broadcast, column sums
+    Theta,
+    /// softmax cross-entropy
+    Loss,
+    /// differentiable layer-cost term
+    Cost,
+    /// elementwise glue: relu, add, scale, bias, pooling
+    Elementwise,
+    /// fixed-order gradient tree reduction + BN stat merge
+    Reduce,
+    /// W/θ optimizer updates
+    Optimizer,
+}
+
+impl Op {
+    pub const ALL: [Op; 11] = [
+        Op::Im2col,
+        Op::Matmul,
+        Op::DwConv,
+        Op::BatchNorm,
+        Op::Quant,
+        Op::Theta,
+        Op::Loss,
+        Op::Cost,
+        Op::Elementwise,
+        Op::Reduce,
+        Op::Optimizer,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Op::Im2col => "im2col",
+            Op::Matmul => "matmul",
+            Op::DwConv => "dw_conv",
+            Op::BatchNorm => "batch_norm",
+            Op::Quant => "quant",
+            Op::Theta => "theta",
+            Op::Loss => "loss",
+            Op::Cost => "cost_model",
+            Op::Elementwise => "elementwise",
+            Op::Reduce => "reduce",
+            Op::Optimizer => "optimizer",
+        }
+    }
+
+    /// Counter index: the enum discriminant. `ALL` is declared in
+    /// discriminant order, which `ops_index_their_counters` pins.
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// One accumulated profiler row.
+#[derive(Debug, Clone, Copy)]
+pub struct OpStat {
+    pub op: Op,
+    pub total_ns: u64,
+    pub calls: u64,
+}
+
+#[cfg(feature = "op-profile")]
+mod imp {
+    use super::{Op, OpStat};
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::time::Instant;
+
+    static ENABLED: AtomicBool = AtomicBool::new(false);
+    #[allow(clippy::declare_interior_mutable_const)]
+    const ZERO: AtomicU64 = AtomicU64::new(0);
+    static NANOS: [AtomicU64; Op::ALL.len()] = [ZERO; Op::ALL.len()];
+    static CALLS: [AtomicU64; Op::ALL.len()] = [ZERO; Op::ALL.len()];
+
+    /// Drop guard recording one op's elapsed time.
+    pub struct OpTimer {
+        op: Op,
+        start: Instant,
+    }
+
+    impl Drop for OpTimer {
+        fn drop(&mut self) {
+            let ns = self.start.elapsed().as_nanos() as u64;
+            NANOS[self.op.idx()].fetch_add(ns, Ordering::Relaxed);
+            CALLS[self.op.idx()].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn compiled_in() -> bool {
+        true
+    }
+
+    pub fn enabled() -> bool {
+        ENABLED.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(on: bool) {
+        ENABLED.store(on, Ordering::Relaxed);
+    }
+
+    /// Start timing `op` (None when the profiler is off).
+    #[inline]
+    pub fn time(op: Op) -> Option<OpTimer> {
+        if enabled() {
+            Some(OpTimer {
+                op,
+                start: Instant::now(),
+            })
+        } else {
+            None
+        }
+    }
+
+    pub fn reset() {
+        for i in 0..Op::ALL.len() {
+            NANOS[i].store(0, Ordering::Relaxed);
+            CALLS[i].store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Accumulated rows, ops with zero calls skipped.
+    pub fn snapshot() -> Vec<OpStat> {
+        Op::ALL
+            .iter()
+            .filter_map(|&op| {
+                let calls = CALLS[op.idx()].load(Ordering::Relaxed);
+                (calls > 0).then(|| OpStat {
+                    op,
+                    total_ns: NANOS[op.idx()].load(Ordering::Relaxed),
+                    calls,
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(not(feature = "op-profile"))]
+mod imp {
+    use super::{Op, OpStat};
+
+    /// Zero-sized stand-in when the profiler is compiled out.
+    pub struct OpTimer;
+
+    pub fn compiled_in() -> bool {
+        false
+    }
+
+    pub fn enabled() -> bool {
+        false
+    }
+
+    pub fn set_enabled(_on: bool) {}
+
+    #[inline]
+    pub fn time(_op: Op) -> Option<OpTimer> {
+        None
+    }
+
+    pub fn reset() {}
+
+    pub fn snapshot() -> Vec<OpStat> {
+        Vec::new()
+    }
+}
+
+pub use imp::{compiled_in, enabled, reset, set_enabled, snapshot, time, OpTimer};
+
+/// Human-readable breakdown table (share of the profiled total, mean
+/// per call), rows sorted by total time descending.
+pub fn report() -> String {
+    if !compiled_in() {
+        return "per-op profiler compiled out (rebuild with the default `op-profile` feature)"
+            .to_string();
+    }
+    let mut rows = snapshot();
+    if rows.is_empty() {
+        return "per-op profiler: no samples recorded (pass --profile / set_enabled)".to_string();
+    }
+    rows.sort_by(|a, b| b.total_ns.cmp(&a.total_ns));
+    let total: u64 = rows.iter().map(|r| r.total_ns).sum();
+    let mut out = String::from("per-op breakdown (native engine):\n");
+    out.push_str(&format!(
+        "  {:<12} {:>10} {:>7} {:>10} {:>12}\n",
+        "op", "total", "share", "calls", "mean/call"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "  {:<12} {:>10} {:>6.1}% {:>10} {:>12}\n",
+            r.op.name(),
+            crate::util::bench::fmt_ns(r.total_ns as f64),
+            100.0 * r.total_ns as f64 / total.max(1) as f64,
+            r.calls,
+            crate::util::bench::fmt_ns(r.total_ns as f64 / r.calls.max(1) as f64),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One combined lifecycle test: the profiler is process-global and
+    /// other tests in this binary run tape ops concurrently, so all
+    /// enable/disable assertions live in a single test and only inspect
+    /// the Im2col bucket, which nothing else in this binary records.
+    #[cfg(feature = "op-profile")]
+    #[test]
+    fn probe_lifecycle() {
+        set_enabled(false);
+        assert!(time(Op::Im2col).is_none(), "disabled probes must be free");
+        set_enabled(true);
+        {
+            let _t = time(Op::Im2col);
+            std::hint::black_box((0..100u64).sum::<u64>());
+        }
+        {
+            let _t = time(Op::Im2col);
+        }
+        set_enabled(false);
+        let snap = snapshot();
+        let row = snap.iter().find(|r| r.op == Op::Im2col).expect("im2col row");
+        assert!(row.calls >= 2, "both probes must accumulate: {row:?}");
+        assert!(report().contains("im2col"));
+    }
+
+    #[cfg(not(feature = "op-profile"))]
+    #[test]
+    fn compiled_out_probes_are_inert() {
+        set_enabled(true);
+        assert!(time(Op::Im2col).is_none());
+        assert!(snapshot().is_empty());
+        assert!(report().contains("compiled out"));
+    }
+
+    #[test]
+    fn every_op_has_a_distinct_name() {
+        let mut names: Vec<&str> = Op::ALL.iter().map(|o| o.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Op::ALL.len());
+    }
+
+    #[test]
+    fn ops_index_their_counters() {
+        // idx() is the discriminant, so ALL must list ops in declaration
+        // order — each op maps to its own counter slot
+        for (i, &op) in Op::ALL.iter().enumerate() {
+            assert_eq!(op.idx(), i, "{op:?} out of order in Op::ALL");
+        }
+    }
+}

@@ -34,16 +34,26 @@
 //! [`QuantKind::Zero`].
 //!
 //! Convolution and matmul ops run on the blocked kernels of
-//! [`super::tensor`], sharded over `kernel_threads` scoped workers —
-//! bit-identical results for any thread count (each output element is
-//! produced by exactly one worker in a fixed accumulation order).
+//! [`super::tensor`], sharded over the lanes of the tape's
+//! [`KernelScope`] (persistent pool slots, no nested spawns) —
+//! bit-identical results for any lane count (each output element is
+//! produced by exactly one lane in a fixed accumulation order).
+//! 1×1/stride-1 convolutions skip im2col entirely: the patch matrix of
+//! a pointwise conv *is* the input reshaped, so [`Tape::conv2d`] lowers
+//! them straight onto `par_matmul_bt_into` (forward and backward) with
+//! no copy — [`Tape::conv2d_im2col`] keeps the general path callable as
+//! the bit-identity reference. Every op carries a feature-gated
+//! [`super::profile`] probe so `--profile` runs report a per-op time
+//! breakdown.
 
 use std::rc::Rc;
 
 use crate::soc::{analytical::cu_cycles, CuSpec, Layer};
 
 use super::arena::Arena;
-use super::tensor::{par_matmul_at_into, par_matmul_bt_into, par_matmul_into, Tensor};
+use super::pool::KernelScope;
+use super::profile::{self, Op};
+use super::tensor::{par_matmul_at_into, par_matmul_bt_into, par_matmul_into, par_rows, Tensor};
 
 /// Handle to one tape node.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -70,7 +80,7 @@ pub struct Tape {
     /// probabilities, quant branches) — tracked so recycle can reclaim
     aux: Vec<Rc<Tensor>>,
     arena: Arena,
-    kernel_threads: usize,
+    kernel: KernelScope,
 }
 
 impl Default for Tape {
@@ -79,7 +89,7 @@ impl Default for Tape {
             nodes: Vec::new(),
             aux: Vec::new(),
             arena: Arena::new(),
-            kernel_threads: 1,
+            kernel: KernelScope::serial(),
         }
     }
 }
@@ -228,10 +238,14 @@ impl Tape {
         }
     }
 
-    /// Worker count for the row-sharded conv/matmul kernels recorded
-    /// from now on (results are bit-identical for any value).
-    pub fn set_kernel_threads(&mut self, t: usize) {
-        self.kernel_threads = t.max(1);
+    /// Kernel-lane scope for the row-sharded conv/matmul kernels
+    /// recorded from now on (results are bit-identical for any lane
+    /// count). The scope is cloned into each op's backward closure, so
+    /// it must stay valid for the tape's whole forward+backward life —
+    /// i.e. the tape must be driven inside the pool task that owns the
+    /// scope.
+    pub fn set_kernel_scope(&mut self, scope: KernelScope) {
+        self.kernel = scope;
     }
 
     fn alloc_raw(&mut self, len: usize) -> Vec<f32> {
@@ -364,6 +378,7 @@ impl Tape {
     pub fn add(&mut self, a: Var, b: Var) -> Var {
         let (av, bv) = (self.rc(a), self.rc(b));
         debug_assert_eq!(av.shape, bv.shape);
+        let _p = profile::time(Op::Elementwise);
         let mut data = self.alloc_raw(av.elem_count());
         for ((d, &x), &y) in data.iter_mut().zip(&av.data).zip(&bv.data) {
             *d = x + y;
@@ -372,6 +387,7 @@ impl Tape {
         self.push(
             val,
             Some(Box::new(move |g, store| {
+                let _p = profile::time(Op::Elementwise);
                 store.acc(a.0, g);
                 store.acc(b.0, g);
             })),
@@ -424,6 +440,7 @@ impl Tape {
 
     pub fn relu(&mut self, a: Var) -> Var {
         let av = self.rc(a);
+        let _p = profile::time(Op::Elementwise);
         let mut data = self.alloc_raw(av.elem_count());
         for (d, &x) in data.iter_mut().zip(&av.data) {
             *d = x.max(0.0);
@@ -433,6 +450,7 @@ impl Tape {
         self.push(
             val,
             Some(Box::new(move |g, store| {
+                let _p = profile::time(Op::Elementwise);
                 let da = store.grad_mut(a.0);
                 for ((d, &s), &x) in da.iter_mut().zip(g).zip(&saved.data) {
                     if x > 0.0 {
@@ -488,21 +506,25 @@ impl Tape {
         let (m, k) = (av.shape[0], av.shape[1]);
         let n = bv.shape[1];
         debug_assert_eq!(bv.shape[0], k);
-        let kt = self.kernel_threads;
+        let sc = self.kernel.clone();
         let mut y = self.alloc_raw(m * n);
-        par_matmul_into(&av.data, &bv.data, &mut y, m, k, n, kt);
+        {
+            let _p = profile::time(Op::Matmul);
+            par_matmul_into(&av.data, &bv.data, &mut y, m, k, n, &sc);
+        }
         let val = Tensor::new(vec![m, n], y);
         let (sa, sb) = (Rc::clone(&av), Rc::clone(&bv));
         self.push(
             val,
             Some(Box::new(move |g, store| {
+                let _p = profile::time(Op::Matmul);
                 // dA = g · Bᵀ ; dB = Aᵀ · g
                 let mut da = store.take_raw(m * k);
-                par_matmul_bt_into(g, &sb.data, &mut da, m, n, k, kt);
+                par_matmul_bt_into(g, &sb.data, &mut da, m, n, k, &sc);
                 store.acc(a.0, &da);
                 store.give(da);
                 let mut db = store.take_raw(k * n);
-                par_matmul_at_into(&sa.data, g, &mut db, m, k, n, kt);
+                par_matmul_at_into(&sa.data, g, &mut db, m, k, n, &sc);
                 store.acc(b.0, &db);
                 store.give(db);
             })),
@@ -514,6 +536,7 @@ impl Tape {
         let (xv, bv) = (self.rc(x), self.rc(b));
         let c = *xv.shape.last().unwrap();
         debug_assert_eq!(bv.elem_count(), c);
+        let _p = profile::time(Op::Elementwise);
         let mut data = self.alloc_raw(xv.elem_count());
         for (i, (d, &v)) in data.iter_mut().zip(&xv.data).enumerate() {
             *d = v + bv.data[i % c];
@@ -522,6 +545,7 @@ impl Tape {
         self.push(
             val,
             Some(Box::new(move |g, store| {
+                let _p = profile::time(Op::Elementwise);
                 store.acc(x.0, g);
                 let db = store.grad_mut(b.0);
                 for (i, &s) in g.iter().enumerate() {
@@ -537,8 +561,24 @@ impl Tape {
 
     /// 'SAME' NHWC convolution with flattened weights `w: [cout, k·k·cin]`
     /// (row layout `(ky·k + kx)·cin + ci`, matching the AOT flattening).
-    /// Lowered as im2col + matmul, like the Darkside cluster executes it.
+    ///
+    /// 1×1/stride-1 (pointwise) convolutions take the no-copy fast path
+    /// — the patch matrix would be the input verbatim, so the matmuls
+    /// run on `x` directly (bit-identical to the im2col lowering, pinned
+    /// by `tests/native_exec.rs`); everything else lowers through
+    /// [`Tape::conv2d_im2col`].
     pub fn conv2d(&mut self, x: Var, w: Var, k: usize, stride: usize) -> Var {
+        if k == 1 && stride == 1 {
+            self.conv2d_pointwise(x, w)
+        } else {
+            self.conv2d_im2col(x, w, k, stride)
+        }
+    }
+
+    /// The general conv lowering: im2col + matmul, like the Darkside
+    /// cluster executes it. Public as the reference path the 1×1 fast
+    /// path is pinned against.
+    pub fn conv2d_im2col(&mut self, x: Var, w: Var, k: usize, stride: usize) -> Var {
         let (xv, wv) = (self.rc(x), self.rc(w));
         let (n, h, ww, cin) = (xv.shape[0], xv.shape[1], xv.shape[2], xv.shape[3]);
         let cout = wv.shape[0];
@@ -546,12 +586,18 @@ impl Tape {
         debug_assert_eq!(wv.shape[1], f);
         let (oh, ow, _) = same_geometry(h, ww, k, stride);
         let rows = n * oh * ow;
-        let kt = self.kernel_threads;
+        let sc = self.kernel.clone();
         let mut cols_buf = self.alloc_zeroed(rows * f);
-        im2col_into(&xv, k, stride, &mut cols_buf);
+        {
+            let _p = profile::time(Op::Im2col);
+            im2col_into(&xv, k, stride, &mut cols_buf);
+        }
         let cols = self.track_aux(Tensor::new(vec![rows, f], cols_buf));
         let mut y = self.alloc_raw(rows * cout);
-        par_matmul_bt_into(&cols.data, &wv.data, &mut y, rows, f, cout, kt);
+        {
+            let _p = profile::time(Op::Matmul);
+            par_matmul_bt_into(&cols.data, &wv.data, &mut y, rows, f, cout, &sc);
+        }
         let val = Tensor::new(vec![n, oh, ow, cout], y);
         let saved_w = Rc::clone(&wv);
         self.push(
@@ -559,40 +605,124 @@ impl Tape {
             Some(Box::new(move |g, store| {
                 // dW[cout,F] = gᵀ[cout,rows] · cols[rows,F]
                 let mut dw = store.take_raw(cout * f);
-                par_matmul_at_into(g, &cols.data, &mut dw, rows, cout, f, kt);
+                {
+                    let _p = profile::time(Op::Matmul);
+                    par_matmul_at_into(g, &cols.data, &mut dw, rows, cout, f, &sc);
+                }
                 store.acc(w.0, &dw);
                 store.give(dw);
                 // dCols = g[rows,cout] · W[cout,F], scattered back to x
                 let mut dcols = store.take_raw(rows * f);
-                par_matmul_into(g, &saved_w.data, &mut dcols, rows, cout, f, kt);
+                {
+                    let _p = profile::time(Op::Matmul);
+                    par_matmul_into(g, &saved_w.data, &mut dcols, rows, cout, f, &sc);
+                }
+                let _p = profile::time(Op::Im2col);
                 col2im(&dcols, store.grad_mut(x.0), n, h, ww, cin, k, stride, oh, ow);
                 store.give(dcols);
             })),
         )
     }
 
+    /// 1×1/stride-1 fast path: the im2col patch matrix of a pointwise
+    /// conv is exactly `x` reshaped to `[n·h·w, cin]`, so the forward is
+    /// one `A·Bᵀ` on the input itself and the backward skips the col2im
+    /// scatter (`dx` accumulates straight from `g·W`). No patch buffer
+    /// is ever materialized — pure copy overhead removed for the layers
+    /// that dominate the mbv1 supernet.
+    fn conv2d_pointwise(&mut self, x: Var, w: Var) -> Var {
+        let (xv, wv) = (self.rc(x), self.rc(w));
+        let (n, h, ww, cin) = (xv.shape[0], xv.shape[1], xv.shape[2], xv.shape[3]);
+        let cout = wv.shape[0];
+        debug_assert_eq!(wv.shape[1], cin);
+        let rows = n * h * ww;
+        let sc = self.kernel.clone();
+        let mut y = self.alloc_raw(rows * cout);
+        {
+            let _p = profile::time(Op::Matmul);
+            par_matmul_bt_into(&xv.data, &wv.data, &mut y, rows, cin, cout, &sc);
+        }
+        let val = Tensor::new(vec![n, h, ww, cout], y);
+        let (saved_x, saved_w) = (Rc::clone(&xv), Rc::clone(&wv));
+        self.push(
+            val,
+            Some(Box::new(move |g, store| {
+                // probes scoped to the matmuls only, mirroring the
+                // im2col path, so the cross-shape per-op comparison is
+                // apples-to-apples
+                let mut dw = store.take_raw(cout * cin);
+                {
+                    let _p = profile::time(Op::Matmul);
+                    // dW[cout,cin] = gᵀ[cout,rows] · x[rows,cin]
+                    par_matmul_at_into(g, &saved_x.data, &mut dw, rows, cout, cin, &sc);
+                }
+                store.acc(w.0, &dw);
+                store.give(dw);
+                let mut dx = store.take_raw(rows * cin);
+                {
+                    let _p = profile::time(Op::Matmul);
+                    // dX[rows,cin] = g[rows,cout] · W[cout,cin]
+                    par_matmul_into(g, &saved_w.data, &mut dx, rows, cout, cin, &sc);
+                }
+                store.acc(x.0, &dx);
+                store.give(dx);
+            })),
+        )
+    }
+
     /// 'SAME' depthwise convolution, weights `w: [c, k·k]`.
+    ///
+    /// The inner loops run over a *transposed* weight panel `wt[k·k, c]`
+    /// (built once per call, kept as an aux for backward) so the
+    /// per-channel lane walks three contiguous arrays — the same
+    /// contiguous-panel structure the blocked matmuls use — instead of
+    /// striding `w` by `k·k`; the forward additionally shards output
+    /// rows across the kernel lanes. Per-element tap order is unchanged,
+    /// so results stay bit-identical to the strided loop at any lane
+    /// count.
     pub fn dw_conv2d(&mut self, x: Var, w: Var, k: usize, stride: usize) -> Var {
         let (xv, wv) = (self.rc(x), self.rc(w));
         let (n, h, ww, c) = (xv.shape[0], xv.shape[1], xv.shape[2], xv.shape[3]);
         debug_assert_eq!(wv.shape, vec![c, k * k]);
         let (oh, ow, pad) = same_geometry(h, ww, k, stride);
+        let sc = self.kernel.clone();
+        // transposed panel wt[wi, ch] = w[ch, wi]
+        let mut wt_buf = self.alloc_raw(c * k * k);
+        for ch in 0..c {
+            for wi in 0..k * k {
+                wt_buf[wi * c + ch] = wv.data[ch * k * k + wi];
+            }
+        }
+        let wt = self.track_aux(Tensor::new(vec![k * k, c], wt_buf));
         let mut y = self.alloc_zeroed(n * oh * ow * c);
-        dw_forward(&xv.data, &wv.data, &mut y, n, h, ww, c, k, stride, pad);
+        {
+            let _p = profile::time(Op::DwConv);
+            dw_forward(&xv.data, &wt.data, &mut y, n, h, ww, c, k, stride, pad, &sc);
+        }
         let val = Tensor::new(vec![n, oh, ow, c], y);
-        let (sx, sw) = (Rc::clone(&xv), Rc::clone(&wv));
+        let sx = Rc::clone(&xv);
         self.push(
             val,
             Some(Box::new(move |g, store| {
-                let mut dw = store.take_zeroed(c * k * k);
+                let _p = profile::time(Op::DwConv);
+                // accumulate dW in the transposed layout (contiguous
+                // channel lanes), then fold back to the [c, k·k] slot
+                let mut dwt = store.take_zeroed(c * k * k);
                 let mut dx = store.take_zeroed(n * h * ww * c);
                 dw_backward(
-                    &sx.data, &sw.data, g, &mut dx, &mut dw, n, h, ww, c, k, stride, pad,
+                    &sx.data, &wt.data, g, &mut dx, &mut dwt, n, h, ww, c, k, stride, pad,
                 );
+                let mut dw = store.take_raw(c * k * k);
+                for ch in 0..c {
+                    for wi in 0..k * k {
+                        dw[ch * k * k + wi] = dwt[wi * c + ch];
+                    }
+                }
                 store.acc(x.0, &dx);
                 store.acc(w.0, &dw);
                 store.give(dx);
                 store.give(dw);
+                store.give(dwt);
             })),
         )
     }
@@ -613,6 +743,7 @@ impl Tape {
         let (xv, sv, bv) = (self.rc(x), self.rc(scale), self.rc(bias));
         let c = *xv.shape.last().unwrap();
         let m = xv.elem_count() / c;
+        let _p = profile::time(Op::BatchNorm);
         const EPS: f32 = 1e-5;
         let mut mean = vec![0.0f32; c];
         for (i, &v) in xv.data.iter().enumerate() {
@@ -645,6 +776,7 @@ impl Tape {
         let out = self.push(
             val,
             Some(Box::new(move |g, store| {
+                let _p = profile::time(Op::BatchNorm);
                 let mut sum_dy = store.take_zeroed(c);
                 let mut sum_dy_xhat = store.take_zeroed(c);
                 for (i, &s) in g.iter().enumerate() {
@@ -677,6 +809,7 @@ impl Tape {
         let xv = self.rc(x);
         let c = *xv.shape.last().unwrap();
         debug_assert_eq!(a.len(), c);
+        let _p = profile::time(Op::BatchNorm);
         let mut data = self.alloc_raw(xv.elem_count());
         for (i, (d, &v)) in data.iter_mut().zip(&xv.data).enumerate() {
             *d = v * a[i % c] + b[i % c];
@@ -685,6 +818,7 @@ impl Tape {
         self.push(
             val,
             Some(Box::new(move |g, store| {
+                let _p = profile::time(Op::BatchNorm);
                 let dx = store.grad_mut(x.0);
                 for (i, &s) in g.iter().enumerate() {
                     dx[i] += s * a[i % c];
@@ -698,6 +832,7 @@ impl Tape {
         let xv = self.rc(x);
         let (n, h, w, c) = (xv.shape[0], xv.shape[1], xv.shape[2], xv.shape[3]);
         let hw = h * w;
+        let _p = profile::time(Op::Elementwise);
         let mut y = self.alloc_zeroed(n * c);
         for b in 0..n {
             for p in 0..hw {
@@ -713,6 +848,7 @@ impl Tape {
         self.push(
             val,
             Some(Box::new(move |g, store| {
+                let _p = profile::time(Op::Elementwise);
                 let inv = 1.0 / hw as f32;
                 let dx = store.grad_mut(x.0);
                 for b in 0..n {
@@ -736,6 +872,7 @@ impl Tape {
         let lv = self.rc(logits);
         let (n, c) = (lv.shape[0], lv.shape[1]);
         debug_assert_eq!(labels.len(), n);
+        let _p = profile::time(Op::Loss);
         let mut probs_buf = self.alloc_raw(n * c);
         let mut loss_sum = 0.0f32;
         let mut correct = 0.0f32;
@@ -769,6 +906,7 @@ impl Tape {
         let out = self.push(
             val,
             Some(Box::new(move |g, store| {
+                let _p = profile::time(Op::Loss);
                 let s = g[0] / n as f32;
                 let dl = store.grad_mut(logits.0);
                 for b in 0..n {
@@ -794,6 +932,7 @@ impl Tape {
         let tv = self.rc(theta);
         let (c, k) = (tv.shape[0], tv.shape[1]);
         debug_assert_eq!(mask.len(), k);
+        let _p = profile::time(Op::Theta);
         let mut p = self.alloc_zeroed(c * k);
         for r in 0..c {
             let row = &tv.data[r * k..(r + 1) * k];
@@ -821,6 +960,7 @@ impl Tape {
         self.push_rc(
             val,
             Some(Box::new(move |g, store| {
+                let _p = profile::time(Op::Theta);
                 let dth = store.grad_mut(theta.0);
                 for r in 0..c {
                     let mut dot = 0.0f32;
@@ -843,6 +983,7 @@ impl Tape {
         let pv = self.rc(p);
         debug_assert_eq!(pv.shape[0], 1);
         let k = pv.shape[1];
+        let _p = profile::time(Op::Theta);
         let mut data = self.alloc_raw(rows * k);
         for r in 0..rows {
             data[r * k..(r + 1) * k].copy_from_slice(&pv.data);
@@ -874,6 +1015,7 @@ impl Tape {
         let k = pv.shape[1];
         debug_assert_eq!(pv.shape[0], c);
         debug_assert_eq!(quants.len(), k);
+        let _p = profile::time(Op::Quant);
         // quantized branches, one [c, f] tensor per CU column
         let mut qs: Vec<Rc<Tensor>> = Vec::with_capacity(k);
         for &q in quants {
@@ -901,6 +1043,7 @@ impl Tape {
         self.push(
             val,
             Some(Box::new(move |g, store| {
+                let _p = profile::time(Op::Quant);
                 for r in 0..c {
                     // STE: each weight-carrying branch passes g through
                     // scaled by its probability; Zero branches drop it.
@@ -932,6 +1075,7 @@ impl Tape {
     pub fn fake_quant_ste(&mut self, w: Var, kind: QuantKind) -> Var {
         let wv = self.rc(w);
         let (c, f) = (wv.shape[0], wv.shape[1]);
+        let _p = profile::time(Op::Quant);
         let mut y = self.alloc_raw(c * f);
         for r in 0..c {
             kind.quant_row(&wv.data[r * f..(r + 1) * f], &mut y[r * f..(r + 1) * f]);
@@ -949,6 +1093,7 @@ impl Tape {
     pub fn col_sum(&mut self, p: Var) -> Var {
         let pv = self.rc(p);
         let (c, k) = (pv.shape[0], pv.shape[1]);
+        let _p = profile::time(Op::Theta);
         let mut y = self.alloc_zeroed(k);
         for r in 0..c {
             for j in 0..k {
@@ -1011,6 +1156,7 @@ impl Tape {
         debug_assert_eq!(nv.elem_count(), k);
         let counts: Vec<f64> = nv.data.iter().map(|&v| v as f64).collect();
         let us_per_cycle = 1.0 / freq_mhz;
+        let _p = profile::time(Op::Cost);
         let e = eval_layer_cost(cus, layer, &counts, p_idle_mw, us_per_cycle, sequential);
         let mut data = self.alloc_raw(2);
         data[0] = e.latency as f32;
@@ -1021,6 +1167,7 @@ impl Tape {
         self.push(
             val,
             Some(Box::new(move |g, store| {
+                let _p = profile::time(Op::Cost);
                 let (g_lat, g_en) = (g[0] as f64, g[1] as f64);
                 let dn = store.grad_mut(n.0);
                 for j in 0..k {
@@ -1198,10 +1345,16 @@ fn col2im(
     }
 }
 
+/// Depthwise forward over transposed weights `wt[k·k, c]`: output rows
+/// `(b, oy)` shard across the kernel lanes (each lane owns a disjoint
+/// contiguous slice of `y`), and the inner channel loop walks three
+/// contiguous panels (`y` row, `x` row, `wt` row) so it vectorizes like
+/// the blocked matmuls. Tap order per output element is (ky, kx)
+/// ascending — identical for every lane count.
 #[allow(clippy::too_many_arguments)]
 fn dw_forward(
     x: &[f32],
-    w: &[f32],
+    wt: &[f32],
     y: &mut [f32],
     n: usize,
     h: usize,
@@ -1210,41 +1363,51 @@ fn dw_forward(
     k: usize,
     stride: usize,
     pad: usize,
+    scope: &KernelScope,
 ) {
     let (oh, ow, _) = same_geometry(h, ww, k, stride);
-    for b in 0..n {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let out = ((b * oh + oy) * ow + ox) * c;
-                for ky in 0..k {
-                    let iy = (oy * stride + ky) as isize - pad as isize;
-                    if iy < 0 || iy >= h as isize {
-                        continue;
-                    }
-                    for kx in 0..k {
+    let rows = n * oh;
+    debug_assert_eq!(y.len(), rows * ow * c);
+    par_rows(y, rows, ow * c, scope, |r0, r1, chunk| {
+        for row in r0..r1 {
+            let (b, oy) = (row / oh, row % oh);
+            let yrow = &mut chunk[(row - r0) * ow * c..(row - r0 + 1) * ow * c];
+            for ky in 0..k {
+                let iy = (oy * stride + ky) as isize - pad as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..k {
+                    let wrow = &wt[(ky * k + kx) * c..(ky * k + kx + 1) * c];
+                    for ox in 0..ow {
                         let ix = (ox * stride + kx) as isize - pad as isize;
                         if ix < 0 || ix >= ww as isize {
                             continue;
                         }
                         let src = ((b * h + iy as usize) * ww + ix as usize) * c;
-                        let wi = ky * k + kx;
-                        for ch in 0..c {
-                            y[out + ch] += x[src + ch] * w[ch * k * k + wi];
+                        let xrow = &x[src..src + c];
+                        let yout = &mut yrow[ox * c..(ox + 1) * c];
+                        for ((yv, &xv), &wv) in yout.iter_mut().zip(xrow).zip(wrow) {
+                            *yv += xv * wv;
                         }
                     }
                 }
             }
         }
-    }
+    });
 }
 
+/// Depthwise backward over transposed weights `wt[k·k, c]`, accumulating
+/// `dwt` in the same transposed layout. Serial: `dx`/`dwt` writes overlap
+/// across output rows (receptive fields share input pixels), so sharding
+/// would race. Per-element accumulation order matches the strided loop.
 #[allow(clippy::too_many_arguments)]
 fn dw_backward(
     x: &[f32],
-    w: &[f32],
+    wt: &[f32],
     g: &[f32],
     dx: &mut [f32],
-    dw: &mut [f32],
+    dwt: &mut [f32],
     n: usize,
     h: usize,
     ww: usize,
@@ -1258,6 +1421,7 @@ fn dw_backward(
         for oy in 0..oh {
             for ox in 0..ow {
                 let out = ((b * oh + oy) * ow + ox) * c;
+                let grow = &g[out..out + c];
                 for ky in 0..k {
                     let iy = (oy * stride + ky) as isize - pad as isize;
                     if iy < 0 || iy >= h as isize {
@@ -1270,9 +1434,15 @@ fn dw_backward(
                         }
                         let src = ((b * h + iy as usize) * ww + ix as usize) * c;
                         let wi = ky * k + kx;
-                        for ch in 0..c {
-                            dx[src + ch] += g[out + ch] * w[ch * k * k + wi];
-                            dw[ch * k * k + wi] += g[out + ch] * x[src + ch];
+                        let wrow = &wt[wi * c..(wi + 1) * c];
+                        let xrow = &x[src..src + c];
+                        let dxrow = &mut dx[src..src + c];
+                        for ((dv, &gv), &wv) in dxrow.iter_mut().zip(grow).zip(wrow) {
+                            *dv += gv * wv;
+                        }
+                        let dwrow = &mut dwt[wi * c..(wi + 1) * c];
+                        for ((dv, &gv), &xv) in dwrow.iter_mut().zip(grow).zip(xrow) {
+                            *dv += gv * xv;
                         }
                     }
                 }

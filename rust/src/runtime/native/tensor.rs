@@ -16,10 +16,13 @@
 //!
 //! Every kernel writes into a caller-provided buffer (the arena hands
 //! these out) and has a `par_*` wrapper that shards *output rows* across
-//! a scoped thread pool. Each output element is always computed by
-//! exactly one thread with a thread-count-independent accumulation
-//! order, so results are bit-identical for any `threads` value — the
-//! property the engine's determinism contract rests on.
+//! the lanes of a persistent-pool [`KernelScope`] (no per-call thread
+//! spawning — see [`super::pool`]). Each output element is always
+//! computed by exactly one lane with a lane-count-independent
+//! accumulation order, so results are bit-identical for any worker
+//! count — the property the engine's determinism contract rests on.
+
+use super::pool::KernelScope;
 
 /// A shaped dense f32 buffer (row-major).
 #[derive(Debug, Clone, PartialEq)]
@@ -158,40 +161,55 @@ fn dot(x: &[f32], y: &[f32]) -> f32 {
 }
 
 // ---------------------------------------------------------------------------
-// scoped-thread-pool wrappers: shard output rows, bit-identical results
+// persistent-pool wrappers: shard output rows, bit-identical results
 // ---------------------------------------------------------------------------
 
-/// Split `rows` output rows across `threads` workers; each chunk of `c`
-/// is produced by one worker with the serial kernel. Falls back to the
-/// serial kernel for 1 thread or tiny outputs.
-fn par_rows<F>(c: &mut [f32], rows: usize, row_elems: usize, threads: usize, f: F)
+/// Raw mutable base pointer smuggled into the SPMD lane closure; each
+/// lane reslices its own disjoint row range from it.
+#[derive(Clone, Copy)]
+struct RowBase(*mut f32);
+
+unsafe impl Send for RowBase {}
+unsafe impl Sync for RowBase {}
+
+/// Split `rows` output rows across the scope's kernel lanes; each chunk
+/// of `c` is produced by exactly one lane with the serial row closure
+/// `f(r0, r1, chunk)`, over the same contiguous index-ordered ranges
+/// the scoped-thread wrappers used — so results are bit-identical for
+/// any lane count. Falls back to a serial call for 1 lane or tiny
+/// outputs. Public: the depthwise conv shards its output rows through
+/// the same primitive.
+pub fn par_rows<F>(c: &mut [f32], rows: usize, row_elems: usize, scope: &KernelScope, f: F)
 where
     F: Fn(usize, usize, &mut [f32]) + Sync,
 {
-    let t = threads.min(rows).max(1);
+    let t = scope.lanes().min(rows).max(1);
     if t <= 1 {
         f(0, rows, c);
         return;
     }
-    // contiguous row ranges [i*rows/t, (i+1)*rows/t)
-    std::thread::scope(|s| {
-        let mut rest: &mut [f32] = c;
-        let mut handles = Vec::with_capacity(t);
-        for w in 0..t {
-            let r0 = w * rows / t;
-            let r1 = (w + 1) * rows / t;
-            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * row_elems);
-            rest = tail;
-            let fr = &f;
-            handles.push(s.spawn(move || fr(r0, r1, chunk)));
+    debug_assert!(c.len() >= rows * row_elems);
+    // contiguous row ranges [w*rows/t, (w+1)*rows/t); every lane writes a
+    // disjoint chunk, and scope.run does not return until all lanes are
+    // done, so the resliced &mut chunks never alias or escape
+    let base = RowBase(c.as_mut_ptr());
+    scope.run(&|lane| {
+        if lane >= t {
+            return;
         }
-        for h in handles {
-            h.join().expect("kernel worker panicked");
+        let r0 = lane * rows / t;
+        let r1 = (lane + 1) * rows / t;
+        if r0 == r1 {
+            return;
         }
+        let chunk = unsafe {
+            std::slice::from_raw_parts_mut(base.0.add(r0 * row_elems), (r1 - r0) * row_elems)
+        };
+        f(r0, r1, chunk);
     });
 }
 
-/// Parallel [`matmul_into`]: rows of C sharded across `threads`.
+/// Parallel [`matmul_into`]: rows of C sharded across the scope's lanes.
 pub fn par_matmul_into(
     a: &[f32],
     b: &[f32],
@@ -199,15 +217,15 @@ pub fn par_matmul_into(
     m: usize,
     k: usize,
     n: usize,
-    threads: usize,
+    scope: &KernelScope,
 ) {
     debug_assert_eq!(c.len(), m * n);
-    par_rows(c, m, n, threads, |r0, r1, chunk| {
+    par_rows(c, m, n, scope, |r0, r1, chunk| {
         matmul_into(&a[r0 * k..r1 * k], b, chunk, r1 - r0, k, n);
     });
 }
 
-/// Parallel [`matmul_bt_into`]: rows of C sharded across `threads`.
+/// Parallel [`matmul_bt_into`]: rows of C sharded across the scope's lanes.
 pub fn par_matmul_bt_into(
     a: &[f32],
     b: &[f32],
@@ -215,17 +233,17 @@ pub fn par_matmul_bt_into(
     m: usize,
     k: usize,
     n: usize,
-    threads: usize,
+    scope: &KernelScope,
 ) {
     debug_assert_eq!(c.len(), m * n);
-    par_rows(c, m, n, threads, |r0, r1, chunk| {
+    par_rows(c, m, n, scope, |r0, r1, chunk| {
         matmul_bt_into(&a[r0 * k..r1 * k], b, chunk, r1 - r0, k, n);
     });
 }
 
 /// Parallel [`matmul_at_into`]: rows of C (the k axis) sharded across
-/// `threads` — each worker reads all of A/B but owns disjoint C rows, so
-/// the per-element accumulation order over `m` is unchanged.
+/// the scope's lanes — each lane reads all of A/B but owns disjoint C
+/// rows, so the per-element accumulation order over `m` is unchanged.
 pub fn par_matmul_at_into(
     a: &[f32],
     b: &[f32],
@@ -233,10 +251,10 @@ pub fn par_matmul_at_into(
     m: usize,
     k: usize,
     n: usize,
-    threads: usize,
+    scope: &KernelScope,
 ) {
     debug_assert_eq!(c.len(), k * n);
-    par_rows(c, k, n, threads, |i0, i1, chunk| {
+    par_rows(c, k, n, scope, |i0, i1, chunk| {
         chunk.iter_mut().for_each(|x| *x = 0.0);
         for r in 0..m {
             let brow = &b[r * n..(r + 1) * n];
@@ -328,7 +346,8 @@ mod tests {
     }
 
     #[test]
-    fn parallel_kernels_are_bit_identical_for_any_thread_count() {
+    fn parallel_kernels_are_bit_identical_for_any_lane_count() {
+        use super::super::pool::WorkerPool;
         // odd sizes so row chunks are uneven and the dot remainder is hit
         let (m, k, n) = (23, 37, 19);
         let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.11).sin()).collect();
@@ -342,15 +361,22 @@ mod tests {
         let mut base_at = vec![0.0; k * n];
         matmul_at_into(&at, &b, &mut base_at, m, k, n);
         for t in [1usize, 2, 3, 4, 7] {
-            let mut c = vec![1.0; m * n];
-            par_matmul_into(&a, &b, &mut c, m, k, n, t);
-            assert_eq!(c, base_mm, "matmul t={t}");
-            let mut c = vec![1.0; m * n];
-            par_matmul_bt_into(&a, &bt, &mut c, m, k, n, t);
-            assert_eq!(c, base_bt, "matmul_bt t={t}");
-            let mut c = vec![1.0; k * n];
-            par_matmul_at_into(&at, &b, &mut c, m, k, n, t);
-            assert_eq!(c, base_at, "matmul_at t={t}");
+            // run_tasks with one task puts every pool slot in the kernel group
+            let pool = WorkerPool::new(t);
+            let out = pool.run_tasks(1, &|_i, scope| {
+                assert_eq!(scope.lanes(), t);
+                let mut c_mm = vec![1.0; m * n];
+                par_matmul_into(&a, &b, &mut c_mm, m, k, n, scope);
+                let mut c_bt = vec![1.0; m * n];
+                par_matmul_bt_into(&a, &bt, &mut c_bt, m, k, n, scope);
+                let mut c_at = vec![1.0; k * n];
+                par_matmul_at_into(&at, &b, &mut c_at, m, k, n, scope);
+                (c_mm, c_bt, c_at)
+            });
+            let (c_mm, c_bt, c_at) = &out[0];
+            assert_eq!(c_mm, &base_mm, "matmul t={t}");
+            assert_eq!(c_bt, &base_bt, "matmul_bt t={t}");
+            assert_eq!(c_at, &base_at, "matmul_at t={t}");
         }
     }
 

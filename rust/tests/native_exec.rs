@@ -1,7 +1,9 @@
-//! Planned-executor tests: the thread-count determinism matrix, the
-//! arena-reuse (zero steady-state allocation) pin, Adam convergence on a
-//! synthetic task, and the natively-built `_prune`/`_layerwise` baseline
-//! search spaces.
+//! Planned-executor tests: the thread-count determinism matrix (now on
+//! the persistent worker pool, including oversubscribed counts), the
+//! arena-reuse (zero steady-state allocation) pin, the 1×1 conv
+//! fast-path bit-identity pin, thread-count validation, Adam
+//! convergence on a synthetic task, and the natively-built
+//! `_prune`/`_layerwise` baseline search spaces.
 //!
 //! The determinism contract under test: the intra-step shard structure
 //! depends only on the batch size, every reduction runs in shard-index
@@ -97,6 +99,95 @@ fn thread_count_determinism_matrix() {
             }
         }
     }
+}
+
+/// Oversubscription: more pool workers than the machine has cores is
+/// pure scheduling — the shard structure, lane ranges and reduction
+/// order never see the thread count, so results stay bit-identical.
+#[test]
+fn determinism_survives_oversubscription() {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let over = 2 * cores; // > cores, within the 4x validation cap
+    let be1 = build("trident_tiny_tiny", 1, WOptimizer::SgdMomentum);
+    let (losses1, state1) = run_steps(&be1, 5, 3);
+    let beo = build("trident_tiny_tiny", over, WOptimizer::SgdMomentum);
+    let (losses_o, state_o) = run_steps(&beo, 5, 3);
+    assert_eq!(
+        losses1.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+        losses_o.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+        "losses differ at {over} threads on {cores} cores"
+    );
+    for (a, b) in state1.leaves.iter().zip(&state_o.leaves) {
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "state leaf differs at {over} threads"
+        );
+    }
+}
+
+/// Absurd worker counts are a config typo, not a request: the backend
+/// rejects anything beyond 4x the available cores with a clear error.
+#[test]
+fn absurd_thread_count_is_rejected() {
+    let cap = odimo::runtime::native::max_threads();
+    let err = NativeBackend::build_with(
+        "trident_tiny_tiny",
+        NativeOptions {
+            threads: cap + 1,
+            w_optimizer: WOptimizer::SgdMomentum,
+        },
+    )
+    .expect_err("oversubscription beyond 4x cores must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("available cores"), "{msg}");
+    // the cap itself is still accepted
+    assert!(NativeBackend::build_with(
+        "trident_tiny_tiny",
+        NativeOptions {
+            threads: cap,
+            w_optimizer: WOptimizer::SgdMomentum,
+        },
+    )
+    .is_ok());
+}
+
+/// The 1×1/stride-1 conv fast path must be *bit-identical* to the
+/// im2col reference lowering — forward value, input gradient and weight
+/// gradient — on a fixed seed. (The patch matrix of a pointwise conv is
+/// the input verbatim, so the fast path is the same arithmetic with the
+/// copies removed.)
+#[test]
+fn conv1x1_fast_path_is_bit_identical_to_im2col() {
+    use odimo::runtime::native::{Tape, Tensor};
+    let (n, h, w, cin, cout) = (2usize, 5usize, 5usize, 7usize, 6usize);
+    let x0: Vec<f32> = (0..n * h * w * cin)
+        .map(|i| (i as f32 * 0.37).sin())
+        .collect();
+    let w0: Vec<f32> = (0..cout * cin).map(|i| (i as f32 * 0.23).cos()).collect();
+    let run = |im2col: bool| -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+        let mut t = Tape::new();
+        let x = t.leaf(Tensor::new(vec![n, h, w, cin], x0.clone()));
+        let wv = t.leaf(Tensor::new(vec![cout, cin], w0.clone()));
+        let y = if im2col {
+            t.conv2d_im2col(x, wv, 1, 1)
+        } else {
+            t.conv2d(x, wv, 1, 1) // dispatches to the fast path
+        };
+        let ybits = t.val(y).data.iter().map(|v| v.to_bits()).collect();
+        let loss = t.sum_all(y);
+        let mut grads = t.backward(loss);
+        let dx = grads.take(x).iter().map(|v| v.to_bits()).collect();
+        let dw = grads.take(wv).iter().map(|v| v.to_bits()).collect();
+        (ybits, dx, dw)
+    };
+    let (y_fast, dx_fast, dw_fast) = run(false);
+    let (y_ref, dx_ref, dw_ref) = run(true);
+    assert_eq!(y_fast, y_ref, "forward differs");
+    assert_eq!(dx_fast, dx_ref, "input gradient differs");
+    assert_eq!(dw_fast, dw_ref, "weight gradient differs");
 }
 
 /// Eval must be bit-identical across thread counts as well (shard sums
