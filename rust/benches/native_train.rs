@@ -17,6 +17,18 @@
 //! non-zero on a >10% regression on either. The committed baselines are
 //! conservative floors (machines differ); re-pin them from a CI run's
 //! emitted JSON whenever the engine gets deliberately faster.
+//!
+//! Since the SIMD/quantization PR the JSON also carries:
+//!
+//! * `kernels` — isolated GFLOP/s of the three matmul microkernels on a
+//!   conv-like shape, scalar and (under `--features simd-kernels`) the
+//!   register-tiled SIMD variants called directly;
+//! * `quantized_*` — evals/sec of the real int8/ternary integer-GEMM
+//!   inference path next to the tape's f32 eval on the same state, with
+//!   a `per_op` entry pinning the `qmatmul` counter;
+//! * `simd_speedup_threads1` (simd builds only) — single-thread resnet8
+//!   train speedup of the SIMD kernels over the scalar reference,
+//!   measured in one process via the runtime toggle.
 
 use std::time::Duration;
 
@@ -100,31 +112,12 @@ fn eval_batches_per_sec(variant: &str, budget: Duration) -> f64 {
     1e9 / r.mean_ns
 }
 
-/// Per-op breakdown of `steps` profiled single-thread train steps:
-/// `{op: {share, ns_per_step, calls_per_step}}`, plus stdout table.
-fn per_op_breakdown(variant: &str, steps: usize) -> Value {
-    let be = build(variant, 1);
-    let m = be.manifest();
-    let ds = odimo::datasets::SynthDataset::from_name(
-        &m.dataset.name,
-        m.dataset.hw,
-        m.dataset.classes,
-        3,
-    );
-    let (x, y) = ds.batch(odimo::datasets::Split::Train, 0, m.dataset.batch);
-    let mut state = be.init_state(0).expect("init");
-    // one unprofiled warm step so arena growth stays out of the numbers
-    be.train_step(&mut state, &x, &y, hp()).expect("warm step");
-    profile::reset();
-    profile::set_enabled(true);
-    for _ in 0..steps {
-        be.train_step(&mut state, &x, &y, hp()).expect("profiled step");
-    }
-    profile::set_enabled(false);
+/// Render the profiler snapshot accumulated over `steps` repetitions as
+/// `{op: {share, ns_per_step, calls_per_step}}`, plus a stdout table.
+fn snapshot_value(steps: usize) -> Value {
     let mut rows = profile::snapshot();
     rows.sort_by(|a, b| b.total_ns.cmp(&a.total_ns));
     let total: u64 = rows.iter().map(|r| r.total_ns).sum();
-    println!("-- per-op breakdown: {variant} ({steps} steps, t=1) --");
     if rows.is_empty() {
         println!("   (profiler compiled out — rebuilt without `op-profile`)");
     }
@@ -151,6 +144,165 @@ fn per_op_breakdown(variant: &str, steps: usize) -> Value {
             )
         })
         .collect();
+    Value::obj(fields)
+}
+
+/// Per-op breakdown of `steps` profiled single-thread train steps:
+/// `{op: {share, ns_per_step, calls_per_step}}`, plus stdout table.
+fn per_op_breakdown(variant: &str, steps: usize) -> Value {
+    let be = build(variant, 1);
+    let m = be.manifest();
+    let ds = odimo::datasets::SynthDataset::from_name(
+        &m.dataset.name,
+        m.dataset.hw,
+        m.dataset.classes,
+        3,
+    );
+    let (x, y) = ds.batch(odimo::datasets::Split::Train, 0, m.dataset.batch);
+    let mut state = be.init_state(0).expect("init");
+    // one unprofiled warm step so arena growth stays out of the numbers
+    be.train_step(&mut state, &x, &y, hp()).expect("warm step");
+    profile::reset();
+    profile::set_enabled(true);
+    for _ in 0..steps {
+        be.train_step(&mut state, &x, &y, hp()).expect("profiled step");
+    }
+    profile::set_enabled(false);
+    println!("-- per-op breakdown: {variant} ({steps} steps, t=1) --");
+    snapshot_value(steps)
+}
+
+/// Per-op breakdown of profiled quantized evals — pins the `qmatmul`
+/// counter (the integer-GEMM share of a deployed forward).
+fn per_op_quantized(variant: &str, evals: usize) -> Value {
+    let be = NativeBackend::build(variant).expect("native variant");
+    let m = be.manifest();
+    let ds = odimo::datasets::SynthDataset::from_name(
+        &m.dataset.name,
+        m.dataset.hw,
+        m.dataset.classes,
+        5,
+    );
+    let (x, y) = ds.batch(odimo::datasets::Split::Val, 0, m.dataset.batch);
+    let state = be.init_state(0).expect("init");
+    let qnet = be.quantize(&state).expect("quantize");
+    qnet.eval_batch(&x, &y).expect("warm eval");
+    profile::reset();
+    profile::set_enabled(true);
+    for _ in 0..evals {
+        qnet.eval_batch(&x, &y).expect("profiled eval");
+    }
+    profile::set_enabled(false);
+    println!("-- per-op breakdown: {variant} quantized eval ({evals} evals, t=1) --");
+    snapshot_value(evals)
+}
+
+/// Quantized-inference throughput: evals/sec of the int8/ternary
+/// integer-GEMM path next to the tape's f32 eval on the same state.
+/// Quantization runs once, outside the timed loop — deploy-style.
+fn quantized_eval_per_sec(variant: &str, budget: Duration) -> (f64, f64) {
+    let be = NativeBackend::build(variant).expect("native variant");
+    let m = be.manifest();
+    let ds = odimo::datasets::SynthDataset::from_name(
+        &m.dataset.name,
+        m.dataset.hw,
+        m.dataset.classes,
+        4,
+    );
+    let (x, y) = ds.batch(odimo::datasets::Split::Val, 0, m.dataset.batch);
+    let state = be.init_state(0).expect("init");
+    let rf = bench(&format!("eval_batch {variant} f32 t=1"), 1, budget, 200, || {
+        std::hint::black_box(be.eval_batch(&state, &x, &y).expect("eval"));
+    });
+    let qnet = be.quantize(&state).expect("quantize");
+    let rq = bench(
+        &format!("eval_batch {variant} quantized t=1"),
+        1,
+        budget,
+        200,
+        || {
+            std::hint::black_box(qnet.eval_batch(&x, &y).expect("quantized eval"));
+        },
+    );
+    (1e9 / rf.mean_ns, 1e9 / rq.mean_ns)
+}
+
+/// Isolated GFLOP/s of the three matmul microkernels on a conv-like
+/// shape — scalar references and (under `simd-kernels`) the SIMD tiles,
+/// called directly so dispatch and threading stay out of the numbers.
+fn kernel_gflops() -> Value {
+    use odimo::runtime::native::tensor;
+    // conv-like shape: a 32×32 output map of one image (m = 1024 patch
+    // rows), 3×3×32 patches (k = 288), 64 output channels
+    let (m, k, n) = (1024usize, 288usize, 64usize);
+    let fill = |len: usize, seed: u64| -> Vec<f32> {
+        let mut st = seed;
+        (0..len)
+            .map(|_| {
+                st = st
+                    .wrapping_mul(6364136223846793005)
+                    .wrapping_add(1442695040888963407);
+                ((st >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+            })
+            .collect()
+    };
+    let flops = 2.0 * (m * k * n) as f64;
+    let budget = Duration::from_millis(400);
+    let mut fields: Vec<(&str, Value)> = Vec::new();
+    println!("-- kernel GFLOP/s (m={m} k={k} n={n}) --");
+    let push = |fields: &mut Vec<(&str, Value)>, key: &'static str, mean_ns: f64| {
+        let g = flops / mean_ns;
+        println!("   {key:<24} {g:>7.2} GFLOP/s");
+        fields.push((key, Value::num(g)));
+    };
+    {
+        let a = fill(m * k, 1);
+        let b = fill(k * n, 2);
+        let mut c = vec![0.0f32; m * n];
+        let r = bench("matmul scalar", 2, budget, 400, || {
+            tensor::matmul_into_scalar(&a, &b, std::hint::black_box(&mut c), m, k, n);
+        });
+        push(&mut fields, "matmul_scalar_gflops", r.mean_ns);
+        #[cfg(feature = "simd-kernels")]
+        {
+            let r = bench("matmul simd", 2, budget, 400, || {
+                tensor::simd::matmul_into(&a, &b, std::hint::black_box(&mut c), m, k, n);
+            });
+            push(&mut fields, "matmul_simd_gflops", r.mean_ns);
+        }
+    }
+    {
+        let a = fill(m * k, 3);
+        let b = fill(n * k, 4);
+        let mut c = vec![0.0f32; m * n];
+        let r = bench("matmul_bt scalar", 2, budget, 400, || {
+            tensor::matmul_bt_into_scalar(&a, &b, std::hint::black_box(&mut c), m, k, n);
+        });
+        push(&mut fields, "matmul_bt_scalar_gflops", r.mean_ns);
+        #[cfg(feature = "simd-kernels")]
+        {
+            let r = bench("matmul_bt simd", 2, budget, 400, || {
+                tensor::simd::matmul_bt_into(&a, &b, std::hint::black_box(&mut c), m, k, n);
+            });
+            push(&mut fields, "matmul_bt_simd_gflops", r.mean_ns);
+        }
+    }
+    {
+        let a = fill(m * k, 5);
+        let b = fill(m * n, 6);
+        let mut c = vec![0.0f32; k * n];
+        let r = bench("matmul_at scalar", 2, budget, 400, || {
+            tensor::matmul_at_into_scalar(&a, &b, std::hint::black_box(&mut c), m, k, n);
+        });
+        push(&mut fields, "matmul_at_scalar_gflops", r.mean_ns);
+        #[cfg(feature = "simd-kernels")]
+        {
+            let r = bench("matmul_at simd", 2, budget, 400, || {
+                tensor::simd::matmul_at_into(&a, &b, std::hint::black_box(&mut c), m, k, n);
+            });
+            push(&mut fields, "matmul_at_simd_gflops", r.mean_ns);
+        }
+    }
     Value::obj(fields)
 }
 
@@ -185,6 +337,22 @@ fn main() {
     let speedup = s4 / s1;
     println!("   -> 4-thread speedup on {ACCEPTANCE_VARIANT}: {speedup:.2}x");
 
+    // simd builds: re-run single-thread with the scalar reference via the
+    // runtime toggle, so one process records the SIMD speedup directly
+    #[cfg(feature = "simd-kernels")]
+    let simd_speedup_t1 = Some({
+        odimo::runtime::native::tensor::set_simd_enabled(false);
+        let scalar_s1 = train_steps_per_sec(ACCEPTANCE_VARIANT, 1, Duration::from_secs(4));
+        odimo::runtime::native::tensor::set_simd_enabled(true);
+        let sp = s1 / scalar_s1;
+        println!(
+            "   -> simd-kernels single-thread speedup on {ACCEPTANCE_VARIANT}: {sp:.2}x"
+        );
+        sp
+    });
+    #[cfg(not(feature = "simd-kernels"))]
+    let simd_speedup_t1: Option<f64> = None;
+
     // pointwise-dominated shape: covers the 1x1 im2col-free fast path
     let m1 = train_steps_per_sec(POINTWISE_VARIANT, 1, Duration::from_secs(4));
     let m4 = train_steps_per_sec(POINTWISE_VARIANT, 4, Duration::from_secs(4));
@@ -193,13 +361,28 @@ fn main() {
         m4 / m1
     );
 
+    // isolated microkernel throughput (scalar vs simd, no dispatch)
+    let kernels = kernel_gflops();
+
+    // quantized inference: the deploy path next to the tape's f32 eval
+    let (tiny_f32_eps, tiny_q_eps) =
+        quantized_eval_per_sec("trident_tiny_tiny", Duration::from_secs(1));
+    let (r8_f32_eps, r8_q_eps) =
+        quantized_eval_per_sec(ACCEPTANCE_VARIANT, Duration::from_secs(2));
+    println!(
+        "   -> quantized vs f32 eval throughput on {ACCEPTANCE_VARIANT}: {:.2}x",
+        r8_q_eps / r8_f32_eps
+    );
+
     // per-op breakdowns (profiled separately so probes never skew timings)
     let per_op_resnet8 = per_op_breakdown(ACCEPTANCE_VARIANT, 2);
     let per_op_mbv1 = per_op_breakdown(POINTWISE_VARIANT, 2);
+    let per_op_qeval = per_op_quantized(ACCEPTANCE_VARIANT, 4);
 
     // emit the trajectory record
-    let out = Value::obj(vec![
+    let mut fields = vec![
         ("variant", Value::str(ACCEPTANCE_VARIANT)),
+        ("simd_kernels", Value::Bool(cfg!(feature = "simd-kernels"))),
         ("threads1_steps_per_sec", Value::num(s1)),
         ("threads4_steps_per_sec", Value::num(s4)),
         ("speedup_4_threads", Value::num(speedup)),
@@ -208,14 +391,25 @@ fn main() {
         ("mbv1_threads4_steps_per_sec", Value::num(m4)),
         ("tiny_steps_per_sec", Value::num(tiny_sps)),
         ("tiny_eval_per_sec", Value::num(tiny_eval_sps)),
+        ("kernels", kernels),
+        ("quantized_eval_per_sec", Value::num(r8_q_eps)),
+        ("quantized_eval_f32_per_sec", Value::num(r8_f32_eps)),
+        ("quantized_eval_f32_ratio", Value::num(r8_q_eps / r8_f32_eps)),
+        ("tiny_quantized_eval_per_sec", Value::num(tiny_q_eps)),
+        ("tiny_quantized_eval_f32_per_sec", Value::num(tiny_f32_eps)),
         (
             "per_op",
             Value::obj(vec![
                 ("diana_resnet8_c10", per_op_resnet8),
                 ("diana_mbv1_c10", per_op_mbv1),
+                ("diana_resnet8_c10_quantized_eval", per_op_qeval),
             ]),
         ),
-    ]);
+    ];
+    if let Some(sp) = simd_speedup_t1 {
+        fields.push(("simd_speedup_threads1", Value::num(sp)));
+    }
+    let out = Value::obj(fields);
     let path = odimo::repo_root().join("BENCH_native_train.json");
     std::fs::write(&path, out.to_string_pretty()).expect("write bench json");
     println!("   -> wrote {}", path.display());

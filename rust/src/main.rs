@@ -38,7 +38,7 @@ use odimo::search::feasible_counts;
 use odimo::soc::Platform;
 use odimo::util::cli;
 
-const USAGE: &str = "usage: repro <list|platforms|train|sweep|exp> [options]
+const USAGE: &str = "usage: repro <list|platforms|train|eval|sweep|exp> [options]
   global: --artifacts DIR  --results DIR  --backend native|xla
           --threads N  (native worker threads; 0/default = all cores,
            capped at 4x the machine's cores — results are bit-identical
@@ -46,6 +46,11 @@ const USAGE: &str = "usage: repro <list|platforms|train|sweep|exp> [options]
           --profile  (print the native engine's per-op time breakdown
            at exit: im2col vs matmul vs batch-norm vs optimizer ...)
   train:  --variant V [--lambda L] [--cost-target latency|energy] [--config F] [--fast F]
+  eval:   --variant V [--quantized] [--steps N] [--batches N] [--seed S]
+          (native only; --quantized discretizes θ and runs the real
+           int8/ternary integer-GEMM inference path, reporting both it
+           and the f32 fake-quant reference; --steps trains N warmup
+           steps first so BN stats and θ move off init)
   sweep:  [--variant V] [--cost-target T] [--config F] [--fast F] [--no-baselines]
           (no --variant + native backend: sweeps every registered SoC)
   exp:    <fig5|fig6|fig7|fig8|fig9|fig10|table2|table3|table4|socmap|all>
@@ -56,7 +61,10 @@ const USAGE: &str = "usage: repro <list|platforms|train|sweep|exp> [options]
           arch: resnet20|resnet8|mbv1|tiny   task: c10|c100|imgnet|tiny";
 
 fn main() -> Result<()> {
-    let args = cli::parse(std::env::args().skip(1), &["no-baselines", "help", "profile"])?;
+    let args = cli::parse(
+        std::env::args().skip(1),
+        &["no-baselines", "help", "profile", "quantized"],
+    )?;
     if args.has_flag("help") || args.positional.is_empty() {
         println!("{USAGE}");
         return Ok(());
@@ -188,6 +196,66 @@ fn main() -> Result<()> {
                     r.variant,
                     r.lambda.unwrap_or(0.0)
                 )))?;
+            }
+        }
+        "eval" => {
+            let variant = args.require("variant")?;
+            let opts = odimo::runtime::native::NativeOptions {
+                threads: threads.unwrap_or(1).max(1),
+                ..Default::default()
+            };
+            let be = odimo::runtime::native::NativeBackend::build_with(&variant, opts)?;
+            let m = be.manifest();
+            let seed = args.opt_usize("seed", 0)?;
+            let steps = args.opt_usize("steps", 0)?;
+            let batches = args.opt_usize("batches", 4)?;
+            let quantized = args.has_flag("quantized");
+            let ds = odimo::datasets::SynthDataset::from_name(
+                &m.dataset.name,
+                m.dataset.hw,
+                m.dataset.classes,
+                seed as u64 + 1,
+            );
+            let mut state = be.init_state(seed as i32)?;
+            let hp = odimo::runtime::StepHparams {
+                lam: 0.0,
+                cost_sel: 0.0,
+                lr_w: 0.05,
+                lr_th: 0.05,
+            };
+            for i in 0..steps {
+                let (x, y) =
+                    ds.batch(odimo::datasets::Split::Train, i as u64, m.dataset.batch);
+                be.train_step(&mut state, &x, &y, hp)?;
+            }
+            let mut n = 0usize;
+            let mut f32_m = [0.0f32; 2];
+            let mut q_m = [0.0f32; 2];
+            for i in 0..batches {
+                let (x, y) =
+                    ds.batch(odimo::datasets::Split::Test, i as u64, m.dataset.batch);
+                n += y.len();
+                let r = be.eval_batch(&state, &x, &y)?;
+                f32_m[0] += r[0];
+                f32_m[1] += r[1];
+                if quantized {
+                    let r = be.eval_batch_quantized(&state, &x, &y)?;
+                    q_m[0] += r[0];
+                    q_m[1] += r[1];
+                }
+            }
+            println!(
+                "{variant} f32:       acc={:.4} loss={:.4}  ({n} images)",
+                f32_m[0] / n as f32,
+                f32_m[1] / n as f32
+            );
+            if quantized {
+                println!(
+                    "{variant} quantized: acc={:.4} loss={:.4}  (int8/ternary GEMM, \
+                     i32 accumulators)",
+                    q_m[0] / n as f32,
+                    q_m[1] / n as f32
+                );
             }
         }
         "sweep" => {

@@ -51,10 +51,12 @@ use super::arena::Arena;
 use super::plan::ExecPlan;
 use super::pool::{max_threads, KernelScope, WorkerPool};
 use super::profile::{self, Op};
+use super::qkernels::{GeomParams, QuantNet};
 use super::supernet::{
     forward, init_conv_weight, init_fc, theta_counts, LayerVars, SupernetSpec,
 };
 use super::tape::{eval_layer_cost, EvalBits, Tape, Var};
+use super::tensor::{axpy_into, scale_add_into};
 
 const BN_MOMENTUM: f32 = 0.9;
 const W_MOMENTUM: f32 = 0.9;
@@ -545,6 +547,44 @@ impl NativeBackend {
         (bits, tape.recycle())
     }
 
+    /// Discretize + quantize the current state into a real int8/ternary
+    /// inference network: θ argmax per the spec's search mode, weights
+    /// stored as i8 codes with per-channel scales, BN running stats
+    /// folded — see [`super::qkernels`].
+    pub fn quantize(&self, state: &TrainState) -> Result<QuantNet<'_>> {
+        let geoms: Vec<GeomParams> = self
+            .geoms
+            .iter()
+            .map(|g| GeomParams {
+                w: &state.leaves[g.w],
+                scale: &state.leaves[g.scale],
+                bias: &state.leaves[g.bias],
+                mean: &state.leaves[g.mean],
+                var: &state.leaves[g.var],
+                theta: g.theta.map(|t| state.leaves[t].as_slice()),
+            })
+            .collect();
+        QuantNet::build(
+            &self.spec,
+            &geoms,
+            &state.leaves[self.fc_w],
+            &state.leaves[self.fc_b],
+        )
+    }
+
+    /// `[correct, loss_sum]` of the genuinely-quantized forward — the
+    /// same metric pair as [`ModelBackend::eval_batch`], computed by the
+    /// int8 GEMM path instead of the tape.
+    pub fn eval_batch_quantized(
+        &self,
+        state: &TrainState,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<Vec<f32>> {
+        self.check_batch(x, y)?;
+        self.quantize(state)?.eval_batch(x, y)
+    }
+
     /// Run one closure per shard on the persistent pool and return the
     /// results in shard order. Shards become pool tasks (`i % groups`
     /// round-robin onto group leaders); pool slots beyond the shard
@@ -701,16 +741,9 @@ impl ModelBackend for NativeBackend {
         match self.optimizer {
             WOptimizer::SgdMomentum => {
                 for (slot, g) in self.opt.iter().zip(&reduced[..n_w]) {
-                    {
-                        let mom = &mut state.leaves[slot.m];
-                        for (mv, &gv) in mom.iter_mut().zip(g) {
-                            *mv = W_MOMENTUM * *mv + gv;
-                        }
-                    }
+                    scale_add_into(&mut state.leaves[slot.m], W_MOMENTUM, g);
                     let mom = std::mem::take(&mut state.leaves[slot.m]);
-                    for (pv, &mv) in state.leaves[slot.p].iter_mut().zip(&mom) {
-                        *pv -= hp.lr_w * mv;
-                    }
+                    axpy_into(&mut state.leaves[slot.p], -hp.lr_w, &mom);
                     state.leaves[slot.m] = mom;
                 }
             }
@@ -749,9 +782,7 @@ impl ModelBackend for NativeBackend {
         // θ: plain SGD on its own learning rate
         let theta_leaves: Vec<usize> = self.geoms.iter().filter_map(|g| g.theta).collect();
         for (tleaf, g) in theta_leaves.iter().zip(&reduced[n_w..]) {
-            for (tv, &gv) in state.leaves[*tleaf].iter_mut().zip(g) {
-                *tv -= hp.lr_th * gv;
-            }
+            axpy_into(&mut state.leaves[*tleaf], -hp.lr_th, g);
         }
         drop(p_opt);
 

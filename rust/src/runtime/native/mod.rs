@@ -26,6 +26,11 @@
 //!   table and the platform registry: the ODiMO channel search plus the
 //!   `_prune` / `_layerwise` baseline spaces, per-column weight branches
 //!   following each CU's `quant`, ineligible CUs softmax-masked;
+//! * [`qkernels`] — the real quantized inference path: θ-argmax
+//!   discretization, i8/ternary weight codes with per-channel scales,
+//!   int8 activations and an integer GEMM with i32 accumulators
+//!   (`repro eval --quantized`), validated against the f32 fake-quant
+//!   forward;
 //! * [`backend`] — [`NativeBackend`]: the train/eval/cost loop with
 //!   intra-step batch sharding, fixed-order gradient tree reduction, and
 //!   SGD+momentum or Adam per-group updates.
@@ -42,6 +47,7 @@ pub mod backend;
 pub mod plan;
 pub mod pool;
 pub mod profile;
+pub mod qkernels;
 pub mod supernet;
 pub mod tape;
 pub mod tensor;
@@ -50,6 +56,7 @@ pub use arena::Arena;
 pub use backend::{NativeBackend, NativeOptions, WOptimizer, NSHARDS};
 pub use plan::ExecPlan;
 pub use pool::{max_threads, KernelScope, WorkerPool};
+pub use qkernels::QuantNet;
 pub use supernet::{Arch, SearchMode, SupernetSpec};
 pub use tape::{EvalBits, Gradients, QuantKind, Tape, Var};
 pub use tensor::Tensor;

@@ -27,12 +27,16 @@ pub enum Op {
     Im2col,
     /// the three blocked matmul kernels, forward and backward
     Matmul,
+    /// int8 GEMM with i32 accumulators (the real quantized path)
+    QMatmul,
     /// depthwise conv forward + backward
     DwConv,
     /// batch-stat normalization (train) / folded affine (eval)
     BatchNorm,
-    /// fake-quant branches + Eq. 5 effective weights
+    /// fake-quant branches + Eq. 5 effective weights (forward only)
     Quant,
+    /// STE backward of the fake-quant / effective-weight ops
+    QuantBwd,
     /// θ machinery: masked softmax, broadcast, column sums
     Theta,
     /// softmax cross-entropy
@@ -48,12 +52,14 @@ pub enum Op {
 }
 
 impl Op {
-    pub const ALL: [Op; 11] = [
+    pub const ALL: [Op; 13] = [
         Op::Im2col,
         Op::Matmul,
+        Op::QMatmul,
         Op::DwConv,
         Op::BatchNorm,
         Op::Quant,
+        Op::QuantBwd,
         Op::Theta,
         Op::Loss,
         Op::Cost,
@@ -66,9 +72,11 @@ impl Op {
         match self {
             Op::Im2col => "im2col",
             Op::Matmul => "matmul",
+            Op::QMatmul => "qmatmul",
             Op::DwConv => "dw_conv",
             Op::BatchNorm => "batch_norm",
             Op::Quant => "quant",
+            Op::QuantBwd => "quant_bwd",
             Op::Theta => "theta",
             Op::Loss => "loss",
             Op::Cost => "cost_model",

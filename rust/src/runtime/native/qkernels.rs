@@ -1,0 +1,621 @@
+//! Real quantized inference: i8 / 2-bit-ternary weight storage with
+//! per-channel scales, symmetric int8 activations, and an integer GEMM
+//! with i32 accumulators — the arithmetic the [`QuantKind`] fake-quant
+//! ops only *emulate* in f32 during training.
+//!
+//! [`QuantNet`] is a frozen, discretized snapshot of a trained state:
+//! each searchable conv's θ row is argmax-discretized to one CU column
+//! and the row's weights are stored as that CU's representation —
+//! `i8` codes (int8: −127..127, ternary: −1/0/+1) plus one f32 scale
+//! per output channel, chosen so `code · scale` reproduces the training
+//! forward's [`QuantKind::quant_row`] output *bit-exactly*. Identity
+//! (full-precision) rows stay f32; Zero (pruned) rows produce zeros.
+//! Batch-norm running stats are folded into a per-channel affine with
+//! the same [`BN_EPS`] as the tape's eval forward; the FC head is never
+//! quantized, matching the training graph.
+//!
+//! At inference each quantized conv's *input* is quantized symmetric
+//! per-tensor (`scale = max|x| / 127`, no zero point), the GEMM runs on
+//! `i8 × i8 → i32` (integer accumulation is associative, so this path
+//! is trivially deterministic for any execution order), and the output
+//! dequantizes by `scale_act · scale_w[ch]`. Validation contract:
+//! [`QuantNet::forward_f32_reference`] runs the same discretized
+//! network in f32 with the dequantized weights and *no* activation
+//! quantization — exactly the fake-quant emulation — and
+//! `tests/quantized.rs` pins the quantized logits against it to a
+//! documented tolerance on every builtin SoC's supernet.
+//!
+//! Everything here allocates per call (no arena): this is the deploy
+//! path, run once per batch, not the training hot loop.
+
+use anyhow::{anyhow, Result};
+
+use crate::soc::LayerType;
+
+use super::profile::{self, Op};
+use super::supernet::{PlanStep, SearchMode, SupernetSpec, BN_EPS};
+use super::tape::{im2col_into, same_geometry, QuantKind};
+use super::tensor::{matmul_into, Tensor};
+
+/// One conv geometry's frozen quantized parameters.
+pub struct QLayer {
+    /// per-output-channel quantizer actually applied after θ argmax
+    pub kinds: Vec<QuantKind>,
+    /// row-major `[cout, f]` integer codes (int8 or ternary rows;
+    /// Identity/Zero rows are all-zero placeholders)
+    pub codes: Vec<i8>,
+    /// per-row dequantization scale (`code · scale` = fake-quant value)
+    pub scales: Vec<f32>,
+    /// the fake-quant f32 weights (`quant_row` output): the f32
+    /// reference forward reads all rows, the quantized forward reads
+    /// only Identity rows
+    pub w_deq: Vec<f32>,
+    /// folded BN affine `y = a·x + b` from the running stats
+    pub bn_a: Vec<f32>,
+    pub bn_b: Vec<f32>,
+}
+
+/// Raw state slices of one conv geometry (assembled by
+/// `NativeBackend::quantize` from its leaf table).
+pub struct GeomParams<'a> {
+    pub w: &'a [f32],
+    pub scale: &'a [f32],
+    pub bias: &'a [f32],
+    pub mean: &'a [f32],
+    pub var: &'a [f32],
+    pub theta: Option<&'a [f32]>,
+}
+
+/// A discretized, genuinely-quantized inference network.
+pub struct QuantNet<'a> {
+    spec: &'a SupernetSpec,
+    layers: Vec<QLayer>,
+    fc_w: Vec<f32>,
+    fc_b: Vec<f32>,
+}
+
+/// Masked argmax over one θ row; ties keep the lowest eligible column.
+fn masked_argmax(row: &[f32], mask: &[bool]) -> usize {
+    let mut best: Option<usize> = None;
+    for (j, &v) in row.iter().enumerate() {
+        if !mask[j] {
+            continue;
+        }
+        match best {
+            Some(b) if row[b] >= v => {}
+            _ => best = Some(j),
+        }
+    }
+    best.unwrap_or(0)
+}
+
+/// Per-output-channel quantizer of geometry `gi` after θ discretization.
+pub fn row_kinds(spec: &SupernetSpec, gi: usize, theta: Option<&[f32]>) -> Vec<QuantKind> {
+    let l = &spec.layers[gi];
+    let cout = l.cout;
+    let th = match theta {
+        Some(t) if l.searchable => t,
+        // fixed-precision layers run on the primary CU's representation,
+        // matching the training forward's `fake_quant_ste(w, quants[0])`
+        _ => return vec![spec.quants[0]; cout],
+    };
+    match spec.search {
+        SearchMode::Channel | SearchMode::Fixed => {
+            let k = spec.platform.n_cus();
+            debug_assert_eq!(th.len(), cout * k);
+            (0..cout)
+                .map(|r| spec.quants[masked_argmax(&th[r * k..(r + 1) * k], &spec.masks[gi])])
+                .collect()
+        }
+        SearchMode::Prune => {
+            debug_assert_eq!(th.len(), cout * 2);
+            (0..cout)
+                .map(|r| {
+                    if th[r * 2] >= th[r * 2 + 1] {
+                        spec.quants[0]
+                    } else {
+                        QuantKind::Zero
+                    }
+                })
+                .collect()
+        }
+        SearchMode::Layerwise => {
+            let kind = spec.quants[masked_argmax(th, &spec.masks[gi])];
+            vec![kind; cout]
+        }
+    }
+}
+
+impl QLayer {
+    /// Quantize one geometry's weights row-by-row and fold its BN stats.
+    fn build(spec: &SupernetSpec, gi: usize, p: &GeomParams) -> QLayer {
+        let cout = spec.layers[gi].cout;
+        let f = spec.fan_in(gi);
+        debug_assert_eq!(p.w.len(), cout * f);
+        let kinds = row_kinds(spec, gi, p.theta);
+        let mut codes = vec![0i8; cout * f];
+        let mut scales = vec![0.0f32; cout];
+        let mut w_deq = vec![0.0f32; cout * f];
+        for r in 0..cout {
+            let row = &p.w[r * f..(r + 1) * f];
+            kinds[r].quant_row(row, &mut w_deq[r * f..(r + 1) * f]);
+            let crow = &mut codes[r * f..(r + 1) * f];
+            match kinds[r] {
+                QuantKind::Identity | QuantKind::Zero => {}
+                QuantKind::Int8 => {
+                    let amax = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                    let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+                    scales[r] = scale;
+                    for (c, &v) in crow.iter_mut().zip(row) {
+                        *c = (v / scale).round().clamp(-127.0, 127.0) as i8;
+                    }
+                }
+                QuantKind::Ternary => {
+                    // same thr/scale recipe as `quant_row`, so
+                    // code·scale == the fake-quant value bit-exactly
+                    let amax = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                    let thr = 0.05 * amax;
+                    let mut kept = 0.0f32;
+                    let mut sum = 0.0f32;
+                    for &v in row {
+                        if v.abs() > thr {
+                            kept += 1.0;
+                            sum += v.abs();
+                        }
+                    }
+                    scales[r] = sum / kept.max(1.0);
+                    for (c, &v) in crow.iter_mut().zip(row) {
+                        *c = if v.abs() > thr {
+                            if v > 0.0 {
+                                1
+                            } else {
+                                -1
+                            }
+                        } else {
+                            0
+                        };
+                    }
+                }
+            }
+        }
+        let bn_a: Vec<f32> = p
+            .scale
+            .iter()
+            .zip(p.var)
+            .map(|(&s, &v)| s / (v + BN_EPS).sqrt())
+            .collect();
+        let bn_b: Vec<f32> = p
+            .bias
+            .iter()
+            .zip(p.mean.iter().zip(&bn_a))
+            .map(|(&b, (&m, &a))| b - m * a)
+            .collect();
+        QLayer {
+            kinds,
+            codes,
+            scales,
+            w_deq,
+            bn_a,
+            bn_b,
+        }
+    }
+
+    /// True if any row runs on integer codes (int8 or ternary).
+    fn any_integer(&self) -> bool {
+        self.kinds
+            .iter()
+            .any(|&k| k == QuantKind::Int8 || k == QuantKind::Ternary)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// integer kernels
+// ---------------------------------------------------------------------------
+
+/// Symmetric per-tensor int8 activation quantization: `scale = max|x| /
+/// 127`, codes rounded and clamped to ±127, no zero point.
+pub fn quantize_act(x: &[f32]) -> (Vec<i8>, f32) {
+    let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+    let codes = x
+        .iter()
+        .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    (codes, scale)
+}
+
+/// Integer GEMM `C[m,n] = A[m,k] · B[n,k]ᵀ` on i8 codes with i32
+/// accumulators — the dot-product (`A·Bᵀ`) layout the conv lowering
+/// uses, weights as rows of codes. Integer adds are associative, so any
+/// blocking/threading of this kernel is bit-identical by construction.
+pub fn qmatmul_bt_into(a: &[i8], b: &[i8], c: &mut [i32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0i32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av as i32 * bv as i32;
+            }
+            *cv = acc;
+        }
+    }
+}
+
+/// f32 dot (Identity rows of a mixed-precision conv).
+fn fdot(x: &[f32], y: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (&a, &b) in x.iter().zip(y) {
+        s += a * b;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// forward
+// ---------------------------------------------------------------------------
+
+/// One activation tensor flowing through the plan.
+struct Act {
+    data: Vec<f32>,
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+}
+
+impl QuantNet<'_> {
+    /// Build from a spec plus per-geometry state slices (normally via
+    /// `NativeBackend::quantize`).
+    pub fn build<'a>(
+        spec: &'a SupernetSpec,
+        geoms: &[GeomParams],
+        fc_w: &[f32],
+        fc_b: &[f32],
+    ) -> Result<QuantNet<'a>> {
+        if geoms.len() != spec.n_convs() {
+            return Err(anyhow!(
+                "quantize: {} geometries supplied, spec has {}",
+                geoms.len(),
+                spec.n_convs()
+            ));
+        }
+        let layers = geoms
+            .iter()
+            .enumerate()
+            .map(|(gi, p)| QLayer::build(spec, gi, p))
+            .collect();
+        Ok(QuantNet {
+            spec,
+            layers,
+            fc_w: fc_w.to_vec(),
+            fc_b: fc_b.to_vec(),
+        })
+    }
+
+    pub fn spec(&self) -> &SupernetSpec {
+        self.spec
+    }
+
+    pub fn layer(&self, gi: usize) -> &QLayer {
+        &self.layers[gi]
+    }
+
+    /// Quantized logits for an NHWC batch `x` of `n` images.
+    pub fn forward(&self, x: &[f32], n: usize) -> Vec<f32> {
+        self.forward_inner(x, n, true)
+    }
+
+    /// The fake-quant emulation of the same discretized network: f32
+    /// arithmetic on the dequantized weights, unquantized activations.
+    /// This is what the training-time eval forward computes for a
+    /// frozen/discretized θ — the validation reference.
+    pub fn forward_f32_reference(&self, x: &[f32], n: usize) -> Vec<f32> {
+        self.forward_inner(x, n, false)
+    }
+
+    /// `[correct, loss_sum]` of the quantized forward — the same metric
+    /// pair as `ModelBackend::eval_batch`.
+    pub fn eval_batch(&self, x: &[f32], y: &[i32]) -> Result<Vec<f32>> {
+        let hw = self.spec.dataset.hw;
+        let n = y.len();
+        if x.len() != n * hw * hw * 3 {
+            return Err(anyhow!(
+                "quantized eval: {} labels but {} pixels (expected {n}·{hw}·{hw}·3)",
+                n,
+                x.len()
+            ));
+        }
+        let logits = self.forward(x, n);
+        let (correct, loss_sum) = logits_metrics(&logits, y, self.spec.classes);
+        Ok(vec![correct, loss_sum])
+    }
+
+    fn forward_inner(&self, x: &[f32], n: usize, quantized: bool) -> Vec<f32> {
+        let hw = self.spec.dataset.hw;
+        debug_assert_eq!(x.len(), n * hw * hw * 3);
+        let mut cur = Act {
+            data: x.to_vec(),
+            n,
+            h: hw,
+            w: hw,
+            c: 3,
+        };
+        for step in &self.spec.plan {
+            match *step {
+                PlanStep::Conv(i) => {
+                    cur = self.conv_bn(i, &cur, true, quantized);
+                }
+                PlanStep::ResBlock { c1, c2, dn } => {
+                    let h = self.conv_bn(c1, &cur, true, quantized);
+                    let mut h2 = self.conv_bn(c2, &h, false, quantized);
+                    let sc = match dn {
+                        Some(d) => self.conv_bn(d, &cur, false, quantized),
+                        None => cur,
+                    };
+                    for (a, &b) in h2.data.iter_mut().zip(&sc.data) {
+                        *a = (*a + b).max(0.0);
+                    }
+                    cur = h2;
+                }
+                PlanStep::DwPw { dw, pw } => {
+                    cur = self.conv_bn(dw, &cur, true, quantized);
+                    cur = self.conv_bn(pw, &cur, true, quantized);
+                }
+            }
+        }
+        // GAP → FC head, always f32 (the training graph never quantizes
+        // the classifier)
+        let (nb, hwp, c) = (cur.n, cur.h * cur.w, cur.c);
+        let mut pooled = vec![0.0f32; nb * c];
+        for b in 0..nb {
+            for p in 0..hwp {
+                let row = &cur.data[(b * hwp + p) * c..(b * hwp + p + 1) * c];
+                for (acc, &v) in pooled[b * c..(b + 1) * c].iter_mut().zip(row) {
+                    *acc += v;
+                }
+            }
+        }
+        pooled.iter_mut().for_each(|v| *v /= hwp as f32);
+        let classes = self.spec.classes;
+        let mut logits = vec![0.0f32; nb * classes];
+        matmul_into(&pooled, &self.fc_w, &mut logits, nb, c, classes);
+        for lrow in logits.chunks_exact_mut(classes) {
+            for (l, &b) in lrow.iter_mut().zip(&self.fc_b) {
+                *l += b;
+            }
+        }
+        logits
+    }
+
+    /// conv/dw → folded BN affine → optional relu.
+    fn conv_bn(&self, gi: usize, x: &Act, with_relu: bool, quantized: bool) -> Act {
+        let l = &self.spec.layers[gi];
+        let mut y = match l.ltype {
+            LayerType::Dw => self.dw_conv(gi, x, quantized),
+            _ => self.conv(gi, x, quantized),
+        };
+        let ql = &self.layers[gi];
+        for row in y.data.chunks_exact_mut(y.c) {
+            for ((v, &a), &b) in row.iter_mut().zip(&ql.bn_a).zip(&ql.bn_b) {
+                *v = *v * a + b;
+                if with_relu {
+                    *v = v.max(0.0);
+                }
+            }
+        }
+        y
+    }
+
+    /// Standard / pointwise conv: im2col (skipped for 1×1/stride-1) then
+    /// a per-row mixed GEMM — integer dot with i32 accumulators for
+    /// int8/ternary rows, f32 dot on the dequantized weights for
+    /// Identity rows, zeros for pruned rows.
+    fn conv(&self, gi: usize, x: &Act, quantized: bool) -> Act {
+        let l = &self.spec.layers[gi];
+        let ql = &self.layers[gi];
+        let (k, stride) = (l.k, l.stride);
+        let cout = l.cout;
+        let f = k * k * x.c;
+        let (oh, ow, _) = same_geometry(x.h, x.w, k, stride);
+        let rows = x.n * oh * ow;
+        let pointwise = k == 1 && stride == 1;
+        let cols_owned: Vec<f32>;
+        let cols: &[f32] = if pointwise {
+            &x.data
+        } else {
+            let xt = Tensor::new(vec![x.n, x.h, x.w, x.c], x.data.clone());
+            let mut buf = vec![0.0f32; rows * f];
+            im2col_into(&xt, k, stride, &mut buf);
+            cols_owned = buf;
+            &cols_owned
+        };
+        let mut out = vec![0.0f32; rows * cout];
+        let use_int = quantized && ql.any_integer();
+        let (a8, scale_a) = if use_int {
+            quantize_act(cols)
+        } else {
+            (Vec::new(), 1.0)
+        };
+        let _p = use_int.then(|| profile::time(Op::QMatmul));
+        for i in 0..rows {
+            let arowf = &cols[i * f..(i + 1) * f];
+            let orow = &mut out[i * cout..(i + 1) * cout];
+            for (j, ov) in orow.iter_mut().enumerate() {
+                let wrow = j * f..(j + 1) * f;
+                *ov = match ql.kinds[j] {
+                    QuantKind::Zero => 0.0,
+                    QuantKind::Identity => fdot(arowf, &ql.w_deq[wrow]),
+                    QuantKind::Int8 | QuantKind::Ternary => {
+                        if use_int {
+                            let arow8 = &a8[i * f..(i + 1) * f];
+                            let mut acc = 0i32;
+                            for (&av, &bv) in arow8.iter().zip(&ql.codes[wrow]) {
+                                acc += av as i32 * bv as i32;
+                            }
+                            acc as f32 * scale_a * ql.scales[j]
+                        } else {
+                            fdot(arowf, &ql.w_deq[wrow])
+                        }
+                    }
+                };
+            }
+        }
+        Act {
+            data: out,
+            n: x.n,
+            h: oh,
+            w: ow,
+            c: cout,
+        }
+    }
+
+    /// Depthwise conv: per-channel integer tap accumulation (i32) for
+    /// quantized channels, f32 taps on dequantized weights otherwise.
+    fn dw_conv(&self, gi: usize, x: &Act, quantized: bool) -> Act {
+        let l = &self.spec.layers[gi];
+        let ql = &self.layers[gi];
+        let (k, stride) = (l.k, l.stride);
+        let c = x.c;
+        debug_assert_eq!(l.cout, c);
+        let (oh, ow, pad) = same_geometry(x.h, x.w, k, stride);
+        let mut out = vec![0.0f32; x.n * oh * ow * c];
+        let use_int = quantized && ql.any_integer();
+        let (a8, scale_a) = if use_int {
+            quantize_act(&x.data)
+        } else {
+            (Vec::new(), 1.0)
+        };
+        let _p = use_int.then(|| profile::time(Op::QMatmul));
+        for b in 0..x.n {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let orow =
+                        &mut out[((b * oh + oy) * ow + ox) * c..((b * oh + oy) * ow + ox + 1) * c];
+                    for (ch, ov) in orow.iter_mut().enumerate() {
+                        let int_ch = use_int
+                            && matches!(ql.kinds[ch], QuantKind::Int8 | QuantKind::Ternary);
+                        let mut acc_i = 0i32;
+                        let mut acc_f = 0.0f32;
+                        for ky in 0..k {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            if iy < 0 || iy >= x.h as isize {
+                                continue;
+                            }
+                            for kx in 0..k {
+                                let ix = (ox * stride + kx) as isize - pad as isize;
+                                if ix < 0 || ix >= x.w as isize {
+                                    continue;
+                                }
+                                let src =
+                                    ((b * x.h + iy as usize) * x.w + ix as usize) * c + ch;
+                                let wi = ch * k * k + ky * k + kx;
+                                if int_ch {
+                                    acc_i += a8[src] as i32 * ql.codes[wi] as i32;
+                                } else {
+                                    acc_f += x.data[src] * ql.w_deq[wi];
+                                }
+                            }
+                        }
+                        *ov = if int_ch {
+                            acc_i as f32 * scale_a * ql.scales[ch]
+                        } else {
+                            acc_f
+                        };
+                    }
+                }
+            }
+        }
+        Act {
+            data: out,
+            n: x.n,
+            h: oh,
+            w: ow,
+            c,
+        }
+    }
+}
+
+/// `(correct, loss_sum)` of a logits matrix against integer labels —
+/// the same softmax/argmax recipe (first-strictly-greater tie-breaking)
+/// as the tape's `softmax_ce`, so metric comparisons are apples-to-apples.
+pub fn logits_metrics(logits: &[f32], labels: &[i32], classes: usize) -> (f32, f32) {
+    let n = labels.len();
+    debug_assert_eq!(logits.len(), n * classes);
+    let mut correct = 0.0f32;
+    let mut loss_sum = 0.0f32;
+    let mut probs = vec![0.0f32; classes];
+    for b in 0..n {
+        let row = &logits[b * classes..(b + 1) * classes];
+        let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+        let mut z = 0.0f32;
+        for (p, &v) in probs.iter_mut().zip(row) {
+            *p = (v - mx).exp();
+            z += *p;
+        }
+        probs.iter_mut().for_each(|p| *p /= z);
+        let mut best = 0;
+        for (j, &p) in probs.iter().enumerate() {
+            if p > probs[best] {
+                best = j;
+            }
+        }
+        let lab = labels[b] as usize;
+        loss_sum += -probs[lab].max(1e-12).ln();
+        if best == lab {
+            correct += 1.0;
+        }
+    }
+    (correct, loss_sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qmatmul_matches_wide_integer_reference() {
+        let (m, k, n) = (5, 19, 7);
+        let a: Vec<i8> = (0..m * k).map(|i| ((i * 37 + 11) % 255) as i8).collect();
+        let b: Vec<i8> = (0..n * k).map(|i| ((i * 53 + 5) % 255) as i8).collect();
+        let mut c = vec![0i32; m * n];
+        qmatmul_bt_into(&a, &b, &mut c, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let want: i64 = (0..k)
+                    .map(|p| a[i * k + p] as i64 * b[j * k + p] as i64)
+                    .sum();
+                assert_eq!(c[i * n + j] as i64, want, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn act_quantization_round_trips_within_half_step() {
+        let x: Vec<f32> = (0..100).map(|i| ((i as f32) * 0.37).sin() * 3.0).collect();
+        let (codes, scale) = quantize_act(&x);
+        for (&c, &v) in codes.iter().zip(&x) {
+            assert!(
+                (c as f32 * scale - v).abs() <= 0.5 * scale + 1e-6,
+                "code {c} scale {scale} value {v}"
+            );
+        }
+        // all-zero input takes the scale=1 escape hatch
+        let (codes, scale) = quantize_act(&[0.0; 8]);
+        assert_eq!(scale, 1.0);
+        assert!(codes.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn masked_argmax_respects_mask_and_ties() {
+        assert_eq!(masked_argmax(&[1.0, 5.0, 3.0], &[true, true, true]), 1);
+        assert_eq!(masked_argmax(&[1.0, 5.0, 3.0], &[true, false, true]), 2);
+        // tie → lowest eligible index
+        assert_eq!(masked_argmax(&[2.0, 2.0, 2.0], &[true, true, true]), 0);
+        assert_eq!(masked_argmax(&[2.0, 2.0, 2.0], &[false, true, true]), 1);
+    }
+}

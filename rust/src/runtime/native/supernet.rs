@@ -522,7 +522,10 @@ pub struct ForwardOut {
     pub batch_stats: Vec<Option<(Vec<f32>, Vec<f32>)>>,
 }
 
-const BN_EPS: f32 = 1e-5;
+/// Batch-norm epsilon of the eval-mode folded affine — shared with the
+/// quantized inference path ([`super::qkernels`]) so the two forwards
+/// fold the running stats identically.
+pub(crate) const BN_EPS: f32 = 1e-5;
 
 /// Record the θ → (weight-branch probabilities, expected counts) graph
 /// of one searchable layer for the spec's search mode — the *single*

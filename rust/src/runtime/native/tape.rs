@@ -538,8 +538,12 @@ impl Tape {
         debug_assert_eq!(bv.elem_count(), c);
         let _p = profile::time(Op::Elementwise);
         let mut data = self.alloc_raw(xv.elem_count());
-        for (i, (d, &v)) in data.iter_mut().zip(&xv.data).enumerate() {
-            *d = v + bv.data[i % c];
+        // row walk instead of `i % c` indexing: same element order,
+        // vectorizable inner loop
+        for (drow, xrow) in data.chunks_exact_mut(c).zip(xv.data.chunks_exact(c)) {
+            for ((d, &v), &bias) in drow.iter_mut().zip(xrow).zip(&bv.data) {
+                *d = v + bias;
+            }
         }
         let val = Tensor::new(xv.shape.clone(), data);
         self.push(
@@ -548,8 +552,10 @@ impl Tape {
                 let _p = profile::time(Op::Elementwise);
                 store.acc(x.0, g);
                 let db = store.grad_mut(b.0);
-                for (i, &s) in g.iter().enumerate() {
-                    db[i % c] += s;
+                for grow in g.chunks_exact(c) {
+                    for (dbv, &s) in db.iter_mut().zip(grow) {
+                        *dbv += s;
+                    }
                 }
             })),
         )
@@ -745,17 +751,24 @@ impl Tape {
         let m = xv.elem_count() / c;
         let _p = profile::time(Op::BatchNorm);
         const EPS: f32 = 1e-5;
+        // row walks (chunks of c) instead of `i % c` indexing: the
+        // per-channel accumulation order over rows is unchanged, but the
+        // inner loops run over contiguous lanes and vectorize
         let mut mean = vec![0.0f32; c];
-        for (i, &v) in xv.data.iter().enumerate() {
-            mean[i % c] += v;
+        for xrow in xv.data.chunks_exact(c) {
+            for (mv, &v) in mean.iter_mut().zip(xrow) {
+                *mv += v;
+            }
         }
         for v in mean.iter_mut() {
             *v /= m as f32;
         }
         let mut var = vec![0.0f32; c];
-        for (i, &v) in xv.data.iter().enumerate() {
-            let d = v - mean[i % c];
-            var[i % c] += d * d;
+        for xrow in xv.data.chunks_exact(c) {
+            for ((vv, &v), &mu) in var.iter_mut().zip(xrow).zip(&mean) {
+                let d = v - mu;
+                *vv += d * d;
+            }
         }
         for v in var.iter_mut() {
             *v /= m as f32;
@@ -763,11 +776,13 @@ impl Tape {
         let inv: Vec<f32> = var.iter().map(|&v| 1.0 / (v + EPS).sqrt()).collect();
         let mut xhat_buf = self.alloc_raw(xv.elem_count());
         let mut y = self.alloc_raw(xv.elem_count());
-        for (i, &v) in xv.data.iter().enumerate() {
-            let ch = i % c;
-            let xh = (v - mean[ch]) * inv[ch];
-            xhat_buf[i] = xh;
-            y[i] = xh * sv.data[ch] + bv.data[ch];
+        for ((xhrow, yrow), xrow) in xhat_buf
+            .chunks_exact_mut(c)
+            .zip(y.chunks_exact_mut(c))
+            .zip(xv.data.chunks_exact(c))
+        {
+            sub_mul_row(xhrow, xrow, &mean, &inv);
+            affine_row(yrow, xhrow, &sv.data, &bv.data);
         }
         let xhat = self.track_aux(Tensor::new(xv.shape.clone(), xhat_buf));
         let val = Tensor::new(xv.shape.clone(), y);
@@ -779,19 +794,30 @@ impl Tape {
                 let _p = profile::time(Op::BatchNorm);
                 let mut sum_dy = store.take_zeroed(c);
                 let mut sum_dy_xhat = store.take_zeroed(c);
-                for (i, &s) in g.iter().enumerate() {
-                    let ch = i % c;
-                    sum_dy[ch] += s;
-                    sum_dy_xhat[ch] += s * xhat.data[i];
+                for (grow, xhrow) in g.chunks_exact(c).zip(xhat.data.chunks_exact(c)) {
+                    for (((sd, sdx), &s), &xh) in sum_dy
+                        .iter_mut()
+                        .zip(sum_dy_xhat.iter_mut())
+                        .zip(grow)
+                        .zip(xhrow)
+                    {
+                        *sd += s;
+                        *sdx += s * xh;
+                    }
                 }
                 {
                     let dx_slot = store.grad_mut(x.0);
-                    for (i, &s) in g.iter().enumerate() {
-                        let ch = i % c;
-                        let mf = m as f32;
-                        let dx = saved_scale.data[ch] * inv_s[ch] / mf
-                            * (mf * s - sum_dy[ch] - xhat.data[i] * sum_dy_xhat[ch]);
-                        dx_slot[i] += dx;
+                    let mf = m as f32;
+                    for ((dxrow, grow), xhrow) in dx_slot
+                        .chunks_exact_mut(c)
+                        .zip(g.chunks_exact(c))
+                        .zip(xhat.data.chunks_exact(c))
+                    {
+                        for ch in 0..c {
+                            let dx = saved_scale.data[ch] * inv_s[ch] / mf
+                                * (mf * grow[ch] - sum_dy[ch] - xhrow[ch] * sum_dy_xhat[ch]);
+                            dxrow[ch] += dx;
+                        }
                     }
                 }
                 store.acc(scale.0, &sum_dy_xhat);
@@ -811,8 +837,8 @@ impl Tape {
         debug_assert_eq!(a.len(), c);
         let _p = profile::time(Op::BatchNorm);
         let mut data = self.alloc_raw(xv.elem_count());
-        for (i, (d, &v)) in data.iter_mut().zip(&xv.data).enumerate() {
-            *d = v * a[i % c] + b[i % c];
+        for (drow, xrow) in data.chunks_exact_mut(c).zip(xv.data.chunks_exact(c)) {
+            affine_row(drow, xrow, &a, &b);
         }
         let val = Tensor::new(xv.shape.clone(), data);
         self.push(
@@ -820,8 +846,8 @@ impl Tape {
             Some(Box::new(move |g, store| {
                 let _p = profile::time(Op::BatchNorm);
                 let dx = store.grad_mut(x.0);
-                for (i, &s) in g.iter().enumerate() {
-                    dx[i] += s * a[i % c];
+                for (dxrow, grow) in dx.chunks_exact_mut(c).zip(g.chunks_exact(c)) {
+                    fma_row(dxrow, grow, &a);
                 }
             })),
         )
@@ -1028,14 +1054,13 @@ impl Tape {
         let ste: Vec<bool> = quants.iter().map(|&q| q != QuantKind::Zero).collect();
         let mut y = self.alloc_zeroed(c * f);
         for r in 0..c {
+            let yrow = &mut y[r * f..(r + 1) * f];
             for (col, q) in qs.iter().enumerate() {
                 let p = pv.data[r * k + col];
                 if p == 0.0 {
                     continue;
                 }
-                for i in 0..f {
-                    y[r * f + i] += p * q.data[r * f + i];
-                }
+                axpy_row(yrow, p, &q.data[r * f..(r + 1) * f]);
             }
         }
         let val = Tensor::new(vec![c, f], y);
@@ -1043,7 +1068,7 @@ impl Tape {
         self.push(
             val,
             Some(Box::new(move |g, store| {
-                let _p = profile::time(Op::Quant);
+                let _p = profile::time(Op::QuantBwd);
                 for r in 0..c {
                     // STE: each weight-carrying branch passes g through
                     // scaled by its probability; Zero branches drop it.
@@ -1084,6 +1109,7 @@ impl Tape {
         self.push(
             val,
             Some(Box::new(move |g, store| {
+                let _p = profile::time(Op::QuantBwd);
                 store.acc(w.0, g);
             })),
         )
@@ -1268,10 +1294,70 @@ pub(crate) fn same_geometry(h: usize, w: usize, k: usize, stride: usize) -> (usi
     (oh, ow, pad_total / 2)
 }
 
+// Per-row elementwise panels shared by the depthwise conv, batch-norm
+// and effective-weight loops. Under `simd-kernels` they dispatch to the
+// 8-lane helpers in [`super::tensor::simd`]; the scalar loop and the
+// vector main-loop-plus-tail compute identical bits (pure elementwise
+// maps, no reduction reordering), so these are unconditionally safe for
+// the determinism contract.
+
+/// `y[j] += x[j] * w[j]`.
+#[inline]
+fn fma_row(y: &mut [f32], x: &[f32], w: &[f32]) {
+    #[cfg(feature = "simd-kernels")]
+    if super::tensor::simd_enabled() {
+        super::tensor::simd::fma_slice(y, x, w);
+        return;
+    }
+    for ((yv, &xv), &wv) in y.iter_mut().zip(x).zip(w) {
+        *yv += xv * wv;
+    }
+}
+
+/// `y[j] += alpha * x[j]`.
+#[inline]
+fn axpy_row(y: &mut [f32], alpha: f32, x: &[f32]) {
+    #[cfg(feature = "simd-kernels")]
+    if super::tensor::simd_enabled() {
+        super::tensor::simd::axpy_slice(y, alpha, x);
+        return;
+    }
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += alpha * xv;
+    }
+}
+
+/// `out[j] = (x[j] - m[j]) * s[j]`.
+#[inline]
+fn sub_mul_row(out: &mut [f32], x: &[f32], m: &[f32], s: &[f32]) {
+    #[cfg(feature = "simd-kernels")]
+    if super::tensor::simd_enabled() {
+        super::tensor::simd::sub_mul_slice(out, x, m, s);
+        return;
+    }
+    for (((o, &xv), &mv), &sv) in out.iter_mut().zip(x).zip(m).zip(s) {
+        *o = (xv - mv) * sv;
+    }
+}
+
+/// `out[j] = x[j] * a[j] + b[j]`.
+#[inline]
+fn affine_row(out: &mut [f32], x: &[f32], a: &[f32], b: &[f32]) {
+    #[cfg(feature = "simd-kernels")]
+    if super::tensor::simd_enabled() {
+        super::tensor::simd::affine_slice(out, x, a, b);
+        return;
+    }
+    for (((o, &xv), &av), &bv) in out.iter_mut().zip(x).zip(a).zip(b) {
+        *o = xv * av + bv;
+    }
+}
+
 /// Fill the patch matrix `[n·oh·ow, k·k·cin]` (column layout
 /// `(ky·k+kx)·cin + ci`). `cols` must be zeroed — padding taps are
-/// skipped, not written.
-fn im2col_into(x: &Tensor, k: usize, stride: usize, cols: &mut [f32]) {
+/// skipped, not written. `pub(crate)`: the quantized inference path
+/// ([`super::qkernels`]) lowers its convs through the same patch fill.
+pub(crate) fn im2col_into(x: &Tensor, k: usize, stride: usize, cols: &mut [f32]) {
     let (n, h, w, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let (oh, ow, pad) = same_geometry(h, w, k, stride);
     let f = k * k * cin;
@@ -1387,9 +1473,7 @@ fn dw_forward(
                         let src = ((b * h + iy as usize) * ww + ix as usize) * c;
                         let xrow = &x[src..src + c];
                         let yout = &mut yrow[ox * c..(ox + 1) * c];
-                        for ((yv, &xv), &wv) in yout.iter_mut().zip(xrow).zip(wrow) {
-                            *yv += xv * wv;
-                        }
+                        fma_row(yout, xrow, wrow);
                     }
                 }
             }
@@ -1437,13 +1521,9 @@ fn dw_backward(
                         let wrow = &wt[wi * c..(wi + 1) * c];
                         let xrow = &x[src..src + c];
                         let dxrow = &mut dx[src..src + c];
-                        for ((dv, &gv), &wv) in dxrow.iter_mut().zip(grow).zip(wrow) {
-                            *dv += gv * wv;
-                        }
+                        fma_row(dxrow, grow, wrow);
                         let dwrow = &mut dwt[wi * c..(wi + 1) * c];
-                        for ((dv, &gv), &xv) in dwrow.iter_mut().zip(grow).zip(xrow) {
-                            *dv += gv * xv;
-                        }
+                        fma_row(dwrow, grow, xrow);
                     }
                 }
             }

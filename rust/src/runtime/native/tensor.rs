@@ -21,6 +21,23 @@
 //! computed by exactly one lane with a lane-count-independent
 //! accumulation order, so results are bit-identical for any worker
 //! count — the property the engine's determinism contract rests on.
+//!
+//! With the `simd-kernels` cargo feature the public entry points
+//! dispatch to the register-tiled microkernels in [`simd`] instead:
+//! portable [`simd::F32x8`] lanes (fixed-size arrays the
+//! autovectorizer maps onto vector registers) with the output tile
+//! kept in registers across the whole reduction loop. The scalar
+//! kernels remain compiled in as the bit-identity reference —
+//! [`matmul_into_scalar`] and friends — and the SIMD path is pinned
+//! against them by relative-error tolerance tests (`tests/kernels.rs`).
+//! Per output element the SIMD kernels accumulate in the same index
+//! order as the scalar ones, so the lane-count determinism contract
+//! holds under either build; only scalar-vs-SIMD bits may differ (the
+//! scalar axpy kernels skip exact-zero multipliers, which can flip a
+//! signed zero). [`set_simd_enabled`] is a bench-only escape hatch so
+//! one `simd-kernels` binary can measure both paths; it is process
+//! global — tests compare [`simd`] and `*_scalar` functions directly
+//! instead of toggling it.
 
 use super::pool::KernelScope;
 
@@ -68,8 +85,109 @@ const MR: usize = 4;
 /// Independent accumulators per dot product (must divide SIMD widths).
 const LANES: usize = 8;
 
+// ---------------------------------------------------------------------------
+// dispatch: scalar bit-identity reference vs feature-gated SIMD microkernels
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "simd-kernels")]
+mod toggle {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static SIMD: AtomicBool = AtomicBool::new(true);
+
+    /// Whether the public kernel entry points take the SIMD path
+    /// (default: yes under `simd-kernels`).
+    pub fn simd_enabled() -> bool {
+        SIMD.load(Ordering::Relaxed)
+    }
+
+    /// Bench-only: flip the dispatch so one binary can time both paths.
+    /// Process-global — never call from concurrent tests.
+    pub fn set_simd_enabled(on: bool) {
+        SIMD.store(on, Ordering::Relaxed)
+    }
+}
+
+#[cfg(feature = "simd-kernels")]
+pub use toggle::{set_simd_enabled, simd_enabled};
+
 /// `C[m,n] = A[m,k] · B[k,n]`, overwriting `c`.
 pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    #[cfg(feature = "simd-kernels")]
+    if simd_enabled() {
+        simd::matmul_into(a, b, c, m, k, n);
+        return;
+    }
+    matmul_into_scalar(a, b, c, m, k, n);
+}
+
+/// `C[m,n] = A[m,k] · B[n,k]ᵀ` (row-by-row dot products), overwriting `c`.
+pub fn matmul_bt_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    #[cfg(feature = "simd-kernels")]
+    if simd_enabled() {
+        simd::matmul_bt_into(a, b, c, m, k, n);
+        return;
+    }
+    matmul_bt_into_scalar(a, b, c, m, k, n);
+}
+
+/// `C[k,n] = A[m,k]ᵀ · B[m,n]` (rank-1 accumulation over rows of A/B),
+/// overwriting `c`.
+pub fn matmul_at_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(c.len(), k * n);
+    matmul_at_rows(a, b, c, m, k, n, 0, k);
+}
+
+/// Rows `i0..i1` of `C[k,n] = A[m,k]ᵀ · B[m,n]` into `chunk` (the
+/// shard primitive behind [`par_matmul_at_into`]).
+pub fn matmul_at_rows(
+    a: &[f32],
+    b: &[f32],
+    chunk: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    i0: usize,
+    i1: usize,
+) {
+    #[cfg(feature = "simd-kernels")]
+    if simd_enabled() {
+        simd::matmul_at_rows(a, b, chunk, m, k, n, i0, i1);
+        return;
+    }
+    matmul_at_rows_scalar(a, b, chunk, m, k, n, i0, i1);
+}
+
+/// `y += α·x` element-wise (the optimizer's axpy). Dispatches like the
+/// matmuls; the SIMD lane loop computes the scalar loop's exact bits
+/// (`a + (−b)·c` and `a − b·c` are identical in IEEE-754), so this is
+/// safe in the determinism-critical update path under either build.
+pub fn axpy_into(y: &mut [f32], alpha: f32, x: &[f32]) {
+    #[cfg(feature = "simd-kernels")]
+    if simd_enabled() {
+        simd::axpy_slice(y, alpha, x);
+        return;
+    }
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += alpha * xv;
+    }
+}
+
+/// `y = c·y + x` element-wise (the SGD momentum recurrence). Same
+/// bit-identity argument as [`axpy_into`].
+pub fn scale_add_into(y: &mut [f32], c: f32, x: &[f32]) {
+    #[cfg(feature = "simd-kernels")]
+    if simd_enabled() {
+        simd::scale_add_slice(y, c, x);
+        return;
+    }
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv = c * *yv + xv;
+    }
+}
+
+/// Scalar reference for [`matmul_into`] (always compiled).
+pub fn matmul_into_scalar(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
@@ -94,8 +212,8 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
     }
 }
 
-/// `C[m,n] = A[m,k] · B[n,k]ᵀ` (row-by-row dot products), overwriting `c`.
-pub fn matmul_bt_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+/// Scalar reference for [`matmul_bt_into`] (always compiled).
+pub fn matmul_bt_into_scalar(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(c.len(), m * n);
@@ -108,21 +226,38 @@ pub fn matmul_bt_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n
     }
 }
 
-/// `C[k,n] = A[m,k]ᵀ · B[m,n]` (rank-1 accumulation over rows of A/B),
-/// overwriting `c`.
-pub fn matmul_at_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+/// Scalar reference for [`matmul_at_into`] (always compiled):
+/// `C = Aᵀ·B` over the full row range.
+pub fn matmul_at_into_scalar(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(c.len(), k * n);
+    matmul_at_rows_scalar(a, b, c, m, k, n, 0, k);
+}
+
+/// Scalar reference for [`matmul_at_rows`]: rows `i0..i1` of
+/// `C[k,n] = A[m,k]ᵀ · B[m,n]` into `chunk`, accumulating rank-1
+/// updates over `r` in index order (lane-count independent).
+pub fn matmul_at_rows_scalar(
+    a: &[f32],
+    b: &[f32],
+    chunk: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    i0: usize,
+    i1: usize,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), m * n);
-    debug_assert_eq!(c.len(), k * n);
-    c.iter_mut().for_each(|x| *x = 0.0);
+    debug_assert!(chunk.len() >= (i1 - i0) * n);
+    chunk[..(i1 - i0) * n].iter_mut().for_each(|x| *x = 0.0);
     for r in 0..m {
         let brow = &b[r * n..(r + 1) * n];
-        for i in 0..k {
+        for i in i0..i1 {
             let ari = a[r * k + i];
             if ari == 0.0 {
                 continue;
             }
-            let crow = &mut c[i * n..(i + 1) * n];
+            let crow = &mut chunk[(i - i0) * n..(i - i0 + 1) * n];
             for (cv, &bv) in crow.iter_mut().zip(brow) {
                 *cv += ari * bv;
             }
@@ -255,21 +390,356 @@ pub fn par_matmul_at_into(
 ) {
     debug_assert_eq!(c.len(), k * n);
     par_rows(c, k, n, scope, |i0, i1, chunk| {
-        chunk.iter_mut().for_each(|x| *x = 0.0);
-        for r in 0..m {
-            let brow = &b[r * n..(r + 1) * n];
-            for i in i0..i1 {
-                let ari = a[r * k + i];
-                if ari == 0.0 {
-                    continue;
-                }
-                let crow = &mut chunk[(i - i0) * n..(i - i0 + 1) * n];
-                for (cv, &bv) in crow.iter_mut().zip(brow) {
-                    *cv += ari * bv;
+        matmul_at_rows(a, b, chunk, m, k, n, i0, i1);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// feature-gated SIMD microkernels
+// ---------------------------------------------------------------------------
+
+/// Register-tiled microkernels on portable 8-lane f32 vectors.
+///
+/// [`F32x8`] is a plain aligned `[f32; 8]` with elementwise ops — the
+/// fixed lane count and straight-line lane loops pin the autovectorizer
+/// to one vector register per value, without arch intrinsics. The
+/// kernels keep the output tile in registers across the whole reduction
+/// loop, so C-row load/store traffic (the dominant cost of the scalar
+/// axpy panels) disappears and each streamed B row feeds `MR_S` rows ×
+/// 16 columns of output.
+///
+/// Per output element the reduction index order matches the scalar
+/// kernels exactly, and `mul_add` is a separate multiply-then-add (no
+/// fused FMA), so the only scalar-vs-SIMD divergence is the scalar
+/// kernels' skip of exact-zero multipliers (a signed-zero difference at
+/// most for the axpy forms). The dot-product kernel reuses the scalar
+/// split-accumulator recipe verbatim per dot. Column tiling depends
+/// only on `n` and per-element accumulators are private registers, so
+/// `par_rows` sharding stays bit-identical for any lane count.
+#[cfg(feature = "simd-kernels")]
+pub mod simd {
+    use super::dot;
+
+    /// Rows per register tile.
+    const MR_S: usize = 4;
+    /// Columns per register tile (two 8-lane vectors).
+    const NB: usize = 16;
+
+    /// Portable 8-lane f32 vector: an aligned array the autovectorizer
+    /// lowers to one 256-bit (or two 128-bit) register(s).
+    #[derive(Debug, Clone, Copy)]
+    #[repr(align(32))]
+    pub struct F32x8(pub [f32; 8]);
+
+    impl F32x8 {
+        pub const LANES: usize = 8;
+
+        #[inline(always)]
+        pub fn zero() -> F32x8 {
+            F32x8([0.0; 8])
+        }
+
+        #[inline(always)]
+        pub fn splat(v: f32) -> F32x8 {
+            F32x8([v; 8])
+        }
+
+        /// Load the first 8 elements of `s`.
+        #[inline(always)]
+        pub fn load(s: &[f32]) -> F32x8 {
+            let mut v = [0.0f32; 8];
+            v.copy_from_slice(&s[..8]);
+            F32x8(v)
+        }
+
+        /// Store into the first 8 elements of `d`.
+        #[inline(always)]
+        pub fn store(self, d: &mut [f32]) {
+            d[..8].copy_from_slice(&self.0);
+        }
+
+        /// Elementwise `self + a·b`, as a separate multiply then add —
+        /// the same per-lane arithmetic as the scalar kernels (never a
+        /// fused FMA, which would change the bits).
+        #[inline(always)]
+        #[must_use]
+        pub fn mul_add(self, a: F32x8, b: F32x8) -> F32x8 {
+            let mut o = self.0;
+            for l in 0..Self::LANES {
+                o[l] += a.0[l] * b.0[l];
+            }
+            F32x8(o)
+        }
+
+        /// Horizontal sum by the same pairwise halving tree the scalar
+        /// `dot` uses, so vector dots reduce in identical order.
+        #[inline(always)]
+        pub fn hsum(self) -> f32 {
+            let mut acc = self.0;
+            let mut width = Self::LANES;
+            while width > 1 {
+                width /= 2;
+                for l in 0..width {
+                    acc[l] += acc[l + width];
                 }
             }
+            acc[0]
         }
-    });
+    }
+
+    /// SIMD `C[m,n] = A[m,k] · B[k,n]`: MR_S×16 output tile in
+    /// registers, k-loop streams one B row per step.
+    pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        let n_main = n - n % NB;
+        let mut i0 = 0;
+        while i0 < m {
+            let i1 = (i0 + MR_S).min(m);
+            let rows = i1 - i0;
+            let mut j = 0;
+            while j < n_main {
+                let mut acc = [[F32x8::zero(); 2]; MR_S];
+                for p in 0..k {
+                    let b0 = F32x8::load(&b[p * n + j..]);
+                    let b1 = F32x8::load(&b[p * n + j + 8..]);
+                    for (r, accr) in acc.iter_mut().enumerate().take(rows) {
+                        let av = F32x8::splat(a[(i0 + r) * k + p]);
+                        accr[0] = accr[0].mul_add(av, b0);
+                        accr[1] = accr[1].mul_add(av, b1);
+                    }
+                }
+                for (r, accr) in acc.iter().enumerate().take(rows) {
+                    let off = (i0 + r) * n + j;
+                    accr[0].store(&mut c[off..]);
+                    accr[1].store(&mut c[off + 8..]);
+                }
+                j += NB;
+            }
+            if j < n {
+                // tail columns: scalar, same p-order accumulation
+                for r in 0..rows {
+                    let arow = &a[(i0 + r) * k..(i0 + r + 1) * k];
+                    let crow = &mut c[(i0 + r) * n + j..(i0 + r) * n + n];
+                    crow.iter_mut().for_each(|x| *x = 0.0);
+                    for (p, &ap) in arow.iter().enumerate() {
+                        if ap == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[p * n + j..p * n + n];
+                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                            *cv += ap * bv;
+                        }
+                    }
+                }
+            }
+            i0 = i1;
+        }
+    }
+
+    /// SIMD `C[m,n] = A[m,k] · B[n,k]ᵀ`: four dots share one streamed A
+    /// row; per dot the chunk/hsum/remainder recipe is the scalar
+    /// `dot`'s, so each output element's bits match the scalar kernel.
+    pub fn matmul_bt_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        debug_assert_eq!(c.len(), m * n);
+        const NR_S: usize = 4;
+        let k_main = k - k % F32x8::LANES;
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            let mut j = 0;
+            while j + NR_S <= n {
+                let mut acc = [F32x8::zero(); NR_S];
+                let mut p = 0;
+                while p < k_main {
+                    let xv = F32x8::load(&arow[p..]);
+                    for (t, at) in acc.iter_mut().enumerate() {
+                        *at = at.mul_add(xv, F32x8::load(&b[(j + t) * k + p..]));
+                    }
+                    p += F32x8::LANES;
+                }
+                for (t, at) in acc.iter().enumerate() {
+                    let mut s = at.hsum();
+                    for q in k_main..k {
+                        s += arow[q] * b[(j + t) * k + q];
+                    }
+                    crow[j + t] = s;
+                }
+                j += NR_S;
+            }
+            for jj in j..n {
+                crow[jj] = dot(arow, &b[jj * k..(jj + 1) * k]);
+            }
+        }
+    }
+
+    /// SIMD rows `i0..i1` of `C[k,n] = A[m,k]ᵀ · B[m,n]`: MR_S×16
+    /// register tile, rank-1 updates streamed over `r` in index order.
+    pub fn matmul_at_rows(
+        a: &[f32],
+        b: &[f32],
+        chunk: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        i0: usize,
+        i1: usize,
+    ) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), m * n);
+        debug_assert!(chunk.len() >= (i1 - i0) * n);
+        chunk[..(i1 - i0) * n].iter_mut().for_each(|x| *x = 0.0);
+        let n_main = n - n % NB;
+        let mut ib = i0;
+        while ib < i1 {
+            let ie = (ib + MR_S).min(i1);
+            let rows = ie - ib;
+            let mut j = 0;
+            while j < n_main {
+                let mut acc = [[F32x8::zero(); 2]; MR_S];
+                for r in 0..m {
+                    let b0 = F32x8::load(&b[r * n + j..]);
+                    let b1 = F32x8::load(&b[r * n + j + 8..]);
+                    for (t, acct) in acc.iter_mut().enumerate().take(rows) {
+                        let av = F32x8::splat(a[r * k + ib + t]);
+                        acct[0] = acct[0].mul_add(av, b0);
+                        acct[1] = acct[1].mul_add(av, b1);
+                    }
+                }
+                for (t, acct) in acc.iter().enumerate().take(rows) {
+                    let off = (ib - i0 + t) * n + j;
+                    acct[0].store(&mut chunk[off..]);
+                    acct[1].store(&mut chunk[off + 8..]);
+                }
+                j += NB;
+            }
+            if j < n {
+                for r in 0..m {
+                    let brow = &b[r * n + j..r * n + n];
+                    for t in 0..rows {
+                        let ari = a[r * k + ib + t];
+                        if ari == 0.0 {
+                            continue;
+                        }
+                        let off = (ib - i0 + t) * n;
+                        let crow = &mut chunk[off + j..off + n];
+                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                            *cv += ari * bv;
+                        }
+                    }
+                }
+            }
+            ib = ie;
+        }
+    }
+
+    /// SIMD `C = Aᵀ·B` over the full row range (tests/benches).
+    pub fn matmul_at_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(c.len(), k * n);
+        matmul_at_rows(a, b, c, m, k, n, 0, k);
+    }
+
+    // -- elementwise panels (dw-conv taps, batch-norm rows) ----------------
+    //
+    // These are pure elementwise maps, so the 8-lane main loop plus a
+    // scalar tail computes exactly the scalar kernels' bits — they are
+    // speed, not a numerics variant.
+
+    /// `y[j] += alpha * x[j]` — axpy (quant-branch mix, SGD update).
+    pub fn axpy_slice(y: &mut [f32], alpha: f32, x: &[f32]) {
+        let n = y.len();
+        debug_assert_eq!(x.len(), n);
+        let av = F32x8::splat(alpha);
+        let main = n - n % F32x8::LANES;
+        let mut j = 0;
+        while j < main {
+            let acc = F32x8::load(&y[j..]).mul_add(av, F32x8::load(&x[j..]));
+            acc.store(&mut y[j..]);
+            j += F32x8::LANES;
+        }
+        for jj in main..n {
+            y[jj] += alpha * x[jj];
+        }
+    }
+
+    /// `y[j] = c * y[j] + x[j]` — the SGD momentum recurrence.
+    pub fn scale_add_slice(y: &mut [f32], c: f32, x: &[f32]) {
+        let n = y.len();
+        debug_assert_eq!(x.len(), n);
+        let cv = F32x8::splat(c);
+        let main = n - n % F32x8::LANES;
+        let mut j = 0;
+        while j < main {
+            let acc = F32x8::load(&x[j..]).mul_add(cv, F32x8::load(&y[j..]));
+            acc.store(&mut y[j..]);
+            j += F32x8::LANES;
+        }
+        for jj in main..n {
+            y[jj] = c * y[jj] + x[jj];
+        }
+    }
+
+    /// `y[j] += x[j] * w[j]` — one depthwise-conv tap over a channel row.
+    pub fn fma_slice(y: &mut [f32], x: &[f32], w: &[f32]) {
+        let n = y.len();
+        debug_assert_eq!(x.len(), n);
+        debug_assert_eq!(w.len(), n);
+        let main = n - n % F32x8::LANES;
+        let mut j = 0;
+        while j < main {
+            let acc = F32x8::load(&y[j..]).mul_add(F32x8::load(&x[j..]), F32x8::load(&w[j..]));
+            acc.store(&mut y[j..]);
+            j += F32x8::LANES;
+        }
+        for jj in main..n {
+            y[jj] += x[jj] * w[jj];
+        }
+    }
+
+    /// `out[j] = (x[j] - m[j]) * s[j]` — batch-norm x̂ row.
+    pub fn sub_mul_slice(out: &mut [f32], x: &[f32], m: &[f32], s: &[f32]) {
+        let n = out.len();
+        debug_assert_eq!(x.len(), n);
+        debug_assert_eq!(m.len(), n);
+        debug_assert_eq!(s.len(), n);
+        let main = n - n % F32x8::LANES;
+        let mut j = 0;
+        while j < main {
+            let xv = F32x8::load(&x[j..]);
+            let mv = F32x8::load(&m[j..]);
+            let sv = F32x8::load(&s[j..]);
+            let mut o = [0.0f32; F32x8::LANES];
+            for l in 0..F32x8::LANES {
+                o[l] = (xv.0[l] - mv.0[l]) * sv.0[l];
+            }
+            F32x8(o).store(&mut out[j..]);
+            j += F32x8::LANES;
+        }
+        for jj in main..n {
+            out[jj] = (x[jj] - m[jj]) * s[jj];
+        }
+    }
+
+    /// `out[j] = x[j] * a[j] + b[j]` — folded affine / BN scale-shift row.
+    pub fn affine_slice(out: &mut [f32], x: &[f32], a: &[f32], b: &[f32]) {
+        let n = out.len();
+        debug_assert_eq!(x.len(), n);
+        debug_assert_eq!(a.len(), n);
+        debug_assert_eq!(b.len(), n);
+        let main = n - n % F32x8::LANES;
+        let mut j = 0;
+        while j < main {
+            let acc = F32x8::load(&b[j..]).mul_add(F32x8::load(&x[j..]), F32x8::load(&a[j..]));
+            acc.store(&mut out[j..]);
+            j += F32x8::LANES;
+        }
+        for jj in main..n {
+            out[jj] = x[jj] * a[jj] + b[jj];
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,299 @@
+//! Kernel edge-shape and SIMD-agreement tests.
+//!
+//! The scalar matmul kernels are the engine's bit-identity determinism
+//! reference; the `simd-kernels` build must agree with them everywhere.
+//! Per element the register tiles accumulate in the same order as the
+//! scalar kernels, so the only permitted divergence is signed zeros
+//! (the scalar axpy panels skip zero multipliers, the SIMD tiles do
+//! not) — hence the matmul comparisons here are small-tolerance, the
+//! elementwise helpers exact. Every test drives shapes that hit the
+//! panel edges: m not divisible by the 4-row tile, n not divisible by
+//! the 16-column tile, k not divisible by the 8 lanes, single rows and
+//! single columns. The dispatcher tests run under *both* builds, so the
+//! default CI job pins the scalar path and the simd job the tiled one.
+
+use odimo::runtime::native::tensor::{
+    axpy_into, matmul_at_into, matmul_bt_into, matmul_into, scale_add_into,
+};
+use odimo::runtime::native::Tape;
+
+/// Deterministic pseudo-random fill in [-0.5, 0.5), with exact zeros
+/// sprinkled in so the scalar skip-zero branches execute.
+fn fill(len: usize, seed: u64) -> Vec<f32> {
+    let mut st = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+    (0..len)
+        .map(|i| {
+            st = st
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            if i % 7 == 3 {
+                0.0
+            } else {
+                ((st >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+            }
+        })
+        .collect()
+}
+
+fn assert_close(got: &[f32], want: &[f64], tol: f64, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let err = (g as f64 - w).abs();
+        assert!(
+            err <= tol * (1.0 + w.abs()),
+            "{what}[{i}]: got {g}, want {w} (err {err:.3e})"
+        );
+    }
+}
+
+fn naive_mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut c = vec![0.0f64; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p] as f64;
+            for j in 0..n {
+                c[i * n + j] += av * b[p * n + j] as f64;
+            }
+        }
+    }
+    c
+}
+
+fn naive_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut c = vec![0.0f64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            c[i * n + j] = (0..k)
+                .map(|p| a[i * k + p] as f64 * b[j * k + p] as f64)
+                .sum();
+        }
+    }
+    c
+}
+
+fn naive_at(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut c = vec![0.0f64; k * n];
+    for r in 0..m {
+        for i in 0..k {
+            let av = a[r * k + i] as f64;
+            for j in 0..n {
+                c[i * n + j] += av * b[r * n + j] as f64;
+            }
+        }
+    }
+    c
+}
+
+/// Shapes straddling every panel boundary: 4-row tiles, 16-column
+/// blocks, 8-lane chunks, plus degenerate 1-row/1-column cases.
+const SHAPES: [(usize, usize, usize); 9] = [
+    (1, 1, 1),
+    (1, 17, 1),
+    (3, 8, 16),
+    (4, 16, 16),
+    (5, 9, 17),
+    (7, 23, 31),
+    (2, 5, 33),
+    (13, 64, 10),
+    (6, 144, 20),
+];
+
+#[test]
+fn matmul_dispatch_matches_naive_on_edge_shapes() {
+    for &(m, k, n) in &SHAPES {
+        let a = fill(m * k, 11 + (m * 31 + k * 7 + n) as u64);
+        let b = fill(k * n, 13 + (m + k * 5 + n * 3) as u64);
+        let mut c = vec![0.0f32; m * n];
+        matmul_into(&a, &b, &mut c, m, k, n);
+        assert_close(&c, &naive_mm(&a, &b, m, k, n), 1e-4, &format!("mm {m}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn matmul_bt_dispatch_matches_naive_on_edge_shapes() {
+    for &(m, k, n) in &SHAPES {
+        let a = fill(m * k, 17 + (m * 3 + k + n * 11) as u64);
+        let b = fill(n * k, 19 + (m + k * 13 + n) as u64);
+        let mut c = vec![0.0f32; m * n];
+        matmul_bt_into(&a, &b, &mut c, m, k, n);
+        assert_close(&c, &naive_bt(&a, &b, m, k, n), 1e-4, &format!("bt {m}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn matmul_at_dispatch_matches_naive_on_edge_shapes() {
+    for &(m, k, n) in &SHAPES {
+        let a = fill(m * k, 23 + (m * 7 + k * 3 + n) as u64);
+        let b = fill(m * n, 29 + (m + k + n * 17) as u64);
+        let mut c = vec![0.0f32; k * n];
+        matmul_at_into(&a, &b, &mut c, m, k, n);
+        assert_close(&c, &naive_at(&a, &b, m, k, n), 1e-4, &format!("at {m}x{k}x{n}"));
+    }
+}
+
+/// The optimizer helpers must be bit-exact against the plain loops
+/// under either build — they run inside the determinism contract.
+#[test]
+fn elementwise_helpers_are_bit_exact() {
+    for &len in &[1usize, 7, 8, 9, 16, 31, 100] {
+        let x = fill(len, 41 + len as u64);
+        let y0 = fill(len, 43 + len as u64);
+
+        let mut y = y0.clone();
+        axpy_into(&mut y, -0.37, &x);
+        for (j, (&yv, (&y0v, &xv))) in y.iter().zip(y0.iter().zip(&x)).enumerate() {
+            let want = y0v + (-0.37f32) * xv;
+            assert_eq!(yv.to_bits(), want.to_bits(), "axpy len {len} elem {j}");
+        }
+
+        let mut y = y0.clone();
+        scale_add_into(&mut y, 0.9, &x);
+        for (j, (&yv, (&y0v, &xv))) in y.iter().zip(y0.iter().zip(&x)).enumerate() {
+            let want = 0.9f32 * y0v + xv;
+            assert_eq!(yv.to_bits(), want.to_bits(), "scale_add len {len} elem {j}");
+        }
+    }
+}
+
+/// Depthwise conv through the tape with a channel count that divides
+/// neither the 8 SIMD lanes nor the 4-row panels, against a naive
+/// same-padding reference.
+#[test]
+fn dw_conv_odd_channels_matches_naive() {
+    let (nb, h, w, c, k, stride) = (2usize, 6usize, 6usize, 5usize, 3usize, 2usize);
+    let x = fill(nb * h * w * c, 53);
+    let wts = fill(c * k * k, 59);
+    let mut tape = Tape::new();
+    let xv = tape.leaf_copy(vec![nb, h, w, c], &x);
+    let wv = tape.leaf_copy(vec![c, k * k], &wts);
+    let y = tape.dw_conv2d(xv, wv, k, stride);
+    let yv = tape.val(y);
+
+    // same-padding geometry (matches runtime/native/tape.rs)
+    let oh = h.div_ceil(stride);
+    let ow = w.div_ceil(stride);
+    let pad = (((oh - 1) * stride + k).saturating_sub(h)) / 2;
+    let mut want = vec![0.0f64; nb * oh * ow * c];
+    for b in 0..nb {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..c {
+                    let mut acc = 0.0f64;
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let src = ((b * h + iy as usize) * w + ix as usize) * c + ch;
+                            acc += x[src] as f64 * wts[ch * k * k + ky * k + kx] as f64;
+                        }
+                    }
+                    want[((b * oh + oy) * ow + ox) * c + ch] = acc;
+                }
+            }
+        }
+    }
+    assert_eq!(yv.shape, vec![nb, oh, ow, c]);
+    assert_close(&yv.data, &want, 1e-5, "dw conv 5ch");
+}
+
+#[cfg(feature = "simd-kernels")]
+mod simd_vs_scalar {
+    use super::{fill, SHAPES};
+    use odimo::runtime::native::tensor::{
+        matmul_at_into_scalar, matmul_bt_into_scalar, matmul_into_scalar, simd,
+    };
+
+    /// The bt kernel shares the scalar `dot`'s chunk/halving-tree/
+    /// remainder recipe per output element — bit-identical, not merely
+    /// close.
+    #[test]
+    fn bt_kernel_is_bit_identical_to_scalar() {
+        for &(m, k, n) in &SHAPES {
+            let a = fill(m * k, 61 + (m + k + n) as u64);
+            let b = fill(n * k, 67 + (m * k) as u64);
+            let mut cs = vec![0.0f32; m * n];
+            let mut cv = vec![0.0f32; m * n];
+            matmul_bt_into_scalar(&a, &b, &mut cs, m, k, n);
+            simd::matmul_bt_into(&a, &b, &mut cv, m, k, n);
+            for (i, (s, v)) in cs.iter().zip(&cv).enumerate() {
+                assert_eq!(s.to_bits(), v.to_bits(), "bt {m}x{k}x{n} elem {i}");
+            }
+        }
+    }
+
+    /// The axpy-panel kernels keep per-element accumulation order, so
+    /// scalar and SIMD agree to (at most) signed-zero differences —
+    /// compared here with a zero-tolerance absolute check.
+    #[test]
+    fn axpy_kernels_match_scalar_exactly_in_value() {
+        for &(m, k, n) in &SHAPES {
+            let a = fill(m * k, 71 + (m * 5 + k + n) as u64);
+            let b = fill(k * n, 73 + (m + k + n * 7) as u64);
+            let mut cs = vec![0.0f32; m * n];
+            let mut cv = vec![0.0f32; m * n];
+            matmul_into_scalar(&a, &b, &mut cs, m, k, n);
+            simd::matmul_into(&a, &b, &mut cv, m, k, n);
+            for (i, (s, v)) in cs.iter().zip(&cv).enumerate() {
+                assert_eq!(*s, *v, "mm {m}x{k}x{n} elem {i} (values, not bits)");
+            }
+
+            let bt = fill(m * n, 79 + (m + k * 3 + n) as u64);
+            let mut cs = vec![0.0f32; k * n];
+            let mut cv = vec![0.0f32; k * n];
+            matmul_at_into_scalar(&a, &bt, &mut cs, m, k, n);
+            simd::matmul_at_into(&a, &bt, &mut cv, m, k, n);
+            for (i, (s, v)) in cs.iter().zip(&cv).enumerate() {
+                assert_eq!(*s, *v, "at {m}x{k}x{n} elem {i} (values, not bits)");
+            }
+        }
+    }
+
+    /// Elementwise lane helpers vs their scalar loops at lengths around
+    /// the 8-lane boundary — exact bits.
+    #[test]
+    fn elementwise_slices_are_bit_identical() {
+        for &len in &[1usize, 7, 8, 9, 15, 16, 17, 64, 100] {
+            let x = fill(len, 83 + len as u64);
+            let w = fill(len, 89 + len as u64);
+            let y0 = fill(len, 97 + len as u64);
+
+            let mut ys = y0.clone();
+            let mut yv = y0.clone();
+            for ((a, &b), &c) in ys.iter_mut().zip(&x).zip(&w) {
+                *a += b * c;
+            }
+            simd::fma_slice(&mut yv, &x, &w);
+            assert_eq!(ys, yv, "fma len {len}");
+
+            let mut ys = y0.clone();
+            let mut yv = y0.clone();
+            for (a, &b) in ys.iter_mut().zip(&x) {
+                *a += 0.25 * b;
+            }
+            simd::axpy_slice(&mut yv, 0.25, &x);
+            assert_eq!(ys, yv, "axpy len {len}");
+
+            let mut os = vec![0.0f32; len];
+            let mut ov = vec![0.0f32; len];
+            for (i, o) in os.iter_mut().enumerate() {
+                *o = (x[i] - w[i]) * y0[i];
+            }
+            simd::sub_mul_slice(&mut ov, &x, &w, &y0);
+            assert_eq!(os, ov, "sub_mul len {len}");
+
+            let mut os = vec![0.0f32; len];
+            let mut ov = vec![0.0f32; len];
+            for (i, o) in os.iter_mut().enumerate() {
+                *o = x[i] * w[i] + y0[i];
+            }
+            simd::affine_slice(&mut ov, &x, &w, &y0);
+            assert_eq!(os, ov, "affine len {len}");
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! Quantized-inference path tests: the `QuantNet` discretization of a
+//! trained state (`NativeBackend::quantize`) and its integer forward.
+//!
+//! The validation contract (see `runtime/native/qkernels.rs`):
+//!
+//! * stored `code · scale` reproduces the training forward's
+//!   `QuantKind::quant_row` output **bit-exactly** per weight row;
+//! * the genuinely-quantized forward (int8 activations, i32-accumulator
+//!   GEMM) tracks [`QuantNet::forward_f32_reference`] — the same
+//!   discretized network in f32 with unquantized activations — within a
+//!   documented tolerance: logits linf error ≤ 10% of `1 + max|logit|`.
+//!   The only divergence source is symmetric per-tensor activation
+//!   quantization (≤ 0.5/127 of each layer input's amax per element),
+//!   so the bound is loose by design and holds on every builtin SoC;
+//! * for `_fixed` variants (no θ) the f32 reference is semantically the
+//!   tape's eval forward, so its metrics must match
+//!   `ModelBackend::eval_batch` to accumulation-order noise.
+
+use odimo::datasets::{Split, SynthDataset};
+use odimo::runtime::native::qkernels::logits_metrics;
+use odimo::runtime::native::QuantKind;
+use odimo::runtime::{
+    ModelBackend, NativeBackend, NativeOptions, StepHparams, TrainState, WOptimizer,
+};
+
+fn hp() -> StepHparams {
+    StepHparams {
+        lam: 1e-7,
+        cost_sel: 0.0,
+        lr_w: 1e-2,
+        lr_th: 5e-2,
+    }
+}
+
+fn build(variant: &str) -> NativeBackend {
+    NativeBackend::build_with(
+        variant,
+        NativeOptions {
+            threads: 1,
+            w_optimizer: WOptimizer::SgdMomentum,
+        },
+    )
+    .expect("native variant")
+}
+
+/// Train a few steps so the state is no longer at init (BN stats moved,
+/// θ differentiated), then return it with a held-out batch.
+fn trained_state(be: &NativeBackend, steps: usize) -> (TrainState, Vec<f32>, Vec<i32>) {
+    let m = be.manifest();
+    let ds = SynthDataset::from_name(&m.dataset.name, m.dataset.hw, m.dataset.classes, 9);
+    let mut state = be.init_state(21).expect("init");
+    for i in 0..steps {
+        let (x, y) = ds.batch(Split::Train, i as u64, m.dataset.batch);
+        be.train_step(&mut state, &x, &y, hp()).expect("step");
+    }
+    let (x, y) = ds.batch(Split::Test, 0, m.dataset.batch);
+    (state, x, y)
+}
+
+/// `code · scale` must equal the fake-quant `quant_row` output bit for
+/// bit on every integer row; Identity rows carry no codes; Zero rows
+/// dequantize to exact zeros.
+#[test]
+fn codes_times_scale_match_quant_row_bit_exactly() {
+    for variant in ["diana_tiny_tiny", "gap9_tiny_tiny", "trident_tiny_tiny"] {
+        let be = build(variant);
+        let (state, _, _) = trained_state(&be, 2);
+        let qnet = be.quantize(&state).expect("quantize");
+        let spec = qnet.spec();
+        for gi in 0..spec.n_convs() {
+            let ql = qnet.layer(gi);
+            let f = spec.fan_in(gi);
+            for (r, &kind) in ql.kinds.iter().enumerate() {
+                let deq = &ql.w_deq[r * f..(r + 1) * f];
+                let codes = &ql.codes[r * f..(r + 1) * f];
+                match kind {
+                    QuantKind::Int8 | QuantKind::Ternary => {
+                        for (c, (&code, &d)) in codes.iter().zip(deq).enumerate() {
+                            let got = code as f32 * ql.scales[r];
+                            assert_eq!(
+                                got.to_bits(),
+                                d.to_bits(),
+                                "{variant} g{gi} row {r} col {c}: {got} vs quant_row {d}"
+                            );
+                        }
+                        if kind == QuantKind::Ternary {
+                            assert!(codes.iter().all(|&c| (-1..=1).contains(&c)));
+                        }
+                    }
+                    QuantKind::Zero => {
+                        assert!(deq.iter().all(|&d| d == 0.0), "{variant} g{gi} row {r}");
+                        assert!(codes.iter().all(|&c| c == 0));
+                    }
+                    QuantKind::Identity => {
+                        assert!(codes.iter().all(|&c| c == 0), "{variant} g{gi} row {r}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The integer forward vs the f32 fake-quant reference on every builtin
+/// SoC's supernet, plus the `_fixed`/`_prune`/`_layerwise` spaces: linf
+/// logits error within the documented activation-quantization budget.
+#[test]
+fn quantized_forward_tracks_f32_reference_on_all_socs() {
+    let variants = [
+        "diana_tiny_tiny",
+        "darkside_tiny_tiny",
+        "trident_tiny_tiny",
+        "gap9_tiny_tiny",
+        "diana_tiny_tiny_fixed",
+        "diana_tiny_tiny_prune",
+        "gap9_tiny_tiny_layerwise",
+    ];
+    for variant in variants {
+        let be = build(variant);
+        let (state, x, y) = trained_state(&be, 2);
+        let n = y.len();
+        let qnet = be.quantize(&state).expect("quantize");
+        let lq = qnet.forward(&x, n);
+        let lf = qnet.forward_f32_reference(&x, n);
+        assert_eq!(lq.len(), n * qnet.spec().classes);
+        assert!(lf.iter().all(|v| v.is_finite()), "{variant}: reference logits");
+        let amax = lf.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let tol = 0.10 * (1.0 + amax);
+        for (i, (&q, &f)) in lq.iter().zip(&lf).enumerate() {
+            assert!(q.is_finite(), "{variant}: quantized logit {i} not finite");
+            assert!(
+                (q - f).abs() <= tol,
+                "{variant} logit {i}: quantized {q} vs reference {f} (tol {tol})"
+            );
+        }
+    }
+}
+
+/// On a `_fixed` variant (no θ anywhere) the discretized f32 reference
+/// is the same computation as the tape's eval forward — its metrics must
+/// agree with `eval_batch` up to accumulation-order noise, and the
+/// genuinely-quantized metrics must stay close.
+#[test]
+fn fixed_variant_metrics_tie_into_tape_eval() {
+    let be = build("diana_tiny_tiny_fixed");
+    let (state, x, y) = trained_state(&be, 3);
+    let n = y.len();
+
+    let tape_metrics = be.eval_batch(&state, &x, &y).expect("eval");
+    let qnet = be.quantize(&state).expect("quantize");
+    let lf = qnet.forward_f32_reference(&x, n);
+    let (ref_correct, ref_loss) = logits_metrics(&lf, &y, qnet.spec().classes);
+
+    // f32 reference vs tape: same math, different accumulation order
+    assert_eq!(
+        ref_correct, tape_metrics[0],
+        "reference correct-count vs tape eval"
+    );
+    let loss_err = (ref_loss - tape_metrics[1]).abs();
+    assert!(
+        loss_err <= 1e-3 * (1.0 + tape_metrics[1].abs()),
+        "reference loss {ref_loss} vs tape {} (err {loss_err})",
+        tape_metrics[1]
+    );
+
+    // integer forward: same metric pair through the public entry point,
+    // close to the reference (activation quantization only)
+    let qm = be.eval_batch_quantized(&state, &x, &y).expect("qeval");
+    assert_eq!(qm.len(), 2);
+    assert!(qm[0] >= 0.0 && qm[0] <= n as f32, "correct = {}", qm[0]);
+    assert!(qm[1].is_finite() && qm[1] > 0.0, "loss = {}", qm[1]);
+    let dl = (qm[1] - ref_loss).abs();
+    assert!(
+        dl <= 0.15 * (1.0 + ref_loss),
+        "quantized loss {} vs reference {ref_loss} (Δ {dl})",
+        qm[1]
+    );
+    let dc = (qm[0] - ref_correct).abs();
+    assert!(
+        dc <= (n as f32 * 0.25).max(2.0),
+        "quantized correct {} vs reference {ref_correct}",
+        qm[0]
+    );
+}
+
+/// Prune-mode discretization: each searchable channel keeps the primary
+/// CU's quantizer iff its keep-logit wins, else the row is Zero — read
+/// straight off the θ leaves.
+#[test]
+fn prune_discretization_follows_theta() {
+    let be = build("diana_tiny_tiny_prune");
+    let (state, _, _) = trained_state(&be, 3);
+    let qnet = be.quantize(&state).expect("quantize");
+    let spec = qnet.spec();
+    let theta_leaves: Vec<Option<usize>> = (0..spec.n_convs())
+        .map(|gi| {
+            let name = format!("params/{}/theta", spec.layers[gi].name);
+            be.state_specs().iter().position(|s| s.name == name)
+        })
+        .collect();
+    let mut searchable = 0;
+    for gi in 0..spec.n_convs() {
+        let ql = qnet.layer(gi);
+        let Some(tleaf) = theta_leaves[gi] else {
+            // non-searchable: primary CU everywhere
+            assert!(ql.kinds.iter().all(|&k| k == spec.quants[0]), "g{gi}");
+            continue;
+        };
+        searchable += 1;
+        let th = &state.leaves[tleaf];
+        assert_eq!(th.len(), ql.kinds.len() * 2);
+        for (r, &kind) in ql.kinds.iter().enumerate() {
+            let want = if th[r * 2] >= th[r * 2 + 1] {
+                spec.quants[0]
+            } else {
+                QuantKind::Zero
+            };
+            assert_eq!(kind, want, "g{gi} row {r}: θ = {:?}", &th[r * 2..r * 2 + 2]);
+        }
+    }
+    assert!(searchable > 0, "prune variant has no searchable geometry");
+}
