@@ -12,20 +12,28 @@
 //! from measured breakdowns instead of guesses.
 //!
 //! Regression gate: when `BENCH_CHECK=1` (set by the CI job) the bench
-//! compares the resnet8 single-thread *and* 4-thread steps/sec against
-//! the committed `rust/benches/native_train.baseline.json` and exits
-//! non-zero on a >10% regression on either. The committed baselines are
-//! conservative floors (machines differ); re-pin them from a CI run's
-//! emitted JSON whenever the engine gets deliberately faster.
+//! compares the resnet8 single-thread *and* 4-thread steps/sec, the 1-
+//! and 4-thread quantized evals/sec, the quantized 4-thread speedup
+//! ratio and the blocked-vs-naive qmatmul ratio against the committed
+//! `rust/benches/native_train.baseline.json` and exits non-zero on a
+//! >10% regression on any. The absolute floors are conservative
+//! (machines differ) — re-pin them from a CI run's emitted JSON
+//! whenever the engine gets deliberately faster; the two `_min` ratio
+//! floors are machine-independent and carry the acceptance criteria.
 //!
-//! Since the SIMD/quantization PR the JSON also carries:
+//! Since the SIMD/quantization PRs the JSON also carries:
 //!
 //! * `kernels` — isolated GFLOP/s of the three matmul microkernels on a
 //!   conv-like shape, scalar and (under `--features simd-kernels`) the
 //!   register-tiled SIMD variants called directly;
-//! * `quantized_*` — evals/sec of the real int8/ternary integer-GEMM
-//!   inference path next to the tape's f32 eval on the same state, with
-//!   a `per_op` entry pinning the `qmatmul` counter;
+//! * `qmatmul` — isolated integer-GEMM GOP/s at M=N=K=256 of the naive
+//!   reference vs the blocked tier vs (simd builds) the widening-lane
+//!   tier, plus the best-tier speedup over naive;
+//! * `quantized_evals_per_sec_threads{1,4}` — evals/sec of the real
+//!   int8/ternary integer-GEMM inference path (QuantNet built once,
+//!   batch shards on the persistent pool) next to the tape's f32 eval
+//!   on the same state and thread count, with a `per_op` entry pinning
+//!   the per-lane `qmatmul` counter;
 //! * `simd_speedup_threads1` (simd builds only) — single-thread resnet8
 //!   train speedup of the SIMD kernels over the scalar reference,
 //!   measured in one process via the runtime toggle.
@@ -197,11 +205,14 @@ fn per_op_quantized(variant: &str, evals: usize) -> Value {
     snapshot_value(evals)
 }
 
-/// Quantized-inference throughput: evals/sec of the int8/ternary
-/// integer-GEMM path next to the tape's f32 eval on the same state.
-/// Quantization runs once, outside the timed loop — deploy-style.
-fn quantized_eval_per_sec(variant: &str, budget: Duration) -> (f64, f64) {
-    let be = NativeBackend::build(variant).expect("native variant");
+/// Quantized-inference throughput at `threads` pool workers: evals/sec
+/// of the int8/ternary integer-GEMM path next to the tape's f32 eval on
+/// the same state and thread count. The `QuantNet` is built once,
+/// outside the timed loop — deploy-style (requantizing per batch was
+/// the bug the eval loop used to have), and runs its batch shards on
+/// the backend's persistent pool.
+fn quantized_eval_per_sec(variant: &str, threads: usize, budget: Duration) -> (f64, f64) {
+    let be = build(variant, threads);
     let m = be.manifest();
     let ds = odimo::datasets::SynthDataset::from_name(
         &m.dataset.name,
@@ -211,12 +222,18 @@ fn quantized_eval_per_sec(variant: &str, budget: Duration) -> (f64, f64) {
     );
     let (x, y) = ds.batch(odimo::datasets::Split::Val, 0, m.dataset.batch);
     let state = be.init_state(0).expect("init");
-    let rf = bench(&format!("eval_batch {variant} f32 t=1"), 1, budget, 200, || {
-        std::hint::black_box(be.eval_batch(&state, &x, &y).expect("eval"));
-    });
+    let rf = bench(
+        &format!("eval_batch {variant} f32 t={threads}"),
+        1,
+        budget,
+        200,
+        || {
+            std::hint::black_box(be.eval_batch(&state, &x, &y).expect("eval"));
+        },
+    );
     let qnet = be.quantize(&state).expect("quantize");
     let rq = bench(
-        &format!("eval_batch {variant} quantized t=1"),
+        &format!("eval_batch {variant} quantized t={threads}"),
         1,
         budget,
         200,
@@ -225,6 +242,61 @@ fn quantized_eval_per_sec(variant: &str, budget: Duration) -> (f64, f64) {
         },
     );
     (1e9 / rf.mean_ns, 1e9 / rq.mean_ns)
+}
+
+/// Isolated integer-GEMM tiers at M=N=K=256 (the acceptance shape):
+/// GOP/s of the naive reference, the blocked scalar tier and — under
+/// `simd-kernels` — the widening-lane tier, called directly. Returns
+/// the JSON section plus the best-tier speedup over naive (the
+/// acceptance metric: ≥ 3x).
+fn qmatmul_gops() -> (Value, f64) {
+    use odimo::runtime::native::qkernels;
+    let (m, k, n) = (256usize, 256usize, 256usize);
+    let fill = |len: usize, seed: u64| -> Vec<i8> {
+        let mut st = seed;
+        (0..len)
+            .map(|_| {
+                st = st
+                    .wrapping_mul(6364136223846793005)
+                    .wrapping_add(1442695040888963407);
+                ((st >> 40) as i64 % 255 - 127) as i8
+            })
+            .collect()
+    };
+    let a = fill(m * k, 7);
+    let b = fill(n * k, 8);
+    let mut c = vec![0i32; m * n];
+    let ops = 2.0 * (m * k * n) as f64;
+    let budget = Duration::from_millis(400);
+    println!("-- qmatmul integer GOP/s (m=k=n={m}) --");
+    let mut fields: Vec<(&str, Value)> = Vec::new();
+    let mut run = |key: &'static str, f: &dyn Fn(&mut [i32])| -> f64 {
+        let r = bench(key, 2, budget, 400, || {
+            f(std::hint::black_box(&mut c));
+        });
+        let g = ops / r.mean_ns;
+        println!("   {key:<24} {g:>7.2} GOP/s");
+        fields.push((key, Value::num(g)));
+        g
+    };
+    let naive = run("qmatmul_naive_gops", &|c| {
+        qkernels::qmatmul_bt_into_naive(&a, &b, c, m, k, n)
+    });
+    let blocked = run("qmatmul_blocked_gops", &|c| {
+        qkernels::qmatmul_bt_into_blocked(&a, &b, c, m, k, n)
+    });
+    let mut best = blocked;
+    #[cfg(feature = "simd-kernels")]
+    {
+        let simd = run("qmatmul_simd_gops", &|c| {
+            qkernels::qmatmul_bt_into_simd(&a, &b, c, m, k, n)
+        });
+        best = best.max(simd);
+    }
+    let speedup = best / naive;
+    println!("   -> best tier vs naive: {speedup:.2}x");
+    fields.push(("qmatmul_speedup_vs_naive", Value::num(speedup)));
+    (Value::obj(fields), speedup)
 }
 
 /// Isolated GFLOP/s of the three matmul microkernels on a conv-like
@@ -314,7 +386,7 @@ fn gate(label: &str, measured: f64, baseline: &Value, key: &str) -> bool {
     let min_ok = GATE_FACTOR * floor;
     if measured < min_ok {
         eprintln!(
-            "BENCH REGRESSION: {label} {measured:.3} steps/s is more than 10% below \
+            "BENCH REGRESSION: {label} {measured:.3} is more than 10% below \
              the committed baseline {floor:.3} (floor {min_ok:.3})"
         );
         false
@@ -364,14 +436,23 @@ fn main() {
     // isolated microkernel throughput (scalar vs simd, no dispatch)
     let kernels = kernel_gflops();
 
-    // quantized inference: the deploy path next to the tape's f32 eval
+    // isolated integer-GEMM tiers (naive vs blocked vs simd)
+    let (qmatmul, qmatmul_speedup) = qmatmul_gops();
+
+    // quantized inference: the deploy path next to the tape's f32 eval,
+    // single- and 4-thread (batch shards on the persistent pool)
     let (tiny_f32_eps, tiny_q_eps) =
-        quantized_eval_per_sec("trident_tiny_tiny", Duration::from_secs(1));
+        quantized_eval_per_sec("trident_tiny_tiny", 1, Duration::from_secs(1));
     let (r8_f32_eps, r8_q_eps) =
-        quantized_eval_per_sec(ACCEPTANCE_VARIANT, Duration::from_secs(2));
+        quantized_eval_per_sec(ACCEPTANCE_VARIANT, 1, Duration::from_secs(2));
+    let (r8_f32_eps4, r8_q_eps4) =
+        quantized_eval_per_sec(ACCEPTANCE_VARIANT, 4, Duration::from_secs(2));
+    let q_speedup4 = r8_q_eps4 / r8_q_eps;
     println!(
-        "   -> quantized vs f32 eval throughput on {ACCEPTANCE_VARIANT}: {:.2}x",
-        r8_q_eps / r8_f32_eps
+        "   -> quantized vs f32 eval throughput on {ACCEPTANCE_VARIANT}: {:.2}x (t=1), \
+         {:.2}x (t=4); quantized 4-thread speedup {q_speedup4:.2}x",
+        r8_q_eps / r8_f32_eps,
+        r8_q_eps4 / r8_f32_eps4
     );
 
     // per-op breakdowns (profiled separately so probes never skew timings)
@@ -392,8 +473,12 @@ fn main() {
         ("tiny_steps_per_sec", Value::num(tiny_sps)),
         ("tiny_eval_per_sec", Value::num(tiny_eval_sps)),
         ("kernels", kernels),
-        ("quantized_eval_per_sec", Value::num(r8_q_eps)),
+        ("qmatmul", qmatmul),
+        ("quantized_evals_per_sec_threads1", Value::num(r8_q_eps)),
+        ("quantized_evals_per_sec_threads4", Value::num(r8_q_eps4)),
+        ("quantized_speedup_4_threads", Value::num(q_speedup4)),
         ("quantized_eval_f32_per_sec", Value::num(r8_f32_eps)),
+        ("quantized_eval_f32_per_sec_threads4", Value::num(r8_f32_eps4)),
         ("quantized_eval_f32_ratio", Value::num(r8_q_eps / r8_f32_eps)),
         ("tiny_quantized_eval_per_sec", Value::num(tiny_q_eps)),
         ("tiny_quantized_eval_f32_per_sec", Value::num(tiny_f32_eps)),
@@ -414,14 +499,42 @@ fn main() {
     std::fs::write(&path, out.to_string_pretty()).expect("write bench json");
     println!("   -> wrote {}", path.display());
 
-    // regression gate (CI sets BENCH_CHECK=1): single- AND 4-thread
+    // regression gate (CI sets BENCH_CHECK=1): f32 train floors, the
+    // quantized eval floors, and two machine-independent ratio floors
+    // (blocked-vs-naive qmatmul, quantized 4-thread speedup)
     if std::env::var("BENCH_CHECK").as_deref() == Ok("1") {
         let base_path = odimo::repo_root().join("rust/benches/native_train.baseline.json");
         let text = std::fs::read_to_string(&base_path).expect("committed bench baseline");
         let base = parse(&text).expect("baseline json");
-        let ok1 = gate("single-thread resnet8", s1, &base, "threads1_steps_per_sec");
-        let ok4 = gate("4-thread resnet8", s4, &base, "threads4_steps_per_sec");
-        if !(ok1 && ok4) {
+        let checks = [
+            gate("single-thread resnet8", s1, &base, "threads1_steps_per_sec"),
+            gate("4-thread resnet8", s4, &base, "threads4_steps_per_sec"),
+            gate(
+                "1-thread quantized evals",
+                r8_q_eps,
+                &base,
+                "quantized_evals_per_sec_threads1",
+            ),
+            gate(
+                "4-thread quantized evals",
+                r8_q_eps4,
+                &base,
+                "quantized_evals_per_sec_threads4",
+            ),
+            gate(
+                "quantized 4-thread speedup",
+                q_speedup4,
+                &base,
+                "quantized_speedup_4_threads_min",
+            ),
+            gate(
+                "qmatmul best tier vs naive",
+                qmatmul_speedup,
+                &base,
+                "qmatmul_speedup_vs_naive_min",
+            ),
+        ];
+        if checks.iter().any(|ok| !ok) {
             std::process::exit(1);
         }
     }

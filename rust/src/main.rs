@@ -231,6 +231,13 @@ fn main() -> Result<()> {
             let mut n = 0usize;
             let mut f32_m = [0.0f32; 2];
             let mut q_m = [0.0f32; 2];
+            // discretize + quantize once — weights are constant during
+            // eval, so the QuantNet is reused across every batch
+            let qnet = if quantized {
+                Some(be.quantize(&state)?)
+            } else {
+                None
+            };
             for i in 0..batches {
                 let (x, y) =
                     ds.batch(odimo::datasets::Split::Test, i as u64, m.dataset.batch);
@@ -238,8 +245,8 @@ fn main() -> Result<()> {
                 let r = be.eval_batch(&state, &x, &y)?;
                 f32_m[0] += r[0];
                 f32_m[1] += r[1];
-                if quantized {
-                    let r = be.eval_batch_quantized(&state, &x, &y)?;
+                if let Some(q) = &qnet {
+                    let r = q.eval_batch(&x, &y)?;
                     q_m[0] += r[0];
                     q_m[1] += r[1];
                 }

@@ -564,15 +564,25 @@ impl NativeBackend {
                 theta: g.theta.map(|t| state.leaves[t].as_slice()),
             })
             .collect();
-        QuantNet::build(
+        let mut qnet = QuantNet::build(
             &self.spec,
             &geoms,
             &state.leaves[self.fc_w],
             &state.leaves[self.fc_b],
-        )
+        )?;
+        // quantized evals shard onto the same persistent pool as f32
+        // steps (scheduling only — outputs are thread-count independent)
+        qnet.set_pool(&self.pool);
+        Ok(qnet)
     }
 
     /// `[correct, loss_sum]` of the genuinely-quantized forward — the
+    /// convenience one-shot form: it rebuilds the [`QuantNet`] from
+    /// `state` on every call. Loops over many batches should call
+    /// [`NativeBackend::quantize`] once and reuse the returned net
+    /// (weights are constant during eval), as `repro eval --quantized`
+    /// and the bench do.
+    ///
     /// same metric pair as [`ModelBackend::eval_batch`], computed by the
     /// int8 GEMM path instead of the tape.
     pub fn eval_batch_quantized(

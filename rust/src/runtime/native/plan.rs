@@ -89,6 +89,86 @@ impl ExecPlan {
     }
 }
 
+/// Peak buffer capacities of one *quantized inference* shard — the
+/// sizing side of [`super::qkernels::QuantNet`]'s per-shard scratch,
+/// mirroring its `forward_shard` walk the same way [`step_sizes`]
+/// mirrors the training step. The quantized path recycles a small
+/// free-list of f32 buffers instead of an arena (its liveness pattern
+/// is a simple ping-pong plus a residual/patch buffer), so all it
+/// needs from planning is "how big can any one buffer get".
+pub struct QuantPlan {
+    /// largest single f32 buffer (activation, patch matrix or conv out)
+    pub buf_elems: usize,
+    /// f32 buffers live at once (act ping-pong + residual + cols + pool)
+    pub buf_count: usize,
+    /// largest i8 activation-code buffer (= largest quantized GEMM lhs)
+    pub code_elems: usize,
+    /// widest per-channel dequant row
+    pub chan_max: usize,
+    /// shard logits
+    pub logit_elems: usize,
+}
+
+/// Walk the plan for an `n`-row shard and record peak quantized-forward
+/// buffer sizes, so `QuantNet`'s scratch can be primed up front and
+/// steady-state quantized evals allocate nothing.
+pub fn quant_shard_plan(spec: &SupernetSpec, n: usize) -> QuantPlan {
+    let hw = spec.dataset.hw;
+    let mut buf_elems = n * hw * hw * 3; // shard input copy
+    let mut code_elems = 0usize;
+    let mut chan_max = 0usize;
+    let mut cur_hw = hw;
+    let mut conv = |gi: usize, input_hw: usize| {
+        let l = &spec.layers[gi];
+        let f = spec.fan_in(gi);
+        let rows = n * l.ox * l.oy;
+        // activation codes cover whichever slab feeds the integer
+        // kernel: the full input for depthwise, the patch matrix (or
+        // the input itself, pointwise) for dense convs
+        let quant_src = if l.ltype == LayerType::Dw {
+            n * input_hw * input_hw * l.cin
+        } else {
+            rows * f
+        };
+        if l.ltype != LayerType::Dw && !(l.k == 1 && l.stride == 1) {
+            buf_elems = buf_elems.max(rows * f); // im2col patches
+        }
+        buf_elems = buf_elems.max(rows * l.cout);
+        code_elems = code_elems.max(quant_src);
+        chan_max = chan_max.max(l.cout);
+    };
+    for step in &spec.plan {
+        match *step {
+            PlanStep::Conv(i) => {
+                conv(i, cur_hw);
+                cur_hw = spec.layers[i].ox;
+            }
+            PlanStep::ResBlock { c1, c2, dn } => {
+                conv(c1, cur_hw);
+                conv(c2, spec.layers[c1].ox);
+                if let Some(d) = dn {
+                    conv(d, cur_hw);
+                }
+                cur_hw = spec.layers[c2].ox;
+            }
+            PlanStep::DwPw { dw, pw } => {
+                conv(dw, cur_hw);
+                conv(pw, spec.layers[dw].ox);
+                cur_hw = spec.layers[pw].ox;
+            }
+        }
+    }
+    QuantPlan {
+        buf_elems,
+        // live at once in `forward_shard`: cur + h + h2 + downsample out
+        // + patch matrix (transient) + pooled head
+        buf_count: 6,
+        code_elems,
+        chan_max,
+        logit_elems: n * spec.classes,
+    }
+}
+
 /// Buffer multiset of one training step on an `n`-row batch shard.
 fn step_sizes(spec: &SupernetSpec, n: usize) -> Vec<(usize, usize)> {
     let mut bag = SizeBag::default();

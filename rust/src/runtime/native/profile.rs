@@ -17,6 +17,14 @@
 //! `(op, total_ns, calls)` rows; [`report`] formats them as a table;
 //! the bench emits them into `BENCH_native_train.json` as the per-op
 //! trajectory record.
+//!
+//! Lane attribution: because the counters are global atomics, a probe
+//! placed *inside* a `par_rows`/pool-lane closure records each lane's
+//! own elapsed time, and the bucket total is the summed CPU time across
+//! lanes (not wall time) — the quantized forward places its
+//! `Op::QMatmul` probes this way, so its breakdown stays truthful under
+//! threading. A probe placed *outside* a parallel region times the
+//! caller's wall clock instead.
 
 /// The op buckets the breakdown reports. Coarse by design: buckets are
 /// stable across refactors so trajectories stay comparable.
@@ -27,7 +35,8 @@ pub enum Op {
     Im2col,
     /// the three blocked matmul kernels, forward and backward
     Matmul,
-    /// int8 GEMM with i32 accumulators (the real quantized path)
+    /// int8 GEMM with i32 accumulators (the real quantized path);
+    /// recorded per kernel lane, so the total is summed CPU time
     QMatmul,
     /// depthwise conv forward + backward
     DwConv,

@@ -1,7 +1,7 @@
 //! Real quantized inference: i8 / 2-bit-ternary weight storage with
-//! per-channel scales, symmetric int8 activations, and an integer GEMM
-//! with i32 accumulators — the arithmetic the [`QuantKind`] fake-quant
-//! ops only *emulate* in f32 during training.
+//! per-channel scales, symmetric int8 activations, and a blocked integer
+//! GEMM with i32 accumulators — the arithmetic the [`QuantKind`]
+//! fake-quant ops only *emulate* in f32 during training.
 //!
 //! [`QuantNet`] is a frozen, discretized snapshot of a trained state:
 //! each searchable conv's θ row is argmax-discretized to one CU column
@@ -14,28 +14,69 @@
 //! the same [`BN_EPS`] as the tape's eval forward; the FC head is never
 //! quantized, matching the training graph.
 //!
-//! At inference each quantized conv's *input* is quantized symmetric
-//! per-tensor (`scale = max|x| / 127`, no zero point), the GEMM runs on
-//! `i8 × i8 → i32` (integer accumulation is associative, so this path
-//! is trivially deterministic for any execution order), and the output
-//! dequantizes by `scale_act · scale_w[ch]`. Validation contract:
-//! [`QuantNet::forward_f32_reference`] runs the same discretized
-//! network in f32 with the dequantized weights and *no* activation
-//! quantization — exactly the fake-quant emulation — and
+//! # Kernel tiers
+//!
+//! Integer addition is associative, so — unlike the f32 kernels, where
+//! the scalar path *defines* the bits and every other tier must replay
+//! its exact reduction — any blocking, vectorization or threading of
+//! the integer GEMM is bit-identical by construction. That freedom buys
+//! three tiers that all produce the same `i32`s:
+//!
+//! * [`qmatmul_bt_into_naive`] — the original triple loop, kept as the
+//!   reference (its serial `acc +=` chain blocks vectorization);
+//! * [`qmatmul_bt_into_blocked`] — 4-column register panels sharing one
+//!   streamed activation row, each dot split over 8 independent i32
+//!   accumulator lanes the autovectorizer maps to vector registers;
+//! * `simd-kernels` builds add a widening-lane variant on
+//!   [`I16x8`]/[`I32x8`]: codes widen i8→i16 on load and multiply as
+//!   i32 (127² fits comfortably), 8 products per step.
+//!
+//! [`qmatmul_bt_into`] dispatches to the best compiled-in tier;
+//! `tests/kernels.rs` pins all tiers exactly equal on panel-edge shapes.
+//!
+//! # Execution
+//!
+//! The forward is sharded over the same fixed [`NSHARDS`] batch split as
+//! the f32 engine (shard structure depends only on the batch size, never
+//! the thread count) and runs the shards as tasks of the backend's
+//! persistent [`WorkerPool`] when one is attached ([`QuantNet::set_pool`],
+//! done by `NativeBackend::quantize`); surplus pool slots become row
+//! lanes inside each conv via [`par_rows`]. Activations quantize per
+//! shard (`scale = max|x|/127`, no zero point — the integer analogue of
+//! the engine's ghost batch norm), so outputs are bit-identical for any
+//! thread count *and* any kernel tier. Each shard owns a small recycled
+//! scratch (free-listed f32 buffers + code/dequant rows) sized up front
+//! by [`quant_shard_plan`], so steady-state quantized evals allocate
+//! nothing.
+//!
+//! Validation contract: [`QuantNet::forward_f32_reference`] runs the
+//! same discretized network in f32 with the dequantized weights and *no*
+//! activation quantization — exactly the fake-quant emulation — and
 //! `tests/quantized.rs` pins the quantized logits against it to a
 //! documented tolerance on every builtin SoC's supernet.
 //!
-//! Everything here allocates per call (no arena): this is the deploy
-//! path, run once per batch, not the training hot loop.
+//! A `QuantNet` is built **once per trained state** and reused across
+//! batches (weights are constant during eval; `repro eval --quantized`
+//! and the bench hold one instance for the whole run — requantizing per
+//! batch was pure waste).
+
+use std::sync::Mutex;
 
 use anyhow::{anyhow, Result};
 
 use crate::soc::LayerType;
 
+use super::backend::NSHARDS;
+use super::plan::{quant_shard_plan, QuantPlan};
+use super::pool::{KernelScope, WorkerPool};
 use super::profile::{self, Op};
 use super::supernet::{PlanStep, SearchMode, SupernetSpec, BN_EPS};
-use super::tape::{im2col_into, same_geometry, QuantKind};
-use super::tensor::{matmul_into, Tensor};
+use super::tape::{im2col_slice_into, same_geometry, QuantKind};
+#[cfg(feature = "simd-kernels")]
+use super::tensor::simd::{I16x8, I32x8};
+#[cfg(feature = "simd-kernels")]
+use super::tensor::simd_enabled;
+use super::tensor::{matmul_bt_into, matmul_into, par_rows};
 
 /// One conv geometry's frozen quantized parameters.
 pub struct QLayer {
@@ -50,6 +91,9 @@ pub struct QLayer {
     /// reference forward reads all rows, the quantized forward reads
     /// only Identity rows
     pub w_deq: Vec<f32>,
+    /// indices of Identity (full-precision) output channels — the rows
+    /// the quantized GEMM leaves to the f32 fix-up pass
+    pub ident_cols: Vec<usize>,
     /// folded BN affine `y = a·x + b` from the running stats
     pub bn_a: Vec<f32>,
     pub bn_b: Vec<f32>,
@@ -72,6 +116,10 @@ pub struct QuantNet<'a> {
     layers: Vec<QLayer>,
     fc_w: Vec<f32>,
     fc_b: Vec<f32>,
+    /// worker pool the sharded forward runs on (serial when absent)
+    pool: Option<&'a WorkerPool>,
+    /// one recycled buffer set per batch shard
+    scratch: Vec<Mutex<QScratch>>,
 }
 
 /// Masked argmax over one θ row; ties keep the lowest eligible column.
@@ -178,6 +226,12 @@ impl QLayer {
                 }
             }
         }
+        let ident_cols = kinds
+            .iter()
+            .enumerate()
+            .filter(|&(_, &k)| k == QuantKind::Identity)
+            .map(|(j, _)| j)
+            .collect();
         let bn_a: Vec<f32> = p
             .scale
             .iter()
@@ -195,6 +249,7 @@ impl QLayer {
             codes,
             scales,
             w_deq,
+            ident_cols,
             bn_a,
             bn_b,
         }
@@ -212,23 +267,60 @@ impl QLayer {
 // integer kernels
 // ---------------------------------------------------------------------------
 
-/// Symmetric per-tensor int8 activation quantization: `scale = max|x| /
-/// 127`, codes rounded and clamped to ±127, no zero point.
-pub fn quantize_act(x: &[f32]) -> (Vec<i8>, f32) {
-    let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+/// Output-column panel width: four weight rows share one streamed
+/// activation row (mirrors the f32 `NR_S` panels).
+const QNR: usize = 4;
+/// Accumulator lanes per dot: splitting `acc +=` over 8 independent
+/// i32 lanes breaks the serial dependency chain so the autovectorizer
+/// can keep the multiply-accumulate in vector registers. Exact for any
+/// split — integer adds are associative.
+const QLANES: usize = 8;
+
+/// 8-lane max-abs scan. f32 `max` is exact and order-free (no rounding),
+/// so the lane split returns the same amax bits as a serial fold.
+fn max_abs(x: &[f32]) -> f32 {
+    let xc = x.chunks_exact(QLANES);
+    let rem = xc.remainder();
+    let mut lanes = [0.0f32; QLANES];
+    for cx in xc {
+        for (m, &v) in lanes.iter_mut().zip(cx) {
+            *m = m.max(v.abs());
+        }
+    }
+    let mut m = lanes.iter().fold(0.0f32, |a, &b| a.max(b));
+    for &v in rem {
+        m = m.max(v.abs());
+    }
+    m
+}
+
+/// Symmetric per-tensor int8 activation quantization into a reused code
+/// buffer: `scale = max|x| / 127`, codes rounded and clamped to ±127,
+/// no zero point. The rounding recipe (`(v / scale).round()`, true
+/// division) is shared by every build, so activation codes — and with
+/// them the whole quantized forward — are identical across kernel tiers.
+pub fn quantize_act_into(x: &[f32], codes: &mut Vec<i8>) -> f32 {
+    let amax = max_abs(x);
     let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
-    let codes = x
-        .iter()
-        .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
-        .collect();
+    codes.clear();
+    codes.extend(
+        x.iter()
+            .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8),
+    );
+    scale
+}
+
+/// Allocating convenience form of [`quantize_act_into`].
+pub fn quantize_act(x: &[f32]) -> (Vec<i8>, f32) {
+    let mut codes = Vec::new();
+    let scale = quantize_act_into(x, &mut codes);
     (codes, scale)
 }
 
-/// Integer GEMM `C[m,n] = A[m,k] · B[n,k]ᵀ` on i8 codes with i32
-/// accumulators — the dot-product (`A·Bᵀ`) layout the conv lowering
-/// uses, weights as rows of codes. Integer adds are associative, so any
-/// blocking/threading of this kernel is bit-identical by construction.
-pub fn qmatmul_bt_into(a: &[i8], b: &[i8], c: &mut [i32], m: usize, k: usize, n: usize) {
+/// Naive reference tier of the integer GEMM
+/// `C[m,n] = A[m,k] · B[n,k]ᵀ`: one serial i32 accumulator per output.
+/// Kept for the bench (speedup denominator) and the tier-equality tests.
+pub fn qmatmul_bt_into_naive(a: &[i8], b: &[i8], c: &mut [i32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(c.len(), m * n);
@@ -246,7 +338,200 @@ pub fn qmatmul_bt_into(a: &[i8], b: &[i8], c: &mut [i32], m: usize, k: usize, n:
     }
 }
 
-/// f32 dot (Identity rows of a mixed-precision conv).
+/// Lane-split integer dot (tail columns of a panel sweep).
+#[inline(always)]
+fn qdot_scalar(x: &[i8], y: &[i8]) -> i32 {
+    let xc = x.chunks_exact(QLANES);
+    let yc = y.chunks_exact(QLANES);
+    let (xr, yr) = (xc.remainder(), yc.remainder());
+    let mut acc = [0i32; QLANES];
+    for (cx, cy) in xc.zip(yc) {
+        for l in 0..QLANES {
+            acc[l] += cx[l] as i32 * cy[l] as i32;
+        }
+    }
+    let mut s: i32 = acc.iter().sum();
+    for (&a, &b) in xr.iter().zip(yr) {
+        s += a as i32 * b as i32;
+    }
+    s
+}
+
+/// One register panel: the four dots of activation row `arow` against
+/// weight rows `j..j+QNR`, each split over [`QLANES`] i32 accumulators.
+#[inline(always)]
+fn qpanel_scalar(arow: &[i8], b: &[i8], k: usize, j: usize) -> [i32; QNR] {
+    let k_main = k - k % QLANES;
+    let mut acc = [[0i32; QLANES]; QNR];
+    let mut p = 0;
+    while p < k_main {
+        let ar = &arow[p..p + QLANES];
+        for (t, at) in acc.iter_mut().enumerate() {
+            let br = &b[(j + t) * k + p..(j + t) * k + p + QLANES];
+            for l in 0..QLANES {
+                at[l] += ar[l] as i32 * br[l] as i32;
+            }
+        }
+        p += QLANES;
+    }
+    let mut out = [0i32; QNR];
+    for (t, at) in acc.iter().enumerate() {
+        let mut s: i32 = at.iter().sum();
+        for q in k_main..k {
+            s += arow[q] as i32 * b[(j + t) * k + q] as i32;
+        }
+        out[t] = s;
+    }
+    out
+}
+
+/// Widening-lane tier: i8 codes widen to [`I16x8`] on load and multiply-
+/// accumulate into [`I32x8`] (products of int8 codes never exceed 127²,
+/// so every step is exact).
+#[cfg(feature = "simd-kernels")]
+mod qsimd {
+    use super::{I16x8, I32x8, QLANES, QNR};
+
+    #[inline(always)]
+    pub fn qdot(x: &[i8], y: &[i8]) -> i32 {
+        let k = x.len();
+        let k_main = k - k % QLANES;
+        let mut acc = I32x8::zero();
+        let mut p = 0;
+        while p < k_main {
+            acc = acc.mul_add_widen(I16x8::widen(&x[p..]), I16x8::widen(&y[p..]));
+            p += QLANES;
+        }
+        let mut s = acc.hsum();
+        for q in k_main..k {
+            s += x[q] as i32 * y[q] as i32;
+        }
+        s
+    }
+
+    #[inline(always)]
+    pub fn qpanel(arow: &[i8], b: &[i8], k: usize, j: usize) -> [i32; QNR] {
+        let k_main = k - k % QLANES;
+        let mut acc = [I32x8::zero(); QNR];
+        let mut p = 0;
+        while p < k_main {
+            let av = I16x8::widen(&arow[p..]);
+            for (t, at) in acc.iter_mut().enumerate() {
+                *at = at.mul_add_widen(av, I16x8::widen(&b[(j + t) * k + p..]));
+            }
+            p += QLANES;
+        }
+        let mut out = [0i32; QNR];
+        for (t, at) in acc.iter().enumerate() {
+            let mut s = at.hsum();
+            for q in k_main..k {
+                s += arow[q] as i32 * b[(j + t) * k + q] as i32;
+            }
+            out[t] = s;
+        }
+        out
+    }
+}
+
+/// Shared panel-sweep skeleton of the blocked tiers: stream each
+/// activation row once across QNR-column register panels, `store`ing
+/// each finished i32 (plain or dequantized). Monomorphizes per tier, so
+/// the panel/dot calls inline.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn bt_drive<P, D, S>(
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    panel: P,
+    dot1: D,
+    mut store: S,
+) where
+    P: Fn(&[i8], &[i8], usize, usize) -> [i32; QNR],
+    D: Fn(&[i8], &[i8]) -> i32,
+    S: FnMut(usize, usize, i32),
+{
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let mut j = 0;
+        while j + QNR <= n {
+            let acc = panel(arow, b, k, j);
+            for (t, &s) in acc.iter().enumerate() {
+                store(i, j + t, s);
+            }
+            j += QNR;
+        }
+        for jj in j..n {
+            store(i, jj, dot1(arow, &b[jj * k..(jj + 1) * k]));
+        }
+    }
+}
+
+/// Blocked scalar tier of the integer GEMM (register panels + lane-split
+/// accumulators). Bit-identical to the naive tier — integer adds.
+pub fn qmatmul_bt_into_blocked(a: &[i8], b: &[i8], c: &mut [i32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(c.len(), m * n);
+    bt_drive(a, b, m, k, n, qpanel_scalar, qdot_scalar, |i, j, s| {
+        c[i * n + j] = s
+    });
+}
+
+/// Widening SIMD tier of the integer GEMM.
+#[cfg(feature = "simd-kernels")]
+pub fn qmatmul_bt_into_simd(a: &[i8], b: &[i8], c: &mut [i32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(c.len(), m * n);
+    bt_drive(a, b, m, k, n, qsimd::qpanel, qsimd::qdot, |i, j, s| {
+        c[i * n + j] = s
+    });
+}
+
+/// Integer GEMM `C[m,n] = A[m,k] · B[n,k]ᵀ` on i8 codes with i32
+/// accumulators — the dot-product (`A·Bᵀ`) layout the conv lowering
+/// uses, weights as rows of codes. Dispatches to the best compiled-in
+/// tier; all tiers produce the same bits (integer associativity), so
+/// unlike the f32 kernels the dispatch is *not* part of any numerics
+/// contract.
+pub fn qmatmul_bt_into(a: &[i8], b: &[i8], c: &mut [i32], m: usize, k: usize, n: usize) {
+    #[cfg(feature = "simd-kernels")]
+    if simd_enabled() {
+        qmatmul_bt_into_simd(a, b, c, m, k, n);
+        return;
+    }
+    qmatmul_bt_into_blocked(a, b, c, m, k, n);
+}
+
+/// Fused integer-GEMM + dequantize: `C[i,j] = (Σ a·b) · dq[j]` straight
+/// into the f32 conv output, accumulators staying in registers (the
+/// conv never materializes an i32 matrix). `dq[j]` is
+/// `scale_act · scale_w[j]`; pruned rows carry `dq = 0`.
+pub fn qmatmul_bt_dequant_into(
+    a: &[i8],
+    b: &[i8],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    dq: &[f32],
+) {
+    debug_assert_eq!(c.len(), m * n);
+    debug_assert_eq!(dq.len(), n);
+    #[cfg(feature = "simd-kernels")]
+    if simd_enabled() {
+        bt_drive(a, b, m, k, n, qsimd::qpanel, qsimd::qdot, |i, j, s| {
+            c[i * n + j] = s as f32 * dq[j]
+        });
+        return;
+    }
+    bt_drive(a, b, m, k, n, qpanel_scalar, qdot_scalar, |i, j, s| {
+        c[i * n + j] = s as f32 * dq[j]
+    });
+}
+
+/// f32 dot (Identity-row fix-up of a mixed-precision conv).
 fn fdot(x: &[f32], y: &[f32]) -> f32 {
     let mut s = 0.0f32;
     for (&a, &b) in x.iter().zip(y) {
@@ -259,19 +544,75 @@ fn fdot(x: &[f32], y: &[f32]) -> f32 {
 // forward
 // ---------------------------------------------------------------------------
 
-/// One activation tensor flowing through the plan.
+/// One activation tensor flowing through a shard of the plan (its
+/// buffer comes from — and returns to — the shard's [`QScratch`]).
 struct Act {
-    data: Vec<f32>,
+    buf: Vec<f32>,
     n: usize,
     h: usize,
     w: usize,
     c: usize,
 }
 
-impl QuantNet<'_> {
+/// Recycled per-shard buffers of the quantized forward: a free list of
+/// f32 buffers (activation ping-pong, residual, patch matrix, pooled
+/// head) plus the activation-code / dequant-scale / logits rows.
+/// Capacity-primed from [`quant_shard_plan`], so steady-state evals
+/// allocate nothing.
+struct QScratch {
+    bufs: Vec<Vec<f32>>,
+    a8: Vec<i8>,
+    dq: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl QScratch {
+    fn primed(plan: &QuantPlan) -> QScratch {
+        QScratch {
+            bufs: (0..plan.buf_count)
+                .map(|_| Vec::with_capacity(plan.buf_elems))
+                .collect(),
+            a8: Vec::with_capacity(plan.code_elems),
+            dq: Vec::with_capacity(plan.chan_max),
+            logits: Vec::with_capacity(plan.logit_elems),
+        }
+    }
+
+    /// Pop a zeroed `len`-element buffer off the free list.
+    fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.bufs.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    fn put(&mut self, v: Vec<f32>) {
+        self.bufs.push(v);
+    }
+}
+
+/// Fixed shard row ranges of an `n`-row batch — the same thread-count-
+/// independent split as `NativeBackend::shard_bounds` (the shard-local
+/// activation scales make the split part of the quantized numerics,
+/// exactly like ghost batch norm on the training side).
+fn shard_bounds(n: usize) -> Vec<(usize, usize)> {
+    let s = NSHARDS.min(n).max(1);
+    (0..s).map(|i| (i * n / s, (i + 1) * n / s)).collect()
+}
+
+/// Raw mutable logits base smuggled into the shard closure; each shard
+/// reslices its own disjoint row range.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+impl<'a> QuantNet<'a> {
     /// Build from a spec plus per-geometry state slices (normally via
-    /// `NativeBackend::quantize`).
-    pub fn build<'a>(
+    /// `NativeBackend::quantize`). The result is meant to be built once
+    /// per trained state and reused for every eval batch.
+    pub fn build(
         spec: &'a SupernetSpec,
         geoms: &[GeomParams],
         fc_w: &[f32],
@@ -289,12 +630,33 @@ impl QuantNet<'_> {
             .enumerate()
             .map(|(gi, p)| QLayer::build(spec, gi, p))
             .collect();
+        // prime scratch for the manifest batch size; odd batch sizes
+        // just grow capacity once and settle
+        let batch = spec.dataset.batch.max(1);
+        let max_shard = shard_bounds(batch)
+            .iter()
+            .map(|&(a, b)| b - a)
+            .max()
+            .unwrap_or(1);
+        let qplan = quant_shard_plan(spec, max_shard);
+        let scratch = (0..NSHARDS)
+            .map(|_| Mutex::new(QScratch::primed(&qplan)))
+            .collect();
         Ok(QuantNet {
             spec,
             layers,
             fc_w: fc_w.to_vec(),
             fc_b: fc_b.to_vec(),
+            pool: None,
+            scratch,
         })
+    }
+
+    /// Run batch shards as tasks of `pool` (surplus slots become kernel
+    /// row lanes). Purely a scheduling choice — outputs are bit-identical
+    /// with or without a pool.
+    pub fn set_pool(&mut self, pool: &'a WorkerPool) {
+        self.pool = Some(pool);
     }
 
     pub fn spec(&self) -> &SupernetSpec {
@@ -307,7 +669,9 @@ impl QuantNet<'_> {
 
     /// Quantized logits for an NHWC batch `x` of `n` images.
     pub fn forward(&self, x: &[f32], n: usize) -> Vec<f32> {
-        self.forward_inner(x, n, true)
+        let mut logits = vec![0.0f32; n * self.spec.classes];
+        self.forward_into(x, n, true, &mut logits);
+        logits
     }
 
     /// The fake-quant emulation of the same discretized network: f32
@@ -315,11 +679,14 @@ impl QuantNet<'_> {
     /// This is what the training-time eval forward computes for a
     /// frozen/discretized θ — the validation reference.
     pub fn forward_f32_reference(&self, x: &[f32], n: usize) -> Vec<f32> {
-        self.forward_inner(x, n, false)
+        let mut logits = vec![0.0f32; n * self.spec.classes];
+        self.forward_into(x, n, false, &mut logits);
+        logits
     }
 
     /// `[correct, loss_sum]` of the quantized forward — the same metric
-    /// pair as `ModelBackend::eval_batch`.
+    /// pair as `ModelBackend::eval_batch`. Metrics reduce in shard-index
+    /// order, matching the f32 engine's contract.
     pub fn eval_batch(&self, x: &[f32], y: &[i32]) -> Result<Vec<f32>> {
         let hw = self.spec.dataset.hw;
         let n = y.len();
@@ -330,16 +697,85 @@ impl QuantNet<'_> {
                 x.len()
             ));
         }
-        let logits = self.forward(x, n);
-        let (correct, loss_sum) = logits_metrics(&logits, y, self.spec.classes);
+        let classes = self.spec.classes;
+        let row = hw * hw * 3;
+        let bounds = shard_bounds(n);
+        let metrics = self.run_shards(bounds.len(), &|i, scope| {
+            let (b0, b1) = bounds[i];
+            let nb = b1 - b0;
+            let mut sc = self.scratch[i].lock().unwrap();
+            let mut logits = std::mem::take(&mut sc.logits);
+            logits.clear();
+            logits.resize(nb * classes, 0.0);
+            self.forward_shard(&x[b0 * row..b1 * row], nb, true, scope, &mut sc, &mut logits);
+            let mc = logits_metrics(&logits, &y[b0..b1], classes);
+            sc.logits = logits;
+            mc
+        });
+        let (mut correct, mut loss_sum) = (0.0f32, 0.0f32);
+        for (c, l) in metrics {
+            correct += c;
+            loss_sum += l;
+        }
         Ok(vec![correct, loss_sum])
     }
 
-    fn forward_inner(&self, x: &[f32], n: usize, quantized: bool) -> Vec<f32> {
+    /// One closure per batch shard, on the pool when attached; results
+    /// in shard order.
+    fn run_shards<T: Send>(
+        &self,
+        s: usize,
+        f: &(dyn Fn(usize, &KernelScope) -> T + Sync),
+    ) -> Vec<T> {
+        match self.pool {
+            Some(p) => p.run_tasks(s, f),
+            None => {
+                let scope = KernelScope::serial();
+                (0..s).map(|i| f(i, &scope)).collect()
+            }
+        }
+    }
+
+    /// Shard-split forward writing each shard's logits rows in place.
+    fn forward_into(&self, x: &[f32], n: usize, quantized: bool, logits: &mut [f32]) {
+        let hw = self.spec.dataset.hw;
+        let classes = self.spec.classes;
+        debug_assert_eq!(x.len(), n * hw * hw * 3);
+        debug_assert_eq!(logits.len(), n * classes);
+        let row = hw * hw * 3;
+        let bounds = shard_bounds(n);
+        let base = SendPtr(logits.as_mut_ptr());
+        self.run_shards(bounds.len(), &|i, scope| {
+            let (b0, b1) = bounds[i];
+            let mut sc = self.scratch[i].lock().unwrap();
+            // disjoint logits rows per shard; run_shards joins all
+            // shards before returning, so the reslices never alias
+            let chunk = unsafe {
+                std::slice::from_raw_parts_mut(base.0.add(b0 * classes), (b1 - b0) * classes)
+            };
+            self.forward_shard(&x[b0 * row..b1 * row], b1 - b0, quantized, scope, &mut sc, chunk);
+        });
+    }
+
+    /// One shard's plan walk: conv/resblock/dwpw steps on recycled
+    /// buffers, then the (never-quantized) GAP → FC head.
+    fn forward_shard(
+        &self,
+        x: &[f32],
+        n: usize,
+        quantized: bool,
+        scope: &KernelScope,
+        sc: &mut QScratch,
+        logits: &mut [f32],
+    ) {
         let hw = self.spec.dataset.hw;
         debug_assert_eq!(x.len(), n * hw * hw * 3);
         let mut cur = Act {
-            data: x.to_vec(),
+            buf: {
+                let mut b = sc.take(x.len());
+                b.copy_from_slice(x);
+                b
+            },
             n,
             h: hw,
             w: hw,
@@ -348,33 +784,44 @@ impl QuantNet<'_> {
         for step in &self.spec.plan {
             match *step {
                 PlanStep::Conv(i) => {
-                    cur = self.conv_bn(i, &cur, true, quantized);
+                    let y = self.conv_bn(i, &cur, true, quantized, scope, sc);
+                    sc.put(std::mem::replace(&mut cur, y).buf);
                 }
                 PlanStep::ResBlock { c1, c2, dn } => {
-                    let h = self.conv_bn(c1, &cur, true, quantized);
-                    let mut h2 = self.conv_bn(c2, &h, false, quantized);
-                    let sc = match dn {
-                        Some(d) => self.conv_bn(d, &cur, false, quantized),
-                        None => cur,
-                    };
-                    for (a, &b) in h2.data.iter_mut().zip(&sc.data) {
-                        *a = (*a + b).max(0.0);
+                    let h = self.conv_bn(c1, &cur, true, quantized, scope, sc);
+                    let mut h2 = self.conv_bn(c2, &h, false, quantized, scope, sc);
+                    sc.put(h.buf);
+                    match dn {
+                        Some(d) => {
+                            let s = self.conv_bn(d, &cur, false, quantized, scope, sc);
+                            for (a, &b) in h2.buf.iter_mut().zip(&s.buf) {
+                                *a = (*a + b).max(0.0);
+                            }
+                            sc.put(s.buf);
+                        }
+                        None => {
+                            for (a, &b) in h2.buf.iter_mut().zip(&cur.buf) {
+                                *a = (*a + b).max(0.0);
+                            }
+                        }
                     }
-                    cur = h2;
+                    sc.put(std::mem::replace(&mut cur, h2).buf);
                 }
                 PlanStep::DwPw { dw, pw } => {
-                    cur = self.conv_bn(dw, &cur, true, quantized);
-                    cur = self.conv_bn(pw, &cur, true, quantized);
+                    let y = self.conv_bn(dw, &cur, true, quantized, scope, sc);
+                    sc.put(std::mem::replace(&mut cur, y).buf);
+                    let y = self.conv_bn(pw, &cur, true, quantized, scope, sc);
+                    sc.put(std::mem::replace(&mut cur, y).buf);
                 }
             }
         }
         // GAP → FC head, always f32 (the training graph never quantizes
         // the classifier)
         let (nb, hwp, c) = (cur.n, cur.h * cur.w, cur.c);
-        let mut pooled = vec![0.0f32; nb * c];
+        let mut pooled = sc.take(nb * c);
         for b in 0..nb {
             for p in 0..hwp {
-                let row = &cur.data[(b * hwp + p) * c..(b * hwp + p + 1) * c];
+                let row = &cur.buf[(b * hwp + p) * c..(b * hwp + p + 1) * c];
                 for (acc, &v) in pooled[b * c..(b + 1) * c].iter_mut().zip(row) {
                     *acc += v;
                 }
@@ -382,25 +829,34 @@ impl QuantNet<'_> {
         }
         pooled.iter_mut().for_each(|v| *v /= hwp as f32);
         let classes = self.spec.classes;
-        let mut logits = vec![0.0f32; nb * classes];
-        matmul_into(&pooled, &self.fc_w, &mut logits, nb, c, classes);
+        debug_assert_eq!(logits.len(), nb * classes);
+        matmul_into(&pooled, &self.fc_w, logits, nb, c, classes);
         for lrow in logits.chunks_exact_mut(classes) {
             for (l, &b) in lrow.iter_mut().zip(&self.fc_b) {
                 *l += b;
             }
         }
-        logits
+        sc.put(pooled);
+        sc.put(cur.buf);
     }
 
     /// conv/dw → folded BN affine → optional relu.
-    fn conv_bn(&self, gi: usize, x: &Act, with_relu: bool, quantized: bool) -> Act {
+    fn conv_bn(
+        &self,
+        gi: usize,
+        x: &Act,
+        with_relu: bool,
+        quantized: bool,
+        scope: &KernelScope,
+        sc: &mut QScratch,
+    ) -> Act {
         let l = &self.spec.layers[gi];
         let mut y = match l.ltype {
-            LayerType::Dw => self.dw_conv(gi, x, quantized),
-            _ => self.conv(gi, x, quantized),
+            LayerType::Dw => self.dw_conv(gi, x, quantized, scope, sc),
+            _ => self.conv(gi, x, quantized, scope, sc),
         };
         let ql = &self.layers[gi];
-        for row in y.data.chunks_exact_mut(y.c) {
+        for row in y.buf.chunks_exact_mut(y.c) {
             for ((v, &a), &b) in row.iter_mut().zip(&ql.bn_a).zip(&ql.bn_b) {
                 *v = *v * a + b;
                 if with_relu {
@@ -411,11 +867,20 @@ impl QuantNet<'_> {
         y
     }
 
-    /// Standard / pointwise conv: im2col (skipped for 1×1/stride-1) then
-    /// a per-row mixed GEMM — integer dot with i32 accumulators for
-    /// int8/ternary rows, f32 dot on the dequantized weights for
-    /// Identity rows, zeros for pruned rows.
-    fn conv(&self, gi: usize, x: &Act, quantized: bool) -> Act {
+    /// Standard / pointwise conv: im2col (skipped for 1×1/stride-1),
+    /// then — for quantized layers — one fused integer GEMM + dequant
+    /// over *all* output channels (pruned rows carry `dq = 0`, Identity
+    /// rows are fixed up with f32 dots afterwards), output rows sharded
+    /// across the scope's kernel lanes. The f32 reference path runs the
+    /// dequantized weights through the shared `matmul_bt_into`.
+    fn conv(
+        &self,
+        gi: usize,
+        x: &Act,
+        quantized: bool,
+        scope: &KernelScope,
+        sc: &mut QScratch,
+    ) -> Act {
         let l = &self.spec.layers[gi];
         let ql = &self.layers[gi];
         let (k, stride) = (l.k, l.stride);
@@ -424,49 +889,60 @@ impl QuantNet<'_> {
         let (oh, ow, _) = same_geometry(x.h, x.w, k, stride);
         let rows = x.n * oh * ow;
         let pointwise = k == 1 && stride == 1;
-        let cols_owned: Vec<f32>;
-        let cols: &[f32] = if pointwise {
-            &x.data
+        let cols_owned: Option<Vec<f32>> = if pointwise {
+            None
         } else {
-            let xt = Tensor::new(vec![x.n, x.h, x.w, x.c], x.data.clone());
-            let mut buf = vec![0.0f32; rows * f];
-            im2col_into(&xt, k, stride, &mut buf);
-            cols_owned = buf;
-            &cols_owned
+            // take() zeroes, so padding taps stay 0
+            let mut buf = sc.take(rows * f);
+            im2col_slice_into(&x.buf, x.n, x.h, x.w, x.c, k, stride, &mut buf);
+            Some(buf)
         };
-        let mut out = vec![0.0f32; rows * cout];
+        let cols: &[f32] = cols_owned.as_deref().unwrap_or(&x.buf);
         let use_int = quantized && ql.any_integer();
-        let (a8, scale_a) = if use_int {
-            quantize_act(cols)
+        let scale_a = if use_int {
+            quantize_act_into(cols, &mut sc.a8)
         } else {
-            (Vec::new(), 1.0)
+            1.0
         };
-        let _p = use_int.then(|| profile::time(Op::QMatmul));
-        for i in 0..rows {
-            let arowf = &cols[i * f..(i + 1) * f];
-            let orow = &mut out[i * cout..(i + 1) * cout];
-            for (j, ov) in orow.iter_mut().enumerate() {
-                let wrow = j * f..(j + 1) * f;
-                *ov = match ql.kinds[j] {
-                    QuantKind::Zero => 0.0,
-                    QuantKind::Identity => fdot(arowf, &ql.w_deq[wrow]),
-                    QuantKind::Int8 | QuantKind::Ternary => {
-                        if use_int {
-                            let arow8 = &a8[i * f..(i + 1) * f];
-                            let mut acc = 0i32;
-                            for (&av, &bv) in arow8.iter().zip(&ql.codes[wrow]) {
-                                acc += av as i32 * bv as i32;
-                            }
-                            acc as f32 * scale_a * ql.scales[j]
-                        } else {
-                            fdot(arowf, &ql.w_deq[wrow])
+        if use_int {
+            sc.dq.clear();
+            sc.dq.extend(ql.scales.iter().map(|&s| s * scale_a));
+        }
+        let mut out = sc.take(rows * cout);
+        {
+            let a8: &[i8] = &sc.a8;
+            let dq: &[f32] = &sc.dq;
+            par_rows(&mut out, rows, cout, scope, |r0, r1, chunk| {
+                if use_int {
+                    // probe inside the lane closure: the Op counters are
+                    // atomics, so concurrent lanes sum to the true CPU
+                    // time of the quantized GEMM
+                    let _p = profile::time(Op::QMatmul);
+                    qmatmul_bt_dequant_into(
+                        &a8[r0 * f..r1 * f],
+                        &ql.codes,
+                        chunk,
+                        r1 - r0,
+                        f,
+                        cout,
+                        dq,
+                    );
+                    for &j in &ql.ident_cols {
+                        for i in r0..r1 {
+                            chunk[(i - r0) * cout + j] =
+                                fdot(&cols[i * f..(i + 1) * f], &ql.w_deq[j * f..(j + 1) * f]);
                         }
                     }
-                };
-            }
+                } else {
+                    matmul_bt_into(&cols[r0 * f..r1 * f], &ql.w_deq, chunk, r1 - r0, f, cout);
+                }
+            });
+        }
+        if let Some(b) = cols_owned {
+            sc.put(b);
         }
         Act {
-            data: out,
+            buf: out,
             n: x.n,
             h: oh,
             w: ow,
@@ -475,27 +951,46 @@ impl QuantNet<'_> {
     }
 
     /// Depthwise conv: per-channel integer tap accumulation (i32) for
-    /// quantized channels, f32 taps on dequantized weights otherwise.
-    fn dw_conv(&self, gi: usize, x: &Act, quantized: bool) -> Act {
+    /// quantized channels, f32 taps on dequantized weights otherwise;
+    /// flattened output pixels sharded across the scope's kernel lanes.
+    fn dw_conv(
+        &self,
+        gi: usize,
+        x: &Act,
+        quantized: bool,
+        scope: &KernelScope,
+        sc: &mut QScratch,
+    ) -> Act {
         let l = &self.spec.layers[gi];
         let ql = &self.layers[gi];
         let (k, stride) = (l.k, l.stride);
         let c = x.c;
         debug_assert_eq!(l.cout, c);
         let (oh, ow, pad) = same_geometry(x.h, x.w, k, stride);
-        let mut out = vec![0.0f32; x.n * oh * ow * c];
+        let rows = x.n * oh * ow;
         let use_int = quantized && ql.any_integer();
-        let (a8, scale_a) = if use_int {
-            quantize_act(&x.data)
+        let scale_a = if use_int {
+            quantize_act_into(&x.buf, &mut sc.a8)
         } else {
-            (Vec::new(), 1.0)
+            1.0
         };
-        let _p = use_int.then(|| profile::time(Op::QMatmul));
-        for b in 0..x.n {
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let orow =
-                        &mut out[((b * oh + oy) * ow + ox) * c..((b * oh + oy) * ow + ox + 1) * c];
+        if use_int {
+            sc.dq.clear();
+            sc.dq.extend(ql.scales.iter().map(|&s| s * scale_a));
+        }
+        let mut out = sc.take(rows * c);
+        {
+            let a8: &[i8] = &sc.a8;
+            let dq: &[f32] = &sc.dq;
+            let (xh, xw) = (x.h, x.w);
+            let xbuf: &[f32] = &x.buf;
+            par_rows(&mut out, rows, c, scope, |r0, r1, chunk| {
+                let _p = use_int.then(|| profile::time(Op::QMatmul));
+                for ri in r0..r1 {
+                    let b = ri / (oh * ow);
+                    let rem = ri % (oh * ow);
+                    let (oy, ox) = (rem / ow, rem % ow);
+                    let orow = &mut chunk[(ri - r0) * c..(ri - r0 + 1) * c];
                     for (ch, ov) in orow.iter_mut().enumerate() {
                         let int_ch = use_int
                             && matches!(ql.kinds[ch], QuantKind::Int8 | QuantKind::Ternary);
@@ -503,35 +998,30 @@ impl QuantNet<'_> {
                         let mut acc_f = 0.0f32;
                         for ky in 0..k {
                             let iy = (oy * stride + ky) as isize - pad as isize;
-                            if iy < 0 || iy >= x.h as isize {
+                            if iy < 0 || iy >= xh as isize {
                                 continue;
                             }
                             for kx in 0..k {
                                 let ix = (ox * stride + kx) as isize - pad as isize;
-                                if ix < 0 || ix >= x.w as isize {
+                                if ix < 0 || ix >= xw as isize {
                                     continue;
                                 }
-                                let src =
-                                    ((b * x.h + iy as usize) * x.w + ix as usize) * c + ch;
+                                let src = ((b * xh + iy as usize) * xw + ix as usize) * c + ch;
                                 let wi = ch * k * k + ky * k + kx;
                                 if int_ch {
                                     acc_i += a8[src] as i32 * ql.codes[wi] as i32;
                                 } else {
-                                    acc_f += x.data[src] * ql.w_deq[wi];
+                                    acc_f += xbuf[src] * ql.w_deq[wi];
                                 }
                             }
                         }
-                        *ov = if int_ch {
-                            acc_i as f32 * scale_a * ql.scales[ch]
-                        } else {
-                            acc_f
-                        };
+                        *ov = if int_ch { acc_i as f32 * dq[ch] } else { acc_f };
                     }
                 }
-            }
+            });
         }
         Act {
-            data: out,
+            buf: out,
             n: x.n,
             h: oh,
             w: ow,
@@ -578,18 +1068,42 @@ mod tests {
     use super::*;
 
     #[test]
-    fn qmatmul_matches_wide_integer_reference() {
+    fn qmatmul_tiers_match_wide_integer_reference() {
         let (m, k, n) = (5, 19, 7);
         let a: Vec<i8> = (0..m * k).map(|i| ((i * 37 + 11) % 255) as i8).collect();
         let b: Vec<i8> = (0..n * k).map(|i| ((i * 53 + 5) % 255) as i8).collect();
-        let mut c = vec![0i32; m * n];
-        qmatmul_bt_into(&a, &b, &mut c, m, k, n);
+        let mut naive = vec![0i32; m * n];
+        let mut blocked = vec![0i32; m * n];
+        let mut dispatch = vec![0i32; m * n];
+        qmatmul_bt_into_naive(&a, &b, &mut naive, m, k, n);
+        qmatmul_bt_into_blocked(&a, &b, &mut blocked, m, k, n);
+        qmatmul_bt_into(&a, &b, &mut dispatch, m, k, n);
         for i in 0..m {
             for j in 0..n {
                 let want: i64 = (0..k)
                     .map(|p| a[i * k + p] as i64 * b[j * k + p] as i64)
                     .sum();
-                assert_eq!(c[i * n + j] as i64, want, "({i},{j})");
+                assert_eq!(naive[i * n + j] as i64, want, "naive ({i},{j})");
+            }
+        }
+        assert_eq!(naive, blocked);
+        assert_eq!(naive, dispatch);
+    }
+
+    #[test]
+    fn dequant_kernel_fuses_scale_exactly() {
+        let (m, k, n) = (3, 11, 6);
+        let a: Vec<i8> = (0..m * k).map(|i| ((i * 29 + 3) % 255) as i8).collect();
+        let b: Vec<i8> = (0..n * k).map(|i| ((i * 31 + 7) % 255) as i8).collect();
+        let dq: Vec<f32> = (0..n).map(|j| 0.01 * (j as f32 + 1.0)).collect();
+        let mut ints = vec![0i32; m * n];
+        qmatmul_bt_into_naive(&a, &b, &mut ints, m, k, n);
+        let mut fused = vec![0.0f32; m * n];
+        qmatmul_bt_dequant_into(&a, &b, &mut fused, m, k, n, &dq);
+        for i in 0..m {
+            for j in 0..n {
+                let want = ints[i * n + j] as f32 * dq[j];
+                assert_eq!(fused[i * n + j].to_bits(), want.to_bits(), "({i},{j})");
             }
         }
     }
@@ -608,6 +1122,13 @@ mod tests {
         let (codes, scale) = quantize_act(&[0.0; 8]);
         assert_eq!(scale, 1.0);
         assert!(codes.iter().all(|&c| c == 0));
+        // the reusable form reuses its buffer and agrees with the
+        // allocating one
+        let mut buf = Vec::new();
+        let s2 = quantize_act_into(&x, &mut buf);
+        let (codes, scale) = quantize_act(&x);
+        assert_eq!(s2.to_bits(), scale.to_bits());
+        assert_eq!(buf, codes);
     }
 
     #[test]

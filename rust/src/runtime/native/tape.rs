@@ -1358,9 +1358,35 @@ fn affine_row(out: &mut [f32], x: &[f32], a: &[f32], b: &[f32]) {
 /// skipped, not written. `pub(crate)`: the quantized inference path
 /// ([`super::qkernels`]) lowers its convs through the same patch fill.
 pub(crate) fn im2col_into(x: &Tensor, k: usize, stride: usize, cols: &mut [f32]) {
-    let (n, h, w, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    im2col_slice_into(
+        &x.data,
+        x.shape[0],
+        x.shape[1],
+        x.shape[2],
+        x.shape[3],
+        k,
+        stride,
+        cols,
+    );
+}
+
+/// Slice form of [`im2col_into`]: no `Tensor` wrapper, so the quantized
+/// forward can lower convs straight from its own activation buffers
+/// without cloning them into a `Tensor` first.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn im2col_slice_into(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    k: usize,
+    stride: usize,
+    cols: &mut [f32],
+) {
     let (oh, ow, pad) = same_geometry(h, w, k, stride);
     let f = k * k * cin;
+    debug_assert_eq!(x.len(), n * h * w * cin);
     debug_assert_eq!(cols.len(), n * oh * ow * f);
     for b in 0..n {
         for oy in 0..oh {
@@ -1378,7 +1404,7 @@ pub(crate) fn im2col_into(x: &Tensor, k: usize, stride: usize, cols: &mut [f32])
                         }
                         let src = ((b * h + iy as usize) * w + ix as usize) * cin;
                         let dst = row + (ky * k + kx) * cin;
-                        cols[dst..dst + cin].copy_from_slice(&x.data[src..src + cin]);
+                        cols[dst..dst + cin].copy_from_slice(&x[src..src + cin]);
                     }
                 }
             }

@@ -431,6 +431,61 @@ pub mod simd {
     #[repr(align(32))]
     pub struct F32x8(pub [f32; 8]);
 
+    /// Portable 8-lane i16 vector — the widening layer of the integer
+    /// GEMM (`qkernels`): i8 codes widen to i16 on load, multiply as
+    /// i32. `i16 × i16` products of int8 codes never exceed `127²`, so
+    /// the widening chain is exact at every step.
+    #[derive(Debug, Clone, Copy)]
+    #[repr(align(16))]
+    pub struct I16x8(pub [i16; 8]);
+
+    impl I16x8 {
+        pub const LANES: usize = 8;
+
+        /// Sign-extend the first 8 `i8` codes of `s`.
+        #[inline(always)]
+        pub fn widen(s: &[i8]) -> I16x8 {
+            let mut v = [0i16; 8];
+            for (d, &c) in v.iter_mut().zip(&s[..8]) {
+                *d = c as i16;
+            }
+            I16x8(v)
+        }
+    }
+
+    /// Portable 8-lane i32 accumulator for the integer GEMM. Integer
+    /// addition is associative, so — unlike [`F32x8`] — any lane layout
+    /// or horizontal-sum order produces the same bits by construction.
+    #[derive(Debug, Clone, Copy)]
+    #[repr(align(32))]
+    pub struct I32x8(pub [i32; 8]);
+
+    impl I32x8 {
+        pub const LANES: usize = 8;
+
+        #[inline(always)]
+        pub fn zero() -> I32x8 {
+            I32x8([0; 8])
+        }
+
+        /// Elementwise `self + a·b` with the products widened to i32.
+        #[inline(always)]
+        #[must_use]
+        pub fn mul_add_widen(self, a: I16x8, b: I16x8) -> I32x8 {
+            let mut o = self.0;
+            for l in 0..Self::LANES {
+                o[l] += a.0[l] as i32 * b.0[l] as i32;
+            }
+            I32x8(o)
+        }
+
+        /// Horizontal sum (order-free: integer adds are associative).
+        #[inline(always)]
+        pub fn hsum(self) -> i32 {
+            self.0.iter().sum()
+        }
+    }
+
     impl F32x8 {
         pub const LANES: usize = 8;
 

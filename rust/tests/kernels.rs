@@ -202,6 +202,98 @@ fn dw_conv_odd_channels_matches_naive() {
     assert_close(&yv.data, &want, 1e-5, "dw conv 5ch");
 }
 
+/// The integer GEMM tiers. Unlike the f32 kernels (where only signed
+/// zeros may differ), integer adds are associative — every tier must be
+/// *exactly* equal on every shape, including the panel edges: 1-row,
+/// 1-column, k and n not multiples of the 4-column/8-lane tiles.
+mod qmatmul_tiers {
+    use odimo::runtime::native::qkernels::{
+        qmatmul_bt_dequant_into, qmatmul_bt_into, qmatmul_bt_into_blocked, qmatmul_bt_into_naive,
+    };
+
+    /// Deterministic i8 fill over the full code range (incl. -128 —
+    /// the kernels must not assume the ±127 clamp).
+    fn fill_i8(len: usize, seed: u64) -> Vec<i8> {
+        let mut st = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+        (0..len)
+            .map(|_| {
+                st = st
+                    .wrapping_mul(6364136223846793005)
+                    .wrapping_add(1442695040888963407);
+                (st >> 40) as i8
+            })
+            .collect()
+    }
+
+    fn naive_i64(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i64> {
+        let mut c = vec![0i64; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                c[i * n + j] = (0..k)
+                    .map(|p| a[i * k + p] as i64 * b[j * k + p] as i64)
+                    .sum();
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn all_tiers_exactly_equal_on_panel_edge_shapes() {
+        for &(m, k, n) in &super::SHAPES {
+            let a = fill_i8(m * k, 101 + (m * 31 + k * 7 + n) as u64);
+            let b = fill_i8(n * k, 103 + (m + k * 5 + n * 3) as u64);
+            let want = naive_i64(&a, &b, m, k, n);
+            let mut naive = vec![0i32; m * n];
+            let mut blocked = vec![0i32; m * n];
+            let mut dispatch = vec![0i32; m * n];
+            qmatmul_bt_into_naive(&a, &b, &mut naive, m, k, n);
+            qmatmul_bt_into_blocked(&a, &b, &mut blocked, m, k, n);
+            qmatmul_bt_into(&a, &b, &mut dispatch, m, k, n);
+            for (i, (&g, &w)) in naive.iter().zip(&want).enumerate() {
+                assert_eq!(g as i64, w, "naive {m}x{k}x{n} elem {i}");
+            }
+            assert_eq!(naive, blocked, "blocked {m}x{k}x{n}");
+            assert_eq!(naive, dispatch, "dispatch {m}x{k}x{n}");
+            #[cfg(feature = "simd-kernels")]
+            {
+                use odimo::runtime::native::qkernels::qmatmul_bt_into_simd;
+                let mut simd = vec![0i32; m * n];
+                qmatmul_bt_into_simd(&a, &b, &mut simd, m, k, n);
+                assert_eq!(naive, simd, "simd {m}x{k}x{n}");
+            }
+        }
+    }
+
+    /// The fused dequant kernel is the same tier sweep with one f32
+    /// multiply per finished accumulator — bit-identical to scaling the
+    /// plain integer output.
+    #[test]
+    fn dequant_kernel_matches_scaled_integer_output_bitwise() {
+        for &(m, k, n) in &super::SHAPES {
+            let a = fill_i8(m * k, 107 + (m * 3 + k + n * 11) as u64);
+            let b = fill_i8(n * k, 109 + (m + k * 13 + n) as u64);
+            // include a pruned-style zero scale
+            let dq: Vec<f32> = (0..n)
+                .map(|j| if j % 5 == 4 { 0.0 } else { 1e-3 * (j + 1) as f32 })
+                .collect();
+            let mut ints = vec![0i32; m * n];
+            qmatmul_bt_into_naive(&a, &b, &mut ints, m, k, n);
+            let mut fused = vec![0.0f32; m * n];
+            qmatmul_bt_dequant_into(&a, &b, &mut fused, m, k, n, &dq);
+            for i in 0..m {
+                for j in 0..n {
+                    let want = ints[i * n + j] as f32 * dq[j];
+                    assert_eq!(
+                        fused[i * n + j].to_bits(),
+                        want.to_bits(),
+                        "dequant {m}x{k}x{n} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+}
+
 #[cfg(feature = "simd-kernels")]
 mod simd_vs_scalar {
     use super::{fill, SHAPES};

@@ -182,6 +182,53 @@ fn fixed_variant_metrics_tie_into_tape_eval() {
     );
 }
 
+/// The quantized forward's determinism matrix, the integer analogue of
+/// `native_exec::thread_count_determinism_matrix`. The contract is
+/// stronger than the f32 one: activation scales are computed per fixed
+/// batch shard (`NSHARDS`, never the thread count) and integer addition
+/// is associative, so logits and metrics must be *bit-identical* at any
+/// thread count. (Cross-*tier* identity of the integer GEMM itself —
+/// naive vs blocked vs SIMD — is pinned exactly in `tests/kernels.rs`;
+/// this test never flips the process-global SIMD toggle, per the
+/// `tensor` module's contract.)
+#[test]
+fn quantized_eval_bit_identical_across_threads_and_tiers() {
+    for arch in ["resnet8", "mbv1"] {
+        for soc in ["diana", "gap9"] {
+            let variant = format!("{soc}_{arch}_tiny");
+            let be1 = build(&variant);
+            let (state, x, y) = trained_state(&be1, 2);
+            let n = y.len();
+            let qnet1 = be1.quantize(&state).expect("quantize");
+            let logits1: Vec<u32> = qnet1.forward(&x, n).iter().map(|v| v.to_bits()).collect();
+            let m1 = be1.eval_batch_quantized(&state, &x, &y).expect("qeval");
+            for threads in [2usize, 4] {
+                let bet = NativeBackend::build_with(
+                    &variant,
+                    NativeOptions {
+                        threads,
+                        w_optimizer: WOptimizer::SgdMomentum,
+                    },
+                )
+                .expect("native variant");
+                let qnett = bet.quantize(&state).expect("quantize");
+                let logits_t: Vec<u32> =
+                    qnett.forward(&x, n).iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    logits1, logits_t,
+                    "{variant}: quantized logits differ at {threads} threads"
+                );
+                let mt = bet.eval_batch_quantized(&state, &x, &y).expect("qeval");
+                assert_eq!(
+                    m1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    mt.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{variant}: quantized metrics differ at {threads} threads"
+                );
+            }
+        }
+    }
+}
+
 /// Prune-mode discretization: each searchable channel keeps the primary
 /// CU's quantizer iff its keep-logit wins, else the row is Zero — read
 /// straight off the θ leaves.
