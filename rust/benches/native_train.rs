@@ -14,12 +14,20 @@
 //! Regression gate: when `BENCH_CHECK=1` (set by the CI job) the bench
 //! compares the resnet8 single-thread *and* 4-thread steps/sec, the 1-
 //! and 4-thread quantized evals/sec, the quantized 4-thread speedup
-//! ratio and the blocked-vs-naive qmatmul ratio against the committed
+//! ratio, the blocked-vs-naive qmatmul ratio and the f32 train-step
+//! 4-thread speedup ratio against the committed
 //! `rust/benches/native_train.baseline.json` and exits non-zero on a
 //! >10% regression on any. The absolute floors are conservative
 //! (machines differ) — re-pin them from a CI run's emitted JSON
-//! whenever the engine gets deliberately faster; the two `_min` ratio
-//! floors are machine-independent and carry the acceptance criteria.
+//! whenever the engine gets deliberately faster; the three `_min` ratio
+//! floors are machine-independent (both numbers come from the same run
+//! on the same machine) and carry the acceptance criteria.
+//!
+//! Since the Amdahl-sweep PR the JSON also carries
+//! `train_speedup_4_threads` (renamed from `speedup_4_threads`) and
+//! `serial_fraction` — the share of the profiled single-thread step in
+//! the never-laned buckets (`theta`, `cost_model`, `elementwise`), i.e.
+//! the Amdahl serial term the lane sweep cannot touch.
 //!
 //! Since the SIMD/quantization PRs the JSON also carries:
 //!
@@ -378,6 +386,20 @@ fn kernel_gflops() -> Value {
     Value::obj(fields)
 }
 
+/// Amdahl serial term of a profiled breakdown: the summed share of the
+/// buckets no kernel lane ever touches — `theta`, `cost_model`,
+/// `elementwise` (the never-laned set documented in the lane-attribution
+/// section of `runtime/native/profile`). Everything else either runs on
+/// lanes already or is a serial remnant of a laned op, so this is the
+/// floor the parallelization sweep is squeezing.
+fn serial_fraction(per_op: &Value) -> f64 {
+    ["theta", "cost_model", "elementwise"]
+        .iter()
+        .filter_map(|op| per_op.get(op))
+        .filter_map(|v| v.f64_of("share").ok())
+        .sum()
+}
+
 /// `BENCH_CHECK=1` gate: fail on a >10% regression vs a committed floor.
 fn gate(label: &str, measured: f64, baseline: &Value, key: &str) -> bool {
     let floor = baseline
@@ -459,6 +481,12 @@ fn main() {
     let per_op_resnet8 = per_op_breakdown(ACCEPTANCE_VARIANT, 2);
     let per_op_mbv1 = per_op_breakdown(POINTWISE_VARIANT, 2);
     let per_op_qeval = per_op_quantized(ACCEPTANCE_VARIANT, 4);
+    let serial_frac = serial_fraction(&per_op_resnet8);
+    println!(
+        "   -> serial fraction on {ACCEPTANCE_VARIANT}: {:.1}% \
+         (theta + cost_model + elementwise, the never-laned buckets)",
+        100.0 * serial_frac
+    );
 
     // emit the trajectory record
     let mut fields = vec![
@@ -466,7 +494,8 @@ fn main() {
         ("simd_kernels", Value::Bool(cfg!(feature = "simd-kernels"))),
         ("threads1_steps_per_sec", Value::num(s1)),
         ("threads4_steps_per_sec", Value::num(s4)),
-        ("speedup_4_threads", Value::num(speedup)),
+        ("train_speedup_4_threads", Value::num(speedup)),
+        ("serial_fraction", Value::num(serial_frac)),
         ("mbv1_variant", Value::str(POINTWISE_VARIANT)),
         ("mbv1_threads1_steps_per_sec", Value::num(m1)),
         ("mbv1_threads4_steps_per_sec", Value::num(m4)),
@@ -532,6 +561,12 @@ fn main() {
                 qmatmul_speedup,
                 &base,
                 "qmatmul_speedup_vs_naive_min",
+            ),
+            gate(
+                "train 4-thread speedup",
+                speedup,
+                &base,
+                "train_speedup_4_threads_min",
             ),
         ];
         if checks.iter().any(|ok| !ok) {

@@ -620,32 +620,58 @@ impl NativeBackend {
     }
 }
 
-/// Fixed-order binary tree reduction of per-shard gradients: shard 0's
-/// buffers accumulate `((g0+g1)+(g2+g3))…` regardless of how many
-/// threads produced them. Right-hand buffers are recycled into the
-/// paired shard's arena.
-fn tree_reduce_grads(outs: &mut [ShardOut]) -> Vec<Vec<f32>> {
+/// Fixed-order binary tree reduction of per-shard gradients: each leaf
+/// accumulates `((g0+g1)+(g2+g3))…` regardless of how many threads
+/// produced (or reduce) them. Leaves are independent of one another, so
+/// they fan out as pool tasks — the binary tree *within* a leaf keeps
+/// the exact serial association, which is the whole determinism
+/// argument: parallelism is across leaves, never across the reduction
+/// order. Right-hand buffers are recycled into the paired shard's arena
+/// *after* the parallel region (arenas are single-threaded).
+fn tree_reduce_grads(outs: &mut [ShardOut], pool: &WorkerPool) -> Vec<Vec<f32>> {
     let s = outs.len();
-    let mut bufs: Vec<Vec<Vec<f32>>> = outs
-        .iter_mut()
-        .map(|o| std::mem::take(&mut o.grads))
-        .collect();
-    let mut d = 1;
-    while d < s {
-        let mut i = 0;
-        while i + d < s {
-            let right = std::mem::take(&mut bufs[i + d]);
-            for (acc, r) in bufs[i].iter_mut().zip(right) {
-                for (a, &b) in acc.iter_mut().zip(&r) {
+    let nleaves = outs[0].grads.len();
+    // transpose to leaf-major (Vec moves only, no element copies)
+    let mut by_leaf: Vec<Vec<Vec<f32>>> = (0..nleaves).map(|_| Vec::with_capacity(s)).collect();
+    for o in outs.iter_mut() {
+        for (l, b) in std::mem::take(&mut o.grads).into_iter().enumerate() {
+            by_leaf[l].push(b);
+        }
+    }
+    let cells: Vec<Mutex<Option<Vec<Vec<f32>>>>> =
+        by_leaf.into_iter().map(|v| Mutex::new(Some(v))).collect();
+    let done: Vec<Vec<Vec<f32>>> = pool.run_tasks(nleaves, &|l, _scope| {
+        let _p = profile::time(Op::Reduce);
+        let mut g = cells[l]
+            .lock()
+            .unwrap()
+            .take()
+            .expect("each leaf reduces exactly once");
+        let mut d = 1;
+        while d < s {
+            let mut i = 0;
+            while i + d < s {
+                let right = std::mem::take(&mut g[i + d]);
+                for (a, &b) in g[i].iter_mut().zip(&right) {
                     *a += b;
                 }
-                outs[i + d].arena.give(r);
+                // park the spent buffer back in its slot for recycling
+                g[i + d] = right;
+                i += 2 * d;
             }
-            i += 2 * d;
+            d *= 2;
         }
-        d *= 2;
+        g
+    });
+    let mut reduced = Vec::with_capacity(nleaves);
+    for g in done {
+        let mut it = g.into_iter();
+        reduced.push(it.next().expect("leaf tree leaves the sum in slot 0"));
+        for (j, spent) in it.enumerate() {
+            outs[j + 1].arena.give(spent);
+        }
     }
-    std::mem::take(&mut bufs[0])
+    reduced
 }
 
 /// θ → expected per-CU counts through [`theta_counts`] — the *same*
@@ -727,10 +753,9 @@ impl ModelBackend for NativeBackend {
         });
 
         // --- fixed-order reduction + metrics ------------------------------
-        let reduced = {
-            let _p = profile::time(Op::Reduce);
-            tree_reduce_grads(&mut outs)
-        };
+        // (the Op::Reduce probes live inside the per-leaf tasks — lane-
+        // summed attribution, see `super::profile`)
+        let reduced = tree_reduce_grads(&mut outs, &self.pool);
         let mut loss_val = 0.0f32;
         let mut correct = 0.0f32;
         let mut loss_sum = 0.0f32;
@@ -747,78 +772,153 @@ impl ModelBackend for NativeBackend {
             reduced.len(),
             n_w + self.geoms.iter().filter(|g| g.theta.is_some()).count()
         );
-        let p_opt = profile::time(Op::Optimizer);
+        // Each W leaf's update touches only its own parameter/optimizer
+        // buffers, so leaves fan out as pool tasks; the arithmetic within
+        // a leaf is the serial loop's, so results are thread-count
+        // independent. Leaves are moved out via per-task cells and put
+        // back in slot order (Op::Optimizer probes sit inside the tasks —
+        // lane-summed attribution, see `super::profile`).
         match self.optimizer {
             WOptimizer::SgdMomentum => {
-                for (slot, g) in self.opt.iter().zip(&reduced[..n_w]) {
-                    scale_add_into(&mut state.leaves[slot.m], W_MOMENTUM, g);
-                    let mom = std::mem::take(&mut state.leaves[slot.m]);
-                    axpy_into(&mut state.leaves[slot.p], -hp.lr_w, &mom);
-                    state.leaves[slot.m] = mom;
+                let cells: Vec<Mutex<Option<(Vec<f32>, Vec<f32>)>>> = self
+                    .opt
+                    .iter()
+                    .map(|slot| {
+                        Mutex::new(Some((
+                            std::mem::take(&mut state.leaves[slot.p]),
+                            std::mem::take(&mut state.leaves[slot.m]),
+                        )))
+                    })
+                    .collect();
+                let reduced_ro: &[Vec<f32>] = &reduced;
+                let done = self.pool.run_tasks(n_w, &|i, _scope| {
+                    let _p = profile::time(Op::Optimizer);
+                    let (mut p, mut m) = cells[i]
+                        .lock()
+                        .unwrap()
+                        .take()
+                        .expect("each W leaf updates exactly once");
+                    scale_add_into(&mut m, W_MOMENTUM, &reduced_ro[i]);
+                    axpy_into(&mut p, -hp.lr_w, &m);
+                    (p, m)
+                });
+                for (slot, (p, m)) in self.opt.iter().zip(done) {
+                    state.leaves[slot.p] = p;
+                    state.leaves[slot.m] = m;
                 }
             }
             WOptimizer::Adam => {
+                // the shared step counter / bias corrections are scalar
+                // work: serial, before the fan-out
                 let tl = self.step_leaf.expect("adam state has a step leaf");
                 state.leaves[tl][0] += 1.0;
                 let t = state.leaves[tl][0] as i32;
                 let b1c = (1.0 - ADAM_B1.powi(t)) as f32;
                 let b2c = (1.0 - ADAM_B2.powi(t)) as f32;
-                for (slot, g) in self.opt.iter().zip(&reduced[..n_w]) {
-                    let v_leaf = slot.v.expect("adam slots carry a second moment");
-                    {
-                        let m = &mut state.leaves[slot.m];
-                        for (mv, &gv) in m.iter_mut().zip(g) {
-                            *mv = (ADAM_B1 as f32) * *mv + (1.0 - ADAM_B1 as f32) * gv;
-                        }
+                type PmV = (Vec<f32>, Vec<f32>, Vec<f32>);
+                let cells: Vec<Mutex<Option<PmV>>> = self
+                    .opt
+                    .iter()
+                    .map(|slot| {
+                        let v_leaf = slot.v.expect("adam slots carry a second moment");
+                        Mutex::new(Some((
+                            std::mem::take(&mut state.leaves[slot.p]),
+                            std::mem::take(&mut state.leaves[slot.m]),
+                            std::mem::take(&mut state.leaves[v_leaf]),
+                        )))
+                    })
+                    .collect();
+                let reduced_ro: &[Vec<f32>] = &reduced;
+                let done = self.pool.run_tasks(n_w, &|i, _scope| {
+                    let _p = profile::time(Op::Optimizer);
+                    let (mut p, mut m, mut v) = cells[i]
+                        .lock()
+                        .unwrap()
+                        .take()
+                        .expect("each W leaf updates exactly once");
+                    let g = &reduced_ro[i];
+                    for (mv, &gv) in m.iter_mut().zip(g) {
+                        *mv = (ADAM_B1 as f32) * *mv + (1.0 - ADAM_B1 as f32) * gv;
                     }
-                    {
-                        let v = &mut state.leaves[v_leaf];
-                        for (vv, &gv) in v.iter_mut().zip(g) {
-                            *vv = (ADAM_B2 as f32) * *vv + (1.0 - ADAM_B2 as f32) * gv * gv;
-                        }
+                    for (vv, &gv) in v.iter_mut().zip(g) {
+                        *vv = (ADAM_B2 as f32) * *vv + (1.0 - ADAM_B2 as f32) * gv * gv;
                     }
-                    let m = std::mem::take(&mut state.leaves[slot.m]);
-                    let v = std::mem::take(&mut state.leaves[v_leaf]);
-                    for ((pv, &mv), &vv) in state.leaves[slot.p].iter_mut().zip(&m).zip(&v) {
+                    for ((pv, &mv), &vv) in p.iter_mut().zip(&m).zip(&v) {
                         let mhat = mv / b1c;
                         let vhat = vv / b2c;
                         *pv -= hp.lr_w * mhat / (vhat.sqrt() + ADAM_EPS);
                     }
+                    (p, m, v)
+                });
+                for (slot, (p, m, v)) in self.opt.iter().zip(done) {
+                    state.leaves[slot.p] = p;
                     state.leaves[slot.m] = m;
-                    state.leaves[v_leaf] = v;
+                    state.leaves[slot.v.expect("adam slots carry a second moment")] = v;
                 }
             }
         }
-        // θ: plain SGD on its own learning rate
-        let theta_leaves: Vec<usize> = self.geoms.iter().filter_map(|g| g.theta).collect();
-        for (tleaf, g) in theta_leaves.iter().zip(&reduced[n_w..]) {
-            axpy_into(&mut state.leaves[*tleaf], -hp.lr_th, g);
+        // θ: plain SGD on its own learning rate — a handful of tiny [c,k]
+        // tables, not worth a fan-out
+        {
+            let _p = profile::time(Op::Optimizer);
+            let theta_leaves: Vec<usize> = self.geoms.iter().filter_map(|g| g.theta).collect();
+            for (tleaf, g) in theta_leaves.iter().zip(&reduced[n_w..]) {
+                axpy_into(&mut state.leaves[*tleaf], -hp.lr_th, g);
+            }
         }
-        drop(p_opt);
 
         // --- BN running statistics (shard-weighted, fixed order) ----------
-        let _p_bn = profile::time(Op::Reduce);
-        for (gi, gl) in self.geoms.iter().enumerate() {
-            if outs[0].stats[gi].is_none() {
-                continue;
-            }
-            let cout = self.spec.layers[gi].cout;
-            let mut mean = vec![0.0f32; cout];
-            let mut var = vec![0.0f32; cout];
-            for o in &outs {
-                let (m, v) = o.stats[gi].as_ref().expect("shards share the geometry");
-                for (acc, &x) in mean.iter_mut().zip(m) {
-                    *acc += o.scale * x;
+        // geometries are independent (each owns its mean/var leaves), so
+        // they fan out as pool tasks; the shard-weighted sum within a
+        // geometry stays in shard-index order — the numerical contract
+        {
+            let with_stats: Vec<usize> = (0..self.geoms.len())
+                .filter(|&gi| outs[0].stats[gi].is_some())
+                .collect();
+            type MeanVar = (Vec<f32>, Vec<f32>);
+            let cells: Vec<Mutex<Option<MeanVar>>> = with_stats
+                .iter()
+                .map(|&gi| {
+                    let gl = &self.geoms[gi];
+                    Mutex::new(Some((
+                        std::mem::take(&mut state.leaves[gl.mean]),
+                        std::mem::take(&mut state.leaves[gl.var]),
+                    )))
+                })
+                .collect();
+            let outs_ro: &[ShardOut] = &outs;
+            let done = self.pool.run_tasks(with_stats.len(), &|i, _scope| {
+                let _p = profile::time(Op::Reduce);
+                let gi = with_stats[i];
+                let cout = self.spec.layers[gi].cout;
+                let (mut rm, mut rv) = cells[i]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("each geometry merges exactly once");
+                let mut mean = vec![0.0f32; cout];
+                let mut var = vec![0.0f32; cout];
+                for o in outs_ro {
+                    let (m, v) = o.stats[gi].as_ref().expect("shards share the geometry");
+                    for (acc, &x) in mean.iter_mut().zip(m) {
+                        *acc += o.scale * x;
+                    }
+                    for (acc, &x) in var.iter_mut().zip(v) {
+                        *acc += o.scale * x;
+                    }
                 }
-                for (acc, &x) in var.iter_mut().zip(v) {
-                    *acc += o.scale * x;
+                for (m, &b) in rm.iter_mut().zip(&mean) {
+                    *m = BN_MOMENTUM * *m + (1.0 - BN_MOMENTUM) * b;
                 }
-            }
-            for (m, &b) in state.leaves[gl.mean].iter_mut().zip(&mean) {
-                *m = BN_MOMENTUM * *m + (1.0 - BN_MOMENTUM) * b;
-            }
-            for (v, &b) in state.leaves[gl.var].iter_mut().zip(&var) {
-                *v = BN_MOMENTUM * *v + (1.0 - BN_MOMENTUM) * b;
+                for (v, &b) in rv.iter_mut().zip(&var) {
+                    *v = BN_MOMENTUM * *v + (1.0 - BN_MOMENTUM) * b;
+                }
+                (rm, rv)
+            });
+            for (&gi, (rm, rv)) in with_stats.iter().zip(done) {
+                let gl = &self.geoms[gi];
+                state.leaves[gl.mean] = rm;
+                state.leaves[gl.var] = rv;
             }
         }
 
@@ -893,5 +993,56 @@ impl ModelBackend for NativeBackend {
             mat.extend(e.cycles.iter().map(|&c| c as f32));
         }
         Ok((mat, vec![lat_total as f32, energy_total as f32]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard(vals: &[Vec<f32>]) -> ShardOut {
+        ShardOut {
+            scale: 0.25,
+            loss: 0.0,
+            bits: EvalBits {
+                correct: 0.0,
+                loss_sum: 0.0,
+            },
+            lat: 0.0,
+            energy_uj: 0.0,
+            grads: vals.to_vec(),
+            stats: Vec::new(),
+            arena: Arena::new(),
+        }
+    }
+
+    /// The per-leaf-parallel reduce must reproduce the serial reference
+    /// tree bit for bit: leaves only move across tasks, the fixed
+    /// ((g0+g1)+(g2+g3)) association within each leaf never changes.
+    #[test]
+    fn parallel_tree_reduce_matches_serial_reference() {
+        let leaves: Vec<Vec<Vec<f32>>> = (0..4)
+            .map(|s| {
+                (0..5)
+                    .map(|l| {
+                        (0..(l + 3))
+                            .map(|j| ((s * 31 + l * 7 + j) as f32 * 0.37).sin())
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let run = |width: usize| -> Vec<Vec<u32>> {
+            let pool = WorkerPool::new(width);
+            let mut outs: Vec<ShardOut> = leaves.iter().map(|g| shard(g)).collect();
+            tree_reduce_grads(&mut outs, &pool)
+                .into_iter()
+                .map(|v| v.iter().map(|x| x.to_bits()).collect())
+                .collect()
+        };
+        let serial = run(1);
+        for width in [2usize, 3, 6] {
+            assert_eq!(serial, run(width), "reduce differs at width {width}");
+        }
     }
 }

@@ -294,10 +294,16 @@ fn conv_bn_sizes(
         // dW and dX matmul scratch
         bag.add(cout * f, 1); // dW scratch
         bag.add(rows * f, 1); // dX scratch
+        if cfg!(feature = "simd-kernels") {
+            bag.add(rows * cout, 1); // dW Aᵀ-panel pack scratch
+        }
     } else {
         bag.add(rows * f, 1); // im2col patches (aux)
         bag.add(rows * f, 1); // dcols scratch
         bag.add(cout * f, 1); // dW scratch
+        if cfg!(feature = "simd-kernels") {
+            bag.add(rows * cout, 1); // dW Aᵀ-panel pack scratch
+        }
     }
     // batch norm: x̂ (aux) + output node + 2 per-channel scratch rows
     bag.add(rows * cout, 1);

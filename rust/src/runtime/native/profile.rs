@@ -18,13 +18,32 @@
 //! the bench emits them into `BENCH_native_train.json` as the per-op
 //! trajectory record.
 //!
-//! Lane attribution: because the counters are global atomics, a probe
-//! placed *inside* a `par_rows`/pool-lane closure records each lane's
-//! own elapsed time, and the bucket total is the summed CPU time across
-//! lanes (not wall time) — the quantized forward places its
-//! `Op::QMatmul` probes this way, so its breakdown stays truthful under
-//! threading. A probe placed *outside* a parallel region times the
-//! caller's wall clock instead.
+//! # Lane attribution (the `Op::QMatmul` convention)
+//!
+//! Because the counters are global atomics, a probe placed *inside* a
+//! `par_rows`/pool-lane closure records each lane's own elapsed time,
+//! and the bucket total is the **summed CPU time across lanes** (not
+//! wall time). A probe placed *outside* a parallel region times the
+//! caller's wall clock instead. Every laned op places its probe inside
+//! the lane closure — and its call site carries **no** outer probe, so
+//! nothing is double-counted:
+//!
+//! - `Op::QMatmul` — the quantized int8 GEMM lanes (the original)
+//! - `Op::Matmul` — the three `par_matmul_*` orientations + packed tier
+//! - `Op::Im2col` — per-image im2col fill and col2im scatter lanes
+//! - `Op::DwConv` — depthwise forward row lanes / backward channel lanes
+//! - `Op::BatchNorm` — the laned normalize/affine and dx row maps
+//! - `Op::Quant` / `Op::QuantBwd` — branch-quant, W_eff mix and STE lanes
+//! - `Op::Loss` — softmax row lanes and the laned CE backward
+//! - `Op::Reduce` — per-leaf gradient tree tasks + BN stat-merge tasks
+//! - `Op::Optimizer` — per-leaf W update tasks (θ's SGD stays serial)
+//!
+//! The serial remnants of those ops (BN/softmax cross-row reductions,
+//! the depthwise dW fold, θ updates) keep caller-side probes in the same
+//! buckets. Consequence for readers of `per_op`: a bucket's share can
+//! exceed its wall-clock share once its op runs on >1 lane, and the
+//! bench's `serial_fraction` treats exactly the never-laned buckets
+//! (`theta`, `cost_model`, `elementwise`) as the Amdahl serial term.
 
 /// The op buckets the breakdown reports. Coarse by design: buckets are
 /// stable across refactors so trajectories stay comparable.

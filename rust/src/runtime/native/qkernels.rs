@@ -894,7 +894,7 @@ impl<'a> QuantNet<'a> {
         } else {
             // take() zeroes, so padding taps stay 0
             let mut buf = sc.take(rows * f);
-            im2col_slice_into(&x.buf, x.n, x.h, x.w, x.c, k, stride, &mut buf);
+            im2col_slice_into(&x.buf, x.n, x.h, x.w, x.c, k, stride, &mut buf, scope);
             Some(buf)
         };
         let cols: &[f32] = cols_owned.as_deref().unwrap_or(&x.buf);

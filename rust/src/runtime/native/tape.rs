@@ -53,7 +53,22 @@ use crate::soc::{analytical::cu_cycles, CuSpec, Layer};
 use super::arena::Arena;
 use super::pool::KernelScope;
 use super::profile::{self, Op};
-use super::tensor::{par_matmul_at_into, par_matmul_bt_into, par_matmul_into, par_rows, Tensor};
+use super::tensor::{
+    par_matmul_at_into, par_matmul_at_into_packed, par_matmul_bt_into, par_matmul_into, par_rows,
+    Tensor,
+};
+
+/// Raw mutable base pointer smuggled into SPMD lane closures for the
+/// ops whose lane-disjoint writes are *strided* (channel sub-ranges,
+/// paired output buffers) rather than contiguous row blocks — the same
+/// soundness argument as `tensor::par_rows`: every element is written
+/// by exactly one lane, and `KernelScope::run` does not return until
+/// all lanes are done, so the resliced `&mut` views never alias.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
 
 /// Handle to one tape node.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -119,6 +134,21 @@ impl GradStore {
         self.slots[i]
             .as_mut()
             .expect("reading a consumed gradient slot")
+    }
+
+    /// Mutable views of two *distinct* slots at once (the
+    /// effective-weights backward updates dW and dθ in one laned pass).
+    fn grad_mut2(&mut self, i: usize, j: usize) -> (&mut [f32], &mut [f32]) {
+        assert_ne!(i, j, "grad_mut2 needs two distinct slots");
+        let (lo, hi) = (i.min(j), i.max(j));
+        let (a, b) = self.slots.split_at_mut(hi);
+        let x = a[lo].as_mut().expect("reading a consumed gradient slot");
+        let y = b[0].as_mut().expect("reading a consumed gradient slot");
+        if i < j {
+            (x, y)
+        } else {
+            (y, x)
+        }
     }
 
     fn take_raw(&mut self, len: usize) -> Vec<f32> {
@@ -508,23 +538,21 @@ impl Tape {
         debug_assert_eq!(bv.shape[0], k);
         let sc = self.kernel.clone();
         let mut y = self.alloc_raw(m * n);
-        {
-            let _p = profile::time(Op::Matmul);
-            par_matmul_into(&av.data, &bv.data, &mut y, m, k, n, &sc);
-        }
+        // the Op::Matmul probes live inside the par_matmul_* lane
+        // closures (lane-summed attribution — see `super::profile`)
+        par_matmul_into(&av.data, &bv.data, &mut y, m, k, n, &sc);
         let val = Tensor::new(vec![m, n], y);
         let (sa, sb) = (Rc::clone(&av), Rc::clone(&bv));
         self.push(
             val,
             Some(Box::new(move |g, store| {
-                let _p = profile::time(Op::Matmul);
                 // dA = g · Bᵀ ; dB = Aᵀ · g
                 let mut da = store.take_raw(m * k);
                 par_matmul_bt_into(g, &sb.data, &mut da, m, n, k, &sc);
                 store.acc(a.0, &da);
                 store.give(da);
                 let mut db = store.take_raw(k * n);
-                par_matmul_at_into(&sa.data, g, &mut db, m, k, n, &sc);
+                matmul_at_via_pack(&sa.data, g, &mut db, m, k, n, &sc, store);
                 store.acc(b.0, &db);
                 store.give(db);
             })),
@@ -594,16 +622,10 @@ impl Tape {
         let rows = n * oh * ow;
         let sc = self.kernel.clone();
         let mut cols_buf = self.alloc_zeroed(rows * f);
-        {
-            let _p = profile::time(Op::Im2col);
-            im2col_into(&xv, k, stride, &mut cols_buf);
-        }
+        im2col_into(&xv, k, stride, &mut cols_buf, &sc);
         let cols = self.track_aux(Tensor::new(vec![rows, f], cols_buf));
         let mut y = self.alloc_raw(rows * cout);
-        {
-            let _p = profile::time(Op::Matmul);
-            par_matmul_bt_into(&cols.data, &wv.data, &mut y, rows, f, cout, &sc);
-        }
+        par_matmul_bt_into(&cols.data, &wv.data, &mut y, rows, f, cout, &sc);
         let val = Tensor::new(vec![n, oh, ow, cout], y);
         let saved_w = Rc::clone(&wv);
         self.push(
@@ -611,20 +633,25 @@ impl Tape {
             Some(Box::new(move |g, store| {
                 // dW[cout,F] = gᵀ[cout,rows] · cols[rows,F]
                 let mut dw = store.take_raw(cout * f);
-                {
-                    let _p = profile::time(Op::Matmul);
-                    par_matmul_at_into(g, &cols.data, &mut dw, rows, cout, f, &sc);
-                }
+                matmul_at_via_pack(g, &cols.data, &mut dw, rows, cout, f, &sc, store);
                 store.acc(w.0, &dw);
                 store.give(dw);
                 // dCols = g[rows,cout] · W[cout,F], scattered back to x
                 let mut dcols = store.take_raw(rows * f);
-                {
-                    let _p = profile::time(Op::Matmul);
-                    par_matmul_into(g, &saved_w.data, &mut dcols, rows, cout, f, &sc);
-                }
-                let _p = profile::time(Op::Im2col);
-                col2im(&dcols, store.grad_mut(x.0), n, h, ww, cin, k, stride, oh, ow);
+                par_matmul_into(g, &saved_w.data, &mut dcols, rows, cout, f, &sc);
+                col2im(
+                    &dcols,
+                    store.grad_mut(x.0),
+                    n,
+                    h,
+                    ww,
+                    cin,
+                    k,
+                    stride,
+                    oh,
+                    ow,
+                    &sc,
+                );
                 store.give(dcols);
             })),
         )
@@ -644,32 +671,20 @@ impl Tape {
         let rows = n * h * ww;
         let sc = self.kernel.clone();
         let mut y = self.alloc_raw(rows * cout);
-        {
-            let _p = profile::time(Op::Matmul);
-            par_matmul_bt_into(&xv.data, &wv.data, &mut y, rows, cin, cout, &sc);
-        }
+        par_matmul_bt_into(&xv.data, &wv.data, &mut y, rows, cin, cout, &sc);
         let val = Tensor::new(vec![n, h, ww, cout], y);
         let (saved_x, saved_w) = (Rc::clone(&xv), Rc::clone(&wv));
         self.push(
             val,
             Some(Box::new(move |g, store| {
-                // probes scoped to the matmuls only, mirroring the
-                // im2col path, so the cross-shape per-op comparison is
-                // apples-to-apples
                 let mut dw = store.take_raw(cout * cin);
-                {
-                    let _p = profile::time(Op::Matmul);
-                    // dW[cout,cin] = gᵀ[cout,rows] · x[rows,cin]
-                    par_matmul_at_into(g, &saved_x.data, &mut dw, rows, cout, cin, &sc);
-                }
+                // dW[cout,cin] = gᵀ[cout,rows] · x[rows,cin]
+                matmul_at_via_pack(g, &saved_x.data, &mut dw, rows, cout, cin, &sc, store);
                 store.acc(w.0, &dw);
                 store.give(dw);
                 let mut dx = store.take_raw(rows * cin);
-                {
-                    let _p = profile::time(Op::Matmul);
-                    // dX[rows,cin] = g[rows,cout] · W[cout,cin]
-                    par_matmul_into(g, &saved_w.data, &mut dx, rows, cout, cin, &sc);
-                }
+                // dX[rows,cin] = g[rows,cout] · W[cout,cin]
+                par_matmul_into(g, &saved_w.data, &mut dx, rows, cout, cin, &sc);
                 store.acc(x.0, &dx);
                 store.give(dx);
             })),
@@ -701,23 +716,22 @@ impl Tape {
         }
         let wt = self.track_aux(Tensor::new(vec![k * k, c], wt_buf));
         let mut y = self.alloc_zeroed(n * oh * ow * c);
-        {
-            let _p = profile::time(Op::DwConv);
-            dw_forward(&xv.data, &wt.data, &mut y, n, h, ww, c, k, stride, pad, &sc);
-        }
+        dw_forward(&xv.data, &wt.data, &mut y, n, h, ww, c, k, stride, pad, &sc);
         let val = Tensor::new(vec![n, oh, ow, c], y);
         let sx = Rc::clone(&xv);
         self.push(
             val,
             Some(Box::new(move |g, store| {
-                let _p = profile::time(Op::DwConv);
                 // accumulate dW in the transposed layout (contiguous
                 // channel lanes), then fold back to the [c, k·k] slot
                 let mut dwt = store.take_zeroed(c * k * k);
                 let mut dx = store.take_zeroed(n * h * ww * c);
                 dw_backward(
-                    &sx.data, &wt.data, g, &mut dx, &mut dwt, n, h, ww, c, k, stride, pad,
+                    &sx.data, &wt.data, g, &mut dx, &mut dwt, n, h, ww, c, k, stride, pad, &sc,
                 );
+                // fold + accumulate remnant stays serial; keep it inside
+                // the DwConv bucket so the op's cost is fully attributed
+                let _p = profile::time(Op::DwConv);
                 let mut dw = store.take_raw(c * k * k);
                 for ch in 0..c {
                     for wi in 0..k * k {
@@ -749,40 +763,57 @@ impl Tape {
         let (xv, sv, bv) = (self.rc(x), self.rc(scale), self.rc(bias));
         let c = *xv.shape.last().unwrap();
         let m = xv.elem_count() / c;
-        let _p = profile::time(Op::BatchNorm);
+        let sc = self.kernel.clone();
         const EPS: f32 = 1e-5;
-        // row walks (chunks of c) instead of `i % c` indexing: the
-        // per-channel accumulation order over rows is unchanged, but the
-        // inner loops run over contiguous lanes and vectorize
+        // The cross-row per-channel reductions (mean / var, and sum_dy /
+        // sum_dy·x̂ in the backward) stay serial by design: sharding rows
+        // across lanes would change the accumulation order with lane
+        // count and break the bit-identity contract. Row walks (chunks
+        // of c) instead of `i % c` indexing: the per-channel accumulation
+        // order over rows is unchanged, but the inner loops run over
+        // contiguous lanes and vectorize.
         let mut mean = vec![0.0f32; c];
-        for xrow in xv.data.chunks_exact(c) {
-            for (mv, &v) in mean.iter_mut().zip(xrow) {
-                *mv += v;
-            }
-        }
-        for v in mean.iter_mut() {
-            *v /= m as f32;
-        }
         let mut var = vec![0.0f32; c];
-        for xrow in xv.data.chunks_exact(c) {
-            for ((vv, &v), &mu) in var.iter_mut().zip(xrow).zip(&mean) {
-                let d = v - mu;
-                *vv += d * d;
+        let inv: Vec<f32> = {
+            let _p = profile::time(Op::BatchNorm);
+            for xrow in xv.data.chunks_exact(c) {
+                for (mv, &v) in mean.iter_mut().zip(xrow) {
+                    *mv += v;
+                }
             }
-        }
-        for v in var.iter_mut() {
-            *v /= m as f32;
-        }
-        let inv: Vec<f32> = var.iter().map(|&v| 1.0 / (v + EPS).sqrt()).collect();
+            for v in mean.iter_mut() {
+                *v /= m as f32;
+            }
+            for xrow in xv.data.chunks_exact(c) {
+                for ((vv, &v), &mu) in var.iter_mut().zip(xrow).zip(&mean) {
+                    let d = v - mu;
+                    *vv += d * d;
+                }
+            }
+            for v in var.iter_mut() {
+                *v /= m as f32;
+            }
+            var.iter().map(|&v| 1.0 / (v + EPS).sqrt()).collect()
+        };
         let mut xhat_buf = self.alloc_raw(xv.elem_count());
         let mut y = self.alloc_raw(xv.elem_count());
-        for ((xhrow, yrow), xrow) in xhat_buf
-            .chunks_exact_mut(c)
-            .zip(y.chunks_exact_mut(c))
-            .zip(xv.data.chunks_exact(c))
         {
-            sub_mul_row(xhrow, xrow, &mean, &inv);
-            affine_row(yrow, xhrow, &sv.data, &bv.data);
+            // normalize + affine are pure row maps: shard rows across
+            // lanes; each row is written by exactly one lane, so any
+            // lane count produces identical bits
+            let y_base = SendPtr(y.as_mut_ptr());
+            let xs: &[f32] = &xv.data;
+            let (sd, bd): (&[f32], &[f32]) = (&sv.data, &bv.data);
+            let (mean_r, inv_r) = (&mean, &inv);
+            par_rows(&mut xhat_buf, m, c, &sc, |r0, r1, xh_chunk| {
+                let _p = profile::time(Op::BatchNorm);
+                for (t, r) in (r0..r1).enumerate() {
+                    let xhrow = &mut xh_chunk[t * c..(t + 1) * c];
+                    sub_mul_row(xhrow, &xs[r * c..(r + 1) * c], mean_r, inv_r);
+                    let yrow = unsafe { std::slice::from_raw_parts_mut(y_base.0.add(r * c), c) };
+                    affine_row(yrow, xhrow, sd, bd);
+                }
+            });
         }
         let xhat = self.track_aux(Tensor::new(xv.shape.clone(), xhat_buf));
         let val = Tensor::new(xv.shape.clone(), y);
@@ -791,34 +822,42 @@ impl Tape {
         let out = self.push(
             val,
             Some(Box::new(move |g, store| {
-                let _p = profile::time(Op::BatchNorm);
                 let mut sum_dy = store.take_zeroed(c);
                 let mut sum_dy_xhat = store.take_zeroed(c);
-                for (grow, xhrow) in g.chunks_exact(c).zip(xhat.data.chunks_exact(c)) {
-                    for (((sd, sdx), &s), &xh) in sum_dy
-                        .iter_mut()
-                        .zip(sum_dy_xhat.iter_mut())
-                        .zip(grow)
-                        .zip(xhrow)
-                    {
-                        *sd += s;
-                        *sdx += s * xh;
+                {
+                    // cross-row reduction: serial (see the forward's note)
+                    let _p = profile::time(Op::BatchNorm);
+                    for (grow, xhrow) in g.chunks_exact(c).zip(xhat.data.chunks_exact(c)) {
+                        for (((sd, sdx), &s), &xh) in sum_dy
+                            .iter_mut()
+                            .zip(sum_dy_xhat.iter_mut())
+                            .zip(grow)
+                            .zip(xhrow)
+                        {
+                            *sd += s;
+                            *sdx += s * xh;
+                        }
                     }
                 }
                 {
+                    // dx is a pure row map once the sums exist: laned
                     let dx_slot = store.grad_mut(x.0);
                     let mf = m as f32;
-                    for ((dxrow, grow), xhrow) in dx_slot
-                        .chunks_exact_mut(c)
-                        .zip(g.chunks_exact(c))
-                        .zip(xhat.data.chunks_exact(c))
-                    {
-                        for ch in 0..c {
-                            let dx = saved_scale.data[ch] * inv_s[ch] / mf
-                                * (mf * grow[ch] - sum_dy[ch] - xhrow[ch] * sum_dy_xhat[ch]);
-                            dxrow[ch] += dx;
+                    let (xh, sdv): (&[f32], &[f32]) = (&xhat.data, &saved_scale.data);
+                    let (sdy, sdyx, invs) = (&sum_dy[..], &sum_dy_xhat[..], &inv_s[..]);
+                    par_rows(dx_slot, m, c, &sc, |r0, r1, chunk| {
+                        let _p = profile::time(Op::BatchNorm);
+                        for (t, r) in (r0..r1).enumerate() {
+                            let grow = &g[r * c..(r + 1) * c];
+                            let xhrow = &xh[r * c..(r + 1) * c];
+                            let dxrow = &mut chunk[t * c..(t + 1) * c];
+                            for ch in 0..c {
+                                let dx = sdv[ch] * invs[ch] / mf
+                                    * (mf * grow[ch] - sdy[ch] - xhrow[ch] * sdyx[ch]);
+                                dxrow[ch] += dx;
+                            }
                         }
-                    }
+                    });
                 }
                 store.acc(scale.0, &sum_dy_xhat);
                 store.acc(bias.0, &sum_dy);
@@ -898,30 +937,49 @@ impl Tape {
         let lv = self.rc(logits);
         let (n, c) = (lv.shape[0], lv.shape[1]);
         debug_assert_eq!(labels.len(), n);
-        let _p = profile::time(Op::Loss);
+        let sc = self.kernel.clone();
         let mut probs_buf = self.alloc_raw(n * c);
+        {
+            // softmax is a pure row map (max / exp / normalize all stay
+            // within one row), so rows shard across lanes bit-identically
+            let ls: &[f32] = &lv.data;
+            par_rows(&mut probs_buf, n, c, &sc, |b0, b1, chunk| {
+                let _p = profile::time(Op::Loss);
+                for (t, b) in (b0..b1).enumerate() {
+                    let row = &ls[b * c..(b + 1) * c];
+                    let prow = &mut chunk[t * c..(t + 1) * c];
+                    let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+                    let mut z = 0.0f32;
+                    for (p, &v) in prow.iter_mut().zip(row) {
+                        let e = (v - mx).exp();
+                        *p = e;
+                        z += e;
+                    }
+                    for p in prow.iter_mut() {
+                        *p /= z;
+                    }
+                }
+            });
+        }
+        // loss / accuracy reduction is cross-row: serial, in batch order,
+        // so the scalar bits never depend on the lane count
         let mut loss_sum = 0.0f32;
         let mut correct = 0.0f32;
-        for b in 0..n {
-            let row = &lv.data[b * c..(b + 1) * c];
-            let mx = row.iter().cloned().fold(f32::MIN, f32::max);
-            let mut z = 0.0f32;
-            for (j, &v) in row.iter().enumerate() {
-                let e = (v - mx).exp();
-                probs_buf[b * c + j] = e;
-                z += e;
-            }
-            let mut best = 0;
-            for j in 0..c {
-                probs_buf[b * c + j] /= z;
-                if probs_buf[b * c + j] > probs_buf[b * c + best] {
-                    best = j;
+        {
+            let _p = profile::time(Op::Loss);
+            for b in 0..n {
+                let prow = &probs_buf[b * c..(b + 1) * c];
+                let mut best = 0;
+                for j in 1..c {
+                    if prow[j] > prow[best] {
+                        best = j;
+                    }
                 }
-            }
-            let lab = labels[b] as usize;
-            loss_sum += -probs_buf[b * c + lab].max(1e-12).ln();
-            if best == lab {
-                correct += 1.0;
+                let lab = labels[b] as usize;
+                loss_sum += -prow[lab].max(1e-12).ln();
+                if best == lab {
+                    correct += 1.0;
+                }
             }
         }
         let mut data = self.alloc_raw(1);
@@ -932,16 +990,22 @@ impl Tape {
         let out = self.push(
             val,
             Some(Box::new(move |g, store| {
-                let _p = profile::time(Op::Loss);
                 let s = g[0] / n as f32;
                 let dl = store.grad_mut(logits.0);
-                for b in 0..n {
-                    let lab = labels[b] as usize;
-                    for j in 0..c {
-                        let one = if j == lab { 1.0 } else { 0.0 };
-                        dl[b * c + j] += s * (probs.data[b * c + j] - one);
+                let ps: &[f32] = &probs.data;
+                let labs: &[i32] = &labels;
+                par_rows(dl, n, c, &sc, |b0, b1, chunk| {
+                    let _p = profile::time(Op::Loss);
+                    for (t, b) in (b0..b1).enumerate() {
+                        let lab = labs[b] as usize;
+                        let prow = &ps[b * c..(b + 1) * c];
+                        let drow = &mut chunk[t * c..(t + 1) * c];
+                        for (j, (d, &p)) in drow.iter_mut().zip(prow).enumerate() {
+                            let one = if j == lab { 1.0 } else { 0.0 };
+                            *d += s * (p - one);
+                        }
                     }
-                }
+                });
             })),
         );
         (out, EvalBits { correct, loss_sum })
@@ -1041,56 +1105,81 @@ impl Tape {
         let k = pv.shape[1];
         debug_assert_eq!(pv.shape[0], c);
         debug_assert_eq!(quants.len(), k);
-        let _p = profile::time(Op::Quant);
-        // quantized branches, one [c, f] tensor per CU column
+        let sc = self.kernel.clone();
+        // quantized branches, one [c, f] tensor per CU column; quant is
+        // per-row, so each branch fill shards rows across lanes
         let mut qs: Vec<Rc<Tensor>> = Vec::with_capacity(k);
         for &q in quants {
             let mut out = self.alloc_raw(c * f);
-            for r in 0..c {
-                q.quant_row(&wv.data[r * f..(r + 1) * f], &mut out[r * f..(r + 1) * f]);
-            }
+            let ws: &[f32] = &wv.data;
+            par_rows(&mut out, c, f, &sc, |r0, r1, chunk| {
+                let _p = profile::time(Op::Quant);
+                for (t, r) in (r0..r1).enumerate() {
+                    q.quant_row(&ws[r * f..(r + 1) * f], &mut chunk[t * f..(t + 1) * f]);
+                }
+            });
             qs.push(self.track_aux(Tensor::new(vec![c, f], out)));
         }
         let ste: Vec<bool> = quants.iter().map(|&q| q != QuantKind::Zero).collect();
         let mut y = self.alloc_zeroed(c * f);
-        for r in 0..c {
-            let yrow = &mut y[r * f..(r + 1) * f];
-            for (col, q) in qs.iter().enumerate() {
-                let p = pv.data[r * k + col];
-                if p == 0.0 {
-                    continue;
+        {
+            // each output row mixes the branches in fixed column order;
+            // rows are independent, so the mix shards across lanes
+            let ps: &[f32] = &pv.data;
+            let qrefs: Vec<&[f32]> = qs.iter().map(|q| q.data.as_slice()).collect();
+            par_rows(&mut y, c, f, &sc, |r0, r1, chunk| {
+                let _p = profile::time(Op::Quant);
+                for (t, r) in (r0..r1).enumerate() {
+                    let yrow = &mut chunk[t * f..(t + 1) * f];
+                    for (col, qd) in qrefs.iter().enumerate() {
+                        let p = ps[r * k + col];
+                        if p == 0.0 {
+                            continue;
+                        }
+                        axpy_row(yrow, p, &qd[r * f..(r + 1) * f]);
+                    }
                 }
-                axpy_row(yrow, p, &q.data[r * f..(r + 1) * f]);
-            }
+            });
         }
         let val = Tensor::new(vec![c, f], y);
         let saved_p = Rc::clone(&pv);
         self.push(
             val,
             Some(Box::new(move |g, store| {
-                let _p = profile::time(Op::QuantBwd);
-                for r in 0..c {
-                    // STE: each weight-carrying branch passes g through
-                    // scaled by its probability; Zero branches drop it.
-                    let psum: f32 = (0..k)
-                        .filter(|&col| ste[col])
-                        .map(|col| saved_p.data[r * k + col])
-                        .sum();
-                    {
-                        let dw = store.grad_mut(w.0);
-                        for i in 0..f {
-                            dw[r * f + i] += psum * g[r * f + i];
+                // row r writes dw row r and dp row r only — disjoint
+                // across rows, so the row shard is race-free and the
+                // per-row accumulation order is lane-count-independent
+                let (dw, dp) = store.grad_mut2(w.0, probs.0);
+                let dp_base = SendPtr(dp.as_mut_ptr());
+                let ps: &[f32] = &saved_p.data;
+                let qrefs: Vec<&[f32]> = qs.iter().map(|q| q.data.as_slice()).collect();
+                let stes: &[bool] = &ste;
+                par_rows(dw, c, f, &sc, |r0, r1, chunk| {
+                    let _p = profile::time(Op::QuantBwd);
+                    for (t, r) in (r0..r1).enumerate() {
+                        // STE: each weight-carrying branch passes g
+                        // through scaled by its probability; Zero
+                        // branches drop it.
+                        let psum: f32 = (0..k)
+                            .filter(|&col| stes[col])
+                            .map(|col| ps[r * k + col])
+                            .sum();
+                        let dwrow = &mut chunk[t * f..(t + 1) * f];
+                        let grow = &g[r * f..(r + 1) * f];
+                        for (d, &gv) in dwrow.iter_mut().zip(grow) {
+                            *d += psum * gv;
+                        }
+                        let dprow =
+                            unsafe { std::slice::from_raw_parts_mut(dp_base.0.add(r * k), k) };
+                        for (col, qd) in qrefs.iter().enumerate() {
+                            let mut dot = 0.0f32;
+                            for (&gv, &qv) in grow.iter().zip(&qd[r * f..(r + 1) * f]) {
+                                dot += gv * qv;
+                            }
+                            dprow[col] += dot;
                         }
                     }
-                    let dp = store.grad_mut(probs.0);
-                    for (col, q) in qs.iter().enumerate() {
-                        let mut dot = 0.0f32;
-                        for i in 0..f {
-                            dot += g[r * f + i] * q.data[r * f + i];
-                        }
-                        dp[r * k + col] += dot;
-                    }
-                }
+                });
             })),
         )
     }
@@ -1100,17 +1189,29 @@ impl Tape {
     pub fn fake_quant_ste(&mut self, w: Var, kind: QuantKind) -> Var {
         let wv = self.rc(w);
         let (c, f) = (wv.shape[0], wv.shape[1]);
-        let _p = profile::time(Op::Quant);
+        let sc = self.kernel.clone();
         let mut y = self.alloc_raw(c * f);
-        for r in 0..c {
-            kind.quant_row(&wv.data[r * f..(r + 1) * f], &mut y[r * f..(r + 1) * f]);
+        {
+            let ws: &[f32] = &wv.data;
+            par_rows(&mut y, c, f, &sc, |r0, r1, chunk| {
+                let _p = profile::time(Op::Quant);
+                for (t, r) in (r0..r1).enumerate() {
+                    kind.quant_row(&ws[r * f..(r + 1) * f], &mut chunk[t * f..(t + 1) * f]);
+                }
+            });
         }
         let val = Tensor::new(vec![c, f], y);
         self.push(
             val,
             Some(Box::new(move |g, store| {
-                let _p = profile::time(Op::QuantBwd);
-                store.acc(w.0, g);
+                // identity gradient: a pure element map, laned by row
+                let dw = store.grad_mut(w.0);
+                par_rows(dw, c, f, &sc, |r0, r1, chunk| {
+                    let _p = profile::time(Op::QuantBwd);
+                    for (d, &gv) in chunk.iter_mut().zip(&g[r0 * f..r1 * f]) {
+                        *d += gv;
+                    }
+                });
             })),
         )
     }
@@ -1353,11 +1454,46 @@ fn affine_row(out: &mut [f32], x: &[f32], a: &[f32], b: &[f32]) {
     }
 }
 
+/// `Aᵀ·B` with the packed-panel tier when `simd-kernels` is on: the
+/// pack scratch comes from the step arena (sized by `plan`), so the hot
+/// loop never allocates; scalar builds fall through to the unpacked
+/// row-tile kernel, which is the bit-identity reference.
+#[allow(clippy::too_many_arguments)]
+fn matmul_at_via_pack(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    sc: &KernelScope,
+    store: &mut GradStore,
+) {
+    if cfg!(feature = "simd-kernels") {
+        let mut pack = store.take_raw(k * m);
+        par_matmul_at_into_packed(a, b, c, m, k, n, sc, &mut pack);
+        store.give(pack);
+    } else {
+        par_matmul_at_into(a, b, c, m, k, n, sc);
+    }
+}
+
 /// Fill the patch matrix `[n·oh·ow, k·k·cin]` (column layout
 /// `(ky·k+kx)·cin + ci`). `cols` must be zeroed — padding taps are
-/// skipped, not written. `pub(crate)`: the quantized inference path
-/// ([`super::qkernels`]) lowers its convs through the same patch fill.
-pub(crate) fn im2col_into(x: &Tensor, k: usize, stride: usize, cols: &mut [f32]) {
+/// skipped, not written. Sharded by image `b` across the kernel lanes:
+/// image `b`'s patch rows are the contiguous block
+/// `[b·oh·ow·f, (b+1)·oh·ow·f)`, so lanes write disjoint regions and
+/// the per-element copy order within each image is unchanged — bits are
+/// identical at any lane count. `pub(crate)`: the quantized inference
+/// path ([`super::qkernels`]) lowers its convs through the same patch
+/// fill.
+pub(crate) fn im2col_into(
+    x: &Tensor,
+    k: usize,
+    stride: usize,
+    cols: &mut [f32],
+    scope: &KernelScope,
+) {
     im2col_slice_into(
         &x.data,
         x.shape[0],
@@ -1367,6 +1503,7 @@ pub(crate) fn im2col_into(x: &Tensor, k: usize, stride: usize, cols: &mut [f32])
         k,
         stride,
         cols,
+        scope,
     );
 }
 
@@ -1383,36 +1520,45 @@ pub(crate) fn im2col_slice_into(
     k: usize,
     stride: usize,
     cols: &mut [f32],
+    scope: &KernelScope,
 ) {
     let (oh, ow, pad) = same_geometry(h, w, k, stride);
     let f = k * k * cin;
     debug_assert_eq!(x.len(), n * h * w * cin);
     debug_assert_eq!(cols.len(), n * oh * ow * f);
-    for b in 0..n {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let row = ((b * oh + oy) * ow + ox) * f;
-                for ky in 0..k {
-                    let iy = (oy * stride + ky) as isize - pad as isize;
-                    if iy < 0 || iy >= h as isize {
-                        continue;
-                    }
-                    for kx in 0..k {
-                        let ix = (ox * stride + kx) as isize - pad as isize;
-                        if ix < 0 || ix >= w as isize {
+    par_rows(cols, n, oh * ow * f, scope, |b0, b1, chunk| {
+        let _p = profile::time(Op::Im2col);
+        for b in b0..b1 {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let row = (((b - b0) * oh + oy) * ow + ox) * f;
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
                             continue;
                         }
-                        let src = ((b * h + iy as usize) * w + ix as usize) * cin;
-                        let dst = row + (ky * k + kx) * cin;
-                        cols[dst..dst + cin].copy_from_slice(&x[src..src + cin]);
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let src = ((b * h + iy as usize) * w + ix as usize) * cin;
+                            let dst = row + (ky * k + kx) * cin;
+                            chunk[dst..dst + cin].copy_from_slice(&x[src..src + cin]);
+                        }
                     }
                 }
             }
         }
-    }
+    });
 }
 
-/// Scatter `dcols` back onto the input gradient (inverse of [`im2col_into`]).
+/// Scatter `dcols` back onto the input gradient (inverse of
+/// [`im2col_into`]). Sharded by image `b`: the `+=` taps for image `b`
+/// all land in its own contiguous `dx` block `[b·h·w·cin, (b+1)·…)`, and
+/// the scatter order *within* an image is the serial loop's — receptive
+/// fields only overlap inside one image, so lane count can't reorder any
+/// element's accumulation.
 #[allow(clippy::too_many_arguments)]
 fn col2im(
     dcols: &[f32],
@@ -1425,36 +1571,41 @@ fn col2im(
     stride: usize,
     oh: usize,
     ow: usize,
+    scope: &KernelScope,
 ) {
     let pad = {
         let pad_total = ((oh - 1) * stride + k).saturating_sub(h);
         pad_total / 2
     };
     let f = k * k * cin;
-    for b in 0..n {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let row = ((b * oh + oy) * ow + ox) * f;
-                for ky in 0..k {
-                    let iy = (oy * stride + ky) as isize - pad as isize;
-                    if iy < 0 || iy >= h as isize {
-                        continue;
-                    }
-                    for kx in 0..k {
-                        let ix = (ox * stride + kx) as isize - pad as isize;
-                        if ix < 0 || ix >= w as isize {
+    debug_assert_eq!(dx.len(), n * h * w * cin);
+    par_rows(dx, n, h * w * cin, scope, |b0, b1, chunk| {
+        let _p = profile::time(Op::Im2col);
+        for b in b0..b1 {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let row = ((b * oh + oy) * ow + ox) * f;
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
                             continue;
                         }
-                        let dst = ((b * h + iy as usize) * w + ix as usize) * cin;
-                        let src = row + (ky * k + kx) * cin;
-                        for ci in 0..cin {
-                            dx[dst + ci] += dcols[src + ci];
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let dst = (((b - b0) * h + iy as usize) * w + ix as usize) * cin;
+                            let src = row + (ky * k + kx) * cin;
+                            for ci in 0..cin {
+                                chunk[dst + ci] += dcols[src + ci];
+                            }
                         }
                     }
                 }
             }
         }
-    }
+    });
 }
 
 /// Depthwise forward over transposed weights `wt[k·k, c]`: output rows
@@ -1481,6 +1632,7 @@ fn dw_forward(
     let rows = n * oh;
     debug_assert_eq!(y.len(), rows * ow * c);
     par_rows(y, rows, ow * c, scope, |r0, r1, chunk| {
+        let _p = profile::time(Op::DwConv);
         for row in r0..r1 {
             let (b, oy) = (row / oh, row % oh);
             let yrow = &mut chunk[(row - r0) * ow * c..(row - r0 + 1) * ow * c];
@@ -1508,9 +1660,15 @@ fn dw_forward(
 }
 
 /// Depthwise backward over transposed weights `wt[k·k, c]`, accumulating
-/// `dwt` in the same transposed layout. Serial: `dx`/`dwt` writes overlap
-/// across output rows (receptive fields share input pixels), so sharding
-/// would race. Per-element accumulation order matches the strided loop.
+/// `dwt` in the same transposed layout. A depthwise op never mixes
+/// channels, so `dx`/`dwt` shard across lanes *by channel*: lane `l`
+/// owns the channel range `[l·c/t, (l+1)·c/t)` of every `dx` pixel and
+/// every `dwt` row, and walks the full `b/oy/ox/ky/kx` loop restricted
+/// to its own sub-range. Writes are disjoint by construction (strided,
+/// hence the raw-pointer reslicing), and each channel's `+=` sequence is
+/// exactly the serial loop's — the fixed reduction order promised in the
+/// ROADMAP's carried-over debts — so results are bit-identical at any
+/// lane count.
 #[allow(clippy::too_many_arguments)]
 fn dw_backward(
     x: &[f32],
@@ -1525,36 +1683,57 @@ fn dw_backward(
     k: usize,
     stride: usize,
     pad: usize,
+    scope: &KernelScope,
 ) {
     let (oh, ow, _) = same_geometry(h, ww, k, stride);
-    for b in 0..n {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let out = ((b * oh + oy) * ow + ox) * c;
-                let grow = &g[out..out + c];
-                for ky in 0..k {
-                    let iy = (oy * stride + ky) as isize - pad as isize;
-                    if iy < 0 || iy >= h as isize {
-                        continue;
-                    }
-                    for kx in 0..k {
-                        let ix = (ox * stride + kx) as isize - pad as isize;
-                        if ix < 0 || ix >= ww as isize {
+    debug_assert_eq!(dx.len(), n * h * ww * c);
+    debug_assert_eq!(dwt.len(), k * k * c);
+    let t = scope.lanes().min(c).max(1);
+    let dx_base = SendPtr(dx.as_mut_ptr());
+    let dwt_base = SendPtr(dwt.as_mut_ptr());
+    scope.run(&|lane| {
+        if lane >= t {
+            return;
+        }
+        let (c0, c1) = (lane * c / t, (lane + 1) * c / t);
+        if c0 == c1 {
+            return;
+        }
+        let _p = profile::time(Op::DwConv);
+        let cw = c1 - c0;
+        for b in 0..n {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let out = ((b * oh + oy) * ow + ox) * c;
+                    let grow = &g[out + c0..out + c1];
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
                             continue;
                         }
-                        let src = ((b * h + iy as usize) * ww + ix as usize) * c;
-                        let wi = ky * k + kx;
-                        let wrow = &wt[wi * c..(wi + 1) * c];
-                        let xrow = &x[src..src + c];
-                        let dxrow = &mut dx[src..src + c];
-                        fma_row(dxrow, grow, wrow);
-                        let dwrow = &mut dwt[wi * c..(wi + 1) * c];
-                        fma_row(dwrow, grow, xrow);
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= ww as isize {
+                                continue;
+                            }
+                            let src = ((b * h + iy as usize) * ww + ix as usize) * c;
+                            let wi = ky * k + kx;
+                            let wrow = &wt[wi * c + c0..wi * c + c1];
+                            let xrow = &x[src + c0..src + c1];
+                            let dxrow = unsafe {
+                                std::slice::from_raw_parts_mut(dx_base.0.add(src + c0), cw)
+                            };
+                            fma_row(dxrow, grow, wrow);
+                            let dwrow = unsafe {
+                                std::slice::from_raw_parts_mut(dwt_base.0.add(wi * c + c0), cw)
+                            };
+                            fma_row(dwrow, grow, xrow);
+                        }
                     }
                 }
             }
         }
-    }
+    });
 }
 
 #[cfg(test)]

@@ -40,6 +40,7 @@
 //! instead of toggling it.
 
 use super::pool::KernelScope;
+use super::profile::{self, Op};
 
 /// A shaped dense f32 buffer (row-major).
 #[derive(Debug, Clone, PartialEq)]
@@ -345,6 +346,11 @@ where
 }
 
 /// Parallel [`matmul_into`]: rows of C sharded across the scope's lanes.
+///
+/// The `Op::Matmul` probe sits *inside* the lane closure (the
+/// lane-summed attribution convention — see [`super::profile`]), so the
+/// bucket records summed CPU time across lanes, not caller wall time.
+/// The same placement holds for every `par_matmul_*` wrapper below.
 pub fn par_matmul_into(
     a: &[f32],
     b: &[f32],
@@ -356,6 +362,7 @@ pub fn par_matmul_into(
 ) {
     debug_assert_eq!(c.len(), m * n);
     par_rows(c, m, n, scope, |r0, r1, chunk| {
+        let _p = profile::time(Op::Matmul);
         matmul_into(&a[r0 * k..r1 * k], b, chunk, r1 - r0, k, n);
     });
 }
@@ -372,6 +379,7 @@ pub fn par_matmul_bt_into(
 ) {
     debug_assert_eq!(c.len(), m * n);
     par_rows(c, m, n, scope, |r0, r1, chunk| {
+        let _p = profile::time(Op::Matmul);
         matmul_bt_into(&a[r0 * k..r1 * k], b, chunk, r1 - r0, k, n);
     });
 }
@@ -390,8 +398,53 @@ pub fn par_matmul_at_into(
 ) {
     debug_assert_eq!(c.len(), k * n);
     par_rows(c, k, n, scope, |i0, i1, chunk| {
+        let _p = profile::time(Op::Matmul);
         matmul_at_rows(a, b, chunk, m, k, n, i0, i1);
     });
+}
+
+/// Packed-panel tier of the parallel `Aᵀ·B` kernel. The plain at-kernel
+/// is the weakest of the three orientations: its register tile re-walks
+/// A down `k`-strided columns once per 16-column output tile. Here each
+/// lane first transposes its own disjoint column panel of A into `pack`
+/// (contiguous, packed exactly once per call), then runs the strong
+/// [`matmul_into`] row tile on the panel. Per output element the rank-1
+/// accumulation over `m` stays in the same ascending index order, so
+/// the packed tier is bit-identical to the unpacked SIMD kernel at any
+/// lane count.
+///
+/// `pack` must hold at least `k·m` f32 (lane `i0..i1` uses
+/// `pack[i0·m..i1·m]` — the arena sizes it via `plan::step_sizes`).
+/// Only the `simd-kernels` build takes this path; otherwise (and under
+/// the bench's scalar toggle) it falls back to [`par_matmul_at_into`],
+/// which stays the bit-identity reference.
+#[allow(clippy::too_many_arguments)]
+pub fn par_matmul_at_into_packed(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    scope: &KernelScope,
+    pack: &mut [f32],
+) {
+    debug_assert_eq!(c.len(), k * n);
+    debug_assert!(pack.len() >= k * m);
+    #[cfg(feature = "simd-kernels")]
+    if simd_enabled() {
+        let pbase = RowBase(pack.as_mut_ptr());
+        par_rows(c, k, n, scope, |i0, i1, chunk| {
+            let _p = profile::time(Op::Matmul);
+            // lanes own disjoint [i0·m, i1·m) panel ranges, same
+            // aliasing argument as par_rows' own chunks
+            let panel =
+                unsafe { std::slice::from_raw_parts_mut(pbase.0.add(i0 * m), (i1 - i0) * m) };
+            simd::matmul_at_panel(a, b, chunk, panel, m, k, n, i0, i1);
+        });
+        return;
+    }
+    par_matmul_at_into(a, b, c, m, k, n, scope);
 }
 
 // ---------------------------------------------------------------------------
@@ -697,6 +750,40 @@ pub mod simd {
         matmul_at_rows(a, b, c, m, k, n, 0, k);
     }
 
+    /// Packed-panel rows `i0..i1` of `C[k,n] = A[m,k]ᵀ · B[m,n]`: the
+    /// column panel `A[:, i0..i1]` is transposed once into `panel`
+    /// (`[(i1−i0) × m]` row-major) and the strong [`matmul_into`]
+    /// register tile runs on it — the `k`-strided A walk of
+    /// [`matmul_at_rows`] becomes a contiguous stream. Per output
+    /// element both kernels accumulate over `r ∈ 0..m` in ascending
+    /// order (main tiles never skip, tail columns share the same
+    /// skip-exact-zero scalar loop), so the results are bit-identical.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_at_panel(
+        a: &[f32],
+        b: &[f32],
+        chunk: &mut [f32],
+        panel: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        i0: usize,
+        i1: usize,
+    ) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), m * n);
+        let rows = i1 - i0;
+        debug_assert!(chunk.len() >= rows * n);
+        debug_assert!(panel.len() >= rows * m);
+        for t in 0..rows {
+            let dst = &mut panel[t * m..(t + 1) * m];
+            for (r, d) in dst.iter_mut().enumerate() {
+                *d = a[r * k + i0 + t];
+            }
+        }
+        matmul_into(&panel[..rows * m], b, &mut chunk[..rows * n], rows, m, n);
+    }
+
     // -- elementwise panels (dw-conv taps, batch-norm rows) ----------------
     //
     // These are pure elementwise maps, so the 8-lane main loop plus a
@@ -902,6 +989,28 @@ mod tests {
             assert_eq!(c_mm, &base_mm, "matmul t={t}");
             assert_eq!(c_bt, &base_bt, "matmul_bt t={t}");
             assert_eq!(c_at, &base_at, "matmul_at t={t}");
+        }
+    }
+
+    #[test]
+    fn packed_at_tier_matches_unpacked_for_any_lane_count() {
+        use super::super::pool::WorkerPool;
+        // odd shape: uneven lane panels, a 16-column main tile and a
+        // scalar tail (n = 19 = 16 + 3)
+        let (m, k, n) = (29, 13, 19);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.17).sin()).collect();
+        let b: Vec<f32> = (0..m * n).map(|i| (i as f32 * 0.09).cos()).collect();
+        let mut base = vec![0.0; k * n];
+        matmul_at_into(&a, &b, &mut base, m, k, n);
+        for t in [1usize, 2, 3, 5] {
+            let pool = WorkerPool::new(t);
+            let out = pool.run_tasks(1, &|_i, scope| {
+                let mut c = vec![1.0; k * n];
+                let mut pack = vec![0.0; k * m];
+                par_matmul_at_into_packed(&a, &b, &mut c, m, k, n, scope, &mut pack);
+                c
+            });
+            assert_eq!(&out[0], &base, "packed at t={t}");
         }
     }
 

@@ -64,8 +64,27 @@ fn theta_bits(be: &NativeBackend, state: &TrainState) -> Vec<u32> {
         .collect()
 }
 
-/// The determinism matrix: 1/2/4 threads × {resnet8, mbv1} × {diana,
-/// gap9} must produce bit-identical losses and θ after 3 steps.
+/// Thread counts the matrices sweep beyond the serial reference: the
+/// historical 2/4, an 8-row (tape-level lanes only engage beyond the
+/// 4 shard tasks) and an oversubscribed 2×cores row — capped by the
+/// pool's 4×cores validation limit, deduped, ascending.
+fn matrix_threads() -> Vec<usize> {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let cap = odimo::runtime::native::max_threads();
+    let mut ts: Vec<usize> = [2usize, 4, 8, 2 * cores]
+        .into_iter()
+        .filter(|&t| t >= 2 && t <= cap)
+        .collect();
+    ts.sort_unstable();
+    ts.dedup();
+    ts
+}
+
+/// The determinism matrix: 1/2/4/8/oversubscribed threads × {resnet8,
+/// mbv1} × {diana, gap9} must produce bit-identical losses and θ after
+/// 3 steps.
 #[test]
 fn thread_count_determinism_matrix() {
     for arch in ["resnet8", "mbv1"] {
@@ -75,7 +94,7 @@ fn thread_count_determinism_matrix() {
             let (losses1, state1) = run_steps(&be1, 3, 3);
             let theta1 = theta_bits(&be1, &state1);
             assert!(losses1.iter().all(|l| l.is_finite()), "{variant}: {losses1:?}");
-            for threads in [2usize, 4] {
+            for threads in matrix_threads() {
                 let bet = build(&variant, threads, WOptimizer::SgdMomentum);
                 let (losses_t, state_t) = run_steps(&bet, 3, 3);
                 let theta_t = theta_bits(&bet, &state_t);
@@ -190,6 +209,43 @@ fn conv1x1_fast_path_is_bit_identical_to_im2col() {
     assert_eq!(dw_fast, dw_ref, "weight gradient differs");
 }
 
+/// The laned (channel-sharded) depthwise backward must be bit-identical
+/// to the serial reference: a lone pool task gets the pool's full width
+/// as kernel lanes, so a 3-wide pool drives the dw backward with 3
+/// lanes, and every gradient bit must match the 1-lane tape.
+#[test]
+fn laned_dw_backward_matches_serial_reference() {
+    use odimo::runtime::native::{Tape, Tensor, WorkerPool};
+    let (n, h, w, c, k) = (2usize, 7usize, 7usize, 5usize, 3usize);
+    let x0: Vec<f32> = (0..n * h * w * c).map(|i| (i as f32 * 0.31).sin()).collect();
+    let w0: Vec<f32> = (0..c * k * k).map(|i| (i as f32 * 0.17).cos()).collect();
+    let run = |tape: &mut Tape| -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+        let x = tape.leaf(Tensor::new(vec![n, h, w, c], x0.clone()));
+        let wv = tape.leaf(Tensor::new(vec![c, k * k], w0.clone()));
+        let y = tape.dw_conv2d(x, wv, k, 1);
+        let ybits = tape.val(y).data.iter().map(|v| v.to_bits()).collect();
+        let loss = tape.sum_all(y);
+        let mut grads = tape.backward(loss);
+        let dx = grads.take(x).iter().map(|v| v.to_bits()).collect();
+        let dw = grads.take(wv).iter().map(|v| v.to_bits()).collect();
+        (ybits, dx, dw)
+    };
+    let mut t_ref = Tape::new(); // serial scope
+    let reference = run(&mut t_ref);
+    let pool = WorkerPool::new(3);
+    let laned = pool
+        .run_tasks(1, &|_i, scope| {
+            let mut t = Tape::new();
+            t.set_kernel_scope(scope.clone());
+            run(&mut t)
+        })
+        .pop()
+        .expect("one task");
+    assert_eq!(reference.0, laned.0, "dw forward differs under lanes");
+    assert_eq!(reference.1, laned.1, "dx differs under lanes");
+    assert_eq!(reference.2, laned.2, "dW differs under lanes");
+}
+
 /// Eval must be bit-identical across thread counts as well (shard sums
 /// run in shard-index order).
 #[test]
@@ -201,7 +257,7 @@ fn eval_is_thread_count_invariant() {
     let (x, y) = ds.batch(Split::Val, 0, m.dataset.batch);
     let state = be1.init_state(1).expect("init");
     let r1 = be1.eval_batch(&state, &x, &y).expect("eval");
-    for threads in [2usize, 4] {
+    for threads in matrix_threads() {
         let bet = build(variant, threads, WOptimizer::SgdMomentum);
         let rt = bet.eval_batch(&state, &x, &y).expect("eval");
         assert_eq!(

@@ -202,7 +202,19 @@ fn quantized_eval_bit_identical_across_threads_and_tiers() {
             let qnet1 = be1.quantize(&state).expect("quantize");
             let logits1: Vec<u32> = qnet1.forward(&x, n).iter().map(|v| v.to_bits()).collect();
             let m1 = be1.eval_batch_quantized(&state, &x, &y).expect("qeval");
-            for threads in [2usize, 4] {
+            // same ladder as native_exec::matrix_threads: 2/4/8 plus an
+            // oversubscribed 2×cores row, capped by the backend's limit
+            let cores = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1);
+            let cap = odimo::runtime::native::max_threads();
+            let mut matrix: Vec<usize> = [2usize, 4, 8, 2 * cores]
+                .into_iter()
+                .filter(|&t| t >= 2 && t <= cap)
+                .collect();
+            matrix.sort_unstable();
+            matrix.dedup();
+            for threads in matrix {
                 let bet = NativeBackend::build_with(
                     &variant,
                     NativeOptions {
