@@ -36,7 +36,17 @@
 //!   register-tiled SIMD variants called directly;
 //! * `qmatmul` — isolated integer-GEMM GOP/s at M=N=K=256 of the naive
 //!   reference vs the blocked tier vs (simd builds) the widening-lane
-//!   tier, plus the best-tier speedup over naive;
+//!   tier vs the prepacked-panel variants vs (`arch-kernels` builds,
+//!   when the CPU features are detected) the arch-intrinsic tier, plus
+//!   the best-tier speedup over naive and — only when an arch kernel
+//!   actually dispatched — `qmatmul_arch_speedup_vs_simd`, its speedup
+//!   over the best *portable packed* tier (gated ≥ 1.15 under
+//!   `BENCH_CHECK=1`; on hosts without the features the `qmatmul_tier`
+//!   tag proves the fallback and the gate is skipped);
+//! * `cpu` / `qmatmul_tier` / `arch_kernels` — the detected CPU
+//!   features (avx2/avx512vnni/neon/dotprod), the tier runtime dispatch
+//!   picked, and whether the arch tier was compiled in — so bench
+//!   artifacts from different runners are interpretable;
 //! * `quantized_evals_per_sec_threads{1,4}` — evals/sec of the real
 //!   int8/ternary integer-GEMM inference path (QuantNet built once,
 //!   batch shards on the persistent pool) next to the tape's f32 eval
@@ -253,11 +263,14 @@ fn quantized_eval_per_sec(variant: &str, threads: usize, budget: Duration) -> (f
 }
 
 /// Isolated integer-GEMM tiers at M=N=K=256 (the acceptance shape):
-/// GOP/s of the naive reference, the blocked scalar tier and — under
-/// `simd-kernels` — the widening-lane tier, called directly. Returns
-/// the JSON section plus the best-tier speedup over naive (the
-/// acceptance metric: ≥ 3x).
-fn qmatmul_gops() -> (Value, f64) {
+/// GOP/s of the naive reference, the blocked scalar tier, the packed
+/// variants and — under `simd-kernels` / `arch-kernels` — the
+/// widening-lane and arch-intrinsic tiers, called directly. Returns the
+/// JSON section, the best-tier speedup over naive (acceptance metric:
+/// ≥ 3x) and, when an arch kernel actually dispatched, its speedup over
+/// the best *portable packed* tier (acceptance metric: ≥ 1.15 — `None`
+/// means the dispatch provably fell back and no arch gate applies).
+fn qmatmul_gops() -> (Value, f64, Option<f64>) {
     use odimo::runtime::native::qkernels;
     let (m, k, n) = (256usize, 256usize, 256usize);
     let fill = |len: usize, seed: u64| -> Vec<i8> {
@@ -267,12 +280,15 @@ fn qmatmul_gops() -> (Value, f64) {
                 st = st
                     .wrapping_mul(6364136223846793005)
                     .wrapping_add(1442695040888963407);
+                // codes in [-127, 127], like production quantizers: no
+                // -128, so the x86 arch tiers are eligible to dispatch
                 ((st >> 40) as i64 % 255 - 127) as i8
             })
             .collect()
     };
     let a = fill(m * k, 7);
     let b = fill(n * k, 8);
+    let pb = qkernels::pack_b(&b, k, n);
     let mut c = vec![0i32; m * n];
     let ops = 2.0 * (m * k * n) as f64;
     let budget = Duration::from_millis(400);
@@ -301,10 +317,45 @@ fn qmatmul_gops() -> (Value, f64) {
         });
         best = best.max(simd);
     }
+    // packed drive: same tiers streaming prepacked panels (what the
+    // QuantNet actually runs — the arch speedup is measured against the
+    // best *portable packed* tier, so packing gains don't inflate it)
+    let packed_blocked = run("qmatmul_packed_blocked_gops", &|c| {
+        qkernels::qmatmul_bt_packed_into_blocked(&a, &pb, c, m)
+    });
+    #[cfg(feature = "simd-kernels")]
+    let portable_best = {
+        let packed_simd = run("qmatmul_packed_simd_gops", &|c| {
+            qkernels::qmatmul_bt_packed_into_simd(&a, &pb, c, m)
+        });
+        packed_blocked.max(packed_simd)
+    };
+    #[cfg(not(feature = "simd-kernels"))]
+    let portable_best = packed_blocked;
+    best = best.max(portable_best);
+    #[cfg(feature = "arch-kernels")]
+    let arch_speedup: Option<f64> = {
+        let mut probe = vec![0i32; m * n];
+        if qkernels::qmatmul_bt_packed_into_arch(&a, &pb, &mut probe, m) {
+            let arch = run("qmatmul_arch_gops", &|c| {
+                let _ = qkernels::qmatmul_bt_packed_into_arch(&a, &pb, c, m);
+            });
+            best = best.max(arch);
+            let sp = arch / portable_best;
+            println!("   -> arch tier vs best portable packed: {sp:.2}x");
+            fields.push(("qmatmul_arch_speedup_vs_simd", Value::num(sp)));
+            Some(sp)
+        } else {
+            println!("   -> arch tier not dispatched on this host (fallback proven)");
+            None
+        }
+    };
+    #[cfg(not(feature = "arch-kernels"))]
+    let arch_speedup: Option<f64> = None;
     let speedup = best / naive;
     println!("   -> best tier vs naive: {speedup:.2}x");
     fields.push(("qmatmul_speedup_vs_naive", Value::num(speedup)));
-    (Value::obj(fields), speedup)
+    (Value::obj(fields), speedup, arch_speedup)
 }
 
 /// Isolated GFLOP/s of the three matmul microkernels on a conv-like
@@ -458,8 +509,9 @@ fn main() {
     // isolated microkernel throughput (scalar vs simd, no dispatch)
     let kernels = kernel_gflops();
 
-    // isolated integer-GEMM tiers (naive vs blocked vs simd)
-    let (qmatmul, qmatmul_speedup) = qmatmul_gops();
+    // isolated integer-GEMM tiers (naive vs blocked vs simd vs packed
+    // vs arch)
+    let (qmatmul, qmatmul_speedup, qmatmul_arch_speedup) = qmatmul_gops();
 
     // quantized inference: the deploy path next to the tape's f32 eval,
     // single- and 4-thread (batch shards on the persistent pool)
@@ -489,9 +541,20 @@ fn main() {
     );
 
     // emit the trajectory record
+    let cpu = Value::obj(
+        odimo::runtime::native::tensor::arch::cpu_features()
+            .iter()
+            .map(|&(k, v)| (k, Value::Bool(v)))
+            .collect(),
+    );
+    let qmatmul_tier = odimo::runtime::native::QTier::detect().name();
+    println!("   -> detected qmatmul tier: {qmatmul_tier}");
     let mut fields = vec![
         ("variant", Value::str(ACCEPTANCE_VARIANT)),
         ("simd_kernels", Value::Bool(cfg!(feature = "simd-kernels"))),
+        ("arch_kernels", Value::Bool(cfg!(feature = "arch-kernels"))),
+        ("cpu", cpu),
+        ("qmatmul_tier", Value::str(qmatmul_tier)),
         ("threads1_steps_per_sec", Value::num(s1)),
         ("threads4_steps_per_sec", Value::num(s4)),
         ("train_speedup_4_threads", Value::num(speedup)),
@@ -535,7 +598,7 @@ fn main() {
         let base_path = odimo::repo_root().join("rust/benches/native_train.baseline.json");
         let text = std::fs::read_to_string(&base_path).expect("committed bench baseline");
         let base = parse(&text).expect("baseline json");
-        let checks = [
+        let mut checks = vec![
             gate("single-thread resnet8", s1, &base, "threads1_steps_per_sec"),
             gate("4-thread resnet8", s4, &base, "threads4_steps_per_sec"),
             gate(
@@ -569,6 +632,17 @@ fn main() {
                 "train_speedup_4_threads_min",
             ),
         ];
+        // the arch gate only applies when an arch kernel actually
+        // dispatched — on hosts without the required CPU features the
+        // tier tag in the JSON proves the fallback and no gate fires
+        if let Some(sp) = qmatmul_arch_speedup {
+            checks.push(gate(
+                "qmatmul arch tier vs best portable packed",
+                sp,
+                &base,
+                "qmatmul_arch_speedup_vs_simd_min",
+            ));
+        }
         if checks.iter().any(|ok| !ok) {
             std::process::exit(1);
         }

@@ -257,9 +257,10 @@ fn main() -> Result<()> {
                 f32_m[1] / n as f32
             );
             if quantized {
+                let tier = qnet.as_ref().map(|q| q.tier().name()).unwrap_or("-");
                 println!(
                     "{variant} quantized: acc={:.4} loss={:.4}  (int8/ternary GEMM, \
-                     i32 accumulators)",
+                     i32 accumulators, qmatmul tier: {tier})",
                     q_m[0] / n as f32,
                     q_m[1] / n as f32
                 );

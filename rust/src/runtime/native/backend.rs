@@ -550,7 +550,11 @@ impl NativeBackend {
     /// Discretize + quantize the current state into a real int8/ternary
     /// inference network: θ argmax per the spec's search mode, weights
     /// stored as i8 codes with per-channel scales, BN running stats
-    /// folded — see [`super::qkernels`].
+    /// folded — see [`super::qkernels`]. Build time also prepacks every
+    /// dense conv's codes into the panel-major GEMM layout (one slab,
+    /// sized by `plan::quant_pack_plan`, written exactly once) and fixes
+    /// the qmatmul kernel tier from runtime CPU-feature detection —
+    /// steady-state evals never repack or re-dispatch.
     pub fn quantize(&self, state: &TrainState) -> Result<QuantNet<'_>> {
         let geoms: Vec<GeomParams> = self
             .geoms

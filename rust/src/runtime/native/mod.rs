@@ -30,7 +30,10 @@
 //!   discretization, i8/ternary weight codes with per-channel scales,
 //!   int8 activations and an integer GEMM with i32 accumulators
 //!   (`repro eval --quantized`), validated against the f32 fake-quant
-//!   forward;
+//!   forward; weights are prepacked once per `QuantNet` build into
+//!   panel-major blocks and driven by a kernel tier picked by runtime
+//!   CPU-feature detection (`arch-kernels`: AVX2/VNNI/NEON — all tiers
+//!   bit-identical to the i64 reference);
 //! * [`backend`] — [`NativeBackend`]: the train/eval/cost loop with
 //!   intra-step batch sharding, fixed-order gradient tree reduction, and
 //!   SGD+momentum or Adam per-group updates.
@@ -56,7 +59,7 @@ pub use arena::Arena;
 pub use backend::{NativeBackend, NativeOptions, WOptimizer, NSHARDS};
 pub use plan::ExecPlan;
 pub use pool::{max_threads, KernelScope, WorkerPool};
-pub use qkernels::QuantNet;
+pub use qkernels::{QTier, QuantNet};
 pub use supernet::{Arch, SearchMode, SupernetSpec};
 pub use tape::{EvalBits, Gradients, QuantKind, Tape, Var};
 pub use tensor::Tensor;

@@ -169,6 +169,35 @@ pub fn quant_shard_plan(spec: &SupernetSpec, n: usize) -> QuantPlan {
     }
 }
 
+/// Sized layout of the prepacked quantized-weight slab — one offset per
+/// conv geometry (None for depthwise layers, whose per-channel taps
+/// never run the GEMM), plus the slab total. Depends only on the spec's
+/// geometry (never on θ or the trained weights), so `QuantNet::build`
+/// can allocate the whole slab once, pack into it, and steady-state
+/// evals never grow it.
+pub struct QuantPackPlan {
+    pub offsets: Vec<Option<usize>>,
+    pub total: usize,
+}
+
+/// Walk the conv geometries and lay out the packed-B slab
+/// (`qkernels::pack_b_into` layout, sized by `quant_packed_len`).
+pub fn quant_pack_plan(spec: &SupernetSpec) -> QuantPackPlan {
+    use super::qkernels::quant_packed_len;
+    let mut offsets = Vec::with_capacity(spec.n_convs());
+    let mut total = 0usize;
+    for gi in 0..spec.n_convs() {
+        let l = &spec.layers[gi];
+        if l.ltype == LayerType::Dw {
+            offsets.push(None);
+        } else {
+            offsets.push(Some(total));
+            total += quant_packed_len(spec.fan_in(gi), l.cout);
+        }
+    }
+    QuantPackPlan { offsets, total }
+}
+
 /// Buffer multiset of one training step on an `n`-row batch shard.
 fn step_sizes(spec: &SupernetSpec, n: usize) -> Vec<(usize, usize)> {
     let mut bag = SizeBag::default();

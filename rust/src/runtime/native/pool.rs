@@ -35,7 +35,11 @@
 //! stays usable. Dropping the pool shuts the workers down and joins
 //! them; no thread outlives the backend.
 //!
-//! Affinity: `ODIMO_PIN_WORKERS=1` pins slot `i` to core `i % cores`
+//! Affinity: `ODIMO_PIN_WORKERS=1` pins slot `i` round-robin over an
+//! SMT-aware core order — physical (primary) cores first, hyperthread
+//! siblings only after every physical core has a worker — read once
+//! from `/sys/devices/system/cpu/*/topology/thread_siblings_list`; when
+//! sysfs is unreadable the order degrades to the identity `i % cores`
 //! (Linux only; a no-op elsewhere — see [`pin_thread_to_core`]).
 //! Default off, because the OS scheduler usually does fine at ≤ 8
 //! threads and pinning hurts when the pool shares the machine. It helps
@@ -69,10 +73,53 @@ pub fn pin_workers_requested() -> bool {
     std::env::var("ODIMO_PIN_WORKERS").as_deref() == Ok("1")
 }
 
-/// Pin the calling thread to `core % cores` (best effort). Returns
-/// whether the platform supports pinning at all; the syscall's own
-/// result is ignored — a failed pin just leaves the thread where the
-/// scheduler put it, which is exactly the default behaviour.
+/// SMT-aware pinning order: every CPU whose
+/// `topology/thread_siblings_list` names it as the lowest member of its
+/// sibling set (i.e. the "primary" hyperthread) comes first, ascending;
+/// sibling hyperthreads follow, also ascending — so round-robin pinning
+/// lands one worker per physical core before doubling any of them up.
+/// If any CPU's sysfs entry is unreadable the order degrades to the
+/// identity permutation (the previous `i % cores` behaviour). Computed
+/// once per process.
+#[cfg(target_os = "linux")]
+fn core_order() -> &'static [usize] {
+    use std::sync::OnceLock;
+    static ORDER: OnceLock<Vec<usize>> = OnceLock::new();
+    ORDER.get_or_init(|| {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(1024);
+        let mut primary = Vec::new();
+        let mut sibling = Vec::new();
+        for cpu in 0..cores {
+            let path = format!("/sys/devices/system/cpu/cpu{cpu}/topology/thread_siblings_list");
+            match std::fs::read_to_string(&path).ok().and_then(|s| siblings_min(&s)) {
+                Some(min) if min != cpu => sibling.push(cpu),
+                Some(_) => primary.push(cpu),
+                None => return (0..cores).collect(),
+            }
+        }
+        primary.extend(sibling);
+        primary
+    })
+}
+
+/// Lowest CPU id in a sysfs siblings list ("0,4", "0-1", "2", …).
+#[cfg(target_os = "linux")]
+fn siblings_min(list: &str) -> Option<usize> {
+    list.trim()
+        .split(',')
+        .filter_map(|tok| tok.split('-').next())
+        .filter_map(|tok| tok.trim().parse::<usize>().ok())
+        .min()
+}
+
+/// Pin the calling thread to the `core`-th entry of the SMT-aware core
+/// order (best effort). Returns whether the platform supports pinning
+/// at all; the syscall's own result is ignored — a failed pin just
+/// leaves the thread where the scheduler put it, which is exactly the
+/// default behaviour.
 #[cfg(target_os = "linux")]
 pub fn pin_thread_to_core(core: usize) -> bool {
     // glibc cpu_set_t: 1024 bits. No libc crate in-tree, so declare the
@@ -80,10 +127,8 @@ pub fn pin_thread_to_core(core: usize) -> bool {
     extern "C" {
         fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
     }
-    let cores = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1);
-    let bit = core % cores.min(1024);
+    let order = core_order();
+    let bit = order[core % order.len().max(1)] % 1024;
     let mut mask = [0u64; 16];
     mask[bit / 64] = 1u64 << (bit % 64);
     unsafe {
@@ -622,5 +667,32 @@ mod tests {
         let pool = WorkerPool::new(3);
         let out = pool.run_tasks(3, &|i, _s| i);
         assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    /// The SMT-aware order must still visit every CPU exactly once —
+    /// it only *reorders* (physical cores first), never drops or
+    /// duplicates, including on hosts where sysfs is unreadable (the
+    /// identity fallback).
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn core_order_is_a_permutation_of_available_cpus() {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(1024);
+        let mut order = core_order().to_vec();
+        order.sort_unstable();
+        assert_eq!(order, (0..cores).collect::<Vec<_>>());
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn siblings_list_parses_all_sysfs_formats() {
+        assert_eq!(siblings_min("0,4\n"), Some(0));
+        assert_eq!(siblings_min("0-1"), Some(0));
+        assert_eq!(siblings_min("2"), Some(2));
+        assert_eq!(siblings_min("3,7\n"), Some(3));
+        assert_eq!(siblings_min(""), None);
+        assert_eq!(siblings_min("garbage"), None);
     }
 }

@@ -234,6 +234,21 @@ mod imp {
 
 pub use imp::{compiled_in, enabled, reset, set_enabled, snapshot, time, OpTimer};
 
+/// The qmatmul kernel tier of the most recent `QuantNet::build` — a
+/// label, not a timer, so it lives outside the `op-profile` gate and is
+/// recorded on every build. Lets a per-op report (or a human reading
+/// two bench artifacts) attribute qmatmul deltas to the tier that
+/// actually ran.
+static TIER_TAG: std::sync::Mutex<Option<&'static str>> = std::sync::Mutex::new(None);
+
+pub fn set_tier_tag(tag: &'static str) {
+    *TIER_TAG.lock().unwrap() = Some(tag);
+}
+
+pub fn tier_tag() -> Option<&'static str> {
+    *TIER_TAG.lock().unwrap()
+}
+
 /// Human-readable breakdown table (share of the profiled total, mean
 /// per call), rows sorted by total time descending.
 pub fn report() -> String {
@@ -261,6 +276,9 @@ pub fn report() -> String {
             r.calls,
             crate::util::bench::fmt_ns(r.total_ns as f64 / r.calls.max(1) as f64),
         ));
+    }
+    if let Some(t) = tier_tag() {
+        out.push_str(&format!("  qmatmul tier: {t}\n"));
     }
     out
 }

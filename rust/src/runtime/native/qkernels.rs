@@ -29,10 +29,24 @@
 //!   accumulator lanes the autovectorizer maps to vector registers;
 //! * `simd-kernels` builds add a widening-lane variant on
 //!   [`I16x8`]/[`I32x8`]: codes widen i8→i16 on load and multiply as
-//!   i32 (127² fits comfortably), 8 products per step.
+//!   i32 (127² fits comfortably), 8 products per step;
+//! * `arch-kernels` builds add architecture-intrinsic panel kernels
+//!   (AVX2 `maddubs` / AVX-512-VNNI `vpdpbusd`, NEON `vmull` / `sdot` —
+//!   see `tensor::arch`) behind **runtime** CPU-feature detection.
+//!
+//! The arch tier runs on **prepacked** weights: [`pack_b_into`] repacks
+//! each layer's `[n, k]` code matrix once, at [`QuantNet::build`] time,
+//! into panel-major `QNR×QLANES` blocks (k zero-padded to a lane
+//! multiple, n to a panel multiple — exact, the pads contribute 0), so
+//! the inner loop streams one contiguous 32-byte block per step instead
+//! of re-slicing `b[(j+t)*k..]` per panel. The packed drive
+//! ([`qmatmul_bt_packed_into`]) speeds up the portable tiers too. The
+//! tier is decided **once per `QuantNet` build** ([`QTier::detect`] +
+//! the per-layer −128 gate in [`QTier::for_packed`]), never per call.
 //!
 //! [`qmatmul_bt_into`] dispatches to the best compiled-in tier;
-//! `tests/kernels.rs` pins all tiers exactly equal on panel-edge shapes.
+//! `tests/kernels.rs` pins all tiers — unpacked, packed and arch —
+//! exactly equal on panel-edge shapes and saturation-edge inputs.
 //!
 //! # Execution
 //!
@@ -67,7 +81,7 @@ use anyhow::{anyhow, Result};
 use crate::soc::LayerType;
 
 use super::backend::NSHARDS;
-use super::plan::{quant_shard_plan, QuantPlan};
+use super::plan::{quant_pack_plan, quant_shard_plan, QuantPlan};
 use super::pool::{KernelScope, WorkerPool};
 use super::profile::{self, Op};
 use super::supernet::{PlanStep, SearchMode, SupernetSpec, BN_EPS};
@@ -120,6 +134,24 @@ pub struct QuantNet<'a> {
     pool: Option<&'a WorkerPool>,
     /// one recycled buffer set per batch shard
     scratch: Vec<Mutex<QScratch>>,
+    /// qmatmul tier this build + host detected at build time
+    tier: QTier,
+    /// one contiguous slab of panel-major packed codes for every dense
+    /// conv, written exactly once at build (sized by `quant_pack_plan`)
+    pack: Vec<i8>,
+    /// per-geometry view into `pack` (None for depthwise layers, which
+    /// run per-channel taps, not a GEMM)
+    pack_meta: Vec<Option<PackInfo>>,
+}
+
+/// One dense conv's slice of the prepacked weight slab, plus the tier
+/// its GEMM drives (detection refined by the per-matrix −128 gate —
+/// both resolved once at build).
+struct PackInfo {
+    off: usize,
+    len: usize,
+    k_pad: usize,
+    tier: QTier,
 }
 
 /// Masked argmax over one θ row; ties keep the lowest eligible column.
@@ -276,6 +308,146 @@ const QNR: usize = 4;
 /// split — integer adds are associative.
 const QLANES: usize = 8;
 
+// The arch panel kernels hard-code the 4×8 granule: one packed block is
+// 4 rows × 8 codes = 32 bytes = one AVX2 register / two NEON d-regs.
+const _: () = assert!(QNR == 4 && QLANES == 8);
+
+/// Reduction length padded up to a whole number of [`QLANES`] chunks —
+/// the per-row stride of the packed layout.
+pub fn quant_k_pad(k: usize) -> usize {
+    k.div_ceil(QLANES) * QLANES
+}
+
+/// Total packed bytes of an `[n, k]` code matrix: `n` padded to a whole
+/// number of [`QNR`]-row panels, each row zero-padded to
+/// [`quant_k_pad`]. The zero pads contribute 0 to every dot — packing
+/// is exactness-preserving by construction.
+pub fn quant_packed_len(k: usize, n: usize) -> usize {
+    n.div_ceil(QNR) * QNR * quant_k_pad(k)
+}
+
+/// A panel-major prepacked weight matrix: per [`QNR`]-row panel, blocks
+/// of `QNR×QLANES` codes laid out `[row0 8B][row1 8B][row2 8B][row3 8B]`
+/// so a panel step reads one contiguous 32-byte block.
+pub struct PackedB {
+    pub data: Vec<i8>,
+    pub k: usize,
+    pub n: usize,
+    pub k_pad: usize,
+    /// any −128 code present — the x86 sign-transfer kernels must fall
+    /// back to the portable tier (`sign_epi8` wraps −(−128)); production
+    /// codes are clamped to ±127 so this only fires on adversarial input
+    pub has_m128: bool,
+}
+
+/// Pack `[n, k]` row-major codes into `out` (sized [`quant_packed_len`]).
+/// Returns whether any −128 code was seen (see [`PackedB::has_m128`]).
+pub fn pack_b_into(b: &[i8], k: usize, n: usize, out: &mut [i8]) -> bool {
+    debug_assert!(k > 0);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), quant_packed_len(k, n));
+    let k_pad = quant_k_pad(k);
+    out.fill(0);
+    let mut has_m128 = false;
+    for (j, row) in b.chunks_exact(k).enumerate() {
+        let base = (j / QNR) * QNR * k_pad + (j % QNR) * QLANES;
+        for (bi, chunk) in row.chunks(QLANES).enumerate() {
+            let dst = base + bi * QNR * QLANES;
+            out[dst..dst + chunk.len()].copy_from_slice(chunk);
+        }
+        has_m128 |= row.contains(&i8::MIN);
+    }
+    has_m128
+}
+
+/// Allocating convenience form of [`pack_b_into`].
+pub fn pack_b(b: &[i8], k: usize, n: usize) -> PackedB {
+    let mut data = vec![0i8; quant_packed_len(k, n)];
+    let has_m128 = pack_b_into(b, k, n, &mut data);
+    PackedB {
+        data,
+        k,
+        n,
+        k_pad: quant_k_pad(k),
+        has_m128,
+    }
+}
+
+/// The qmatmul kernel tier a `QuantNet` dispatches to. Decided once per
+/// build ([`QTier::detect`]), refined per layer by the −128 gate
+/// ([`QTier::for_packed`]), never re-decided per call. Every tier
+/// produces identical i32s (integer associativity + the saturation
+/// arguments in `tensor::arch`), so the choice is pure throughput.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QTier {
+    Naive,
+    Blocked,
+    Simd,
+    Avx2,
+    Avx512Vnni,
+    Neon,
+    NeonDot,
+}
+
+impl QTier {
+    /// Best tier this build + this host supports. Arch tiers need the
+    /// `arch-kernels` feature *and* runtime CPU-feature detection.
+    pub fn detect() -> QTier {
+        #[cfg(feature = "arch-kernels")]
+        {
+            use super::tensor::arch::Isa;
+            match super::tensor::arch::isa() {
+                Isa::Avx512Vnni => return QTier::Avx512Vnni,
+                Isa::Avx2 => return QTier::Avx2,
+                Isa::NeonDot => return QTier::NeonDot,
+                Isa::Neon => return QTier::Neon,
+                Isa::None => {}
+            }
+        }
+        Self::portable()
+    }
+
+    /// Best portable (non-arch) tier of this build.
+    fn portable() -> QTier {
+        #[cfg(feature = "simd-kernels")]
+        if simd_enabled() {
+            return QTier::Simd;
+        }
+        QTier::Blocked
+    }
+
+    /// The tier actually driven for one packed matrix: the x86
+    /// sign-transfer kernels cannot process −128 codes, so those
+    /// matrices fall back to the portable tier (NEON is signed×signed
+    /// and unaffected).
+    pub fn for_packed(self, has_m128: bool) -> QTier {
+        match self {
+            QTier::Avx2 | QTier::Avx512Vnni if has_m128 => Self::portable(),
+            t => t,
+        }
+    }
+
+    /// Whether this tier runs architecture-intrinsic kernels.
+    pub fn is_arch(self) -> bool {
+        matches!(
+            self,
+            QTier::Avx2 | QTier::Avx512Vnni | QTier::Neon | QTier::NeonDot
+        )
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QTier::Naive => "naive",
+            QTier::Blocked => "blocked",
+            QTier::Simd => "simd",
+            QTier::Avx2 => "avx2",
+            QTier::Avx512Vnni => "avx512vnni",
+            QTier::Neon => "neon",
+            QTier::NeonDot => "neon_dot",
+        }
+    }
+}
+
 /// 8-lane max-abs scan. f32 `max` is exact and order-free (no rounding),
 /// so the lane split returns the same amax bits as a serial fold.
 fn max_abs(x: &[f32]) -> f32 {
@@ -431,6 +603,31 @@ mod qsimd {
         }
         out
     }
+
+    /// Packed-panel variant: the weight blocks arrive contiguous
+    /// (`[row0 8][row1 8][row2 8][row3 8]` per step), the final partial
+    /// activation chunk from the caller's zero-padded tail buffer.
+    #[inline(always)]
+    pub fn qpanel_packed(arow: &[i8], atail: &[i8; QLANES], panel: &[i8]) -> [i32; QNR] {
+        let full = arow.len() / QLANES;
+        let mut acc = [I32x8::zero(); QNR];
+        for (bi, blk) in panel.chunks_exact(QNR * QLANES).enumerate() {
+            let ac: &[i8] = if bi < full {
+                &arow[bi * QLANES..(bi + 1) * QLANES]
+            } else {
+                atail
+            };
+            let av = I16x8::widen(ac);
+            for (t, at) in acc.iter_mut().enumerate() {
+                *at = at.mul_add_widen(av, I16x8::widen(&blk[t * QLANES..]));
+            }
+        }
+        let mut out = [0i32; QNR];
+        for (t, at) in acc.iter().enumerate() {
+            out[t] = at.hsum();
+        }
+        out
+    }
 }
 
 /// Shared panel-sweep skeleton of the blocked tiers: stream each
@@ -531,6 +728,213 @@ pub fn qmatmul_bt_dequant_into(
     });
 }
 
+/// Packed-panel scalar kernel: same lane-split accumulators as
+/// [`qpanel_scalar`], but streaming contiguous packed blocks.
+#[inline(always)]
+fn qpanel_packed_scalar(arow: &[i8], atail: &[i8; QLANES], panel: &[i8]) -> [i32; QNR] {
+    let full = arow.len() / QLANES;
+    let mut acc = [[0i32; QNR]; QLANES];
+    for (bi, blk) in panel.chunks_exact(QNR * QLANES).enumerate() {
+        let ac: &[i8] = if bi < full {
+            &arow[bi * QLANES..(bi + 1) * QLANES]
+        } else {
+            atail
+        };
+        for (l, al) in acc.iter_mut().enumerate() {
+            let av = ac[l] as i32;
+            for (t, at) in al.iter_mut().enumerate() {
+                *at += av * blk[t * QLANES + l] as i32;
+            }
+        }
+    }
+    let mut out = [0i32; QNR];
+    for al in &acc {
+        for (t, &v) in al.iter().enumerate() {
+            out[t] += v;
+        }
+    }
+    out
+}
+
+/// Shared drive of the packed tiers: per activation row, zero-pad the
+/// final partial chunk into a stack tail buffer once, then sweep the
+/// packed panels with unit stride. Monomorphizes per panel kernel.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn bt_drive_packed<P, S>(
+    a: &[i8],
+    pb: &[i8],
+    m: usize,
+    k: usize,
+    k_pad: usize,
+    n: usize,
+    panel: P,
+    mut store: S,
+) where
+    P: Fn(&[i8], &[i8; QLANES], &[i8]) -> [i32; QNR],
+    S: FnMut(usize, usize, i32),
+{
+    debug_assert!(k > 0);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(pb.len(), quant_packed_len(k, n));
+    debug_assert_eq!(k_pad, quant_k_pad(k));
+    let rem = k % QLANES;
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let mut atail = [0i8; QLANES];
+        if rem != 0 {
+            atail[..rem].copy_from_slice(&arow[k - rem..]);
+        }
+        for (pi, pdata) in pb.chunks_exact(QNR * k_pad).enumerate() {
+            let j0 = pi * QNR;
+            let acc = panel(arow, &atail, pdata);
+            for (t, &s) in acc.iter().take(n - j0).enumerate() {
+                store(i, j0 + t, s);
+            }
+        }
+    }
+}
+
+/// Drive one packed GEMM on an already-resolved tier. The `tier` comes
+/// from [`QTier::detect`]`/`[`QTier::for_packed`] — by the time we are
+/// here, runtime feature detection and the −128 gate have both passed
+/// for any arch arm, which is what makes the `unsafe` calls sound.
+#[allow(clippy::too_many_arguments)]
+fn drive_packed_tier<S: FnMut(usize, usize, i32)>(
+    tier: QTier,
+    a: &[i8],
+    pb: &[i8],
+    m: usize,
+    k: usize,
+    k_pad: usize,
+    n: usize,
+    store: S,
+) {
+    match tier {
+        QTier::Naive | QTier::Blocked => {
+            bt_drive_packed(a, pb, m, k, k_pad, n, qpanel_packed_scalar, store)
+        }
+        #[cfg(feature = "simd-kernels")]
+        QTier::Simd => bt_drive_packed(a, pb, m, k, k_pad, n, qsimd::qpanel_packed, store),
+        #[cfg(all(feature = "arch-kernels", target_arch = "x86_64"))]
+        QTier::Avx2 => bt_drive_packed(
+            a,
+            pb,
+            m,
+            k,
+            k_pad,
+            n,
+            // SAFETY: tier == Avx2 only after runtime AVX2 detection and
+            // a −128-free pack (caller contract of qpanel_avx2)
+            |ar, at, p| unsafe { super::tensor::arch::x86::qpanel_avx2(ar, at, p) },
+            store,
+        ),
+        #[cfg(all(feature = "arch-kernels", target_arch = "x86_64"))]
+        QTier::Avx512Vnni => bt_drive_packed(
+            a,
+            pb,
+            m,
+            k,
+            k_pad,
+            n,
+            // SAFETY: tier == Avx512Vnni only after runtime
+            // avx512vnni+avx512vl detection and a −128-free pack
+            |ar, at, p| unsafe { super::tensor::arch::x86::qpanel_vnni(ar, at, p) },
+            store,
+        ),
+        #[cfg(all(feature = "arch-kernels", target_arch = "aarch64"))]
+        QTier::Neon => bt_drive_packed(
+            a,
+            pb,
+            m,
+            k,
+            k_pad,
+            n,
+            // SAFETY: tier == Neon only after runtime NEON detection
+            |ar, at, p| unsafe { super::tensor::arch::aarch::qpanel_neon(ar, at, p) },
+            store,
+        ),
+        #[cfg(all(feature = "arch-kernels", target_arch = "aarch64"))]
+        QTier::NeonDot => bt_drive_packed(
+            a,
+            pb,
+            m,
+            k,
+            k_pad,
+            n,
+            // SAFETY: tier == NeonDot only after runtime dotprod detection
+            |ar, at, p| unsafe { super::tensor::arch::aarch::qpanel_neon_dot(ar, at, p) },
+            store,
+        ),
+        // tiers whose kernels are not compiled into this build (e.g. a
+        // QTier::Simd value in a non-simd build) degrade to the scalar
+        // packed kernel — still bit-identical, just slower
+        _ => bt_drive_packed(a, pb, m, k, k_pad, n, qpanel_packed_scalar, store),
+    }
+}
+
+/// Packed-B integer GEMM, blocked scalar tier.
+pub fn qmatmul_bt_packed_into_blocked(a: &[i8], pb: &PackedB, c: &mut [i32], m: usize) {
+    debug_assert_eq!(c.len(), m * pb.n);
+    let n = pb.n;
+    drive_packed_tier(
+        QTier::Blocked,
+        a,
+        &pb.data,
+        m,
+        pb.k,
+        pb.k_pad,
+        n,
+        |i, j, s| c[i * n + j] = s,
+    );
+}
+
+/// Packed-B integer GEMM, widening SIMD tier.
+#[cfg(feature = "simd-kernels")]
+pub fn qmatmul_bt_packed_into_simd(a: &[i8], pb: &PackedB, c: &mut [i32], m: usize) {
+    debug_assert_eq!(c.len(), m * pb.n);
+    let n = pb.n;
+    drive_packed_tier(QTier::Simd, a, &pb.data, m, pb.k, pb.k_pad, n, |i, j, s| {
+        c[i * n + j] = s
+    });
+}
+
+/// Packed-B integer GEMM on the detected arch tier. Returns `true` when
+/// an arch kernel actually ran — `false` proves the dispatch fell back
+/// (feature undetected, or the pack contains −128 codes on x86), which
+/// the bench uses to decide whether the arch speedup gate applies.
+#[cfg(feature = "arch-kernels")]
+pub fn qmatmul_bt_packed_into_arch(a: &[i8], pb: &PackedB, c: &mut [i32], m: usize) -> bool {
+    debug_assert_eq!(c.len(), m * pb.n);
+    let tier = QTier::detect().for_packed(pb.has_m128);
+    let n = pb.n;
+    drive_packed_tier(tier, a, &pb.data, m, pb.k, pb.k_pad, n, |i, j, s| {
+        c[i * n + j] = s
+    });
+    tier.is_arch()
+}
+
+/// Packed-B integer GEMM, full dispatch (detection + −128 gate).
+pub fn qmatmul_bt_packed_into(a: &[i8], pb: &PackedB, c: &mut [i32], m: usize) {
+    let tier = QTier::detect().for_packed(pb.has_m128);
+    let n = pb.n;
+    drive_packed_tier(tier, a, &pb.data, m, pb.k, pb.k_pad, n, |i, j, s| {
+        c[i * n + j] = s
+    });
+}
+
+/// Fused packed integer GEMM + dequantize (packed analogue of
+/// [`qmatmul_bt_dequant_into`]).
+pub fn qmatmul_bt_packed_dequant_into(a: &[i8], pb: &PackedB, c: &mut [f32], m: usize, dq: &[f32]) {
+    debug_assert_eq!(c.len(), m * pb.n);
+    debug_assert_eq!(dq.len(), pb.n);
+    let tier = QTier::detect().for_packed(pb.has_m128);
+    let n = pb.n;
+    drive_packed_tier(tier, a, &pb.data, m, pb.k, pb.k_pad, n, |i, j, s| {
+        c[i * n + j] = s as f32 * dq[j]
+    });
+}
+
 /// f32 dot (Identity-row fix-up of a mixed-precision conv).
 fn fdot(x: &[f32], y: &[f32]) -> f32 {
     let mut s = 0.0f32;
@@ -625,11 +1029,32 @@ impl<'a> QuantNet<'a> {
                 spec.n_convs()
             ));
         }
-        let layers = geoms
+        let layers: Vec<QLayer> = geoms
             .iter()
             .enumerate()
             .map(|(gi, p)| QLayer::build(spec, gi, p))
             .collect();
+        // one-time weight prepacking: a single slab sized by the plan
+        // walk, filled here and never touched again (steady-state evals
+        // stream it read-only — the zero-allocation pin covers it)
+        let tier = QTier::detect();
+        let pplan = quant_pack_plan(spec);
+        let mut pack = vec![0i8; pplan.total];
+        let mut pack_meta = Vec::with_capacity(spec.n_convs());
+        for (gi, ql) in layers.iter().enumerate() {
+            pack_meta.push(pplan.offsets[gi].map(|off| {
+                let (k, n) = (spec.fan_in(gi), spec.layers[gi].cout);
+                let len = quant_packed_len(k, n);
+                let has_m128 = pack_b_into(&ql.codes, k, n, &mut pack[off..off + len]);
+                PackInfo {
+                    off,
+                    len,
+                    k_pad: quant_k_pad(k),
+                    tier: tier.for_packed(has_m128),
+                }
+            }));
+        }
+        profile::set_tier_tag(tier.name());
         // prime scratch for the manifest batch size; odd batch sizes
         // just grow capacity once and settle
         let batch = spec.dataset.batch.max(1);
@@ -649,7 +1074,23 @@ impl<'a> QuantNet<'a> {
             fc_b: fc_b.to_vec(),
             pool: None,
             scratch,
+            tier,
+            pack,
+            pack_meta,
         })
+    }
+
+    /// The qmatmul tier detected when this net was built (individual
+    /// layers may still fall back via the −128 gate).
+    pub fn tier(&self) -> QTier {
+        self.tier
+    }
+
+    /// Total bytes of the prepacked weight slab (pinned by the
+    /// zero-allocation test: must equal `quant_pack_plan(spec).total`
+    /// and never change after build).
+    pub fn packed_len(&self) -> usize {
+        self.pack.len()
     }
 
     /// Run batch shards as tasks of `pool` (surplus slots become kernel
@@ -912,20 +1353,24 @@ impl<'a> QuantNet<'a> {
         {
             let a8: &[i8] = &sc.a8;
             let dq: &[f32] = &sc.dq;
+            let pinfo = self.pack_meta[gi].as_ref();
+            let pack: &[i8] = &self.pack;
             par_rows(&mut out, rows, cout, scope, |r0, r1, chunk| {
                 if use_int {
                     // probe inside the lane closure: the Op counters are
                     // atomics, so concurrent lanes sum to the true CPU
                     // time of the quantized GEMM
                     let _p = profile::time(Op::QMatmul);
-                    qmatmul_bt_dequant_into(
+                    let pi = pinfo.expect("dense conv layers are always packed");
+                    drive_packed_tier(
+                        pi.tier,
                         &a8[r0 * f..r1 * f],
-                        &ql.codes,
-                        chunk,
+                        &pack[pi.off..pi.off + pi.len],
                         r1 - r0,
                         f,
+                        pi.k_pad,
                         cout,
-                        dq,
+                        |i, j, s| chunk[i * cout + j] = s as f32 * dq[j],
                     );
                     for &j in &ql.ident_cols {
                         for i in r0..r1 {

@@ -38,6 +38,13 @@
 //! one `simd-kernels` binary can measure both paths; it is process
 //! global — tests compare [`simd`] and `*_scalar` functions directly
 //! instead of toggling it.
+//!
+//! The `arch-kernels` feature adds a third, architecture-intrinsic int8
+//! GEMM tier in [`arch`] (AVX2 `maddubs` / AVX-512-VNNI `vpdpbusd` on
+//! x86_64, NEON `vmull` / `sdot` on aarch64), selected by runtime
+//! CPU-feature detection ([`arch::isa`]) and consumed by the packed
+//! qmatmul drive in [`super::qkernels`]. Detection itself is compiled
+//! unconditionally so every build can report what the host supports.
 
 use super::pool::KernelScope;
 use super::profile::{self, Op};
@@ -880,6 +887,315 @@ pub mod simd {
         }
         for jj in main..n {
             out[jj] = x[jj] * a[jj] + b[jj];
+        }
+    }
+}
+
+/// Architecture-intrinsic int8 GEMM kernels and the runtime CPU-feature
+/// detection that selects them.
+///
+/// Detection ([`arch::isa`], [`arch::cpu_features`]) is compiled on every
+/// build so bench records can always report what the host supports; the
+/// kernel submodules ([`arch::x86`], [`arch::aarch`]) only exist under the
+/// `arch-kernels` feature on their target arch. Each kernel computes one
+/// packed `QNR×QLANES` panel (see `qkernels::pack_b_into`): four weight
+/// rows × the full reduction, returning four exact i32 dot products.
+///
+/// Exactness arguments (every tier must bitwise-match the i64 reference):
+///
+/// * **AVX2 / VNNI (u8×i8)**: signed a·b is computed as |a|·sign(b,a)
+///   (the sign-transfer trick). Weight codes are clamped to ±127 at
+///   quantization time, so `sign_epi8` never wraps (−(−128) hazard) —
+///   and when adversarial inputs *do* contain −128 weights, pack time
+///   detects it and dispatch falls back to the portable tier. With
+///   |a| ≤ 128 and |b| ≤ 127 each `maddubs` pair sum is ≤ 2·128·127 =
+///   32512 < i16::MAX: saturation is neutralized, not tolerated.
+///   `vpdpbusd` accumulates quads straight into i32 (non-saturating by
+///   definition) under the same preprocessing.
+/// * **NEON**: `vmull_s8` widens i8×i8→i16 exactly and `vpadalq_s16`
+///   accumulates into i32; `sdot` is an exact signed i8 quad dot. No
+///   −128 gate needed. i32 addition is associative, so block order and
+///   the mixed sdot/vmull tail cannot change the result.
+pub mod arch {
+    use std::sync::OnceLock;
+
+    /// The instruction set the int8 panel kernels would run on, best
+    /// tier first. `None` means only the portable tiers are available.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum Isa {
+        None,
+        Avx2,
+        Avx512Vnni,
+        Neon,
+        NeonDot,
+    }
+
+    impl Isa {
+        pub fn name(self) -> &'static str {
+            match self {
+                Isa::None => "none",
+                Isa::Avx2 => "avx2",
+                Isa::Avx512Vnni => "avx512vnni",
+                Isa::Neon => "neon",
+                Isa::NeonDot => "neon_dot",
+            }
+        }
+    }
+
+    /// Best int8-kernel ISA on this host, detected once per process.
+    pub fn isa() -> Isa {
+        static ISA: OnceLock<Isa> = OnceLock::new();
+        *ISA.get_or_init(detect)
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    fn detect() -> Isa {
+        // vpdpbusd on ymm registers needs VNNI *and* VL; plain AVX2 is
+        // the broadly-available fallback. (VEX-encoded AVX-VNNI without
+        // AVX-512 is left to a future PR.)
+        if std::arch::is_x86_feature_detected!("avx512vnni")
+            && std::arch::is_x86_feature_detected!("avx512vl")
+        {
+            Isa::Avx512Vnni
+        } else if std::arch::is_x86_feature_detected!("avx2") {
+            Isa::Avx2
+        } else {
+            Isa::None
+        }
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    fn detect() -> Isa {
+        if std::arch::is_aarch64_feature_detected!("dotprod") {
+            Isa::NeonDot
+        } else if std::arch::is_aarch64_feature_detected!("neon") {
+            Isa::Neon
+        } else {
+            Isa::None
+        }
+    }
+
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    fn detect() -> Isa {
+        Isa::None
+    }
+
+    /// The four CPU features the bench record reports, with their
+    /// detected state on this host (always all-false off x86/ARM).
+    pub fn cpu_features() -> [(&'static str, bool); 4] {
+        #[cfg(target_arch = "x86_64")]
+        {
+            [
+                ("avx2", std::arch::is_x86_feature_detected!("avx2")),
+                (
+                    "avx512vnni",
+                    std::arch::is_x86_feature_detected!("avx512vnni")
+                        && std::arch::is_x86_feature_detected!("avx512vl"),
+                ),
+                ("neon", false),
+                ("dotprod", false),
+            ]
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            [
+                ("avx2", false),
+                ("avx512vnni", false),
+                ("neon", std::arch::is_aarch64_feature_detected!("neon")),
+                ("dotprod", std::arch::is_aarch64_feature_detected!("dotprod")),
+            ]
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            [
+                ("avx2", false),
+                ("avx512vnni", false),
+                ("neon", false),
+                ("dotprod", false),
+            ]
+        }
+    }
+
+    #[cfg(all(feature = "arch-kernels", target_arch = "x86_64"))]
+    pub mod x86 {
+        use std::arch::x86_64::*;
+
+        /// The bi-th 8-byte activation chunk as a broadcastable i64:
+        /// in-bounds chunks come from the row, the final partial chunk
+        /// from the caller's zero-padded tail buffer.
+        #[inline(always)]
+        unsafe fn a_chunk(arow: &[i8], atail: &[i8; 8], full: usize, bi: usize) -> i64 {
+            let p = if bi < full {
+                arow.as_ptr().add(bi * 8)
+            } else {
+                atail.as_ptr()
+            };
+            core::ptr::read_unaligned(p as *const i64)
+        }
+
+        /// Horizontal reduce: row t of the panel owns i32 lanes 2t,2t+1.
+        #[target_feature(enable = "avx2")]
+        #[inline]
+        unsafe fn row_sums(acc: __m256i) -> [i32; 4] {
+            let mut lanes = [0i32; 8];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+            [
+                lanes[0] + lanes[1],
+                lanes[2] + lanes[3],
+                lanes[4] + lanes[5],
+                lanes[6] + lanes[7],
+            ]
+        }
+
+        /// One packed 4×k panel via `maddubs`. Caller contract: AVX2
+        /// detected at runtime, and `panel` is free of −128 codes.
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn qpanel_avx2(arow: &[i8], atail: &[i8; 8], panel: &[i8]) -> [i32; 4] {
+            let full = arow.len() / 8;
+            let ones = _mm256_set1_epi16(1);
+            let mut acc = _mm256_setzero_si256();
+            for (bi, blk) in panel.chunks_exact(32).enumerate() {
+                let av = _mm256_set1_epi64x(a_chunk(arow, atail, full, bi));
+                let bv = _mm256_loadu_si256(blk.as_ptr() as *const __m256i);
+                // u8×i8 sign transfer: |a| ∈ [0,128] (abs(−128)=128 is a
+                // valid u8), sign moved onto b. Codes are −128-free, so
+                // sign_epi8 never wraps; pair sums ≤ 2·128·127 = 32512 <
+                // i16::MAX — maddubs cannot saturate.
+                let p16 = _mm256_maddubs_epi16(_mm256_abs_epi8(av), _mm256_sign_epi8(bv, av));
+                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(p16, ones));
+            }
+            row_sums(acc)
+        }
+
+        /// `acc += dot4(u8 x, i8 y)` per i32 lane via AVX-512-VNNI
+        /// `vpdpbusd` on ymm registers. Inline asm rather than the
+        /// intrinsic: the AVX-512 intrinsics need a newer stable rustc
+        /// than this crate pins, while the mnemonic assembles anywhere
+        /// and the `ymm_reg` class only requires AVX at compile time.
+        /// Runtime gating (avx512vnni+avx512vl) is the dispatcher's job.
+        #[target_feature(enable = "avx2")]
+        #[inline]
+        unsafe fn dpbusd(acc: __m256i, x: __m256i, y: __m256i) -> __m256i {
+            let mut out = acc;
+            std::arch::asm!(
+                "vpdpbusd {acc}, {x}, {y}",
+                acc = inout(ymm_reg) out,
+                x = in(ymm_reg) x,
+                y = in(ymm_reg) y,
+                options(pure, nomem, nostack)
+            );
+            out
+        }
+
+        /// One packed 4×k panel via `vpdpbusd` (non-saturating quad dot
+        /// straight into i32). Same caller contract and preprocessing as
+        /// [`qpanel_avx2`], plus avx512vnni+avx512vl detected.
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn qpanel_vnni(arow: &[i8], atail: &[i8; 8], panel: &[i8]) -> [i32; 4] {
+            let full = arow.len() / 8;
+            let mut acc = _mm256_setzero_si256();
+            for (bi, blk) in panel.chunks_exact(32).enumerate() {
+                let av = _mm256_set1_epi64x(a_chunk(arow, atail, full, bi));
+                let bv = _mm256_loadu_si256(blk.as_ptr() as *const __m256i);
+                acc = dpbusd(acc, _mm256_abs_epi8(av), _mm256_sign_epi8(bv, av));
+            }
+            row_sums(acc)
+        }
+    }
+
+    #[cfg(all(feature = "arch-kernels", target_arch = "aarch64"))]
+    pub mod aarch {
+        use std::arch::aarch64::*;
+
+        /// Pointer to the bi-th 8-byte activation chunk (zero-padded
+        /// tail buffer for the final partial chunk).
+        #[inline(always)]
+        unsafe fn a_ptr(arow: &[i8], atail: &[i8; 8], full: usize, bi: usize) -> *const i8 {
+            if bi < full {
+                arow.as_ptr().add(bi * 8)
+            } else {
+                atail.as_ptr()
+            }
+        }
+
+        /// One packed 4×k panel via `vmull_s8` (exact i8×i8→i16) +
+        /// `vpadalq_s16` (pairwise widen-accumulate into i32).
+        #[target_feature(enable = "neon")]
+        pub unsafe fn qpanel_neon(arow: &[i8], atail: &[i8; 8], panel: &[i8]) -> [i32; 4] {
+            let full = arow.len() / 8;
+            let mut acc = [vdupq_n_s32(0); 4];
+            for (bi, blk) in panel.chunks_exact(32).enumerate() {
+                let av = vld1_s8(a_ptr(arow, atail, full, bi));
+                for (t, at) in acc.iter_mut().enumerate() {
+                    let bv = vld1_s8(blk.as_ptr().add(t * 8));
+                    *at = vpadalq_s16(*at, vmull_s8(av, bv));
+                }
+            }
+            [
+                vaddvq_s32(acc[0]),
+                vaddvq_s32(acc[1]),
+                vaddvq_s32(acc[2]),
+                vaddvq_s32(acc[3]),
+            ]
+        }
+
+        /// `acc.4s += sdot(a.16b, b.16b)` via inline asm — the aarch64
+        /// assembler gates the mnemonic, hence the dotprod target
+        /// feature; runtime gating is the dispatcher's job.
+        #[target_feature(enable = "neon,dotprod")]
+        #[inline]
+        unsafe fn sdot_acc(acc: int32x4_t, a: int8x16_t, b: int8x16_t) -> int32x4_t {
+            let mut out = acc;
+            std::arch::asm!(
+                "sdot {acc:v}.4s, {a:v}.16b, {b:v}.16b",
+                acc = inout(vreg) out,
+                a = in(vreg) a,
+                b = in(vreg) b,
+                options(pure, nomem, nostack)
+            );
+            out
+        }
+
+        /// One packed 4×k panel via `sdot`, consuming blocks in pairs
+        /// (sdot wants 16-byte operands; blocks are 8 bytes per row).
+        /// An odd tail block goes through the exact vmull path into the
+        /// same accumulators — i32 addition is associative, so mixing
+        /// cannot change the result.
+        #[target_feature(enable = "neon,dotprod")]
+        pub unsafe fn qpanel_neon_dot(arow: &[i8], atail: &[i8; 8], panel: &[i8]) -> [i32; 4] {
+            let full = arow.len() / 8;
+            let nblocks = panel.len() / 32;
+            let mut acc = [vdupq_n_s32(0); 4];
+            let mut bi = 0;
+            while bi + 1 < nblocks {
+                let av = vcombine_s8(
+                    vld1_s8(a_ptr(arow, atail, full, bi)),
+                    vld1_s8(a_ptr(arow, atail, full, bi + 1)),
+                );
+                let (b0, b1) = (&panel[bi * 32..], &panel[(bi + 1) * 32..]);
+                for (t, at) in acc.iter_mut().enumerate() {
+                    let bv = vcombine_s8(
+                        vld1_s8(b0.as_ptr().add(t * 8)),
+                        vld1_s8(b1.as_ptr().add(t * 8)),
+                    );
+                    *at = sdot_acc(*at, av, bv);
+                }
+                bi += 2;
+            }
+            if bi < nblocks {
+                let av = vld1_s8(a_ptr(arow, atail, full, bi));
+                let blk = &panel[bi * 32..];
+                for (t, at) in acc.iter_mut().enumerate() {
+                    let bv = vld1_s8(blk.as_ptr().add(t * 8));
+                    *at = vpadalq_s16(*at, vmull_s8(av, bv));
+                }
+            }
+            [
+                vaddvq_s32(acc[0]),
+                vaddvq_s32(acc[1]),
+                vaddvq_s32(acc[2]),
+                vaddvq_s32(acc[3]),
+            ]
         }
     }
 }

@@ -208,7 +208,9 @@ fn dw_conv_odd_channels_matches_naive() {
 /// 1-column, k and n not multiples of the 4-column/8-lane tiles.
 mod qmatmul_tiers {
     use odimo::runtime::native::qkernels::{
-        qmatmul_bt_dequant_into, qmatmul_bt_into, qmatmul_bt_into_blocked, qmatmul_bt_into_naive,
+        pack_b, qmatmul_bt_dequant_into, qmatmul_bt_into, qmatmul_bt_into_blocked,
+        qmatmul_bt_into_naive, qmatmul_bt_packed_dequant_into, qmatmul_bt_packed_into,
+        qmatmul_bt_packed_into_blocked, quant_packed_len,
     };
 
     /// Deterministic i8 fill over the full code range (incl. -128 —
@@ -260,6 +262,141 @@ mod qmatmul_tiers {
                 let mut simd = vec![0i32; m * n];
                 qmatmul_bt_into_simd(&a, &b, &mut simd, m, k, n);
                 assert_eq!(naive, simd, "simd {m}x{k}x{n}");
+            }
+        }
+    }
+
+    /// The packed tiers (panel-major prepacked B, what a built QuantNet
+    /// actually drives) must exactly equal the unpacked naive tier on
+    /// every panel-edge shape — including the full-dispatch and arch
+    /// entry points, which on hosts without the CPU features (or with
+    /// −128 codes on x86) provably fall back and must *still* be exact.
+    #[test]
+    fn packed_tiers_exactly_equal_unpacked_on_panel_edge_shapes() {
+        for &(m, k, n) in &super::SHAPES {
+            let a = fill_i8(m * k, 113 + (m * 31 + k * 7 + n) as u64);
+            let b = fill_i8(n * k, 127 + (m + k * 5 + n * 3) as u64);
+            let pb = pack_b(&b, k, n);
+            assert_eq!(pb.data.len(), quant_packed_len(k, n), "pack len {m}x{k}x{n}");
+            let mut naive = vec![0i32; m * n];
+            qmatmul_bt_into_naive(&a, &b, &mut naive, m, k, n);
+            let mut packed = vec![0i32; m * n];
+            qmatmul_bt_packed_into_blocked(&a, &pb, &mut packed, m);
+            assert_eq!(naive, packed, "packed blocked {m}x{k}x{n}");
+            let mut dispatch = vec![0i32; m * n];
+            qmatmul_bt_packed_into(&a, &pb, &mut dispatch, m);
+            assert_eq!(naive, dispatch, "packed dispatch {m}x{k}x{n}");
+            #[cfg(feature = "simd-kernels")]
+            {
+                use odimo::runtime::native::qkernels::qmatmul_bt_packed_into_simd;
+                let mut simd = vec![0i32; m * n];
+                qmatmul_bt_packed_into_simd(&a, &pb, &mut simd, m);
+                assert_eq!(naive, simd, "packed simd {m}x{k}x{n}");
+            }
+            #[cfg(feature = "arch-kernels")]
+            {
+                use odimo::runtime::native::qkernels::qmatmul_bt_packed_into_arch;
+                let mut arch = vec![0i32; m * n];
+                let ran = qmatmul_bt_packed_into_arch(&a, &pb, &mut arch, m);
+                assert_eq!(naive, arch, "packed arch {m}x{k}x{n} (ran={ran})");
+                // fill_i8 covers the full i8 range, so most shapes hit a
+                // −128 code — the x86 sign-transfer tiers must decline
+                #[cfg(target_arch = "x86_64")]
+                assert!(
+                    !(ran && pb.has_m128),
+                    "x86 arch tier must fall back on -128 codes ({m}x{k}x{n})"
+                );
+            }
+            // fused dequant over the packed drive, bitwise
+            let dq: Vec<f32> = (0..n).map(|j| 1e-3 * (j + 1) as f32).collect();
+            let mut fused = vec![0.0f32; m * n];
+            qmatmul_bt_packed_dequant_into(&a, &pb, &mut fused, m, &dq);
+            for i in 0..m {
+                for j in 0..n {
+                    let want = naive[i * n + j] as f32 * dq[j];
+                    assert_eq!(
+                        fused[i * n + j].to_bits(),
+                        want.to_bits(),
+                        "packed dequant {m}x{k}x{n} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Adversarial saturation-edge suite: inputs chosen so an i16
+    /// intermediate would saturate (or `sign_epi8` would wrap) if the
+    /// arch kernels' exactness arguments were wrong anywhere. Every
+    /// entry point must match the i64 reference exactly — on AVX2/NEON
+    /// hosts the arch kernels actually run for the −128-free patterns;
+    /// elsewhere (and for −128-containing B on x86) the dispatch falls
+    /// back, which must be just as exact.
+    #[test]
+    fn saturation_edges_exactly_match_i64_reference() {
+        // k straddles the 8-lane granule, n straddles the 4-col panel
+        const EDGE_SHAPES: [(usize, usize, usize); 6] = [
+            (3, 8, 4),
+            (2, 9, 5),
+            (4, 16, 3),
+            (1, 23, 6),
+            (5, 40, 7),
+            (2, 7, 1),
+        ];
+        type Gen = fn(usize) -> i8;
+        // (label, a pattern, b pattern)
+        let patterns: [(&str, Gen, Gen); 5] = [
+            // B has −128 → x86 arch tiers must decline, fallback exact
+            ("all_m128", |_| -128, |_| -128),
+            // max positive maddubs pair sums: 2·127·127 = 32258 < 32767
+            ("pos127", |_| 127, |_| 127),
+            // arch path RUNS (B is −128-free): |a|=128 × 127 pairs give
+            // the extreme −32512/+32512 intermediates
+            ("m128_a_127_b", |_| -128, |_| 127),
+            // alternating ±127 both sides
+            (
+                "alt",
+                |i| if i % 2 == 0 { 127 } else { -127 },
+                |i| if i % 2 == 0 { -127 } else { 127 },
+            ),
+            // −128 sprinkled into B only → fallback, exact
+            (
+                "m128_b_only",
+                |i| if i % 3 == 0 { 1 } else { -1 },
+                |i| if i % 5 == 0 { -128 } else { 7 },
+            ),
+        ];
+        for &(m, k, n) in &EDGE_SHAPES {
+            for &(label, fa, fb) in &patterns {
+                let a: Vec<i8> = (0..m * k).map(fa).collect();
+                let b: Vec<i8> = (0..n * k).map(fb).collect();
+                let want = naive_i64(&a, &b, m, k, n);
+                // k ≤ 40 → |dot| ≤ 40·128² < i32::MAX: i32 tiers can
+                // represent every reference value exactly
+                let mut got = vec![0i32; m * n];
+                qmatmul_bt_into(&a, &b, &mut got, m, k, n);
+                for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(g as i64, w, "{label} unpacked {m}x{k}x{n} elem {i}");
+                }
+                let pb = pack_b(&b, k, n);
+                let mut got = vec![0i32; m * n];
+                qmatmul_bt_packed_into(&a, &pb, &mut got, m);
+                for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(g as i64, w, "{label} packed {m}x{k}x{n} elem {i}");
+                }
+                #[cfg(feature = "arch-kernels")]
+                {
+                    use odimo::runtime::native::qkernels::qmatmul_bt_packed_into_arch;
+                    let mut got = vec![0i32; m * n];
+                    let ran = qmatmul_bt_packed_into_arch(&a, &pb, &mut got, m);
+                    for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                        assert_eq!(g as i64, w, "{label} arch(ran={ran}) {m}x{k}x{n} elem {i}");
+                    }
+                    #[cfg(target_arch = "x86_64")]
+                    assert!(
+                        !(ran && pb.has_m128),
+                        "{label}: x86 arch tier must fall back on -128 codes"
+                    );
+                }
             }
         }
     }

@@ -241,6 +241,33 @@ fn quantized_eval_bit_identical_across_threads_and_tiers() {
     }
 }
 
+/// Weight prepacking is a build-time, one-time event: the packed slab is
+/// exactly the size `plan::quant_pack_plan` computed from the spec, the
+/// dispatched tier is fixed at `quantize` time, and neither changes —
+/// nor do the logits — across repeated evals. (Which tier gets picked is
+/// host-dependent; *that* the pick is stable and the packed forward is
+/// reproducible is not.)
+#[test]
+fn prepack_slab_is_plan_sized_and_stable_across_evals() {
+    use odimo::runtime::native::plan::quant_pack_plan;
+    let be = build("diana_tiny_tiny");
+    let (state, x, y) = trained_state(&be, 2);
+    let n = y.len();
+    let qnet = be.quantize(&state).expect("quantize");
+    let planned = quant_pack_plan(qnet.spec()).total;
+    assert!(planned > 0, "tiny variant has dense convs to pack");
+    assert_eq!(qnet.packed_len(), planned, "slab sized by quant_pack_plan");
+    let tier = qnet.tier();
+    let l1: Vec<u32> = qnet.forward(&x, n).iter().map(|v| v.to_bits()).collect();
+    for _ in 0..3 {
+        let _ = qnet.eval_batch(&x, &y).expect("qeval");
+    }
+    assert_eq!(qnet.packed_len(), planned, "pack slab changed after evals");
+    assert_eq!(qnet.tier(), tier, "tier re-decided after build");
+    let l2: Vec<u32> = qnet.forward(&x, n).iter().map(|v| v.to_bits()).collect();
+    assert_eq!(l1, l2, "packed forward not reproducible across evals");
+}
+
 /// Prune-mode discretization: each searchable channel keeps the primary
 /// CU's quantizer iff its keep-logit wins, else the row is Zero — read
 /// straight off the θ leaves.

@@ -1,0 +1,72 @@
+#!/usr/bin/env bash
+# Re-pin the absolute floors of rust/benches/native_train.baseline.json
+# from a real CI bench artifact.
+#
+# Usage:
+#   scripts/repin_baseline.sh path/to/BENCH_native_train.json [slack]
+#
+# Downloads of the BENCH_native_train artifact from a green CI run are
+# the expected input. The script rewrites exactly the four *absolute*
+# floors (threads1/threads4 train steps/sec, 1-/4-thread quantized
+# evals/sec) to measured * slack (default 0.80 — CI runners vary run to
+# run, so committed floors keep 20% headroom below a measured green
+# run; the BENCH_CHECK gate then allows a further 10% below the floor).
+# The machine-independent `_min` ratio floors carry acceptance criteria
+# and are NEVER re-pinned from measurements — edit those by hand, with
+# the criterion, or not at all.
+set -euo pipefail
+
+if [ $# -lt 1 ] || [ $# -gt 2 ]; then
+    echo "usage: $0 path/to/BENCH_native_train.json [slack]" >&2
+    exit 2
+fi
+
+src="$1"
+slack="${2:-0.80}"
+dst="$(dirname "$0")/../rust/benches/native_train.baseline.json"
+
+python3 - "$src" "$dst" "$slack" <<'PYEOF'
+import json
+import sys
+
+src, dst, slack = sys.argv[1], sys.argv[2], float(sys.argv[3])
+rec = json.load(open(src))
+base = json.load(open(dst))
+
+ABSOLUTE = [
+    "threads1_steps_per_sec",
+    "threads4_steps_per_sec",
+    "quantized_evals_per_sec_threads1",
+    "quantized_evals_per_sec_threads4",
+]
+
+for key in ABSOLUTE:
+    measured = rec[key]
+    old = base[key]
+    base[key] = round(measured * slack, 3)
+    print(f"  {key}: {old} -> {base[key]}  (measured {measured:.3f} * {slack})")
+
+tier = rec.get("qmatmul_tier", "unknown")
+mins = ", ".join(k for k in base if k.endswith("_min"))
+base["note"] = (
+    "Floors for the BENCH_CHECK=1 gate: the job fails when a measured value "
+    "drops more than 10% below its floor (< 0.9x). The four absolute floors "
+    f"were re-pinned by scripts/repin_baseline.sh from a CI-emitted "
+    f"BENCH_native_train.json (variant {rec.get('variant', '?')}, qmatmul "
+    f"tier {tier}, simd_kernels={json.dumps(rec.get('simd_kernels'))}, "
+    f"arch_kernels={json.dumps(rec.get('arch_kernels'))}) at "
+    f"measured*{slack}. The _min ratio floors "
+    f"({mins}) gate ratios measured inside one run, are machine-independent, "
+    "carry the PR acceptance criteria, and are never re-pinned from "
+    "measurements; qmatmul_arch_speedup_vs_simd_min is applied only when "
+    "the bench record shows an arch kernel actually dispatched "
+    "(qmatmul_arch_speedup_vs_simd present) — on runners without the CPU "
+    "features the qmatmul_tier tag proves the fallback and the gate is "
+    "skipped."
+)
+
+with open(dst, "w") as f:
+    json.dump(base, f, indent=2)
+    f.write("\n")
+print(f"wrote {dst}")
+PYEOF
