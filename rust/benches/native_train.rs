@@ -55,6 +55,18 @@
 //! * `simd_speedup_threads1` (simd builds only) — single-thread resnet8
 //!   train speedup of the SIMD kernels over the scalar reference,
 //!   measured in one process via the runtime toggle.
+//!
+//! Since the packed-f32 PR the JSON also carries `matmul_packed` — the
+//! packed-panel f32 tier vs the unpacked tier of the *same build* at
+//! real training-GEMM shapes (the resnet8 3×3 stage and an mbv1
+//! pointwise stage, not the synthetic 256³), with the weight operand
+//! packed once outside the timed loop exactly as the step-scoped
+//! weight-pack cache amortizes it — plus the headline
+//! `matmul_packed_speedup` (gated ≥ 1.2 in-run under `BENCH_CHECK=1`
+//! via the machine-independent `matmul_packed_speedup_min` floor) and a
+//! `diana_resnet8_c10_unpacked` per-op breakdown recorded with the
+//! packing toggle off, so CI can diff where the packed tier moves time
+//! per commit.
 
 use std::time::Duration;
 
@@ -437,12 +449,136 @@ fn kernel_gflops() -> Value {
     Value::obj(fields)
 }
 
+/// Packed-panel f32 tier at real training-GEMM shapes: in-run speedup
+/// of the packed drive over the unpacked tier of the same build (scalar
+/// vs scalar, simd vs simd — the bit-identity pairing), with the weight
+/// operand packed once *outside* the timed loop, mirroring how the
+/// step-scoped weight-pack cache amortizes packing across a step's
+/// shards and fwd/bwd GEMMs. Shapes are layer GEMMs, not 256³: the
+/// resnet8 3×3 stage (m=1024 patch rows, k=288 fan-in, n=64 channels),
+/// an mbv1 pointwise stage (m=1024, k=128, n=256) — both the Bᵀ forward
+/// orientation, the training hot path — and one B-layout backward/dX
+/// shape. Returns the JSON section and the headline speedup (best
+/// Bᵀ-orientation ratio).
+fn matmul_packed_gflops() -> (Value, f64) {
+    use odimo::runtime::native::tensor;
+    let fill = |len: usize, seed: u64| -> Vec<f32> {
+        let mut st = seed;
+        (0..len)
+            .map(|_| {
+                st = st
+                    .wrapping_mul(6364136223846793005)
+                    .wrapping_add(1442695040888963407);
+                ((st >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+            })
+            .collect()
+    };
+    let budget = Duration::from_millis(400);
+    let mut fields: Vec<(&str, Value)> = Vec::new();
+    println!("-- packed f32 tier at layer shapes --");
+    // the unpacked comparison tier of this build (what the engine ran
+    // before the packed tier existed)
+    #[cfg(feature = "simd-kernels")]
+    let (bt_unpacked, mm_unpacked): (
+        &dyn Fn(&[f32], &[f32], &mut [f32], usize, usize, usize),
+        &dyn Fn(&[f32], &[f32], &mut [f32], usize, usize, usize),
+    ) = (
+        &|a, b, c, m, k, n| tensor::simd::matmul_bt_into(a, b, c, m, k, n),
+        &|a, b, c, m, k, n| tensor::simd::matmul_into(a, b, c, m, k, n),
+    );
+    #[cfg(not(feature = "simd-kernels"))]
+    let (bt_unpacked, mm_unpacked): (
+        &dyn Fn(&[f32], &[f32], &mut [f32], usize, usize, usize),
+        &dyn Fn(&[f32], &[f32], &mut [f32], usize, usize, usize),
+    ) = (
+        &|a, b, c, m, k, n| tensor::matmul_bt_into_scalar(a, b, c, m, k, n),
+        &|a, b, c, m, k, n| tensor::matmul_into_scalar(a, b, c, m, k, n),
+    );
+    let mut bt_shape = |tag: &str, keys: [&'static str; 3], m: usize, k: usize, n: usize| -> f64 {
+        let flops = 2.0 * (m * k * n) as f64;
+        let a = fill(m * k, 11);
+        let b = fill(n * k, 12);
+        let mut pb = vec![0.0f32; tensor::bt_packed_len(k, n)];
+        tensor::pack_bt_into(&b, k, n, &mut pb);
+        let mut c = vec![0.0f32; m * n];
+        let ru = bench(&format!("matmul_bt unpacked {tag}"), 2, budget, 400, || {
+            bt_unpacked(&a, &b, std::hint::black_box(&mut c), m, k, n);
+        });
+        let rp = bench(&format!("matmul_bt packed {tag}"), 2, budget, 400, || {
+            tensor::matmul_bt_packed_into(&a, &pb, std::hint::black_box(&mut c), m, k, n);
+        });
+        let ratio = ru.mean_ns / rp.mean_ns;
+        println!(
+            "   {tag:<8} m={m} k={k} n={n}: {:.2} -> {:.2} GFLOP/s ({ratio:.2}x)",
+            flops / ru.mean_ns,
+            flops / rp.mean_ns
+        );
+        fields.push((keys[0], Value::num(flops / ru.mean_ns)));
+        fields.push((keys[1], Value::num(flops / rp.mean_ns)));
+        fields.push((keys[2], Value::num(ratio)));
+        ratio
+    };
+    let r8 = bt_shape(
+        "r8conv",
+        [
+            "bt_r8conv_unpacked_gflops",
+            "bt_r8conv_packed_gflops",
+            "bt_r8conv_speedup",
+        ],
+        1024,
+        288,
+        64,
+    );
+    let pw = bt_shape(
+        "mbv1pw",
+        [
+            "bt_mbv1pw_unpacked_gflops",
+            "bt_mbv1pw_packed_gflops",
+            "bt_mbv1pw_speedup",
+        ],
+        1024,
+        128,
+        256,
+    );
+    // one B-layout shape (the backward/dX and FC-forward orientation)
+    {
+        let (m, k, n) = (1024usize, 256usize, 128usize);
+        let flops = 2.0 * (m * k * n) as f64;
+        let a = fill(m * k, 13);
+        let b = fill(k * n, 14);
+        let mut pb = vec![0.0f32; tensor::mm_packed_len(k, n)];
+        tensor::pack_mm_into(&b, k, n, &mut pb);
+        let mut c = vec![0.0f32; m * n];
+        let ru = bench("matmul unpacked dX", 2, budget, 400, || {
+            mm_unpacked(&a, &b, std::hint::black_box(&mut c), m, k, n);
+        });
+        let rp = bench("matmul packed dX", 2, budget, 400, || {
+            tensor::matmul_packed_into(&a, &pb, std::hint::black_box(&mut c), m, k, n);
+        });
+        let ratio = ru.mean_ns / rp.mean_ns;
+        println!(
+            "   mm_dx    m={m} k={k} n={n}: {:.2} -> {:.2} GFLOP/s ({ratio:.2}x)",
+            flops / ru.mean_ns,
+            flops / rp.mean_ns
+        );
+        fields.push(("mm_dx_unpacked_gflops", Value::num(flops / ru.mean_ns)));
+        fields.push(("mm_dx_packed_gflops", Value::num(flops / rp.mean_ns)));
+        fields.push(("mm_dx_speedup", Value::num(ratio)));
+    }
+    let headline = r8.max(pw);
+    println!("   -> packed f32 tier vs unpacked (best bt shape): {headline:.2}x");
+    fields.push(("matmul_packed_speedup", Value::num(headline)));
+    (Value::obj(fields), headline)
+}
+
 /// Amdahl serial term of a profiled breakdown: the summed share of the
 /// buckets no kernel lane ever touches — `theta`, `cost_model`,
 /// `elementwise` (the never-laned set documented in the lane-attribution
 /// section of `runtime/native/profile`). Everything else either runs on
 /// lanes already or is a serial remnant of a laned op, so this is the
-/// floor the parallelization sweep is squeezing.
+/// floor the parallelization sweep is squeezing. The new `pack` bucket
+/// (packed-panel relayouts) is per-lane/per-shard work and deliberately
+/// stays out of this serial set.
 fn serial_fraction(per_op: &Value) -> f64 {
     ["theta", "cost_model", "elementwise"]
         .iter()
@@ -513,6 +649,11 @@ fn main() {
     // vs arch)
     let (qmatmul, qmatmul_speedup, qmatmul_arch_speedup) = qmatmul_gops();
 
+    // packed f32 training tier: in-run packed-vs-unpacked ratio at
+    // layer shapes, weight packed once outside the loop (cache steady
+    // state)
+    let (matmul_packed, packed_speedup) = matmul_packed_gflops();
+
     // quantized inference: the deploy path next to the tape's f32 eval,
     // single- and 4-thread (batch shards on the persistent pool)
     let (tiny_f32_eps, tiny_q_eps) =
@@ -531,6 +672,12 @@ fn main() {
 
     // per-op breakdowns (profiled separately so probes never skew timings)
     let per_op_resnet8 = per_op_breakdown(ACCEPTANCE_VARIANT, 2);
+    // same breakdown with the packing toggle off (an op-build-time
+    // choice, so each profiled step sees a consistent state) — the CI
+    // per-op-diff job renders the packed-vs-unpacked diff from the pair
+    odimo::runtime::native::tensor::set_packing_enabled(false);
+    let per_op_resnet8_unpacked = per_op_breakdown(ACCEPTANCE_VARIANT, 2);
+    odimo::runtime::native::tensor::set_packing_enabled(true);
     let per_op_mbv1 = per_op_breakdown(POINTWISE_VARIANT, 2);
     let per_op_qeval = per_op_quantized(ACCEPTANCE_VARIANT, 4);
     let serial_frac = serial_fraction(&per_op_resnet8);
@@ -565,6 +712,8 @@ fn main() {
         ("tiny_steps_per_sec", Value::num(tiny_sps)),
         ("tiny_eval_per_sec", Value::num(tiny_eval_sps)),
         ("kernels", kernels),
+        ("matmul_packed", matmul_packed),
+        ("matmul_packed_speedup", Value::num(packed_speedup)),
         ("qmatmul", qmatmul),
         ("quantized_evals_per_sec_threads1", Value::num(r8_q_eps)),
         ("quantized_evals_per_sec_threads4", Value::num(r8_q_eps4)),
@@ -578,6 +727,7 @@ fn main() {
             "per_op",
             Value::obj(vec![
                 ("diana_resnet8_c10", per_op_resnet8),
+                ("diana_resnet8_c10_unpacked", per_op_resnet8_unpacked),
                 ("diana_mbv1_c10", per_op_mbv1),
                 ("diana_resnet8_c10_quantized_eval", per_op_qeval),
             ]),
@@ -630,6 +780,12 @@ fn main() {
                 speedup,
                 &base,
                 "train_speedup_4_threads_min",
+            ),
+            gate(
+                "packed f32 tier vs unpacked",
+                packed_speedup,
+                &base,
+                "matmul_packed_speedup_min",
             ),
         ];
         // the arch gate only applies when an arch kernel actually

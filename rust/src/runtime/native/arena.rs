@@ -13,6 +13,16 @@
 //! The arena is deliberately single-threaded (each batch shard owns its
 //! own arena, see `backend.rs`); recycling a buffer into a *different*
 //! shard's arena is harmless — the free lists are keyed by length only.
+//!
+//! Exact-length keying also carries the packed-GEMM scratch (see
+//! `plan.rs`): the fused-im2col A-panel block is sized by the *task's
+//! lane count* (`pool::task_lanes`), which the plan mirrors exactly so
+//! the primed buffer length matches the tape's request bit for bit —
+//! a near-miss length would silently defeat priming and show up as
+//! steady-state growth in the arena pin. Pack scratch that a backward
+//! op re-takes (the rematerialized patch matrix, the Aᵀ-panel buffer)
+//! deliberately reuses a size class the forward already primed, so
+//! fusion adds lane-panel buffers but no per-step allocations.
 
 use std::collections::HashMap;
 

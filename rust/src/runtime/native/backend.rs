@@ -25,6 +25,14 @@
 //!
 //! Each shard owns an [`Arena`] sized by the [`ExecPlan`] shape-inference
 //! pass at build time, so steady-state steps allocate no tensor buffers.
+//! Dense-conv and FC weights are additionally relaid into packed GEMM
+//! panels once per step via shared [`WeightPackSlot`]s (geometry-sized
+//! at build time by [`weight_pack_plan`]): a monotone pack epoch
+//! invalidates the cache at the top of every train step and f32 eval
+//! batch, the first shard to reach a layer packs it (the effective
+//! weights are bit-identical across shards, so which one is
+//! unobservable), and every GEMM that consumes the weight — forward and
+//! both backward orientations — reuses the panels.
 //!
 //! The loss adds the differentiable cost term
 //! `λ · ((1−sel)·lat + sel·energy)` over the θ-expected channel counts
@@ -40,7 +48,8 @@
 //! counter for Adam — so the coordinator's θ plumbing, snapshots and
 //! Table-II memory accounting work identically on both backends.
 
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -48,7 +57,7 @@ use crate::runtime::manifest::{CostScale, IoSpec, Manifest};
 use crate::runtime::{ModelBackend, StepHparams, TrainState};
 
 use super::arena::Arena;
-use super::plan::ExecPlan;
+use super::plan::{weight_pack_plan, ExecPlan};
 use super::pool::{max_threads, KernelScope, WorkerPool};
 use super::profile::{self, Op};
 use super::qkernels::{GeomParams, QuantNet};
@@ -56,7 +65,7 @@ use super::supernet::{
     forward, init_conv_weight, init_fc, theta_counts, LayerVars, SupernetSpec,
 };
 use super::tape::{eval_layer_cost, EvalBits, Tape, Var};
-use super::tensor::{axpy_into, scale_add_into};
+use super::tensor::{axpy_into, scale_add_into, PackHandle, WeightPackSlot};
 
 const BN_MOMENTUM: f32 = 0.9;
 const W_MOMENTUM: f32 = 0.9;
@@ -172,6 +181,16 @@ pub struct NativeBackend {
     plan: ExecPlan,
     /// per-shard-slot buffer arenas, recycled across steps
     arenas: Mutex<Vec<Arena>>,
+    /// shared f32 weight-pack slots, one per dense conv (None for
+    /// depthwise) — each is filled once per pack epoch by whichever
+    /// shard reaches the layer first and reused by every GEMM that
+    /// consumes that weight (fwd + both backward orientations)
+    wpacks: Vec<Option<Arc<WeightPackSlot>>>,
+    /// the FC head's weight-pack slot
+    fc_pack: Arc<WeightPackSlot>,
+    /// monotone pack epoch, bumped at the top of every train step and
+    /// every f32 eval batch so stale packs never survive a weight update
+    pack_epoch: AtomicU64,
     /// per-geometry sequential-stage flag (DW→PW chains cost the sum)
     seq: Vec<bool>,
     /// cost of the non-searchable layers (always CU column 0)
@@ -326,13 +345,23 @@ impl NativeBackend {
         };
 
         // --- execution plan: size the per-shard arenas up front -----------
-        let plan = ExecPlan::new(&spec, spec.dataset.batch, NSHARDS);
+        let width = opts.threads.max(1);
+        let plan = ExecPlan::new(&spec, spec.dataset.batch, NSHARDS, width);
         let mut arenas = Vec::with_capacity(plan.shards());
         for i in 0..plan.shards() {
             let mut a = Arena::new();
             plan.prime(i, &mut a);
             arenas.push(a);
         }
+
+        // --- step-scoped f32 weight-pack slots (geometry-sized once) ------
+        let wpp = weight_pack_plan(&spec);
+        let wpacks: Vec<Option<Arc<WeightPackSlot>>> = wpp
+            .convs
+            .iter()
+            .map(|g| g.map(|(rows, cols)| Arc::new(WeightPackSlot::new(rows, cols))))
+            .collect();
+        let fc_pack = Arc::new(WeightPackSlot::new(wpp.fc.0, wpp.fc.1));
 
         Ok(NativeBackend {
             spec,
@@ -344,9 +373,12 @@ impl NativeBackend {
             opt,
             step_leaf,
             optimizer: opts.w_optimizer,
-            pool: WorkerPool::new(opts.threads.max(1)),
+            pool: WorkerPool::new(width),
             plan,
             arenas: Mutex::new(arenas),
+            wpacks,
+            fc_pack,
+            pack_epoch: AtomicU64::new(0),
             seq,
             fixed_lat,
             fixed_energy_uj,
@@ -392,13 +424,20 @@ impl NativeBackend {
     }
 
     /// Put every parameter leaf on a fresh tape; returns the per-layer
-    /// handles plus the list of `(leaf, var)` pairs per group.
+    /// handles (carrying this epoch's weight-pack handles), the FC
+    /// vars + pack handle, plus the list of `(leaf, var)` pairs per
+    /// group. The effective weights each pack covers are bit-identical
+    /// across shards (determinism contract), so whichever shard packs a
+    /// slot first is unobservable.
     #[allow(clippy::type_complexity)]
     fn stage_params(
         &self,
         tape: &mut Tape,
         state: &TrainState,
-    ) -> (Vec<LayerVars>, Var, Var, Vec<Var>, Vec<(usize, Var)>) {
+    ) -> (Vec<LayerVars>, Var, Var, PackHandle, Vec<Var>, Vec<(usize, Var)>) {
+        // bumped once per step/batch before the shard fan-out; the pool's
+        // task handoff orders the load after the bump
+        let epoch = self.pack_epoch.load(Ordering::Relaxed);
         let mut lvs = Vec::with_capacity(self.geoms.len());
         let mut w_vars = Vec::with_capacity(self.opt.len());
         let mut theta_vars = Vec::new();
@@ -415,17 +454,32 @@ impl NativeBackend {
                 theta_vars.push((t, v));
                 v
             });
+            let pack = self.wpacks[gi].as_ref().map(|slot| {
+                PackHandle::new(
+                    Arc::clone(slot),
+                    epoch,
+                    self.spec.layers[gi].cout,
+                    self.spec.fan_in(gi),
+                )
+            });
             lvs.push(LayerVars {
                 w,
                 scale,
                 bias,
                 theta,
+                pack,
             });
         }
         let fcw = leaf(tape, self.fc_w);
         let fcb = leaf(tape, self.fc_b);
         w_vars.extend([fcw, fcb]);
-        (lvs, fcw, fcb, w_vars, theta_vars)
+        let fcp = PackHandle::new(
+            Arc::clone(&self.fc_pack),
+            epoch,
+            self.spec.fc_cin,
+            self.spec.classes,
+        );
+        (lvs, fcw, fcb, fcp, w_vars, theta_vars)
     }
 
     fn running_stats(&self, state: &TrainState) -> Vec<(Vec<f32>, Vec<f32>)> {
@@ -466,9 +520,19 @@ impl NativeBackend {
         let nb = y.len();
         let mut tape = Tape::with_arena(arena);
         tape.set_kernel_scope(scope.clone());
-        let (lvs, fcw, fcb, w_vars, theta_vars) = self.stage_params(&mut tape, state);
+        let (lvs, fcw, fcb, fcp, w_vars, theta_vars) = self.stage_params(&mut tape, state);
         let xv = tape.leaf_copy(vec![nb, hw, hw, 3], x);
-        let out = forward(&self.spec, &mut tape, &lvs, fcw, fcb, xv, true, running);
+        let out = forward(
+            &self.spec,
+            &mut tape,
+            &lvs,
+            fcw,
+            fcb,
+            Some(&fcp),
+            xv,
+            true,
+            running,
+        );
         let (ce, bits) = tape.softmax_ce(out.logits, y);
 
         // differentiable cost term over the searchable layers — recorded
@@ -540,9 +604,19 @@ impl NativeBackend {
         let nb = y.len();
         let mut tape = Tape::with_arena(arena);
         tape.set_kernel_scope(scope.clone());
-        let (lvs, fcw, fcb, _, _) = self.stage_params(&mut tape, state);
+        let (lvs, fcw, fcb, fcp, _, _) = self.stage_params(&mut tape, state);
         let xv = tape.leaf_copy(vec![nb, hw, hw, 3], x);
-        let out = forward(&self.spec, &mut tape, &lvs, fcw, fcb, xv, false, running);
+        let out = forward(
+            &self.spec,
+            &mut tape,
+            &lvs,
+            fcw,
+            fcb,
+            Some(&fcp),
+            xv,
+            false,
+            running,
+        );
         let (_, bits) = tape.softmax_ce(out.logits, y);
         (bits, tape.recycle())
     }
@@ -736,6 +810,8 @@ impl ModelBackend for NativeBackend {
     ) -> Result<Vec<f32>> {
         let n = self.check_batch(x, y)?;
         let hw = self.manifest.dataset.hw;
+        // new step, new weights: invalidate every cached weight pack
+        self.pack_epoch.fetch_add(1, Ordering::Relaxed);
         let bounds = Self::shard_bounds(n);
         let s = bounds.len();
         let arenas = self.take_arenas(s);
@@ -944,6 +1020,8 @@ impl ModelBackend for NativeBackend {
     fn eval_batch(&self, state: &TrainState, x: &[f32], y: &[i32]) -> Result<Vec<f32>> {
         let n = self.check_batch(x, y)?;
         let hw = self.manifest.dataset.hw;
+        // eval weights may differ from the last packed step's
+        self.pack_epoch.fetch_add(1, Ordering::Relaxed);
         let bounds = Self::shard_bounds(n);
         let s = bounds.len();
         let arenas = self.take_arenas(s);

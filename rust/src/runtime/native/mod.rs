@@ -11,7 +11,10 @@
 //! * [`profile`] — the feature-gated per-op step profiler behind
 //!   `repro … --profile` and the bench's per-op breakdown;
 //! * [`tensor`] — dense f32 buffers + the three cache-blocked matmul
-//!   kernels, with row-sharded persistent-pool wrappers;
+//!   kernels with row-sharded persistent-pool wrappers, plus the
+//!   packed-panel f32 tier: panel-major operand packing with zero-padded
+//!   edges, bit-identical to the unpacked kernels per build, and the
+//!   step-scoped [`WeightPackSlot`]/[`PackHandle`] weight-pack cache;
 //! * [`arena`] — the exact-size buffer pool every step's tape draws from
 //!   and recycles into (steady-state steps allocate nothing);
 //! * [`tape`] — the autodiff core: exactly the ops the supernets need
@@ -62,4 +65,4 @@ pub use pool::{max_threads, KernelScope, WorkerPool};
 pub use qkernels::{QTier, QuantNet};
 pub use supernet::{Arch, SearchMode, SupernetSpec};
 pub use tape::{EvalBits, Gradients, QuantKind, Tape, Var};
-pub use tensor::Tensor;
+pub use tensor::{packing_enabled, set_packing_enabled, PackHandle, Tensor, WeightPackSlot};

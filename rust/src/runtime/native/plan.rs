@@ -20,7 +20,9 @@ use std::collections::HashMap;
 use crate::soc::LayerType;
 
 use super::arena::Arena;
+use super::pool::task_lanes;
 use super::supernet::{PlanStep, SearchMode, SupernetSpec};
+use super::tape::FUSE_ROWS;
 
 /// `length → buffer count` multiset collector.
 #[derive(Default)]
@@ -52,15 +54,18 @@ pub struct ExecPlan {
 }
 
 impl ExecPlan {
-    /// Plan `shards` fixed batch shards of a `batch`-row step.
-    pub fn new(spec: &SupernetSpec, batch: usize, shards: usize) -> ExecPlan {
+    /// Plan `shards` fixed batch shards of a `batch`-row step executed
+    /// on a pool of `width` slots: each shard's kernel-lane count
+    /// ([`task_lanes`]) sizes its per-lane fused-conv A-panels, so the
+    /// exact-length arena free lists hit in the steady state.
+    pub fn new(spec: &SupernetSpec, batch: usize, shards: usize, width: usize) -> ExecPlan {
         let s = shards.min(batch).max(1);
         let mut shard_n = Vec::with_capacity(s);
         let mut shard_sizes = Vec::with_capacity(s);
         for i in 0..s {
             let n = (i + 1) * batch / s - i * batch / s;
             shard_n.push(n);
-            shard_sizes.push(step_sizes(spec, n));
+            shard_sizes.push(step_sizes(spec, n, task_lanes(width, s, i)));
         }
         ExecPlan {
             shard_sizes,
@@ -198,8 +203,40 @@ pub fn quant_pack_plan(spec: &SupernetSpec) -> QuantPackPlan {
     QuantPackPlan { offsets, total }
 }
 
-/// Buffer multiset of one training step on an `n`-row batch shard.
-fn step_sizes(spec: &SupernetSpec, n: usize) -> Vec<(usize, usize)> {
+/// Geometry of the step-scoped f32 weight-pack slots: one `(rows, cols)`
+/// weight storage shape per conv (None for depthwise, whose per-channel
+/// taps never run a GEMM), plus the FC matrix. Depends only on the
+/// spec's geometry, so `backend` builds one `WeightPackSlot` per entry
+/// at construction time and steady-state steps repack in place without
+/// allocating.
+pub struct WeightPackPlan {
+    /// per-conv weight shape `[rows = cout, cols = fan_in]`
+    pub convs: Vec<Option<(usize, usize)>>,
+    /// FC weight shape `[rows = fc_cin, cols = classes]`
+    pub fc: (usize, usize),
+}
+
+/// Walk the conv geometries and lay out the f32 weight-pack slots
+/// (mirroring [`quant_pack_plan`] for the quantized slab).
+pub fn weight_pack_plan(spec: &SupernetSpec) -> WeightPackPlan {
+    let mut convs = Vec::with_capacity(spec.n_convs());
+    for gi in 0..spec.n_convs() {
+        let l = &spec.layers[gi];
+        if l.ltype == LayerType::Dw {
+            convs.push(None);
+        } else {
+            convs.push(Some((l.cout, spec.fan_in(gi))));
+        }
+    }
+    WeightPackPlan {
+        convs,
+        fc: (spec.fc_cin, spec.classes),
+    }
+}
+
+/// Buffer multiset of one training step on an `n`-row batch shard whose
+/// kernel scope runs `lanes` lanes.
+fn step_sizes(spec: &SupernetSpec, n: usize, lanes: usize) -> Vec<(usize, usize)> {
     let mut bag = SizeBag::default();
     let hw = spec.dataset.hw;
 
@@ -222,15 +259,15 @@ fn step_sizes(spec: &SupernetSpec, n: usize) -> Vec<(usize, usize)> {
     for step in &spec.plan {
         match *step {
             PlanStep::Conv(i) => {
-                conv_bn_sizes(&mut bag, spec, n, i, cur_hw, true);
+                conv_bn_sizes(&mut bag, spec, n, i, cur_hw, true, lanes);
                 cur_hw = spec.layers[i].ox;
                 n_search += spec.layers[i].searchable as usize;
             }
             PlanStep::ResBlock { c1, c2, dn } => {
-                conv_bn_sizes(&mut bag, spec, n, c1, cur_hw, true);
-                conv_bn_sizes(&mut bag, spec, n, c2, spec.layers[c1].ox, false);
+                conv_bn_sizes(&mut bag, spec, n, c1, cur_hw, true, lanes);
+                conv_bn_sizes(&mut bag, spec, n, c2, spec.layers[c1].ox, false, lanes);
                 if let Some(d) = dn {
-                    conv_bn_sizes(&mut bag, spec, n, d, cur_hw, false);
+                    conv_bn_sizes(&mut bag, spec, n, d, cur_hw, false, lanes);
                     n_search += spec.layers[d].searchable as usize;
                 }
                 // residual add + trailing relu
@@ -241,8 +278,8 @@ fn step_sizes(spec: &SupernetSpec, n: usize) -> Vec<(usize, usize)> {
                 cur_hw = l2.ox;
             }
             PlanStep::DwPw { dw, pw } => {
-                conv_bn_sizes(&mut bag, spec, n, dw, cur_hw, true);
-                conv_bn_sizes(&mut bag, spec, n, pw, spec.layers[dw].ox, true);
+                conv_bn_sizes(&mut bag, spec, n, dw, cur_hw, true, lanes);
+                conv_bn_sizes(&mut bag, spec, n, pw, spec.layers[dw].ox, true, lanes);
                 cur_hw = spec.layers[pw].ox;
                 n_search += spec.layers[dw].searchable as usize
                     + spec.layers[pw].searchable as usize;
@@ -280,6 +317,7 @@ fn conv_bn_sizes(
     gi: usize,
     input_hw: usize,
     with_relu: bool,
+    lanes: usize,
 ) {
     let l = &spec.layers[gi];
     let k = spec.platform.n_cus();
@@ -320,19 +358,22 @@ fn conv_bn_sizes(
         bag.add(cout * f, 2);
     } else if l.k == 1 && l.stride == 1 {
         // pointwise fast path: no im2col patches, no col2im — just the
-        // dW and dX matmul scratch
+        // dW and dX matmul scratch (both builds run the packed at tier
+        // for dW now, so the Aᵀ-panel pack scratch is unconditional)
         bag.add(cout * f, 1); // dW scratch
         bag.add(rows * f, 1); // dX scratch
-        if cfg!(feature = "simd-kernels") {
-            bag.add(rows * cout, 1); // dW Aᵀ-panel pack scratch
-        }
+        bag.add(rows * cout, 1); // dW Aᵀ-panel pack scratch
     } else {
-        bag.add(rows * f, 1); // im2col patches (aux)
+        // general conv: the fused lowering streams per-lane FUSE_ROWS
+        // A-panels in the forward and rematerializes the patch matrix
+        // in the backward; the unpacked reference keeps it as a forward
+        // aux instead — both peak at the same two rows·f buffers, so
+        // one set of entries serves either packing-toggle state
+        bag.add(lanes.min(rows).max(1) * FUSE_ROWS * f, 1); // fused A-panels
+        bag.add(rows * f, 1); // patch matrix (aux or backward remat)
         bag.add(rows * f, 1); // dcols scratch
         bag.add(cout * f, 1); // dW scratch
-        if cfg!(feature = "simd-kernels") {
-            bag.add(rows * cout, 1); // dW Aᵀ-panel pack scratch
-        }
+        bag.add(rows * cout, 1); // dW Aᵀ-panel pack scratch
     }
     // batch norm: x̂ (aux) + output node + 2 per-channel scratch rows
     bag.add(rows * cout, 1);

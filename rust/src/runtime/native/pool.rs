@@ -515,6 +515,22 @@ impl WorkerPool {
     }
 }
 
+/// The kernel-lane count [`WorkerPool::run_tasks`] hands task `i` on a
+/// pool of `width` slots — the same `min(width, ntasks)`-group
+/// partition, computed without a pool. `plan::ExecPlan` uses this to
+/// size per-shard lane scratch (fused im2col panels) to the exact lane
+/// count the shard will run with, so the arena's exact-length free
+/// lists hit in the steady state.
+pub fn task_lanes(width: usize, ntasks: usize, i: usize) -> usize {
+    debug_assert!(ntasks > 0);
+    if width <= 1 {
+        return 1;
+    }
+    let ngroups = width.min(ntasks);
+    let g = i % ngroups;
+    (g + 1) * width / ngroups - g * width / ngroups
+}
+
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
@@ -577,6 +593,25 @@ mod tests {
         // more tasks than slots → every group is one lane wide
         let lanes = pool.run_tasks(8, &|_i, scope| scope.lanes());
         assert!(lanes.iter().all(|&l| l == 1), "{lanes:?}");
+    }
+
+    #[test]
+    fn task_lanes_predicts_actual_scope_lanes() {
+        // the plan sizes lane scratch from task_lanes — it must agree
+        // with the lane count run_tasks actually hands each task
+        for width in [1usize, 2, 3, 4, 5, 8] {
+            for ntasks in [1usize, 2, 3, 4, 7] {
+                let pool = WorkerPool::new(width);
+                let got = pool.run_tasks(ntasks, &|i, scope| (i, scope.lanes()));
+                for (i, lanes) in got {
+                    assert_eq!(
+                        lanes,
+                        task_lanes(width, ntasks, i),
+                        "width={width} ntasks={ntasks} task={i}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -37,6 +37,9 @@
 //! - `Op::Loss` — softmax row lanes and the laned CE backward
 //! - `Op::Reduce` — per-leaf gradient tree tasks + BN stat-merge tasks
 //! - `Op::Optimizer` — per-leaf W update tasks (θ's SGD stays serial)
+//! - `Op::Pack` — per-lane at-panel transposes and fused im2col
+//!   A-panel fills; the step-scoped weight packs record on whichever
+//!   shard packs first (once per step, tiny)
 //!
 //! The serial remnants of those ops (BN/softmax cross-row reductions,
 //! the depthwise dW fold, θ updates) keep caller-side probes in the same
@@ -77,10 +80,15 @@ pub enum Op {
     Reduce,
     /// W/θ optimizer updates
     Optimizer,
+    /// packed-panel relayouts of the f32 tier: the step-scoped weight
+    /// packs, per-lane at-panel transposes and fused im2col A-panels —
+    /// split out of `matmul`/`im2col` so the GEMM buckets measure
+    /// arithmetic, not data movement
+    Pack,
 }
 
 impl Op {
-    pub const ALL: [Op; 13] = [
+    pub const ALL: [Op; 14] = [
         Op::Im2col,
         Op::Matmul,
         Op::QMatmul,
@@ -94,6 +102,7 @@ impl Op {
         Op::Elementwise,
         Op::Reduce,
         Op::Optimizer,
+        Op::Pack,
     ];
 
     pub fn name(self) -> &'static str {
@@ -111,6 +120,7 @@ impl Op {
             Op::Elementwise => "elementwise",
             Op::Reduce => "reduce",
             Op::Optimizer => "optimizer",
+            Op::Pack => "pack",
         }
     }
 

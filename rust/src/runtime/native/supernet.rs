@@ -36,6 +36,7 @@ use crate::search::eligible_cus;
 use crate::soc::{Layer, LayerType, Platform};
 
 use super::tape::{QuantKind, Tape, Var};
+use super::tensor::PackHandle;
 
 /// Network families the native builder knows.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -511,6 +512,9 @@ pub struct LayerVars {
     pub scale: Var,
     pub bias: Var,
     pub theta: Option<Var>,
+    /// step-scoped handle into the layer's shared weight-pack slot
+    /// (None for depthwise layers, whose taps never run a GEMM)
+    pub pack: Option<PackHandle>,
 }
 
 /// Forward-pass outputs the backend consumes.
@@ -589,6 +593,7 @@ pub fn forward(
     lv: &[LayerVars],
     fc_w: Var,
     fc_b: Var,
+    fc_pack: Option<&PackHandle>,
     x: Var,
     training: bool,
     running: &[(Vec<f32>, Vec<f32>)],
@@ -616,7 +621,7 @@ pub fn forward(
         };
         let y = match g.ltype {
             LayerType::Dw => tape.dw_conv2d(input, weff, g.k, g.stride),
-            _ => tape.conv2d(input, weff, g.k, g.stride),
+            _ => tape.conv2d_with_pack(input, weff, g.k, g.stride, p.pack.as_ref()),
         };
         let y = if training {
             let (y, mean, var) = tape.batch_norm_train(y, p.scale, p.bias);
@@ -668,7 +673,7 @@ pub fn forward(
         }
     }
     let pooled = tape.global_avg_pool(cur);
-    let z = tape.matmul(pooled, fc_w);
+    let z = tape.matmul_with_pack(pooled, fc_w, fc_pack);
     let logits = tape.add_bias(z, fc_b);
     ForwardOut {
         logits,

@@ -45,6 +45,19 @@
 //! the bit-identity reference. Every op carries a feature-gated
 //! [`super::profile`] probe so `--profile` runs report a per-op time
 //! breakdown.
+//!
+//! When the caller supplies a step-scoped [`PackHandle`] (the
+//! `*_with_pack` ops), the f32 GEMMs run on the packed-panel tier of
+//! [`super::tensor`]: each weight matrix is repacked at most once per
+//! step and the packs are shared across batch shards and the fwd/bwd
+//! GEMMs that consume them, and the general conv *fuses* im2col into
+//! packing — image patches stream directly into per-lane
+//! [`FUSE_ROWS`]-row A-panels, so the full `[rows × k²·cin]` patch
+//! matrix is never materialized in the forward (the backward
+//! rematerializes it once for dW / col2im; eval never builds it).
+//! Every packed tier is bit-identical to its unpacked kernel, so the
+//! determinism matrix and the im2col/pointwise bit-identity pins hold
+//! with packing on or off.
 
 use std::rc::Rc;
 
@@ -54,9 +67,17 @@ use super::arena::Arena;
 use super::pool::KernelScope;
 use super::profile::{self, Op};
 use super::tensor::{
-    par_matmul_at_into, par_matmul_at_into_packed, par_matmul_bt_into, par_matmul_into, par_rows,
+    matmul_bt_packed_into, packing_enabled, par_matmul_at_into_packed, par_matmul_bt_into,
+    par_matmul_bt_packed_into, par_matmul_into, par_matmul_packed_into, par_rows, PackHandle,
     Tensor,
 };
+
+/// Patch rows streamed per fused-conv A-panel block: big enough that
+/// the packed bt kernel amortizes its per-panel setup, small enough
+/// that a panel (`FUSE_ROWS · k²·cin` f32) stays cache-resident next to
+/// the weight pack. `pub(crate)`: `plan` sizes the per-lane panel
+/// scratch from it.
+pub(crate) const FUSE_ROWS: usize = 8;
 
 /// Raw mutable base pointer smuggled into SPMD lane closures for the
 /// ops whose lane-disjoint writes are *strided* (channel sub-ranges,
@@ -532,6 +553,20 @@ impl Tape {
 
     /// `A[m,k] · B[k,n]`.
     pub fn matmul(&mut self, a: Var, b: Var) -> Var {
+        self.matmul_with_pack(a, b, None)
+    }
+
+    /// [`Tape::matmul`] with B's step-scoped weight pack (the FC layer):
+    /// the forward runs on the mm layout, the backward dA on the bt
+    /// layout — dB is an activation product and keeps the at-pack tier.
+    /// Without a handle (or with packing toggled off) it falls back to
+    /// the unpacked kernels; every tier pair is bit-identical, so the
+    /// choice never reaches the numbers.
+    pub fn matmul_with_pack(&mut self, a: Var, b: Var, pack: Option<&PackHandle>) -> Var {
+        let ph = match pack {
+            Some(ph) if packing_enabled() => Some(ph.clone()),
+            _ => None,
+        };
         let (av, bv) = (self.rc(a), self.rc(b));
         let (m, k) = (av.shape[0], av.shape[1]);
         let n = bv.shape[1];
@@ -540,7 +575,13 @@ impl Tape {
         let mut y = self.alloc_raw(m * n);
         // the Op::Matmul probes live inside the par_matmul_* lane
         // closures (lane-summed attribution — see `super::profile`)
-        par_matmul_into(&av.data, &bv.data, &mut y, m, k, n, &sc);
+        match &ph {
+            Some(ph) => {
+                let guard = ph.packed(&bv.data);
+                par_matmul_packed_into(&av.data, guard.mm(), &mut y, m, k, n, &sc);
+            }
+            None => par_matmul_into(&av.data, &bv.data, &mut y, m, k, n, &sc),
+        }
         let val = Tensor::new(vec![m, n], y);
         let (sa, sb) = (Rc::clone(&av), Rc::clone(&bv));
         self.push(
@@ -548,7 +589,13 @@ impl Tape {
             Some(Box::new(move |g, store| {
                 // dA = g · Bᵀ ; dB = Aᵀ · g
                 let mut da = store.take_raw(m * k);
-                par_matmul_bt_into(g, &sb.data, &mut da, m, n, k, &sc);
+                match &ph {
+                    Some(ph) => {
+                        let guard = ph.packed(&sb.data);
+                        par_matmul_bt_packed_into(g, guard.bt(), &mut da, m, n, k, &sc);
+                    }
+                    None => par_matmul_bt_into(g, &sb.data, &mut da, m, n, k, &sc),
+                }
                 store.acc(a.0, &da);
                 store.give(da);
                 let mut db = store.take_raw(k * n);
@@ -602,10 +649,33 @@ impl Tape {
     /// by `tests/native_exec.rs`); everything else lowers through
     /// [`Tape::conv2d_im2col`].
     pub fn conv2d(&mut self, x: Var, w: Var, k: usize, stride: usize) -> Var {
+        self.conv2d_with_pack(x, w, k, stride, None)
+    }
+
+    /// [`Tape::conv2d`] with the layer's step-scoped weight-pack handle.
+    /// With a handle (and packing on) the pointwise fast path runs its
+    /// GEMMs on the cached packs and the general path takes the
+    /// fused-im2col lowering; without one it falls back to the unpacked
+    /// fast path / [`Tape::conv2d_im2col`] reference. All four lowerings
+    /// are bit-identical.
+    pub fn conv2d_with_pack(
+        &mut self,
+        x: Var,
+        w: Var,
+        k: usize,
+        stride: usize,
+        pack: Option<&PackHandle>,
+    ) -> Var {
         if k == 1 && stride == 1 {
-            self.conv2d_pointwise(x, w)
+            match pack {
+                Some(ph) if packing_enabled() => self.conv2d_pointwise_packed(x, w, ph),
+                _ => self.conv2d_pointwise(x, w),
+            }
         } else {
-            self.conv2d_im2col(x, w, k, stride)
+            match pack {
+                Some(ph) if packing_enabled() => self.conv2d_fused(x, w, k, stride, ph),
+                _ => self.conv2d_im2col(x, w, k, stride),
+            }
         }
     }
 
@@ -687,6 +757,163 @@ impl Tape {
                 par_matmul_into(g, &saved_w.data, &mut dx, rows, cout, cin, &sc);
                 store.acc(x.0, &dx);
                 store.give(dx);
+            })),
+        )
+    }
+
+    /// [`Tape::conv2d_pointwise`] on the step-cached weight packs: the
+    /// forward runs from the bt layout, the backward dX from the mm
+    /// layout (dW is an activation product and keeps the at-pack tier).
+    /// Each packed tier is bit-identical to its unpacked kernel, so the
+    /// pointwise-vs-im2col pin covers this path too.
+    fn conv2d_pointwise_packed(&mut self, x: Var, w: Var, ph: &PackHandle) -> Var {
+        let (xv, wv) = (self.rc(x), self.rc(w));
+        let (n, h, ww, cin) = (xv.shape[0], xv.shape[1], xv.shape[2], xv.shape[3]);
+        let cout = wv.shape[0];
+        debug_assert_eq!(wv.shape[1], cin);
+        let rows = n * h * ww;
+        let sc = self.kernel.clone();
+        let mut y = self.alloc_raw(rows * cout);
+        {
+            let guard = ph.packed(&wv.data);
+            par_matmul_bt_packed_into(&xv.data, guard.bt(), &mut y, rows, cin, cout, &sc);
+        }
+        let val = Tensor::new(vec![n, h, ww, cout], y);
+        let (saved_x, saved_w) = (Rc::clone(&xv), Rc::clone(&wv));
+        let ph = ph.clone();
+        self.push(
+            val,
+            Some(Box::new(move |g, store| {
+                let mut dw = store.take_raw(cout * cin);
+                // dW[cout,cin] = gᵀ[cout,rows] · x[rows,cin]
+                matmul_at_via_pack(g, &saved_x.data, &mut dw, rows, cout, cin, &sc, store);
+                store.acc(w.0, &dw);
+                store.give(dw);
+                let mut dx = store.take_raw(rows * cin);
+                // dX[rows,cin] = g[rows,cout] · W[cout,cin]
+                {
+                    let guard = ph.packed(&saved_w.data);
+                    par_matmul_packed_into(g, guard.mm(), &mut dx, rows, cout, cin, &sc);
+                }
+                store.acc(x.0, &dx);
+                store.give(dx);
+            })),
+        )
+    }
+
+    /// The fused general-conv lowering: image patches stream directly
+    /// into per-lane [`FUSE_ROWS`]-row A-panels ([`fill_patch_rows`],
+    /// counted in the `Op::Pack` bucket) and each panel multiplies the
+    /// step-cached bt weight pack while still cache-hot — the full
+    /// `[rows × f]` im2col matrix is never materialized in the forward.
+    /// The backward rematerializes it once (for dW and the col2im
+    /// scatter); eval never builds it at all. Panel rows are
+    /// content-identical to [`Tape::conv2d_im2col`]'s patch rows, the
+    /// lane split is `par_rows`' and the packed bt kernel is
+    /// bit-identical to the unpacked one, so this path is bit-identical
+    /// to the im2col reference (pinned by `tests/native_exec.rs`).
+    fn conv2d_fused(&mut self, x: Var, w: Var, k: usize, stride: usize, ph: &PackHandle) -> Var {
+        let (xv, wv) = (self.rc(x), self.rc(w));
+        let (n, h, ww, cin) = (xv.shape[0], xv.shape[1], xv.shape[2], xv.shape[3]);
+        let cout = wv.shape[0];
+        let f = k * k * cin;
+        debug_assert_eq!(wv.shape[1], f);
+        let (oh, ow, pad) = same_geometry(h, ww, k, stride);
+        let rows = n * oh * ow;
+        let sc = self.kernel.clone();
+        let t = sc.lanes().min(rows).max(1);
+        let mut panels = self.alloc_raw(t * FUSE_ROWS * f);
+        let mut y = self.alloc_raw(rows * cout);
+        {
+            let guard = ph.packed(&wv.data);
+            let pbt = guard.bt();
+            let xdata: &[f32] = &xv.data;
+            if t <= 1 {
+                conv_rows_fused(
+                    xdata,
+                    pbt,
+                    &mut y,
+                    &mut panels[..FUSE_ROWS * f],
+                    (h, ww, cin, k, stride, oh, ow, pad),
+                    cout,
+                    0,
+                    rows,
+                );
+            } else {
+                // disjoint y row ranges / per-lane panels: same
+                // soundness argument as `tensor::par_rows`
+                let ybase = SendPtr(y.as_mut_ptr());
+                let pbase = SendPtr(panels.as_mut_ptr());
+                sc.run(&|lane| {
+                    if lane >= t {
+                        return;
+                    }
+                    let r0 = lane * rows / t;
+                    let r1 = (lane + 1) * rows / t;
+                    if r0 == r1 {
+                        return;
+                    }
+                    let (yc, panel) = unsafe {
+                        (
+                            std::slice::from_raw_parts_mut(
+                                ybase.0.add(r0 * cout),
+                                (r1 - r0) * cout,
+                            ),
+                            std::slice::from_raw_parts_mut(
+                                pbase.0.add(lane * FUSE_ROWS * f),
+                                FUSE_ROWS * f,
+                            ),
+                        )
+                    };
+                    conv_rows_fused(
+                        xdata,
+                        pbt,
+                        yc,
+                        panel,
+                        (h, ww, cin, k, stride, oh, ow, pad),
+                        cout,
+                        r0,
+                        r1,
+                    );
+                });
+            }
+        }
+        self.arena.give(panels);
+        let val = Tensor::new(vec![n, oh, ow, cout], y);
+        let (saved_x, saved_w) = (Rc::clone(&xv), Rc::clone(&wv));
+        let ph = ph.clone();
+        self.push(
+            val,
+            Some(Box::new(move |g, store| {
+                // rematerialize the patch matrix once for dW …
+                let mut cols = store.take_zeroed(rows * f);
+                im2col_into(&saved_x, k, stride, &mut cols, &sc);
+                let mut dw = store.take_raw(cout * f);
+                matmul_at_via_pack(g, &cols, &mut dw, rows, cout, f, &sc, store);
+                store.acc(w.0, &dw);
+                store.give(dw);
+                // … give it back before taking dcols, so both phases
+                // reuse one rows·f buffer
+                store.give(cols);
+                let mut dcols = store.take_raw(rows * f);
+                {
+                    let guard = ph.packed(&saved_w.data);
+                    par_matmul_packed_into(g, guard.mm(), &mut dcols, rows, cout, f, &sc);
+                }
+                col2im(
+                    &dcols,
+                    store.grad_mut(x.0),
+                    n,
+                    h,
+                    ww,
+                    cin,
+                    k,
+                    stride,
+                    oh,
+                    ow,
+                    &sc,
+                );
+                store.give(dcols);
             })),
         )
     }
@@ -1454,10 +1681,11 @@ fn affine_row(out: &mut [f32], x: &[f32], a: &[f32], b: &[f32]) {
     }
 }
 
-/// `Aᵀ·B` with the packed-panel tier when `simd-kernels` is on: the
-/// pack scratch comes from the step arena (sized by `plan`), so the hot
-/// loop never allocates; scalar builds fall through to the unpacked
-/// row-tile kernel, which is the bit-identity reference.
+/// `Aᵀ·B` on the packed-panel at tier: the pack scratch comes from the
+/// step arena (sized by `plan`), so the hot loop never allocates. Both
+/// builds take the packed tier; the bench's packing toggle falls back
+/// (inside [`par_matmul_at_into_packed`]) to the unpacked row-tile
+/// kernel, which stays the bit-identity reference.
 #[allow(clippy::too_many_arguments)]
 fn matmul_at_via_pack(
     a: &[f32],
@@ -1469,12 +1697,83 @@ fn matmul_at_via_pack(
     sc: &KernelScope,
     store: &mut GradStore,
 ) {
-    if cfg!(feature = "simd-kernels") {
-        let mut pack = store.take_raw(k * m);
-        par_matmul_at_into_packed(a, b, c, m, k, n, sc, &mut pack);
-        store.give(pack);
-    } else {
-        par_matmul_at_into(a, b, c, m, k, n, sc);
+    let mut pack = store.take_raw(k * m);
+    par_matmul_at_into_packed(a, b, c, m, k, n, sc, &mut pack);
+    store.give(pack);
+}
+
+/// One fused-conv lane: walk patch rows `r0..r1` in [`FUSE_ROWS`]
+/// blocks — fill the block's A-panel ([`fill_patch_rows`], `Op::Pack`),
+/// then multiply it against the bt weight pack (`Op::Matmul`) while the
+/// panel is still cache-hot. The bt kernel is per-output-row
+/// independent, so the block subdivision cannot change any element's
+/// bits. `geom` is `(h, w, cin, k, stride, oh, ow, pad)`.
+fn conv_rows_fused(
+    x: &[f32],
+    pbt: &[f32],
+    y: &mut [f32],
+    panel: &mut [f32],
+    geom: (usize, usize, usize, usize, usize, usize, usize, usize),
+    cout: usize,
+    r0: usize,
+    r1: usize,
+) {
+    let (_, _, cin, k, _, _, _, _) = geom;
+    let f = k * k * cin;
+    let mut r = r0;
+    while r < r1 {
+        let re = (r + FUSE_ROWS).min(r1);
+        {
+            let _p = profile::time(Op::Pack);
+            fill_patch_rows(x, &mut panel[..(re - r) * f], geom, r, re);
+        }
+        let _p = profile::time(Op::Matmul);
+        matmul_bt_packed_into(
+            &panel[..(re - r) * f],
+            pbt,
+            &mut y[(r - r0) * cout..(re - r0) * cout],
+            re - r,
+            f,
+            cout,
+        );
+        r = re;
+    }
+}
+
+/// Write patch rows `r0..r1` of the im2col matrix into `panel`
+/// (row-major, `r1−r0` rows of `f = k·k·cin`). Every position is
+/// written — padding taps as exact `0.0` — so the panel needs no
+/// pre-zeroing and its rows are content-identical to
+/// [`im2col_slice_into`]'s (which skips padding taps into a pre-zeroed
+/// buffer instead). `geom` is `(h, w, cin, k, stride, oh, ow, pad)`.
+fn fill_patch_rows(
+    x: &[f32],
+    panel: &mut [f32],
+    geom: (usize, usize, usize, usize, usize, usize, usize, usize),
+    r0: usize,
+    r1: usize,
+) {
+    let (h, w, cin, k, stride, oh, ow, pad) = geom;
+    let f = k * k * cin;
+    debug_assert_eq!(panel.len(), (r1 - r0) * f);
+    for (ri, row) in panel.chunks_exact_mut(f).enumerate() {
+        let r = r0 + ri;
+        let b = r / (oh * ow);
+        let rem = r % (oh * ow);
+        let (oy, ox) = (rem / ow, rem % ow);
+        for ky in 0..k {
+            let iy = (oy * stride + ky) as isize - pad as isize;
+            for kx in 0..k {
+                let dst = &mut row[(ky * k + kx) * cin..(ky * k + kx + 1) * cin];
+                let ix = (ox * stride + kx) as isize - pad as isize;
+                if iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize {
+                    dst.iter_mut().for_each(|v| *v = 0.0);
+                    continue;
+                }
+                let src = ((b * h + iy as usize) * w + ix as usize) * cin;
+                dst.copy_from_slice(&x[src..src + cin]);
+            }
+        }
     }
 }
 

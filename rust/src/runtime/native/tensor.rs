@@ -39,12 +39,35 @@
 //! global — tests compare [`simd`] and `*_scalar` functions directly
 //! instead of toggling it.
 //!
+//! On top of the blocked kernels sits a **packed-panel tier** for every
+//! orientation, ported from the quantized path's `bt_drive_packed`
+//! layout (PR 7/9): [`pack_bt_into`] interleaves `PK_NR` B rows per
+//! `LANES`-chunk for the dot kernel, [`pack_mm_into`] lays B out in
+//! `PK_NB`-column panels for the axpy tile, and [`pack_at_panel`]
+//! transposes A column panels (the tier PR 8 introduced, now available
+//! under every build). Panel edges are zero-padded and pad products
+//! never reach a stored output element, so packing is bit-free; per
+//! output element each packed kernel replays its unpacked tier's exact
+//! reduction recipe (the `dot` chunk/halving-tree/remainder order for
+//! bt, the skip-exact-zero axpy order for mm/at), so **packed and
+//! unpacked tiers are bit-identical under both builds** — the scalar
+//! kernels stay the single bit-identity reference (DESIGN.md §5.7).
+//! [`WeightPackSlot`]/[`PackHandle`] add the step-scoped weight-pack
+//! cache: the backend hands each layer a handle stamped with the
+//! current step epoch, the first shard to consume the weight packs both
+//! layouts once (under `Op::Pack`), and every other shard and the
+//! backward GEMMs reuse them through a shared read lock.
+//! [`set_packing_enabled`] is the bench-only escape hatch mirroring
+//! [`set_simd_enabled`], so one binary can time packed vs unpacked.
+//!
 //! The `arch-kernels` feature adds a third, architecture-intrinsic int8
 //! GEMM tier in [`arch`] (AVX2 `maddubs` / AVX-512-VNNI `vpdpbusd` on
 //! x86_64, NEON `vmull` / `sdot` on aarch64), selected by runtime
 //! CPU-feature detection ([`arch::isa`]) and consumed by the packed
 //! qmatmul drive in [`super::qkernels`]. Detection itself is compiled
 //! unconditionally so every build can report what the host supports.
+
+use std::sync::{Arc, RwLock, RwLockReadGuard};
 
 use super::pool::KernelScope;
 use super::profile::{self, Op};
@@ -92,6 +115,12 @@ impl Tensor {
 const MR: usize = 4;
 /// Independent accumulators per dot product (must divide SIMD widths).
 const LANES: usize = 8;
+/// Weight rows per panel of the packed `A·Bᵀ` tier (four dots share one
+/// streamed A chunk, matching the unpacked dot kernel's row group).
+pub const PK_NR: usize = 4;
+/// Output columns per panel of the packed `A·B` tier (one register tile
+/// wide: two 8-lane vectors).
+pub const PK_NB: usize = 16;
 
 // ---------------------------------------------------------------------------
 // dispatch: scalar bit-identity reference vs feature-gated SIMD microkernels
@@ -118,6 +147,29 @@ mod toggle {
 
 #[cfg(feature = "simd-kernels")]
 pub use toggle::{set_simd_enabled, simd_enabled};
+
+mod packing {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static PACKING: AtomicBool = AtomicBool::new(true);
+
+    /// Whether the engine's pack-aware call sites (conv/FC GEMMs, the
+    /// at-tier pack scratch) take the packed-panel tier (default: yes —
+    /// the packed tiers are bit-identical to the unpacked ones, so this
+    /// is a speed choice, never a numerics one).
+    pub fn packing_enabled() -> bool {
+        PACKING.load(Ordering::Relaxed)
+    }
+
+    /// Bench-only: flip packed-tier dispatch so one binary can time the
+    /// packed and unpacked paths. Process global — never call from
+    /// concurrent tests.
+    pub fn set_packing_enabled(on: bool) {
+        PACKING.store(on, Ordering::Relaxed)
+    }
+}
+
+pub use packing::{packing_enabled, set_packing_enabled};
 
 /// `C[m,n] = A[m,k] · B[k,n]`, overwriting `c`.
 pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
@@ -304,6 +356,294 @@ fn dot(x: &[f32], y: &[f32]) -> f32 {
 }
 
 // ---------------------------------------------------------------------------
+// packed-panel f32 tier: layouts, pack routines, packed microkernels
+// ---------------------------------------------------------------------------
+
+/// Reduction length padded up to whole `LANES` chunks (the bt-pack's k
+/// edge; pads are exactly 0.0).
+pub fn f32_k_pad(k: usize) -> usize {
+    k.div_ceil(LANES) * LANES
+}
+
+/// Buffer length of a [`pack_bt_into`] pack of `B[n,k]`.
+pub fn bt_packed_len(k: usize, n: usize) -> usize {
+    n.div_ceil(PK_NR) * PK_NR * f32_k_pad(k)
+}
+
+/// Buffer length of a [`pack_mm_into`] pack of `B[k,n]` (`k` is not
+/// padded — the axpy kernels stream whole `p` rows, and padding the
+/// reduction would change the scalar tail order).
+pub fn mm_packed_len(k: usize, n: usize) -> usize {
+    n.div_ceil(PK_NB) * PK_NB * k
+}
+
+/// Pack `B[n,k]` (row-major) into the panel-major bt layout: panels of
+/// `PK_NR` rows, each `LANES`-chunk of the panel's rows interleaved at
+/// `panel·PK_NR·k_pad + chunk·PK_NR·LANES + row·LANES + lane`, row and
+/// k edges zero-padded. The packed bt kernels consume one panel as a
+/// single forward stream. Pads are exactly 0.0 and never reach a stored
+/// output element, so packing is bit-free (DESIGN.md §5.7).
+pub fn pack_bt_into(b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    let _p = profile::time(Op::Pack);
+    let k_pad = f32_k_pad(k);
+    let len = bt_packed_len(k, n);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert!(out.len() >= len);
+    out[..len].iter_mut().for_each(|x| *x = 0.0);
+    for j in 0..n {
+        let base = (j / PK_NR) * PK_NR * k_pad + (j % PK_NR) * LANES;
+        let row = &b[j * k..(j + 1) * k];
+        for (bi, chunk) in row.chunks(LANES).enumerate() {
+            out[base + bi * PK_NR * LANES..][..chunk.len()].copy_from_slice(chunk);
+        }
+    }
+}
+
+/// Pack `B[k,n]` (row-major) into the panel-major mm layout: panels of
+/// `PK_NB` columns at `panel·PK_NB·k + p·PK_NB + col`, the column edge
+/// zero-padded. Each register tile then loads its two B vectors from
+/// one contiguous stream instead of striding across B rows. Same
+/// bit-free-pad argument as [`pack_bt_into`].
+pub fn pack_mm_into(b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    let _p = profile::time(Op::Pack);
+    let len = mm_packed_len(k, n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert!(out.len() >= len);
+    out[..len].iter_mut().for_each(|x| *x = 0.0);
+    for p in 0..k {
+        let brow = &b[p * n..(p + 1) * n];
+        for (jp, cols) in brow.chunks(PK_NB).enumerate() {
+            out[jp * PK_NB * k + p * PK_NB..][..cols.len()].copy_from_slice(cols);
+        }
+    }
+}
+
+/// Transpose the column panel `A[:, i0..i1]` of `A[m,k]` into `panel`
+/// (`[(i1−i0) × m]` row-major) — the pack step of the at tier, split
+/// out of the GEMM so its time lands in the `Op::Pack` bucket.
+pub fn pack_at_panel(a: &[f32], panel: &mut [f32], m: usize, k: usize, i0: usize, i1: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert!(panel.len() >= (i1 - i0) * m);
+    for t in 0..(i1 - i0) {
+        let dst = &mut panel[t * m..(t + 1) * m];
+        for (r, d) in dst.iter_mut().enumerate() {
+            *d = a[r * k + i0 + t];
+        }
+    }
+}
+
+/// Scalar packed-`A·Bᵀ` tier: per output element the chunk /
+/// halving-tree / scalar-remainder recipe is exactly the scalar
+/// [`dot`]'s, reading B from the packed panels — bit-identical to
+/// [`matmul_bt_into_scalar`]. Padded panel rows are computed (their
+/// products hit only zero pads) and never stored.
+pub fn matmul_bt_packed_scalar(
+    a: &[f32],
+    pb: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * n);
+    debug_assert!(pb.len() >= bt_packed_len(k, n));
+    let k_pad = f32_k_pad(k);
+    let k_main = k - k % LANES;
+    let nb_main = k_main / LANES;
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut j0 = 0;
+        while j0 < n {
+            let jn = (j0 + PK_NR).min(n) - j0;
+            let panel = &pb[(j0 / PK_NR) * PK_NR * k_pad..];
+            let mut acc = [[0.0f32; LANES]; PK_NR];
+            for bi in 0..nb_main {
+                let av = &arow[bi * LANES..(bi + 1) * LANES];
+                let blk = &panel[bi * PK_NR * LANES..];
+                for (t, at) in acc.iter_mut().enumerate() {
+                    let brow = &blk[t * LANES..(t + 1) * LANES];
+                    for l in 0..LANES {
+                        at[l] += av[l] * brow[l];
+                    }
+                }
+            }
+            let tail = &panel[nb_main * PK_NR * LANES..];
+            for (t, at) in acc.iter_mut().enumerate().take(jn) {
+                let mut width = LANES;
+                while width > 1 {
+                    width /= 2;
+                    for l in 0..width {
+                        at[l] += at[l + width];
+                    }
+                }
+                let mut s = at[0];
+                for (q, &av) in arow[k_main..].iter().enumerate() {
+                    s += av * tail[t * LANES + q];
+                }
+                crow[j0 + t] = s;
+            }
+            j0 += PK_NR;
+        }
+    }
+}
+
+/// Scalar packed-`A·B` tier: the per-element accumulation order and
+/// exact-zero skip of [`matmul_into_scalar`], reading B rows from the
+/// packed column panels — bit-identical to it.
+pub fn matmul_packed_scalar(a: &[f32], pb: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * n);
+    debug_assert!(pb.len() >= mm_packed_len(k, n));
+    c.iter_mut().for_each(|x| *x = 0.0);
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + MR).min(m);
+        for p in 0..k {
+            for pi in 0..(i1 - i0) {
+                let aip = a[(i0 + pi) * k + p];
+                if aip == 0.0 {
+                    continue;
+                }
+                let crow = &mut c[(i0 + pi) * n..(i0 + pi + 1) * n];
+                for (jp, cols) in crow.chunks_mut(PK_NB).enumerate() {
+                    let src = &pb[jp * PK_NB * k + p * PK_NB..];
+                    for (cv, &bv) in cols.iter_mut().zip(src) {
+                        *cv += aip * bv;
+                    }
+                }
+            }
+        }
+        i0 = i1;
+    }
+}
+
+/// Packed-B `C[m,n] = A[m,k] · B[n,k]ᵀ`: `pb` is a [`pack_bt_into`]
+/// pack of B. Every tier shares the `dot` reduction recipe, so this is
+/// bit-identical to [`matmul_bt_into`] under both builds and either
+/// toggle state.
+pub fn matmul_bt_packed_into(a: &[f32], pb: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    #[cfg(feature = "simd-kernels")]
+    if simd_enabled() {
+        simd::matmul_bt_packed(a, pb, c, m, k, n);
+        return;
+    }
+    matmul_bt_packed_scalar(a, pb, c, m, k, n);
+}
+
+/// Packed-B `C[m,n] = A[m,k] · B[k,n]`: `pb` is a [`pack_mm_into`]
+/// pack of B. Bit-identical to [`matmul_into`] under both builds.
+pub fn matmul_packed_into(a: &[f32], pb: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    #[cfg(feature = "simd-kernels")]
+    if simd_enabled() {
+        simd::matmul_packed(a, pb, c, m, k, n);
+        return;
+    }
+    matmul_packed_scalar(a, pb, c, m, k, n);
+}
+
+// ---------------------------------------------------------------------------
+// step-scoped weight-pack cache
+// ---------------------------------------------------------------------------
+
+/// Both pack layouts of one `[rows × cols]` weight matrix, refreshed at
+/// most once per step epoch. The buffers are allocated once at backend
+/// build time (sized by `plan::weight_pack_plan`) and reused forever —
+/// steady-state steps allocate nothing here.
+pub struct WeightPackSlot {
+    state: RwLock<PackState>,
+}
+
+struct PackState {
+    /// step epoch the buffers currently hold (0 = never filled; the
+    /// backend stamps handles starting from epoch 1)
+    epoch: u64,
+    /// [`pack_bt_into`] layout of W (`k = cols`): the forward conv GEMM
+    /// and the FC backward dA consume this orientation
+    bt: Vec<f32>,
+    /// [`pack_mm_into`] layout of W (`k = rows`): the conv backward
+    /// dX/dcols GEMM and the FC forward consume this orientation
+    mm: Vec<f32>,
+}
+
+impl WeightPackSlot {
+    pub fn new(rows: usize, cols: usize) -> WeightPackSlot {
+        WeightPackSlot {
+            state: RwLock::new(PackState {
+                epoch: 0,
+                bt: vec![0.0; bt_packed_len(cols, rows)],
+                mm: vec![0.0; mm_packed_len(rows, cols)],
+            }),
+        }
+    }
+}
+
+/// Step-scoped handle to a shared [`WeightPackSlot`], stamped with the
+/// backend's current step epoch. Cheap to clone (it rides inside tape
+/// backward closures). The first consumer in a step packs both layouts
+/// under the write lock; every later consumer — other batch shards, the
+/// same shard's backward GEMMs — gets the shared read guard
+/// immediately. Every shard computes bit-identical effective weights
+/// (the engine's lane-count determinism contract), so which shard packs
+/// is unobservable in the numbers.
+#[derive(Clone)]
+pub struct PackHandle {
+    slot: Arc<WeightPackSlot>,
+    epoch: u64,
+    rows: usize,
+    cols: usize,
+}
+
+impl PackHandle {
+    pub fn new(slot: Arc<WeightPackSlot>, epoch: u64, rows: usize, cols: usize) -> PackHandle {
+        PackHandle {
+            slot,
+            epoch,
+            rows,
+            cols,
+        }
+    }
+
+    /// Both pack layouts of `w` (`[rows × cols]` row-major) for this
+    /// handle's step epoch, packing on first touch.
+    pub fn packed(&self, w: &[f32]) -> PackGuard<'_> {
+        debug_assert_eq!(w.len(), self.rows * self.cols);
+        {
+            let g = self.slot.state.read().unwrap();
+            if g.epoch == self.epoch {
+                return PackGuard(g);
+            }
+        }
+        {
+            let mut g = self.slot.state.write().unwrap();
+            if g.epoch != self.epoch {
+                let st = &mut *g;
+                pack_bt_into(w, self.cols, self.rows, &mut st.bt);
+                pack_mm_into(w, self.rows, self.cols, &mut st.mm);
+                st.epoch = self.epoch;
+            }
+        }
+        PackGuard(self.slot.state.read().unwrap())
+    }
+}
+
+/// Shared read guard over a filled [`WeightPackSlot`].
+pub struct PackGuard<'a>(RwLockReadGuard<'a, PackState>);
+
+impl PackGuard<'_> {
+    /// The [`pack_bt_into`] layout (`k = cols`, `n = rows`).
+    pub fn bt(&self) -> &[f32] {
+        &self.0.bt
+    }
+
+    /// The [`pack_mm_into`] layout (`k = rows`, `n = cols`).
+    pub fn mm(&self) -> &[f32] {
+        &self.0.mm
+    }
+}
+
+// ---------------------------------------------------------------------------
 // persistent-pool wrappers: shard output rows, bit-identical results
 // ---------------------------------------------------------------------------
 
@@ -410,21 +750,59 @@ pub fn par_matmul_at_into(
     });
 }
 
+/// Parallel [`matmul_bt_packed_into`]: rows of C sharded across the
+/// scope's lanes; every lane reads the same shared weight pack (packed
+/// once per step by the [`PackHandle`] cache, so no `Op::Pack` time is
+/// spent here).
+pub fn par_matmul_bt_packed_into(
+    a: &[f32],
+    pb: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    scope: &KernelScope,
+) {
+    debug_assert_eq!(c.len(), m * n);
+    par_rows(c, m, n, scope, |r0, r1, chunk| {
+        let _p = profile::time(Op::Matmul);
+        matmul_bt_packed_into(&a[r0 * k..r1 * k], pb, chunk, r1 - r0, k, n);
+    });
+}
+
+/// Parallel [`matmul_packed_into`]: rows of C sharded across the
+/// scope's lanes; every lane reads the same shared weight pack.
+pub fn par_matmul_packed_into(
+    a: &[f32],
+    pb: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    scope: &KernelScope,
+) {
+    debug_assert_eq!(c.len(), m * n);
+    par_rows(c, m, n, scope, |r0, r1, chunk| {
+        let _p = profile::time(Op::Matmul);
+        matmul_packed_into(&a[r0 * k..r1 * k], pb, chunk, r1 - r0, k, n);
+    });
+}
+
 /// Packed-panel tier of the parallel `Aᵀ·B` kernel. The plain at-kernel
-/// is the weakest of the three orientations: its register tile re-walks
-/// A down `k`-strided columns once per 16-column output tile. Here each
-/// lane first transposes its own disjoint column panel of A into `pack`
-/// (contiguous, packed exactly once per call), then runs the strong
-/// [`matmul_into`] row tile on the panel. Per output element the rank-1
-/// accumulation over `m` stays in the same ascending index order, so
-/// the packed tier is bit-identical to the unpacked SIMD kernel at any
-/// lane count.
+/// is the weakest of the three orientations: its inner loops re-walk A
+/// down `k`-strided columns. Here each lane first transposes its own
+/// disjoint column panel of A into `pack` ([`pack_at_panel`], counted
+/// in the `Op::Pack` bucket), then runs the strong row-major
+/// [`matmul_into`] dispatcher on the panel — both builds take the
+/// packed tier. Per output element the rank-1 accumulation over `m`
+/// stays in the same ascending index order with each build's own
+/// skip-exact-zero behavior, so the packed tier is bit-identical to the
+/// same build's unpacked kernel at any lane count.
 ///
 /// `pack` must hold at least `k·m` f32 (lane `i0..i1` uses
 /// `pack[i0·m..i1·m]` — the arena sizes it via `plan::step_sizes`).
-/// Only the `simd-kernels` build takes this path; otherwise (and under
-/// the bench's scalar toggle) it falls back to [`par_matmul_at_into`],
-/// which stays the bit-identity reference.
+/// Under the bench's [`set_packing_enabled`] escape hatch it falls back
+/// to [`par_matmul_at_into`], which stays the bit-identity reference.
 #[allow(clippy::too_many_arguments)]
 pub fn par_matmul_at_into_packed(
     a: &[f32],
@@ -438,20 +816,22 @@ pub fn par_matmul_at_into_packed(
 ) {
     debug_assert_eq!(c.len(), k * n);
     debug_assert!(pack.len() >= k * m);
-    #[cfg(feature = "simd-kernels")]
-    if simd_enabled() {
-        let pbase = RowBase(pack.as_mut_ptr());
-        par_rows(c, k, n, scope, |i0, i1, chunk| {
-            let _p = profile::time(Op::Matmul);
-            // lanes own disjoint [i0·m, i1·m) panel ranges, same
-            // aliasing argument as par_rows' own chunks
-            let panel =
-                unsafe { std::slice::from_raw_parts_mut(pbase.0.add(i0 * m), (i1 - i0) * m) };
-            simd::matmul_at_panel(a, b, chunk, panel, m, k, n, i0, i1);
-        });
+    if !packing_enabled() {
+        par_matmul_at_into(a, b, c, m, k, n, scope);
         return;
     }
-    par_matmul_at_into(a, b, c, m, k, n, scope);
+    let pbase = RowBase(pack.as_mut_ptr());
+    par_rows(c, k, n, scope, |i0, i1, chunk| {
+        // lanes own disjoint [i0·m, i1·m) panel ranges, same aliasing
+        // argument as par_rows' own chunks
+        let panel = unsafe { std::slice::from_raw_parts_mut(pbase.0.add(i0 * m), (i1 - i0) * m) };
+        {
+            let _p = profile::time(Op::Pack);
+            pack_at_panel(a, panel, m, k, i0, i1);
+        }
+        let _p = profile::time(Op::Matmul);
+        matmul_into(panel, b, chunk, i1 - i0, m, n);
+    });
 }
 
 // ---------------------------------------------------------------------------
@@ -478,12 +858,14 @@ pub fn par_matmul_at_into_packed(
 /// `par_rows` sharding stays bit-identical for any lane count.
 #[cfg(feature = "simd-kernels")]
 pub mod simd {
-    use super::dot;
+    use super::{bt_packed_len, dot, f32_k_pad, mm_packed_len, PK_NB, PK_NR};
 
     /// Rows per register tile.
     const MR_S: usize = 4;
     /// Columns per register tile (two 8-lane vectors).
     const NB: usize = 16;
+    // the packed layouts are panelized for exactly this tile geometry
+    const _: () = assert!(NB == PK_NB && MR_S == PK_NR);
 
     /// Portable 8-lane f32 vector: an aligned array the autovectorizer
     /// lowers to one 256-bit (or two 128-bit) register(s).
@@ -782,13 +1164,107 @@ pub mod simd {
         let rows = i1 - i0;
         debug_assert!(chunk.len() >= rows * n);
         debug_assert!(panel.len() >= rows * m);
-        for t in 0..rows {
-            let dst = &mut panel[t * m..(t + 1) * m];
-            for (r, d) in dst.iter_mut().enumerate() {
-                *d = a[r * k + i0 + t];
+        super::pack_at_panel(a, panel, m, k, i0, i1);
+        matmul_into(&panel[..rows * m], b, &mut chunk[..rows * n], rows, m, n);
+    }
+
+    /// SIMD packed-`A·Bᵀ` tier: the [`super::pack_bt_into`] panels feed
+    /// the [`matmul_bt_into`] recipe — per chunk one streamed A vector
+    /// multiplies `PK_NR` contiguous interleaved B rows, then the hsum
+    /// tree and the scalar k-remainder (read from the panel's partial
+    /// block, *after* the tree, so padding never enters the vector
+    /// accumulators). Bit-identical to [`matmul_bt_into`], and — since
+    /// the dot recipe is shared — to the scalar kernels too.
+    pub fn matmul_bt_packed(a: &[f32], pb: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(c.len(), m * n);
+        debug_assert!(pb.len() >= bt_packed_len(k, n));
+        let k_pad = f32_k_pad(k);
+        let k_main = k - k % F32x8::LANES;
+        let nb_main = k_main / F32x8::LANES;
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            let mut j0 = 0;
+            while j0 < n {
+                let jn = (j0 + PK_NR).min(n) - j0;
+                let panel = &pb[(j0 / PK_NR) * PK_NR * k_pad..];
+                let mut acc = [F32x8::zero(); PK_NR];
+                for bi in 0..nb_main {
+                    let xv = F32x8::load(&arow[bi * F32x8::LANES..]);
+                    let blk = &panel[bi * PK_NR * F32x8::LANES..];
+                    for (t, at) in acc.iter_mut().enumerate() {
+                        *at = at.mul_add(xv, F32x8::load(&blk[t * F32x8::LANES..]));
+                    }
+                }
+                let tail = &panel[nb_main * PK_NR * F32x8::LANES..];
+                for (t, at) in acc.iter().enumerate().take(jn) {
+                    let mut s = at.hsum();
+                    for (q, &av) in arow[k_main..].iter().enumerate() {
+                        s += av * tail[t * F32x8::LANES + q];
+                    }
+                    crow[j0 + t] = s;
+                }
+                j0 += PK_NR;
             }
         }
-        matmul_into(&panel[..rows * m], b, &mut chunk[..rows * n], rows, m, n);
+    }
+
+    /// SIMD packed-`A·B` tier: [`matmul_into`]'s MR_S×16 register tile
+    /// with both B vectors loaded from one contiguous
+    /// [`super::pack_mm_into`] panel stream instead of striding across
+    /// B rows. Tail columns run the same scalar skip-zero loop reading
+    /// the zero-padded last panel. Bit-identical to [`matmul_into`].
+    pub fn matmul_packed(a: &[f32], pb: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(c.len(), m * n);
+        debug_assert!(pb.len() >= mm_packed_len(k, n));
+        let n_main = n - n % NB;
+        let mut i0 = 0;
+        while i0 < m {
+            let i1 = (i0 + MR_S).min(m);
+            let rows = i1 - i0;
+            let mut j = 0;
+            while j < n_main {
+                let ppanel = &pb[(j / NB) * NB * k..];
+                let mut acc = [[F32x8::zero(); 2]; MR_S];
+                for p in 0..k {
+                    let b0 = F32x8::load(&ppanel[p * NB..]);
+                    let b1 = F32x8::load(&ppanel[p * NB + 8..]);
+                    for (r, accr) in acc.iter_mut().enumerate().take(rows) {
+                        let av = F32x8::splat(a[(i0 + r) * k + p]);
+                        accr[0] = accr[0].mul_add(av, b0);
+                        accr[1] = accr[1].mul_add(av, b1);
+                    }
+                }
+                for (r, accr) in acc.iter().enumerate().take(rows) {
+                    let off = (i0 + r) * n + j;
+                    accr[0].store(&mut c[off..]);
+                    accr[1].store(&mut c[off + 8..]);
+                }
+                j += NB;
+            }
+            if j < n {
+                // tail columns: scalar skip-zero accumulation in the
+                // same p-order, reading the zero-padded last panel
+                let ppanel = &pb[(n_main / NB) * NB * k..];
+                for r in 0..rows {
+                    let arow = &a[(i0 + r) * k..(i0 + r + 1) * k];
+                    let crow = &mut c[(i0 + r) * n + j..(i0 + r) * n + n];
+                    crow.iter_mut().for_each(|x| *x = 0.0);
+                    for (p, &ap) in arow.iter().enumerate() {
+                        if ap == 0.0 {
+                            continue;
+                        }
+                        let brow = &ppanel[p * NB..p * NB + (n - n_main)];
+                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                            *cv += ap * bv;
+                        }
+                    }
+                }
+            }
+            i0 = i1;
+        }
     }
 
     // -- elementwise panels (dw-conv taps, batch-norm rows) ----------------
@@ -1327,6 +1803,83 @@ mod tests {
                 c
             });
             assert_eq!(&out[0], &base, "packed at t={t}");
+        }
+    }
+
+    #[test]
+    fn packed_bt_and_mm_tiers_are_bit_identical_to_unpacked() {
+        use super::super::pool::WorkerPool;
+        // odd shapes: partial k chunk (k = 21 = 2·8 + 5), partial bt row
+        // panel (n % 4 ≠ 0) and a partial mm column panel (n % 16 ≠ 0);
+        // exact zeros sprinkled in A exercise the skip-zero paths
+        let (m, k, n) = (23, 21, 19);
+        let a: Vec<f32> = (0..m * k)
+            .map(|i| if i % 7 == 3 { 0.0 } else { (i as f32 * 0.11).sin() })
+            .collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.07).cos()).collect();
+        let bt: Vec<f32> = (0..n * k).map(|i| (i as f32 * 0.05).sin()).collect();
+        let mut base_mm = vec![0.0; m * n];
+        matmul_into(&a, &b, &mut base_mm, m, k, n);
+        let mut base_bt = vec![0.0; m * n];
+        matmul_bt_into(&a, &bt, &mut base_bt, m, k, n);
+
+        let mut pbt = vec![f32::NAN; bt_packed_len(k, n)];
+        pack_bt_into(&bt, k, n, &mut pbt);
+        let mut pmm = vec![f32::NAN; mm_packed_len(k, n)];
+        pack_mm_into(&b, k, n, &mut pmm);
+
+        let mut c = vec![1.0; m * n];
+        matmul_bt_packed_into(&a, &pbt, &mut c, m, k, n);
+        assert_eq!(c, base_bt, "packed bt (serial)");
+        let mut c = vec![1.0; m * n];
+        matmul_packed_into(&a, &pmm, &mut c, m, k, n);
+        assert_eq!(c, base_mm, "packed mm (serial)");
+
+        for t in [1usize, 2, 3, 5] {
+            let pool = WorkerPool::new(t);
+            let out = pool.run_tasks(1, &|_i, scope| {
+                let mut c_bt = vec![1.0; m * n];
+                par_matmul_bt_packed_into(&a, &pbt, &mut c_bt, m, k, n, scope);
+                let mut c_mm = vec![1.0; m * n];
+                par_matmul_packed_into(&a, &pmm, &mut c_mm, m, k, n, scope);
+                (c_bt, c_mm)
+            });
+            let (c_bt, c_mm) = &out[0];
+            assert_eq!(c_bt, &base_bt, "packed bt t={t}");
+            assert_eq!(c_mm, &base_mm, "packed mm t={t}");
+        }
+    }
+
+    #[test]
+    fn weight_pack_cache_fills_once_per_epoch() {
+        let (rows, cols) = (6, 11);
+        let w: Vec<f32> = (0..rows * cols).map(|i| (i as f32 * 0.19).sin()).collect();
+        let slot = Arc::new(WeightPackSlot::new(rows, cols));
+
+        let mut want_bt = vec![0.0; bt_packed_len(cols, rows)];
+        pack_bt_into(&w, cols, rows, &mut want_bt);
+        let mut want_mm = vec![0.0; mm_packed_len(rows, cols)];
+        pack_mm_into(&w, rows, cols, &mut want_mm);
+
+        let h1 = PackHandle::new(slot.clone(), 1, rows, cols);
+        {
+            let g = h1.packed(&w);
+            assert_eq!(g.bt(), &want_bt[..]);
+            assert_eq!(g.mm(), &want_mm[..]);
+        }
+        // same epoch: cache hit — a different w must NOT be repacked
+        let w2: Vec<f32> = w.iter().map(|x| x + 1.0).collect();
+        {
+            let g = h1.packed(&w2);
+            assert_eq!(g.bt(), &want_bt[..], "same-epoch handle repacked");
+        }
+        // bumped epoch: refreshes from the new weights
+        let h2 = PackHandle::new(slot, 2, rows, cols);
+        let mut want_bt2 = vec![0.0; bt_packed_len(cols, rows)];
+        pack_bt_into(&w2, cols, rows, &mut want_bt2);
+        {
+            let g = h2.packed(&w2);
+            assert_eq!(g.bt(), &want_bt2[..], "new epoch did not repack");
         }
     }
 

@@ -431,6 +431,192 @@ mod qmatmul_tiers {
     }
 }
 
+/// The packed-panel f32 training tiers. Packing is a pure relayout
+/// whose edge pads are exactly `0.0` and never enter a stored element's
+/// accumulation chain, so — unlike the scalar-vs-SIMD comparisons,
+/// where axpy signed zeros may differ — packed and unpacked must agree
+/// *bitwise* under both builds, on every panel-edge shape, signed zeros
+/// included. `fill` sprinkles exact zeros so the scalar skip-zero
+/// branches execute on both sides of each comparison.
+mod packed_f32_tiers {
+    use std::sync::Arc;
+
+    use super::{assert_close, fill, naive_bt, naive_mm, SHAPES};
+    use odimo::runtime::native::tensor::{
+        bt_packed_len, matmul_at_into, matmul_bt_into, matmul_bt_packed_into, matmul_into,
+        matmul_packed_into, mm_packed_len, pack_bt_into, pack_mm_into,
+        par_matmul_at_into_packed, par_matmul_bt_packed_into, par_matmul_packed_into,
+    };
+    use odimo::runtime::native::{PackHandle, WeightPackSlot, WorkerPool};
+
+    #[test]
+    fn packed_bt_is_bit_identical_to_unpacked_dispatch() {
+        for &(m, k, n) in &SHAPES {
+            let a = fill(m * k, 131 + (m * 31 + k * 7 + n) as u64);
+            let b = fill(n * k, 137 + (m + k * 5 + n * 3) as u64);
+            let mut want = vec![0.0f32; m * n];
+            matmul_bt_into(&a, &b, &mut want, m, k, n);
+            // NAN canary: packing must overwrite every position, pads
+            // included — a surviving NAN means an unwritten pad slot
+            let mut pb = vec![f32::NAN; bt_packed_len(k, n)];
+            pack_bt_into(&b, k, n, &mut pb);
+            assert!(
+                pb.iter().all(|x| !x.is_nan()),
+                "bt pack left unwritten slots at {m}x{k}x{n}"
+            );
+            let mut got = vec![0.0f32; m * n];
+            matmul_bt_packed_into(&a, &pb, &mut got, m, k, n);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "packed bt {m}x{k}x{n} elem {i}");
+            }
+            assert_close(
+                &got,
+                &naive_bt(&a, &b, m, k, n),
+                1e-4,
+                &format!("packed bt vs naive {m}x{k}x{n}"),
+            );
+        }
+    }
+
+    #[test]
+    fn packed_mm_is_bit_identical_to_unpacked_dispatch() {
+        for &(m, k, n) in &SHAPES {
+            let a = fill(m * k, 139 + (m * 3 + k + n * 11) as u64);
+            let b = fill(k * n, 149 + (m + k * 13 + n) as u64);
+            let mut want = vec![0.0f32; m * n];
+            matmul_into(&a, &b, &mut want, m, k, n);
+            let mut pb = vec![f32::NAN; mm_packed_len(k, n)];
+            pack_mm_into(&b, k, n, &mut pb);
+            assert!(
+                pb.iter().all(|x| !x.is_nan()),
+                "mm pack left unwritten slots at {m}x{k}x{n}"
+            );
+            let mut got = vec![0.0f32; m * n];
+            matmul_packed_into(&a, &pb, &mut got, m, k, n);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "packed mm {m}x{k}x{n} elem {i}");
+            }
+            assert_close(
+                &got,
+                &naive_mm(&a, &b, m, k, n),
+                1e-4,
+                &format!("packed mm vs naive {m}x{k}x{n}"),
+            );
+        }
+    }
+
+    /// The packed at tier transposes a column panel and runs the mm
+    /// register tile on it — per output element the accumulation over
+    /// `r` keeps the unpacked kernel's order and skip-zero behavior, so
+    /// serial unpacked vs lane-sharded packed is bitwise too.
+    #[test]
+    fn par_packed_tiers_are_bit_identical_for_any_lane_count() {
+        for &(m, k, n) in &SHAPES {
+            let a = fill(m * k, 151 + (m * 7 + k * 3 + n) as u64);
+            let bt = fill(n * k, 157 + (m + k + n * 17) as u64);
+            let bm = fill(k * n, 163 + (m * 5 + k + n) as u64);
+            let bat = fill(m * n, 167 + (m + k * 11 + n) as u64);
+            let mut pbt = vec![0.0f32; bt_packed_len(k, n)];
+            pack_bt_into(&bt, k, n, &mut pbt);
+            let mut pbm = vec![0.0f32; mm_packed_len(k, n)];
+            pack_mm_into(&bm, k, n, &mut pbm);
+            let mut want_bt = vec![0.0f32; m * n];
+            matmul_bt_packed_into(&a, &pbt, &mut want_bt, m, k, n);
+            let mut want_mm = vec![0.0f32; m * n];
+            matmul_packed_into(&a, &pbm, &mut want_mm, m, k, n);
+            let mut want_at = vec![0.0f32; k * n];
+            matmul_at_into(&a, &bat, &mut want_at, m, k, n);
+            for &t in &[1usize, 2, 3, 5] {
+                let pool = WorkerPool::new(t);
+                let got = pool.run_tasks(1, &|_, scope| {
+                    let mut gbt = vec![0.0f32; m * n];
+                    par_matmul_bt_packed_into(&a, &pbt, &mut gbt, m, k, n, scope);
+                    let mut gmm = vec![0.0f32; m * n];
+                    par_matmul_packed_into(&a, &pbm, &mut gmm, m, k, n, scope);
+                    let mut gat = vec![0.0f32; k * n];
+                    let mut pack = vec![0.0f32; k * m];
+                    par_matmul_at_into_packed(&a, &bat, &mut gat, m, k, n, scope, &mut pack);
+                    (gbt, gmm, gat)
+                });
+                let (gbt, gmm, gat) = &got[0];
+                for (i, (g, w)) in gbt.iter().zip(&want_bt).enumerate() {
+                    assert_eq!(g.to_bits(), w.to_bits(), "par bt t={t} {m}x{k}x{n} elem {i}");
+                }
+                for (i, (g, w)) in gmm.iter().zip(&want_mm).enumerate() {
+                    assert_eq!(g.to_bits(), w.to_bits(), "par mm t={t} {m}x{k}x{n} elem {i}");
+                }
+                for (i, (g, w)) in gat.iter().zip(&want_at).enumerate() {
+                    assert_eq!(g.to_bits(), w.to_bits(), "par at t={t} {m}x{k}x{n} elem {i}");
+                }
+            }
+        }
+    }
+
+    /// Signed zeros: `-0.0 + 0.0 = +0.0`, so a pad sneaking into any
+    /// accumulation chain would flip a stored `-0.0`. Craft inputs full
+    /// of `±0.0` on pad-straddling shapes and require exact bits.
+    #[test]
+    fn signed_zeros_survive_packing() {
+        let (m, k, n) = (3usize, 5usize, 6usize); // k%8≠0, n%4≠0, n%16≠0
+        let mut a = fill(m * k, 173);
+        for (i, v) in a.iter_mut().enumerate().take(k) {
+            *v = if i % 2 == 0 { -0.0 } else { 0.0 };
+        }
+        let mut bt = fill(n * k, 179);
+        for v in bt.iter_mut().step_by(3) {
+            *v = -0.0;
+        }
+        let mut want = vec![0.0f32; m * n];
+        matmul_bt_into(&a, &bt, &mut want, m, k, n);
+        let mut pb = vec![0.0f32; bt_packed_len(k, n)];
+        pack_bt_into(&bt, k, n, &mut pb);
+        let mut got = vec![0.0f32; m * n];
+        matmul_bt_packed_into(&a, &pb, &mut got, m, k, n);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "signed-zero bt elem {i}");
+        }
+
+        let mut bm = fill(k * n, 181);
+        for v in bm.iter_mut().step_by(4) {
+            *v = -0.0;
+        }
+        let mut want = vec![0.0f32; m * n];
+        matmul_into(&a, &bm, &mut want, m, k, n);
+        let mut pb = vec![0.0f32; mm_packed_len(k, n)];
+        pack_mm_into(&bm, k, n, &mut pb);
+        let mut got = vec![0.0f32; m * n];
+        matmul_packed_into(&a, &pb, &mut got, m, k, n);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "signed-zero mm elem {i}");
+        }
+    }
+
+    /// A [`WeightPackSlot`] guard must hold exactly the two layouts a
+    /// direct pack of the weight produces: `bt` serves the GEMMs that
+    /// contract over `cols` (conv forward, FC dA), `mm` the ones that
+    /// contract over `rows` (conv dX, FC forward).
+    #[test]
+    fn weight_pack_slot_guard_matches_direct_packs() {
+        let (rows, cols) = (10usize, 21usize); // rows%4≠0, cols%8≠0
+        let w = fill(rows * cols, 191);
+        let slot = Arc::new(WeightPackSlot::new(rows, cols));
+        let handle = PackHandle::new(slot, 1, rows, cols);
+        let guard = handle.packed(&w);
+        let mut bt = vec![0.0f32; bt_packed_len(cols, rows)];
+        pack_bt_into(&w, cols, rows, &mut bt);
+        assert_eq!(guard.bt().len(), bt.len());
+        for (i, (g, d)) in guard.bt().iter().zip(&bt).enumerate() {
+            assert_eq!(g.to_bits(), d.to_bits(), "slot bt elem {i}");
+        }
+        let mut mm = vec![0.0f32; mm_packed_len(rows, cols)];
+        pack_mm_into(&w, rows, cols, &mut mm);
+        assert_eq!(guard.mm().len(), mm.len());
+        for (i, (g, d)) in guard.mm().iter().zip(&mm).enumerate() {
+            assert_eq!(g.to_bits(), d.to_bits(), "slot mm elem {i}");
+        }
+    }
+}
+
 #[cfg(feature = "simd-kernels")]
 mod simd_vs_scalar {
     use super::{fill, SHAPES};

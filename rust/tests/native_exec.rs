@@ -1,9 +1,15 @@
 //! Planned-executor tests: the thread-count determinism matrix (now on
 //! the persistent worker pool, including oversubscribed counts), the
 //! arena-reuse (zero steady-state allocation) pin, the 1×1 conv
-//! fast-path bit-identity pin, thread-count validation, Adam
-//! convergence on a synthetic task, and the natively-built
-//! `_prune`/`_layerwise` baseline search spaces.
+//! fast-path and fused-im2col packed-conv bit-identity pins,
+//! thread-count validation, Adam convergence on a synthetic task, and
+//! the natively-built `_prune`/`_layerwise` baseline search spaces.
+//!
+//! Packing coverage: the backend attaches a step-scoped weight-pack
+//! handle to every non-depthwise conv and the FC head unconditionally,
+//! so every backend-driven test below (the determinism matrix, the
+//! arena pin, eval invariance, Adam) exercises the packed f32 tiers —
+//! the tests that pin this assert `packing_enabled()` explicitly.
 //!
 //! The determinism contract under test: the intra-step shard structure
 //! depends only on the batch size, every reduction runs in shard-index
@@ -87,6 +93,14 @@ fn matrix_threads() -> Vec<usize> {
 /// 3 steps.
 #[test]
 fn thread_count_determinism_matrix() {
+    // The backend always hands packed-weight handles to the tape, so
+    // this matrix pins that the packed f32 tiers (and the fused-im2col
+    // conv lowering) are lane-count invariant, not just the unpacked
+    // ones.
+    assert!(
+        odimo::runtime::native::packing_enabled(),
+        "determinism matrix must run with the packed tiers on"
+    );
     for arch in ["resnet8", "mbv1"] {
         for soc in ["diana", "gap9"] {
             let variant = format!("{soc}_{arch}_tiny");
@@ -209,6 +223,83 @@ fn conv1x1_fast_path_is_bit_identical_to_im2col() {
     assert_eq!(dw_fast, dw_ref, "weight gradient differs");
 }
 
+/// The fused-im2col packed conv lowering (patches streamed straight
+/// into A-panels, weights from the step-scoped pack cache) must be
+/// *bit-identical* to the materialized `conv2d_im2col` reference —
+/// forward value, input gradient and weight gradient — at both strides.
+/// The panel pads are exact zeros that never enter a stored element's
+/// accumulation chain, and the packed microkernels replay the unpacked
+/// reduction trees, so fusion is pure data movement.
+#[test]
+fn fused_packed_conv_is_bit_identical_to_im2col() {
+    use odimo::runtime::native::{PackHandle, Tape, Tensor, WeightPackSlot};
+    use std::sync::Arc;
+    assert!(odimo::runtime::native::packing_enabled());
+    let (n, h, w, cin, cout, k) = (2usize, 6usize, 6usize, 5usize, 7usize, 3usize);
+    let f = k * k * cin;
+    let x0: Vec<f32> = (0..n * h * w * cin)
+        .map(|i| (i as f32 * 0.29).sin())
+        .collect();
+    let w0: Vec<f32> = (0..cout * f).map(|i| (i as f32 * 0.19).cos()).collect();
+    for stride in [1usize, 2] {
+        let run = |pack: Option<&PackHandle>| -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+            let mut t = Tape::new();
+            let x = t.leaf(Tensor::new(vec![n, h, w, cin], x0.clone()));
+            let wv = t.leaf(Tensor::new(vec![cout, f], w0.clone()));
+            let y = match pack {
+                Some(_) => t.conv2d_with_pack(x, wv, k, stride, pack), // fused
+                None => t.conv2d_im2col(x, wv, k, stride),             // reference
+            };
+            let ybits = t.val(y).data.iter().map(|v| v.to_bits()).collect();
+            let loss = t.sum_all(y);
+            let mut grads = t.backward(loss);
+            let dx = grads.take(x).iter().map(|v| v.to_bits()).collect();
+            let dw = grads.take(wv).iter().map(|v| v.to_bits()).collect();
+            (ybits, dx, dw)
+        };
+        let slot = Arc::new(WeightPackSlot::new(cout, f));
+        let handle = PackHandle::new(slot, 1, cout, f);
+        let (y_fused, dx_fused, dw_fused) = run(Some(&handle));
+        let (y_ref, dx_ref, dw_ref) = run(None);
+        assert_eq!(y_fused, y_ref, "stride {stride}: forward differs");
+        assert_eq!(dx_fused, dx_ref, "stride {stride}: input gradient differs");
+        assert_eq!(dw_fused, dw_ref, "stride {stride}: weight gradient differs");
+    }
+}
+
+/// Same pin for the pointwise fast path on the pack cache: a 1×1 conv
+/// with a weight-pack handle runs its GEMMs on the cached mm/bt layouts
+/// and must match the unpacked fast path bit for bit.
+#[test]
+fn pointwise_packed_conv_is_bit_identical_to_unpacked() {
+    use odimo::runtime::native::{PackHandle, Tape, Tensor, WeightPackSlot};
+    use std::sync::Arc;
+    let (n, h, w, cin, cout) = (2usize, 5usize, 5usize, 6usize, 9usize);
+    let x0: Vec<f32> = (0..n * h * w * cin)
+        .map(|i| (i as f32 * 0.41).sin())
+        .collect();
+    let w0: Vec<f32> = (0..cout * cin).map(|i| (i as f32 * 0.13).cos()).collect();
+    let run = |pack: Option<&PackHandle>| -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+        let mut t = Tape::new();
+        let x = t.leaf(Tensor::new(vec![n, h, w, cin], x0.clone()));
+        let wv = t.leaf(Tensor::new(vec![cout, cin], w0.clone()));
+        let y = t.conv2d_with_pack(x, wv, 1, 1, pack);
+        let ybits = t.val(y).data.iter().map(|v| v.to_bits()).collect();
+        let loss = t.sum_all(y);
+        let mut grads = t.backward(loss);
+        let dx = grads.take(x).iter().map(|v| v.to_bits()).collect();
+        let dw = grads.take(wv).iter().map(|v| v.to_bits()).collect();
+        (ybits, dx, dw)
+    };
+    let slot = Arc::new(WeightPackSlot::new(cout, cin));
+    let handle = PackHandle::new(slot, 1, cout, cin);
+    let (y_p, dx_p, dw_p) = run(Some(&handle));
+    let (y_u, dx_u, dw_u) = run(None);
+    assert_eq!(y_p, y_u, "pointwise forward differs");
+    assert_eq!(dx_p, dx_u, "pointwise input gradient differs");
+    assert_eq!(dw_p, dw_u, "pointwise weight gradient differs");
+}
+
 /// The laned (channel-sharded) depthwise backward must be bit-identical
 /// to the serial reference: a lone pool task gets the pool's full width
 /// as kernel lanes, so a 3-wide pool drives the dw backward with 3
@@ -272,6 +363,13 @@ fn eval_is_thread_count_invariant() {
 /// arena growth — every buffer of step t+1 is recycled from step t.
 #[test]
 fn steady_state_steps_do_not_grow_the_arena() {
+    // Packing on: the fused A-panels, pack-scratch buffers and the
+    // weight-pack cache must all be either plan-sized (arena) or
+    // step-scoped slot reuse — steady-state steps allocate nothing.
+    assert!(
+        odimo::runtime::native::packing_enabled(),
+        "arena pin must cover the packed-tier scratch sizing"
+    );
     let be = build("trident_tiny_tiny", 2, WOptimizer::SgdMomentum);
     assert!(be.planned_elems() > 0, "the planning pass must size something");
     let m = be.manifest();

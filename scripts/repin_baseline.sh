@@ -3,7 +3,7 @@
 # from a real CI bench artifact.
 #
 # Usage:
-#   scripts/repin_baseline.sh path/to/BENCH_native_train.json [slack]
+#   scripts/repin_baseline.sh path/to/BENCH_native_train.json [slack] [ci-run-id]
 #
 # Downloads of the BENCH_native_train artifact from a green CI run are
 # the expected input. The script rewrites exactly the four *absolute*
@@ -11,25 +11,29 @@
 # evals/sec) to measured * slack (default 0.80 — CI runners vary run to
 # run, so committed floors keep 20% headroom below a measured green
 # run; the BENCH_CHECK gate then allows a further 10% below the floor).
-# The machine-independent `_min` ratio floors carry acceptance criteria
-# and are NEVER re-pinned from measurements — edit those by hand, with
-# the criterion, or not at all.
+# When a ci-run-id is given (the numeric id of the run the artifact was
+# downloaded from, e.g. from the run's URL) it is recorded in the
+# baseline note, so a re-pin is traceable to the exact green run that
+# produced it. The machine-independent `_min` ratio floors carry
+# acceptance criteria and are NEVER re-pinned from measurements — edit
+# those by hand, with the criterion, or not at all.
 set -euo pipefail
 
-if [ $# -lt 1 ] || [ $# -gt 2 ]; then
-    echo "usage: $0 path/to/BENCH_native_train.json [slack]" >&2
+if [ $# -lt 1 ] || [ $# -gt 3 ]; then
+    echo "usage: $0 path/to/BENCH_native_train.json [slack] [ci-run-id]" >&2
     exit 2
 fi
 
 src="$1"
 slack="${2:-0.80}"
+run_id="${3:-}"
 dst="$(dirname "$0")/../rust/benches/native_train.baseline.json"
 
-python3 - "$src" "$dst" "$slack" <<'PYEOF'
+python3 - "$src" "$dst" "$slack" "$run_id" <<'PYEOF'
 import json
 import sys
 
-src, dst, slack = sys.argv[1], sys.argv[2], float(sys.argv[3])
+src, dst, slack, run_id = sys.argv[1], sys.argv[2], float(sys.argv[3]), sys.argv[4]
 rec = json.load(open(src))
 base = json.load(open(dst))
 
@@ -48,10 +52,14 @@ for key in ABSOLUTE:
 
 tier = rec.get("qmatmul_tier", "unknown")
 mins = ", ".join(k for k in base if k.endswith("_min"))
+provenance = (
+    f"CI run {run_id}" if run_id else "a CI run (id not recorded — pass it "
+    "as the third argument next time)"
+)
 base["note"] = (
     "Floors for the BENCH_CHECK=1 gate: the job fails when a measured value "
     "drops more than 10% below its floor (< 0.9x). The four absolute floors "
-    f"were re-pinned by scripts/repin_baseline.sh from a CI-emitted "
+    f"were re-pinned by scripts/repin_baseline.sh from {provenance}'s "
     f"BENCH_native_train.json (variant {rec.get('variant', '?')}, qmatmul "
     f"tier {tier}, simd_kernels={json.dumps(rec.get('simd_kernels'))}, "
     f"arch_kernels={json.dumps(rec.get('arch_kernels'))}) at "
@@ -62,7 +70,8 @@ base["note"] = (
     "the bench record shows an arch kernel actually dispatched "
     "(qmatmul_arch_speedup_vs_simd present) — on runners without the CPU "
     "features the qmatmul_tier tag proves the fallback and the gate is "
-    "skipped."
+    "skipped; matmul_packed_speedup_min gates the in-run packed-vs-unpacked "
+    "f32 tier ratio at real layer-GEMM shapes."
 )
 
 with open(dst, "w") as f:
